@@ -1,0 +1,55 @@
+//! Quickstart: quantize an embedding table to 4 bits and read it back
+//! through the optimized SLS kernel.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use emberq::eval::normalized_l2_fused;
+use emberq::quant::{AsymQuantizer, GreedyQuantizer};
+use emberq::sls::{sls_fused, SlsArgs};
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+
+fn main() {
+    // A 10k × 64 FP32 table with N(0,1) entries (stand-in for a trained
+    // embedding table).
+    let table = EmbeddingTable::randn(10_000, 64, 42);
+    println!(
+        "FP32 table: {} rows × d={} = {} bytes",
+        table.rows(),
+        table.dim(),
+        table.size_bytes()
+    );
+
+    // Post-training 4-bit quantization, two ways.
+    for (name, fused) in [
+        (
+            "ASYM   4-bit",
+            table.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16),
+        ),
+        (
+            "GREEDY 4-bit",
+            table.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16),
+        ),
+    ] {
+        println!(
+            "{name}: {} bytes ({:.2}% of FP32), normalized l2 = {:.5}",
+            fused.size_bytes(),
+            100.0 * fused.size_bytes() as f64 / table.size_bytes() as f64,
+            normalized_l2_fused(&table, &fused),
+        );
+    }
+
+    // Pooled lookups straight off the packed rows (no de-quantized copy of
+    // the table is ever materialized).
+    let fused = table.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
+    let indices: Vec<u32> = (0..64).map(|i| i * 137 % 10_000).collect();
+    let lengths = vec![16u32; 4];
+    let args = SlsArgs::new(&indices, &lengths, fused.rows()).expect("valid lookup");
+    let mut pooled = vec![0.0f32; 4 * 64];
+    sls_fused(&fused, &args, &mut pooled);
+    println!(
+        "pooled 4 segments × 16 rows; first vector starts [{:.3}, {:.3}, {:.3}, ...]",
+        pooled[0], pooled[1], pooled[2]
+    );
+}

@@ -1,0 +1,157 @@
+//! Serving driver: quantized embedding server + AOT-compiled MLP.
+//!
+//! Full three-layer composition on the request path:
+//!
+//! 1. L3 (Rust): the coordinator batches a Zipf request trace and answers
+//!    pooled lookups from fused INT4 tables with the native SLS kernels.
+//! 2. L2/L1 (AOT): the pooled features are scored by the JAX-lowered MLP
+//!    executable (`artifacts/mlp_b64.hlo.txt`) through PJRT — Python never
+//!    runs; weights come from a Rust-trained model.
+//!
+//! Requires `make artifacts`. Reports latency percentiles + throughput for
+//! FP32 vs INT8 vs INT4 tables (the serving analogue of Table 1).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_quantized
+//! ```
+
+use std::path::Path;
+
+use emberq::coordinator::{BatchPolicy, EmbeddingServer, ServerConfig, TableSet};
+use emberq::data::trace::{RequestTrace, TraceConfig};
+use emberq::model::{Dlrm, DlrmConfig};
+use emberq::quant::GreedyQuantizer;
+use emberq::runtime::PjrtRuntime;
+use emberq::table::serial::AnyTable;
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+
+// Must match python/compile/aot.py (see artifacts/manifest.json).
+const NUM_TABLES: usize = 8;
+const DIM: usize = 32;
+const DENSE_DIM: usize = 13;
+const BATCH: usize = 64;
+const ROWS: usize = 50_000;
+
+fn build_tables(kind: &str, fp32: &[EmbeddingTable]) -> TableSet {
+    let tables: Vec<AnyTable> = fp32
+        .iter()
+        .map(|t| match kind {
+            "fp32" => AnyTable::F32(t.clone()),
+            "int8" => AnyTable::Fused(t.quantize_fused(
+                &GreedyQuantizer::default(),
+                8,
+                ScaleBiasDtype::F32,
+            )),
+            "int4" => AnyTable::Fused(t.quantize_fused(
+                &GreedyQuantizer::default(),
+                4,
+                ScaleBiasDtype::F16,
+            )),
+            _ => unreachable!(),
+        })
+        .collect();
+    TableSet::new(tables)
+}
+
+fn main() {
+    // "Trained" tables (random stands in for weights; serving performance
+    // only depends on bytes-per-row).
+    let fp32: Vec<EmbeddingTable> = (0..NUM_TABLES)
+        .map(|t| EmbeddingTable::randn_sigma(ROWS, DIM, 0.1, 900 + t as u64))
+        .collect();
+    let trace = RequestTrace::generate(&TraceConfig {
+        requests: 20_000,
+        num_tables: NUM_TABLES,
+        rows: ROWS,
+        mean_pool: 10,
+        ..Default::default()
+    });
+
+    println!("== embedding-lookup tier: FP32 vs INT8 vs INT4 ==");
+    for kind in ["fp32", "int8", "int4"] {
+        let set = build_tables(kind, &fp32);
+        let bytes = set.size_bytes();
+        let server = EmbeddingServer::start(
+            set,
+            ServerConfig {
+                shards: 4,
+                queue_depth: 64,
+                batch: BatchPolicy { max_batch: BATCH, ..Default::default() },
+            },
+        );
+        let m = server.serve_trace(&trace);
+        println!("{kind:>5} ({bytes:>9} B): {}", m.summary());
+    }
+
+    // Full request path: lookups + PJRT-compiled MLP scoring.
+    let artifact = Path::new("artifacts/mlp_b64.hlo.txt");
+    if !artifact.exists() {
+        println!("\n(artifacts missing — run `make artifacts` to add MLP scoring)");
+        return;
+    }
+    println!("\n== full path: INT4 lookups + AOT MLP scoring (PJRT) ==");
+    let mut rt = match PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("PJRT unavailable: {e}");
+            return;
+        }
+    };
+    rt.load(artifact).expect("compile artifact");
+    println!("PJRT platform: {}", rt.platform());
+
+    // Rust-trained MLP weights, fed to the JAX-lowered executable.
+    let model = Dlrm::new(DlrmConfig {
+        num_tables: NUM_TABLES,
+        rows_per_table: 16, // embeddings unused here; MLP weights only
+        dim: DIM,
+        dense_dim: DENSE_DIM,
+        hidden: vec![512, 512],
+        seed: 4,
+    });
+    let feature_dim = NUM_TABLES * DIM + DENSE_DIM;
+    let server = EmbeddingServer::start(
+        build_tables("int4", &fp32),
+        ServerConfig {
+            shards: 4,
+            queue_depth: 64,
+            batch: BatchPolicy { max_batch: BATCH, ..Default::default() },
+        },
+    );
+
+    let mut scored = 0usize;
+    let mut features = vec![0.0f32; BATCH * feature_dim];
+    let dense = vec![0.0f32; BATCH * DENSE_DIM];
+    let t0 = std::time::Instant::now();
+    let mut pooled = vec![0.0f32; BATCH * NUM_TABLES * DIM];
+    for chunk in trace.requests.chunks(BATCH).take(50) {
+        if chunk.len() < BATCH {
+            break;
+        }
+        server.lookup_batch_into(chunk, &mut pooled);
+        for b in 0..BATCH {
+            let dst = &mut features[b * feature_dim..];
+            dst[..NUM_TABLES * DIM]
+                .copy_from_slice(&pooled[b * NUM_TABLES * DIM..(b + 1) * NUM_TABLES * DIM]);
+            dst[NUM_TABLES * DIM..feature_dim]
+                .copy_from_slice(&dense[b * DENSE_DIM..(b + 1) * DENSE_DIM]);
+        }
+        let mut inputs: Vec<(&[f32], Vec<usize>)> =
+            vec![(features.as_slice(), vec![BATCH, feature_dim])];
+        for layer in &model.mlp.layers {
+            inputs.push((layer.w.as_slice(), vec![layer.d_out, layer.d_in]));
+            inputs.push((layer.b.as_slice(), vec![layer.d_out]));
+        }
+        let borrowed: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+        let out = rt.execute_f32(artifact, &borrowed).expect("execute");
+        assert_eq!(out[0].len(), BATCH);
+        scored += BATCH;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "scored {scored} requests through PJRT in {:.2?} ({:.0} req/s end-to-end)",
+        dt,
+        scored as f64 / dt.as_secs_f64()
+    );
+}

@@ -1,0 +1,198 @@
+//! End-to-end driver (paper §5): train a DLRM on the synthetic
+//! Criteo-like stream, log the loss curve, then post-training-quantize
+//! every embedding table with every method and report the paper's
+//! Table-2 (normalized ℓ2) and Table-3 (model log loss + size) rows.
+//!
+//! ```bash
+//! cargo run --release --example train_and_quantize           # d=32 quick run
+//! cargo run --release --example train_and_quantize -- --dims 8,16,32,64,128 \
+//!     --steps 2000 --rows 20000                              # full sweep
+//! ```
+
+use emberq::data::{CriteoConfig, SyntheticCriteo};
+use emberq::eval::{normalized_l2_codebook, normalized_l2_fused, TableWriter};
+use emberq::model::{Dlrm, DlrmConfig, QuantizedDlrm, Trainer, TrainerConfig};
+use emberq::quant::{method_by_name, Method};
+use emberq::table::{CodebookKind, ScaleBiasDtype};
+
+struct Args {
+    dims: Vec<usize>,
+    steps: usize,
+    rows: usize,
+    tables: usize,
+    eval_batches: usize,
+}
+
+fn parse_args() -> Args {
+    let mut a = Args { dims: vec![32], steps: 800, rows: 5000, tables: 8, eval_batches: 20 };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--dims" => {
+                a.dims = argv[i + 1].split(',').map(|s| s.parse().unwrap()).collect();
+                i += 2;
+            }
+            "--steps" => {
+                a.steps = argv[i + 1].parse().unwrap();
+                i += 2;
+            }
+            "--rows" => {
+                a.rows = argv[i + 1].parse().unwrap();
+                i += 2;
+            }
+            "--tables" => {
+                a.tables = argv[i + 1].parse().unwrap();
+                i += 2;
+            }
+            other => panic!("unknown flag {other}"),
+        }
+    }
+    a
+}
+
+/// Methods in the order of the paper's tables. (name, nbits, sb, label)
+fn method_rows() -> Vec<(&'static str, u32, ScaleBiasDtype, &'static str)> {
+    use ScaleBiasDtype::{F16, F32};
+    vec![
+        ("ASYM", 8, F32, "ASYM-8BITS"),
+        ("SYM", 4, F32, "SYM"),
+        ("GSS", 4, F32, "GSS"),
+        ("ASYM", 4, F32, "ASYM"),
+        ("HIST-APPRX", 4, F32, "HIST-APPRX"),
+        ("HIST-BRUTE", 4, F32, "HIST-BRUTE"),
+        ("ACIQ", 4, F32, "ACIQ"),
+        ("GREEDY", 4, F32, "GREEDY"),
+        ("GREEDY", 4, F16, "GREEDY (FP16)"),
+        ("KMEANS-CLS", 4, F16, "KMEANS-CLS (FP16)"),
+        ("KMEANS", 4, F16, "KMEANS (FP16)"),
+    ]
+}
+
+fn main() {
+    let args = parse_args();
+    let mut table2 = TableWriter::new(
+        std::iter::once("method".to_string())
+            .chain(args.dims.iter().map(|d| format!("d={d}")))
+            .collect::<Vec<_>>(),
+    );
+    let mut table3 = TableWriter::new(
+        std::iter::once("method".to_string())
+            .chain(
+                args.dims
+                    .iter()
+                    .flat_map(|d| [format!("d={d} loss"), format!("d={d} size")]),
+            )
+            .collect::<Vec<_>>(),
+    );
+    let mut t2_cells: Vec<Vec<String>> = vec![Vec::new(); method_rows().len()];
+    let mut t3_cells: Vec<Vec<String>> = vec![Vec::new(); method_rows().len() + 1];
+
+    for &dim in &args.dims {
+        println!("=== training d={dim} ===");
+        let dcfg = CriteoConfig {
+            num_sparse: args.tables,
+            rows_per_table: args.rows,
+            ..Default::default()
+        };
+        let mcfg = DlrmConfig {
+            num_tables: args.tables,
+            rows_per_table: args.rows,
+            dim,
+            dense_dim: dcfg.dense_dim,
+            ..Default::default()
+        };
+        let mut model = Dlrm::new(mcfg);
+        let mut data = SyntheticCriteo::train(dcfg.clone());
+        let trainer = Trainer::new(TrainerConfig {
+            batch: 100,
+            steps: args.steps,
+            log_every: (args.steps / 10).max(1),
+            ..Default::default()
+        });
+        let report = trainer.train(&mut model, &mut data);
+        for (step, loss) in &report.loss_curve {
+            println!("  step {step:>6}  train loss {loss:.5}");
+        }
+
+        // Held-out eval set, reused for every method.
+        let mut eval = SyntheticCriteo::eval(dcfg);
+        let eval_batches: Vec<_> =
+            (0..args.eval_batches).map(|_| eval.next_batch(500)).collect();
+        let fp32_loss: f64 = eval_batches
+            .iter()
+            .map(|b| model.eval_logloss(b))
+            .sum::<f64>()
+            / eval_batches.len() as f64;
+        let fp32_bytes = model.tables_bytes();
+        println!("  FP32 eval logloss {fp32_loss:.5}, tables {fp32_bytes} bytes");
+        t3_cells[0].push(format!("{fp32_loss:.5}"));
+        t3_cells[0].push(format!("{:.2}MB", fp32_bytes as f64 / 1e6));
+
+        for (mi, (name, nbits, sb, _label)) in method_rows().iter().enumerate() {
+            let method = method_by_name(name).unwrap();
+            // Table 2: normalized l2 on table 0.
+            let t0 = &model.tables[0];
+            let l2 = match &method {
+                Method::Uniform(q) => {
+                    normalized_l2_fused(t0, &t0.quantize_fused(q.as_ref(), *nbits, *sb))
+                }
+                Method::Kmeans(_) => normalized_l2_codebook(
+                    t0,
+                    &t0.quantize_codebook(CodebookKind::Rowwise, *sb),
+                ),
+                Method::KmeansCls(_) => {
+                    let budget = t0.rows() * sb.tail_bytes();
+                    let k = emberq::quant::KmeansClsQuantizer::k_for_budget(t0.rows(), budget)
+                        .min(t0.rows());
+                    normalized_l2_codebook(
+                        t0,
+                        &t0.quantize_codebook(CodebookKind::TwoTier { k }, *sb),
+                    )
+                }
+            };
+            t2_cells[mi].push(format!("{l2:.5}"));
+
+            // Table 3: whole-model logloss + size.
+            let q = match &method {
+                Method::Uniform(u) => {
+                    QuantizedDlrm::from_uniform(&model, u.as_ref(), *nbits, *sb)
+                }
+                Method::Kmeans(_) => {
+                    QuantizedDlrm::from_codebook(&model, CodebookKind::Rowwise, *sb)
+                }
+                Method::KmeansCls(_) => {
+                    let budget = args.rows * sb.tail_bytes();
+                    let k = emberq::quant::KmeansClsQuantizer::k_for_budget(args.rows, budget)
+                        .min(args.rows);
+                    QuantizedDlrm::from_codebook(&model, CodebookKind::TwoTier { k }, *sb)
+                }
+            };
+            let loss: f64 = eval_batches
+                .iter()
+                .map(|b| q.eval_logloss(b))
+                .sum::<f64>()
+                / eval_batches.len() as f64;
+            let ratio = 100.0 * q.tables_bytes() as f64 / fp32_bytes as f64;
+            t3_cells[mi + 1].push(format!("{loss:.5}"));
+            t3_cells[mi + 1].push(format!("{ratio:.2}%"));
+        }
+    }
+
+    for (mi, (_, _, _, label)) in method_rows().iter().enumerate() {
+        let mut row = vec![label.to_string()];
+        row.extend(t2_cells[mi].clone());
+        table2.row(row);
+    }
+    println!("\nTable 2 — normalized l2 loss (table 0):\n{}", table2.render());
+
+    let mut row = vec!["FP32 (no quant)".to_string()];
+    row.extend(t3_cells[0].clone());
+    table3.row(row);
+    for (mi, (_, _, _, label)) in method_rows().iter().enumerate() {
+        let mut row = vec![label.to_string()];
+        row.extend(t3_cells[mi + 1].clone());
+        table3.row(row);
+    }
+    println!("Table 3 — model log loss and size:\n{}", table3.render());
+}

@@ -1,0 +1,144 @@
+"""AOT lowering: JAX/Pallas -> HLO **text** -> ``artifacts/``.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(`rust/src/runtime/`) loads the text with ``HloModuleProto::from_text_file``,
+compiles it on the PJRT CPU client, and executes it on the serving path.
+
+Text, not ``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts:
+
+* ``mlp_b{B}.hlo.txt``      — dense over-arch; weights are arguments.
+* ``dlrm_int4.hlo.txt``     — fused Pallas-SLS + MLP demo graph.
+* ``manifest.json``         — every artifact's input shapes, for Rust.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shapes must match what the Rust examples feed (examples/serve_quantized
+# reads manifest.json and asserts).
+MLP_BATCHES = (1, 16, 64)
+NUM_TABLES = 8
+DIM = 32
+DENSE_DIM = 13
+HIDDEN = (512, 512)
+FEATURE_DIM = NUM_TABLES * DIM + DENSE_DIM
+
+# dlrm_int4 demo graph shapes.
+DEMO_TABLES = 4
+DEMO_ROWS = 256  # per table
+DEMO_DIM = 32
+DEMO_BATCH = 16
+DEMO_POOL = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def mlp_arg_specs(batch: int):
+    specs = [f32(batch, FEATURE_DIM)]
+    for (wshape, bshape) in model.mlp_params_spec(FEATURE_DIM, HIDDEN):
+        specs.append(f32(*wshape))
+        specs.append(f32(*bshape))
+    return specs
+
+
+def dlrm_arg_specs():
+    n = DEMO_TABLES * DEMO_ROWS
+    specs = [
+        jax.ShapeDtypeStruct((n, DEMO_DIM // 2), jnp.uint8),
+        f32(n),
+        f32(n),
+        jax.ShapeDtypeStruct((DEMO_BATCH, DEMO_TABLES, DEMO_POOL), jnp.int32),
+        f32(DEMO_BATCH, DEMO_TABLES, DEMO_POOL),
+        f32(DEMO_BATCH, DENSE_DIM),
+    ]
+    feature_dim = DEMO_TABLES * DEMO_DIM + DENSE_DIM
+    for (wshape, bshape) in model.mlp_params_spec(feature_dim, HIDDEN):
+        specs.append(f32(*wshape))
+        specs.append(f32(*bshape))
+    return specs
+
+
+def spec_json(spec):
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "num_tables": NUM_TABLES,
+        "dim": DIM,
+        "dense_dim": DENSE_DIM,
+        "hidden": list(HIDDEN),
+        "feature_dim": FEATURE_DIM,
+        "artifacts": {},
+    }
+
+    for batch in MLP_BATCHES:
+        specs = mlp_arg_specs(batch)
+        lowered = jax.jit(model.mlp_logits).lower(*specs)
+        name = f"mlp_b{batch}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "fn": "mlp_logits",
+            "batch": batch,
+            "inputs": [spec_json(s) for s in specs],
+        }
+        print(f"wrote {path}")
+
+    specs = dlrm_arg_specs()
+    lowered = jax.jit(
+        functools.partial(model.dlrm_int4_logits, dim=DEMO_DIM)
+    ).lower(*specs)
+    path = os.path.join(args.out_dir, "dlrm_int4.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"]["dlrm_int4.hlo.txt"] = {
+        "fn": "dlrm_int4_logits",
+        "tables": DEMO_TABLES,
+        "rows_per_table": DEMO_ROWS,
+        "dim": DEMO_DIM,
+        "batch": DEMO_BATCH,
+        "pool": DEMO_POOL,
+        "inputs": [spec_json(s) for s in specs],
+    }
+    print(f"wrote {path}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+All kernels lower with ``interpret=True`` so the HLO runs on the CPU PJRT
+plugin (real TPU lowering emits Mosaic custom-calls the CPU client cannot
+execute); the BlockSpec structure still expresses the HBM->VMEM schedule a
+TPU deployment would use (DESIGN.md §Hardware-Adaptation).
+"""
+
+from compile.kernels.sls_int4 import sls_int4_pallas
+from compile.kernels.sls_int8 import sls_int8_pallas
+from compile.kernels.quantize import rowwise_asym_quantize_pallas
+
+__all__ = ["sls_int4_pallas", "sls_int8_pallas", "rowwise_asym_quantize_pallas"]

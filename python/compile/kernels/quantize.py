@@ -1,0 +1,58 @@
+"""Pallas kernel: row-wise asymmetric (ASYM) uniform quantization.
+
+The build-time companion of the SLS kernel: quantizes a block of FP32
+embedding rows to 4-bit codes + per-row scale/bias (paper Eq. 1). Each
+grid step owns a ``[block_rows, d]`` tile in VMEM, computes the row
+min/max reduction on the VPU, and writes codes + tails. On a real TPU this
+is the producer that streams a trained table HBM->VMEM->HBM once;
+``interpret=True`` here for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, codes_ref, scale_ref, bias_ref, *, nbits: int):
+    x = x_ref[...]  # [R, d] f32 tile in VMEM
+    xmin = x.min(axis=1)
+    xmax = x.max(axis=1)
+    levels = (1 << nbits) - 1
+    scale = (xmax - xmin) / levels
+    scale = jnp.where((scale > 0) & jnp.isfinite(scale), scale, 1.0)
+    q = jnp.round((x - xmin[:, None]) / scale[:, None])
+    codes_ref[...] = jnp.clip(q, 0, levels).astype(jnp.uint8)
+    scale_ref[...] = scale
+    bias_ref[...] = xmin
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "block_rows"))
+def rowwise_asym_quantize_pallas(x, nbits: int = 4, block_rows: int = 8):
+    """Quantize [N, d] rows; returns (codes u8 [N, d], scale [N], bias [N]).
+
+    ``N`` must be divisible by ``block_rows`` (callers pad; AOT shapes are
+    static anyway). Matches ``ref.rowwise_asym_quantize``.
+    """
+    n, d = x.shape
+    assert n % block_rows == 0, f"rows {n} not divisible by block {block_rows}"
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, nbits=nbits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.uint8),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(x)

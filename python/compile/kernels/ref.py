@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything here is the *specification*: straight-line jax.numpy with no
+tiling, no nibble tricks, no scratch buffers. pytest checks the Pallas
+kernels against these on swept shapes; the Rust kernels are cross-checked
+against the same semantics through the golden files
+(``compile/quant_ref.py`` -> ``rust/tests/golden_cross_lang.rs``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_int4(packed: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Unpack [N, ceil(d/2)] uint8 nibbles to [N, d] uint8 codes.
+
+    Low nibble is the even column (FBGEMM layout, matching the Rust
+    ``FusedTable``).
+    """
+    lo = packed & 0x0F
+    hi = packed >> 4
+    # Interleave: out[:, 2i] = lo[:, i], out[:, 2i+1] = hi[:, i].
+    inter = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    return inter[:, :dim]
+
+
+def dequantize_int4(packed, scale, bias, dim):
+    """De-quantize fused int4 rows to [N, d] float32."""
+    codes = unpack_int4(packed, dim).astype(jnp.float32)
+    return codes * scale[:, None] + bias[:, None]
+
+
+def sls_int4(packed, scale, bias, indices, weights, dim):
+    """Weighted SparseLengthsSum over fused int4 rows.
+
+    packed  : [N, ceil(d/2)] uint8
+    scale   : [N] f32
+    bias    : [N] f32
+    indices : [B, L] int32 (padded segments; padding gets weight 0)
+    weights : [B, L] f32   (1.0 real lookup, 0.0 padding)
+    returns : [B, d] f32 with out[b] = sum_l w[b,l] * dequant(T[idx[b,l]])
+    """
+    rows = dequantize_int4(packed, scale, bias, dim)  # [N, d]
+    gathered = rows[indices]  # [B, L, d]
+    return jnp.einsum("bl,bld->bd", weights, gathered)
+
+
+def sls_int8(codes, scale, bias, indices, weights):
+    """Weighted SparseLengthsSum over int8 rows (spec for sls_int8_pallas)."""
+    rows = codes.astype(jnp.float32) * scale[:, None] + bias[:, None]
+    return jnp.einsum("bl,bld->bd", weights, rows[indices])
+
+
+def rowwise_asym_quantize(x, nbits: int = 4):
+    """Row-wise range-based (ASYM) uniform quantization (paper Eq. 1).
+
+    x : [N, d] f32
+    returns (codes [N, d] uint8, scale [N] f32, bias [N] f32)
+    """
+    xmin = x.min(axis=1)
+    xmax = x.max(axis=1)
+    levels = (1 << nbits) - 1
+    scale = (xmax - xmin) / levels
+    scale = jnp.where((scale > 0) & jnp.isfinite(scale), scale, 1.0)
+    q = jnp.round((x - xmin[:, None]) / scale[:, None])
+    codes = jnp.clip(q, 0, levels).astype(jnp.uint8)
+    return codes, scale, xmin
+
+
+def dequantize_codes(codes, scale, bias):
+    """Reconstruct floats from codes + per-row scale/bias."""
+    return codes.astype(jnp.float32) * scale[:, None] + bias[:, None]
+
+
+def mlp_forward(x, params):
+    """The paper's over-arch MLP: FC->ReLU->...->FC(1), returns logits.
+
+    params: list of (w [out, in], b [out]) pairs — the Rust ``Linear``
+    layout, so trained Rust weights feed straight in.
+    """
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w.T + b
+        if i + 1 < len(params):
+            h = jnp.maximum(h, 0.0)
+    return h[:, 0]

@@ -1,0 +1,80 @@
+"""Pallas kernel: fused int4 de-quantization + SparseLengthsSum.
+
+The paper's §4 hot-spot, rethought for TPU structure (DESIGN.md
+§Hardware-Adaptation): the AVX512 CPU kernel becomes a Pallas kernel where
+
+* the packed table stays in HBM (``pltpu.ANY``-like unblocked spec) and
+  rows are gathered with dynamic slices — the analogue of the CPU's
+  random-access row reads;
+* each grid step owns one output segment: its indices/weights tile and its
+  ``[1, d]`` accumulator live in VMEM (the scratchpad analogue of the CPU
+  register accumulators);
+* nibble unpack is shift/mask vector work on the VPU — SLS is
+  bandwidth-bound, so the MXU is deliberately unused, exactly as the CPU
+  kernel never touches the FMA-heavy matmul path.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness (vs ``ref.sls_int4``) is what we validate on
+this host. Real-TPU efficiency is estimated in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sls_kernel(packed_ref, scale_ref, bias_ref, idx_ref, w_ref, out_ref, *, dim: int):
+    """One grid step = one output segment (batch element)."""
+    length = idx_ref.shape[1]
+    packed_cols = packed_ref.shape[1]
+
+    def body(l, acc):
+        row_id = idx_ref[0, l]
+        w = w_ref[0, l]
+        # Gather one packed row from the (unblocked) table: [1, P] uint8.
+        row = packed_ref[pl.dslice(row_id, 1), :]
+        lo = (row & 0x0F).astype(jnp.float32)
+        hi = (row >> 4).astype(jnp.float32)
+        # Interleave nibbles: codes[0, 2i] = lo[i], codes[0, 2i+1] = hi[i].
+        codes = jnp.stack([lo, hi], axis=-1).reshape(1, 2 * packed_cols)[:, :dim]
+        scale = scale_ref[pl.dslice(row_id, 1)]
+        bias = bias_ref[pl.dslice(row_id, 1)]
+        return acc + w * (codes * scale[:, None] + bias[:, None])
+
+    acc = jnp.zeros((1, dim), jnp.float32)
+    acc = jax.lax.fori_loop(0, length, body, acc)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def sls_int4_pallas(packed, scale, bias, indices, weights, dim: int):
+    """Fused int4-dequant SLS. Same contract as ``ref.sls_int4``.
+
+    packed  : [N, ceil(d/2)] uint8   (fused-row codes; scale/bias split out
+              into arrays because PJRT buffers are homogeneous)
+    scale   : [N] f32
+    bias    : [N] f32
+    indices : [B, L] int32, padded; weights zero out the padding
+    weights : [B, L] f32
+    """
+    b, l = indices.shape
+    return pl.pallas_call(
+        functools.partial(_sls_kernel, dim=dim),
+        grid=(b,),
+        in_specs=[
+            # Table, scales, biases: unblocked — rows gathered dynamically.
+            pl.BlockSpec(packed.shape, lambda i: (0, 0)),
+            pl.BlockSpec(scale.shape, lambda i: (0,)),
+            pl.BlockSpec(bias.shape, lambda i: (0,)),
+            # Per-segment tiles.
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dim), jnp.float32),
+        interpret=True,
+    )(packed, scale, bias, indices, weights)

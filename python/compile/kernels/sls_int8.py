@@ -1,0 +1,59 @@
+"""Pallas kernel: fused int8 de-quantization + SparseLengthsSum.
+
+The 8-bit sibling of ``sls_int4`` — same HBM-gather / VMEM-accumulate
+structure without the nibble unpack (one code per byte). Exists so the
+serving tier can A/B INT8 vs INT4 artifacts with identical graph shapes
+(paper Table 1 compares all three formats).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sls8_kernel(codes_ref, scale_ref, bias_ref, idx_ref, w_ref, out_ref, *, dim: int):
+    length = idx_ref.shape[1]
+
+    def body(l, acc):
+        row_id = idx_ref[0, l]
+        w = w_ref[0, l]
+        row = codes_ref[pl.dslice(row_id, 1), :].astype(jnp.float32)  # [1, d]
+        scale = scale_ref[pl.dslice(row_id, 1)]
+        bias = bias_ref[pl.dslice(row_id, 1)]
+        return acc + w * (row * scale[:, None] + bias[:, None])
+
+    acc = jnp.zeros((1, dim), jnp.float32)
+    acc = jax.lax.fori_loop(0, length, body, acc)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def sls_int8_pallas(codes, scale, bias, indices, weights, dim: int):
+    """Weighted SLS over int8 rows.
+
+    codes   : [N, d] uint8
+    scale   : [N] f32
+    bias    : [N] f32
+    indices : [B, L] int32
+    weights : [B, L] f32
+    returns : [B, d] f32
+    """
+    b, l = indices.shape
+    return pl.pallas_call(
+        functools.partial(_sls8_kernel, dim=dim),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec(codes.shape, lambda i: (0, 0)),
+            pl.BlockSpec(scale.shape, lambda i: (0,)),
+            pl.BlockSpec(bias.shape, lambda i: (0,)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dim), jnp.float32),
+        interpret=True,
+    )(codes, scale, bias, indices, weights)

@@ -1,0 +1,66 @@
+"""L2: the DLRM compute graph in JAX, calling the L1 Pallas kernels.
+
+Two jit-able entry points, both lowered to HLO text by ``aot.py``:
+
+* :func:`mlp_logits` — the dense over-arch alone. The Rust coordinator
+  does pooled lookups with its native SLS kernels and feeds the
+  concatenated features plus its *trained weights* to this executable
+  (weights are arguments, not constants, so one artifact serves any
+  training run with the same shapes).
+* :func:`dlrm_int4_logits` — the full quantized-inference graph: fused
+  int4 SLS (the Pallas kernel) over stacked tables, feature concat, MLP.
+  This is the artifact that proves L1 lowers into the same HLO the Rust
+  runtime executes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import sls_int4_pallas
+from compile.kernels import ref
+
+
+def mlp_params_spec(feature_dim: int, hidden: tuple[int, ...] = (512, 512)):
+    """[(w shape, b shape), ...] for the over-arch, Rust Linear layout."""
+    dims = [feature_dim, *hidden, 1]
+    return [((dims[i + 1], dims[i]), (dims[i + 1],)) for i in range(len(dims) - 1)]
+
+
+def mlp_logits(x, *flat_params):
+    """Over-arch forward. ``flat_params`` = w0, b0, w1, b1, ... logits [B]."""
+    params = [(flat_params[i], flat_params[i + 1]) for i in range(0, len(flat_params), 2)]
+    return (ref.mlp_forward(x, params),)
+
+
+def dlrm_int4_logits(
+    packed,  # [T*N, ceil(d/2)] uint8 — tables stacked row-wise
+    scale,  # [T*N] f32
+    bias,  # [T*N] f32
+    indices,  # [B, T, L] int32, already offset by t*N
+    weights,  # [B, T, L] f32 (0 = padding)
+    dense,  # [B, dense_dim] f32
+    *flat_params,  # MLP weights, Rust Linear layout
+    dim: int,
+):
+    """Full quantized DLRM forward: Pallas SLS -> concat -> MLP.
+
+    Pooling runs as one SLS call with B*T segments, then reshapes to the
+    ``[B, T*d]`` feature block — identical to the Rust serving layout.
+    """
+    b, t, l = indices.shape
+    pooled = sls_int4_pallas(
+        packed,
+        scale,
+        bias,
+        indices.reshape(b * t, l),
+        weights.reshape(b * t, l),
+        dim,
+    )  # [B*T, d]
+    feats = jnp.concatenate([pooled.reshape(b, t * dim), dense], axis=1)
+    return mlp_logits(feats, *flat_params)
+
+
+def sigmoid(z):
+    """Click probability from a logit."""
+    return 1.0 / (1.0 + jnp.exp(-z))

@@ -1,0 +1,163 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, with hypothesis
+sweeping shapes and value regimes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, rowwise_asym_quantize_pallas, sls_int4_pallas
+
+
+def make_fused(rng, n, d):
+    packed = rng.integers(0, 256, (n, (d + 1) // 2), dtype=np.uint8)
+    scale = rng.uniform(1e-3, 0.2, n).astype(np.float32)
+    bias = rng.uniform(-2.0, 1.0, n).astype(np.float32)
+    return packed, scale, bias
+
+
+# ---------------------------------------------------------------- sls_int4
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 64),
+    d=st.sampled_from([8, 16, 32, 64, 128]),
+    b=st.integers(1, 8),
+    l=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sls_int4_matches_ref(n, d, b, l, seed):
+    rng = np.random.default_rng(seed)
+    packed, scale, bias = make_fused(rng, n, d)
+    idx = rng.integers(0, n, (b, l)).astype(np.int32)
+    w = (rng.random((b, l)) > 0.25).astype(np.float32)
+    got = np.asarray(sls_int4_pallas(packed, scale, bias, idx, w, d))
+    want = np.asarray(ref.sls_int4(packed, scale, bias, idx, w, d))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sls_int4_zero_weights_zero_output():
+    rng = np.random.default_rng(1)
+    packed, scale, bias = make_fused(rng, 8, 16)
+    idx = rng.integers(0, 8, (3, 4)).astype(np.int32)
+    w = np.zeros((3, 4), np.float32)
+    out = np.asarray(sls_int4_pallas(packed, scale, bias, idx, w, 16))
+    assert (out == 0).all()
+
+
+def test_sls_int4_single_lookup_is_dequant_row():
+    rng = np.random.default_rng(2)
+    packed, scale, bias = make_fused(rng, 8, 32)
+    idx = np.array([[5]], np.int32)
+    w = np.ones((1, 1), np.float32)
+    out = np.asarray(sls_int4_pallas(packed, scale, bias, idx, w, 32))
+    row = np.asarray(ref.dequantize_int4(packed, scale, bias, 32))[5]
+    np.testing.assert_allclose(out[0], row, rtol=1e-6)
+
+
+def test_sls_int4_duplicate_indices_accumulate():
+    rng = np.random.default_rng(3)
+    packed, scale, bias = make_fused(rng, 8, 16)
+    idx = np.array([[2, 2, 2]], np.int32)
+    w = np.ones((1, 3), np.float32)
+    out = np.asarray(sls_int4_pallas(packed, scale, bias, idx, w, 16))
+    row = np.asarray(ref.dequantize_int4(packed, scale, bias, 16))[2]
+    np.testing.assert_allclose(out[0], 3 * row, rtol=1e-5)
+
+
+def test_unpack_nibble_order():
+    # Byte 0xBA -> low nibble A (=10) first, then B (=11).
+    packed = np.array([[0xBA]], np.uint8)
+    codes = np.asarray(ref.unpack_int4(packed, 2))
+    assert codes.tolist() == [[10, 11]]
+
+
+# ------------------------------------------------------- rowwise quantize
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 6),
+    block_rows=st.sampled_from([1, 2, 8]),
+    d=st.sampled_from([8, 16, 64, 200]),
+    sigma=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(blocks, block_rows, d, sigma, seed):
+    rng = np.random.default_rng(seed)
+    n = blocks * block_rows
+    x = (rng.normal(0, sigma, (n, d))).astype(np.float32)
+    c1, s1, b1 = (np.asarray(v) for v in rowwise_asym_quantize_pallas(x, 4, block_rows))
+    c2, s2, b2 = (np.asarray(v) for v in ref.rowwise_asym_quantize(x, 4))
+    assert (c1 == c2).all()
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)
+    np.testing.assert_allclose(b1, b2, rtol=1e-6)
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(4)
+    x = rng.normal(0, 1, (16, 64)).astype(np.float32)
+    codes, scale, bias = rowwise_asym_quantize_pallas(x, 4, 8)
+    recon = np.asarray(ref.dequantize_codes(codes, scale, bias))
+    err = np.abs(recon - x)
+    assert (err <= np.asarray(scale)[:, None] / 2 + 1e-6).all()
+
+
+def test_quantize_constant_rows():
+    x = np.full((8, 16), 2.5, np.float32)
+    codes, scale, bias = (np.asarray(v) for v in rowwise_asym_quantize_pallas(x, 4, 8))
+    recon = np.asarray(ref.dequantize_codes(codes, scale, bias))
+    np.testing.assert_allclose(recon, x)
+
+
+def test_quantize_8bit_tighter_than_4bit():
+    rng = np.random.default_rng(5)
+    x = rng.normal(0, 1, (8, 128)).astype(np.float32)
+    e = {}
+    for nbits in (4, 8):
+        c, s, b = rowwise_asym_quantize_pallas(x, nbits, 8)
+        recon = np.asarray(ref.dequantize_codes(c, s, b))
+        e[nbits] = float(((recon - x) ** 2).sum())
+    assert e[8] < e[4] / 50
+
+
+def test_quantize_rejects_bad_block():
+    x = np.zeros((10, 8), np.float32)
+    with pytest.raises(AssertionError):
+        rowwise_asym_quantize_pallas(x, 4, 8)
+
+
+# ---------------------------------------------------------------- sls_int8
+
+from compile.kernels import sls_int8_pallas
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(4, 48),
+    d=st.sampled_from([8, 32, 96]),
+    b=st.integers(1, 6),
+    l=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sls_int8_matches_ref(n, d, b, l, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 256, (n, d), dtype=np.uint8)
+    scale = rng.uniform(1e-3, 0.05, n).astype(np.float32)
+    bias = rng.uniform(-1.0, 0.5, n).astype(np.float32)
+    idx = rng.integers(0, n, (b, l)).astype(np.int32)
+    w = (rng.random((b, l)) > 0.25).astype(np.float32)
+    got = np.asarray(sls_int8_pallas(codes, scale, bias, idx, w, d))
+    want = np.asarray(ref.sls_int8(codes, scale, bias, idx, w))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sls_int8_single_row_identity():
+    rng = np.random.default_rng(11)
+    codes = rng.integers(0, 256, (4, 16), dtype=np.uint8)
+    scale = np.full(4, 0.1, np.float32)
+    bias = np.zeros(4, np.float32)
+    idx = np.array([[2]], np.int32)
+    w = np.ones((1, 1), np.float32)
+    out = np.asarray(sls_int8_pallas(codes, scale, bias, idx, w, 16))
+    np.testing.assert_allclose(out[0], codes[2].astype(np.float32) * 0.1, rtol=1e-6)

@@ -1,0 +1,80 @@
+"""L2 correctness: the DLRM graph (shapes, composition, reference parity)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_params(rng, feature_dim, hidden=(32, 16)):
+    params = []
+    prev = feature_dim
+    for h in (*hidden, 1):
+        params.append(
+            (
+                rng.normal(0, 0.1, (h, prev)).astype(np.float32),
+                rng.normal(0, 0.1, h).astype(np.float32),
+            )
+        )
+        prev = h
+    return params
+
+
+def flatten(params):
+    out = []
+    for w, b in params:
+        out.extend([w, b])
+    return out
+
+
+def test_mlp_logits_matches_numpy():
+    rng = np.random.default_rng(0)
+    params = make_params(rng, 12)
+    x = rng.normal(0, 1, (5, 12)).astype(np.float32)
+    (got,) = model.mlp_logits(x, *flatten(params))
+    # Numpy reference.
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w.T + b
+        if i + 1 < len(params):
+            h = np.maximum(h, 0)
+    np.testing.assert_allclose(np.asarray(got), h[:, 0], rtol=2e-5, atol=1e-5)
+
+
+def test_mlp_params_spec_shapes():
+    spec = model.mlp_params_spec(269, (512, 512))
+    assert spec[0] == ((512, 269), (512,))
+    assert spec[1] == ((512, 512), (512,))
+    assert spec[2] == ((1, 512), (1,))
+
+
+def test_dlrm_int4_composes_sls_and_mlp():
+    rng = np.random.default_rng(1)
+    t, n, d, b, l, dd = 3, 32, 16, 4, 5, 7
+    packed = rng.integers(0, 256, (t * n, d // 2), dtype=np.uint8)
+    scale = rng.uniform(0.01, 0.1, t * n).astype(np.float32)
+    bias = rng.uniform(-1, 0, t * n).astype(np.float32)
+    idx = np.stack(
+        [rng.integers(tt * n, (tt + 1) * n, (b, l)) for tt in range(t)], axis=1
+    ).astype(np.int32)
+    w = (rng.random((b, t, l)) > 0.3).astype(np.float32)
+    dense = rng.normal(0, 1, (b, dd)).astype(np.float32)
+    params = make_params(rng, t * d + dd)
+    (got,) = model.dlrm_int4_logits(
+        packed, scale, bias, idx, w, dense, *flatten(params), dim=d
+    )
+    # Reference: jnp SLS then jnp MLP.
+    pooled = ref.sls_int4(
+        packed, scale, bias, idx.reshape(b * t, l), w.reshape(b * t, l), d
+    )
+    feats = jnp.concatenate([pooled.reshape(b, t * d), dense], axis=1)
+    want = ref.mlp_forward(feats, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_sigmoid_range():
+    z = jnp.array([-50.0, -1.0, 0.0, 1.0, 50.0])
+    p = np.asarray(model.sigmoid(z))
+    assert ((p >= 0) & (p <= 1)).all()
+    assert abs(p[2] - 0.5) < 1e-7

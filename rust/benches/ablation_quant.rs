@@ -1,0 +1,145 @@
+//! Ablations on the design choices DESIGN.md calls out:
+//!
+//! 1. **Eq. 1 vs zero-point mapping** (paper footnote 2): bias-anchored
+//!    vs zero-anchored uniform grids on embedding rows vs ReLU-like data.
+//! 2. **GREEDY hyperparameters**: the b/r trade-off (quality vs time).
+//! 3. **2-D GSS** (paper: "too consuming"): cost and quality vs GREEDY.
+//! 4. **Incremental refresh**: periodic re-quantization cost, full table
+//!    vs dirty-rows-only (the continuous-learning story of §2).
+//!
+//! ```bash
+//! cargo bench --bench ablation_quant
+//! ```
+
+use emberq::eval::TableWriter;
+use emberq::quant::{
+    quant_sq_error, AsymQuantizer, Gss2dQuantizer, GreedyQuantizer, Quantizer,
+    ZeroPointQuantizer,
+};
+use emberq::table::{EmbeddingTable, ScaleBiasDtype, TableRefresher};
+use emberq::util::bench::measure;
+use emberq::util::Rng;
+
+fn mean_rel_l2(q: &dyn Quantizer, rows: &[Vec<f32>]) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for r in rows {
+        num += quant_sq_error(r, q.clip(r, 4), 4);
+        den += emberq::util::stats::l2_sq(r);
+    }
+    (num / den).sqrt()
+}
+
+fn main() {
+    let mut rng = Rng::new(0xAB1A7E);
+
+    // ---- 1: Eq.1 vs zero-point ------------------------------------
+    println!("== ablation 1: Eq.1 (ASYM) vs zero-point mapping ==");
+    let emb_rows: Vec<Vec<f32>> = (0..200)
+        .map(|_| {
+            let mu = rng.uniform_in(-0.5, 0.5) as f32;
+            (0..64).map(|_| mu + (rng.normal() as f32) * 0.2).collect()
+        })
+        .collect();
+    let relu_rows: Vec<Vec<f32>> = (0..200)
+        .map(|_| {
+            (0..64)
+                .map(|_| (rng.normal() as f32).max(0.0)) // ~50% exact zeros
+                .collect()
+        })
+        .collect();
+    let mut tw = TableWriter::new(vec!["data", "ASYM (Eq.1)", "ASYM-ZP"]);
+    for (name, rows) in [("embedding rows", &emb_rows), ("ReLU activations", &relu_rows)] {
+        tw.row(vec![
+            name.to_string(),
+            format!("{:.5}", mean_rel_l2(&AsymQuantizer, rows)),
+            format!("{:.5}", mean_rel_l2(&ZeroPointQuantizer, rows)),
+        ]);
+    }
+    println!("{}", tw.render());
+    println!("(footnote 2: Eq.1 wins on embedding rows; ZP exists for zero-heavy data)\n");
+
+    // ---- 2: GREEDY b/r sweep ---------------------------------------
+    println!("== ablation 2: GREEDY hyperparameters ==");
+    let mut tw = TableWriter::new(vec!["b", "r", "norm. l2 (d=64)", "time/row"]);
+    let rows: Vec<Vec<f32>> = (0..100).map(|_| rng.normal_vec(64, 1.0)).collect();
+    for (b, r) in [(50u32, 0.16), (200, 0.16), (200, 0.5), (1000, 0.5), (2000, 0.8)] {
+        let q = GreedyQuantizer { b, r };
+        let l2 = mean_rel_l2(&q, &rows);
+        let m = measure(1, 5, || {
+            for row in rows.iter().take(20) {
+                std::hint::black_box(q.clip(row, 4));
+            }
+        });
+        tw.row(vec![
+            b.to_string(),
+            format!("{r}"),
+            format!("{l2:.5}"),
+            format!("{:.1?}", m.median / 20),
+        ]);
+    }
+    println!("{}", tw.render());
+    println!("(paper default b=200/r=0.16 sits at the knee; opt b=1000/r=0.5 buys ~2%)\n");
+
+    // ---- 3: 2-D GSS vs GREEDY --------------------------------------
+    println!("== ablation 3: 2-D golden section search (the road not taken) ==");
+    let mut tw = TableWriter::new(vec!["method", "norm. l2 (d=64)", "time/row"]);
+    let greedy = GreedyQuantizer::default();
+    let gss2d = Gss2dQuantizer::default();
+    for (name, q) in [("GREEDY", &greedy as &dyn Quantizer), ("GSS-2D", &gss2d)] {
+        let l2 = mean_rel_l2(q, &rows);
+        let m = measure(1, 5, || {
+            for row in rows.iter().take(20) {
+                std::hint::black_box(q.clip(row, 4));
+            }
+        });
+        tw.row(vec![
+            name.to_string(),
+            format!("{l2:.5}"),
+            format!("{:.1?}", m.median / 20),
+        ]);
+    }
+    println!("{}", tw.render());
+    println!("(paper §3: nested GSS costs more for no quality gain on short rows)\n");
+
+    // ---- 4: incremental refresh ------------------------------------
+    println!("== ablation 4: periodic re-quantization, full vs incremental ==");
+    let rows_n = 50_000usize;
+    let mut table = EmbeddingTable::randn_sigma(rows_n, 64, 0.1, 4242);
+    let q = GreedyQuantizer::default();
+    let mut refresher = TableRefresher::new(&table, &q, 4, ScaleBiasDtype::F16);
+    // A training interval touches the Zipf head: 1% of rows.
+    let dirty: Vec<usize> = (0..rows_n / 100).map(|_| rng.below(rows_n / 10)).collect();
+    for &r in &dirty {
+        for v in table.row_mut(r) {
+            *v += (rng.normal() as f32) * 0.01;
+        }
+        refresher.mark_dirty(r);
+    }
+    let m_full = measure(0, 3, || {
+        std::hint::black_box(table.quantize_fused(&q, 4, ScaleBiasDtype::F16))
+    });
+    let m_incr = measure(0, 1, || {
+        // Measure one realistic refresh (marks are consumed, so re-mark).
+        for &r in &dirty {
+            refresher.mark_dirty(r);
+        }
+        refresher.refresh(&table, &q)
+    });
+    let mut tw = TableWriter::new(vec!["strategy", "rows requantized", "time"]);
+    tw.row(vec![
+        "full table".to_string(),
+        rows_n.to_string(),
+        format!("{:.1?}", m_full.median),
+    ]);
+    tw.row(vec![
+        "incremental (1% dirty)".to_string(),
+        dirty.len().to_string(),
+        format!("{:.1?}", m_incr.median),
+    ]);
+    println!("{}", tw.render());
+    println!(
+        "speedup {:.0}× — periodic re-quantization scales with traffic, not table size.",
+        m_full.secs() / m_incr.secs().max(1e-9)
+    );
+}

@@ -1,0 +1,122 @@
+//! Coordinator micro-benchmarks: serving throughput/latency vs shard
+//! count, batch size, and table format — the ablations DESIGN.md calls
+//! out for the L3 layer (batching amortization, shard scaling,
+//! INT4-vs-FP32 serving).
+//!
+//! ```bash
+//! cargo bench --bench coordinator_micro
+//! ```
+
+use emberq::coordinator::{BatchPolicy, EmbeddingServer, ServerConfig, TableSet};
+use emberq::data::trace::{RequestTrace, TraceConfig};
+use emberq::eval::TableWriter;
+use emberq::quant::GreedyQuantizer;
+use emberq::table::serial::AnyTable;
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+
+const NUM_TABLES: usize = 8;
+const ROWS: usize = 100_000;
+const DIM: usize = 64;
+
+fn tables(kind: &str) -> TableSet {
+    TableSet::new(
+        (0..NUM_TABLES)
+            .map(|t| {
+                let tab = EmbeddingTable::randn_sigma(ROWS, DIM, 0.1, 0xC0 + t as u64);
+                match kind {
+                    "fp32" => AnyTable::F32(tab),
+                    "int8" => AnyTable::Fused(tab.quantize_fused(
+                        &GreedyQuantizer::default(),
+                        8,
+                        ScaleBiasDtype::F32,
+                    )),
+                    _ => AnyTable::Fused(tab.quantize_fused(
+                        &GreedyQuantizer::default(),
+                        4,
+                        ScaleBiasDtype::F16,
+                    )),
+                }
+            })
+            .collect(),
+    )
+}
+
+fn trace(requests: usize) -> RequestTrace {
+    RequestTrace::generate(&TraceConfig {
+        requests,
+        num_tables: NUM_TABLES,
+        rows: ROWS,
+        mean_pool: 10,
+        zipf_alpha: 1.05,
+        seed: 0xBEEF,
+    })
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n_req = if quick { 2_000 } else { 10_000 };
+    let tr = trace(n_req);
+
+    println!("== ablation: table format (4 shards, batch 64) ==");
+    let mut tw = TableWriter::new(vec!["format", "bytes", "req/s", "lookups/s", "p50", "p99"]);
+    for kind in ["fp32", "int8", "int4"] {
+        let set = tables(kind);
+        let bytes = set.size_bytes();
+        let server = EmbeddingServer::start(
+            set,
+            ServerConfig { shards: 4, queue_depth: 64, batch: BatchPolicy::default() },
+        );
+        let m = server.serve_trace(&tr);
+        let (p50, _, p99) = m.latency.percentiles();
+        tw.row(vec![
+            kind.to_string(),
+            bytes.to_string(),
+            format!("{:.0}", m.throughput()),
+            format!("{:.2e}", m.lookup_rate()),
+            format!("{p50:.0?}"),
+            format!("{p99:.0?}"),
+        ]);
+    }
+    println!("{}", tw.render());
+
+    println!("== ablation: shard count (int4, batch 64) ==");
+    let mut tw = TableWriter::new(vec!["shards", "req/s", "p99"]);
+    for shards in [1usize, 2, 4, 8] {
+        let server = EmbeddingServer::start(
+            tables("int4"),
+            ServerConfig { shards, queue_depth: 64, batch: BatchPolicy::default() },
+        );
+        let m = server.serve_trace(&tr);
+        let (_, _, p99) = m.latency.percentiles();
+        tw.row(vec![
+            shards.to_string(),
+            format!("{:.0}", m.throughput()),
+            format!("{p99:.0?}"),
+        ]);
+    }
+    println!("{}", tw.render());
+
+    println!("== ablation: batch size (int4, 4 shards) ==");
+    let mut tw = TableWriter::new(vec!["max_batch", "req/s", "batches", "p50", "p99"]);
+    for max_batch in [1usize, 8, 64, 256] {
+        let server = EmbeddingServer::start(
+            tables("int4"),
+            ServerConfig {
+                shards: 4,
+                queue_depth: 64,
+                batch: BatchPolicy { max_batch, ..Default::default() },
+            },
+        );
+        let m = server.serve_trace(&tr);
+        let (p50, _, p99) = m.latency.percentiles();
+        tw.row(vec![
+            max_batch.to_string(),
+            format!("{:.0}", m.throughput()),
+            m.batches.to_string(),
+            format!("{p50:.0?}"),
+            format!("{p99:.0?}"),
+        ]);
+    }
+    println!("{}", tw.render());
+    println!("Expect: batching lifts req/s by >5x from batch 1 to 64 (dispatch amortization).");
+}

@@ -1,0 +1,68 @@
+//! Figure 2 reproduction: average time to 4-bit-quantize one row vector
+//! vs dimension, per method (paper Appendix A; log₁₀ ms in the figure).
+//!
+//! The headline: HIST-BRUTE is *millions of times slower* than ASYM
+//! (O(b³) model evaluations vs one min/max pass), while GREEDY stays
+//! within two orders of magnitude of ASYM — cheap enough for the periodic
+//! re-quantization production models need.
+//!
+//! ```bash
+//! cargo bench --bench fig2_quant_time [-- --full]   # --full: d up to 8192
+//! ```
+
+use emberq::eval::{JsonWriter, TableWriter};
+use emberq::quant::{method_by_name, KmeansQuantizer, Method};
+use emberq::table::EmbeddingTable;
+use emberq::util::bench::measure;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let dims: Vec<usize> =
+        if full { vec![16, 64, 256, 1024, 2048, 8192] } else { vec![16, 64, 256, 1024] };
+    let methods = ["ASYM", "SYM", "GSS", "ACIQ", "HIST-APPRX", "GREEDY", "KMEANS", "HIST-BRUTE"];
+
+    let mut tw = TableWriter::new(
+        std::iter::once("method".to_string())
+            .chain(dims.iter().map(|d| format!("d={d}")))
+            .collect::<Vec<_>>(),
+    );
+    let mut json = JsonWriter::new();
+    json.num_array("dims", &dims.iter().map(|&d| d as f64).collect::<Vec<_>>());
+
+    for name in methods {
+        let method = method_by_name(name).unwrap();
+        let mut row = vec![name.to_string()];
+        let mut times = Vec::new();
+        for &d in &dims {
+            // HIST-BRUTE at large d: one rep only, it is the slow path by
+            // design (the figure's whole point).
+            let reps = match name {
+                "HIST-BRUTE" => 1,
+                _ if d >= 2048 => 3,
+                _ => 9,
+            };
+            let table = EmbeddingTable::randn(1, d, d as u64 ^ 0xF2);
+            let row_vals = table.row(0).to_vec();
+            let m = match &method {
+                Method::Uniform(q) => measure(0, reps, || q.clip(&row_vals, 4)),
+                Method::Kmeans(_) => {
+                    let k = KmeansQuantizer::default();
+                    measure(0, reps, || k.quantize_row(&row_vals))
+                }
+                Method::KmeansCls(_) => unreachable!(),
+            };
+            let ms = m.secs() * 1e3;
+            row.push(if ms < 0.001 {
+                format!("{:.2}us", ms * 1e3)
+            } else {
+                format!("{ms:.3}ms")
+            });
+            times.push(ms);
+            eprintln!("{name} d={d}: {ms:.4} ms/row");
+        }
+        json.num_array(name, &times);
+        tw.row(row);
+    }
+    println!("\nFigure 2 — avg 4-bit quantization time per row:\n{}", tw.render());
+    println!("JSON: {}", json.finish());
+}

@@ -1,0 +1,108 @@
+//! Table 1 reproduction: SparseLengthsSum computational throughput in
+//! billion element sums per second, FP32 / INT8 / INT4, cache
+//! non-resident and cache resident.
+//!
+//! Paper setup: single core, Xeon Gold 6138, LLC flushed between runs for
+//! the non-resident case. We reproduce the *shape*: INT4 moves `d/2+4`
+//! bytes/row vs `d+8` (INT8) and `4d` (FP32), so its throughput overtakes
+//! both as `d` grows and the table leaves cache.
+//!
+//! ```bash
+//! cargo bench --bench table1_sls_throughput
+//! ```
+
+use emberq::eval::TableWriter;
+use emberq::quant::AsymQuantizer;
+use emberq::sls::{sls_f32, sls_fused, CacheFlusher, SlsArgs};
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+use emberq::util::bench::{measure, measure_with_setup};
+use emberq::util::Rng;
+
+/// Rows pooled per measurement (paper pools large batches).
+const LOOKUPS: usize = 200_000;
+const SEGMENTS: usize = 2_000;
+
+fn workload(rows: usize, rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let indices: Vec<u32> = (0..LOOKUPS).map(|_| rng.below(rows) as u32).collect();
+    let lengths = vec![(LOOKUPS / SEGMENTS) as u32; SEGMENTS];
+    (indices, lengths)
+}
+
+/// The paper's metric: billion *element* sums per second (each pooled row
+/// contributes `d` additions).
+fn gsums(secs: f64, d: usize) -> f64 {
+    (LOOKUPS * d) as f64 / secs / 1e9
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // Non-resident: big table (256 MB at FP32 d=512) + LLC flush.
+    // Resident: small table that fits L2/L3.
+    let dims = [64usize, 128, 256, 512];
+    let mut out = TableWriter::new(vec![
+        "data type",
+        "mode",
+        "d=64",
+        "d=128",
+        "d=256",
+        "d=512",
+    ]);
+    let mut rng = Rng::new(0x7AB1E1);
+    let (warm, reps) = if quick { (0, 3) } else { (1, 7) };
+
+    for resident in [false, true] {
+        let rows = if resident { 4_096 } else { 1_000_000 };
+        let mode = if resident { "resident" } else { "non-resident" };
+        let mut fp32_row = Vec::new();
+        let mut i8_row = Vec::new();
+        let mut i4_row = Vec::new();
+        for &d in &dims {
+            let table = EmbeddingTable::randn_sigma(rows, d, 0.1, d as u64);
+            let f8 = table.quantize_fused(&AsymQuantizer, 8, ScaleBiasDtype::F32);
+            let f4 = table.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16);
+            let (indices, lengths) = workload(rows, &mut rng);
+            let args = SlsArgs::new(&indices, &lengths, rows).unwrap();
+            let mut sink = vec![0.0f32; SEGMENTS * d];
+            let mut flusher =
+                if resident { None } else { Some(CacheFlusher::with_llc_mib(48)) };
+
+            let mut run = |f: &mut dyn FnMut(&mut [f32])| {
+                if let Some(fl) = flusher.as_mut() {
+                    measure_with_setup(warm, reps, || {
+                        fl.flush();
+                    }, || f(&mut sink))
+                } else {
+                    measure(warm, reps, || f(&mut sink))
+                }
+            };
+            let m32 = run(&mut |o| sls_f32(&table, &args, o));
+            let m8 = run(&mut |o| sls_fused(&f8, &args, o));
+            let m4 = run(&mut |o| sls_fused(&f4, &args, o));
+            fp32_row.push(format!("{:.3}", gsums(m32.secs(), d)));
+            i8_row.push(format!("{:.3}", gsums(m8.secs(), d)));
+            i4_row.push(format!("{:.3}", gsums(m4.secs(), d)));
+            eprintln!(
+                "{mode} d={d}: fp32 {:.3} int8 {:.3} int4 {:.3} GSums/s",
+                gsums(m32.secs(), d),
+                gsums(m8.secs(), d),
+                gsums(m4.secs(), d)
+            );
+        }
+        let mut row = vec!["FP32".to_string(), mode.to_string()];
+        row.extend(fp32_row);
+        out.row(row);
+        let mut row = vec!["INT8".to_string(), mode.to_string()];
+        row.extend(i8_row);
+        out.row(row);
+        let mut row = vec!["INT4".to_string(), mode.to_string()];
+        row.extend(i4_row);
+        out.row(row);
+    }
+    println!(
+        "\nTable 1 — SLS throughput (GSums/s), {LOOKUPS} pooled rows/{SEGMENTS} segments:\n{}",
+        out.render()
+    );
+    println!(
+        "Paper shape check: non-resident INT4 >= INT8 at d>=256 and INT4 >= FP32 at d>=256."
+    );
+}

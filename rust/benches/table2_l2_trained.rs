@@ -1,0 +1,82 @@
+//! Table 2 reproduction: normalized ℓ2 loss of every quantization method
+//! on *trained* embedding tables, for d ∈ {8, 16, 32, 64, 128}.
+//!
+//! Each dim trains a scaled-down DLRM on the synthetic Criteo stream
+//! (Adagrad, batch 100 — the paper's §5 recipe), then quantizes table 0.
+//!
+//! ```bash
+//! cargo bench --bench table2_l2_trained [-- --quick]
+//! ```
+
+use emberq::data::{CriteoConfig, SyntheticCriteo};
+use emberq::eval::{normalized_l2_method, TableWriter};
+use emberq::model::{Dlrm, DlrmConfig, Trainer, TrainerConfig};
+use emberq::quant::method_by_name;
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+
+fn trained_table(dim: usize, steps: usize) -> EmbeddingTable {
+    let dcfg = CriteoConfig { num_sparse: 4, rows_per_table: 2_000, ..Default::default() };
+    let mcfg = DlrmConfig {
+        num_tables: 4,
+        rows_per_table: 2_000,
+        dim,
+        dense_dim: dcfg.dense_dim,
+        hidden: vec![128, 128],
+        seed: 0x7AB2 + dim as u64,
+    };
+    let mut model = Dlrm::new(mcfg);
+    let mut data = SyntheticCriteo::train(dcfg);
+    Trainer::new(TrainerConfig { batch: 100, steps, log_every: steps, ..Default::default() })
+        .train(&mut model, &mut data);
+    model.tables.swap_remove(0)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 150 } else { 600 };
+    let dims = [8usize, 16, 32, 64, 128];
+    // (label, method, nbits, sb) in the paper's row order.
+    use ScaleBiasDtype::{F16, F32};
+    let rows: Vec<(&str, &str, u32, ScaleBiasDtype)> = vec![
+        ("ASYM-8BITS", "ASYM", 8, F32),
+        ("SYM", "SYM", 4, F32),
+        ("GSS", "GSS", 4, F32),
+        ("ASYM", "ASYM", 4, F32),
+        ("HIST-APPRX", "HIST-APPRX", 4, F32),
+        ("HIST-BRUTE", "HIST-BRUTE", 4, F32),
+        ("ACIQ", "ACIQ", 4, F32),
+        ("GREEDY", "GREEDY", 4, F32),
+        ("GREEDY (FP16)", "GREEDY", 4, F16),
+        ("KMEANS-CLS (FP16)", "KMEANS-CLS", 4, F16),
+        ("KMEANS (FP16)", "KMEANS", 4, F16),
+    ];
+
+    let tables: Vec<(usize, EmbeddingTable)> = dims
+        .iter()
+        .map(|&d| {
+            eprintln!("training d={d}...");
+            (d, trained_table(d, steps))
+        })
+        .collect();
+
+    let mut tw = TableWriter::new(
+        std::iter::once("method".to_string())
+            .chain(dims.iter().map(|d| format!("d={d}")))
+            .collect::<Vec<_>>(),
+    );
+    for (label, name, nbits, sb) in &rows {
+        let method = method_by_name(name).unwrap();
+        let mut out = vec![label.to_string()];
+        for (_, table) in &tables {
+            let l2 = normalized_l2_method(table, &method, *nbits, *sb);
+            out.push(format!("{l2:.5}"));
+        }
+        eprintln!("done {label}");
+        tw.row(out);
+    }
+    println!("\nTable 2 — normalized l2 on trained tables:\n{}", tw.render());
+    println!(
+        "Paper shape: GREEDY smallest among 4-bit uniform; KMEANS(FP16) ~0 at d<=16;\n\
+         ASYM-8BITS ~15x below the 4-bit methods; GREEDY==GREEDY(FP16) to 4+ decimals."
+    );
+}

@@ -1,0 +1,104 @@
+//! Table 3 reproduction: model log loss and size after quantization, per
+//! method and embedding dimension.
+//!
+//! ```bash
+//! cargo bench --bench table3_model_loss [-- --quick]
+//! ```
+
+use emberq::data::{ClickBatch, CriteoConfig, SyntheticCriteo};
+use emberq::eval::TableWriter;
+use emberq::model::{Dlrm, DlrmConfig, QuantizedDlrm, Trainer, TrainerConfig};
+use emberq::quant::{method_by_name, KmeansClsQuantizer, Method};
+use emberq::table::{CodebookKind, ScaleBiasDtype};
+
+fn train(dim: usize, steps: usize) -> (Dlrm, Vec<ClickBatch>) {
+    let rows = 2_000;
+    let dcfg = CriteoConfig { num_sparse: 4, rows_per_table: rows, ..Default::default() };
+    let mcfg = DlrmConfig {
+        num_tables: 4,
+        rows_per_table: rows,
+        dim,
+        dense_dim: dcfg.dense_dim,
+        hidden: vec![128, 128],
+        seed: 0x7AB3 + dim as u64,
+    };
+    let mut model = Dlrm::new(mcfg);
+    let mut data = SyntheticCriteo::train(dcfg.clone());
+    Trainer::new(TrainerConfig { batch: 100, steps, log_every: steps, ..Default::default() })
+        .train(&mut model, &mut data);
+    let mut eval = SyntheticCriteo::eval(dcfg);
+    let batches = (0..10).map(|_| eval.next_batch(500)).collect();
+    (model, batches)
+}
+
+fn mean_loss(model_loss: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = model_loss.collect();
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 150 } else { 600 };
+    let dims = [8usize, 16, 32, 64, 128];
+    use ScaleBiasDtype::{F16, F32};
+    let rows: Vec<(&str, &str, u32, ScaleBiasDtype)> = vec![
+        ("ASYM-8BITS", "ASYM", 8, F32),
+        ("SYM", "SYM", 4, F32),
+        ("GSS", "GSS", 4, F32),
+        ("ASYM", "ASYM", 4, F32),
+        ("HIST-APPRX", "HIST-APPRX", 4, F32),
+        ("HIST-BRUTE", "HIST-BRUTE", 4, F32),
+        ("ACIQ", "ACIQ", 4, F32),
+        ("GREEDY", "GREEDY", 4, F32),
+        ("GREEDY (FP16)", "GREEDY", 4, F16),
+        ("KMEANS (FP16)", "KMEANS", 4, F16),
+    ];
+
+    let mut tw = TableWriter::new(
+        std::iter::once("method".to_string())
+            .chain(dims.iter().flat_map(|d| [format!("d={d} loss"), format!("d={d} size")]))
+            .collect::<Vec<_>>(),
+    );
+    let mut fp32_row = vec!["FP32 (no quant)".to_string()];
+    let mut cells: Vec<Vec<String>> = vec![Vec::new(); rows.len()];
+
+    for &dim in &dims {
+        eprintln!("training d={dim}...");
+        let (model, batches) = train(dim, steps);
+        let fp32 = mean_loss(batches.iter().map(|b| model.eval_logloss(b)));
+        let bytes = model.tables_bytes();
+        fp32_row.push(format!("{fp32:.5}"));
+        fp32_row.push(format!("{:.1}MB", bytes as f64 / 1e6));
+        for (mi, (label, name, nbits, sb)) in rows.iter().enumerate() {
+            let method = method_by_name(name).unwrap();
+            let q = match &method {
+                Method::Uniform(u) => QuantizedDlrm::from_uniform(&model, u.as_ref(), *nbits, *sb),
+                Method::Kmeans(_) => {
+                    QuantizedDlrm::from_codebook(&model, CodebookKind::Rowwise, *sb)
+                }
+                Method::KmeansCls(_) => {
+                    let budget = 2_000 * sb.tail_bytes();
+                    let k = KmeansClsQuantizer::k_for_budget(2_000, budget).min(2_000);
+                    QuantizedDlrm::from_codebook(&model, CodebookKind::TwoTier { k }, *sb)
+                }
+            };
+            let loss = mean_loss(batches.iter().map(|b| q.eval_logloss(b)));
+            let ratio = 100.0 * q.tables_bytes() as f64 / bytes as f64;
+            cells[mi].push(format!("{loss:.5}"));
+            cells[mi].push(format!("{ratio:.2}%"));
+            eprintln!("  {label}: loss {loss:.5} size {ratio:.2}%");
+        }
+    }
+    tw.row(fp32_row);
+    for (mi, (label, _, _, _)) in rows.iter().enumerate() {
+        let mut row = vec![label.to_string()];
+        row.extend(cells[mi].clone());
+        tw.row(row);
+    }
+    println!("\nTable 3 — model log loss and size after quantization:\n{}", tw.render());
+    println!(
+        "Paper shape: GREEDY the lowest-loss 4-bit uniform method at every d;\n\
+         KMEANS matches FP32 loss; sizes match the closed-form ratios\n\
+         (d=128 GREEDY(FP16): 13.28%)."
+    );
+}

@@ -1,0 +1,358 @@
+//! Hand-rolled CLI for the `emberq` binary.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter};
+
+use emberq::coordinator::{BatchPolicy, EmbeddingServer, ServerConfig, TableSet};
+use emberq::data::trace::{RequestTrace, TraceConfig};
+use emberq::data::{CriteoConfig, SyntheticCriteo};
+use emberq::eval::{normalized_l2_method, TableWriter};
+use emberq::model::{Dlrm, DlrmConfig, Trainer, TrainerConfig};
+use emberq::quant::{method_by_name, Method};
+use emberq::table::serial::{self, AnyTable};
+use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+
+type Result<T> = std::result::Result<T, String>;
+
+/// Flag map: `--key value` pairs plus positional args.
+struct Flags {
+    positional: Vec<String>,
+    kv: Vec<(String, String)>,
+    bools: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Flags {
+        // Value-less flags must be listed here so `--fp16 positional`
+        // parses unambiguously.
+        const BOOL_FLAGS: &[&str] = &["fp16", "help"];
+        let mut f = Flags { positional: Vec::new(), kv: Vec::new(), bools: Vec::new() };
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&key) {
+                    f.bools.push(key.to_string());
+                    i += 1;
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    f.kv.push((key.to_string(), args[i + 1].clone()));
+                    i += 2;
+                } else {
+                    f.bools.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                f.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        f
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad value '{v}'")),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+}
+
+/// Entry point used by `main`.
+pub fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..]);
+    if flags.flag("help") {
+        print_help();
+        return Ok(());
+    }
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "quantize" => cmd_quantize(&flags),
+        "eval" => cmd_eval(&flags),
+        "serve" => cmd_serve(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try `emberq help`)")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "emberq — post-training 4-bit quantization on embedding tables
+
+USAGE: emberq <command> [flags]
+
+COMMANDS:
+  train     --tables N --rows N --dim D --steps N --batch N --out DIR
+            train a DLRM on synthetic Criteo data; saves FP32 tables
+  quantize  --in FILE --out FILE --method NAME [--bits 4|8] [--fp16]
+            methods: ASYM TABLE SYM GSS HIST-APPRX HIST-BRUTE ACIQ GREEDY
+                     GREEDY-OPT KMEANS KMEANS-CLS
+  eval      --rows N --dim D [--seed S] [--bits 4]
+            normalized-l2 sweep of all methods over a random N(0,1) table
+  serve     --table FILE [--shards N] [--requests N] [--batch N] [--listen ADDR]
+            serve a table file against a synthetic Zipf trace
+  info      --in FILE
+            describe a saved table file"
+    );
+}
+
+fn open_table(path: &str) -> Result<AnyTable> {
+    let f = File::open(path).map_err(|e| format!("{path}: {e}"))?;
+    serial::read_any(&mut BufReader::new(f)).map_err(|e| format!("{path}: {e}"))
+}
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let num_tables: usize = flags.num("tables", 4)?;
+    let rows: usize = flags.num("rows", 10_000)?;
+    let dim: usize = flags.num("dim", 32)?;
+    let steps: usize = flags.num("steps", 500)?;
+    let batch: usize = flags.num("batch", 100)?;
+    let out_dir = flags.get("out").unwrap_or("./trained");
+
+    let dcfg = CriteoConfig {
+        num_sparse: num_tables,
+        rows_per_table: rows,
+        ..Default::default()
+    };
+    let mcfg = DlrmConfig {
+        num_tables,
+        rows_per_table: rows,
+        dim,
+        dense_dim: dcfg.dense_dim,
+        ..Default::default()
+    };
+    println!(
+        "training DLRM: {num_tables} tables × {rows} rows × d={dim}, {steps} steps, batch {batch}"
+    );
+    let mut model = Dlrm::new(mcfg);
+    let mut data = SyntheticCriteo::train(dcfg);
+    let trainer = Trainer::new(TrainerConfig { batch, steps, ..Default::default() });
+    let report = trainer.train(&mut model, &mut data);
+    for (step, loss) in &report.loss_curve {
+        println!("  step {step:>6}  loss {loss:.5}");
+    }
+    std::fs::create_dir_all(out_dir).map_err(|e| format!("{out_dir}: {e}"))?;
+    for (t, table) in model.tables.iter().enumerate() {
+        let path = format!("{out_dir}/table_{t}.embq");
+        let f = File::create(&path).map_err(|e| format!("{path}: {e}"))?;
+        serial::write_f32(&mut BufWriter::new(f), table).map_err(|e| format!("{path}: {e}"))?;
+    }
+    println!("saved {} FP32 tables to {out_dir}/", model.tables.len());
+    Ok(())
+}
+
+fn cmd_quantize(flags: &Flags) -> Result<()> {
+    let input = flags.get("in").ok_or("--in required")?;
+    let output = flags.get("out").ok_or("--out required")?;
+    let method_name = flags.get("method").unwrap_or("GREEDY");
+    let bits: u32 = flags.num("bits", 4)?;
+    let sb = if flags.flag("fp16") { ScaleBiasDtype::F16 } else { ScaleBiasDtype::F32 };
+    let method =
+        method_by_name(method_name).ok_or_else(|| format!("unknown method {method_name}"))?;
+
+    let table = match open_table(input)? {
+        AnyTable::F32(t) => t,
+        _ => return Err("input must be an FP32 table".into()),
+    };
+    let f = File::create(output).map_err(|e| format!("{output}: {e}"))?;
+    let mut w = BufWriter::new(f);
+    let (q_bytes, desc) = match &method {
+        Method::Uniform(q) => {
+            let fused = if q.name() == "TABLE" {
+                table.quantize_fused_tablewise(q.as_ref(), bits, sb)
+            } else {
+                table.quantize_fused(q.as_ref(), bits, sb)
+            };
+            serial::write_fused(&mut w, &fused).map_err(|e| e.to_string())?;
+            (fused.size_bytes(), format!("{} {bits}-bit", q.name()))
+        }
+        Method::Kmeans(_) => {
+            let cb = table.quantize_codebook(CodebookKind::Rowwise, sb);
+            serial::write_codebook(&mut w, &cb).map_err(|e| e.to_string())?;
+            (cb.size_bytes(), "KMEANS 4-bit".to_string())
+        }
+        Method::KmeansCls(_) => {
+            let budget = table.rows() * sb.tail_bytes();
+            let k = emberq::quant::KmeansClsQuantizer::k_for_budget(table.rows(), budget)
+                .min(table.rows());
+            let cb = table.quantize_codebook(CodebookKind::TwoTier { k }, sb);
+            serial::write_codebook(&mut w, &cb).map_err(|e| e.to_string())?;
+            (cb.size_bytes(), format!("KMEANS-CLS K={k}"))
+        }
+    };
+    println!(
+        "{desc}: {} -> {} bytes ({:.2}% of FP32)",
+        table.size_bytes(),
+        q_bytes,
+        100.0 * q_bytes as f64 / table.size_bytes() as f64
+    );
+    Ok(())
+}
+
+fn cmd_eval(flags: &Flags) -> Result<()> {
+    let rows: usize = flags.num("rows", 100)?;
+    let dim: usize = flags.num("dim", 64)?;
+    let seed: u64 = flags.num("seed", 1)?;
+    let bits: u32 = flags.num("bits", 4)?;
+    let table = EmbeddingTable::randn(rows, dim, seed);
+    let mut tw = TableWriter::new(vec!["method", "normalized l2"]);
+    for name in [
+        "SYM", "GSS", "ASYM", "HIST-APPRX", "HIST-BRUTE", "ACIQ", "GREEDY", "KMEANS",
+        "KMEANS-CLS",
+    ] {
+        let m = method_by_name(name).unwrap();
+        let l2 = normalized_l2_method(&table, &m, bits, ScaleBiasDtype::F32);
+        tw.row(vec![name.to_string(), format!("{l2:.5}")]);
+    }
+    println!("{rows}×{dim} N(0,1) table, {bits}-bit:\n{}", tw.render());
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let table_path = flags.get("table").ok_or("--table required")?;
+    let shards: usize = flags.num("shards", 4)?;
+    let requests: usize = flags.num("requests", 10_000)?;
+    let max_batch: usize = flags.num("batch", 64)?;
+    let copies: usize = flags.num("copies", 8)?;
+    let listen = flags.get("listen").map(str::to_string);
+
+    let loaded = open_table(table_path)?;
+    let rows = loaded.rows();
+    // Serve `copies` logical tables backed by re-reading the same file so
+    // the request shape matches a multi-table ranking model.
+    let mut tables = vec![loaded];
+    for _ in 1..copies {
+        tables.push(open_table(table_path)?);
+    }
+    let set = TableSet::new(tables);
+    println!(
+        "serving {} tables ({} rows, d={}, {} bytes total) on {shards} shards",
+        set.num_tables(),
+        rows,
+        set.dim(),
+        set.size_bytes()
+    );
+    let server = EmbeddingServer::start(
+        set,
+        ServerConfig {
+            shards,
+            queue_depth: 64,
+            batch: BatchPolicy { max_batch, ..Default::default() },
+        },
+    );
+    if let Some(addr) = listen {
+        // Socket mode: serve lookups over TCP until interrupted.
+        let server = std::sync::Arc::new(server);
+        let front = emberq::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &addr)
+            .map_err(|e| format!("bind {addr}: {e}"))?;
+        println!("listening on {} (protocol: see coordinator::tcp docs); Ctrl-C to stop", front.addr());
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let trace = RequestTrace::generate(&TraceConfig {
+        requests,
+        num_tables: copies,
+        rows,
+        ..Default::default()
+    });
+    let metrics = server.serve_trace(&trace);
+    println!("{}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_info(flags: &Flags) -> Result<()> {
+    let input = flags.get("in").ok_or("--in required")?;
+    let t = open_table(input)?;
+    let kind = match &t {
+        AnyTable::F32(_) => "fp32".to_string(),
+        AnyTable::Fused(f) => format!(
+            "fused int{} ({:?} scale/bias, {} B/row)",
+            f.nbits(),
+            f.scale_bias_dtype(),
+            f.row_bytes()
+        ),
+        AnyTable::Codebook(c) => format!("codebook {:?}", c.kind()),
+    };
+    println!(
+        "{input}: {kind}, {} rows × d={}, {} bytes",
+        t.rows(),
+        t.dim(),
+        t.size_bytes()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_parse() {
+        let f = Flags::parse(&s(&["--rows", "10", "--fp16", "pos", "--dim", "8"]));
+        assert_eq!(f.get("rows"), Some("10"));
+        assert_eq!(f.num("dim", 0usize).unwrap(), 8);
+        assert!(f.flag("fp16"));
+        assert_eq!(f.positional, vec!["pos"]);
+        assert_eq!(f.num("missing", 42usize).unwrap(), 42);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn eval_runs() {
+        run(&s(&["eval", "--rows", "10", "--dim", "16"])).unwrap();
+    }
+
+    #[test]
+    fn quantize_round_trip_via_files() {
+        let dir = std::env::temp_dir().join("emberq_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let fp32 = dir.join("t.embq");
+        let q = dir.join("t_q.embq");
+        let table = EmbeddingTable::randn(20, 16, 3);
+        let f = File::create(&fp32).unwrap();
+        serial::write_f32(&mut BufWriter::new(f), &table).unwrap();
+        run(&s(&[
+            "quantize",
+            "--in",
+            fp32.to_str().unwrap(),
+            "--out",
+            q.to_str().unwrap(),
+            "--method",
+            "GREEDY",
+            "--fp16",
+        ]))
+        .unwrap();
+        let loaded = open_table(q.to_str().unwrap()).unwrap();
+        assert!(matches!(loaded, AnyTable::Fused(_)));
+        run(&s(&["info", "--in", q.to_str().unwrap()])).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

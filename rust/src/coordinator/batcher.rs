@@ -1,0 +1,134 @@
+//! Dynamic batching: accumulate requests until a size cap or a deadline.
+//!
+//! Classic serving trade-off (vLLM/Clipper-style): bigger batches amortize
+//! dispatch and improve memory locality across pooled lookups; the
+//! deadline bounds the latency cost for the first request in the batch.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batch-forming policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are queued.
+    pub max_batch: usize,
+    /// Flush when the oldest queued request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(500) }
+    }
+}
+
+/// Pulls items from a channel and yields batches per a [`BatchPolicy`].
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    /// The policy in force.
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    /// Wrap a channel receiver.
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0);
+        Batcher { rx, policy }
+    }
+
+    /// Block for the next batch. Returns `None` once the channel is closed
+    /// and drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // Block for the first item.
+        let first = match self.rx.recv() {
+            Ok(item) => item,
+            Err(_) => return None,
+        };
+        let deadline = Instant::now() + self.policy.max_wait;
+        let mut batch = Vec::with_capacity(self.policy.max_batch);
+        batch.push(first);
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn size_cap_flushes_immediately() {
+        let (tx, rx) = sync_channel(100);
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) },
+        );
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = sync_channel(100);
+        tx.send(1).unwrap();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn closed_channel_drains_then_ends() {
+        let (tx, rx) = sync_channel(100);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(1) },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn producer_thread_feeds_batches() {
+        let (tx, rx) = sync_channel(16);
+        let h = std::thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i).unwrap();
+            }
+        });
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) },
+        );
+        let mut got = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 32);
+            got.extend(batch);
+        }
+        h.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+}

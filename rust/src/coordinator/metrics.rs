@@ -1,0 +1,217 @@
+//! Serving metrics: log-bucketed latency histogram and counters.
+
+use std::time::Duration;
+
+/// Latency histogram with ~4% resolution log buckets from 100 ns to ~100 s.
+///
+/// Recording is O(1) and allocation-free, so it can sit on the hot path.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// Bucket `i` counts samples in `[BASE·G^i, BASE·G^(i+1))` ns.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    max_ns: u64,
+}
+
+const BASE_NS: f64 = 100.0;
+const GROWTH: f64 = 1.04;
+const NBUCKETS: usize = 540; // 100ns · 1.04^540 ≈ 157 s
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: vec![0; NBUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if (ns as f64) < BASE_NS {
+            return 0;
+        }
+        let b = ((ns as f64 / BASE_NS).ln() / GROWTH.ln()) as usize;
+        b.min(NBUCKETS - 1)
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Merge another histogram in (worker → global aggregation).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((self.sum_ns / self.count as u128) as u64)
+    }
+
+    /// Max latency.
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// Quantile estimate (`q` in `[0, 1]`) — upper edge of the bucket
+    /// containing the q-th sample.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let upper = BASE_NS * GROWTH.powi(i as i32 + 1);
+                return Duration::from_nanos(upper as u64);
+            }
+        }
+        self.max()
+    }
+
+    /// `(p50, p95, p99)` convenience.
+    pub fn percentiles(&self) -> (Duration, Duration, Duration) {
+        (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
+    }
+}
+
+/// Aggregated server metrics for a serving run.
+#[derive(Clone, Debug, Default)]
+pub struct ServerMetrics {
+    /// End-to-end request latency.
+    pub latency: LatencyHistogram,
+    /// Requests served.
+    pub requests: u64,
+    /// Pooled row lookups performed.
+    pub lookups: u64,
+    /// Batches executed (for batching-efficiency accounting).
+    pub batches: u64,
+    /// Wall-clock of the run.
+    pub wall: Duration,
+}
+
+impl ServerMetrics {
+    /// Requests per second over the run.
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.requests as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Pooled lookups per second.
+    pub fn lookup_rate(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.lookups as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Mean requests per batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.batches as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let (p50, p95, p99) = self.latency.percentiles();
+        format!(
+            "{} req in {:.2?} ({:.0} req/s, {:.0} lookups/s, batch {:.1}) p50={:.0?} p95={:.0?} p99={:.0?}",
+            self.requests,
+            self.wall,
+            self.throughput(),
+            self.lookup_rate(),
+            self.mean_batch(),
+            p50,
+            p95,
+            p99,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered_and_bracketing() {
+        let mut h = LatencyHistogram::new();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let (p50, p95, p99) = h.percentiles();
+        assert!(p50 <= p95 && p95 <= p99);
+        // p50 of uniform 1..1000 µs ≈ 500 µs, within bucket resolution.
+        assert!(p50 >= Duration::from_micros(450) && p50 <= Duration::from_micros(560), "{p50:?}");
+        assert!(p99 >= Duration::from_micros(900), "{p99:?}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut c = LatencyHistogram::new();
+        for i in 0..100u64 {
+            let d = Duration::from_micros(10 + i);
+            if i % 2 == 0 {
+                a.record(d);
+            } else {
+                b.record(d);
+            }
+            c.record(d);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.quantile(0.5), c.quantile(0.5));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn metrics_rates() {
+        let m = ServerMetrics {
+            requests: 1000,
+            lookups: 5000,
+            batches: 100,
+            wall: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert_eq!(m.throughput(), 500.0);
+        assert_eq!(m.lookup_rate(), 2500.0);
+        assert_eq!(m.mean_batch(), 10.0);
+        assert!(m.summary().contains("req/s"));
+    }
+}

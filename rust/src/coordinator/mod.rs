@@ -1,0 +1,31 @@
+//! L3 serving coordinator — the deployable embedding-inference server.
+//!
+//! The paper's contribution is the quantization + the §4 operators; the
+//! coordinator is the substrate that puts them on a request path, shaped
+//! like a production embedding-serving tier:
+//!
+//! * [`router`] — shards embedding tables across worker threads and
+//!   splits/merges requests.
+//! * [`batcher`] — dynamic batching: group requests up to a batch-size
+//!   cap or a latency deadline, whichever first.
+//! * [`server`] — the worker pool: each worker owns its shard's tables
+//!   and answers pooled-lookup work items over bounded channels
+//!   (backpressure by construction).
+//! * [`metrics`] — latency histograms (p50/p95/p99) and counters.
+//!
+//! Threads + bounded channels (no async runtime): lookups are CPU/memory
+//! bound with sub-millisecond service times, so a thread-per-shard model
+//! with synchronous handoff is both simpler and faster than an async
+//! executor here.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod tcp;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{LatencyHistogram, ServerMetrics};
+pub use router::{Router, ShardPlan};
+pub use server::{EmbeddingServer, ServerConfig, TableSet};
+pub use tcp::{TcpClient, TcpFront};

@@ -1,0 +1,127 @@
+//! Table-sharding router: assigns embedding tables to worker shards and
+//! splits requests into per-shard work.
+//!
+//! Production ranking models hold hundreds of tables; the router spreads
+//! them across workers so a request's lookups proceed in parallel and
+//! each table's rows stay NUMA/cache-local to one worker.
+
+use crate::data::trace::Request;
+
+/// Maps table ids to shards (round-robin by default — tables in ranking
+/// models have similar traffic, so round-robin balances well; a custom
+/// assignment can be supplied for skewed deployments).
+#[derive(Clone, Debug)]
+pub struct Router {
+    assignment: Vec<usize>,
+    shards: usize,
+}
+
+/// The per-shard slice of one request: which tables (by global id) and
+/// their pooled ids this shard must answer.
+#[derive(Clone, Debug, Default)]
+pub struct ShardPlan {
+    /// `(table id, pooled row ids)` pairs for this shard.
+    pub lookups: Vec<(usize, Vec<u32>)>,
+}
+
+impl Router {
+    /// Round-robin assignment of `num_tables` over `shards`.
+    pub fn round_robin(num_tables: usize, shards: usize) -> Self {
+        assert!(shards > 0);
+        Router { assignment: (0..num_tables).map(|t| t % shards).collect(), shards }
+    }
+
+    /// Custom assignment (`assignment[t]` = shard of table `t`).
+    pub fn custom(assignment: Vec<usize>, shards: usize) -> Self {
+        assert!(assignment.iter().all(|&s| s < shards));
+        Router { assignment, shards }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Number of tables routed.
+    pub fn num_tables(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Shard of a table.
+    pub fn shard_of(&self, table: usize) -> usize {
+        self.assignment[table]
+    }
+
+    /// Split a request into per-shard plans. Plans are indexed by shard;
+    /// shards with no work get an empty plan.
+    pub fn plan(&self, req: &Request) -> Vec<ShardPlan> {
+        let mut plans = vec![ShardPlan::default(); self.shards];
+        for (t, ids) in req.ids.iter().enumerate() {
+            plans[self.assignment[t]]
+                .lookups
+                .push((t, ids.clone()));
+        }
+        plans
+    }
+
+    /// Tables assigned to a shard, in ascending order.
+    pub fn tables_of_shard(&self, shard: usize) -> Vec<usize> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s == shard)
+            .map(|(t, _)| t)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(tables: usize) -> Request {
+        Request { ids: (0..tables).map(|t| vec![t as u32, t as u32 + 1]).collect() }
+    }
+
+    #[test]
+    fn round_robin_balances() {
+        let r = Router::round_robin(10, 3);
+        let counts: Vec<usize> = (0..3).map(|s| r.tables_of_shard(s).len()).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+        assert!(counts.iter().all(|&c| (3..=4).contains(&c)), "{counts:?}");
+    }
+
+    #[test]
+    fn plan_partitions_exactly() {
+        let r = Router::round_robin(7, 3);
+        let request = req(7);
+        let plans = r.plan(&request);
+        assert_eq!(plans.len(), 3);
+        let mut seen: Vec<usize> = plans
+            .iter()
+            .flat_map(|p| p.lookups.iter().map(|(t, _)| *t))
+            .collect();
+        seen.sort();
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
+        // Each lookup landed on its assigned shard with its ids intact.
+        for (s, p) in plans.iter().enumerate() {
+            for (t, ids) in &p.lookups {
+                assert_eq!(r.shard_of(*t), s);
+                assert_eq!(ids, &request.ids[*t]);
+            }
+        }
+    }
+
+    #[test]
+    fn custom_assignment_respected() {
+        let r = Router::custom(vec![1, 1, 0], 2);
+        assert_eq!(r.shard_of(0), 1);
+        assert_eq!(r.tables_of_shard(0), vec![2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn custom_out_of_range_panics() {
+        Router::custom(vec![0, 5], 2);
+    }
+}

@@ -1,0 +1,395 @@
+//! The embedding-inference worker pool.
+//!
+//! Topology: one leader (caller) + `shards` worker threads. Each worker
+//! answers pooled-lookup work for the tables the [`Router`] assigned to
+//! it, over a *bounded* channel — when workers fall behind, submission
+//! blocks, which is the backpressure production routers rely on.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::router::Router;
+use crate::data::trace::{Request, RequestTrace};
+use crate::sls::{SlsArgs, SlsTable};
+use crate::table::serial::AnyTable;
+
+/// The quantized (or FP32) tables a server serves. Tables may have
+/// different embedding dimensions (production ranking models mix d ∈
+/// 8..200); response vectors concatenate per-table pooled embeddings at
+/// per-table offsets.
+pub struct TableSet {
+    tables: Vec<AnyTable>,
+    /// `offsets[t]..offsets[t]+dims[t]` is table `t`'s slice of a
+    /// response vector; `offsets[T]` is the total feature width.
+    offsets: Vec<usize>,
+}
+
+impl TableSet {
+    /// Build from tables (dims may differ).
+    pub fn new(tables: Vec<AnyTable>) -> Self {
+        assert!(!tables.is_empty());
+        let mut offsets = Vec::with_capacity(tables.len() + 1);
+        let mut acc = 0usize;
+        for t in &tables {
+            offsets.push(acc);
+            acc += t.dim();
+        }
+        offsets.push(acc);
+        TableSet { tables, offsets }
+    }
+
+    /// Embedding dimension of table `t`.
+    pub fn dim_of(&self, t: usize) -> usize {
+        self.tables[t].dim()
+    }
+
+    /// Uniform embedding dimension, when all tables share one (panics on
+    /// mixed-dim sets — use [`TableSet::dim_of`] / offsets there).
+    pub fn dim(&self) -> usize {
+        let d = self.tables[0].dim();
+        assert!(
+            self.tables.iter().all(|t| t.dim() == d),
+            "dim() on a mixed-dim TableSet"
+        );
+        d
+    }
+
+    /// Offset of table `t` inside a concatenated response vector.
+    pub fn offset_of(&self, t: usize) -> usize {
+        self.offsets[t]
+    }
+
+    /// Total width of a concatenated response (Σ dims).
+    pub fn feature_width(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Number of tables.
+    pub fn num_tables(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Total bytes of all tables.
+    pub fn size_bytes(&self) -> usize {
+        self.tables.iter().map(AnyTable::size_bytes).sum()
+    }
+
+    /// Rows of one table (request validation at the protocol edge).
+    pub fn rows_of(&self, table: usize) -> usize {
+        self.tables[table].rows()
+    }
+
+    /// Pool `ids` from `table` into `out` (one segment).
+    pub fn pool(&self, table: usize, ids: &[u32], out: &mut [f32]) {
+        let t = &self.tables[table];
+        let lengths = [ids.len() as u32];
+        let args = SlsArgs::new(ids, &lengths, t.rows()).expect("validated ids");
+        let sls = match t {
+            AnyTable::F32(t) => SlsTable::F32(t),
+            AnyTable::Fused(t) => SlsTable::Fused(t),
+            AnyTable::Codebook(t) => SlsTable::Codebook(t),
+        };
+        sls.sls(&args, out);
+    }
+}
+
+/// Work sent to one shard: lookups for (slot, table) pairs of a batch.
+struct WorkItem {
+    /// `(batch slot, table id, pooled ids)`.
+    lookups: Vec<(usize, usize, Vec<u32>)>,
+    /// Reply: `(batch slot, table id, pooled vector)`.
+    reply: SyncSender<Vec<(usize, usize, Vec<f32>)>>,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Worker shards.
+    pub shards: usize,
+    /// Bounded queue depth per worker (backpressure).
+    pub queue_depth: usize,
+    /// Dynamic-batching policy for [`EmbeddingServer::serve_trace`].
+    pub batch: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { shards: 4, queue_depth: 64, batch: BatchPolicy::default() }
+    }
+}
+
+/// The serving runtime: router + worker pool over a [`TableSet`].
+pub struct EmbeddingServer {
+    router: Router,
+    senders: Vec<SyncSender<WorkItem>>,
+    workers: Vec<JoinHandle<()>>,
+    tables: Arc<TableSet>,
+    cfg: ServerConfig,
+}
+
+impl EmbeddingServer {
+    /// Start the worker pool.
+    pub fn start(tables: TableSet, cfg: ServerConfig) -> Self {
+        let tables = Arc::new(tables);
+        let router = Router::round_robin(tables.num_tables(), cfg.shards);
+        let mut senders = Vec::with_capacity(cfg.shards);
+        let mut workers = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (tx, rx): (SyncSender<WorkItem>, Receiver<WorkItem>) =
+                sync_channel(cfg.queue_depth);
+            let tset = Arc::clone(&tables);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("emberq-worker-{shard}"))
+                    .spawn(move || worker_loop(rx, tset))
+                    .expect("spawn worker"),
+            );
+            senders.push(tx);
+        }
+        EmbeddingServer { router, senders, workers, tables, cfg }
+    }
+
+    /// The served tables.
+    pub fn tables(&self) -> &TableSet {
+        &self.tables
+    }
+
+    /// Pooled lookup for one request: returns per-table pooled embeddings
+    /// concatenated in table order (`feature_width` floats).
+    pub fn lookup(&self, req: &Request) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.tables.feature_width()];
+        self.lookup_batch_into(std::slice::from_ref(req), &mut out);
+        out
+    }
+
+    /// Pooled lookups for a batch; `out` is `batch × feature_width`.
+    /// Work is fanned to every shard once per batch and merged back.
+    pub fn lookup_batch_into(&self, reqs: &[Request], out: &mut [f32]) {
+        let fw = self.tables.feature_width();
+        let nt = self.tables.num_tables();
+        assert_eq!(out.len(), reqs.len() * fw);
+        // Group lookups per shard across the whole batch.
+        let mut per_shard: Vec<Vec<(usize, usize, Vec<u32>)>> =
+            vec![Vec::new(); self.router.shards()];
+        for (slot, req) in reqs.iter().enumerate() {
+            assert_eq!(req.ids.len(), nt, "request table count mismatch");
+            for (t, ids) in req.ids.iter().enumerate() {
+                per_shard[self.router.shard_of(t)].push((slot, t, ids.clone()));
+            }
+        }
+        let (rtx, rrx) = sync_channel(self.router.shards());
+        let mut outstanding = 0usize;
+        for (shard, lookups) in per_shard.into_iter().enumerate() {
+            if lookups.is_empty() {
+                continue;
+            }
+            self.senders[shard]
+                .send(WorkItem { lookups, reply: rtx.clone() })
+                .expect("worker alive");
+            outstanding += 1;
+        }
+        drop(rtx);
+        for _ in 0..outstanding {
+            let results = rrx.recv().expect("worker reply");
+            for (slot, t, vec) in results {
+                let off = slot * fw + self.tables.offset_of(t);
+                out[off..off + vec.len()].copy_from_slice(&vec);
+            }
+        }
+    }
+
+    /// Replay a trace through the dynamic batcher; returns metrics.
+    ///
+    /// Requests are submitted open-loop in arrival order; each batch is
+    /// formed by the configured [`BatchPolicy`] and dispatched to all
+    /// shards at once.
+    pub fn serve_trace(&self, trace: &RequestTrace) -> ServerMetrics {
+        let mut metrics = ServerMetrics::default();
+        let fw = self.tables.feature_width();
+        let run_start = Instant::now();
+        let max_batch = self.cfg.batch.max_batch;
+        let mut i = 0usize;
+        let mut out = vec![0.0f32; max_batch * fw];
+        while i < trace.requests.len() {
+            let end = (i + max_batch).min(trace.requests.len());
+            let batch = &trace.requests[i..end];
+            let t0 = Instant::now();
+            self.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
+            let dt = t0.elapsed();
+            for req in batch {
+                metrics.latency.record(dt);
+                metrics.requests += 1;
+                metrics.lookups += req.ids.iter().map(Vec::len).sum::<usize>() as u64;
+            }
+            metrics.batches += 1;
+            i = end;
+        }
+        metrics.wall = run_start.elapsed();
+        metrics
+    }
+}
+
+impl Drop for EmbeddingServer {
+    fn drop(&mut self) {
+        self.senders.clear(); // close channels -> workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<WorkItem>, tables: Arc<TableSet>) {
+    while let Ok(item) = rx.recv() {
+        let mut results = Vec::with_capacity(item.lookups.len());
+        for (slot, t, ids) in item.lookups {
+            let mut out = vec![0.0f32; tables.dim_of(t)];
+            tables.pool(t, &ids, &mut out);
+            results.push((slot, t, out));
+        }
+        // Receiver may have given up (tests); ignore send failure.
+        let _ = item.reply.send(results);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::trace::TraceConfig;
+    use crate::quant::GreedyQuantizer;
+    use crate::table::{EmbeddingTable, ScaleBiasDtype};
+
+    fn quantized_set(num_tables: usize, rows: usize, dim: usize) -> (Vec<EmbeddingTable>, TableSet) {
+        let fp32: Vec<EmbeddingTable> = (0..num_tables)
+            .map(|t| EmbeddingTable::randn(rows, dim, 500 + t as u64))
+            .collect();
+        let set = TableSet::new(
+            fp32.iter()
+                .map(|t| {
+                    AnyTable::Fused(t.quantize_fused(
+                        &GreedyQuantizer::default(),
+                        4,
+                        ScaleBiasDtype::F16,
+                    ))
+                })
+                .collect(),
+        );
+        (fp32, set)
+    }
+
+    #[test]
+    fn lookup_matches_direct_sls() {
+        let (fp32, set) = quantized_set(4, 100, 16);
+        let server = EmbeddingServer::start(set, ServerConfig { shards: 2, ..Default::default() });
+        let req = Request { ids: vec![vec![1, 2], vec![3], vec![4, 5, 6], vec![99]] };
+        let got = server.lookup(&req);
+        assert_eq!(got.len(), 4 * 16);
+        // Compare against direct pooling of the FP32 tables (tolerant of
+        // 4-bit quantization error).
+        for (t, ids) in req.ids.iter().enumerate() {
+            for j in 0..16 {
+                let exact: f32 = ids.iter().map(|&i| fp32[t].row(i as usize)[j]).sum();
+                let q = got[t * 16 + j];
+                assert!((exact - q).abs() < 0.2 * ids.len() as f32 + 0.05, "t={t} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_lookup_matches_single() {
+        let (_, set) = quantized_set(3, 50, 8);
+        let server = EmbeddingServer::start(set, ServerConfig { shards: 3, ..Default::default() });
+        let reqs: Vec<Request> = (0..5)
+            .map(|i| Request {
+                ids: vec![vec![i], vec![i, i + 1], vec![49 - i]],
+            })
+            .collect();
+        let mut batch_out = vec![0.0f32; 5 * 3 * 8];
+        server.lookup_batch_into(&reqs, &mut batch_out);
+        for (s, r) in reqs.iter().enumerate() {
+            let single = server.lookup(r);
+            assert_eq!(&batch_out[s * 24..(s + 1) * 24], single.as_slice(), "slot {s}");
+        }
+    }
+
+    #[test]
+    fn serve_trace_counts_everything() {
+        let (_, set) = quantized_set(4, 200, 8);
+        let server = EmbeddingServer::start(
+            set,
+            ServerConfig { shards: 2, queue_depth: 8, batch: BatchPolicy { max_batch: 16, ..Default::default() } },
+        );
+        let trace = RequestTrace::generate(&TraceConfig {
+            requests: 100,
+            num_tables: 4,
+            rows: 200,
+            mean_pool: 5,
+            zipf_alpha: 1.1,
+            seed: 9,
+        });
+        let m = server.serve_trace(&trace);
+        assert_eq!(m.requests, 100);
+        assert_eq!(m.lookups as usize, trace.total_lookups());
+        assert!(m.batches >= 7); // 100 / 16 -> at least 7 batches
+        assert!(m.throughput() > 0.0);
+        assert_eq!(m.latency.count(), 100);
+    }
+
+    #[test]
+    fn clean_shutdown() {
+        let (_, set) = quantized_set(2, 10, 4);
+        let server = EmbeddingServer::start(set, ServerConfig::default());
+        let req = Request { ids: vec![vec![0], vec![1]] };
+        let _ = server.lookup(&req);
+        drop(server); // must not hang or panic
+    }
+
+    #[test]
+    fn mixed_dimension_tables() {
+        // Production zoos mix dims; responses concatenate at per-table
+        // offsets and every slice must match direct pooling.
+        let dims = [8usize, 32, 16];
+        let fp32: Vec<EmbeddingTable> = dims
+            .iter()
+            .enumerate()
+            .map(|(t, &d)| EmbeddingTable::randn(60, d, 600 + t as u64))
+            .collect();
+        let set = TableSet::new(fp32.iter().cloned().map(AnyTable::F32).collect());
+        assert_eq!(set.feature_width(), 56);
+        assert_eq!(set.offset_of(1), 8);
+        assert_eq!(set.offset_of(2), 40);
+        let server = EmbeddingServer::start(set, ServerConfig { shards: 2, ..Default::default() });
+        let req = Request { ids: vec![vec![1, 2], vec![3, 4, 5], vec![59]] };
+        let got = server.lookup(&req);
+        assert_eq!(got.len(), 56);
+        let mut off = 0;
+        for (t, &d) in dims.iter().enumerate() {
+            for j in 0..d {
+                let want: f32 = req.ids[t].iter().map(|&i| fp32[t].row(i as usize)[j]).sum();
+                assert!((got[off + j] - want).abs() < 1e-4, "t={t} j={j}");
+            }
+            off += d;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed-dim")]
+    fn uniform_dim_accessor_guards() {
+        let tables = vec![
+            AnyTable::F32(EmbeddingTable::randn(4, 8, 1)),
+            AnyTable::F32(EmbeddingTable::randn(4, 16, 2)),
+        ];
+        TableSet::new(tables).dim();
+    }
+
+    #[test]
+    fn single_shard_works() {
+        let (_, set) = quantized_set(3, 20, 4);
+        let server = EmbeddingServer::start(set, ServerConfig { shards: 1, ..Default::default() });
+        let req = Request { ids: vec![vec![0, 1], vec![2], vec![3]] };
+        assert_eq!(server.lookup(&req).len(), 12);
+    }
+}

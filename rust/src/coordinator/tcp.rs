@@ -1,0 +1,281 @@
+//! TCP front-end: the embedding server over a socket, so non-Rust
+//! clients (the ranking tier) can query pooled embeddings.
+//!
+//! Wire protocol (little-endian, one request per frame):
+//!
+//! ```text
+//! request:  u32 num_tables
+//!           repeated num_tables times: u32 table_id, u32 len, len × u32 ids
+//! response: u32 num_floats, num_floats × f32   (num_tables·dim, table order)
+//! error:    u32 0xFFFF_FFFF followed by u32 msg_len + utf8 message
+//! ```
+//!
+//! One thread per connection (connections are few and long-lived in an
+//! embedding tier; the per-shard workers behind it do the real fan-out).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::server::EmbeddingServer;
+use crate::data::trace::Request;
+
+const ERR_SENTINEL: u32 = 0xFFFF_FFFF;
+
+/// A running TCP front-end.
+pub struct TcpFront {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpFront {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and serve lookups against
+    /// `server` until dropped.
+    pub fn start(server: Arc<EmbeddingServer>, addr: &str) -> std::io::Result<TcpFront> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::Builder::new()
+            .name("emberq-tcp-accept".into())
+            .spawn(move || {
+                let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let srv = Arc::clone(&server);
+                            conns.push(
+                                std::thread::Builder::new()
+                                    .name("emberq-tcp-conn".into())
+                                    .spawn(move || {
+                                        let _ = handle_conn(stream, &srv);
+                                    })
+                                    .expect("spawn conn"),
+                            );
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })
+            .expect("spawn accept");
+        Ok(TcpFront { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Bound address (useful with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for TcpFront {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn handle_conn(stream: TcpStream, server: &EmbeddingServer) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let nt = server.tables().num_tables();
+    loop {
+        let n = match read_u32(&mut reader) {
+            Ok(n) => n as usize,
+            Err(_) => return Ok(()), // client closed
+        };
+        let mut err: Option<String> = None;
+        let mut ids: Vec<Vec<u32>> = vec![Vec::new(); nt];
+        if n != nt {
+            err = Some(format!("expected {nt} tables, got {n}"));
+        }
+        // Always drain the declared payload so the stream stays framed.
+        for _ in 0..n {
+            let table = read_u32(&mut reader)? as usize;
+            let len = read_u32(&mut reader)? as usize;
+            if len > 1 << 20 {
+                return Ok(()); // refuse absurd frames outright
+            }
+            let mut lookup = Vec::with_capacity(len);
+            for _ in 0..len {
+                lookup.push(read_u32(&mut reader)?);
+            }
+            if table >= nt {
+                err.get_or_insert(format!("table {table} out of range"));
+            } else if lookup.iter().any(|&i| i as usize >= server.tables().rows_of(table)) {
+                err.get_or_insert(format!("row id out of range for table {table}"));
+            } else {
+                ids[table] = lookup;
+            }
+        }
+        if let Some(msg) = err {
+            writer.write_all(&ERR_SENTINEL.to_le_bytes())?;
+            writer.write_all(&(msg.len() as u32).to_le_bytes())?;
+            writer.write_all(msg.as_bytes())?;
+            writer.flush()?;
+            continue;
+        }
+        let out = server.lookup(&Request { ids });
+        writer.write_all(&(out.len() as u32).to_le_bytes())?;
+        for v in &out {
+            writer.write_all(&v.to_le_bytes())?;
+        }
+        writer.flush()?;
+    }
+}
+
+/// Minimal client for tests/examples.
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl TcpClient {
+    /// Connect to a [`TcpFront`].
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<TcpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(TcpClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// One pooled lookup; `ids[t]` are the rows pooled from table `t`.
+    pub fn lookup(&mut self, ids: &[Vec<u32>]) -> std::io::Result<Vec<f32>> {
+        self.writer.write_all(&(ids.len() as u32).to_le_bytes())?;
+        for (t, lookup) in ids.iter().enumerate() {
+            self.writer.write_all(&(t as u32).to_le_bytes())?;
+            self.writer.write_all(&(lookup.len() as u32).to_le_bytes())?;
+            for &i in lookup {
+                self.writer.write_all(&i.to_le_bytes())?;
+            }
+        }
+        self.writer.flush()?;
+        let n = read_u32(&mut self.reader)?;
+        if n == ERR_SENTINEL {
+            let len = read_u32(&mut self.reader)? as usize;
+            let mut msg = vec![0u8; len];
+            self.reader.read_exact(&mut msg)?;
+            return Err(std::io::Error::other(String::from_utf8_lossy(&msg).into_owned()));
+        }
+        let mut out = vec![0.0f32; n as usize];
+        let mut b = [0u8; 4];
+        for v in out.iter_mut() {
+            self.reader.read_exact(&mut b)?;
+            *v = f32::from_le_bytes(b);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{ServerConfig, TableSet};
+    use crate::quant::GreedyQuantizer;
+    use crate::table::serial::AnyTable;
+    use crate::table::{EmbeddingTable, ScaleBiasDtype};
+
+    fn test_server() -> Arc<EmbeddingServer> {
+        let tables: Vec<AnyTable> = (0..3)
+            .map(|t| {
+                let tab = EmbeddingTable::randn(40, 8, 7100 + t);
+                AnyTable::Fused(tab.quantize_fused(
+                    &GreedyQuantizer::default(),
+                    4,
+                    ScaleBiasDtype::F16,
+                ))
+            })
+            .collect();
+        Arc::new(EmbeddingServer::start(
+            TableSet::new(tables),
+            ServerConfig { shards: 2, ..Default::default() },
+        ))
+    }
+
+    #[test]
+    fn round_trip_over_socket() {
+        let server = test_server();
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(front.addr()).unwrap();
+        let ids = vec![vec![1u32, 2, 3], vec![0], vec![39, 39]];
+        let got = client.lookup(&ids).unwrap();
+        let want = server.lookup(&Request { ids });
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn multiple_requests_one_connection() {
+        let server = test_server();
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(front.addr()).unwrap();
+        for i in 0..10u32 {
+            let ids = vec![vec![i % 40], vec![], vec![i % 40, (i + 1) % 40]];
+            let got = client.lookup(&ids).unwrap();
+            assert_eq!(got.len(), 3 * 8);
+            let want = server.lookup(&Request { ids });
+            assert_eq!(got, want, "request {i}");
+        }
+    }
+
+    #[test]
+    fn bad_table_count_reports_error_and_keeps_connection() {
+        let server = test_server();
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(front.addr()).unwrap();
+        let err = client.lookup(&[vec![1u32]]).unwrap_err();
+        assert!(err.to_string().contains("expected 3 tables"));
+        // The connection is still usable.
+        let ok = client.lookup(&[vec![1], vec![2], vec![3]]).unwrap();
+        assert_eq!(ok.len(), 24);
+    }
+
+    #[test]
+    fn out_of_range_id_rejected() {
+        let server = test_server();
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(front.addr()).unwrap();
+        let err = client.lookup(&[vec![1000], vec![], vec![]]).unwrap_err();
+        assert!(err.to_string().contains("out of range"));
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = test_server();
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let addr = front.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|k| {
+                std::thread::spawn(move || {
+                    let mut c = TcpClient::connect(addr).unwrap();
+                    for i in 0..5u32 {
+                        let ids = vec![vec![(k + i) % 40], vec![k % 40], vec![]];
+                        assert_eq!(c.lookup(&ids).unwrap().len(), 24);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

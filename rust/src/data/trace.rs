@@ -1,0 +1,134 @@
+//! Serving request-trace generation for the coordinator benchmarks.
+//!
+//! A trace is a sequence of embedding-lookup requests shaped like
+//! production ranking traffic: each request pools a variable number of
+//! Zipf-popular ids per table (candidate sets), so hot rows hit cache and
+//! the tail streams from memory — the access mix Table 1's "non-resident"
+//! column models.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Trace shape parameters.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Number of requests.
+    pub requests: usize,
+    /// Tables each request touches.
+    pub num_tables: usize,
+    /// Rows per table (id space).
+    pub rows: usize,
+    /// Mean pooled ids per table per request.
+    pub mean_pool: usize,
+    /// Zipf exponent for id popularity.
+    pub zipf_alpha: f64,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            requests: 10_000,
+            num_tables: 8,
+            rows: 100_000,
+            mean_pool: 20,
+            zipf_alpha: 1.05,
+            seed: 0x7124CE,
+        }
+    }
+}
+
+/// One lookup request: per-table pooled id lists.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// `ids[t]` are the rows pooled from table `t`.
+    pub ids: Vec<Vec<u32>>,
+}
+
+/// A generated trace.
+pub struct RequestTrace {
+    /// The requests, in arrival order.
+    pub requests: Vec<Request>,
+}
+
+impl RequestTrace {
+    /// Generate a trace.
+    pub fn generate(cfg: &TraceConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let zipf = Zipf::new(cfg.rows, cfg.zipf_alpha);
+        let requests = (0..cfg.requests)
+            .map(|_| {
+                let ids = (0..cfg.num_tables)
+                    .map(|_| {
+                        // Pool size: 1 + Geometric-ish around mean_pool.
+                        let len = 1 + rng.below(cfg.mean_pool * 2);
+                        (0..len).map(|_| zipf.sample(&mut rng) as u32).collect()
+                    })
+                    .collect();
+                Request { ids }
+            })
+            .collect();
+        RequestTrace { requests }
+    }
+
+    /// Total pooled lookups across the trace (for throughput accounting).
+    pub fn total_lookups(&self) -> usize {
+        self.requests
+            .iter()
+            .map(|r| r.ids.iter().map(Vec::len).sum::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_shapes() {
+        let cfg = TraceConfig { requests: 100, num_tables: 4, rows: 1000, ..Default::default() };
+        let t = RequestTrace::generate(&cfg);
+        assert_eq!(t.requests.len(), 100);
+        for r in &t.requests {
+            assert_eq!(r.ids.len(), 4);
+            for ids in &r.ids {
+                assert!(!ids.is_empty());
+                assert!(ids.iter().all(|&i| i < 1000));
+            }
+        }
+        assert!(t.total_lookups() > 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = TraceConfig { requests: 50, ..Default::default() };
+        let a = RequestTrace::generate(&cfg);
+        let b = RequestTrace::generate(&cfg);
+        assert_eq!(a.requests[7].ids, b.requests[7].ids);
+    }
+
+    #[test]
+    fn zipf_skew_visible() {
+        let cfg = TraceConfig {
+            requests: 2000,
+            num_tables: 1,
+            rows: 10_000,
+            mean_pool: 10,
+            zipf_alpha: 1.2,
+            seed: 5,
+        };
+        let t = RequestTrace::generate(&cfg);
+        let mut hits_low = 0usize;
+        let mut total = 0usize;
+        for r in &t.requests {
+            for &id in &r.ids[0] {
+                if id < 100 {
+                    hits_low += 1;
+                }
+                total += 1;
+            }
+        }
+        // The hottest 1% of ids should get far more than 1% of traffic.
+        assert!(hits_low * 10 > total, "{hits_low}/{total}");
+    }
+}

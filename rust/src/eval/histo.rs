@@ -1,0 +1,59 @@
+//! Histogram dumps for Figure 3 (value distributions before/after
+//! quantization).
+
+/// Histogram `counts` of `xs` over `[lo, hi]` with `bins` equal bins.
+/// Values outside the range clamp to the end bins.
+pub fn histogram_counts(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<u32> {
+    assert!(bins > 0);
+    let mut counts = vec![0u32; bins];
+    let w = (hi - lo) / bins as f32;
+    if w <= 0.0 {
+        counts[0] = xs.len() as u32;
+        return counts;
+    }
+    for &x in xs {
+        let i = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        counts[i] += 1;
+    }
+    counts
+}
+
+/// Render a histogram as a unicode bar chart (for the Figure-3 example's
+/// terminal output).
+pub fn ascii_histogram(counts: &[u32], width: usize) -> String {
+    let max = counts.iter().copied().max().unwrap_or(1).max(1);
+    counts
+        .iter()
+        .map(|&c| {
+            let n = (c as usize * width).div_ceil(max as usize);
+            format!("{:>6} |{}\n", c, "█".repeat(n))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mass_conserved_and_clamped() {
+        let xs = [-10.0f32, 0.1, 0.2, 0.9, 10.0];
+        let h = histogram_counts(&xs, 0.0, 1.0, 4);
+        assert_eq!(h.iter().sum::<u32>(), 5);
+        assert_eq!(h[0], 3); // -10 clamps in; 0.1 and 0.2 land in [0, 0.25)
+        assert_eq!(h[3], 2); // 0.9, 10 clamps
+    }
+
+    #[test]
+    fn degenerate_range() {
+        let h = histogram_counts(&[1.0, 1.0], 1.0, 1.0, 3);
+        assert_eq!(h, vec![2, 0, 0]);
+    }
+
+    #[test]
+    fn ascii_renders() {
+        let s = ascii_histogram(&[0, 5, 10], 10);
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.contains("██████████"));
+    }
+}

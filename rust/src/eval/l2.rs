@@ -1,0 +1,144 @@
+//! Normalized ℓ2 loss — the paper's quantization-error metric:
+//! `||X − Q(X)||₂ / ||X||₂` over a whole table (Tables 2, Figure 1).
+
+use crate::quant::Method;
+use crate::table::{CodebookTable, EmbeddingTable, FusedTable, ScaleBiasDtype};
+use crate::util::stats::l2_sq;
+
+/// Normalized ℓ2 between a table and any reconstruction of it.
+pub fn normalized_l2(orig: &EmbeddingTable, recon: &EmbeddingTable) -> f64 {
+    assert_eq!(orig.dim(), recon.dim());
+    assert_eq!(orig.rows(), recon.rows());
+    let num: f64 = orig
+        .data()
+        .iter()
+        .zip(recon.data())
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    let den = l2_sq(orig.data());
+    if den == 0.0 {
+        0.0
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+/// Normalized ℓ2 of a fused quantization of `table`.
+pub fn normalized_l2_fused(table: &EmbeddingTable, fused: &FusedTable) -> f64 {
+    normalized_l2(table, &fused.dequantize())
+}
+
+/// Normalized ℓ2 of a codebook quantization of `table`.
+pub fn normalized_l2_codebook(table: &EmbeddingTable, cb: &CodebookTable) -> f64 {
+    normalized_l2(table, &cb.dequantize())
+}
+
+/// Quantize `table` with `method` at `nbits`/`sb` and measure the
+/// normalized ℓ2 loss — one cell of the paper's Table 2 / Figure 1.
+///
+/// `TABLE` is special-cased to whole-table clipping; `KMEANS-CLS` picks
+/// `K` to match the uniform methods' byte budget, as the paper does.
+pub fn normalized_l2_method(
+    table: &EmbeddingTable,
+    method: &Method,
+    nbits: u32,
+    sb: ScaleBiasDtype,
+) -> f64 {
+    match method {
+        Method::Uniform(q) => {
+            let fused = if q.name() == "TABLE" {
+                table.quantize_fused_tablewise(q.as_ref(), nbits, sb)
+            } else {
+                table.quantize_fused(q.as_ref(), nbits, sb)
+            };
+            normalized_l2_fused(table, &fused)
+        }
+        Method::Kmeans(_) => {
+            let cb = table.quantize_codebook(crate::table::CodebookKind::Rowwise, sb);
+            normalized_l2_codebook(table, &cb)
+        }
+        Method::KmeansCls(_) => {
+            let budget = table.rows() * sb.tail_bytes();
+            let k = crate::quant::KmeansClsQuantizer::k_for_budget(table.rows(), budget)
+                .min(table.rows());
+            let cb = table.quantize_codebook(crate::table::CodebookKind::TwoTier { k }, sb);
+            normalized_l2_codebook(table, &cb)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::method_by_name;
+
+    #[test]
+    fn identical_tables_zero_loss() {
+        let t = EmbeddingTable::randn(10, 16, 71);
+        assert_eq!(normalized_l2(&t, &t), 0.0);
+    }
+
+    #[test]
+    fn loss_scale_invariant() {
+        // Normalized l2 of range-based quantization is invariant to
+        // scaling the table.
+        let t = EmbeddingTable::randn(10, 64, 72);
+        let mut t10 = t.clone();
+        for v in t10.data_mut() {
+            *v *= 10.0;
+        }
+        let m = method_by_name("ASYM").unwrap();
+        let a = normalized_l2_method(&t, &m, 4, ScaleBiasDtype::F32);
+        let b = normalized_l2_method(&t10, &m, 4, ScaleBiasDtype::F32);
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+
+    #[test]
+    fn table2_ordering_holds_on_gaussian() {
+        // The paper's qualitative ordering at d=64:
+        // KMEANS < GREEDY < HIST-BRUTE < ASYM < SYM and ASYM-8 bits tiny.
+        let t = EmbeddingTable::randn(40, 64, 73);
+        let loss = |name: &str, nbits: u32| {
+            normalized_l2_method(&t, &method_by_name(name).unwrap(), nbits, ScaleBiasDtype::F32)
+        };
+        let kmeans = loss("KMEANS", 4);
+        let greedy = loss("GREEDY", 4);
+        let brute = loss("HIST-BRUTE", 4);
+        let asym = loss("ASYM", 4);
+        let sym = loss("SYM", 4);
+        let asym8 = loss("ASYM", 8);
+        assert!(kmeans < greedy, "kmeans {kmeans} greedy {greedy}");
+        // Paper Table 2 separates GREEDY and HIST-BRUTE by only ~1.5%
+        // (0.05991 vs 0.06083 at d=64); on a random draw either may edge
+        // ahead — require parity within 2%.
+        assert!(greedy <= brute * 1.02, "greedy {greedy} brute {brute}");
+        assert!(brute < asym * 1.01, "brute {brute} asym {asym}");
+        assert!(asym < sym, "asym {asym} sym {sym}");
+        assert!(asym8 < asym / 10.0, "asym8 {asym8}");
+    }
+
+    #[test]
+    fn rowwise_beats_tablewise_metric() {
+        // ASYM vs TABLE in Figure 1 — use rows at different scales.
+        let mut t = EmbeddingTable::randn(10, 64, 74);
+        for r in 0..10 {
+            let s = 10f32.powi((r % 3) as i32 - 1);
+            for v in t.row_mut(r) {
+                *v *= s;
+            }
+        }
+        let asym = normalized_l2_method(
+            &t,
+            &method_by_name("ASYM").unwrap(),
+            4,
+            ScaleBiasDtype::F32,
+        );
+        let tab = normalized_l2_method(
+            &t,
+            &method_by_name("TABLE").unwrap(),
+            4,
+            ScaleBiasDtype::F32,
+        );
+        assert!(asym < tab, "asym {asym} table {tab}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Evaluation harness: the paper's three metrics (normalized ℓ2 loss,
+//! model log loss, model size) plus table formatting and histogram dumps
+//! for the figures.
+
+pub mod auc;
+pub mod histo;
+pub mod l2;
+pub mod report;
+pub mod size;
+
+pub use auc::{expected_calibration_error, roc_auc};
+pub use histo::{ascii_histogram, histogram_counts};
+pub use l2::{normalized_l2_codebook, normalized_l2_fused, normalized_l2_method};
+pub use report::{JsonWriter, TableWriter};
+pub use size::size_ratio;

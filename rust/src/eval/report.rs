@@ -1,0 +1,160 @@
+//! Text-table and JSON report writers used by the benches and examples to
+//! print rows in the same layout as the paper's tables.
+
+use std::fmt::Write as _;
+
+/// Fixed-width text-table writer.
+pub struct TableWriter {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableWriter {
+    /// Start a table with column headers.
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        TableWriter { headers: headers.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let write_row = |out: &mut String, cells: &[String]| {
+            for (c, cell) in cells.iter().enumerate() {
+                let _ = write!(out, "| {:<w$} ", cell, w = widths[c]);
+            }
+            out.push_str("|\n");
+        };
+        write_row(&mut out, &self.headers);
+        for (c, w) in widths.iter().enumerate() {
+            let _ = write!(&mut out, "|{}", "-".repeat(w + 2));
+            if c + 1 == ncol {
+                out.push_str("|\n");
+            }
+        }
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+}
+
+/// Minimal JSON object writer (flat string/number maps and arrays) for
+/// machine-readable bench outputs. Only what the harnesses need — not a
+/// general serializer.
+pub struct JsonWriter {
+    buf: String,
+    first: bool,
+}
+
+impl Default for JsonWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonWriter {
+    /// Open the object.
+    pub fn new() -> Self {
+        JsonWriter { buf: "{".to_string(), first: true }
+    }
+
+    fn sep(&mut self) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+    }
+
+    /// Add a string field.
+    pub fn str_field(&mut self, key: &str, val: &str) -> &mut Self {
+        self.sep();
+        let _ = write!(self.buf, "\"{}\":\"{}\"", escape(key), escape(val));
+        self
+    }
+
+    /// Add a numeric field.
+    pub fn num_field(&mut self, key: &str, val: f64) -> &mut Self {
+        self.sep();
+        if val.is_finite() {
+            let _ = write!(self.buf, "\"{}\":{}", escape(key), val);
+        } else {
+            let _ = write!(self.buf, "\"{}\":null", escape(key));
+        }
+        self
+    }
+
+    /// Add an array of numbers.
+    pub fn num_array(&mut self, key: &str, vals: &[f64]) -> &mut Self {
+        self.sep();
+        let _ = write!(self.buf, "\"{}\":[", escape(key));
+        for (i, v) in vals.iter().enumerate() {
+            if i > 0 {
+                self.buf.push(',');
+            }
+            if v.is_finite() {
+                let _ = write!(self.buf, "{v}");
+            } else {
+                self.buf.push_str("null");
+            }
+        }
+        self.buf.push(']');
+        self
+    }
+
+    /// Close and return the JSON text.
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TableWriter::new(vec!["method", "d=8"]);
+        t.row(vec!["GREEDY", "0.03889"]);
+        t.row(vec!["ASYM", "0.04451"]);
+        let s = t.render();
+        assert!(s.contains("| GREEDY"));
+        assert_eq!(s.lines().count(), 4);
+        // All lines equal width.
+        let lens: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{lens:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = TableWriter::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut j = JsonWriter::new();
+        j.str_field("name", "x\"y").num_field("v", 1.5).num_array("a", &[1.0, 2.0]);
+        let s = j.finish();
+        assert_eq!(s, "{\"name\":\"x\\\"y\",\"v\":1.5,\"a\":[1,2]}");
+    }
+}

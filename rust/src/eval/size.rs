@@ -1,0 +1,48 @@
+//! Model-size accounting (the paper's Table 3 "size" column and the
+//! production "13.89% of FP32" claim).
+
+/// Size of `quantized` as a fraction of `fp32` (e.g. `0.1406` → "14.06%").
+pub fn size_ratio(quantized_bytes: usize, fp32_bytes: usize) -> f64 {
+    if fp32_bytes == 0 {
+        return 0.0;
+    }
+    quantized_bytes as f64 / fp32_bytes as f64
+}
+
+/// Closed-form fused-row ratio for an `N×d` table: the paper's arithmetic,
+/// independent of `N`.
+pub fn fused_ratio(dim: usize, nbits: u32, tail_bytes: usize) -> f64 {
+    let packed = match nbits {
+        4 => dim.div_ceil(2),
+        8 => dim,
+        _ => panic!("nbits"),
+    };
+    (packed + tail_bytes) as f64 / (4 * dim) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table3_size_column() {
+        // 4-bit FP32 tails (SYM..GREEDY rows).
+        assert!((fused_ratio(8, 4, 8) - 0.3749).abs() < 1e-3);
+        assert!((fused_ratio(16, 4, 8) - 0.2499).abs() < 1e-3);
+        assert!((fused_ratio(32, 4, 8) - 0.1875).abs() < 1e-3);
+        assert!((fused_ratio(64, 4, 8) - 0.1562).abs() < 1e-3);
+        assert!((fused_ratio(128, 4, 8) - 0.1406).abs() < 1e-3);
+        // GREEDY (FP16) row.
+        assert!((fused_ratio(8, 4, 4) - 0.2499).abs() < 1e-3);
+        assert!((fused_ratio(128, 4, 4) - 0.1328).abs() < 1e-3);
+        // ASYM-8BITS row.
+        assert!((fused_ratio(8, 8, 8) - 0.4998).abs() < 1e-3);
+        assert!((fused_ratio(128, 8, 8) - 0.2656).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ratio_basics() {
+        assert_eq!(size_ratio(25, 100), 0.25);
+        assert_eq!(size_ratio(1, 0), 0.0);
+    }
+}

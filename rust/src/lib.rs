@@ -1,0 +1,50 @@
+//! # emberq — post-training 4-bit quantization on embedding tables
+//!
+//! Reproduction of *"Post-Training 4-bit Quantization on Embedding Tables"*
+//! (Guan, Malevich, Yang, Park, Yuen — 2019) as a deployable library:
+//!
+//! * [`quant`] — the paper's contribution: eleven post-training quantization
+//!   methods (`ASYM`, `SYM`, `GSS`, `HIST-APPRX`, `HIST-BRUTE`, `ACIQ`,
+//!   `GREEDY`, `KMEANS`, `KMEANS-CLS`, FP16 and 8-bit variants) behind a
+//!   common [`quant::Quantizer`] trait.
+//! * [`table`] — embedding-table storage: FP32 tables, fused INT4/INT8 rows
+//!   (`[packed data][scale][bias]`, FBGEMM-style) and codebook tables.
+//! * [`sls`] — optimized `SparseLengthsSum` kernels over every row format
+//!   (the paper's Table 1 workload), with cache-resident and
+//!   cache-flushed benchmarking support.
+//! * [`model`] — DLRM-style recommendation model substrate: forward,
+//!   backward, Adagrad, a training loop, and a quantized-inference path.
+//! * [`data`] — synthetic Criteo-Terabyte-like click-log generator
+//!   (Zipf-distributed categorical ids, teacher-model labels).
+//! * [`eval`] — normalized ℓ2 loss, model log loss, size accounting.
+//! * [`coordinator`] — L3 serving runtime: request router, dynamic
+//!   batcher, worker pool, latency metrics.
+//! * [`runtime`] — PJRT client wrapper that loads AOT artifacts
+//!   (`artifacts/*.hlo.txt`, lowered from JAX/Pallas) and executes them
+//!   on the serving path.
+//! * [`util`] — deterministic RNG, f16 conversion, statistics helpers.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use emberq::quant::{GreedyQuantizer, Quantizer};
+//! use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+//!
+//! // An FP32 table with 1000 rows of dimension 64.
+//! let table = EmbeddingTable::randn(1000, 64, 42);
+//! // Quantize to fused 4-bit rows with greedy-search clipping.
+//! let q = GreedyQuantizer::default();
+//! let fused = table.quantize_fused(&q, 4, ScaleBiasDtype::F16);
+//! println!("size ratio: {:.2}%", 100.0 * fused.size_bytes() as f64
+//!          / table.size_bytes() as f64);
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sls;
+pub mod table;
+pub mod util;

@@ -1,0 +1,27 @@
+//! `emberq` — command-line entry point.
+//!
+//! Subcommands:
+//!
+//! * `train`     — train a DLRM on the synthetic Criteo stream, save tables.
+//! * `quantize`  — post-training-quantize a saved FP32 table file.
+//! * `eval`      — normalized-ℓ2 sweep of every method over a table.
+//! * `serve`     — start the embedding server and replay a request trace.
+//! * `info`      — describe a saved table file.
+//!
+//! Run `emberq <cmd> --help` for flags. Argument parsing is hand-rolled
+//! (the binary is dependency-free beyond the PJRT bridge).
+
+use std::process::ExitCode;
+
+mod cli;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match cli::run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

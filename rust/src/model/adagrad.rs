@@ -1,0 +1,175 @@
+//! Adagrad — the optimizer the paper trains with (Duchi et al. 2011).
+//!
+//! `state += g²; param −= lr · g / (√state + ε)`, elementwise. Dense
+//! variant for the MLP; row-sparse variant for embeddings (only touched
+//! rows pay the update, as in production DLRM trainers).
+
+use crate::model::dlrm::{Dlrm, DlrmGrads};
+use crate::model::mlp::LinearGrads;
+
+/// Adagrad state for a full DLRM.
+pub struct Adagrad {
+    /// Learning rate for embedding tables (paper: 0.015).
+    pub lr_emb: f32,
+    /// Learning rate for dense parameters (paper: 0.005).
+    pub lr_dense: f32,
+    /// Epsilon in the denominator.
+    pub eps: f32,
+    /// Accumulators for each MLP layer (w then b), same shapes.
+    mlp_state: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Accumulators for each embedding table (rows × dim).
+    emb_state: Vec<Vec<f32>>,
+}
+
+impl Adagrad {
+    /// Fresh state shaped like `model`, with the paper's learning rates.
+    pub fn new(model: &Dlrm) -> Self {
+        Self::with_lr(model, 0.015, 0.005)
+    }
+
+    /// Fresh state with custom learning rates.
+    pub fn with_lr(model: &Dlrm, lr_emb: f32, lr_dense: f32) -> Self {
+        let mlp_state = model
+            .mlp
+            .layers
+            .iter()
+            .map(|l| (vec![0.0; l.w.len()], vec![0.0; l.b.len()]))
+            .collect();
+        let emb_state = model
+            .tables
+            .iter()
+            .map(|t| vec![0.0; t.rows() * t.dim()])
+            .collect();
+        Adagrad { lr_emb, lr_dense, eps: 1e-8, mlp_state, emb_state }
+    }
+
+    /// Apply one step of gradients to `model`.
+    pub fn step(&mut self, model: &mut Dlrm, grads: &DlrmGrads) {
+        // Dense parameters.
+        for (li, g) in grads.mlp.iter().enumerate() {
+            let l = &mut model.mlp.layers[li];
+            let (sw, sb) = &mut self.mlp_state[li];
+            apply(&mut l.w, &g.dw, sw, self.lr_dense, self.eps);
+            apply(&mut l.b, &g.db, sb, self.lr_dense, self.eps);
+        }
+        // Sparse embedding rows.
+        let d = model.cfg.dim;
+        for (t, id, g) in &grads.emb {
+            let row = model.tables[*t].row_mut(*id as usize);
+            let state =
+                &mut self.emb_state[*t][*id as usize * d..(*id as usize + 1) * d];
+            for j in 0..d {
+                let gj = g[j];
+                state[j] += gj * gj;
+                row[j] -= self.lr_emb * gj / (state[j].sqrt() + self.eps);
+            }
+        }
+    }
+
+    /// Dense-only step helper (used by unit tests).
+    pub fn step_dense_only(&mut self, model: &mut Dlrm, grads: &[LinearGrads]) {
+        for (li, g) in grads.iter().enumerate() {
+            let l = &mut model.mlp.layers[li];
+            let (sw, sb) = &mut self.mlp_state[li];
+            apply(&mut l.w, &g.dw, sw, self.lr_dense, self.eps);
+            apply(&mut l.b, &g.db, sb, self.lr_dense, self.eps);
+        }
+    }
+}
+
+fn apply(params: &mut [f32], grads: &[f32], state: &mut [f32], lr: f32, eps: f32) {
+    for i in 0..params.len() {
+        let g = grads[i];
+        if g == 0.0 {
+            continue;
+        }
+        state[i] += g * g;
+        params[i] -= lr * g / (state[i].sqrt() + eps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CriteoConfig, SyntheticCriteo};
+    use crate::model::DlrmConfig;
+
+    fn tiny() -> (Dlrm, SyntheticCriteo) {
+        let cfg = DlrmConfig {
+            num_tables: 3,
+            rows_per_table: 50,
+            dim: 4,
+            dense_dim: 4,
+            hidden: vec![8],
+            seed: 11,
+        };
+        let data_cfg = CriteoConfig {
+            dense_dim: 4,
+            num_sparse: 3,
+            rows_per_table: 50,
+            zipf_alpha: 1.1,
+            seed: 12,
+        };
+        (Dlrm::new(cfg), SyntheticCriteo::train(data_cfg))
+    }
+
+    #[test]
+    fn adagrad_decreases_loss_on_fixed_batch() {
+        let (mut m, mut s) = tiny();
+        let b = s.next_batch(50);
+        let mut opt = Adagrad::with_lr(&m, 0.1, 0.05);
+        let (l0, _) = m.forward_loss(&b);
+        for _ in 0..50 {
+            let (_, cache) = m.forward_loss(&b);
+            let grads = m.backward(&b, &cache);
+            opt.step(&mut m, &grads);
+        }
+        let (l1, _) = m.forward_loss(&b);
+        assert!(l1 < l0 * 0.9, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn step_size_shrinks_over_time() {
+        // Adagrad: same gradient applied twice moves less the second time.
+        let (mut m, mut s) = tiny();
+        let b = s.next_batch(10);
+        let mut opt = Adagrad::new(&m);
+        let (_, cache) = m.forward_loss(&b);
+        let grads = m.backward(&b, &cache);
+        let w0 = m.mlp.layers[0].w[0];
+        opt.step(&mut m, &grads);
+        let w1 = m.mlp.layers[0].w[0];
+        opt.step(&mut m, &grads);
+        let w2 = m.mlp.layers[0].w[0];
+        let d1 = (w1 - w0).abs();
+        let d2 = (w2 - w1).abs();
+        if d1 > 0.0 {
+            assert!(d2 < d1, "d1={d1} d2={d2}");
+        }
+    }
+
+    #[test]
+    fn untouched_rows_unchanged() {
+        let (mut m, mut s) = tiny();
+        let b = s.next_batch(5);
+        let touched: std::collections::HashSet<(usize, u32)> = (0..3)
+            .flat_map(|t| b.ids[t].iter().map(move |&i| (t, i)))
+            .collect();
+        let before: Vec<Vec<f32>> = m.tables.iter().map(|t| t.data().to_vec()).collect();
+        let mut opt = Adagrad::new(&m);
+        let (_, cache) = m.forward_loss(&b);
+        let grads = m.backward(&b, &cache);
+        opt.step(&mut m, &grads);
+        for t in 0..3 {
+            for r in 0..50u32 {
+                if !touched.contains(&(t, r)) {
+                    assert_eq!(
+                        m.tables[t].row(r as usize),
+                        &before[t][r as usize * 4..(r as usize + 1) * 4],
+                        "table {t} row {r} moved without gradient"
+                    );
+                }
+            }
+        }
+    }
+}

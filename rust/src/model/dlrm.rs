@@ -1,0 +1,263 @@
+//! The DLRM model: embedding tables + dense MLP, forward and backward.
+
+use crate::data::ClickBatch;
+use crate::model::mlp::{LinearGrads, Mlp, MlpCache};
+use crate::model::{bce_from_logit, sigmoid};
+use crate::table::EmbeddingTable;
+use crate::util::Rng;
+
+/// Model hyperparameters (paper §5 defaults, scaled-down cardinality).
+#[derive(Clone, Debug)]
+pub struct DlrmConfig {
+    /// Number of embedding tables (= categorical features).
+    pub num_tables: usize,
+    /// Rows per table.
+    pub rows_per_table: usize,
+    /// Embedding dimension (paper sweeps 8, 16, 32, 64, 128).
+    pub dim: usize,
+    /// Dense-feature width (Criteo: 13).
+    pub dense_dim: usize,
+    /// Hidden widths of the over-arch MLP (paper: two FC of width 512).
+    pub hidden: Vec<usize>,
+    /// Init seed.
+    pub seed: u64,
+}
+
+impl Default for DlrmConfig {
+    fn default() -> Self {
+        DlrmConfig {
+            num_tables: 8,
+            rows_per_table: 20_000,
+            dim: 32,
+            dense_dim: 13,
+            hidden: vec![512, 512],
+            seed: 7,
+        }
+    }
+}
+
+impl DlrmConfig {
+    /// MLP input width: concatenated embeddings + dense features.
+    pub fn feature_dim(&self) -> usize {
+        self.num_tables * self.dim + self.dense_dim
+    }
+}
+
+/// The FP32 DLRM.
+pub struct Dlrm {
+    /// Configuration.
+    pub cfg: DlrmConfig,
+    /// One FP32 table per categorical feature.
+    pub tables: Vec<EmbeddingTable>,
+    /// The over-arch MLP.
+    pub mlp: Mlp,
+}
+
+/// Gradients of one step: dense layer grads plus sparse embedding grads
+/// as `(table, row, grad_vector)` triples (rows touched by the batch).
+pub struct DlrmGrads {
+    /// Per-layer MLP gradients.
+    pub mlp: Vec<LinearGrads>,
+    /// Sparse embedding-row gradients.
+    pub emb: Vec<(usize, u32, Vec<f32>)>,
+}
+
+/// Forward cache handed to [`Dlrm::backward`].
+pub struct DlrmCache {
+    features: Vec<f32>,
+    mlp_cache: MlpCache,
+    logits: Vec<f32>,
+    batch: usize,
+}
+
+impl Dlrm {
+    /// Initialize: embeddings U(−1/√d, 1/√d), MLP He-uniform.
+    pub fn new(cfg: DlrmConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let a = 1.0 / (cfg.dim as f32).sqrt();
+        let tables = (0..cfg.num_tables)
+            .map(|t| {
+                EmbeddingTable::rand_uniform(
+                    cfg.rows_per_table,
+                    cfg.dim,
+                    a,
+                    cfg.seed ^ (0xE0 + t as u64) << 8,
+                )
+            })
+            .collect();
+        let mlp = Mlp::new(cfg.feature_dim(), &cfg.hidden.clone(), &mut rng);
+        Dlrm { cfg, tables, mlp }
+    }
+
+    /// Assemble the MLP input for a batch: `[emb_0 | … | emb_{T-1} | dense]`
+    /// per record.
+    pub fn features(&self, batch: &ClickBatch) -> Vec<f32> {
+        let d = self.cfg.dim;
+        let fdim = self.cfg.feature_dim();
+        let mut x = vec![0.0f32; batch.batch * fdim];
+        for b in 0..batch.batch {
+            let rec = &mut x[b * fdim..(b + 1) * fdim];
+            for (t, table) in self.tables.iter().enumerate() {
+                let id = batch.ids[t][b] as usize;
+                rec[t * d..(t + 1) * d].copy_from_slice(table.row(id));
+            }
+            let dd = self.cfg.dense_dim;
+            rec[self.cfg.num_tables * d..]
+                .copy_from_slice(&batch.dense[b * dd..(b + 1) * dd]);
+        }
+        x
+    }
+
+    /// Forward: click probabilities for a batch.
+    pub fn forward(&self, batch: &ClickBatch) -> Vec<f32> {
+        let x = self.features(batch);
+        self.mlp
+            .forward(&x, batch.batch)
+            .iter()
+            .map(|&z| sigmoid(z))
+            .collect()
+    }
+
+    /// Forward with cache, returning the mean BCE loss.
+    pub fn forward_loss(&self, batch: &ClickBatch) -> (f32, DlrmCache) {
+        let x = self.features(batch);
+        let (logits, mlp_cache) = self.mlp.forward_cached(&x, batch.batch);
+        let loss = logits
+            .iter()
+            .zip(&batch.labels)
+            .map(|(&z, &y)| bce_from_logit(z, y))
+            .sum::<f32>()
+            / batch.batch as f32;
+        (loss, DlrmCache { features: x, mlp_cache, logits, batch: batch.batch })
+    }
+
+    /// Backward from a cached forward; returns all gradients.
+    pub fn backward(&self, batch: &ClickBatch, cache: &DlrmCache) -> DlrmGrads {
+        let n = cache.batch as f32;
+        let dlogits: Vec<f32> = cache
+            .logits
+            .iter()
+            .zip(&batch.labels)
+            .map(|(&z, &y)| (sigmoid(z) - y) / n)
+            .collect();
+        let mut mlp_grads = self.mlp.grad_buffers();
+        let dx = self.mlp.backward(&dlogits, &cache.mlp_cache, &mut mlp_grads);
+
+        // Scatter the feature gradient back to the touched embedding rows.
+        let d = self.cfg.dim;
+        let fdim = self.cfg.feature_dim();
+        let mut emb = Vec::with_capacity(cache.batch * self.cfg.num_tables);
+        for b in 0..cache.batch {
+            let rec = &dx[b * fdim..(b + 1) * fdim];
+            for t in 0..self.cfg.num_tables {
+                let id = batch.ids[t][b];
+                emb.push((t, id, rec[t * d..(t + 1) * d].to_vec()));
+            }
+        }
+        let _ = &cache.features; // cache keeps features alive for clarity
+        DlrmGrads { mlp: mlp_grads, emb }
+    }
+
+    /// Mean BCE log loss over a batch (no cache).
+    pub fn eval_logloss(&self, batch: &ClickBatch) -> f64 {
+        let x = self.features(batch);
+        let logits = self.mlp.forward(&x, batch.batch);
+        logits
+            .iter()
+            .zip(&batch.labels)
+            .map(|(&z, &y)| bce_from_logit(z, y) as f64)
+            .sum::<f64>()
+            / batch.batch as f64
+    }
+
+    /// Total FP32 bytes of the embedding tables (the paper's 99.99% of
+    /// model size).
+    pub fn tables_bytes(&self) -> usize {
+        self.tables.iter().map(EmbeddingTable::size_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CriteoConfig, SyntheticCriteo};
+
+    pub(crate) fn tiny() -> (Dlrm, SyntheticCriteo) {
+        let cfg = DlrmConfig {
+            num_tables: 3,
+            rows_per_table: 50,
+            dim: 4,
+            dense_dim: 4,
+            hidden: vec![8],
+            seed: 11,
+        };
+        let data_cfg = CriteoConfig {
+            dense_dim: 4,
+            num_sparse: 3,
+            rows_per_table: 50,
+            zipf_alpha: 1.1,
+            seed: 12,
+        };
+        (Dlrm::new(cfg), SyntheticCriteo::train(data_cfg))
+    }
+
+    #[test]
+    fn forward_shapes_and_range() {
+        let (m, mut s) = tiny();
+        let b = s.next_batch(10);
+        let p = m.forward(&b);
+        assert_eq!(p.len(), 10);
+        assert!(p.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn loss_positive_and_finite() {
+        let (m, mut s) = tiny();
+        let b = s.next_batch(20);
+        let (loss, _) = m.forward_loss(&b);
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn embedding_grad_check() {
+        let (mut m, mut s) = tiny();
+        let b = s.next_batch(6);
+        let (_, cache) = m.forward_loss(&b);
+        let grads = m.backward(&b, &cache);
+        // Pick a touched row/coordinate; finite-difference the loss.
+        let (t, id, gvec) = grads.emb[2].clone();
+        // Sum duplicates: the same row may appear multiple times.
+        let mut total = vec![0.0f32; gvec.len()];
+        for (tt, ii, g) in &grads.emb {
+            if *tt == t && *ii == id {
+                for (a, b) in total.iter_mut().zip(g) {
+                    *a += b;
+                }
+            }
+        }
+        let eps = 1e-3f32;
+        let coord = 1usize;
+        let orig = m.tables[t].row(id as usize)[coord];
+        m.tables[t].row_mut(id as usize)[coord] = orig + eps;
+        let (lp, _) = m.forward_loss(&b);
+        m.tables[t].row_mut(id as usize)[coord] = orig - eps;
+        let (lm, _) = m.forward_loss(&b);
+        m.tables[t].row_mut(id as usize)[coord] = orig;
+        let num = ((lp - lm) / (2.0 * eps)) as f64;
+        assert!(
+            (num - total[coord] as f64).abs() < 1e-2,
+            "num {num} vs ana {}",
+            total[coord]
+        );
+    }
+
+    #[test]
+    fn grads_cover_all_touched_rows() {
+        let (m, mut s) = tiny();
+        let b = s.next_batch(5);
+        let (_, cache) = m.forward_loss(&b);
+        let grads = m.backward(&b, &cache);
+        assert_eq!(grads.emb.len(), 5 * 3);
+        assert_eq!(grads.mlp.len(), m.mlp.layers.len());
+    }
+}

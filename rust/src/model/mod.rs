@@ -1,0 +1,61 @@
+//! DLRM-style recommendation-model substrate (Naumov et al. 2019,
+//! Zhang et al. 2018 — the models the paper evaluates on).
+//!
+//! Architecture, following the paper §5: categorical features → embedding
+//! tables (one row per id) → concatenated with dense features → 2
+//! fully-connected layers of width 512 → sigmoid click probability.
+//! Trained with Adagrad (batch 100, lr 0.015 for embeddings / 0.005 for
+//! the rest), all FP32; embedding tables are quantized post-training.
+//!
+//! * [`mlp`] — dense layers: forward, backward, parameter gradients.
+//! * [`dlrm`] — the full model: embedding lookup + MLP, fwd/bwd.
+//! * [`adagrad`] — dense and row-sparse Adagrad.
+//! * [`trainer`] — the training loop with loss-curve logging.
+//! * [`quantized`] — inference over quantized tables (any format).
+
+pub mod adagrad;
+pub mod dlrm;
+pub mod mlp;
+pub mod quantized;
+pub mod trainer;
+
+pub use adagrad::Adagrad;
+pub use dlrm::{Dlrm, DlrmConfig, DlrmGrads};
+pub use mlp::{Linear, Mlp};
+pub use quantized::{QuantTables, QuantizedDlrm};
+pub use trainer::{TrainReport, Trainer, TrainerConfig};
+
+/// Numerically safe binary cross-entropy from a *logit*:
+/// `max(z,0) − z·y + ln(1+e^{−|z|})`.
+#[inline]
+pub fn bce_from_logit(z: f32, y: f32) -> f32 {
+    z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bce_matches_naive_where_stable() {
+        for &(z, y) in &[(0.3f32, 1.0f32), (-2.0, 0.0), (1.5, 0.0), (-0.7, 1.0)] {
+            let p = sigmoid(z);
+            let naive = -(y * p.ln() + (1.0 - y) * (1.0 - p).ln());
+            assert!((bce_from_logit(z, y) - naive).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bce_stable_at_extremes() {
+        assert!(bce_from_logit(100.0, 1.0) < 1e-6);
+        assert!(bce_from_logit(-100.0, 0.0) < 1e-6);
+        assert!(bce_from_logit(100.0, 0.0) > 99.0);
+        assert!(bce_from_logit(100.0, 0.0).is_finite());
+    }
+}

@@ -1,0 +1,177 @@
+//! ACIQ — Analytical Clipping for Integer Quantization (Banner et al.,
+//! arXiv:1810.05723).
+//!
+//! ACIQ assumes the values are samples from a Gaussian or Laplacian
+//! distribution and uses the closed-form optimal clip `α*` that minimizes
+//! the expected MSE of an `n`-bit uniform quantizer over that
+//! distribution:
+//!
+//! * Laplace(μ, b):   `α* = C_lap[n] · b`, `b = E|X − μ|`
+//!   (the paper quotes the 4-bit case: `α = 5.03·E|X − E X|`).
+//! * Gaussian(μ, σ):  `α* = C_gaus[n] · σ`.
+//!
+//! The clip is symmetric around the *mean*: `[μ − α, μ + α]`.
+//! Distribution selection follows the reference implementation's
+//! measure-of-fit idea using sample kurtosis (Gaussian: 3, Laplace: 6).
+//!
+//! Limitation the paper exploits: a d=64 row is far too few samples for
+//! the distributional assumption — and for d ≲ 64 the optimal "clip" often
+//! lies *outside* the sample range, so ACIQ degenerates to ASYM or worse
+//! (Table 2 shows it losing to ASYM at d = 64, 128).
+
+use super::{Clip, Quantizer};
+use crate::util::stats::{kurtosis, mean, mean_abs_dev, std_dev};
+
+/// Optimal clip multipliers `α*/b` for Laplace, bits 1..=8
+/// (Banner et al., Table 1 of the reference implementation).
+pub const ALPHA_LAPLACE: [f64; 8] = [1.05, 1.86, 2.83, 5.03, 6.20, 7.41, 8.64, 9.89];
+
+/// Optimal clip multipliers `α*/σ` for Gaussian, bits 1..=8.
+pub const ALPHA_GAUS: [f64; 8] = [1.24, 1.71, 2.15, 2.55, 2.93, 3.28, 3.61, 3.92];
+
+/// Distribution family ACIQ can assume.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dist {
+    /// Force the Gaussian constants.
+    Gaussian,
+    /// Force the Laplace constants.
+    Laplace,
+    /// Pick per-row by sample kurtosis (closer to 3 → Gaussian, to 6 →
+    /// Laplace).
+    Auto,
+}
+
+/// ACIQ analytic clipping.
+#[derive(Clone, Copy, Debug)]
+pub struct AciqQuantizer {
+    /// Distribution assumption (default: auto-detect).
+    pub dist: Dist,
+    /// Clamp the analytic clip to the sample range (`true` matches how the
+    /// clip is *used*: values outside `[min, max]` never occur, so a wider
+    /// clip only wastes grid).
+    pub clamp_to_range: bool,
+}
+
+impl Default for AciqQuantizer {
+    fn default() -> Self {
+        AciqQuantizer { dist: Dist::Auto, clamp_to_range: false }
+    }
+}
+
+impl AciqQuantizer {
+    fn pick_dist(&self, row: &[f32]) -> Dist {
+        match self.dist {
+            Dist::Auto => {
+                // Midpoint between the Gaussian (3) and Laplace (6) kurtosis.
+                if kurtosis(row) < 4.5 {
+                    Dist::Gaussian
+                } else {
+                    Dist::Laplace
+                }
+            }
+            d => d,
+        }
+    }
+}
+
+impl Quantizer for AciqQuantizer {
+    fn clip(&self, row: &[f32], nbits: u32) -> Clip {
+        if row.is_empty() {
+            return Clip { xmin: 0.0, xmax: 0.0 };
+        }
+        let idx = (nbits.clamp(1, 8) - 1) as usize;
+        let mu = mean(row);
+        let alpha = match self.pick_dist(row) {
+            Dist::Laplace => ALPHA_LAPLACE[idx] * mean_abs_dev(row),
+            _ => ALPHA_GAUS[idx] * std_dev(row),
+        };
+        let (mut xmin, mut xmax) = ((mu - alpha) as f32, (mu + alpha) as f32);
+        if self.clamp_to_range {
+            let (lo, hi) = super::asym::min_max(row);
+            xmin = xmin.max(lo);
+            xmax = xmax.min(hi);
+        }
+        Clip { xmin, xmax }
+    }
+
+    fn name(&self) -> &'static str {
+        "ACIQ"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quant_sq_error;
+    use crate::util::Rng;
+
+    #[test]
+    fn gaussian_clip_matches_formula() {
+        let mut rng = Rng::new(51);
+        let row = rng.normal_vec(10_000, 2.0);
+        let q = AciqQuantizer { dist: Dist::Gaussian, clamp_to_range: false };
+        let c = q.clip(&row, 4);
+        let sigma = std_dev(&row);
+        let mu = mean(&row);
+        assert!(((c.xmax as f64) - (mu + 2.55 * sigma)).abs() < 1e-3);
+        assert!(((c.xmin as f64) - (mu - 2.55 * sigma)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn laplace_clip_matches_paper_quote() {
+        // The paper: α = 5.03·E|X − E(X)| for 4-bit Laplace.
+        let mut rng = Rng::new(52);
+        let row: Vec<f32> = (0..10_000).map(|_| rng.laplace() as f32).collect();
+        let q = AciqQuantizer { dist: Dist::Laplace, clamp_to_range: false };
+        let c = q.clip(&row, 4);
+        let b = mean_abs_dev(&row);
+        assert!(((c.xmax - c.xmin) as f64 - 2.0 * 5.03 * b).abs() < 1e-3);
+    }
+
+    #[test]
+    fn auto_detects_laplace() {
+        let mut rng = Rng::new(53);
+        let lap: Vec<f32> = (0..50_000).map(|_| rng.laplace() as f32).collect();
+        let gau = rng.normal_vec(50_000, 1.0);
+        let q = AciqQuantizer::default();
+        assert_eq!(q.pick_dist(&lap), Dist::Laplace);
+        assert_eq!(q.pick_dist(&gau), Dist::Gaussian);
+    }
+
+    #[test]
+    fn aciq_beats_asym_on_long_laplace_rows() {
+        // ACIQ's home turf: many samples from its assumed distribution.
+        use crate::quant::AsymQuantizer;
+        let mut rng = Rng::new(54);
+        let (mut ea, mut eq) = (0.0, 0.0);
+        for _ in 0..10 {
+            let row: Vec<f32> = (0..8192).map(|_| rng.laplace() as f32).collect();
+            eq += quant_sq_error(&row, AciqQuantizer::default().clip(&row, 4), 4);
+            ea += quant_sq_error(&row, AsymQuantizer.clip(&row, 4), 4);
+        }
+        assert!(eq < ea, "aciq={eq} asym={ea}");
+    }
+
+    #[test]
+    fn clip_can_exceed_range_on_short_rows() {
+        // On short rows the analytic α often exceeds max|X−μ| — the
+        // degeneracy the paper points out. Verify it happens for some rows.
+        let mut rng = Rng::new(55);
+        let mut exceeded = 0;
+        for _ in 0..100 {
+            let row = rng.normal_vec(8, 1.0);
+            let c = AciqQuantizer { dist: Dist::Gaussian, clamp_to_range: false }.clip(&row, 4);
+            let (lo, hi) = crate::quant::asym::min_max(&row);
+            if c.xmin < lo || c.xmax > hi {
+                exceeded += 1;
+            }
+        }
+        assert!(exceeded > 50, "exceeded={exceeded}");
+    }
+
+    #[test]
+    fn empty_row() {
+        let c = AciqQuantizer::default().clip(&[], 4);
+        assert_eq!((c.xmin, c.xmax), (0.0, 0.0));
+    }
+}

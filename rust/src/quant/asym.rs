@@ -1,0 +1,125 @@
+//! Range-based asymmetric quantization (`ASYM`) and its whole-table
+//! variant (`TABLE`).
+//!
+//! `ASYM` uses the exact range of the row — `xmin = min(X)`,
+//! `xmax = max(X)` — with no clipping. The paper's key observation is that
+//! for the short rows of embedding tables (d = 8..200) this naive baseline
+//! is *hard to beat*: histogram- and distribution-based clipping methods
+//! designed for CNN tensors with 10⁴⁺ values are no better, and often
+//! worse.
+//!
+//! `TABLE` applies the same range rule over the entire table (all rows
+//! flattened); it is the Figure-1 baseline demonstrating why row-wise
+//! quantization matters.
+
+use super::{Clip, Quantizer};
+
+/// Row range of a slice; `(0, 0)` for empty input.
+pub(crate) fn min_max(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if lo > hi {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// Range-based asymmetric quantization: `xmin = min(X)`, `xmax = max(X)`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AsymQuantizer;
+
+impl Quantizer for AsymQuantizer {
+    fn clip(&self, row: &[f32], _nbits: u32) -> Clip {
+        let (xmin, xmax) = min_max(row);
+        Clip { xmin, xmax }
+    }
+
+    fn name(&self) -> &'static str {
+        "ASYM"
+    }
+}
+
+/// Whole-table range quantization (Figure 1's `TABLE` baseline). The clip
+/// is identical to [`AsymQuantizer`] — the difference is that callers pass
+/// the *flattened table* rather than a row, so all rows share one
+/// scale/bias. Provided as a distinct type so harnesses can report it
+/// under its paper name.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TableQuantizer;
+
+impl Quantizer for TableQuantizer {
+    fn clip(&self, row: &[f32], _nbits: u32) -> Clip {
+        let (xmin, xmax) = min_max(row);
+        Clip { xmin, xmax }
+    }
+
+    fn name(&self) -> &'static str {
+        "TABLE"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quant_dequant, quant_sq_error};
+    use crate::util::Rng;
+
+    #[test]
+    fn clip_is_exact_range() {
+        let row = [0.5f32, -1.25, 3.0, 0.0];
+        let c = AsymQuantizer.clip(&row, 4);
+        assert_eq!(c.xmin, -1.25);
+        assert_eq!(c.xmax, 3.0);
+    }
+
+    #[test]
+    fn empty_row_is_zero_clip() {
+        let c = AsymQuantizer.clip(&[], 4);
+        assert_eq!((c.xmin, c.xmax), (0.0, 0.0));
+    }
+
+    #[test]
+    fn error_zero_when_row_on_grid() {
+        // 16 evenly spaced values quantize exactly with 4 bits.
+        let row: Vec<f32> = (0..16).map(|i| -1.0 + i as f32 * 0.2).collect();
+        let c = AsymQuantizer.clip(&row, 4);
+        assert!(quant_sq_error(&row, c, 4) < 1e-10);
+    }
+
+    #[test]
+    fn max_abs_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(100);
+        let row = rng.normal_vec(64, 1.0);
+        let c = AsymQuantizer.clip(&row, 4);
+        let half = c.scale(4) / 2.0;
+        for (x, q) in row.iter().zip(quant_dequant(&row, c, 4)) {
+            assert!((x - q).abs() <= half + 1e-6);
+        }
+    }
+
+    #[test]
+    fn rowwise_beats_tablewise() {
+        // Rows at very different magnitudes: per-row clips must beat a
+        // shared table clip (the paper's ASYM vs TABLE comparison).
+        let mut rng = Rng::new(101);
+        let rows: Vec<Vec<f32>> = (0..10)
+            .map(|i| rng.normal_vec(64, 10f32.powi(i % 3 - 1)))
+            .collect();
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        let table_clip = TableQuantizer.clip(&flat, 4);
+        let table_err: f64 = rows
+            .iter()
+            .map(|r| quant_sq_error(r, table_clip, 4))
+            .sum();
+        let row_err: f64 = rows
+            .iter()
+            .map(|r| quant_sq_error(r, AsymQuantizer.clip(r, 4), 4))
+            .sum();
+        assert!(row_err < table_err, "row={row_err} table={table_err}");
+    }
+}

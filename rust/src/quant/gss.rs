@@ -1,0 +1,132 @@
+//! Symmetric quantization with Golden Section Search (`GSS`).
+//!
+//! Searches a symmetric threshold `x_thr ∈ (0, max|X|]` minimizing
+//! `f_sym(x_thr) = (1/N)·||X − Q(X, −x_thr, x_thr)||²` with 1-D golden
+//! section search [Kiefer 1953], as used to compress word embeddings in
+//! May et al. 2019.
+//!
+//! GSS assumes the objective is unimodal in the threshold. The quantization
+//! MSE of a *short* row is a bumpy, piecewise-smooth function of the
+//! threshold (every grid realignment moves points between cells), so GSS
+//! routinely converges to a poor local optimum — this is exactly the paper's
+//! Figure-1/Table-2 observation that GSS is *worse than plain ASYM* at
+//! small d, and the motivation for the GREEDY multi-local-optima search.
+
+use super::{quant_sq_error, Clip, Quantizer};
+
+/// Inverse golden ratio (φ − 1 ≈ 0.618).
+const INV_PHI: f64 = 0.618_033_988_749_894_9;
+
+/// Symmetric GSS quantizer.
+#[derive(Clone, Copy, Debug)]
+pub struct GssQuantizer {
+    /// Convergence tolerance on the bracket width, relative to `max|X|`.
+    pub rel_tol: f64,
+    /// Hard cap on iterations (the bracket shrinks by φ−1 each step, so
+    /// 64 iterations reach ~1e-13 relative width).
+    pub max_iter: u32,
+}
+
+impl Default for GssQuantizer {
+    fn default() -> Self {
+        GssQuantizer { rel_tol: 1e-4, max_iter: 64 }
+    }
+}
+
+impl GssQuantizer {
+    fn sym_loss(row: &[f32], thr: f64, nbits: u32) -> f64 {
+        let clip = Clip { xmin: -(thr as f32), xmax: thr as f32 };
+        quant_sq_error(row, clip, nbits)
+    }
+}
+
+impl Quantizer for GssQuantizer {
+    fn clip(&self, row: &[f32], nbits: u32) -> Clip {
+        let mut hi = 0.0f64;
+        for &x in row {
+            hi = hi.max(x.abs() as f64);
+        }
+        if hi == 0.0 {
+            return Clip { xmin: 0.0, xmax: 0.0 };
+        }
+        // Bracket [lo, hi]; lo > 0 to keep the scale positive.
+        let mut lo = hi * 1e-3;
+        let tol = hi * self.rel_tol;
+
+        let mut c = hi - INV_PHI * (hi - lo);
+        let mut d = lo + INV_PHI * (hi - lo);
+        let mut fc = Self::sym_loss(row, c, nbits);
+        let mut fd = Self::sym_loss(row, d, nbits);
+        let mut iter = 0;
+        let mut hi_m = hi;
+        while (hi_m - lo) > tol && iter < self.max_iter {
+            if fc < fd {
+                hi_m = d;
+                d = c;
+                fd = fc;
+                c = hi_m - INV_PHI * (hi_m - lo);
+                fc = Self::sym_loss(row, c, nbits);
+            } else {
+                lo = c;
+                c = d;
+                fc = fd;
+                d = lo + INV_PHI * (hi_m - lo);
+                fd = Self::sym_loss(row, d, nbits);
+            }
+            iter += 1;
+        }
+        let thr = 0.5 * (lo + hi_m);
+        // Never do worse than the full symmetric range: GSS brackets can
+        // exclude it, so compare explicitly.
+        let full = Self::sym_loss(row, hi, nbits);
+        let best = if Self::sym_loss(row, thr, nbits) <= full { thr } else { hi };
+        Clip { xmin: -(best as f32), xmax: best as f32 }
+    }
+
+    fn name(&self) -> &'static str {
+        "GSS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::SymQuantizer;
+    use crate::util::Rng;
+
+    #[test]
+    fn gss_no_worse_than_sym() {
+        let mut rng = Rng::new(21);
+        for _ in 0..20 {
+            let row = rng.normal_vec(64, 1.0);
+            let eg = quant_sq_error(&row, GssQuantizer::default().clip(&row, 4), 4);
+            let es = quant_sq_error(&row, SymQuantizer.clip(&row, 4), 4);
+            assert!(eg <= es + 1e-9, "gss={eg} sym={es}");
+        }
+    }
+
+    #[test]
+    fn gss_clips_outliers_on_long_rows() {
+        // With thousands of Gaussian samples plus one huge outlier, the
+        // optimal threshold is far below max|X|; GSS must find it.
+        let mut rng = Rng::new(22);
+        let mut row = rng.normal_vec(4096, 1.0);
+        row[0] = 100.0;
+        let c = GssQuantizer::default().clip(&row, 4);
+        assert!(c.xmax < 50.0, "xmax={}", c.xmax);
+    }
+
+    #[test]
+    fn zero_row() {
+        let c = GssQuantizer::default().clip(&[0.0; 16], 4);
+        assert_eq!((c.xmin, c.xmax), (0.0, 0.0));
+    }
+
+    #[test]
+    fn symmetric_output() {
+        let mut rng = Rng::new(23);
+        let row = rng.normal_vec(128, 2.0);
+        let c = GssQuantizer::default().clip(&row, 4);
+        assert_eq!(c.xmin, -c.xmax);
+    }
+}

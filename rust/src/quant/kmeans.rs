@@ -1,0 +1,389 @@
+//! Codebook-based (non-uniform) quantization with k-means clustering —
+//! the paper's second proposed approach.
+//!
+//! * **KMEANS** — per-row 16-entry codebook: Lloyd's algorithm on the 1-D
+//!   row values, initialized from the ASYM uniform grid (the paper:
+//!   "because k-means is sensitive to initialization, we initialize
+//!   cluster centers using uniform quantization results from ASYM").
+//!   A row with ≤16 distinct values is represented *exactly* — this is
+//!   why Table 2 reports 0 loss for KMEANS at d = 8, 16.
+//! * **KMEANS-CLS** — two-tier: tier-1 k-means groups similar rows into
+//!   `K` blocks; tier-2 builds one 16-entry codebook per block. Storage
+//!   for an `N×d` table: `N·d/2 + N·log₂K/8 + 64K` bytes.
+
+use super::Clip;
+use crate::quant::asym::min_max;
+
+/// Number of codebook entries for 4-bit codes.
+pub const CODEBOOK_SIZE: usize = 16;
+
+/// Lloyd's k-means on scalar values.
+///
+/// `init` provides the starting centroids (callers use the ASYM grid).
+/// Returns the final centroids (sorted ascending); empty clusters keep
+/// their previous centroid. Converges when no assignment changes or after
+/// `max_iter` sweeps.
+pub fn kmeans_1d(values: &[f32], init: &[f32], max_iter: u32) -> Vec<f32> {
+    let k = init.len();
+    let mut centers: Vec<f32> = init.to_vec();
+    centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if values.is_empty() || k == 0 {
+        return centers;
+    }
+    // Sorting values makes the assignment step a single merge pass:
+    // with sorted centers, cluster boundaries are the midpoints.
+    let mut sorted: Vec<f32> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut assignment = vec![0usize; sorted.len()];
+    for _ in 0..max_iter {
+        // Assign: walk values and centers together.
+        let mut changed = false;
+        let mut c = 0usize;
+        for (i, &v) in sorted.iter().enumerate() {
+            // Advance while the next center is closer.
+            while c + 1 < k
+                && (centers[c + 1] - v).abs() <= (centers[c] - v).abs()
+            {
+                c += 1;
+            }
+            // A later value can belong to an earlier boundary only if
+            // values are sorted — c is monotone, but re-check backwards
+            // never needed for sorted input.
+            if assignment[i] != c {
+                assignment[i] = c;
+                changed = true;
+            }
+        }
+        // Update.
+        let mut sum = vec![0.0f64; k];
+        let mut cnt = vec![0usize; k];
+        for (i, &v) in sorted.iter().enumerate() {
+            sum[assignment[i]] += v as f64;
+            cnt[assignment[i]] += 1;
+        }
+        for j in 0..k {
+            if cnt[j] > 0 {
+                centers[j] = (sum[j] / cnt[j] as f64) as f32;
+            }
+        }
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if !changed {
+            break;
+        }
+    }
+    centers
+}
+
+/// Index of the nearest codebook entry (codebook must be sorted).
+#[inline]
+pub fn nearest_code(codebook: &[f32], x: f32) -> usize {
+    // Binary search for the insertion point, then compare neighbours.
+    let mut lo = 0usize;
+    let mut hi = codebook.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if codebook[mid] < x {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    if lo == 0 {
+        0
+    } else if lo >= codebook.len() {
+        codebook.len() - 1
+    } else if (x - codebook[lo - 1]).abs() <= (codebook[lo] - x).abs() {
+        lo - 1
+    } else {
+        lo
+    }
+}
+
+/// The ASYM uniform grid used to initialize k-means (16 evenly spaced
+/// values spanning the row range).
+pub fn asym_grid(row: &[f32], k: usize) -> Vec<f32> {
+    let (lo, hi) = min_max(row);
+    let clip = Clip { xmin: lo, xmax: hi };
+    let scale = clip.scale((k as f32).log2() as u32);
+    (0..k).map(|i| lo + scale * i as f32).collect()
+}
+
+/// Row-wise codebook quantization (`KMEANS`).
+#[derive(Clone, Copy, Debug)]
+pub struct KmeansQuantizer {
+    /// Lloyd iterations cap (default 30; 1-D k-means converges fast).
+    pub max_iter: u32,
+}
+
+impl Default for KmeansQuantizer {
+    fn default() -> Self {
+        KmeansQuantizer { max_iter: 30 }
+    }
+}
+
+impl KmeansQuantizer {
+    /// Build the 16-entry codebook for one row.
+    pub fn codebook(&self, row: &[f32]) -> Vec<f32> {
+        let distinct = {
+            let mut v: Vec<f32> = row.to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v.dedup();
+            v
+        };
+        if distinct.len() <= CODEBOOK_SIZE {
+            // Exact representation; pad by repeating the last value so the
+            // codebook always has 16 entries.
+            let mut cb = distinct;
+            let pad = *cb.last().unwrap_or(&0.0);
+            cb.resize(CODEBOOK_SIZE, pad);
+            return cb;
+        }
+        let init = asym_grid(row, CODEBOOK_SIZE);
+        kmeans_1d(row, &init, self.max_iter)
+    }
+
+    /// Quantize a row: codebook + per-value 4-bit codes.
+    pub fn quantize_row(&self, row: &[f32]) -> (Vec<f32>, Vec<u8>) {
+        let cb = self.codebook(row);
+        let codes = row.iter().map(|&x| nearest_code(&cb, x) as u8).collect();
+        (cb, codes)
+    }
+}
+
+/// Two-tier codebook quantization (`KMEANS-CLS`).
+#[derive(Clone, Copy, Debug)]
+pub struct KmeansClsQuantizer {
+    /// Number of tier-1 row clusters `K` (chosen by callers to match a
+    /// target compression rate; see [`KmeansClsQuantizer::k_for_budget`]).
+    pub k: usize,
+    /// Tier-1 Lloyd iterations over row vectors.
+    pub tier1_iter: u32,
+    /// Tier-2 Lloyd iterations over block values.
+    pub tier2_iter: u32,
+}
+
+impl Default for KmeansClsQuantizer {
+    fn default() -> Self {
+        KmeansClsQuantizer { k: 16, tier1_iter: 10, tier2_iter: 30 }
+    }
+}
+
+/// Output of two-tier quantization over a whole table.
+pub struct TwoTierCodebooks {
+    /// Tier-1 cluster assignment per row.
+    pub row_cluster: Vec<u32>,
+    /// One sorted 16-entry codebook per tier-1 block.
+    pub codebooks: Vec<Vec<f32>>,
+}
+
+impl KmeansClsQuantizer {
+    /// Largest `K` whose storage overhead `N·log₂K/8 + 64K` stays within
+    /// `budget_bytes` for an `N`-row table (the paper chooses K so
+    /// KMEANS-CLS matches the uniform methods' compression rate, whose
+    /// overhead is `N·(scale+bias)` bytes).
+    pub fn k_for_budget(n_rows: usize, budget_bytes: usize) -> usize {
+        let mut best = 2usize;
+        let mut k = 2usize;
+        while k <= 1 << 16 {
+            let bits = (k as f64).log2().ceil();
+            let cost = (n_rows as f64 * bits / 8.0) + 64.0 * k as f64;
+            if cost <= budget_bytes as f64 {
+                best = k;
+            }
+            k *= 2;
+        }
+        best
+    }
+
+    /// Tier-1: cluster rows by Euclidean distance (Lloyd on row vectors,
+    /// initialized with evenly strided rows). Returns assignments.
+    fn cluster_rows(&self, rows: &[&[f32]]) -> Vec<u32> {
+        let n = rows.len();
+        let k = self.k.min(n).max(1);
+        let d = rows.first().map_or(0, |r| r.len());
+        // Strided init keeps determinism and spreads seeds across the table.
+        let mut centroids: Vec<Vec<f32>> =
+            (0..k).map(|j| rows[j * n / k].to_vec()).collect();
+        let mut assign = vec![0u32; n];
+        for _ in 0..self.tier1_iter {
+            let mut changed = false;
+            for (i, row) in rows.iter().enumerate() {
+                let mut best = 0usize;
+                let mut best_d = f64::INFINITY;
+                for (j, c) in centroids.iter().enumerate() {
+                    let mut dist = 0.0f64;
+                    for t in 0..d {
+                        let diff = (row[t] - c[t]) as f64;
+                        dist += diff * diff;
+                        if dist >= best_d {
+                            break;
+                        }
+                    }
+                    if dist < best_d {
+                        best_d = dist;
+                        best = j;
+                    }
+                }
+                if assign[i] != best as u32 {
+                    assign[i] = best as u32;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+            let mut sums = vec![vec![0.0f64; d]; k];
+            let mut cnts = vec![0usize; k];
+            for (i, row) in rows.iter().enumerate() {
+                let a = assign[i] as usize;
+                cnts[a] += 1;
+                for t in 0..d {
+                    sums[a][t] += row[t] as f64;
+                }
+            }
+            for j in 0..k {
+                if cnts[j] > 0 {
+                    for t in 0..d {
+                        centroids[j][t] = (sums[j][t] / cnts[j] as f64) as f32;
+                    }
+                }
+            }
+        }
+        assign
+    }
+
+    /// Full two-tier quantization of a table given as row slices.
+    pub fn quantize_table(&self, rows: &[&[f32]]) -> TwoTierCodebooks {
+        let assign = self.cluster_rows(rows);
+        let k = self.k.min(rows.len()).max(1);
+        let km = KmeansQuantizer { max_iter: self.tier2_iter };
+        let codebooks: Vec<Vec<f32>> = (0..k)
+            .map(|j| {
+                let vals: Vec<f32> = rows
+                    .iter()
+                    .zip(&assign)
+                    .filter(|(_, &a)| a as usize == j)
+                    .flat_map(|(r, _)| r.iter().copied())
+                    .collect();
+                km.codebook(&vals)
+            })
+            .collect();
+        TwoTierCodebooks { row_cluster: assign, codebooks }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn codebook_mse(row: &[f32], cb: &[f32]) -> f64 {
+        row.iter()
+            .map(|&x| {
+                let q = cb[nearest_code(cb, x)];
+                ((x - q) as f64).powi(2)
+            })
+            .sum()
+    }
+
+    #[test]
+    fn nearest_code_basics() {
+        let cb = [0.0f32, 1.0, 2.0, 10.0];
+        assert_eq!(nearest_code(&cb, -5.0), 0);
+        assert_eq!(nearest_code(&cb, 0.4), 0);
+        assert_eq!(nearest_code(&cb, 0.6), 1);
+        assert_eq!(nearest_code(&cb, 7.0), 3);
+        assert_eq!(nearest_code(&cb, 100.0), 3);
+    }
+
+    #[test]
+    fn short_rows_exact() {
+        // d <= 16 distinct values -> zero loss (paper Table 2, d=8/16).
+        let mut rng = Rng::new(61);
+        for d in [8usize, 16] {
+            let row = rng.normal_vec(d, 1.0);
+            let (cb, codes) = KmeansQuantizer::default().quantize_row(&row);
+            for (i, &x) in row.iter().enumerate() {
+                assert_eq!(cb[codes[i] as usize], x, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_beats_uniform_grid() {
+        // Lloyd iterations must not increase MSE vs the ASYM-grid init.
+        let mut rng = Rng::new(62);
+        for _ in 0..20 {
+            let row = rng.normal_vec(64, 1.0);
+            let grid = asym_grid(&row, CODEBOOK_SIZE);
+            let cb = KmeansQuantizer::default().codebook(&row);
+            assert!(
+                codebook_mse(&row, &cb) <= codebook_mse(&row, &grid) + 1e-9
+            );
+        }
+    }
+
+    #[test]
+    fn lloyd_monotone_decrease() {
+        let mut rng = Rng::new(63);
+        let row = rng.normal_vec(256, 1.0);
+        let init = asym_grid(&row, CODEBOOK_SIZE);
+        let mut prev = codebook_mse(&row, &init);
+        for it in 1..=10 {
+            let cb = kmeans_1d(&row, &init, it);
+            let e = codebook_mse(&row, &cb);
+            assert!(e <= prev + 1e-9, "iter {it}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn codebook_sorted_and_sized() {
+        let mut rng = Rng::new(64);
+        let row = rng.normal_vec(128, 2.0);
+        let cb = KmeansQuantizer::default().codebook(&row);
+        assert_eq!(cb.len(), CODEBOOK_SIZE);
+        for w in cb.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn two_tier_groups_similar_rows() {
+        // Two well-separated row families must land in different clusters,
+        // and per-family codebooks must beat a single shared codebook.
+        let mut rng = Rng::new(65);
+        let rows_a: Vec<Vec<f32>> = (0..20).map(|_| rng.normal_vec(32, 0.1)).collect();
+        let rows_b: Vec<Vec<f32>> =
+            (0..20).map(|_| rng.normal_vec(32, 0.1).iter().map(|x| x + 10.0).collect()).collect();
+        let all: Vec<&[f32]> = rows_a.iter().chain(&rows_b).map(|r| r.as_slice()).collect();
+        let q = KmeansClsQuantizer { k: 2, ..Default::default() };
+        let out = q.quantize_table(&all);
+        // Same family -> same cluster.
+        assert!(out.row_cluster[..20].iter().all(|&c| c == out.row_cluster[0]));
+        assert!(out.row_cluster[20..].iter().all(|&c| c == out.row_cluster[20]));
+        assert_ne!(out.row_cluster[0], out.row_cluster[20]);
+    }
+
+    #[test]
+    fn k_for_budget_matches_uniform_overhead() {
+        // Uniform 4-bit FP32 scale/bias overhead: 8 bytes/row.
+        let n = 100_000;
+        let k = KmeansClsQuantizer::k_for_budget(n, 8 * n);
+        let bits = (k as f64).log2().ceil();
+        assert!(n as f64 * bits / 8.0 + 64.0 * k as f64 <= (8 * n) as f64);
+        // And doubling K would blow the budget.
+        let k2 = k * 2;
+        let bits2 = (k2 as f64).log2().ceil();
+        assert!(n as f64 * bits2 / 8.0 + 64.0 * k2 as f64 > (8 * n) as f64);
+    }
+
+    #[test]
+    fn empty_and_constant_inputs() {
+        let cb = KmeansQuantizer::default().codebook(&[]);
+        assert_eq!(cb.len(), CODEBOOK_SIZE);
+        let (cb, codes) = KmeansQuantizer::default().quantize_row(&[3.0; 10]);
+        assert!(codes.iter().all(|&c| cb[c as usize] == 3.0));
+    }
+}

@@ -1,0 +1,268 @@
+//! Post-training quantization methods for embedding tables.
+//!
+//! This module is the paper's core contribution. Every method finds, per
+//! row vector `X`, either
+//!
+//! * clipping thresholds `[xmin, xmax]` for **uniform quantization**
+//!   (Eq. 1 of the paper):
+//!   `x_int = round((x - xmin) / scale)`, `scale = (xmax - xmin)/(2^n - 1)`,
+//!   de-quantized as `x_float = scale * x_int + xmin`, or
+//! * a 16-entry **codebook** for non-uniform (k-means) quantization.
+//!
+//! Implemented methods (paper Table 2):
+//!
+//! | method        | type        | module        |
+//! |---------------|-------------|---------------|
+//! | `ASYM`        | uniform     | [`asym`]      |
+//! | `TABLE`       | uniform     | [`asym`] (whole-table range) |
+//! | `SYM`         | uniform     | [`sym`]       |
+//! | `GSS`         | uniform     | [`gss`]       |
+//! | `HIST-APPRX`  | uniform     | [`hist`]      |
+//! | `HIST-BRUTE`  | uniform     | [`hist`]      |
+//! | `ACIQ`        | uniform     | [`aciq`]      |
+//! | `GREEDY`      | uniform     | [`greedy`] — Algorithm 1 (ours) |
+//! | `KMEANS`      | codebook    | [`kmeans`] (ours) |
+//! | `KMEANS-CLS`  | codebook    | [`kmeans`] two-tier (ours) |
+//!
+//! All uniform methods implement the [`Quantizer`] trait; entry points that
+//! need dynamic dispatch use [`Method`] / [`method_by_name`].
+
+pub mod aciq;
+pub mod asym;
+pub mod greedy;
+pub mod gss;
+pub mod gss2d;
+pub mod hist;
+pub mod kmeans;
+pub mod sym;
+pub mod zeropoint;
+
+pub use aciq::AciqQuantizer;
+pub use asym::{AsymQuantizer, TableQuantizer};
+pub use greedy::GreedyQuantizer;
+pub use gss::GssQuantizer;
+pub use gss2d::Gss2dQuantizer;
+pub use hist::{HistApprxQuantizer, HistBruteQuantizer};
+pub use kmeans::{kmeans_1d, KmeansClsQuantizer, KmeansQuantizer};
+pub use sym::SymQuantizer;
+pub use zeropoint::ZeroPointQuantizer;
+
+/// Clipping thresholds for uniform quantization of one row vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Clip {
+    /// Lower clipping threshold (`bias` in Eq. 1).
+    pub xmin: f32,
+    /// Upper clipping threshold.
+    pub xmax: f32,
+}
+
+impl Clip {
+    /// `scale` of Eq. 1 for an `nbits` quantizer. Degenerate rows
+    /// (`xmax == xmin`) get scale 1 so that de-quantization reproduces the
+    /// constant value via the bias alone.
+    #[inline]
+    pub fn scale(&self, nbits: u32) -> f32 {
+        let levels = ((1u32 << nbits) - 1) as f32;
+        let s = (self.xmax - self.xmin) / levels;
+        if s > 0.0 && s.is_finite() {
+            s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Quantize one value to its integer code under `clip` (Eq. 1), clamping
+/// out-of-range values to the grid ends.
+#[inline]
+pub fn quantize_value(x: f32, clip: Clip, nbits: u32) -> u32 {
+    let levels = (1u32 << nbits) - 1;
+    let scale = clip.scale(nbits);
+    let q = ((x - clip.xmin) / scale).round();
+    if q <= 0.0 {
+        0
+    } else if q >= levels as f32 {
+        levels
+    } else {
+        q as u32
+    }
+}
+
+/// De-quantize an integer code back to float.
+#[inline]
+pub fn dequantize_value(q: u32, clip: Clip, nbits: u32) -> f32 {
+    clip.scale(nbits) * q as f32 + clip.xmin
+}
+
+/// The quantization function `Q(x, xmin, xmax)` of the paper: quantize then
+/// de-quantize one value.
+#[inline]
+pub fn quant_dequant_value(x: f32, clip: Clip, nbits: u32) -> f32 {
+    dequantize_value(quantize_value(x, clip, nbits), clip, nbits)
+}
+
+/// `Q(X, xmin, xmax)` applied element-wise.
+pub fn quant_dequant(xs: &[f32], clip: Clip, nbits: u32) -> Vec<f32> {
+    xs.iter()
+        .map(|&x| quant_dequant_value(x, clip, nbits))
+        .collect()
+}
+
+/// Sum of squared quantization errors `||X - Q(X, clip)||²` (Eq. 2's
+/// objective, un-normalized). This is the loss every clipping-threshold
+/// search minimizes.
+pub fn quant_sq_error(xs: &[f32], clip: Clip, nbits: u32) -> f64 {
+    // Keep the arithmetic bit-identical to `quant_dequant_value` (f32
+    // quantize/reconstruct, f64 accumulate) so searches optimize the loss
+    // the fused tables will actually realize.
+    let scale = clip.scale(nbits);
+    let levels = ((1u32 << nbits) - 1) as f32;
+    let xmin = clip.xmin;
+    let mut err = 0.0f64;
+    for &x in xs {
+        let q = ((x - xmin) / scale).round().clamp(0.0, levels);
+        let d = (x - (scale * q + xmin)) as f64;
+        err += d * d;
+    }
+    err
+}
+
+/// A uniform-quantization method: finds clipping thresholds per row.
+pub trait Quantizer: Send + Sync {
+    /// Find the clipping thresholds for a single row vector.
+    fn clip(&self, row: &[f32], nbits: u32) -> Clip;
+
+    /// Short stable name (matches the paper's tables, e.g. `"GREEDY"`).
+    fn name(&self) -> &'static str;
+}
+
+/// Every quantization method in the paper, for dynamic dispatch in the
+/// evaluation harness / CLI. `Uniform` methods find per-row clips;
+/// `Kmeans`/`KmeansCls` build codebooks and are handled by
+/// [`crate::table::CodebookTable`].
+pub enum Method {
+    /// A uniform method implementing [`Quantizer`].
+    Uniform(Box<dyn Quantizer>),
+    /// Row-wise 16-entry codebook (k-means).
+    Kmeans(KmeansQuantizer),
+    /// Two-tier codebook (row clustering then per-block codebook).
+    KmeansCls(KmeansClsQuantizer),
+}
+
+impl Method {
+    /// Stable method name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Uniform(q) => q.name(),
+            Method::Kmeans(_) => "KMEANS",
+            Method::KmeansCls(_) => "KMEANS-CLS",
+        }
+    }
+}
+
+/// Look up a method by its paper name (case-insensitive). Returns `None`
+/// for unknown names.
+pub fn method_by_name(name: &str) -> Option<Method> {
+    let n = name.to_ascii_uppercase().replace('_', "-");
+    Some(match n.as_str() {
+        "ASYM" | "ASYM-8BITS" => Method::Uniform(Box::new(AsymQuantizer)),
+        "TABLE" => Method::Uniform(Box::new(TableQuantizer)),
+        "SYM" => Method::Uniform(Box::new(SymQuantizer)),
+        "GSS" => Method::Uniform(Box::new(GssQuantizer::default())),
+        "GSS-2D" => Method::Uniform(Box::new(Gss2dQuantizer::default())),
+        "ASYM-ZP" => Method::Uniform(Box::new(ZeroPointQuantizer)),
+        "HIST-APPRX" => Method::Uniform(Box::new(HistApprxQuantizer::default())),
+        "HIST-BRUTE" => Method::Uniform(Box::new(HistBruteQuantizer::default())),
+        "ACIQ" => Method::Uniform(Box::new(AciqQuantizer::default())),
+        "GREEDY" => Method::Uniform(Box::new(GreedyQuantizer::default())),
+        "GREEDY-OPT" => Method::Uniform(Box::new(GreedyQuantizer { b: 1000, r: 0.5 })),
+        "KMEANS" => Method::Kmeans(KmeansQuantizer::default()),
+        "KMEANS-CLS" => Method::KmeansCls(KmeansClsQuantizer::default()),
+        _ => return None,
+    })
+}
+
+/// All uniform quantizers in the order the paper's tables list them.
+pub fn all_uniform() -> Vec<Box<dyn Quantizer>> {
+    vec![
+        Box::new(SymQuantizer),
+        Box::new(GssQuantizer::default()),
+        Box::new(AsymQuantizer),
+        Box::new(HistApprxQuantizer::default()),
+        Box::new(HistBruteQuantizer::default()),
+        Box::new(AciqQuantizer::default()),
+        Box::new(GreedyQuantizer::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_dequant_endpoints_exact() {
+        // xmin and xmax themselves must round-trip exactly under Eq. 1.
+        let clip = Clip { xmin: -1.5, xmax: 2.5 };
+        for nbits in [4u32, 8] {
+            assert_eq!(quant_dequant_value(-1.5, clip, nbits), -1.5);
+            let hi = quant_dequant_value(2.5, clip, nbits);
+            assert!((hi - 2.5).abs() < 1e-6, "hi={hi}");
+        }
+    }
+
+    #[test]
+    fn values_outside_clip_are_clamped() {
+        let clip = Clip { xmin: 0.0, xmax: 1.0 };
+        assert_eq!(quant_dequant_value(-10.0, clip, 4), 0.0);
+        assert!((quant_dequant_value(10.0, clip, 4) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_constant_row() {
+        let clip = Clip { xmin: 3.0, xmax: 3.0 };
+        assert_eq!(quant_dequant_value(3.0, clip, 4), 3.0);
+        assert_eq!(quantize_value(3.0, clip, 4), 0);
+    }
+
+    #[test]
+    fn sq_error_matches_explicit() {
+        let xs = [0.1f32, 0.7, -0.4, 1.2, 0.0];
+        let clip = Clip { xmin: -0.4, xmax: 1.2 };
+        let qd = quant_dequant(&xs, clip, 4);
+        let explicit: f64 = xs
+            .iter()
+            .zip(&qd)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        let fast = quant_sq_error(&xs, clip, 4);
+        assert!((explicit - fast).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eight_bit_error_below_four_bit() {
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let clip = Clip { xmin: -1.0, xmax: 1.0 };
+        assert!(quant_sq_error(&xs, clip, 8) < quant_sq_error(&xs, clip, 4));
+    }
+
+    #[test]
+    fn method_lookup() {
+        for name in [
+            "ASYM", "TABLE", "SYM", "GSS", "HIST-APPRX", "HIST-BRUTE", "ACIQ", "GREEDY",
+            "GREEDY-OPT", "KMEANS", "KMEANS-CLS",
+        ] {
+            assert!(method_by_name(name).is_some(), "{name}");
+            assert!(method_by_name(&name.to_lowercase()).is_some());
+        }
+        assert!(method_by_name("NOPE").is_none());
+    }
+
+    #[test]
+    fn quantize_value_grid() {
+        let clip = Clip { xmin: 0.0, xmax: 15.0 };
+        for i in 0..16u32 {
+            assert_eq!(quantize_value(i as f32, clip, 4), i);
+            assert_eq!(dequantize_value(i, clip, 4), i as f32);
+        }
+    }
+}

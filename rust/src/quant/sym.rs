@@ -1,0 +1,56 @@
+//! Symmetric range-based quantization (`SYM`).
+//!
+//! `xmax = max(|X|)`, `xmin = -xmax`. Symmetric quantizers waste half the
+//! grid when the row is not centered at zero, and cannot represent a bias;
+//! the paper's Table 2 shows SYM is the worst 4-bit uniform method on
+//! embedding rows.
+
+use super::{Clip, Quantizer};
+
+/// Symmetric quantization around zero.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SymQuantizer;
+
+impl Quantizer for SymQuantizer {
+    fn clip(&self, row: &[f32], _nbits: u32) -> Clip {
+        let mut m = 0.0f32;
+        for &x in row {
+            m = m.max(x.abs());
+        }
+        Clip { xmin: -m, xmax: m }
+    }
+
+    fn name(&self) -> &'static str {
+        "SYM"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quant_sq_error, AsymQuantizer, Quantizer};
+    use crate::util::Rng;
+
+    #[test]
+    fn clip_is_symmetric() {
+        let c = SymQuantizer.clip(&[0.3, -2.0, 1.0], 4);
+        assert_eq!(c.xmin, -2.0);
+        assert_eq!(c.xmax, 2.0);
+    }
+
+    #[test]
+    fn all_zero_row() {
+        let c = SymQuantizer.clip(&[0.0; 8], 4);
+        assert_eq!((c.xmin, c.xmax), (0.0, 0.0));
+    }
+
+    #[test]
+    fn asym_beats_sym_on_shifted_rows() {
+        // A row living entirely in [5, 6] wastes ~90% of the symmetric grid.
+        let mut rng = Rng::new(7);
+        let row: Vec<f32> = (0..64).map(|_| 5.0 + rng.uniform() as f32).collect();
+        let es = quant_sq_error(&row, SymQuantizer.clip(&row, 4), 4);
+        let ea = quant_sq_error(&row, AsymQuantizer.clip(&row, 4), 4);
+        assert!(ea < es / 10.0, "asym={ea} sym={es}");
+    }
+}

@@ -1,0 +1,100 @@
+//! Zero-point (footnote 2) uniform quantization — the *alternative*
+//! mapping the paper evaluated and rejected for embedding tables:
+//!
+//! `x_int = round(x / scale) − zero_point`, de-quantized as
+//! `(x_int + zero_point) · scale`.
+//!
+//! The grid is anchored at multiples of `scale`, so `0.0` is exactly
+//! representable — ideal for ReLU activations full of zeros, but it wastes
+//! up to half a step of range on each end of an embedding row, which is
+//! why the paper's Eq. 1 mapping ("bias" anchored at `min(X)`) gives
+//! better accuracy there. Implemented for the ablation bench
+//! (`ablation_zeropoint`) that reproduces the footnote's claim.
+
+use super::{Clip, Quantizer};
+use crate::quant::asym::min_max;
+
+/// Zero-point-anchored asymmetric quantization.
+///
+/// Returned as a [`Clip`] whose `xmin` is snapped to a multiple of the
+/// scale, so the fused-row `[codes][scale][bias]` layout stores it
+/// without any format change (`bias = zero_point · scale`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ZeroPointQuantizer;
+
+impl Quantizer for ZeroPointQuantizer {
+    fn clip(&self, row: &[f32], nbits: u32) -> Clip {
+        let (lo, hi) = min_max(row);
+        if !(hi > lo) {
+            return Clip { xmin: lo, xmax: hi };
+        }
+        let levels = ((1u32 << nbits) - 1) as f32;
+        let scale = (hi - lo) / levels;
+        // Snap the lower clip to the zero-anchored grid.
+        let zero_point = (lo / scale).round();
+        let xmin = zero_point * scale;
+        Clip { xmin, xmax: xmin + scale * levels }
+    }
+
+    fn name(&self) -> &'static str {
+        "ASYM-ZP"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quant_dequant_value, quant_sq_error, AsymQuantizer};
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_is_exactly_representable() {
+        // Rows containing 0 reconstruct it exactly under ZP (the property
+        // the mapping exists for) whenever 0 lies inside the clip.
+        let mut rng = Rng::new(91);
+        for _ in 0..50 {
+            let mut row = rng.normal_vec(32, 1.0);
+            row[7] = 0.0;
+            let c = ZeroPointQuantizer.clip(&row, 4);
+            if c.xmin <= 0.0 && c.xmax >= 0.0 {
+                let rec = quant_dequant_value(0.0, c, 4);
+                assert!(rec.abs() < 1e-6, "0 -> {rec} (clip {c:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_is_zero_anchored() {
+        let mut rng = Rng::new(92);
+        let row = rng.normal_vec(64, 1.0);
+        let c = ZeroPointQuantizer.clip(&row, 4);
+        let scale = c.scale(4);
+        let k = c.xmin / scale;
+        assert!((k - k.round()).abs() < 1e-4, "xmin {} not on grid", c.xmin);
+    }
+
+    #[test]
+    fn eq1_beats_zeropoint_on_embedding_rows() {
+        // The footnote's claim, aggregated over many rows: the Eq. 1
+        // mapping (ASYM) has lower MSE than zero-point on dense
+        // (zero-free) embedding rows.
+        let mut rng = Rng::new(93);
+        let (mut e_eq1, mut e_zp) = (0.0, 0.0);
+        for _ in 0..100 {
+            // Shifted rows: zero-anchoring costs range.
+            let row: Vec<f32> =
+                (0..64).map(|_| 0.37 + (rng.normal() as f32) * 0.2).collect();
+            e_eq1 += quant_sq_error(&row, AsymQuantizer.clip(&row, 4), 4);
+            e_zp += quant_sq_error(&row, ZeroPointQuantizer.clip(&row, 4), 4);
+        }
+        assert!(e_eq1 < e_zp, "eq1 {e_eq1} vs zp {e_zp}");
+    }
+
+    #[test]
+    fn degenerate_rows() {
+        let c = ZeroPointQuantizer.clip(&[], 4);
+        assert_eq!((c.xmin, c.xmax), (0.0, 0.0));
+        let c = ZeroPointQuantizer.clip(&[2.5; 8], 4);
+        assert_eq!((c.xmin, c.xmax), (2.5, 2.5));
+    }
+}

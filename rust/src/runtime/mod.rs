@@ -1,0 +1,187 @@
+//! PJRT runtime: loads AOT artifacts (`artifacts/*.hlo.txt`, lowered from
+//! the JAX/Pallas layers by `python/compile/aot.py`) and executes them on
+//! the serving path.
+//!
+//! Interchange is **HLO text**, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md).
+//!
+//! Python never runs at serving time — the Rust binary compiles the text
+//! once at startup and then only executes.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Errors from artifact loading/execution.
+#[derive(Debug)]
+pub enum RuntimeError {
+    /// PJRT / XLA error.
+    Xla(xla::Error),
+    /// Artifact missing or unreadable.
+    Io(String),
+    /// Output shape didn't match expectations.
+    Shape(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
+            RuntimeError::Io(s) => write!(f, "artifact error: {s}"),
+            RuntimeError::Shape(s) => write!(f, "shape error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e)
+    }
+}
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by
+/// artifact path — compile once, execute many.
+pub struct PjrtRuntime {
+    client: PjRtClient,
+    cache: HashMap<PathBuf, PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self, RuntimeError> {
+        Ok(PjrtRuntime { client: PjRtClient::cpu()?, cache: HashMap::new() })
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&mut self, path: &Path) -> Result<(), RuntimeError> {
+        if self.cache.contains_key(path) {
+            return Ok(());
+        }
+        if !path.exists() {
+            return Err(RuntimeError::Io(format!(
+                "{} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| RuntimeError::Io("non-utf8 path".into()))?,
+        )?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(path.to_path_buf(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact on f32 buffers.
+    ///
+    /// `inputs` are `(data, shape)` pairs; the artifact must have been
+    /// lowered with `return_tuple=True` (aot.py does) — the single tuple
+    /// output is unwrapped and every element returned as a flat `Vec<f32>`.
+    pub fn execute_f32(
+        &mut self,
+        path: &Path,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        self.load(path)?;
+        let exe = self.cache.get(path).expect("just loaded");
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = Literal::vec1(data).reshape(&dims)?;
+            lits.push(lit);
+        }
+        let mut result = exe.execute::<Literal>(&lits)?[0][0].to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(
+                lit.to_vec::<f32>()
+                    .map_err(|e| RuntimeError::Shape(format!("non-f32 output: {e}")))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Execute a loaded artifact on mixed-dtype inputs (quantized tables
+    /// are `u8`, indices `i32`, everything else `f32`). Outputs must be
+    /// f32, as with [`PjrtRuntime::execute_f32`].
+    pub fn execute_mixed(
+        &mut self,
+        path: &Path,
+        inputs: &[(InputBuf<'_>, &[usize])],
+    ) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        self.load(path)?;
+        let exe = self.cache.get(path).expect("just loaded");
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs {
+            lits.push(buf.to_literal(shape)?);
+        }
+        let mut result = exe.execute::<Literal>(&lits)?[0][0].to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(
+                lit.to_vec::<f32>()
+                    .map_err(|e| RuntimeError::Shape(format!("non-f32 output: {e}")))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Number of compiled executables resident.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// A typed input buffer for [`PjrtRuntime::execute_mixed`].
+pub enum InputBuf<'a> {
+    /// 32-bit floats.
+    F32(&'a [f32]),
+    /// 32-bit signed ints (indices).
+    I32(&'a [i32]),
+    /// Raw bytes (packed quantized rows).
+    U8(&'a [u8]),
+}
+
+impl InputBuf<'_> {
+    fn to_literal(&self, shape: &[usize]) -> Result<Literal, RuntimeError> {
+        let lit = match self {
+            InputBuf::F32(data) => {
+                let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, &bytes)?
+            }
+            InputBuf::I32(data) => {
+                let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, &bytes)?
+            }
+            InputBuf::U8(data) => {
+                Literal::create_from_shape_and_untyped_data(ElementType::U8, shape, data)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT integration tests live in rust/tests/integration_runtime.rs —
+    // they need artifacts built by `make artifacts` and the libxla shared
+    // object, so only client-free error paths are unit-tested here.
+
+    #[test]
+    fn error_display() {
+        let e = super::RuntimeError::Io("missing.hlo.txt".into());
+        assert!(format!("{e}").contains("missing.hlo.txt"));
+    }
+}

@@ -1,0 +1,111 @@
+//! SLS kernels for FP32 and codebook tables.
+
+use crate::sls::SlsArgs;
+use crate::table::{CodebookTable, EmbeddingTable};
+
+/// FP32 `SparseLengthsSum`: the production baseline of Table 1.
+///
+/// The inner loop is a straight `out[j] += row[j]` over contiguous f32s —
+/// LLVM autovectorizes it; throughput is bound by the bytes streamed per
+/// pooled row (`4·d`).
+pub fn sls_f32(table: &EmbeddingTable, args: &SlsArgs, out: &mut [f32]) {
+    let d = table.dim();
+    debug_assert_eq!(out.len(), args.segments() * d);
+    let mut pos = 0usize;
+    for (s, &len) in args.lengths.iter().enumerate() {
+        let acc = &mut out[s * d..(s + 1) * d];
+        acc.fill(0.0);
+        for &idx in &args.indices[pos..pos + len as usize] {
+            let row = table.row(idx as usize);
+            for j in 0..d {
+                acc[j] += row[j];
+            }
+        }
+        pos += len as usize;
+    }
+}
+
+/// Codebook SLS: decode via the row's 16-entry codebook, accumulate.
+///
+/// The codebook fits in one cache line (FP32) so decode is a register
+/// lookup; bytes streamed per row are `d/2` codes + the codebook line.
+pub fn sls_codebook(table: &CodebookTable, args: &SlsArgs, out: &mut [f32]) {
+    let d = table.dim();
+    debug_assert_eq!(out.len(), args.segments() * d);
+    let mut pos = 0usize;
+    for (s, &len) in args.lengths.iter().enumerate() {
+        let acc = &mut out[s * d..(s + 1) * d];
+        acc.fill(0.0);
+        for &idx in &args.indices[pos..pos + len as usize] {
+            let cb = table.codebook_of_row(idx as usize);
+            let codes = table.codes_of_row(idx as usize);
+            let pairs = d / 2;
+            for b in 0..pairs {
+                let byte = codes[b];
+                acc[2 * b] += cb[(byte & 0x0F) as usize];
+                acc[2 * b + 1] += cb[(byte >> 4) as usize];
+            }
+            if d % 2 == 1 {
+                acc[d - 1] += cb[(codes[pairs] & 0x0F) as usize];
+            }
+        }
+        pos += len as usize;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::{CodebookKind, ScaleBiasDtype};
+
+    fn naive_sls(table: &EmbeddingTable, indices: &[u32], lengths: &[u32]) -> Vec<f32> {
+        let d = table.dim();
+        let mut out = vec![0.0f32; lengths.len() * d];
+        let mut pos = 0;
+        for (s, &len) in lengths.iter().enumerate() {
+            for &i in &indices[pos..pos + len as usize] {
+                for j in 0..d {
+                    out[s * d + j] += table.row(i as usize)[j];
+                }
+            }
+            pos += len as usize;
+        }
+        out
+    }
+
+    #[test]
+    fn f32_matches_naive() {
+        let t = EmbeddingTable::randn(64, 24, 31);
+        let indices = [3u32, 3, 17, 0, 63, 12, 12, 12];
+        let lengths = [2u32, 0, 3, 3];
+        let args = SlsArgs::new(&indices, &lengths, 64).unwrap();
+        let mut out = vec![0.0; 4 * 24];
+        sls_f32(&t, &args, &mut out);
+        assert_eq!(out, naive_sls(&t, &indices, &lengths));
+    }
+
+    #[test]
+    fn empty_segment_is_zero() {
+        let t = EmbeddingTable::randn(8, 4, 32);
+        let args = SlsArgs::new(&[], &[0, 0], 8).unwrap();
+        let mut out = vec![9.0; 8];
+        sls_f32(&t, &args, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn codebook_matches_dequantized_f32() {
+        let t = EmbeddingTable::randn(32, 15, 33); // odd dim
+        let c = t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32);
+        let dq = c.dequantize();
+        let indices = [1u32, 2, 3, 30, 31];
+        let lengths = [2u32, 3];
+        let args = SlsArgs::new(&indices, &lengths, 32).unwrap();
+        let mut out = vec![0.0; 2 * 15];
+        sls_codebook(&c, &args, &mut out);
+        let expect = naive_sls(&dq, &indices, &lengths);
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Weighted and mean-pooled SLS variants.
+//!
+//! Production ranking models use three pooling operators over embedding
+//! tables (all FBGEMM/Caffe2 ops the paper's §4 operators generalize to):
+//!
+//! * `SparseLengthsSum`          — plain sum      ([`crate::sls::sls_fused`])
+//! * `SparseLengthsWeightedSum`  — per-lookup weights (attention-style)
+//! * `SparseLengthsMean`         — average pooling
+//!
+//! The weighted variant cannot factor the bias out of the inner loop as a
+//! plain count (each row's bias is scaled by its weight), so it tracks
+//! `Σ wᵢ·biasᵢ` instead — same trick, one extra FMA per row.
+
+use crate::sls::SlsArgs;
+use crate::table::{EmbeddingTable, FusedTable};
+
+/// Weighted pooled sum over FP32 rows:
+/// `out[s] = Σ_i w_i · T[idx_i]` within each segment.
+pub fn sls_weighted_f32(
+    table: &EmbeddingTable,
+    args: &SlsArgs,
+    weights: &[f32],
+    out: &mut [f32],
+) {
+    let d = table.dim();
+    debug_assert_eq!(weights.len(), args.indices.len());
+    debug_assert_eq!(out.len(), args.segments() * d);
+    let mut pos = 0usize;
+    for (s, &len) in args.lengths.iter().enumerate() {
+        let acc = &mut out[s * d..(s + 1) * d];
+        acc.fill(0.0);
+        for k in pos..pos + len as usize {
+            let row = table.row(args.indices[k] as usize);
+            let w = weights[k];
+            for (a, &v) in acc.iter_mut().zip(row) {
+                *a += w * v;
+            }
+        }
+        pos += len as usize;
+    }
+}
+
+/// Weighted pooled sum over fused INT4/INT8 rows.
+pub fn sls_weighted_fused(
+    table: &FusedTable,
+    args: &SlsArgs,
+    weights: &[f32],
+    out: &mut [f32],
+) {
+    let d = table.dim();
+    debug_assert_eq!(weights.len(), args.indices.len());
+    debug_assert_eq!(out.len(), args.segments() * d);
+    let packed = d / 2;
+    let odd_tail = d % 2 == 1;
+    let half = packed + usize::from(odd_tail);
+    let mut acc_even = vec![0.0f32; half.max(d)];
+    let mut acc_odd = vec![0.0f32; packed];
+    let mut pos = 0usize;
+    for (s, &len) in args.lengths.iter().enumerate() {
+        let mut wbias_sum = 0.0f32;
+        match table.nbits() {
+            4 => {
+                acc_even[..half].fill(0.0);
+                acc_odd.fill(0.0);
+                for k in pos..pos + len as usize {
+                    let raw = table.row_raw(args.indices[k] as usize);
+                    let (scale, bias) = table.read_tail(raw);
+                    let w = weights[k];
+                    let ws = w * scale;
+                    wbias_sum += w * bias;
+                    let bytes = &raw[..packed];
+                    for (a, &byte) in acc_even[..packed].iter_mut().zip(bytes) {
+                        *a += ws * (byte & 0x0F) as f32;
+                    }
+                    for (a, &byte) in acc_odd.iter_mut().zip(bytes) {
+                        *a += ws * (byte >> 4) as f32;
+                    }
+                    if odd_tail {
+                        acc_even[packed] += ws * (raw[packed] & 0x0F) as f32;
+                    }
+                }
+                let acc = &mut out[s * d..(s + 1) * d];
+                for b in 0..packed {
+                    acc[2 * b] = acc_even[b] + wbias_sum;
+                    acc[2 * b + 1] = acc_odd[b] + wbias_sum;
+                }
+                if odd_tail {
+                    acc[d - 1] = acc_even[packed] + wbias_sum;
+                }
+            }
+            8 => {
+                let acc = &mut out[s * d..(s + 1) * d];
+                acc.fill(0.0);
+                for k in pos..pos + len as usize {
+                    let raw = table.row_raw(args.indices[k] as usize);
+                    let (scale, bias) = table.read_tail(raw);
+                    let w = weights[k];
+                    let ws = w * scale;
+                    wbias_sum += w * bias;
+                    for (a, &c) in acc.iter_mut().zip(&raw[..d]) {
+                        *a += ws * c as f32;
+                    }
+                }
+                for a in out[s * d..(s + 1) * d].iter_mut() {
+                    *a += wbias_sum;
+                }
+            }
+            _ => unreachable!(),
+        }
+        pos += len as usize;
+    }
+}
+
+/// Mean pooling over fused rows: weighted sum with weight `1/len`
+/// (empty segments yield zeros, matching Caffe2's `SparseLengthsMean`).
+pub fn sls_mean_fused(table: &FusedTable, args: &SlsArgs, out: &mut [f32]) {
+    crate::sls::sls_fused(table, args, out);
+    let d = table.dim();
+    for (s, &len) in args.lengths.iter().enumerate() {
+        if len > 1 {
+            let inv = 1.0 / len as f32;
+            for a in out[s * d..(s + 1) * d].iter_mut() {
+                *a *= inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GreedyQuantizer;
+    use crate::table::ScaleBiasDtype;
+    use crate::util::Rng;
+
+    fn setup(d: usize) -> (EmbeddingTable, FusedTable, Vec<u32>, Vec<u32>, Vec<f32>) {
+        let t = EmbeddingTable::randn(50, d, 61 + d as u64);
+        let f = t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F32);
+        let mut rng = Rng::new(62);
+        let lengths = vec![3u32, 0, 5, 1];
+        let total = 9usize;
+        let indices: Vec<u32> = (0..total).map(|_| rng.below(50) as u32).collect();
+        let weights: Vec<f32> = (0..total).map(|_| rng.uniform_in(-1.0, 2.0) as f32).collect();
+        (t, f, indices, lengths, weights)
+    }
+
+    #[test]
+    fn weighted_fused_matches_weighted_f32_on_dequant() {
+        for d in [16usize, 15, 64] {
+            let (_, f, indices, lengths, weights) = setup(d);
+            let dq = f.dequantize();
+            let args = SlsArgs::new(&indices, &lengths, 50).unwrap();
+            let mut a = vec![0.0f32; 4 * d];
+            let mut b = a.clone();
+            sls_weighted_f32(&dq, &args, &weights, &mut a);
+            sls_weighted_fused(&f, &args, &weights, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-3, "d={d}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn unit_weights_equal_plain_sls() {
+        let (_, f, indices, lengths, _) = setup(32);
+        let ones = vec![1.0f32; indices.len()];
+        let args = SlsArgs::new(&indices, &lengths, 50).unwrap();
+        let mut a = vec![0.0f32; 4 * 32];
+        let mut b = a.clone();
+        crate::sls::sls_fused(&f, &args, &mut a);
+        sls_weighted_fused(&f, &args, &ones, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn int8_weighted_path() {
+        let t = EmbeddingTable::randn(30, 24, 63);
+        let f = t.quantize_fused(&GreedyQuantizer::default(), 8, ScaleBiasDtype::F16);
+        let indices = [0u32, 5, 7, 29];
+        let lengths = [2u32, 2];
+        let weights = [0.5f32, -1.5, 2.0, 0.0];
+        let args = SlsArgs::new(&indices, &lengths, 30).unwrap();
+        let dq = f.dequantize();
+        let mut a = vec![0.0f32; 2 * 24];
+        let mut b = a.clone();
+        sls_weighted_f32(&dq, &args, &weights, &mut a);
+        sls_weighted_fused(&f, &args, &weights, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn mean_is_sum_over_len() {
+        let (_, f, indices, lengths, _) = setup(16);
+        let args = SlsArgs::new(&indices, &lengths, 50).unwrap();
+        let mut sum = vec![0.0f32; 4 * 16];
+        let mut mean = sum.clone();
+        crate::sls::sls_fused(&f, &args, &mut sum);
+        sls_mean_fused(&f, &args, &mut mean);
+        for (s, &len) in lengths.iter().enumerate() {
+            for j in 0..16 {
+                let want = if len == 0 { 0.0 } else { sum[s * 16 + j] / len.max(1) as f32 };
+                assert!((mean[s * 16 + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! Codebook (non-uniform) quantized tables: `KMEANS` and `KMEANS-CLS`.
+//!
+//! Layout:
+//!
+//! * **Rowwise** (`KMEANS`): per row, `d/2` bytes of packed 4-bit codes;
+//!   one 16-entry codebook per row stored separately (FP32: 64 B/row,
+//!   FP16: 32 B/row). Total `N·d/2 + N·16·e` bytes.
+//! * **TwoTier** (`KMEANS-CLS`): `d/2` bytes of codes per row, a
+//!   `log₂K`-bit tier-1 cluster id per row, and `K` shared codebooks —
+//!   the paper's `N·d/2 + N·log₂K/8 + 64·K` bytes.
+
+use crate::quant::kmeans::{nearest_code, KmeansClsQuantizer, KmeansQuantizer, CODEBOOK_SIZE};
+use crate::table::fused::ScaleBiasDtype;
+use crate::table::EmbeddingTable;
+use crate::util::f16::f32_to_f16;
+
+/// Which codebook scheme a table uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodebookKind {
+    /// One 16-entry codebook per row (`KMEANS`).
+    Rowwise,
+    /// Tier-1 row clustering into `K` blocks, one codebook per block
+    /// (`KMEANS-CLS`).
+    TwoTier {
+        /// Number of tier-1 clusters.
+        k: usize,
+    },
+}
+
+/// A 4-bit codebook-quantized table.
+#[derive(Clone, Debug)]
+pub struct CodebookTable {
+    rows: usize,
+    dim: usize,
+    kind: CodebookKind,
+    sb: ScaleBiasDtype,
+    /// Packed 4-bit codes, `ceil(d/2)` bytes per row.
+    codes: Vec<u8>,
+    /// Codebooks: `rows` of them (Rowwise) or `K` (TwoTier), each
+    /// `CODEBOOK_SIZE` floats, already rounded through `sb`.
+    codebooks: Vec<f32>,
+    /// Tier-1 cluster id per row (TwoTier only; empty for Rowwise).
+    row_cluster: Vec<u32>,
+}
+
+impl CodebookTable {
+    /// Quantize `table` with k-means codebooks.
+    pub fn quantize(table: &EmbeddingTable, kind: CodebookKind, sb: ScaleBiasDtype) -> Self {
+        let dim = table.dim();
+        let rows = table.rows();
+        let code_bytes = dim.div_ceil(2);
+        let mut codes = vec![0u8; rows * code_bytes];
+        let round = |v: f32| match sb {
+            ScaleBiasDtype::F32 => v,
+            ScaleBiasDtype::F16 => f32_to_f16(v),
+        };
+
+        match kind {
+            CodebookKind::Rowwise => {
+                let km = KmeansQuantizer::default();
+                let mut codebooks = Vec::with_capacity(rows * CODEBOOK_SIZE);
+                for (i, row) in table.iter_rows().enumerate() {
+                    let mut cb = km.codebook(row);
+                    for c in cb.iter_mut() {
+                        *c = round(*c);
+                    }
+                    // Re-sort: f16 rounding can collapse neighbours.
+                    cb.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    pack_codes(row, &cb, &mut codes[i * code_bytes..(i + 1) * code_bytes]);
+                    codebooks.extend_from_slice(&cb);
+                }
+                CodebookTable { rows, dim, kind, sb, codes, codebooks, row_cluster: Vec::new() }
+            }
+            CodebookKind::TwoTier { k } => {
+                let q = KmeansClsQuantizer { k, ..Default::default() };
+                let row_refs: Vec<&[f32]> = table.iter_rows().collect();
+                let out = q.quantize_table(&row_refs);
+                let mut codebooks = Vec::with_capacity(out.codebooks.len() * CODEBOOK_SIZE);
+                let mut rounded: Vec<Vec<f32>> = Vec::with_capacity(out.codebooks.len());
+                for cb in &out.codebooks {
+                    let mut cb: Vec<f32> = cb.iter().map(|&v| round(v)).collect();
+                    cb.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    codebooks.extend_from_slice(&cb);
+                    rounded.push(cb);
+                }
+                for (i, row) in table.iter_rows().enumerate() {
+                    let cb = &rounded[out.row_cluster[i] as usize];
+                    pack_codes(row, cb, &mut codes[i * code_bytes..(i + 1) * code_bytes]);
+                }
+                CodebookTable {
+                    rows,
+                    dim,
+                    kind,
+                    sb,
+                    codes,
+                    codebooks,
+                    row_cluster: out.row_cluster,
+                }
+            }
+        }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Embedding dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Scheme.
+    pub fn kind(&self) -> CodebookKind {
+        self.kind
+    }
+
+    /// Codebook entry precision.
+    pub fn scale_bias_dtype(&self) -> ScaleBiasDtype {
+        self.sb
+    }
+
+    /// Construct from raw parts (deserialization).
+    pub(crate) fn from_raw(
+        rows: usize,
+        dim: usize,
+        kind: CodebookKind,
+        sb: ScaleBiasDtype,
+        codes: Vec<u8>,
+        codebooks: Vec<f32>,
+        row_cluster: Vec<u32>,
+    ) -> Self {
+        assert_eq!(codes.len(), rows * dim.div_ceil(2));
+        let n_books = match kind {
+            CodebookKind::Rowwise => rows,
+            CodebookKind::TwoTier { k } => k,
+        };
+        assert_eq!(codebooks.len(), n_books * CODEBOOK_SIZE);
+        if let CodebookKind::TwoTier { .. } = kind {
+            assert_eq!(row_cluster.len(), rows);
+        }
+        CodebookTable { rows, dim, kind, sb, codes, codebooks, row_cluster }
+    }
+
+    /// Codebook by block index (tier-1 cluster id for TwoTier, row index
+    /// for Rowwise).
+    #[inline]
+    pub fn raw_codebook(&self, block: usize) -> &[f32] {
+        &self.codebooks[block * CODEBOOK_SIZE..(block + 1) * CODEBOOK_SIZE]
+    }
+
+    /// Tier-1 cluster id of row `i` (0 for Rowwise tables).
+    #[inline]
+    pub fn cluster_of_row(&self, i: usize) -> u32 {
+        match self.kind {
+            CodebookKind::Rowwise => 0,
+            CodebookKind::TwoTier { .. } => self.row_cluster[i],
+        }
+    }
+
+    /// The codebook that row `i` decodes with.
+    #[inline]
+    pub fn codebook_of_row(&self, i: usize) -> &[f32] {
+        let idx = match self.kind {
+            CodebookKind::Rowwise => i,
+            CodebookKind::TwoTier { .. } => self.row_cluster[i] as usize,
+        };
+        &self.codebooks[idx * CODEBOOK_SIZE..(idx + 1) * CODEBOOK_SIZE]
+    }
+
+    /// Packed codes of row `i`.
+    #[inline]
+    pub fn codes_of_row(&self, i: usize) -> &[u8] {
+        let cb = self.dim.div_ceil(2);
+        &self.codes[i * cb..(i + 1) * cb]
+    }
+
+    /// Total bytes, per the paper's accounting.
+    ///
+    /// * Rowwise: `N·d/2 + N·16·e` (`e` = 4 or 2 bytes per entry).
+    /// * TwoTier: `N·d/2 + N·log₂K/8 + 16·e·K`.
+    pub fn size_bytes(&self) -> usize {
+        let entry = match self.sb {
+            ScaleBiasDtype::F32 => 4,
+            ScaleBiasDtype::F16 => 2,
+        };
+        let codes = self.codes.len();
+        match self.kind {
+            CodebookKind::Rowwise => codes + self.rows * CODEBOOK_SIZE * entry,
+            CodebookKind::TwoTier { k } => {
+                let bits = (k.max(2) as f64).log2().ceil();
+                codes
+                    + (self.rows as f64 * bits / 8.0).ceil() as usize
+                    + CODEBOOK_SIZE * entry * k
+            }
+        }
+    }
+
+    /// De-quantize row `i` into `out`.
+    pub fn dequantize_row_into(&self, i: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        let cb = self.codebook_of_row(i);
+        let codes = self.codes_of_row(i);
+        for (j, o) in out.iter_mut().enumerate() {
+            let byte = codes[j / 2];
+            let code = if j % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            *o = cb[code as usize];
+        }
+    }
+
+    /// De-quantize the whole table (for evaluation).
+    pub fn dequantize(&self) -> EmbeddingTable {
+        let mut data = vec![0.0f32; self.rows * self.dim];
+        for i in 0..self.rows {
+            self.dequantize_row_into(i, &mut data[i * self.dim..(i + 1) * self.dim]);
+        }
+        EmbeddingTable::from_data(self.dim, data)
+    }
+}
+
+/// Pack nearest-codebook-entry indices, two per byte (low nibble first).
+fn pack_codes(row: &[f32], cb: &[f32], out: &mut [u8]) {
+    for (j, pair) in row.chunks(2).enumerate() {
+        let lo = nearest_code(cb, pair[0]) as u8;
+        let hi = if pair.len() > 1 { nearest_code(cb, pair[1]) as u8 } else { 0 };
+        out[j] = lo | (hi << 4);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mse(t: &EmbeddingTable, c: &CodebookTable) -> f64 {
+        let dq = c.dequantize();
+        t.data()
+            .iter()
+            .zip(dq.data())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+
+    #[test]
+    fn rowwise_exact_at_d16() {
+        // Paper Table 2: KMEANS loss is exactly 0 for d <= 16.
+        for d in [8usize, 16] {
+            let t = EmbeddingTable::randn(20, d, 11);
+            let c = t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32);
+            assert_eq!(mse(&t, &c), 0.0, "d={d}");
+        }
+    }
+
+    #[test]
+    fn rowwise_fp16_nearly_exact_at_d16() {
+        let t = EmbeddingTable::randn(20, 16, 12);
+        let c = t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F16);
+        // Loss is only the f16 rounding of the entries themselves.
+        let rel = mse(&t, &c).sqrt() / crate::util::stats::l2_sq(t.data()).sqrt();
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn size_matches_paper_formulas() {
+        let n = 64usize;
+        let d = 128usize;
+        let t = EmbeddingTable::randn(n, d, 13);
+        // Rowwise FP16: N*d/2 + N*32 -> ratio vs FP32 (4*N*d) = 18.75% at d=128.
+        let c = t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F16);
+        let ratio = c.size_bytes() as f64 / t.size_bytes() as f64;
+        assert!((ratio - 0.1875).abs() < 1e-9, "ratio={ratio}");
+        // TwoTier: N·d/2 + N·log2K/8 + 64K.
+        let k = 8usize;
+        let c = t.quantize_codebook(CodebookKind::TwoTier { k }, ScaleBiasDtype::F32);
+        let expect = n * d / 2 + (n as f64 * 3.0 / 8.0).ceil() as usize + 64 * k;
+        assert_eq!(c.size_bytes(), expect);
+    }
+
+    #[test]
+    fn rowwise_beats_twotier_in_error() {
+        // Table 2: KMEANS-CLS suffers larger loss — per-row codebooks fit
+        // better than shared ones.
+        let t = EmbeddingTable::randn(64, 64, 14);
+        let cr = t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32);
+        let ct = t.quantize_codebook(CodebookKind::TwoTier { k: 8 }, ScaleBiasDtype::F32);
+        assert!(mse(&t, &cr) < mse(&t, &ct));
+    }
+
+    #[test]
+    fn codes_round_trip_through_codebook() {
+        // Every de-quantized value must be an entry of the row's codebook.
+        let t = EmbeddingTable::randn(10, 32, 15);
+        let c = t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32);
+        let mut out = vec![0.0; c.dim()];
+        for i in 0..t.rows() {
+            let cb = c.codebook_of_row(i);
+            c.dequantize_row_into(i, &mut out);
+            for &v in &out {
+                assert!(cb.contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn odd_dim() {
+        let t = EmbeddingTable::randn(5, 9, 16);
+        let c = t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32);
+        let mut out = vec![0.0; 9];
+        c.dequantize_row_into(0, &mut out);
+        assert_eq!(out.len(), 9);
+    }
+}

@@ -1,0 +1,159 @@
+//! Plain FP32 embedding tables.
+
+use crate::quant::Quantizer;
+use crate::table::codebook::{CodebookKind, CodebookTable};
+use crate::table::fused::{FusedTable, ScaleBiasDtype};
+use crate::util::Rng;
+
+/// A dense `rows × dim` FP32 embedding table, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EmbeddingTable {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl EmbeddingTable {
+    /// Build from row-major data (`data.len()` must divide evenly by `dim`).
+    pub fn from_data(dim: usize, data: Vec<f32>) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(data.len() % dim, 0, "data not a multiple of dim");
+        EmbeddingTable { dim, data }
+    }
+
+    /// Zero-initialized table.
+    pub fn zeros(rows: usize, dim: usize) -> Self {
+        Self::from_data(dim, vec![0.0; rows * dim])
+    }
+
+    /// Table with i.i.d. `N(0, sigma²)` entries — the distribution of
+    /// trained embedding rows the paper's Figure 1 uses.
+    pub fn randn_sigma(rows: usize, dim: usize, sigma: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Self::from_data(dim, rng.normal_vec(rows * dim, sigma))
+    }
+
+    /// `N(0,1)` table (Figure-1 setup).
+    pub fn randn(rows: usize, dim: usize, seed: u64) -> Self {
+        Self::randn_sigma(rows, dim, 1.0, seed)
+    }
+
+    /// Uniform `[-a, a)` table (the usual embedding init `a = 1/√dim`).
+    pub fn rand_uniform(rows: usize, dim: usize, a: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * dim)
+            .map(|_| rng.uniform_in(-a as f64, a as f64) as f32)
+            .collect();
+        Self::from_data(dim, data)
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    /// Embedding dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// All data, row-major.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable access to all data.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Iterator over rows.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.dim)
+    }
+
+    /// Bytes of the FP32 representation.
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Quantize every row with `q` into a fused INT4/INT8 table.
+    pub fn quantize_fused(
+        &self,
+        q: &dyn Quantizer,
+        nbits: u32,
+        sb: ScaleBiasDtype,
+    ) -> FusedTable {
+        FusedTable::quantize(self, q, nbits, sb)
+    }
+
+    /// Quantize with a whole-table clip (the Figure-1 `TABLE` baseline):
+    /// one scale/bias shared by all rows.
+    pub fn quantize_fused_tablewise(
+        &self,
+        q: &dyn Quantizer,
+        nbits: u32,
+        sb: ScaleBiasDtype,
+    ) -> FusedTable {
+        FusedTable::quantize_tablewise(self, q, nbits, sb)
+    }
+
+    /// Quantize into a codebook table (`KMEANS` / `KMEANS-CLS`).
+    pub fn quantize_codebook(&self, kind: CodebookKind, sb: ScaleBiasDtype) -> CodebookTable {
+        CodebookTable::quantize(self, kind, sb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_access() {
+        let mut t = EmbeddingTable::zeros(4, 8);
+        assert_eq!(t.rows(), 4);
+        assert_eq!(t.dim(), 8);
+        t.row_mut(2)[3] = 5.0;
+        assert_eq!(t.row(2)[3], 5.0);
+        assert_eq!(t.size_bytes(), 4 * 8 * 4);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let a = EmbeddingTable::randn(10, 16, 7);
+        let b = EmbeddingTable::randn(10, 16, 7);
+        assert_eq!(a, b);
+        let c = EmbeddingTable::randn(10, 16, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_init_in_range() {
+        let t = EmbeddingTable::rand_uniform(100, 8, 0.25, 1);
+        assert!(t.data().iter().all(|&x| (-0.25..0.25).contains(&x)));
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of dim")]
+    fn bad_shape_panics() {
+        EmbeddingTable::from_data(3, vec![0.0; 7]);
+    }
+
+    #[test]
+    fn iter_rows_covers_all() {
+        let t = EmbeddingTable::randn(5, 4, 3);
+        let flat: Vec<f32> = t.iter_rows().flatten().copied().collect();
+        assert_eq!(flat, t.data());
+    }
+}

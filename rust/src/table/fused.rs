@@ -1,0 +1,364 @@
+//! Fused uniform-quantized rows: `[packed codes][scale][bias]`.
+//!
+//! The FBGEMM-style layout the paper ships in production. Each row is a
+//! contiguous byte span:
+//!
+//! ```text
+//! INT4:  [d/2 bytes, two codes per byte, low nibble = even column]
+//! INT8:  [d   bytes, one code per byte]
+//! tail:  [scale][bias]   (2+2 bytes FP16, or 4+4 bytes FP32)
+//! ```
+//!
+//! so one lookup streams exactly `row_bytes` contiguous bytes — this is
+//! what makes the INT4 `SparseLengthsSum` in Table 1 bandwidth-win over
+//! FP32 (8× fewer bytes per row, plus the tail).
+
+use crate::quant::{quantize_value, Clip, Quantizer};
+use crate::table::EmbeddingTable;
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+
+/// Precision of the per-row scale/bias tail (the paper's `(FP16)` flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleBiasDtype {
+    /// 4-byte scale + 4-byte bias.
+    F32,
+    /// 2-byte scale + 2-byte bias (halves the per-row overhead with no
+    /// measurable loss — paper Table 2, `GREEDY` vs `GREEDY (FP16)`).
+    F16,
+}
+
+impl ScaleBiasDtype {
+    /// Bytes used by the `[scale][bias]` tail.
+    pub fn tail_bytes(self) -> usize {
+        match self {
+            ScaleBiasDtype::F32 => 8,
+            ScaleBiasDtype::F16 => 4,
+        }
+    }
+}
+
+/// A uniform-quantized table with fused per-row scale/bias.
+#[derive(Clone, Debug)]
+pub struct FusedTable {
+    rows: usize,
+    dim: usize,
+    nbits: u32,
+    sb: ScaleBiasDtype,
+    row_bytes: usize,
+    data: Vec<u8>,
+}
+
+/// Bytes of packed codes for one row.
+fn packed_bytes(dim: usize, nbits: u32) -> usize {
+    match nbits {
+        4 => dim.div_ceil(2),
+        8 => dim,
+        _ => panic!("fused rows support 4 or 8 bits, got {nbits}"),
+    }
+}
+
+impl FusedTable {
+    /// Quantize `table` row-wise with clipping-threshold finder `q`.
+    pub fn quantize(
+        table: &EmbeddingTable,
+        q: &dyn Quantizer,
+        nbits: u32,
+        sb: ScaleBiasDtype,
+    ) -> FusedTable {
+        Self::quantize_impl(table, nbits, sb, |row| q.clip(row, nbits))
+    }
+
+    /// Quantize with a single whole-table clip (`TABLE` baseline).
+    pub fn quantize_tablewise(
+        table: &EmbeddingTable,
+        q: &dyn Quantizer,
+        nbits: u32,
+        sb: ScaleBiasDtype,
+    ) -> FusedTable {
+        let clip = q.clip(table.data(), nbits);
+        Self::quantize_impl(table, nbits, sb, |_| clip)
+    }
+
+    fn quantize_impl(
+        table: &EmbeddingTable,
+        nbits: u32,
+        sb: ScaleBiasDtype,
+        mut clip_of: impl FnMut(&[f32]) -> Clip,
+    ) -> FusedTable {
+        let dim = table.dim();
+        let row_bytes = packed_bytes(dim, nbits) + sb.tail_bytes();
+        let mut data = vec![0u8; table.rows() * row_bytes];
+        for (i, row) in table.iter_rows().enumerate() {
+            let clip = clip_of(row);
+            // Round the clip through the storage dtype *before* computing
+            // codes, so codes are optimal for the scale/bias actually
+            // stored (matters for FP16 tails).
+            let (scale, bias) = Self::stored_scale_bias(clip, nbits, sb);
+            let eff = Clip { xmin: bias, xmax: bias + scale * ((1u32 << nbits) - 1) as f32 };
+            let out = &mut data[i * row_bytes..(i + 1) * row_bytes];
+            match nbits {
+                4 => {
+                    for (j, pair) in row.chunks(2).enumerate() {
+                        let lo = quantize_value(pair[0], eff, 4) as u8;
+                        let hi = if pair.len() > 1 {
+                            quantize_value(pair[1], eff, 4) as u8
+                        } else {
+                            0
+                        };
+                        out[j] = lo | (hi << 4);
+                    }
+                }
+                8 => {
+                    for (j, &x) in row.iter().enumerate() {
+                        out[j] = quantize_value(x, eff, 8) as u8;
+                    }
+                }
+                _ => unreachable!(),
+            }
+            Self::write_tail(&mut out[packed_bytes(dim, nbits)..], scale, bias, sb);
+        }
+        FusedTable { rows: table.rows(), dim, nbits, sb, row_bytes, data }
+    }
+
+    /// The scale/bias a row will carry after rounding through `sb`.
+    fn stored_scale_bias(clip: Clip, nbits: u32, sb: ScaleBiasDtype) -> (f32, f32) {
+        let scale = clip.scale(nbits);
+        match sb {
+            ScaleBiasDtype::F32 => (scale, clip.xmin),
+            ScaleBiasDtype::F16 => (
+                f16_bits_to_f32(f32_to_f16_bits(scale)),
+                f16_bits_to_f32(f32_to_f16_bits(clip.xmin)),
+            ),
+        }
+    }
+
+    fn write_tail(tail: &mut [u8], scale: f32, bias: f32, sb: ScaleBiasDtype) {
+        match sb {
+            ScaleBiasDtype::F32 => {
+                tail[0..4].copy_from_slice(&scale.to_le_bytes());
+                tail[4..8].copy_from_slice(&bias.to_le_bytes());
+            }
+            ScaleBiasDtype::F16 => {
+                tail[0..2].copy_from_slice(&f32_to_f16_bits(scale).to_le_bytes());
+                tail[2..4].copy_from_slice(&f32_to_f16_bits(bias).to_le_bytes());
+            }
+        }
+    }
+
+    /// Construct from raw parts (deserialization).
+    pub(crate) fn from_raw(
+        rows: usize,
+        dim: usize,
+        nbits: u32,
+        sb: ScaleBiasDtype,
+        data: Vec<u8>,
+    ) -> FusedTable {
+        let row_bytes = packed_bytes(dim, nbits) + sb.tail_bytes();
+        assert_eq!(data.len(), rows * row_bytes, "raw data size mismatch");
+        FusedTable { rows, dim, nbits, sb, row_bytes, data }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Embedding dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// 4 or 8.
+    pub fn nbits(&self) -> u32 {
+        self.nbits
+    }
+
+    /// Scale/bias storage dtype.
+    pub fn scale_bias_dtype(&self) -> ScaleBiasDtype {
+        self.sb
+    }
+
+    /// Bytes per fused row.
+    pub fn row_bytes(&self) -> usize {
+        self.row_bytes
+    }
+
+    /// Total bytes (the paper's model-size numerator).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Raw bytes of row `i` (packed codes + tail).
+    #[inline]
+    pub fn row_raw(&self, i: usize) -> &[u8] {
+        &self.data[i * self.row_bytes..(i + 1) * self.row_bytes]
+    }
+
+    /// All raw bytes.
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Mutable raw bytes (incremental refresh path).
+    pub(crate) fn data_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    /// Decode the `[scale, bias]` tail of a raw row.
+    #[inline]
+    pub fn read_tail(&self, row_raw: &[u8]) -> (f32, f32) {
+        let t = &row_raw[packed_bytes(self.dim, self.nbits)..];
+        match self.sb {
+            ScaleBiasDtype::F32 => (
+                f32::from_le_bytes([t[0], t[1], t[2], t[3]]),
+                f32::from_le_bytes([t[4], t[5], t[6], t[7]]),
+            ),
+            ScaleBiasDtype::F16 => (
+                f16_bits_to_f32(u16::from_le_bytes([t[0], t[1]])),
+                f16_bits_to_f32(u16::from_le_bytes([t[2], t[3]])),
+            ),
+        }
+    }
+
+    /// De-quantize row `i` into `out` (`out.len() == dim`). This is the
+    /// scalar reference path; the optimized pooled readers live in
+    /// [`crate::sls`].
+    pub fn dequantize_row_into(&self, i: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        let raw = self.row_raw(i);
+        let (scale, bias) = self.read_tail(raw);
+        match self.nbits {
+            4 => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    let byte = raw[j / 2];
+                    let code = if j % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                    *o = scale * code as f32 + bias;
+                }
+            }
+            8 => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = scale * raw[j] as f32 + bias;
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// De-quantize row `i` (allocating).
+    pub fn dequantize_row(&self, i: usize) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        self.dequantize_row_into(i, &mut out);
+        out
+    }
+
+    /// De-quantize the whole table back to FP32 (for evaluation).
+    pub fn dequantize(&self) -> EmbeddingTable {
+        let mut data = vec![0.0f32; self.rows * self.dim];
+        for i in 0..self.rows {
+            self.dequantize_row_into(i, &mut data[i * self.dim..(i + 1) * self.dim]);
+        }
+        EmbeddingTable::from_data(self.dim, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{AsymQuantizer, GreedyQuantizer};
+
+    #[test]
+    fn row_bytes_match_paper_formulas() {
+        let t = EmbeddingTable::randn(10, 64, 1);
+        // INT4 FP32 tail: d/2 + 8.
+        let f = t.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F32);
+        assert_eq!(f.row_bytes(), 64 / 2 + 8);
+        // INT4 FP16 tail: d/2 + 4.
+        let f = t.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16);
+        assert_eq!(f.row_bytes(), 64 / 2 + 4);
+        // INT8 FP32 tail: d + 8.
+        let f = t.quantize_fused(&AsymQuantizer, 8, ScaleBiasDtype::F32);
+        assert_eq!(f.row_bytes(), 64 + 8);
+    }
+
+    #[test]
+    fn size_ratios_match_table3() {
+        // Paper Table 3 size column (4-bit / FP32), FP32 tails:
+        // d=8 -> 37.49%, d=128 -> 14.06%; FP16 tails: d=8 -> 24.99%,
+        // d=128 -> 13.28%; 8-bit FP32 tails: d=8 -> 49.98%.
+        for (d, sb, nbits, expect) in [
+            (8usize, ScaleBiasDtype::F32, 4u32, 0.375),
+            (128, ScaleBiasDtype::F32, 4, 0.140625),
+            (8, ScaleBiasDtype::F16, 4, 0.25),
+            (128, ScaleBiasDtype::F16, 4, 0.1328125),
+            (8, ScaleBiasDtype::F32, 8, 0.5),
+            (128, ScaleBiasDtype::F32, 8, 0.265625),
+        ] {
+            let t = EmbeddingTable::randn(100, d, 2);
+            let f = t.quantize_fused(&AsymQuantizer, nbits, sb);
+            let ratio = f.size_bytes() as f64 / t.size_bytes() as f64;
+            assert!((ratio - expect).abs() < 1e-9, "d={d} ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn dequant_error_bounded_by_half_scale() {
+        let t = EmbeddingTable::randn(50, 64, 3);
+        let f = t.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F32);
+        for i in 0..t.rows() {
+            let raw = f.row_raw(i);
+            let (scale, _) = f.read_tail(raw);
+            let dq = f.dequantize_row(i);
+            for (a, b) in t.row(i).iter().zip(&dq) {
+                assert!((a - b).abs() <= scale / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_better_than_int4() {
+        let t = EmbeddingTable::randn(20, 64, 4);
+        let e4 = table_mse(&t, &t.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F32));
+        let e8 = table_mse(&t, &t.quantize_fused(&AsymQuantizer, 8, ScaleBiasDtype::F32));
+        assert!(e8 < e4);
+    }
+
+    #[test]
+    fn fp16_tail_close_to_fp32_tail() {
+        // Table 2: GREEDY vs GREEDY (FP16) differ only in the 5th decimal.
+        let t = EmbeddingTable::randn(50, 64, 5);
+        let q = GreedyQuantizer::default();
+        let e32 = table_mse(&t, &t.quantize_fused(&q, 4, ScaleBiasDtype::F32));
+        let e16 = table_mse(&t, &t.quantize_fused(&q, 4, ScaleBiasDtype::F16));
+        assert!((e32.sqrt() - e16.sqrt()).abs() / e32.sqrt() < 0.01, "e32={e32} e16={e16}");
+    }
+
+    #[test]
+    fn odd_dim_packs() {
+        let t = EmbeddingTable::randn(4, 7, 6);
+        let f = t.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F32);
+        assert_eq!(f.row_bytes(), 4 + 8); // ceil(7/2) + tail
+        let dq = f.dequantize_row(1);
+        assert_eq!(dq.len(), 7);
+        let (scale, _) = f.read_tail(f.row_raw(1));
+        for (a, b) in t.row(1).iter().zip(&dq) {
+            assert!((a - b).abs() <= scale / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn tablewise_shares_scale() {
+        let t = EmbeddingTable::randn(8, 16, 7);
+        let f = t.quantize_fused_tablewise(&AsymQuantizer, 4, ScaleBiasDtype::F32);
+        let tails: Vec<(f32, f32)> = (0..8).map(|i| f.read_tail(f.row_raw(i))).collect();
+        assert!(tails.iter().all(|&x| x == tails[0]));
+    }
+
+    fn table_mse(t: &EmbeddingTable, f: &FusedTable) -> f64 {
+        let dq = f.dequantize();
+        t.data()
+            .iter()
+            .zip(dq.data())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+}

@@ -1,0 +1,26 @@
+//! Embedding-table storage.
+//!
+//! Three on-memory formats, matching what the paper's production system
+//! (Caffe2/FBGEMM) uses:
+//!
+//! * [`EmbeddingTable`] — plain FP32 rows (the training / baseline format).
+//! * [`FusedTable`] — uniform-quantized rows in the *fused* layout
+//!   `[packed codes][scale][bias]`, INT4 or INT8, scale/bias in FP32 or
+//!   FP16. One contiguous byte row per entity; the scale/bias travel with
+//!   the row so a lookup touches exactly one memory region.
+//! * [`CodebookTable`] — non-uniform 4-bit codes plus per-row
+//!   (`KMEANS`) or per-block (`KMEANS-CLS`) 16-entry codebooks.
+//!
+//! Size accounting follows the paper exactly; the Table-3 "size" column is
+//! [`FusedTable::size_bytes`] / [`EmbeddingTable::size_bytes`].
+
+pub mod codebook;
+pub mod embedding;
+pub mod fused;
+pub mod refresh;
+pub mod serial;
+
+pub use codebook::{CodebookKind, CodebookTable};
+pub use embedding::EmbeddingTable;
+pub use fused::{FusedTable, ScaleBiasDtype};
+pub use refresh::TableRefresher;

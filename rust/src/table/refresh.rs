@@ -1,0 +1,134 @@
+//! Incremental re-quantization for continuously trained models.
+//!
+//! The paper (§2) notes real recommendation applications "require
+//! continuous learning and thus periodic quantization for model serving"
+//! — the reason HIST-BRUTE's cost rules it out. Between two model
+//! snapshots, however, only the rows Adagrad actually touched (a Zipf
+//! head) change; re-quantizing *only those* makes the periodic refresh
+//! proportional to traffic, not table size.
+//!
+//! [`TableRefresher`] tracks dirty rows and patches the fused byte image
+//! in place, producing a table bit-identical to full re-quantization.
+
+use crate::quant::Quantizer;
+use crate::table::{EmbeddingTable, FusedTable, ScaleBiasDtype};
+
+/// Incremental fused-table maintainer.
+pub struct TableRefresher {
+    fused: FusedTable,
+    nbits: u32,
+    sb: ScaleBiasDtype,
+    dirty: Vec<bool>,
+    dirty_count: usize,
+}
+
+impl TableRefresher {
+    /// Quantize `table` fully and start tracking.
+    pub fn new(
+        table: &EmbeddingTable,
+        q: &dyn Quantizer,
+        nbits: u32,
+        sb: ScaleBiasDtype,
+    ) -> Self {
+        let fused = table.quantize_fused(q, nbits, sb);
+        let dirty = vec![false; table.rows()];
+        TableRefresher { fused, nbits, sb, dirty, dirty_count: 0 }
+    }
+
+    /// Mark a row as updated by training.
+    pub fn mark_dirty(&mut self, row: usize) {
+        if !self.dirty[row] {
+            self.dirty[row] = true;
+            self.dirty_count += 1;
+        }
+    }
+
+    /// Rows currently pending re-quantization.
+    pub fn dirty_rows(&self) -> usize {
+        self.dirty_count
+    }
+
+    /// The served fused table (always consistent with the last refresh).
+    pub fn fused(&self) -> &FusedTable {
+        &self.fused
+    }
+
+    /// Re-quantize only the dirty rows from the current FP32 `table`.
+    /// Returns how many rows were refreshed.
+    pub fn refresh(&mut self, table: &EmbeddingTable, q: &dyn Quantizer) -> usize {
+        assert_eq!(table.rows(), self.dirty.len());
+        assert_eq!(table.dim(), self.fused.dim());
+        let mut refreshed = 0;
+        for row in 0..table.rows() {
+            if !self.dirty[row] {
+                continue;
+            }
+            // Quantize this row alone into a 1-row table and splice its
+            // bytes into the image — identical arithmetic to the full
+            // path, so the result is bit-equal to requantizing everything.
+            let single = EmbeddingTable::from_data(table.dim(), table.row(row).to_vec());
+            let fused_row = single.quantize_fused(q, self.nbits, self.sb);
+            self.fused.patch_row(row, fused_row.row_raw(0));
+            self.dirty[row] = false;
+            refreshed += 1;
+        }
+        self.dirty_count = 0;
+        refreshed
+    }
+}
+
+impl FusedTable {
+    /// Overwrite one row's raw bytes (incremental refresh).
+    pub(crate) fn patch_row(&mut self, i: usize, raw: &[u8]) {
+        let rb = self.row_bytes();
+        assert_eq!(raw.len(), rb);
+        self.data_mut()[i * rb..(i + 1) * rb].copy_from_slice(raw);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GreedyQuantizer;
+    use crate::util::Rng;
+
+    #[test]
+    fn refresh_matches_full_requantization() {
+        let mut rng = Rng::new(71);
+        let mut table = EmbeddingTable::randn(100, 32, 72);
+        let q = GreedyQuantizer::default();
+        let mut refresher = TableRefresher::new(&table, &q, 4, ScaleBiasDtype::F16);
+        // Simulate a training burst touching 17 rows.
+        for _ in 0..17 {
+            let r = rng.below(100);
+            for v in table.row_mut(r) {
+                *v += (rng.normal() as f32) * 0.05;
+            }
+            refresher.mark_dirty(r);
+        }
+        assert!(refresher.dirty_rows() <= 17);
+        let n = refresher.refresh(&table, &q);
+        assert!(n <= 17);
+        assert_eq!(refresher.dirty_rows(), 0);
+        let full = table.quantize_fused(&q, 4, ScaleBiasDtype::F16);
+        assert_eq!(refresher.fused().data(), full.data(), "bit-identical to full path");
+    }
+
+    #[test]
+    fn untouched_rows_not_rewritten() {
+        let table = EmbeddingTable::randn(20, 16, 73);
+        let q = GreedyQuantizer::default();
+        let mut refresher = TableRefresher::new(&table, &q, 4, ScaleBiasDtype::F32);
+        assert_eq!(refresher.refresh(&table, &q), 0);
+    }
+
+    #[test]
+    fn marking_same_row_twice_counts_once() {
+        let table = EmbeddingTable::randn(10, 8, 74);
+        let q = GreedyQuantizer::default();
+        let mut r = TableRefresher::new(&table, &q, 4, ScaleBiasDtype::F32);
+        r.mark_dirty(3);
+        r.mark_dirty(3);
+        assert_eq!(r.dirty_rows(), 1);
+    }
+}

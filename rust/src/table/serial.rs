@@ -1,0 +1,323 @@
+//! Binary (de)serialization for table formats.
+//!
+//! A tiny self-describing container so quantized models survive the
+//! train → quantize → serve hand-off (`emberq quantize` writes these,
+//! `emberq serve` / the examples read them). Little-endian, versioned:
+//!
+//! ```text
+//! [8B magic "EMBQTBL1"][1B kind][header ...][payload ...]
+//! kind 0: FP32       header: rows u64, dim u64
+//! kind 1: Fused      header: rows u64, dim u64, nbits u8, sb u8
+//! kind 2: Codebook   header: rows u64, dim u64, scheme u8 (0 rowwise,
+//!                    1 two-tier), sb u8, k u64
+//! ```
+
+use std::io::{self, Read, Write};
+
+use crate::table::codebook::CodebookKind;
+use crate::table::{CodebookTable, EmbeddingTable, FusedTable, ScaleBiasDtype};
+
+const MAGIC: &[u8; 8] = b"EMBQTBL1";
+
+/// Any of the three table formats, for format-agnostic loading.
+pub enum AnyTable {
+    /// FP32.
+    F32(EmbeddingTable),
+    /// Uniform-quantized fused rows.
+    Fused(FusedTable),
+    /// Codebook-quantized.
+    Codebook(CodebookTable),
+}
+
+impl AnyTable {
+    /// Rows of whichever format.
+    pub fn rows(&self) -> usize {
+        match self {
+            AnyTable::F32(t) => t.rows(),
+            AnyTable::Fused(t) => t.rows(),
+            AnyTable::Codebook(t) => t.rows(),
+        }
+    }
+
+    /// Dim of whichever format.
+    pub fn dim(&self) -> usize {
+        match self {
+            AnyTable::F32(t) => t.dim(),
+            AnyTable::Fused(t) => t.dim(),
+            AnyTable::Codebook(t) => t.dim(),
+        }
+    }
+
+    /// Bytes of whichever format.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            AnyTable::F32(t) => t.size_bytes(),
+            AnyTable::Fused(t) => t.size_bytes(),
+            AnyTable::Codebook(t) => t.size_bytes(),
+        }
+    }
+}
+
+fn sb_code(sb: ScaleBiasDtype) -> u8 {
+    match sb {
+        ScaleBiasDtype::F32 => 0,
+        ScaleBiasDtype::F16 => 1,
+    }
+}
+
+fn sb_from(code: u8) -> io::Result<ScaleBiasDtype> {
+    match code {
+        0 => Ok(ScaleBiasDtype::F32),
+        1 => Ok(ScaleBiasDtype::F16),
+        _ => Err(bad("scale/bias dtype")),
+    }
+}
+
+fn bad(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("corrupt table file: {what}"))
+}
+
+fn w_u64<W: Write>(w: &mut W, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn r_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_u8<R: Read>(r: &mut R) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+/// Serialize an FP32 table.
+pub fn write_f32<W: Write>(w: &mut W, t: &EmbeddingTable) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&[0u8])?;
+    w_u64(w, t.rows() as u64)?;
+    w_u64(w, t.dim() as u64)?;
+    for &v in t.data() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Serialize a fused table.
+pub fn write_fused<W: Write>(w: &mut W, t: &FusedTable) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&[1u8])?;
+    w_u64(w, t.rows() as u64)?;
+    w_u64(w, t.dim() as u64)?;
+    w.write_all(&[t.nbits() as u8, sb_code(t.scale_bias_dtype())])?;
+    w.write_all(t.data())?;
+    Ok(())
+}
+
+/// Serialize a codebook table (codes, codebooks, cluster ids stored
+/// unpacked as u32 for simplicity; `size_bytes` still reports the packed
+/// accounting the paper uses).
+pub fn write_codebook<W: Write>(w: &mut W, t: &CodebookTable) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&[2u8])?;
+    w_u64(w, t.rows() as u64)?;
+    w_u64(w, t.dim() as u64)?;
+    let (scheme, k) = match t.kind() {
+        CodebookKind::Rowwise => (0u8, 0u64),
+        CodebookKind::TwoTier { k } => (1u8, k as u64),
+    };
+    w.write_all(&[scheme, sb_code(t.scale_bias_dtype())])?;
+    w_u64(w, k)?;
+    // Payload: codes, then codebooks, then (two-tier) cluster ids.
+    let code_bytes = t.dim().div_ceil(2);
+    for i in 0..t.rows() {
+        w.write_all(t.codes_of_row(i))?;
+    }
+    let n_books = match t.kind() {
+        CodebookKind::Rowwise => t.rows(),
+        CodebookKind::TwoTier { k } => k,
+    };
+    for b in 0..n_books {
+        let cb = match t.kind() {
+            CodebookKind::Rowwise => t.codebook_of_row(b),
+            CodebookKind::TwoTier { .. } => t.raw_codebook(b),
+        };
+        for &v in cb {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    if let CodebookKind::TwoTier { .. } = t.kind() {
+        for i in 0..t.rows() {
+            w.write_all(&t.cluster_of_row(i).to_le_bytes())?;
+        }
+    }
+    let _ = code_bytes;
+    Ok(())
+}
+
+/// Load any table format.
+pub fn read_any<R: Read>(r: &mut R) -> io::Result<AnyTable> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("magic"));
+    }
+    let kind = r_u8(r)?;
+    let rows = r_u64(r)? as usize;
+    let dim = r_u64(r)? as usize;
+    // Validate before any allocation: corrupted headers must not be able
+    // to request absurd buffers (fuzzed in rust/tests/fuzz_serial.rs).
+    const MAX_ELEMS: usize = 1 << 33; // 32 GiB of f32 — beyond any table here
+    match rows.checked_mul(dim) {
+        Some(n) if dim > 0 && n <= MAX_ELEMS => {}
+        _ => return Err(bad("shape")),
+    }
+    match kind {
+        0 => {
+            let mut data = vec![0.0f32; rows * dim];
+            let mut buf = [0u8; 4];
+            for v in data.iter_mut() {
+                r.read_exact(&mut buf)?;
+                *v = f32::from_le_bytes(buf);
+            }
+            Ok(AnyTable::F32(EmbeddingTable::from_data(dim, data)))
+        }
+        1 => {
+            let nbits = r_u8(r)? as u32;
+            if nbits != 4 && nbits != 8 {
+                return Err(bad("nbits"));
+            }
+            let sb = sb_from(r_u8(r)?)?;
+            let row_bytes = match nbits {
+                4 => dim.div_ceil(2),
+                _ => dim,
+            } + sb.tail_bytes();
+            let mut data = vec![0u8; rows * row_bytes];
+            r.read_exact(&mut data)?;
+            Ok(AnyTable::Fused(FusedTable::from_raw(rows, dim, nbits, sb, data)))
+        }
+        2 => {
+            let scheme = r_u8(r)?;
+            let sb = sb_from(r_u8(r)?)?;
+            let k = r_u64(r)? as usize;
+            // Tier-1 clusters can never exceed the row count; reject
+            // corrupted headers before the codebook allocation.
+            if scheme == 1 && (k == 0 || k > rows) {
+                return Err(bad("cluster count"));
+            }
+            let kind = match scheme {
+                0 => CodebookKind::Rowwise,
+                1 => CodebookKind::TwoTier { k },
+                _ => return Err(bad("scheme")),
+            };
+            let code_bytes = dim.div_ceil(2);
+            let mut codes = vec![0u8; rows * code_bytes];
+            r.read_exact(&mut codes)?;
+            let n_books = match kind {
+                CodebookKind::Rowwise => rows,
+                CodebookKind::TwoTier { k } => k,
+            };
+            let mut codebooks = vec![0.0f32; n_books * 16];
+            let mut buf = [0u8; 4];
+            for v in codebooks.iter_mut() {
+                r.read_exact(&mut buf)?;
+                *v = f32::from_le_bytes(buf);
+            }
+            let row_cluster = match kind {
+                CodebookKind::Rowwise => Vec::new(),
+                CodebookKind::TwoTier { .. } => {
+                    let mut cl = vec![0u32; rows];
+                    for v in cl.iter_mut() {
+                        r.read_exact(&mut buf)?;
+                        *v = u32::from_le_bytes(buf);
+                    }
+                    cl
+                }
+            };
+            Ok(AnyTable::Codebook(CodebookTable::from_raw(
+                rows, dim, kind, sb, codes, codebooks, row_cluster,
+            )))
+        }
+        _ => Err(bad("kind")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GreedyQuantizer;
+
+    #[test]
+    fn f32_round_trip() {
+        let t = EmbeddingTable::randn(7, 12, 21);
+        let mut buf = Vec::new();
+        write_f32(&mut buf, &t).unwrap();
+        match read_any(&mut buf.as_slice()).unwrap() {
+            AnyTable::F32(t2) => assert_eq!(t, t2),
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn fused_round_trip() {
+        let t = EmbeddingTable::randn(9, 32, 22);
+        let f = t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
+        let mut buf = Vec::new();
+        write_fused(&mut buf, &f).unwrap();
+        match read_any(&mut buf.as_slice()).unwrap() {
+            AnyTable::Fused(f2) => {
+                assert_eq!(f.data(), f2.data());
+                assert_eq!(f.dim(), f2.dim());
+                assert_eq!(f.nbits(), f2.nbits());
+                assert_eq!(f.dequantize().data(), f2.dequantize().data());
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn codebook_round_trip_rowwise() {
+        let t = EmbeddingTable::randn(6, 24, 23);
+        let c = t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32);
+        let mut buf = Vec::new();
+        write_codebook(&mut buf, &c).unwrap();
+        match read_any(&mut buf.as_slice()).unwrap() {
+            AnyTable::Codebook(c2) => {
+                assert_eq!(c.dequantize().data(), c2.dequantize().data());
+                assert_eq!(c.size_bytes(), c2.size_bytes());
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn codebook_round_trip_two_tier() {
+        let t = EmbeddingTable::randn(12, 16, 24);
+        let c = t.quantize_codebook(CodebookKind::TwoTier { k: 3 }, ScaleBiasDtype::F16);
+        let mut buf = Vec::new();
+        write_codebook(&mut buf, &c).unwrap();
+        match read_any(&mut buf.as_slice()).unwrap() {
+            AnyTable::Codebook(c2) => {
+                assert_eq!(c.dequantize().data(), c2.dequantize().data());
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let buf = vec![0u8; 64];
+        assert!(read_any(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let t = EmbeddingTable::randn(7, 12, 25);
+        let mut buf = Vec::new();
+        write_f32(&mut buf, &t).unwrap();
+        buf.truncate(buf.len() - 5);
+        assert!(read_any(&mut buf.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! Micro-benchmark harness used by the `rust/benches/*` targets.
+//!
+//! criterion is unavailable offline, so the benches use this
+//! deliberately simple measure-median-of-K loop: warmup, then K timed
+//! repetitions, report median and spread. Good enough to reproduce the
+//! *shape* of the paper's tables (who wins, by what factor).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Median repetition time.
+    pub median: Duration,
+    /// Fastest repetition.
+    pub min: Duration,
+    /// Slowest repetition.
+    pub max: Duration,
+}
+
+impl Measurement {
+    /// Median seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` once per repetition, `reps` times after `warmup` runs; the
+/// closure's return value is black-boxed so work can't be elided.
+pub fn measure<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Measurement {
+    assert!(reps > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times: Vec<Duration> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            black_box(f());
+            t0.elapsed()
+        })
+        .collect();
+    times.sort();
+    Measurement { median: times[times.len() / 2], min: times[0], max: times[times.len() - 1] }
+}
+
+/// Like [`measure`], but lets the caller run un-timed setup (e.g. an LLC
+/// flush) before each timed repetition.
+pub fn measure_with_setup<T>(
+    warmup: usize,
+    reps: usize,
+    mut setup: impl FnMut(),
+    mut f: impl FnMut() -> T,
+) -> Measurement {
+    assert!(reps > 0);
+    for _ in 0..warmup {
+        setup();
+        black_box(f());
+    }
+    let mut times: Vec<Duration> = (0..reps)
+        .map(|_| {
+            setup();
+            let t0 = Instant::now();
+            black_box(f());
+            t0.elapsed()
+        })
+        .collect();
+    times.sort();
+    Measurement { median: times[times.len() / 2], min: times[0], max: times[times.len() - 1] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let m = measure(1, 5, || (0..1000u64).sum::<u64>());
+        assert!(m.median > Duration::ZERO);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn setup_not_timed() {
+        // A slow setup must not inflate the measured time by its full cost.
+        let slow = Duration::from_millis(5);
+        let m = measure_with_setup(0, 3, || std::thread::sleep(slow), || 1 + 1);
+        assert!(m.median < slow, "{:?}", m.median);
+    }
+}

@@ -1,0 +1,151 @@
+//! IEEE-754 binary16 conversion, dependency-free.
+//!
+//! The paper's `(FP16)` method variants store per-row scales/biases and
+//! codebook entries in half precision. We implement round-to-nearest-even
+//! f32→f16 and exact f16→f32 by bit manipulation so fused rows match
+//! FBGEMM's on-disk layout without pulling in the `half` crate.
+
+/// Convert `f32` to binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN.
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Unbiased exponent.
+    let e = exp - 127;
+    if e > 15 {
+        // Overflow -> inf.
+        return sign | 0x7C00;
+    }
+    if e >= -14 {
+        // Normal f16. 10-bit mantissa; round to nearest even on bit 13.
+        let mant16 = mant >> 13;
+        let round_bit = (mant >> 12) & 1;
+        let sticky = mant & 0xFFF;
+        let mut out = sign as u32 | (((e + 15) as u32) << 10) | mant16;
+        if round_bit == 1 && (sticky != 0 || (mant16 & 1) == 1) {
+            out += 1; // may carry into exponent; that is correct rounding
+        }
+        return out as u16;
+    }
+    if e >= -24 {
+        // Subnormal f16.
+        let full = mant | 0x80_0000; // implicit leading 1
+        let shift = (-14 - e) as u32 + 13;
+        let mant16 = full >> shift;
+        let round_bit = (full >> (shift - 1)) & 1;
+        let sticky = full & ((1 << (shift - 1)) - 1);
+        let mut out = sign as u32 | mant16;
+        if round_bit == 1 && (sticky != 0 || (mant16 & 1) == 1) {
+            out += 1;
+        }
+        return out as u16;
+    }
+    // Underflow -> signed zero.
+    sign
+}
+
+/// Convert binary16 bits to `f32` (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: normalize.
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            sign | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip a value through f16 (the precision loss the `(FP16)`
+/// variants incur on scales/biases/codebooks).
+#[inline]
+pub fn f32_to_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values() {
+        for &(v, bits) in &[
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3C00),
+            (-1.0, 0xBC00),
+            (2.0, 0x4000),
+            (0.5, 0x3800),
+            (65504.0, 0x7BFF), // max finite f16
+        ] {
+            assert_eq!(f32_to_f16_bits(v), bits, "value {v}");
+            assert_eq!(f16_bits_to_f32(bits), v);
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xFC00);
+        assert!(f16_bits_to_f32(0x7C00).is_infinite());
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        let tiny = 6.0e-8f32; // in f16 subnormal range
+        let rt = f32_to_f16(tiny);
+        assert!((rt - tiny).abs() < 6.0e-8);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // f16 has 11 significand bits -> rel err <= 2^-11 for normals.
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..10_000 {
+            let x = (rng.uniform_in(-100.0, 100.0)) as f32;
+            if x.abs() < 1e-3 {
+                continue;
+            }
+            let rt = f32_to_f16(x);
+            assert!(
+                ((rt - x) / x).abs() <= 1.0 / 2048.0 + 1e-7,
+                "x={x} rt={rt}"
+            );
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 -> rounds to even (1.0).
+        let x = 1.0 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16(x), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 -> rounds to 1+2^-9.
+        let y = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f32_to_f16(y), 1.0 + 2.0 * 2f32.powi(-10));
+    }
+}

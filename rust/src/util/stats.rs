@@ -1,0 +1,85 @@
+//! Small statistics helpers used by the quantizers (ACIQ's distribution
+//! detection, the evaluation harness).
+
+/// Arithmetic mean. Returns 0 for empty input.
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Mean absolute deviation `E|X - E[X]|` (ACIQ's Laplace scale estimate).
+pub fn mean_abs_dev(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).abs()).sum::<f64>() / xs.len() as f64
+}
+
+/// Excess-free kurtosis `E[(X-μ)⁴]/σ⁴` (Gaussian: 3, Laplace: 6).
+/// Used by ACIQ's automatic distribution selection.
+pub fn kurtosis(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 3.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    if var <= 0.0 {
+        return 3.0;
+    }
+    let m4 = xs.iter().map(|&x| (x as f64 - m).powi(4)).sum::<f64>() / xs.len() as f64;
+    m4 / (var * var)
+}
+
+/// Squared ℓ2 norm.
+pub fn l2_sq(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kurtosis_gaussian_near_3() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.normal() as f32).collect();
+        let k = kurtosis(&xs);
+        assert!((k - 3.0).abs() < 0.25, "k={k}");
+    }
+
+    #[test]
+    fn kurtosis_laplace_near_6() {
+        let mut rng = Rng::new(12);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.laplace() as f32).collect();
+        let k = kurtosis(&xs);
+        assert!((k - 6.0).abs() < 0.8, "k={k}");
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(mean_abs_dev(&[]), 0.0);
+        assert_eq!(kurtosis(&[]), 3.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Robustness fuzzing of the table container format: random byte
+//! corruption, truncation, and random garbage must produce clean
+//! `Err`s — never panics, never absurd allocations — because `emberq
+//! serve` loads these files from operator-supplied paths.
+
+use emberq::quant::GreedyQuantizer;
+use emberq::table::serial::{read_any, write_codebook, write_f32, write_fused};
+use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+use emberq::util::Rng;
+
+fn valid_files() -> Vec<Vec<u8>> {
+    let t = EmbeddingTable::randn(8, 12, 1234);
+    let mut out = Vec::new();
+    let mut buf = Vec::new();
+    write_f32(&mut buf, &t).unwrap();
+    out.push(buf);
+    let mut buf = Vec::new();
+    write_fused(&mut buf, &t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16))
+        .unwrap();
+    out.push(buf);
+    let mut buf = Vec::new();
+    write_codebook(&mut buf, &t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32))
+        .unwrap();
+    out.push(buf);
+    let mut buf = Vec::new();
+    write_codebook(
+        &mut buf,
+        &t.quantize_codebook(CodebookKind::TwoTier { k: 3 }, ScaleBiasDtype::F16),
+    )
+    .unwrap();
+    out.push(buf);
+    out
+}
+
+#[test]
+fn all_valid_files_load() {
+    for (i, f) in valid_files().iter().enumerate() {
+        assert!(read_any(&mut f.as_slice()).is_ok(), "file {i}");
+    }
+}
+
+#[test]
+fn fuzz_single_byte_corruption() {
+    // Flip every byte of the header region (and a sample of the payload)
+    // to random values: must load-or-error, never panic. Shape fields are
+    // validated before allocation, so corrupted sizes cannot OOM.
+    let mut rng = Rng::new(0xF422);
+    for (fi, file) in valid_files().iter().enumerate() {
+        let header = file.len().min(40);
+        for pos in 0..header {
+            for _ in 0..4 {
+                let mut bad = file.clone();
+                bad[pos] = rng.next_u64() as u8;
+                let _ = read_any(&mut bad.as_slice()); // Ok or Err, both fine
+            }
+        }
+        for _ in 0..200 {
+            let mut bad = file.clone();
+            let pos = rng.below(bad.len());
+            bad[pos] ^= 1 << rng.below(8);
+            let _ = read_any(&mut bad.as_slice());
+        }
+        let _ = fi;
+    }
+}
+
+#[test]
+fn fuzz_truncation() {
+    for file in valid_files() {
+        for cut in 0..file.len().min(64) {
+            let mut short = file.clone();
+            short.truncate(cut);
+            assert!(read_any(&mut short.as_slice()).is_err(), "cut={cut}");
+        }
+        // Also mid-payload truncations.
+        for frac in [2usize, 3, 7] {
+            let mut short = file.clone();
+            short.truncate(file.len() - file.len() / frac);
+            assert!(read_any(&mut short.as_slice()).is_err());
+        }
+    }
+}
+
+#[test]
+fn fuzz_random_garbage() {
+    let mut rng = Rng::new(0xF423);
+    for _ in 0..500 {
+        let len = rng.below(256);
+        let garbage: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        assert!(read_any(&mut garbage.as_slice()).is_err());
+    }
+}
+
+#[test]
+fn huge_declared_shape_rejected_without_allocation() {
+    // Magic + kind 0 + rows=u64::MAX/8, dim=16: rows*dim overflows ->
+    // must error out before allocating.
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"EMBQTBL1");
+    buf.push(0);
+    buf.extend_from_slice(&(u64::MAX / 8).to_le_bytes());
+    buf.extend_from_slice(&16u64.to_le_bytes());
+    assert!(read_any(&mut buf.as_slice()).is_err());
+}

@@ -1,0 +1,144 @@
+//! Integration: the full train → quantize → evaluate pipeline (the
+//! paper's §5 experiment at test scale).
+
+use emberq::data::{CriteoConfig, SyntheticCriteo};
+use emberq::model::{Dlrm, DlrmConfig, QuantizedDlrm, Trainer, TrainerConfig};
+use emberq::quant::{AsymQuantizer, GreedyQuantizer, SymQuantizer};
+use emberq::table::{CodebookKind, ScaleBiasDtype};
+
+fn train_model(dim: usize, steps: usize) -> (Dlrm, Vec<emberq::data::ClickBatch>) {
+    let dcfg = CriteoConfig {
+        num_sparse: 4,
+        rows_per_table: 500,
+        ..Default::default()
+    };
+    let mcfg = DlrmConfig {
+        num_tables: 4,
+        rows_per_table: 500,
+        dim,
+        dense_dim: dcfg.dense_dim,
+        hidden: vec![64, 64],
+        seed: 77,
+    };
+    let mut model = Dlrm::new(mcfg);
+    let mut data = SyntheticCriteo::train(dcfg.clone());
+    Trainer::new(TrainerConfig { batch: 100, steps, log_every: steps, ..Default::default() })
+        .train(&mut model, &mut data);
+    let mut eval = SyntheticCriteo::eval(dcfg);
+    let batches = (0..6).map(|_| eval.next_batch(500)).collect();
+    (model, batches)
+}
+
+fn mean_loss(losses: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = losses.collect();
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+#[test]
+fn training_learns_then_quantization_stays_neutral() {
+    let (model, batches) = train_model(16, 500);
+    let fp32 = mean_loss(batches.iter().map(|b| model.eval_logloss(b)));
+    // The model must beat chance (labels ~46% positive -> logloss ~0.69).
+    assert!(fp32 < 0.67, "model did not learn: {fp32}");
+
+    // 4-bit GREEDY: Table-3 neutrality (<1% relative delta at d=16).
+    let q = QuantizedDlrm::from_uniform(&model, &GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
+    let ql = mean_loss(batches.iter().map(|b| q.eval_logloss(b)));
+    assert!(
+        (ql - fp32).abs() / fp32 < 0.01,
+        "greedy 4-bit not neutral: {fp32} -> {ql}"
+    );
+
+    // 8-bit ASYM: even tighter.
+    let q8 = QuantizedDlrm::from_uniform(&model, &AsymQuantizer, 8, ScaleBiasDtype::F32);
+    let ql8 = mean_loss(batches.iter().map(|b| q8.eval_logloss(b)));
+    assert!((ql8 - fp32).abs() / fp32 < 0.002, "asym 8-bit drifted: {fp32} -> {ql8}");
+}
+
+#[test]
+fn method_quality_ordering_survives_to_model_loss() {
+    // Row-wise GREEDY must degrade the model less than whole-table-clip
+    // quantization (the Figure-1 TABLE baseline) — the robust version of
+    // Table 3's ordering story. (GREEDY-vs-SYM deltas are noise-level at
+    // this scale because near-init embeddings stay zero-centered; the
+    // feature-level ordering is asserted in integration_quant.rs.)
+    let (model, batches) = train_model(32, 400);
+    let fp32 = mean_loss(batches.iter().map(|b| model.eval_logloss(b)));
+    let deg = |l: f64| (l - fp32).abs();
+    let greedy = mean_loss(batches.iter().map(|b| {
+        QuantizedDlrm::from_uniform(&model, &GreedyQuantizer::default(), 4, ScaleBiasDtype::F32)
+            .eval_logloss(b)
+    }));
+    // Whole-table clip: one scale/bias shared by all rows of each table.
+    let tablewise = emberq::model::QuantizedDlrm {
+        cfg: model.cfg.clone(),
+        tables: emberq::model::QuantTables::Fused(
+            model
+                .tables
+                .iter()
+                .map(|t| {
+                    t.quantize_fused_tablewise(&SymQuantizer, 4, ScaleBiasDtype::F32)
+                })
+                .collect(),
+        ),
+        mlp: model.mlp.clone(),
+    };
+    let tb = mean_loss(batches.iter().map(|b| tablewise.eval_logloss(b)));
+    assert!(
+        deg(greedy) < deg(tb),
+        "greedy deg {} vs tablewise deg {}",
+        deg(greedy),
+        deg(tb)
+    );
+    // And 4-bit GREEDY stays neutral (<1% relative).
+    assert!(deg(greedy) / fp32 < 0.01, "greedy not neutral: {}", deg(greedy) / fp32);
+}
+
+#[test]
+fn kmeans_exact_at_d16_model_level() {
+    // d=16 rows have <=16 distinct values: KMEANS reproduces the model
+    // bit-exactly (paper Table 3 "-" cells become identical loss).
+    let (model, batches) = train_model(16, 200);
+    let q = QuantizedDlrm::from_codebook(&model, CodebookKind::Rowwise, ScaleBiasDtype::F32);
+    for b in &batches {
+        assert!((q.eval_logloss(b) - model.eval_logloss(b)).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn size_ratios_at_model_level_match_paper() {
+    let (model, _) = train_model(32, 50);
+    // GREEDY(FP16) at d=32: paper says 15.62%.
+    let q = QuantizedDlrm::from_uniform(&model, &GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
+    let ratio = q.tables_bytes() as f64 / model.tables_bytes() as f64;
+    assert!((ratio - 0.15625).abs() < 1e-6, "ratio {ratio}");
+    // KMEANS(FP16) at d=32: paper says 37.50%.
+    let qk = QuantizedDlrm::from_codebook(&model, CodebookKind::Rowwise, ScaleBiasDtype::F16);
+    let ratio = qk.tables_bytes() as f64 / model.tables_bytes() as f64;
+    assert!((ratio - 0.375).abs() < 1e-6, "kmeans ratio {ratio}");
+}
+
+#[test]
+fn loss_curve_monotone_ish() {
+    // The training loss curve must show learning (first window > last).
+    let dcfg = CriteoConfig { num_sparse: 3, rows_per_table: 300, ..Default::default() };
+    let mcfg = DlrmConfig {
+        num_tables: 3,
+        rows_per_table: 300,
+        dim: 8,
+        dense_dim: dcfg.dense_dim,
+        hidden: vec![32],
+        seed: 5,
+    };
+    let mut model = Dlrm::new(mcfg);
+    let mut data = SyntheticCriteo::train(dcfg);
+    let report = Trainer::new(TrainerConfig {
+        batch: 100,
+        steps: 400,
+        log_every: 100,
+        ..Default::default()
+    })
+    .train(&mut model, &mut data);
+    assert!(report.loss_curve.len() >= 4);
+    assert!(report.final_loss < report.loss_curve[0].1);
+}

@@ -1,0 +1,120 @@
+//! Integration: quantization methods × table formats × SLS kernels
+//! working together on realistic (trained-statistics) tables.
+
+use emberq::eval::{normalized_l2_fused, normalized_l2_method};
+use emberq::quant::{method_by_name, Method};
+use emberq::sls::{sls_f32, sls_fused, SlsArgs};
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+use emberq::util::Rng;
+
+/// A table whose row statistics resemble Adagrad-trained embeddings: hot
+/// rows (low ranks) get larger magnitudes, cold rows stay near init.
+fn trained_like_table(rows: usize, dim: usize, seed: u64) -> EmbeddingTable {
+    let mut rng = Rng::new(seed);
+    let mut t = EmbeddingTable::zeros(rows, dim);
+    for r in 0..rows {
+        let heat = 1.0 / (1.0 + r as f64 / 50.0); // popularity decays with rank
+        let sigma = (0.02 + 0.3 * heat) as f32;
+        for v in t.row_mut(r) {
+            *v = (rng.normal() as f32) * sigma + (rng.uniform_in(-0.01, 0.01) as f32);
+        }
+    }
+    t
+}
+
+#[test]
+fn every_method_quantizes_trained_table() {
+    let t = trained_like_table(300, 64, 1);
+    for name in [
+        "TABLE", "ASYM", "SYM", "GSS", "HIST-APPRX", "HIST-BRUTE", "ACIQ", "GREEDY",
+        "KMEANS", "KMEANS-CLS",
+    ] {
+        let m = method_by_name(name).unwrap();
+        let l2 = normalized_l2_method(&t, &m, 4, ScaleBiasDtype::F32);
+        assert!(l2.is_finite() && l2 >= 0.0, "{name}: {l2}");
+        assert!(l2 < 0.5, "{name}: unreasonable loss {l2}");
+    }
+}
+
+#[test]
+fn paper_method_ranking_on_trained_stats() {
+    // Table 2's qualitative story on trained-like rows: GREEDY <= ASYM,
+    // KMEANS best, SYM worst of the row-wise methods.
+    let t = trained_like_table(200, 64, 2);
+    let loss = |n: &str| {
+        normalized_l2_method(&t, &method_by_name(n).unwrap(), 4, ScaleBiasDtype::F32)
+    };
+    let (greedy, asym, sym, kmeans) = (loss("GREEDY"), loss("ASYM"), loss("SYM"), loss("KMEANS"));
+    assert!(greedy <= asym + 1e-9, "greedy {greedy} vs asym {asym}");
+    assert!(kmeans < greedy, "kmeans {kmeans} vs greedy {greedy}");
+    assert!(sym > asym, "sym {sym} vs asym {asym}");
+}
+
+#[test]
+fn fp16_tails_cost_nothing_measurable() {
+    let t = trained_like_table(200, 32, 3);
+    let m = method_by_name("GREEDY").unwrap();
+    let l32 = normalized_l2_method(&t, &m, 4, ScaleBiasDtype::F32);
+    let l16 = normalized_l2_method(&t, &m, 4, ScaleBiasDtype::F16);
+    assert!((l16 - l32).abs() / l32 < 0.01, "{l32} vs {l16}");
+}
+
+#[test]
+fn quantized_sls_tracks_fp32_sls() {
+    // End-to-end: quantize -> pooled lookups -> compare against FP32
+    // pooling. Pooling does not shrink *relative* error (signal and noise
+    // both grow ~sqrt(L)), so the pooled relative error matches the
+    // row-level normalized l2 — Table 2 says ~6% for 4-bit GREEDY; we
+    // bound at 12%.
+    let t = trained_like_table(500, 64, 4);
+    let Method::Uniform(q) = method_by_name("GREEDY").unwrap() else {
+        unreachable!()
+    };
+    let f = t.quantize_fused(q.as_ref(), 4, ScaleBiasDtype::F16);
+    let mut rng = Rng::new(5);
+    let lengths: Vec<u32> = (0..20).map(|_| 1 + rng.below(30) as u32).collect();
+    let total: usize = lengths.iter().map(|&l| l as usize).sum();
+    // Zipf-ish: favor hot rows like production traffic.
+    let indices: Vec<u32> = (0..total)
+        .map(|_| ((rng.uniform().powi(3) * 500.0) as u32).min(499))
+        .collect();
+    let args = SlsArgs::new(&indices, &lengths, 500).unwrap();
+    let mut exact = vec![0.0f32; 20 * 64];
+    let mut quant = exact.clone();
+    sls_f32(&t, &args, &mut exact);
+    sls_fused(&f, &args, &mut quant);
+    let num: f64 = exact.iter().zip(&quant).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+    let den: f64 = exact.iter().map(|&a| (a as f64).powi(2)).sum();
+    assert!((num / den.max(1e-12)).sqrt() < 0.12, "rel {}", (num / den).sqrt());
+}
+
+#[test]
+fn eight_bit_baseline_is_order_of_magnitude_tighter() {
+    // ASYM-8BITS vs 4-bit methods: Table 2 shows ~15x lower loss.
+    let t = trained_like_table(200, 64, 6);
+    let Method::Uniform(q) = method_by_name("ASYM").unwrap() else {
+        unreachable!()
+    };
+    let l8 = normalized_l2_fused(&t, &t.quantize_fused(q.as_ref(), 8, ScaleBiasDtype::F32));
+    let l4 = normalized_l2_fused(&t, &t.quantize_fused(q.as_ref(), 4, ScaleBiasDtype::F32));
+    assert!(l4 / l8 > 8.0, "l4 {l4} l8 {l8}");
+}
+
+#[test]
+fn greedy_opt_explores_further() {
+    // Fig 1's GREEDY (opt): larger b/r never loses on average.
+    let mut sum_def = 0.0;
+    let mut sum_opt = 0.0;
+    for seed in 0..10 {
+        let t = trained_like_table(50, 128, 100 + seed);
+        sum_def +=
+            normalized_l2_method(&t, &method_by_name("GREEDY").unwrap(), 4, ScaleBiasDtype::F32);
+        sum_opt += normalized_l2_method(
+            &t,
+            &method_by_name("GREEDY-OPT").unwrap(),
+            4,
+            ScaleBiasDtype::F32,
+        );
+    }
+    assert!(sum_opt <= sum_def * 1.001, "opt {sum_opt} vs def {sum_def}");
+}

@@ -1,0 +1,202 @@
+//! Integration: the PJRT runtime executing AOT artifacts lowered from
+//! JAX/Pallas — the L1/L2/L3 composition proof.
+//!
+//! Requires `make artifacts`. The MLP artifact is checked *numerically*
+//! against the Rust-native MLP on identical weights: the same weights must
+//! produce the same logits whether the math runs in Rust or in the
+//! XLA-compiled graph.
+
+use std::path::Path;
+
+use emberq::model::{Dlrm, DlrmConfig};
+use emberq::runtime::PjrtRuntime;
+use emberq::util::Rng;
+
+const MANIFEST_DIR: &str = env!("CARGO_MANIFEST_DIR");
+
+fn artifact(name: &str) -> std::path::PathBuf {
+    Path::new(MANIFEST_DIR).join("artifacts").join(name)
+}
+
+fn require_artifacts() -> bool {
+    let ok = artifact("mlp_b1.hlo.txt").exists();
+    if !ok {
+        eprintln!("skipping: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+/// Build (inputs, model) for the MLP artifact at the given batch.
+fn mlp_inputs(batch: usize) -> (Vec<f32>, Dlrm) {
+    // Shapes fixed by python/compile/aot.py.
+    let (num_tables, dim, dense_dim) = (8usize, 32usize, 13usize);
+    let feature_dim = num_tables * dim + dense_dim;
+    let model = Dlrm::new(DlrmConfig {
+        num_tables,
+        rows_per_table: 4,
+        dim,
+        dense_dim,
+        hidden: vec![512, 512],
+        seed: 123,
+    });
+    let mut rng = Rng::new(9);
+    let features: Vec<f32> = (0..batch * feature_dim)
+        .map(|_| (rng.normal() as f32) * 0.3)
+        .collect();
+    (features, model)
+}
+
+fn run_mlp(rt: &mut PjrtRuntime, batch: usize, features: &[f32], model: &Dlrm) -> Vec<f32> {
+    let feature_dim = model.cfg.feature_dim();
+    let mut inputs: Vec<(&[f32], Vec<usize>)> =
+        vec![(features, vec![batch, feature_dim])];
+    for layer in &model.mlp.layers {
+        inputs.push((layer.w.as_slice(), vec![layer.d_out, layer.d_in]));
+        inputs.push((layer.b.as_slice(), vec![layer.d_out]));
+    }
+    let borrowed: Vec<(&[f32], &[usize])> =
+        inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+    let name = format!("mlp_b{batch}.hlo.txt");
+    let out = rt.execute_f32(&artifact(&name), &borrowed).expect("execute MLP");
+    assert_eq!(out.len(), 1, "single tuple element");
+    out.into_iter().next().unwrap()
+}
+
+#[test]
+fn pjrt_mlp_matches_rust_native_mlp() {
+    if !require_artifacts() {
+        return;
+    }
+    let mut rt = PjrtRuntime::cpu().expect("cpu client");
+    for batch in [1usize, 16, 64] {
+        let (features, model) = mlp_inputs(batch);
+        let pjrt_logits = run_mlp(&mut rt, batch, &features, &model);
+        assert_eq!(pjrt_logits.len(), batch);
+        let rust_logits = model.mlp.forward(&features, batch);
+        for (i, (a, b)) in pjrt_logits.iter().zip(&rust_logits).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3 + 1e-3 * b.abs(),
+                "batch {batch} logit {i}: pjrt {a} vs rust {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    if !require_artifacts() {
+        return;
+    }
+    let mut rt = PjrtRuntime::cpu().expect("cpu client");
+    let (features, model) = mlp_inputs(1);
+    run_mlp(&mut rt, 1, &features, &model);
+    assert_eq!(rt.cached(), 1);
+    run_mlp(&mut rt, 1, &features, &model);
+    assert_eq!(rt.cached(), 1, "second run must not recompile");
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let mut rt = match PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(_) => return,
+    };
+    let err = rt.load(Path::new("artifacts/definitely_not_there.hlo.txt"));
+    assert!(err.is_err());
+    let msg = format!("{}", err.unwrap_err());
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn dlrm_int4_artifact_executes_with_pallas_sls_inside() {
+    // The fused Pallas-SLS + MLP graph: feed a tiny quantized table and
+    // check the PJRT result against Rust-side dequant + pooling + MLP.
+    if !require_artifacts() {
+        return;
+    }
+    let path = artifact("dlrm_int4.hlo.txt");
+    // Shapes fixed by aot.py: 4 tables × 256 rows, d=32, B=16, L=8.
+    let (t, n, d, b, l, dense_dim) = (4usize, 256usize, 32usize, 16usize, 8usize, 13usize);
+    let mut rng = Rng::new(10);
+    let packed_u8: Vec<u8> = (0..t * n * d / 2).map(|_| rng.next_u64() as u8).collect();
+    let scale: Vec<f32> = (0..t * n).map(|_| 0.01 + rng.uniform() as f32 * 0.05).collect();
+    let bias: Vec<f32> = (0..t * n).map(|_| -(rng.uniform() as f32) * 0.5).collect();
+    let indices_i32: Vec<i32> = (0..b * t * l)
+        .map(|i| {
+            let table = (i / l) % t;
+            (table * n) as i32 + rng.below(n) as i32
+        })
+        .collect();
+    let weights: Vec<f32> = (0..b * t * l)
+        .map(|_| if rng.uniform() < 0.7 { 1.0 } else { 0.0 })
+        .collect();
+    let dense: Vec<f32> = (0..b * dense_dim).map(|_| rng.normal() as f32).collect();
+    let feature_dim = t * d + dense_dim;
+    let model = Dlrm::new(DlrmConfig {
+        num_tables: t,
+        rows_per_table: 4,
+        dim: d,
+        dense_dim,
+        hidden: vec![512, 512],
+        seed: 124,
+    });
+
+    use emberq::runtime::InputBuf;
+    let mut rt = PjrtRuntime::cpu().expect("cpu client");
+    let table_shape = [t * n, d / 2];
+    let row_shape = [t * n];
+    let idx_shape = [b, t, l];
+    let dense_shape = [b, dense_dim];
+    let mut inputs: Vec<(InputBuf, &[usize])> = vec![
+        (InputBuf::U8(&packed_u8), &table_shape),
+        (InputBuf::F32(&scale), &row_shape),
+        (InputBuf::F32(&bias), &row_shape),
+        (InputBuf::I32(&indices_i32), &idx_shape),
+        (InputBuf::F32(&weights), &idx_shape),
+        (InputBuf::F32(&dense), &dense_shape),
+    ];
+    let layer_shapes: Vec<([usize; 2], [usize; 1])> = model
+        .mlp
+        .layers
+        .iter()
+        .map(|layer| ([layer.d_out, layer.d_in], [layer.d_out]))
+        .collect();
+    for (layer, (ws, bs)) in model.mlp.layers.iter().zip(&layer_shapes) {
+        inputs.push((InputBuf::F32(&layer.w), ws));
+        inputs.push((InputBuf::F32(&layer.b), bs));
+    }
+    let out = rt.execute_mixed(&path, &inputs).expect("execute dlrm_int4");
+    let logits = out.into_iter().next().unwrap();
+    assert_eq!(logits.len(), b);
+
+    // Rust reference: dequantize, pool with weights, concat dense, MLP.
+    let mut features = vec![0.0f32; b * feature_dim];
+    for bi in 0..b {
+        for ti in 0..t {
+            for li in 0..l {
+                let flat = (bi * t + ti) * l + li;
+                let w = weights[flat];
+                if w == 0.0 {
+                    continue;
+                }
+                let row = indices_i32[flat] as usize;
+                let s = scale[row];
+                let bs = bias[row];
+                for j in 0..d {
+                    let byte = packed_u8[row * d / 2 + j / 2];
+                    let code = if j % 2 == 0 { byte & 0xF } else { byte >> 4 };
+                    features[bi * feature_dim + ti * d + j] += w * (s * code as f32 + bs);
+                }
+            }
+        }
+        features[bi * feature_dim + t * d..bi * feature_dim + feature_dim]
+            .copy_from_slice(&dense[bi * dense_dim..(bi + 1) * dense_dim]);
+    }
+    let want = model.mlp.forward(&features, b);
+    for (i, (a, w)) in logits.iter().zip(&want).enumerate() {
+        assert!(
+            (a - w).abs() < 1e-2 + 1e-2 * w.abs(),
+            "logit {i}: pjrt {a} vs rust {w}"
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration: the serving stack (router + batcher + worker pool) over
+//! every table format, with metrics accounting.
+
+use emberq::coordinator::{BatchPolicy, EmbeddingServer, ServerConfig, TableSet};
+use emberq::data::trace::{Request, RequestTrace, TraceConfig};
+use emberq::quant::{AsymQuantizer, GreedyQuantizer};
+use emberq::table::serial::AnyTable;
+use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+
+fn fp32_tables(n: usize, rows: usize, dim: usize) -> Vec<EmbeddingTable> {
+    (0..n)
+        .map(|t| EmbeddingTable::randn_sigma(rows, dim, 0.1, 8800 + t as u64))
+        .collect()
+}
+
+#[test]
+fn all_formats_serve_consistent_results() {
+    let fp32 = fp32_tables(4, 200, 16);
+    let trace = RequestTrace::generate(&TraceConfig {
+        requests: 50,
+        num_tables: 4,
+        rows: 200,
+        mean_pool: 5,
+        zipf_alpha: 1.1,
+        seed: 3,
+    });
+    // FP32 server is the reference.
+    let mk = |tables: Vec<AnyTable>| {
+        EmbeddingServer::start(
+            TableSet::new(tables),
+            ServerConfig { shards: 2, ..Default::default() },
+        )
+    };
+    let ref_server = mk(fp32.iter().cloned().map(AnyTable::F32).collect());
+    let int4_server = mk(fp32
+        .iter()
+        .map(|t| AnyTable::Fused(t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16)))
+        .collect());
+    let cb_server = mk(fp32
+        .iter()
+        .map(|t| AnyTable::Codebook(t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32)))
+        .collect());
+
+    for req in trace.requests.iter().take(20) {
+        let want = ref_server.lookup(req);
+        for (name, server) in [("int4", &int4_server), ("codebook", &cb_server)] {
+            let got = server.lookup(req);
+            let pool: usize = req.ids.iter().map(Vec::len).sum();
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    (w - g).abs() < 0.05 * pool as f32 + 0.05,
+                    "{name} diverged at {i}: {w} vs {g}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn int4_serves_from_a_fraction_of_the_bytes() {
+    let fp32 = fp32_tables(4, 1000, 64);
+    let f32_set = TableSet::new(fp32.iter().cloned().map(AnyTable::F32).collect());
+    let int4_set = TableSet::new(
+        fp32.iter()
+            .map(|t| {
+                AnyTable::Fused(t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16))
+            })
+            .collect(),
+    );
+    let ratio = int4_set.size_bytes() as f64 / f32_set.size_bytes() as f64;
+    assert!((ratio - 0.140625).abs() < 1e-6, "d=64 FP16 ratio {ratio}"); // paper 14.06%
+}
+
+#[test]
+fn metrics_account_for_every_request_and_lookup() {
+    let fp32 = fp32_tables(3, 100, 8);
+    let server = EmbeddingServer::start(
+        TableSet::new(
+            fp32.iter()
+                .map(|t| AnyTable::Fused(t.quantize_fused(&AsymQuantizer, 8, ScaleBiasDtype::F32)))
+                .collect(),
+        ),
+        ServerConfig {
+            shards: 3,
+            queue_depth: 4,
+            batch: BatchPolicy { max_batch: 7, ..Default::default() },
+        },
+    );
+    let trace = RequestTrace::generate(&TraceConfig {
+        requests: 33,
+        num_tables: 3,
+        rows: 100,
+        mean_pool: 4,
+        zipf_alpha: 1.05,
+        seed: 11,
+    });
+    let m = server.serve_trace(&trace);
+    assert_eq!(m.requests, 33);
+    assert_eq!(m.lookups as usize, trace.total_lookups());
+    assert_eq!(m.batches, 5); // ceil(33/7)
+    assert_eq!(m.latency.count(), 33);
+    let (p50, _, p99) = m.latency.percentiles();
+    assert!(p50 <= p99);
+    assert!(m.throughput() > 0.0);
+}
+
+#[test]
+fn empty_pools_and_hot_rows() {
+    // Degenerate requests: all-empty pools, and all requests hammering
+    // one row.
+    let fp32 = fp32_tables(2, 10, 4);
+    let server = EmbeddingServer::start(
+        TableSet::new(fp32.iter().cloned().map(AnyTable::F32).collect()),
+        ServerConfig { shards: 2, ..Default::default() },
+    );
+    let empty = Request { ids: vec![vec![], vec![]] };
+    assert!(server.lookup(&empty).iter().all(|&v| v == 0.0));
+    let hot = Request { ids: vec![vec![3; 50], vec![3; 50]] };
+    let out = server.lookup(&hot);
+    for j in 0..4 {
+        let want = 50.0 * fp32[0].row(3)[j];
+        assert!((out[j] - want).abs() < 1e-3, "{} vs {}", out[j], want);
+    }
+}
+
+#[test]
+fn many_shards_more_than_tables() {
+    // More shards than tables must still work (idle shards).
+    let fp32 = fp32_tables(2, 50, 8);
+    let server = EmbeddingServer::start(
+        TableSet::new(fp32.iter().cloned().map(AnyTable::F32).collect()),
+        ServerConfig { shards: 8, ..Default::default() },
+    );
+    let req = Request { ids: vec![vec![1, 2, 3], vec![4]] };
+    assert_eq!(server.lookup(&req).len(), 16);
+}

@@ -1,0 +1,118 @@
+//! Property-based tests for the coordinator: random routing/batching/
+//! serving configurations must preserve the core invariants (exact
+//! partitioning, order preservation, result equivalence with direct SLS).
+
+use emberq::coordinator::{BatchPolicy, Batcher, EmbeddingServer, Router, ServerConfig, TableSet};
+use emberq::data::trace::Request;
+use emberq::quant::AsymQuantizer;
+use emberq::table::serial::AnyTable;
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+use emberq::util::Rng;
+
+fn random_request(rng: &mut Rng, num_tables: usize, rows: usize) -> Request {
+    Request {
+        ids: (0..num_tables)
+            .map(|_| {
+                let len = rng.below(10); // may be zero
+                (0..len).map(|_| rng.below(rows) as u32).collect()
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn prop_router_partitions_every_table_exactly_once() {
+    let mut rng = Rng::new(0xB0);
+    for _ in 0..200 {
+        let tables = 1 + rng.below(40);
+        let shards = 1 + rng.below(8);
+        let r = Router::round_robin(tables, shards);
+        let req = random_request(&mut rng, tables, 100);
+        let plans = r.plan(&req);
+        let mut seen = vec![0u32; tables];
+        for (s, p) in plans.iter().enumerate() {
+            for (t, ids) in &p.lookups {
+                assert_eq!(r.shard_of(*t), s);
+                assert_eq!(ids, &req.ids[*t]);
+                seen[*t] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+}
+
+#[test]
+fn prop_router_balance_bound() {
+    // Round-robin: shard loads differ by at most one table.
+    let mut rng = Rng::new(0xB1);
+    for _ in 0..100 {
+        let tables = 1 + rng.below(64);
+        let shards = 1 + rng.below(16);
+        let r = Router::round_robin(tables, shards);
+        let loads: Vec<usize> = (0..shards).map(|s| r.tables_of_shard(s).len()).collect();
+        let (min, max) = (loads.iter().min().unwrap(), loads.iter().max().unwrap());
+        assert!(max - min <= 1, "{loads:?}");
+    }
+}
+
+#[test]
+fn prop_batcher_preserves_order_and_items() {
+    let mut rng = Rng::new(0xB2);
+    for _ in 0..50 {
+        let n = 1 + rng.below(200);
+        let max_batch = 1 + rng.below(32);
+        let (tx, rx) = std::sync::mpsc::sync_channel(n.max(1));
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch, max_wait: std::time::Duration::from_micros(100) },
+        );
+        let mut got = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(!batch.is_empty() && batch.len() <= max_batch);
+            got.extend(batch);
+        }
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn prop_server_equals_sequential_reference() {
+    // Whatever the shard count, queue depth, or batch grouping, the
+    // server must return exactly what direct TableSet pooling returns.
+    let mut rng = Rng::new(0xB3);
+    for case in 0..20 {
+        let num_tables = 1 + rng.below(6);
+        let rows = 20 + rng.below(100);
+        let dim = [4usize, 8, 16][rng.below(3)];
+        let shards = 1 + rng.below(4);
+        let mk_tables = || -> Vec<AnyTable> {
+            (0..num_tables)
+                .map(|t| {
+                    let tab = EmbeddingTable::randn(rows, dim, 7000 + case * 100 + t as u64);
+                    AnyTable::Fused(tab.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F32))
+                })
+                .collect()
+        };
+        let reference = TableSet::new(mk_tables());
+        let server = EmbeddingServer::start(
+            TableSet::new(mk_tables()),
+            ServerConfig { shards, queue_depth: 1 + rng.below(16), ..Default::default() },
+        );
+        let reqs: Vec<Request> =
+            (0..1 + rng.below(20)).map(|_| random_request(&mut rng, num_tables, rows)).collect();
+        let mut out = vec![0.0f32; reqs.len() * num_tables * dim];
+        server.lookup_batch_into(&reqs, &mut out);
+        for (s, req) in reqs.iter().enumerate() {
+            for (t, ids) in req.ids.iter().enumerate() {
+                let mut want = vec![0.0f32; dim];
+                reference.pool(t, ids, &mut want);
+                let got = &out[s * num_tables * dim + t * dim..s * num_tables * dim + (t + 1) * dim];
+                assert_eq!(got, want.as_slice(), "case {case} slot {s} table {t}");
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Property-based tests for the quantizers: randomized inputs over many
+//! seeds, asserting the invariants every method must satisfy regardless
+//! of the data. (Hand-rolled property loop — the crate builds offline
+//! with no test-framework dependencies; 200 cases per property.)
+
+use emberq::quant::{
+    all_uniform, quant_dequant, quant_sq_error, AsymQuantizer, GreedyQuantizer,
+    KmeansQuantizer, Quantizer,
+};
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+use emberq::util::Rng;
+
+const CASES: u64 = 200;
+
+/// Random row generator covering the regimes that break quantizers:
+/// scale varies over 6 orders of magnitude, mean offsets, heavy tails,
+/// near-constant rows, tiny dims.
+fn random_row(rng: &mut Rng) -> Vec<f32> {
+    let d = [1, 2, 3, 8, 16, 33, 64, 128, 200][rng.below(9)];
+    let sigma = 10f64.powf(rng.uniform_in(-3.0, 3.0));
+    let mu = rng.uniform_in(-10.0, 10.0);
+    let heavy = rng.uniform() < 0.3;
+    let near_const = rng.uniform() < 0.1;
+    (0..d)
+        .map(|_| {
+            if near_const {
+                mu as f32 + (rng.uniform() as f32) * 1e-6
+            } else if heavy {
+                (mu + sigma * rng.laplace().powi(3)) as f32
+            } else {
+                (mu + sigma * rng.normal()) as f32
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_clip_finite_and_ordered() {
+    let mut rng = Rng::new(0xA0);
+    for case in 0..CASES {
+        let row = random_row(&mut rng);
+        for q in all_uniform() {
+            let c = q.clip(&row, 4);
+            assert!(c.xmin.is_finite() && c.xmax.is_finite(), "{} case {case}", q.name());
+            assert!(c.xmin <= c.xmax, "{} case {case}: {c:?}", q.name());
+        }
+    }
+}
+
+#[test]
+fn prop_dequant_within_clip_bounds() {
+    // Reconstructed values never escape [xmin, xmax] (+ float slack).
+    let mut rng = Rng::new(0xA1);
+    for _ in 0..CASES {
+        let row = random_row(&mut rng);
+        for q in all_uniform() {
+            let c = q.clip(&row, 4);
+            let slack = (c.xmax - c.xmin).abs() * 1e-5 + 1e-6;
+            for v in quant_dequant(&row, c, 4) {
+                assert!(
+                    v >= c.xmin - slack && v <= c.xmax + slack,
+                    "{}: {v} outside [{}, {}]",
+                    q.name(),
+                    c.xmin,
+                    c.xmax
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_greedy_never_worse_than_asym() {
+    // The paper's construction guarantee, on arbitrary data.
+    let mut rng = Rng::new(0xA2);
+    for case in 0..CASES {
+        let row = random_row(&mut rng);
+        let eg = quant_sq_error(&row, GreedyQuantizer::default().clip(&row, 4), 4);
+        let ea = quant_sq_error(&row, AsymQuantizer.clip(&row, 4), 4);
+        assert!(eg <= ea + 1e-9, "case {case}: greedy {eg} > asym {ea}");
+    }
+}
+
+#[test]
+fn prop_more_bits_never_hurt() {
+    let mut rng = Rng::new(0xA3);
+    for _ in 0..CASES {
+        let row = random_row(&mut rng);
+        let c = AsymQuantizer.clip(&row, 4);
+        let e4 = quant_sq_error(&row, c, 4);
+        let e8 = quant_sq_error(&row, c, 8);
+        assert!(e8 <= e4 + 1e-9, "8-bit {e8} worse than 4-bit {e4}");
+    }
+}
+
+#[test]
+fn prop_kmeans_beats_every_uniform_method() {
+    // A 16-entry free codebook is a superset of any 16-point uniform grid,
+    // so KMEANS-with-grid-init can never lose to ASYM (its init).
+    let mut rng = Rng::new(0xA4);
+    for case in 0..CASES {
+        let row = random_row(&mut rng);
+        let (cb, codes) = KmeansQuantizer::default().quantize_row(&row);
+        let ek: f64 = row
+            .iter()
+            .zip(&codes)
+            .map(|(&x, &c)| ((x - cb[c as usize]) as f64).powi(2))
+            .sum();
+        let ea = quant_sq_error(&row, AsymQuantizer.clip(&row, 4), 4);
+        assert!(ek <= ea + 1e-9, "case {case}: kmeans {ek} > asym {ea}");
+    }
+}
+
+#[test]
+fn prop_fused_round_trip_error_bounded() {
+    // Pack -> unpack through FusedTable obeys the half-scale bound for
+    // in-range values under every uniform method.
+    let mut rng = Rng::new(0xA5);
+    for case in 0..50 {
+        let d = [8usize, 15, 64][rng.below(3)];
+        let t = EmbeddingTable::randn_sigma(8, d, 10f32.powi(rng.below(5) as i32 - 2), case);
+        for q in all_uniform() {
+            let f = t.quantize_fused(q.as_ref(), 4, ScaleBiasDtype::F32);
+            for r in 0..t.rows() {
+                let (scale, bias) = f.read_tail(f.row_raw(r));
+                let hi = bias + scale * 15.0;
+                let dq = f.dequantize_row(r);
+                for (j, (&orig, &rec)) in t.row(r).iter().zip(&dq).enumerate() {
+                    // In-range values: within half a step. Clipped values:
+                    // reconstruct to the nearest end.
+                    let clamped = orig.clamp(bias, hi);
+                    assert!(
+                        (clamped - rec).abs() <= scale / 2.0 + scale.abs() * 1e-3 + 1e-5,
+                        "{} case {case} row {r} col {j}: {orig} -> {rec} (scale {scale})",
+                        q.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_quantize_deterministic() {
+    let mut rng = Rng::new(0xA6);
+    for _ in 0..50 {
+        let row = random_row(&mut rng);
+        for q in all_uniform() {
+            let a = q.clip(&row, 4);
+            let b = q.clip(&row, 4);
+            assert_eq!(a, b, "{} not deterministic", q.name());
+        }
+    }
+}
