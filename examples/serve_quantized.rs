@@ -75,6 +75,7 @@ fn main() {
             set,
             ServerConfig {
                 shards: 4,
+                num_shards: 4, // row-wise sharded engine (the multi-core path)
                 queue_depth: 64,
                 batch: BatchPolicy { max_batch: BATCH, ..Default::default() },
             },
@@ -114,6 +115,7 @@ fn main() {
         build_tables("int4", &fp32),
         ServerConfig {
             shards: 4,
+            num_shards: 4,
             queue_depth: 64,
             batch: BatchPolicy { max_batch: BATCH, ..Default::default() },
         },

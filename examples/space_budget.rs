@@ -93,7 +93,10 @@ fn main() {
             format!("{auc:.4}"),
         ]);
     }
-    println!("\n§6 future-work — capacity vs precision at a fixed byte budget:\n{}", tw.render());
+    println!(
+        "\n§6 future-work — capacity vs precision at a fixed byte budget:\n{}",
+        tw.render()
+    );
     println!(
         "Reading: if the INT4 d=112 arm beats FP32 d=16 on logloss/AUC, the
 paper's conjecture holds on this workload — 4-bit quantization buys

@@ -64,7 +64,12 @@ fn main() {
         let bytes = set.size_bytes();
         let server = EmbeddingServer::start(
             set,
-            ServerConfig { shards: 4, queue_depth: 64, batch: BatchPolicy::default() },
+            ServerConfig {
+                shards: 4,
+                num_shards: 0,
+                queue_depth: 64,
+                batch: BatchPolicy::default(),
+            },
         );
         let m = server.serve_trace(&tr);
         let (p50, _, p99) = m.latency.percentiles();
@@ -79,19 +84,34 @@ fn main() {
     }
     println!("{}", tw.render());
 
-    println!("== ablation: shard count (int4, batch 64) ==");
-    let mut tw = TableWriter::new(vec!["shards", "req/s", "p99"]);
+    println!("== ablation: worker count, table-parallel vs row-sharded (int4, batch 64) ==");
+    let mut tw = TableWriter::new(vec!["workers", "table-par req/s", "row-shard req/s"]);
     for shards in [1usize, 2, 4, 8] {
-        let server = EmbeddingServer::start(
+        let legacy = EmbeddingServer::start(
             tables("int4"),
-            ServerConfig { shards, queue_depth: 64, batch: BatchPolicy::default() },
+            ServerConfig {
+                shards,
+                num_shards: 0,
+                queue_depth: 64,
+                batch: BatchPolicy::default(),
+            },
         );
-        let m = server.serve_trace(&tr);
-        let (_, _, p99) = m.latency.percentiles();
+        let ml = legacy.serve_trace(&tr);
+        drop(legacy);
+        let sharded = EmbeddingServer::start(
+            tables("int4"),
+            ServerConfig {
+                shards: 1,
+                num_shards: shards,
+                queue_depth: 64,
+                batch: BatchPolicy::default(),
+            },
+        );
+        let ms = sharded.serve_trace(&tr);
         tw.row(vec![
             shards.to_string(),
-            format!("{:.0}", m.throughput()),
-            format!("{p99:.0?}"),
+            format!("{:.0}", ml.throughput()),
+            format!("{:.0}", ms.throughput()),
         ]);
     }
     println!("{}", tw.render());
@@ -103,6 +123,7 @@ fn main() {
             tables("int4"),
             ServerConfig {
                 shards: 4,
+                num_shards: 0,
                 queue_depth: 64,
                 batch: BatchPolicy { max_batch, ..Default::default() },
             },

@@ -1,0 +1,86 @@
+//! Shard-scaling benchmark: throughput of the row-wise sharded engine vs
+//! the single-threaded INT4 SLS baseline, on the Table 1 workload shape
+//! (large uniform-random pooled lookups over one big fused table).
+//!
+//! The baseline is the raw `sls_fused` kernel on one core — the exact
+//! Table 1 INT4 measurement. The engine runs the same 200k pooled rows
+//! as a 2000-request batch split across N shards. Target: ≥2× at 4
+//! shards.
+//!
+//! ```bash
+//! cargo bench --bench shard_scaling            # full (1M rows)
+//! cargo bench --bench shard_scaling -- --quick # small + fast
+//! ```
+
+use emberq::coordinator::TableSet;
+use emberq::data::trace::Request;
+use emberq::eval::TableWriter;
+use emberq::quant::AsymQuantizer;
+use emberq::shard::{ShardConfig, ShardedEngine};
+use emberq::sls::{sls_fused, SlsArgs};
+use emberq::table::serial::AnyTable;
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+use emberq::util::bench::measure;
+use emberq::util::Rng;
+
+const DIM: usize = 128;
+const SEGMENTS: usize = 2_000;
+const POOL: usize = 100;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let rows = if quick { 200_000 } else { 1_000_000 };
+    let (warm, reps) = if quick { (0, 3) } else { (1, 5) };
+    let lookups = SEGMENTS * POOL;
+
+    let fp32 = EmbeddingTable::randn_sigma(rows, DIM, 0.1, 0x51AD);
+    let fused = fp32.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16);
+    drop(fp32);
+    let mut rng = Rng::new(0x51AE);
+    let indices: Vec<u32> = (0..lookups).map(|_| rng.below(rows) as u32).collect();
+    let lengths = vec![POOL as u32; SEGMENTS];
+
+    // Single-threaded Table 1 baseline: the raw INT4 SLS kernel.
+    let args = SlsArgs::new(&indices, &lengths, rows).unwrap();
+    let mut sink = vec![0.0f32; SEGMENTS * DIM];
+    let base = measure(warm, reps, || {
+        sls_fused(&fused, &args, &mut sink);
+        sink[0]
+    });
+    let base_gsums = (lookups * DIM) as f64 / base.secs() / 1e9;
+    println!(
+        "single-thread INT4 SLS baseline: {base_gsums:.3} GSums/s \
+         ({rows} rows, d={DIM}, {lookups} pooled rows / {SEGMENTS} segments)"
+    );
+
+    // The same pooled work as a batch of requests through the engine.
+    let set = TableSet::new(vec![AnyTable::Fused(fused.clone())]);
+    let reqs: Vec<Request> = indices
+        .chunks(POOL)
+        .map(|c| Request { ids: vec![c.to_vec()] })
+        .collect();
+    let mut out = vec![0.0f32; SEGMENTS * DIM];
+    let mut tw = TableWriter::new(vec!["shards", "GSums/s", "speedup vs 1-thread"]);
+    for shards in [1usize, 2, 4, 8] {
+        let engine = ShardedEngine::start(
+            &set,
+            &ShardConfig { num_shards: shards, small_table_rows: 0, ..Default::default() },
+        );
+        let m = measure(warm, reps, || {
+            engine.lookup_batch_into(&reqs, &mut out);
+            out[0]
+        });
+        let gsums = (lookups * DIM) as f64 / m.secs() / 1e9;
+        tw.row(vec![
+            shards.to_string(),
+            format!("{gsums:.3}"),
+            format!("{:.2}x", gsums / base_gsums),
+        ]);
+        eprintln!("shards={shards}: {gsums:.3} GSums/s ({:.2}x)", gsums / base_gsums);
+    }
+    println!(
+        "\nShard scaling — INT4 SLS, Table 1 workload as a {SEGMENTS}-request batch:\n{}",
+        tw.render()
+    );
+    println!("Paper-deployment check: >=2x at 4 shards over the single-threaded INT4 baseline.");
+}

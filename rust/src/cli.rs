@@ -108,8 +108,12 @@ COMMANDS:
                      GREEDY-OPT KMEANS KMEANS-CLS
   eval      --rows N --dim D [--seed S] [--bits 4]
             normalized-l2 sweep of all methods over a random N(0,1) table
-  serve     --table FILE [--shards N] [--requests N] [--batch N] [--listen ADDR]
-            serve a table file against a synthetic Zipf trace
+  serve     --table FILE [--shards N] [--workers N] [--requests N] [--batch N]
+            [--listen ADDR]
+            serve a table file against a synthetic Zipf trace (or over TCP).
+            --shards N > 0 splits every table's rows across N worker
+            shards (the multi-core path); --shards 0 falls back to the
+            table-parallel pool with --workers threads
   info      --in FILE
             describe a saved table file"
     );
@@ -230,6 +234,8 @@ fn cmd_eval(flags: &Flags) -> Result<()> {
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let table_path = flags.get("table").ok_or("--table required")?;
     let shards: usize = flags.num("shards", 4)?;
+    // The table-parallel pool needs at least one worker.
+    let workers: usize = flags.num("workers", 4)?.max(1);
     let requests: usize = flags.num("requests", 10_000)?;
     let max_batch: usize = flags.num("batch", 64)?;
     let copies: usize = flags.num("copies", 8)?;
@@ -244,8 +250,13 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         tables.push(open_table(table_path)?);
     }
     let set = TableSet::new(tables);
+    let mode = if shards > 0 {
+        format!("{shards} row-wise shards")
+    } else {
+        format!("{workers} table-parallel workers")
+    };
     println!(
-        "serving {} tables ({} rows, d={}, {} bytes total) on {shards} shards",
+        "serving {} tables ({} rows, d={}, {} bytes total) on {mode}",
         set.num_tables(),
         rows,
         set.dim(),
@@ -254,7 +265,8 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let server = EmbeddingServer::start(
         set,
         ServerConfig {
-            shards,
+            shards: workers,
+            num_shards: shards,
             queue_depth: 64,
             batch: BatchPolicy { max_batch, ..Default::default() },
         },
@@ -264,7 +276,10 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         let server = std::sync::Arc::new(server);
         let front = emberq::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &addr)
             .map_err(|e| format!("bind {addr}: {e}"))?;
-        println!("listening on {} (protocol: see coordinator::tcp docs); Ctrl-C to stop", front.addr());
+        println!(
+            "listening on {} (protocol: see coordinator::tcp docs); Ctrl-C to stop",
+            front.addr()
+        );
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
         }
@@ -328,6 +343,35 @@ mod tests {
     #[test]
     fn eval_runs() {
         run(&s(&["eval", "--rows", "10", "--dim", "16"])).unwrap();
+    }
+
+    #[test]
+    fn serve_replays_trace_on_both_paths() {
+        let dir = std::env::temp_dir().join("emberq_cli_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.embq");
+        let table = EmbeddingTable::randn(50, 8, 9);
+        let f = File::create(&path).unwrap();
+        serial::write_f32(&mut BufWriter::new(f), &table).unwrap();
+        for shards in ["2", "0"] {
+            run(&s(&[
+                "serve",
+                "--table",
+                path.to_str().unwrap(),
+                "--shards",
+                shards,
+                "--workers",
+                "2",
+                "--copies",
+                "2",
+                "--requests",
+                "40",
+                "--batch",
+                "8",
+            ]))
+            .unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

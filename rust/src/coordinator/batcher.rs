@@ -22,6 +22,19 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// Size-only batch boundaries for replaying `n` already-arrived
+    /// requests (trace replay / offline scoring): `ceil(n / max_batch)`
+    /// contiguous ranges, every one full except possibly the last. The
+    /// deadline never fires because nothing is in flight — this is the
+    /// deterministic counterpart of [`Batcher::next_batch`], shared by
+    /// both execution paths of `EmbeddingServer::serve_trace`.
+    pub fn chunk_ranges(&self, n: usize) -> impl Iterator<Item = std::ops::Range<usize>> {
+        let mb = self.max_batch.max(1);
+        (0..n.div_ceil(mb)).map(move |i| i * mb..((i + 1) * mb).min(n))
+    }
+}
+
 /// Pulls items from a channel and yields batches per a [`BatchPolicy`].
 pub struct Batcher<T> {
     rx: Receiver<T>,
@@ -109,6 +122,26 @@ mod tests {
         );
         assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn chunk_ranges_partition_exactly() {
+        for (n, mb) in [(0usize, 4usize), (1, 4), (4, 4), (10, 4), (100, 64), (7, 1)] {
+            let p = BatchPolicy { max_batch: mb, ..Default::default() };
+            let ranges: Vec<_> = p.chunk_ranges(n).collect();
+            let covered: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(covered, n, "n={n} mb={mb}");
+            assert!(ranges.iter().all(|r| r.len() <= mb && !r.is_empty()), "{ranges:?}");
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "gap in {ranges:?}");
+            }
+            if let Some(first) = ranges.first() {
+                assert_eq!(first.start, 0);
+            }
+            if let Some(last) = ranges.last() {
+                assert_eq!(last.end, n);
+            }
+        }
     }
 
     #[test]

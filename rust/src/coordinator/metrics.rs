@@ -143,7 +143,8 @@ impl ServerMetrics {
     pub fn summary(&self) -> String {
         let (p50, p95, p99) = self.latency.percentiles();
         format!(
-            "{} req in {:.2?} ({:.0} req/s, {:.0} lookups/s, batch {:.1}) p50={:.0?} p95={:.0?} p99={:.0?}",
+            "{} req in {:.2?} ({:.0} req/s, {:.0} lookups/s, batch {:.1}) \
+             p50={:.0?} p95={:.0?} p99={:.0?}",
             self.requests,
             self.wall,
             self.throughput(),

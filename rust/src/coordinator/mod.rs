@@ -10,7 +10,9 @@
 //!   cap or a latency deadline, whichever first.
 //! * [`server`] — the worker pool: each worker owns its shard's tables
 //!   and answers pooled-lookup work items over bounded channels
-//!   (backpressure by construction).
+//!   (backpressure by construction). With `ServerConfig::num_shards > 0`
+//!   it instead drives the row-wise [`crate::shard`] engine, which
+//!   splits every table's *rows* (not just whole tables) across workers.
 //! * [`metrics`] — latency histograms (p50/p95/p99) and counters.
 //!
 //! Threads + bounded channels (no async runtime): lookups are CPU/memory

@@ -37,6 +37,26 @@ impl Router {
         Router { assignment, shards }
     }
 
+    /// Load-balanced assignment: greedy LPT — heaviest table first onto
+    /// the least-loaded shard (ties to the lowest shard id, so the
+    /// result is deterministic). `loads[t]` is any load estimate for
+    /// table `t` (row count, traffic share). Used by the shard engine to
+    /// spread small whole tables; skewed table-parallel deployments can
+    /// use it in place of [`Router::round_robin`].
+    pub fn balanced(loads: &[usize], shards: usize) -> Self {
+        assert!(shards > 0);
+        let mut order: Vec<usize> = (0..loads.len()).collect();
+        order.sort_by_key(|&t| std::cmp::Reverse(loads[t]));
+        let mut shard_load = vec![0usize; shards];
+        let mut assignment = vec![0usize; loads.len()];
+        for t in order {
+            let s = (0..shards).min_by_key(|&s| shard_load[s]).unwrap();
+            assignment[t] = s;
+            shard_load[s] += loads[t];
+        }
+        Router { assignment, shards }
+    }
+
     /// Number of shards.
     pub fn shards(&self) -> usize {
         self.shards
@@ -110,6 +130,26 @@ mod tests {
                 assert_eq!(ids, &request.ids[*t]);
             }
         }
+    }
+
+    #[test]
+    fn balanced_spreads_load_evenly() {
+        // One heavy table + six light ones over two shards: the heavy
+        // table gets a shard (nearly) to itself.
+        let loads = [1000usize, 10, 10, 10, 10, 10, 10];
+        let r = Router::balanced(&loads, 2);
+        let heavy_shard = r.shard_of(0);
+        let light_on_heavy: usize = (1..7).filter(|&t| r.shard_of(t) == heavy_shard).count();
+        assert!(light_on_heavy <= 1, "heavy shard also got {light_on_heavy} light tables");
+        // Deterministic.
+        assert_eq!(r.shard_of(0), Router::balanced(&loads, 2).shard_of(0));
+    }
+
+    #[test]
+    fn balanced_equal_loads_degenerates_to_even_split() {
+        let r = Router::balanced(&[5; 9], 3);
+        let counts: Vec<usize> = (0..3).map(|s| r.tables_of_shard(s).len()).collect();
+        assert_eq!(counts, vec![3, 3, 3]);
     }
 
     #[test]

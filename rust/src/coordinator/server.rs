@@ -1,9 +1,17 @@
 //! The embedding-inference worker pool.
 //!
-//! Topology: one leader (caller) + `shards` worker threads. Each worker
-//! answers pooled-lookup work for the tables the [`Router`] assigned to
-//! it, over a *bounded* channel — when workers fall behind, submission
-//! blocks, which is the backpressure production routers rely on.
+//! Two execution paths behind one [`EmbeddingServer`] API:
+//!
+//! * **Table-parallel** (default, `num_shards == 0`): one leader (caller)
+//!   + `shards` worker threads. Each worker answers pooled-lookup work
+//!   for the tables the [`Router`] assigned to it, over a *bounded*
+//!   channel — when workers fall behind, submission blocks, which is the
+//!   backpressure production routers rely on.
+//! * **Row-sharded** (`num_shards > 0`): the [`crate::shard`] engine —
+//!   every table is partitioned row-wise across `num_shards` workers and
+//!   each request's pooled sum is scatter-gathered from per-shard
+//!   partials. This is the path that scales a single huge table across
+//!   cores.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -14,7 +22,8 @@ use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::router::Router;
 use crate::data::trace::{Request, RequestTrace};
-use crate::sls::{SlsArgs, SlsTable};
+use crate::shard::{ShardConfig, ShardedEngine};
+use crate::sls::SlsArgs;
 use crate::table::serial::AnyTable;
 
 /// The quantized (or FP32) tables a server serves. Tables may have
@@ -83,17 +92,17 @@ impl TableSet {
         self.tables[table].rows()
     }
 
+    /// Borrow table `t` (the shard engine slices rows out of it).
+    pub fn table(&self, t: usize) -> &AnyTable {
+        &self.tables[t]
+    }
+
     /// Pool `ids` from `table` into `out` (one segment).
     pub fn pool(&self, table: usize, ids: &[u32], out: &mut [f32]) {
         let t = &self.tables[table];
         let lengths = [ids.len() as u32];
         let args = SlsArgs::new(ids, &lengths, t.rows()).expect("validated ids");
-        let sls = match t {
-            AnyTable::F32(t) => SlsTable::F32(t),
-            AnyTable::Fused(t) => SlsTable::Fused(t),
-            AnyTable::Codebook(t) => SlsTable::Codebook(t),
-        };
-        sls.sls(&args, out);
+        t.sls_view().sls(&args, out);
     }
 }
 
@@ -108,8 +117,13 @@ struct WorkItem {
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Worker shards.
+    /// Table-parallel worker count (the default execution path).
     pub shards: usize,
+    /// Row-wise shard count. `0` (default) keeps the table-parallel
+    /// pool; `> 0` routes every lookup through the [`crate::shard`]
+    /// engine instead, partitioning each table's rows across this many
+    /// workers (`shards` is then ignored).
+    pub num_shards: usize,
     /// Bounded queue depth per worker (backpressure).
     pub queue_depth: usize,
     /// Dynamic-batching policy for [`EmbeddingServer::serve_trace`].
@@ -118,44 +132,75 @@ pub struct ServerConfig {
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { shards: 4, queue_depth: 64, batch: BatchPolicy::default() }
+        ServerConfig {
+            shards: 4,
+            num_shards: 0,
+            queue_depth: 64,
+            batch: BatchPolicy::default(),
+        }
     }
 }
 
-/// The serving runtime: router + worker pool over a [`TableSet`].
+/// The serving runtime over a [`TableSet`]: router + table-parallel
+/// worker pool, or the row-sharded engine when `num_shards > 0`.
 pub struct EmbeddingServer {
     router: Router,
     senders: Vec<SyncSender<WorkItem>>,
     workers: Vec<JoinHandle<()>>,
+    engine: Option<ShardedEngine>,
     tables: Arc<TableSet>,
     cfg: ServerConfig,
 }
 
 impl EmbeddingServer {
-    /// Start the worker pool.
+    /// Start the worker pool (table-parallel or row-sharded per `cfg`).
     pub fn start(tables: TableSet, cfg: ServerConfig) -> Self {
         let tables = Arc::new(tables);
-        let router = Router::round_robin(tables.num_tables(), cfg.shards);
-        let mut senders = Vec::with_capacity(cfg.shards);
-        let mut workers = Vec::with_capacity(cfg.shards);
-        for shard in 0..cfg.shards {
-            let (tx, rx): (SyncSender<WorkItem>, Receiver<WorkItem>) =
-                sync_channel(cfg.queue_depth);
-            let tset = Arc::clone(&tables);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("emberq-worker-{shard}"))
-                    .spawn(move || worker_loop(rx, tset))
-                    .expect("spawn worker"),
-            );
-            senders.push(tx);
+        let engine = if cfg.num_shards > 0 {
+            Some(ShardedEngine::start(
+                &tables,
+                &ShardConfig {
+                    num_shards: cfg.num_shards,
+                    queue_depth: cfg.queue_depth,
+                    ..ShardConfig::default()
+                },
+            ))
+        } else {
+            None
+        };
+        // In sharded mode `cfg.shards` is ignored (and may be 0); the
+        // router is only consulted on the table-parallel path.
+        let router_shards = if engine.is_some() { 1 } else { cfg.shards };
+        let router = Router::round_robin(tables.num_tables(), router_shards);
+        let mut senders = Vec::new();
+        let mut workers = Vec::new();
+        if engine.is_none() {
+            senders.reserve(cfg.shards);
+            workers.reserve(cfg.shards);
+            for shard in 0..cfg.shards {
+                let (tx, rx): (SyncSender<WorkItem>, Receiver<WorkItem>) =
+                    sync_channel(cfg.queue_depth);
+                let tset = Arc::clone(&tables);
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("emberq-worker-{shard}"))
+                        .spawn(move || worker_loop(rx, tset))
+                        .expect("spawn worker"),
+                );
+                senders.push(tx);
+            }
         }
-        EmbeddingServer { router, senders, workers, tables, cfg }
+        EmbeddingServer { router, senders, workers, engine, tables, cfg }
     }
 
     /// The served tables.
     pub fn tables(&self) -> &TableSet {
         &self.tables
+    }
+
+    /// Is the row-sharded engine active?
+    pub fn is_sharded(&self) -> bool {
+        self.engine.is_some()
     }
 
     /// Pooled lookup for one request: returns per-table pooled embeddings
@@ -168,7 +213,14 @@ impl EmbeddingServer {
 
     /// Pooled lookups for a batch; `out` is `batch × feature_width`.
     /// Work is fanned to every shard once per batch and merged back.
+    /// Safe to call concurrently from many client threads (each call
+    /// uses a private reply channel), and deterministic for a given
+    /// batch on both execution paths.
     pub fn lookup_batch_into(&self, reqs: &[Request], out: &mut [f32]) {
+        if let Some(engine) = &self.engine {
+            engine.lookup_batch_into(reqs, out);
+            return;
+        }
         let fw = self.tables.feature_width();
         let nt = self.tables.num_tables();
         assert_eq!(out.len(), reqs.len() * fw);
@@ -211,12 +263,11 @@ impl EmbeddingServer {
         let mut metrics = ServerMetrics::default();
         let fw = self.tables.feature_width();
         let run_start = Instant::now();
-        let max_batch = self.cfg.batch.max_batch;
-        let mut i = 0usize;
-        let mut out = vec![0.0f32; max_batch * fw];
-        while i < trace.requests.len() {
-            let end = (i + max_batch).min(trace.requests.len());
-            let batch = &trace.requests[i..end];
+        // Same clamp as `chunk_ranges`: batches are never larger than
+        // `max_batch.max(1)` requests.
+        let mut out = vec![0.0f32; self.cfg.batch.max_batch.max(1) * fw];
+        for range in self.cfg.batch.chunk_ranges(trace.requests.len()) {
+            let batch = &trace.requests[range];
             let t0 = Instant::now();
             self.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
             let dt = t0.elapsed();
@@ -226,7 +277,6 @@ impl EmbeddingServer {
                 metrics.lookups += req.ids.iter().map(Vec::len).sum::<usize>() as u64;
             }
             metrics.batches += 1;
-            i = end;
         }
         metrics.wall = run_start.elapsed();
         metrics
@@ -262,7 +312,11 @@ mod tests {
     use crate::quant::GreedyQuantizer;
     use crate::table::{EmbeddingTable, ScaleBiasDtype};
 
-    fn quantized_set(num_tables: usize, rows: usize, dim: usize) -> (Vec<EmbeddingTable>, TableSet) {
+    fn quantized_set(
+        num_tables: usize,
+        rows: usize,
+        dim: usize,
+    ) -> (Vec<EmbeddingTable>, TableSet) {
         let fp32: Vec<EmbeddingTable> = (0..num_tables)
             .map(|t| EmbeddingTable::randn(rows, dim, 500 + t as u64))
             .collect();
@@ -320,7 +374,12 @@ mod tests {
         let (_, set) = quantized_set(4, 200, 8);
         let server = EmbeddingServer::start(
             set,
-            ServerConfig { shards: 2, queue_depth: 8, batch: BatchPolicy { max_batch: 16, ..Default::default() } },
+            ServerConfig {
+                shards: 2,
+                queue_depth: 8,
+                batch: BatchPolicy { max_batch: 16, ..Default::default() },
+                ..Default::default()
+            },
         );
         let trace = RequestTrace::generate(&TraceConfig {
             requests: 100,
@@ -391,5 +450,55 @@ mod tests {
         let server = EmbeddingServer::start(set, ServerConfig { shards: 1, ..Default::default() });
         let req = Request { ids: vec![vec![0, 1], vec![2], vec![3]] };
         assert_eq!(server.lookup(&req).len(), 12);
+    }
+
+    #[test]
+    fn sharded_path_close_to_table_parallel_path() {
+        // Same tables through both execution paths: identical up to f32
+        // partial-sum reassociation (tiny for these magnitudes).
+        let (_, legacy_set) = quantized_set(3, 120, 8);
+        let (_, sharded_set) = quantized_set(3, 120, 8);
+        let legacy = EmbeddingServer::start(
+            legacy_set,
+            ServerConfig { shards: 2, ..Default::default() },
+        );
+        let sharded = EmbeddingServer::start(
+            sharded_set,
+            ServerConfig { num_shards: 4, ..Default::default() },
+        );
+        assert!(!legacy.is_sharded());
+        assert!(sharded.is_sharded());
+        let req = Request { ids: vec![vec![0, 60, 119, 3], vec![], vec![7; 9]] };
+        let a = legacy.lookup(&req);
+        let b = sharded.lookup(&req);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() < 1e-3, "feature {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn sharded_serve_trace_accounts_like_legacy() {
+        let (_, set) = quantized_set(4, 300, 8);
+        let server = EmbeddingServer::start(
+            set,
+            ServerConfig {
+                num_shards: 3,
+                batch: BatchPolicy { max_batch: 16, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let trace = RequestTrace::generate(&TraceConfig {
+            requests: 40,
+            num_tables: 4,
+            rows: 300,
+            mean_pool: 5,
+            zipf_alpha: 1.1,
+            seed: 21,
+        });
+        let m = server.serve_trace(&trace);
+        assert_eq!(m.requests, 40);
+        assert_eq!(m.lookups as usize, trace.total_lookups());
+        assert_eq!(m.batches, 3); // ceil(40/16)
     }
 }

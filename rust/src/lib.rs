@@ -12,17 +12,30 @@
 //! * [`sls`] — optimized `SparseLengthsSum` kernels over every row format
 //!   (the paper's Table 1 workload), with cache-resident and
 //!   cache-flushed benchmarking support.
+//! * [`shard`] — row-wise table sharding: each quantized table is
+//!   partitioned into contiguous row chunks across N worker shards (small
+//!   tables stay whole on one shard), and a persistent thread pool
+//!   executes each request's per-shard SLS slices in parallel, scatter-
+//!   gathering partial pooled sums. This is the multi-core serving path.
 //! * [`model`] — DLRM-style recommendation model substrate: forward,
 //!   backward, Adagrad, a training loop, and a quantized-inference path.
 //! * [`data`] — synthetic Criteo-Terabyte-like click-log generator
 //!   (Zipf-distributed categorical ids, teacher-model labels).
 //! * [`eval`] — normalized ℓ2 loss, model log loss, size accounting.
 //! * [`coordinator`] — L3 serving runtime: request router, dynamic
-//!   batcher, worker pool, latency metrics.
+//!   batcher, worker pool, latency metrics. `ServerConfig::num_shards`
+//!   switches it onto the [`shard`] engine.
 //! * [`runtime`] — PJRT client wrapper that loads AOT artifacts
 //!   (`artifacts/*.hlo.txt`, lowered from JAX/Pallas) and executes them
-//!   on the serving path.
+//!   on the serving path. Gated behind the off-by-default `xla` feature:
+//!   it needs the `xla` bridge crate and `libxla`, so the default build
+//!   stays offline-clean.
 //! * [`util`] — deterministic RNG, f16 conversion, statistics helpers.
+//!
+//! Cross-language golden data for the quantizers lives in
+//! `python/tests/golden/quant_golden.txt`; regenerate it with
+//! `python -m compile.quant_ref --out tests/golden/quant_golden.txt` from
+//! the `python/` directory (see `rust/tests/golden_cross_lang.rs`).
 //!
 //! ## Quickstart
 //!
@@ -44,7 +57,9 @@ pub mod data;
 pub mod eval;
 pub mod model;
 pub mod quant;
+#[cfg(feature = "xla")]
 pub mod runtime;
+pub mod shard;
 pub mod sls;
 pub mod table;
 pub mod util;

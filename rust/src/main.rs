@@ -8,8 +8,9 @@
 //! * `serve`     — start the embedding server and replay a request trace.
 //! * `info`      — describe a saved table file.
 //!
-//! Run `emberq <cmd> --help` for flags. Argument parsing is hand-rolled
-//! (the binary is dependency-free beyond the PJRT bridge).
+//! Run `emberq <cmd> --help` for flags. Argument parsing is hand-rolled:
+//! the default build is fully dependency-free (the PJRT bridge only
+//! exists behind the off-by-default `xla` feature).
 
 use std::process::ExitCode;
 

@@ -209,7 +209,12 @@ impl Mlp {
 
     /// Backward from `dlogits` (`batch`), filling `grads`; returns the
     /// gradient w.r.t. the MLP input.
-    pub fn backward(&self, dlogits: &[f32], cache: &MlpCache, grads: &mut [LinearGrads]) -> Vec<f32> {
+    pub fn backward(
+        &self,
+        dlogits: &[f32],
+        cache: &MlpCache,
+        grads: &mut [LinearGrads],
+    ) -> Vec<f32> {
         assert_eq!(grads.len(), self.layers.len());
         let batch = cache.batch;
         let mut dy = dlogits.to_vec();

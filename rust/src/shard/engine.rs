@@ -1,0 +1,316 @@
+//! The sharded execution engine: a persistent pool of shard workers, each
+//! owning its row slice of every table, fed over bounded channels.
+//!
+//! Execution of one batch:
+//!
+//! 1. **Split** — every request's per-table id list is bucketed by owning
+//!    shard and translated to shard-local ids (two integer ops per id).
+//! 2. **Fan out** — each shard with work receives one `ShardTask` for the
+//!    whole batch (one channel hop per shard per batch, not per request).
+//! 3. **Pool** — workers run the format's optimized SLS kernel over their
+//!    slice, producing partial pooled sums per `(slot, table)`.
+//! 4. **Scatter-gather** — the leader merges partials into the output in
+//!    ascending shard order, so accumulation is deterministic run to run
+//!    (f32 addition is not associative).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use crate::coordinator::TableSet;
+use crate::data::trace::Request;
+use crate::shard::partition::{plan_partitions, TablePartition};
+use crate::shard::slice::ShardSlice;
+use crate::shard::ShardConfig;
+
+/// Work for one shard: per `(batch slot, table)` shard-local id lookups.
+struct ShardTask {
+    lookups: Vec<(usize, usize, Vec<u32>)>,
+    /// Reply: `(shard id, per-lookup partial pooled sums)`.
+    reply: SyncSender<(usize, Vec<(usize, usize, Vec<f32>)>)>,
+}
+
+/// The row-wise sharded serving engine.
+pub struct ShardedEngine {
+    partitions: Vec<TablePartition>,
+    offsets: Vec<usize>,
+    feature_width: usize,
+    num_tables: usize,
+    senders: Vec<SyncSender<ShardTask>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ShardedEngine {
+    /// Partition `set` per `cfg` and start the worker pool. Each worker
+    /// thread *owns* its [`ShardSlice`] (no shared table memory on the
+    /// hot path).
+    pub fn start(set: &TableSet, cfg: &ShardConfig) -> ShardedEngine {
+        let n = cfg.num_shards.max(1);
+        let rows: Vec<usize> = (0..set.num_tables()).map(|t| set.rows_of(t)).collect();
+        let partitions = plan_partitions(&rows, n, cfg.small_table_rows);
+        let mut senders = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for shard in 0..n {
+            let slice = ShardSlice::build(set, &partitions, shard);
+            let (tx, rx): (SyncSender<ShardTask>, Receiver<ShardTask>) =
+                sync_channel(cfg.queue_depth.max(1));
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("emberq-shard-{shard}"))
+                    .spawn(move || worker_loop(shard, rx, slice))
+                    .expect("spawn shard worker"),
+            );
+            senders.push(tx);
+        }
+        let offsets = (0..set.num_tables()).map(|t| set.offset_of(t)).collect();
+        ShardedEngine {
+            partitions,
+            offsets,
+            feature_width: set.feature_width(),
+            num_tables: set.num_tables(),
+            senders,
+            workers,
+        }
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Width of one response vector (Σ table dims).
+    pub fn feature_width(&self) -> usize {
+        self.feature_width
+    }
+
+    /// The partition of `table`.
+    pub fn partition(&self, table: usize) -> &TablePartition {
+        &self.partitions[table]
+    }
+
+    /// Pooled lookup for one request (`feature_width` floats).
+    pub fn lookup(&self, req: &Request) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.feature_width];
+        self.lookup_batch_into(std::slice::from_ref(req), &mut out);
+        out
+    }
+
+    /// Pooled lookups for a batch; `out` is `batch × feature_width`,
+    /// overwritten entirely.
+    pub fn lookup_batch_into(&self, reqs: &[Request], out: &mut [f32]) {
+        let fw = self.feature_width;
+        assert_eq!(out.len(), reqs.len() * fw, "output buffer size mismatch");
+        out.fill(0.0);
+        let n = self.senders.len();
+        let mut per_shard: Vec<Vec<(usize, usize, Vec<u32>)>> = vec![Vec::new(); n];
+        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (slot, req) in reqs.iter().enumerate() {
+            assert_eq!(req.ids.len(), self.num_tables, "request table count mismatch");
+            for (t, ids) in req.ids.iter().enumerate() {
+                if ids.is_empty() {
+                    continue;
+                }
+                match &self.partitions[t] {
+                    TablePartition::Whole { shard, .. } => {
+                        per_shard[*shard].push((slot, t, ids.clone()));
+                    }
+                    TablePartition::RowWise(p) => {
+                        // Bucket by shard, preserving each id's relative
+                        // order so per-shard summation order matches the
+                        // unsharded kernel's over those rows.
+                        for &id in ids {
+                            buckets[p.shard_of(id)].push(p.local_of(id));
+                        }
+                        for (s, bucket) in buckets.iter_mut().enumerate() {
+                            if !bucket.is_empty() {
+                                per_shard[s].push((slot, t, std::mem::take(bucket)));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let (rtx, rrx) = sync_channel(n);
+        let mut outstanding = 0usize;
+        for (shard, lookups) in per_shard.into_iter().enumerate() {
+            if lookups.is_empty() {
+                continue;
+            }
+            self.senders[shard]
+                .send(ShardTask { lookups, reply: rtx.clone() })
+                .expect("shard worker alive");
+            outstanding += 1;
+        }
+        drop(rtx);
+        // Collect every reply first, then merge in ascending shard order:
+        // deterministic output regardless of worker completion order.
+        let mut by_shard: Vec<Option<Vec<(usize, usize, Vec<f32>)>>> = vec![None; n];
+        for _ in 0..outstanding {
+            let (shard, results) = rrx.recv().expect("shard reply");
+            by_shard[shard] = Some(results);
+        }
+        for results in by_shard.into_iter().flatten() {
+            for (slot, t, partial) in results {
+                let off = slot * fw + self.offsets[t];
+                for (o, v) in out[off..off + partial.len()].iter_mut().zip(&partial) {
+                    *o += *v;
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ShardedEngine {
+    fn drop(&mut self) {
+        self.senders.clear(); // close channels -> workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shard: usize, rx: Receiver<ShardTask>, slice: ShardSlice) {
+    while let Ok(task) = rx.recv() {
+        let mut results = Vec::with_capacity(task.lookups.len());
+        for (slot, t, local_ids) in task.lookups {
+            let mut out = vec![0.0f32; slice.dim_of(t)];
+            slice.pool(t, &local_ids, &mut out);
+            results.push((slot, t, out));
+        }
+        // Leader may have given up (tests); ignore send failure.
+        let _ = task.reply.send((shard, results));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GreedyQuantizer;
+    use crate::table::serial::AnyTable;
+    use crate::table::{EmbeddingTable, ScaleBiasDtype};
+
+    fn f32_set(num_tables: usize, rows: usize, dim: usize) -> TableSet {
+        TableSet::new(
+            (0..num_tables)
+                .map(|t| AnyTable::F32(EmbeddingTable::randn(rows, dim, 9100 + t as u64)))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn single_shard_matches_pool_bitwise() {
+        let set = f32_set(3, 40, 8);
+        let reference = f32_set(3, 40, 8);
+        let engine = ShardedEngine::start(
+            &set,
+            &ShardConfig { num_shards: 1, ..Default::default() },
+        );
+        let req = Request { ids: vec![vec![0, 7, 7, 39], vec![], vec![12]] };
+        let got = engine.lookup(&req);
+        for (t, ids) in req.ids.iter().enumerate() {
+            let mut want = vec![0.0f32; 8];
+            reference.pool(t, ids, &mut want);
+            assert_eq!(&got[t * 8..(t + 1) * 8], want.as_slice(), "table {t}");
+        }
+    }
+
+    #[test]
+    fn split_sums_recombine_across_shards() {
+        let set = f32_set(1, 16, 4);
+        let reference = f32_set(1, 16, 4);
+        let engine = ShardedEngine::start(
+            &set,
+            &ShardConfig { num_shards: 4, small_table_rows: 0, ..Default::default() },
+        );
+        // ids deliberately span all four chunks ([0,4) [4,8) [8,12) [12,16)).
+        let ids = vec![0u32, 5, 10, 15, 3, 12];
+        let got = engine.lookup(&Request { ids: vec![ids.clone()] });
+        let mut want = vec![0.0f32; 4];
+        reference.pool(0, &ids, &mut want);
+        for j in 0..4 {
+            assert!(
+                (got[j] - want[j]).abs() < 1e-4,
+                "j={j}: sharded {} vs pooled {}",
+                got[j],
+                want[j]
+            );
+        }
+    }
+
+    #[test]
+    fn fused_tables_serve_through_shards() {
+        let fp32: Vec<EmbeddingTable> =
+            (0..2).map(|t| EmbeddingTable::randn(30, 8, 9200 + t)).collect();
+        let mk = || {
+            TableSet::new(
+                fp32.iter()
+                    .map(|t| {
+                        AnyTable::Fused(t.quantize_fused(
+                            &GreedyQuantizer::default(),
+                            4,
+                            ScaleBiasDtype::F16,
+                        ))
+                    })
+                    .collect(),
+            )
+        };
+        let set = mk();
+        let reference = mk();
+        let engine = ShardedEngine::start(
+            &set,
+            &ShardConfig { num_shards: 3, small_table_rows: 0, ..Default::default() },
+        );
+        let req = Request { ids: vec![vec![29, 0, 14], vec![7, 7]] };
+        let got = engine.lookup(&req);
+        for (t, ids) in req.ids.iter().enumerate() {
+            let mut want = vec![0.0f32; 8];
+            reference.pool(t, ids, &mut want);
+            for j in 0..8 {
+                assert!(
+                    (got[t * 8 + j] - want[j]).abs() < 1e-4,
+                    "t={t} j={j}: {} vs {}",
+                    got[t * 8 + j],
+                    want[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_slots_stay_separated() {
+        let set = f32_set(2, 20, 4);
+        let engine = ShardedEngine::start(
+            &set,
+            &ShardConfig { num_shards: 2, small_table_rows: 0, ..Default::default() },
+        );
+        let reqs: Vec<Request> = (0..5)
+            .map(|i| Request { ids: vec![vec![i as u32], vec![19 - i as u32]] })
+            .collect();
+        let mut batch = vec![0.0f32; 5 * 8];
+        engine.lookup_batch_into(&reqs, &mut batch);
+        for (s, req) in reqs.iter().enumerate() {
+            assert_eq!(&batch[s * 8..(s + 1) * 8], engine.lookup(req).as_slice(), "slot {s}");
+        }
+    }
+
+    #[test]
+    fn stale_output_buffer_is_overwritten() {
+        let set = f32_set(1, 10, 4);
+        let engine =
+            ShardedEngine::start(&set, &ShardConfig { num_shards: 2, ..Default::default() });
+        let mut out = vec![7.0f32; 4];
+        engine.lookup_batch_into(
+            std::slice::from_ref(&Request { ids: vec![vec![]] }),
+            &mut out,
+        );
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn clean_shutdown() {
+        let set = f32_set(2, 10, 4);
+        let engine =
+            ShardedEngine::start(&set, &ShardConfig { num_shards: 4, ..Default::default() });
+        let _ = engine.lookup(&Request { ids: vec![vec![1], vec![2]] });
+        drop(engine); // must not hang or panic
+    }
+}

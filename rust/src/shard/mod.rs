@@ -1,0 +1,64 @@
+//! Row-wise table sharding — the multi-core serving engine.
+//!
+//! The coordinator's original worker pool parallelizes across *tables*
+//! (each worker owns whole tables), which caps speed-up at the table
+//! count and leaves one worker holding any huge-vocab table. This module
+//! parallelizes across *rows*:
+//!
+//! * [`partition`] — each table's rows are split into contiguous chunks,
+//!   one per shard ([`RowPartition`]); small tables stay whole on a
+//!   single shard (spread by load, [`plan_partitions`]).
+//! * [`slice`] — [`ShardSlice`]: the per-shard copy of every table's
+//!   owned rows, in the table's native format (FP32 / fused INT4-INT8 /
+//!   codebook), so each worker streams only its slice's bytes.
+//! * [`engine`] — [`ShardedEngine`]: a persistent worker pool (std
+//!   threads + bounded channels). A batched request is split per shard
+//!   (ids translated to shard-local row ids), each worker runs the
+//!   format's optimized SLS kernel over its slice, and the leader
+//!   scatter-gathers the partial pooled sums into the output buffer in
+//!   deterministic shard order.
+//!
+//! Equivalence contract: sharded output equals the unsharded
+//! `TableSet::pool` result exactly whenever a segment's ids live on one
+//! shard (including `num_shards == 1` and whole tables); when a pooled
+//! sum genuinely spans shards it is the same set of addends re-associated,
+//! so results agree to f32 reassociation error (tested to tight bounds in
+//! `rust/tests/proptest_shard.rs`).
+//!
+//! `coordinator::ServerConfig::num_shards` switches [`EmbeddingServer`]
+//! (and the `emberq serve --shards N` CLI) onto this engine.
+//!
+//! Memory note: shard slices are *copies* of the rows they own, and the
+//! server currently retains the original `TableSet` for metadata and
+//! validation, so sharded serving resident-costs ~2× the table bytes.
+//! Serving from the slices alone (dropping the leader's row data) is a
+//! ROADMAP item.
+//!
+//! [`EmbeddingServer`]: crate::coordinator::EmbeddingServer
+
+pub mod engine;
+pub mod partition;
+pub mod slice;
+
+pub use engine::ShardedEngine;
+pub use partition::{plan_partitions, RowPartition, TablePartition};
+pub use slice::ShardSlice;
+
+/// Configuration of the row-wise sharded execution engine.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Worker shards (each owns a row slice of every large table).
+    pub num_shards: usize,
+    /// Bounded work-queue depth per shard (backpressure).
+    pub queue_depth: usize,
+    /// Tables with fewer rows than this stay whole on one shard instead
+    /// of being split row-wise (splitting tiny tables only buys channel
+    /// overhead). `0` forces row-wise splitting of everything.
+    pub small_table_rows: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { num_shards: 4, queue_depth: 64, small_table_rows: 512 }
+    }
+}

@@ -1,0 +1,223 @@
+//! Row partitioning: which shard owns which rows of which table.
+//!
+//! Large tables are cut into contiguous row chunks (one per shard) so a
+//! shard's slice stays one cache/NUMA-friendly memory region and global →
+//! local id translation is two integer ops. Small tables are kept whole
+//! and spread across shards by row count — splitting a 100-row table
+//! eight ways buys nothing but channel traffic.
+
+use std::ops::Range;
+
+use crate::coordinator::Router;
+
+/// Contiguous-chunk row partition of one table: shard `s` owns global
+/// rows `[s·chunk, min((s+1)·chunk, rows))`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowPartition {
+    rows: usize,
+    num_shards: usize,
+    chunk: usize,
+}
+
+impl RowPartition {
+    /// Partition `rows` rows over `num_shards` chunks. With more shards
+    /// than rows, trailing shards own an empty range.
+    pub fn new(rows: usize, num_shards: usize) -> Self {
+        assert!(num_shards > 0, "need at least one shard");
+        let chunk = rows.div_ceil(num_shards).max(1);
+        RowPartition { rows, num_shards, chunk }
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    /// Total rows partitioned.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Shard owning global row `row`.
+    #[inline]
+    pub fn shard_of(&self, row: u32) -> usize {
+        ((row as usize) / self.chunk).min(self.num_shards - 1)
+    }
+
+    /// Shard-local row id of global row `row`.
+    #[inline]
+    pub fn local_of(&self, row: u32) -> u32 {
+        row - (self.shard_of(row) * self.chunk) as u32
+    }
+
+    /// Global row range owned by `shard`.
+    pub fn range_of(&self, shard: usize) -> Range<usize> {
+        let lo = (shard * self.chunk).min(self.rows);
+        let hi = ((shard + 1) * self.chunk).min(self.rows);
+        lo..hi
+    }
+}
+
+/// How one table is laid out across the shard pool.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TablePartition {
+    /// The whole table lives on one shard (small tables).
+    Whole {
+        /// Owning shard.
+        shard: usize,
+        /// Row count (global == local ids).
+        rows: usize,
+    },
+    /// Rows split into contiguous chunks, one per shard.
+    RowWise(RowPartition),
+}
+
+impl TablePartition {
+    /// `(owning shard, shard-local row id)` of global row `row`.
+    #[inline]
+    pub fn shard_and_local(&self, row: u32) -> (usize, u32) {
+        match self {
+            TablePartition::Whole { shard, .. } => (*shard, row),
+            TablePartition::RowWise(p) => (p.shard_of(row), p.local_of(row)),
+        }
+    }
+
+    /// Global row range owned by `shard`.
+    pub fn range_of(&self, shard: usize) -> Range<usize> {
+        match self {
+            TablePartition::Whole { shard: owner, rows } => {
+                if shard == *owner {
+                    0..*rows
+                } else {
+                    0..0
+                }
+            }
+            TablePartition::RowWise(p) => p.range_of(shard),
+        }
+    }
+
+    /// The single shard all `ids` land on, if they do (`None` when the
+    /// ids span shards, or when `ids` is empty).
+    pub fn one_shard_for(&self, ids: &[u32]) -> Option<usize> {
+        let (first, _) = self.shard_and_local(*ids.first()?);
+        ids.iter()
+            .all(|&id| self.shard_and_local(id).0 == first)
+            .then_some(first)
+    }
+}
+
+/// Plan the partition of every table: tables with fewer than
+/// `small_table_rows` rows stay whole (balanced across shards by row
+/// count via [`Router::balanced`]); the rest split row-wise.
+pub fn plan_partitions(
+    rows_per_table: &[usize],
+    num_shards: usize,
+    small_table_rows: usize,
+) -> Vec<TablePartition> {
+    let n = num_shards.max(1);
+    // Row-wise tables load every shard equally, so only whole tables
+    // carry weight in the balancing pass.
+    let loads: Vec<usize> = rows_per_table
+        .iter()
+        .map(|&r| if r < small_table_rows { r.max(1) } else { 0 })
+        .collect();
+    let router = Router::balanced(&loads, n);
+    rows_per_table
+        .iter()
+        .enumerate()
+        .map(|(t, &rows)| {
+            if rows < small_table_rows {
+                TablePartition::Whole { shard: router.shard_of(t), rows }
+            } else {
+                TablePartition::RowWise(RowPartition::new(rows, n))
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_exactly_once() {
+        for (rows, shards) in [(10usize, 4usize), (1, 8), (8, 8), (100, 3), (7, 7), (5, 1)] {
+            let p = RowPartition::new(rows, shards);
+            let mut seen = vec![0u32; rows];
+            for s in 0..shards {
+                for g in p.range_of(s) {
+                    assert_eq!(p.shard_of(g as u32), s, "rows={rows} shards={shards} g={g}");
+                    let local = p.local_of(g as u32) as usize;
+                    assert_eq!(g - p.range_of(s).start, local);
+                    seen[g] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "rows={rows} shards={shards}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn local_ids_are_dense_from_zero() {
+        let p = RowPartition::new(10, 4); // chunk 3: [0,3) [3,6) [6,9) [9,10)
+        assert_eq!(p.shard_of(9), 3);
+        assert_eq!(p.local_of(9), 0);
+        assert_eq!(p.local_of(5), 2);
+        assert_eq!(p.range_of(3), 9..10);
+    }
+
+    #[test]
+    fn more_shards_than_rows_leaves_trailing_empty() {
+        let p = RowPartition::new(2, 4);
+        assert_eq!(p.range_of(0), 0..1);
+        assert_eq!(p.range_of(1), 1..2);
+        assert!(p.range_of(2).is_empty());
+        assert!(p.range_of(3).is_empty());
+    }
+
+    #[test]
+    fn whole_partition_maps_identity() {
+        let p = TablePartition::Whole { shard: 2, rows: 5 };
+        assert_eq!(p.shard_and_local(3), (2, 3));
+        assert_eq!(p.range_of(2), 0..5);
+        assert!(p.range_of(0).is_empty());
+        assert_eq!(p.one_shard_for(&[0, 4, 2]), Some(2));
+    }
+
+    #[test]
+    fn one_shard_for_detects_spans() {
+        let p = TablePartition::RowWise(RowPartition::new(10, 2)); // chunk 5
+        assert_eq!(p.one_shard_for(&[0, 1, 4]), Some(0));
+        assert_eq!(p.one_shard_for(&[5, 9]), Some(1));
+        assert_eq!(p.one_shard_for(&[4, 5]), None);
+        assert_eq!(p.one_shard_for(&[]), None);
+    }
+
+    #[test]
+    fn plan_splits_large_keeps_small_whole() {
+        let plan = plan_partitions(&[1000, 10, 20, 1000], 4, 100);
+        assert!(matches!(plan[0], TablePartition::RowWise(_)));
+        assert!(matches!(plan[1], TablePartition::Whole { rows: 10, .. }));
+        assert!(matches!(plan[2], TablePartition::Whole { rows: 20, .. }));
+        assert!(matches!(plan[3], TablePartition::RowWise(_)));
+    }
+
+    #[test]
+    fn plan_threshold_zero_forces_rowwise() {
+        let plan = plan_partitions(&[5, 7], 3, 0);
+        assert!(plan.iter().all(|p| matches!(p, TablePartition::RowWise(_))));
+    }
+
+    #[test]
+    fn plan_balances_whole_tables() {
+        // Four whole tables of equal size over two shards: two per shard.
+        let plan = plan_partitions(&[10, 10, 10, 10], 2, 100);
+        let mut per_shard = [0usize; 2];
+        for p in &plan {
+            match p {
+                TablePartition::Whole { shard, .. } => per_shard[*shard] += 1,
+                TablePartition::RowWise(_) => panic!("expected whole"),
+            }
+        }
+        assert_eq!(per_shard, [2, 2]);
+    }
+}

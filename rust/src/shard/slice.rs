@@ -1,0 +1,227 @@
+//! Per-shard table slices: each shard's private copy of the rows it owns,
+//! kept in the table's native storage format so the shard streams exactly
+//! the bytes the unsharded kernel would for those rows.
+
+use crate::coordinator::TableSet;
+use crate::shard::partition::TablePartition;
+use crate::sls::SlsArgs;
+use crate::table::serial::AnyTable;
+use crate::table::{CodebookKind, CodebookTable, EmbeddingTable, FusedTable};
+
+/// One shard's slice of every table in a [`TableSet`]. `tables[t]` is
+/// `None` when the shard owns no rows of table `t` (whole tables on other
+/// shards, or trailing shards of a short table).
+pub struct ShardSlice {
+    tables: Vec<Option<AnyTable>>,
+}
+
+impl ShardSlice {
+    /// Materialize shard `shard`'s slice of `set` under `partitions`
+    /// (one entry per table, as from [`plan_partitions`]).
+    ///
+    /// [`plan_partitions`]: crate::shard::partition::plan_partitions
+    pub fn build(set: &TableSet, partitions: &[TablePartition], shard: usize) -> ShardSlice {
+        assert_eq!(partitions.len(), set.num_tables());
+        let tables = partitions
+            .iter()
+            .enumerate()
+            .map(|(t, p)| {
+                let range = p.range_of(shard);
+                if range.is_empty() {
+                    None
+                } else {
+                    Some(slice_rows(set.table(t), range.start, range.end))
+                }
+            })
+            .collect();
+        ShardSlice { tables }
+    }
+
+    /// Does this shard own any rows of `table`?
+    pub fn owns(&self, table: usize) -> bool {
+        self.tables[table].is_some()
+    }
+
+    /// Embedding dimension of `table` (panics if not owned).
+    pub fn dim_of(&self, table: usize) -> usize {
+        self.tables[table].as_ref().expect("shard owns table rows").dim()
+    }
+
+    /// Rows of `table` held by this shard (0 if none).
+    pub fn rows_of(&self, table: usize) -> usize {
+        self.tables[table].as_ref().map_or(0, AnyTable::rows)
+    }
+
+    /// Bytes held by this shard across all slices.
+    pub fn size_bytes(&self) -> usize {
+        self.tables.iter().flatten().map(AnyTable::size_bytes).sum()
+    }
+
+    /// Pool `local_ids` (shard-local row ids) from `table` into `out`
+    /// (one segment of `dim` floats), with the format's optimized kernel.
+    pub fn pool(&self, table: usize, local_ids: &[u32], out: &mut [f32]) {
+        let t = self.tables[table].as_ref().expect("shard owns table rows");
+        let lengths = [local_ids.len() as u32];
+        let args = SlsArgs::new(local_ids, &lengths, t.rows()).expect("validated local ids");
+        t.sls_view().sls(&args, out);
+    }
+}
+
+/// Copy rows `[lo, hi)` of `table` into a new table of the same format.
+fn slice_rows(table: &AnyTable, lo: usize, hi: usize) -> AnyTable {
+    match table {
+        AnyTable::F32(t) => {
+            let d = t.dim();
+            AnyTable::F32(EmbeddingTable::from_data(d, t.data()[lo * d..hi * d].to_vec()))
+        }
+        AnyTable::Fused(t) => {
+            let rb = t.row_bytes();
+            AnyTable::Fused(FusedTable::from_raw(
+                hi - lo,
+                t.dim(),
+                t.nbits(),
+                t.scale_bias_dtype(),
+                t.data()[lo * rb..hi * rb].to_vec(),
+            ))
+        }
+        AnyTable::Codebook(t) => AnyTable::Codebook(slice_codebook(t, lo, hi)),
+    }
+}
+
+fn slice_codebook(t: &CodebookTable, lo: usize, hi: usize) -> CodebookTable {
+    let mut codes = Vec::new();
+    for i in lo..hi {
+        codes.extend_from_slice(t.codes_of_row(i));
+    }
+    match t.kind() {
+        CodebookKind::Rowwise => {
+            // Per-row codebooks travel with their rows.
+            let mut books = Vec::new();
+            for i in lo..hi {
+                books.extend_from_slice(t.codebook_of_row(i));
+            }
+            CodebookTable::from_raw(
+                hi - lo,
+                t.dim(),
+                CodebookKind::Rowwise,
+                t.scale_bias_dtype(),
+                codes,
+                books,
+                Vec::new(),
+            )
+        }
+        CodebookKind::TwoTier { k } => {
+            // The K shared codebooks are small (16 floats each); every
+            // shard keeps the full set so cluster ids stay valid.
+            let mut books = Vec::new();
+            for b in 0..k {
+                books.extend_from_slice(t.raw_codebook(b));
+            }
+            let clusters: Vec<u32> = (lo..hi).map(|i| t.cluster_of_row(i)).collect();
+            CodebookTable::from_raw(
+                hi - lo,
+                t.dim(),
+                CodebookKind::TwoTier { k },
+                t.scale_bias_dtype(),
+                codes,
+                books,
+                clusters,
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GreedyQuantizer;
+    use crate::shard::partition::plan_partitions;
+    use crate::table::ScaleBiasDtype;
+
+    fn set_of(tables: Vec<AnyTable>) -> TableSet {
+        TableSet::new(tables)
+    }
+
+    #[test]
+    fn f32_slice_rows_match_source() {
+        let t = EmbeddingTable::randn(10, 6, 1);
+        let sliced = slice_rows(&AnyTable::F32(t.clone()), 3, 7);
+        match &sliced {
+            AnyTable::F32(s) => {
+                assert_eq!(s.rows(), 4);
+                for i in 0..4 {
+                    assert_eq!(s.row(i), t.row(3 + i));
+                }
+            }
+            _ => panic!("format changed"),
+        }
+    }
+
+    #[test]
+    fn fused_slice_rows_match_source() {
+        let t = EmbeddingTable::randn(12, 16, 2);
+        let f = t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
+        let sliced = slice_rows(&AnyTable::Fused(f.clone()), 5, 12);
+        match &sliced {
+            AnyTable::Fused(s) => {
+                assert_eq!(s.rows(), 7);
+                for i in 0..7 {
+                    assert_eq!(s.dequantize_row(i), f.dequantize_row(5 + i));
+                }
+            }
+            _ => panic!("format changed"),
+        }
+    }
+
+    #[test]
+    fn codebook_slices_match_source() {
+        let t = EmbeddingTable::randn(9, 8, 3);
+        for kind in [CodebookKind::Rowwise, CodebookKind::TwoTier { k: 3 }] {
+            let c = t.quantize_codebook(kind, ScaleBiasDtype::F32);
+            let sliced = slice_rows(&AnyTable::Codebook(c.clone()), 2, 8);
+            match &sliced {
+                AnyTable::Codebook(s) => {
+                    assert_eq!(s.rows(), 6);
+                    let mut a = vec![0.0f32; 8];
+                    let mut b = a.clone();
+                    for i in 0..6 {
+                        s.dequantize_row_into(i, &mut a);
+                        c.dequantize_row_into(2 + i, &mut b);
+                        assert_eq!(a, b, "{kind:?} row {i}");
+                    }
+                }
+                _ => panic!("format changed"),
+            }
+        }
+    }
+
+    #[test]
+    fn shard_slice_pools_its_rows_exactly() {
+        let t = EmbeddingTable::randn(20, 4, 4);
+        let set = set_of(vec![AnyTable::F32(t.clone())]);
+        let partitions = plan_partitions(&[20], 4, 0); // chunk 5
+        let slice = ShardSlice::build(&set, &partitions, 1); // rows 5..10
+        assert!(slice.owns(0));
+        assert_eq!(slice.rows_of(0), 5);
+        let mut out = vec![0.0f32; 4];
+        slice.pool(0, &[0, 4], &mut out); // global rows 5 and 9
+        let mut want = vec![0.0f32; 4];
+        set.pool(0, &[5, 9], &mut want);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn unowned_table_is_none() {
+        let t = EmbeddingTable::randn(4, 4, 5);
+        let set = set_of(vec![AnyTable::F32(t)]);
+        let partitions = plan_partitions(&[4], 3, 100); // whole, on some shard s
+        let owner = match &partitions[0] {
+            TablePartition::Whole { shard, .. } => *shard,
+            _ => panic!("expected whole"),
+        };
+        for s in 0..3 {
+            let slice = ShardSlice::build(&set, &partitions, s);
+            assert_eq!(slice.owns(0), s == owner, "shard {s}");
+        }
+    }
+}

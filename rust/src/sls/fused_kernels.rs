@@ -137,7 +137,12 @@ mod tests {
     use crate::table::{EmbeddingTable, ScaleBiasDtype};
     use crate::util::Rng;
 
-    fn random_args(rng: &mut Rng, rows: usize, segs: usize, max_len: usize) -> (Vec<u32>, Vec<u32>) {
+    fn random_args(
+        rng: &mut Rng,
+        rows: usize,
+        segs: usize,
+        max_len: usize,
+    ) -> (Vec<u32>, Vec<u32>) {
         let lengths: Vec<u32> = (0..segs).map(|_| rng.below(max_len + 1) as u32).collect();
         let total: usize = lengths.iter().map(|&l| l as usize).sum();
         let indices: Vec<u32> = (0..total).map(|_| rng.below(rows) as u32).collect();

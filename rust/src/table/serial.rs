@@ -56,6 +56,16 @@ impl AnyTable {
             AnyTable::Codebook(t) => t.size_bytes(),
         }
     }
+
+    /// Format-generic SLS dispatch view (shared by the coordinator's
+    /// table-parallel pool and the row-wise shard engine).
+    pub fn sls_view(&self) -> crate::sls::SlsTable<'_> {
+        match self {
+            AnyTable::F32(t) => crate::sls::SlsTable::F32(t),
+            AnyTable::Fused(t) => crate::sls::SlsTable::Fused(t),
+            AnyTable::Codebook(t) => crate::sls::SlsTable::Codebook(t),
+        }
+    }
 }
 
 fn sb_code(sb: ScaleBiasDtype) -> u8 {

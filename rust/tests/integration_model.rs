@@ -42,7 +42,8 @@ fn training_learns_then_quantization_stays_neutral() {
     assert!(fp32 < 0.67, "model did not learn: {fp32}");
 
     // 4-bit GREEDY: Table-3 neutrality (<1% relative delta at d=16).
-    let q = QuantizedDlrm::from_uniform(&model, &GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
+    let q =
+        QuantizedDlrm::from_uniform(&model, &GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
     let ql = mean_loss(batches.iter().map(|b| q.eval_logloss(b)));
     assert!(
         (ql - fp32).abs() / fp32 < 0.01,
@@ -109,7 +110,8 @@ fn kmeans_exact_at_d16_model_level() {
 fn size_ratios_at_model_level_match_paper() {
     let (model, _) = train_model(32, 50);
     // GREEDY(FP16) at d=32: paper says 15.62%.
-    let q = QuantizedDlrm::from_uniform(&model, &GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
+    let q =
+        QuantizedDlrm::from_uniform(&model, &GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
     let ratio = q.tables_bytes() as f64 / model.tables_bytes() as f64;
     assert!((ratio - 0.15625).abs() < 1e-6, "ratio {ratio}");
     // KMEANS(FP16) at d=32: paper says 37.50%.

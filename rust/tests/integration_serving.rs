@@ -34,11 +34,15 @@ fn all_formats_serve_consistent_results() {
     let ref_server = mk(fp32.iter().cloned().map(AnyTable::F32).collect());
     let int4_server = mk(fp32
         .iter()
-        .map(|t| AnyTable::Fused(t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16)))
+        .map(|t| {
+            AnyTable::Fused(t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16))
+        })
         .collect());
     let cb_server = mk(fp32
         .iter()
-        .map(|t| AnyTable::Codebook(t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32)))
+        .map(|t| {
+            AnyTable::Codebook(t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32))
+        })
         .collect());
 
     for req in trace.requests.iter().take(20) {
@@ -63,7 +67,8 @@ fn int4_serves_from_a_fraction_of_the_bytes() {
     let int4_set = TableSet::new(
         fp32.iter()
             .map(|t| {
-                AnyTable::Fused(t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16))
+                let f = t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
+                AnyTable::Fused(f)
             })
             .collect(),
     );
@@ -84,6 +89,7 @@ fn metrics_account_for_every_request_and_lookup() {
             shards: 3,
             queue_depth: 4,
             batch: BatchPolicy { max_batch: 7, ..Default::default() },
+            ..Default::default()
         },
     );
     let trace = RequestTrace::generate(&TraceConfig {

@@ -80,6 +80,72 @@ fn prop_batcher_preserves_order_and_items() {
 }
 
 #[test]
+fn stress_concurrent_clients_match_serial_replay() {
+    // Eight client threads hammer one server with mixed batch sizes;
+    // afterwards every per-request output must equal a serial replay of
+    // the same request through the same server. Run on both execution
+    // paths — table-parallel and row-sharded — which are deterministic
+    // per request by construction (private reply channels; shard-ordered
+    // merge), so equality is exact.
+    for num_shards in [0usize, 3] {
+        let num_tables = 4;
+        let rows = 150;
+        let dim = 8;
+        let set = TableSet::new(
+            (0..num_tables)
+                .map(|t| {
+                    let tab = EmbeddingTable::randn(rows, dim, 0xC0FE + t as u64);
+                    AnyTable::Fused(tab.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F32))
+                })
+                .collect(),
+        );
+        let server = EmbeddingServer::start(
+            set,
+            ServerConfig { shards: 2, num_shards, queue_depth: 4, ..Default::default() },
+        );
+        // Deterministic per-client request streams.
+        let client_reqs: Vec<Vec<Request>> = (0..8)
+            .map(|c| {
+                let mut rng = Rng::new(0xBEE5 + c as u64);
+                (0..30).map(|_| random_request(&mut rng, num_tables, rows)).collect()
+            })
+            .collect();
+        let fw = num_tables * dim;
+        let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            let server = &server;
+            let handles: Vec<_> = client_reqs
+                .iter()
+                .map(|reqs| {
+                    scope.spawn(move || {
+                        let mut got = vec![0.0f32; reqs.len() * fw];
+                        let mut i = 0usize;
+                        let mut sizes = [1usize, 3, 5, 2, 7].into_iter().cycle();
+                        while i < reqs.len() {
+                            let b = sizes.next().unwrap().min(reqs.len() - i);
+                            server
+                                .lookup_batch_into(&reqs[i..i + b], &mut got[i * fw..(i + b) * fw]);
+                            i += b;
+                        }
+                        got
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (c, reqs) in client_reqs.iter().enumerate() {
+            for (i, req) in reqs.iter().enumerate() {
+                let serial = server.lookup(req);
+                assert_eq!(
+                    &results[c][i * fw..(i + 1) * fw],
+                    serial.as_slice(),
+                    "num_shards={num_shards} client {c} request {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_server_equals_sequential_reference() {
     // Whatever the shard count, queue depth, or batch grouping, the
     // server must return exactly what direct TableSet pooling returns.
@@ -110,7 +176,8 @@ fn prop_server_equals_sequential_reference() {
             for (t, ids) in req.ids.iter().enumerate() {
                 let mut want = vec![0.0f32; dim];
                 reference.pool(t, ids, &mut want);
-                let got = &out[s * num_tables * dim + t * dim..s * num_tables * dim + (t + 1) * dim];
+                let base = s * num_tables * dim;
+                let got = &out[base + t * dim..base + (t + 1) * dim];
                 assert_eq!(got, want.as_slice(), "case {case} slot {s} table {t}");
             }
         }

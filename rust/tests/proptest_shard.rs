@@ -1,0 +1,241 @@
+//! Property tests for the row-wise shard engine: sharded lookups must
+//! reproduce the unsharded `TableSet::pool` result for every table
+//! format, shard counts 1–8, and adversarial request shapes (hand-rolled
+//! property loops — the crate builds offline with no test-framework
+//! dependencies).
+//!
+//! Exactness contract (see the `shard` module docs): whenever a
+//! segment's ids live on a single shard — shard count 1, whole tables,
+//! or the all-ids-in-one-chunk adversarial case — the sharded sum runs
+//! the same kernel over byte-identical rows in the same order and must
+//! match *bit for bit*. When ids genuinely span shards the pooled sum is
+//! the same set of addends re-associated, so agreement is to f32
+//! reassociation error, bounded here by a tolerance scaled to Σ|addend|.
+
+use emberq::coordinator::{EmbeddingServer, ServerConfig, TableSet};
+use emberq::data::trace::Request;
+use emberq::quant::AsymQuantizer;
+use emberq::shard::{ShardConfig, ShardedEngine};
+use emberq::table::serial::AnyTable;
+use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+use emberq::util::Rng;
+
+const CASES: usize = 240;
+
+/// Deterministic table builder so the reference set and the engine's set
+/// hold identical contents.
+fn build_tables(
+    seed: u64,
+    fmt: usize,
+    num_tables: usize,
+    rows: usize,
+    dim: usize,
+) -> Vec<AnyTable> {
+    (0..num_tables)
+        .map(|t| {
+            let tab = EmbeddingTable::randn(rows, dim, seed + 31 * t as u64);
+            match fmt {
+                0 => AnyTable::F32(tab),
+                1 => AnyTable::Fused(tab.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16)),
+                2 => AnyTable::Fused(tab.quantize_fused(&AsymQuantizer, 8, ScaleBiasDtype::F32)),
+                3 => AnyTable::Codebook(
+                    tab.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32),
+                ),
+                _ => {
+                    let k = (1 + t % 3).min(rows);
+                    AnyTable::Codebook(
+                        tab.quantize_codebook(CodebookKind::TwoTier { k }, ScaleBiasDtype::F16),
+                    )
+                }
+            }
+        })
+        .collect()
+}
+
+/// The f32 values row `id` contributes to a pooled sum.
+fn decoded_row(t: &AnyTable, id: u32) -> Vec<f32> {
+    match t {
+        AnyTable::F32(t) => t.row(id as usize).to_vec(),
+        AnyTable::Fused(t) => t.dequantize_row(id as usize),
+        AnyTable::Codebook(t) => {
+            let mut out = vec![0.0f32; t.dim()];
+            t.dequantize_row_into(id as usize, &mut out);
+            out
+        }
+    }
+}
+
+/// Request generator biased toward the shapes that break sharding:
+/// empty segments, repeated ids, all ids inside one chunk, and ids
+/// straddling chunk boundaries.
+fn adversarial_ids(rng: &mut Rng, rows: usize, shards: usize) -> Vec<u32> {
+    let chunk = rows.div_ceil(shards).max(1);
+    match rng.below(5) {
+        0 => Vec::new(),
+        1 => vec![rng.below(rows) as u32; 1 + rng.below(8)], // one id, repeated
+        2 => {
+            // All ids inside shard 0's chunk.
+            let len = 1 + rng.below(8);
+            (0..len).map(|_| rng.below(chunk.min(rows)) as u32).collect()
+        }
+        3 => {
+            let len = rng.below(13); // may be empty
+            (0..len).map(|_| rng.below(rows) as u32).collect()
+        }
+        _ => {
+            // Chunk-boundary straddlers.
+            let mut ids = vec![0u32, (rows - 1) as u32];
+            if chunk < rows {
+                ids.push(chunk as u32);
+                ids.push((chunk - 1) as u32);
+            }
+            for _ in 0..rng.below(4) {
+                ids.push(rng.below(rows) as u32);
+            }
+            rng.shuffle(&mut ids);
+            ids
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_equals_unsharded_pool() {
+    let mut rng = Rng::new(0x5A4D);
+    for case in 0..CASES {
+        let num_tables = 1 + rng.below(4);
+        let rows = 1 + rng.below(120);
+        let dim = [3usize, 4, 8, 16, 33][rng.below(5)];
+        let shards = 1 + (case % 8); // cover every count in 1..=8
+        let fmt = case % 5;
+        // Quarter of the cases force whole-table placement; the rest
+        // split row-wise.
+        let small_table_rows = if rng.below(4) == 0 { usize::MAX } else { 0 };
+        let seed = 0xE0_0000 + case as u64 * 101;
+        let reference = TableSet::new(build_tables(seed, fmt, num_tables, rows, dim));
+        let engine_set = TableSet::new(build_tables(seed, fmt, num_tables, rows, dim));
+        let engine = ShardedEngine::start(
+            &engine_set,
+            &ShardConfig {
+                num_shards: shards,
+                queue_depth: 1 + rng.below(8),
+                small_table_rows,
+            },
+        );
+        let reqs: Vec<Request> = (0..1 + rng.below(5))
+            .map(|_| Request {
+                ids: (0..num_tables)
+                    .map(|_| adversarial_ids(&mut rng, rows, shards))
+                    .collect(),
+            })
+            .collect();
+        let fw = engine.feature_width();
+        let mut out = vec![0.0f32; reqs.len() * fw];
+        engine.lookup_batch_into(&reqs, &mut out);
+        for (slot, req) in reqs.iter().enumerate() {
+            for (t, ids) in req.ids.iter().enumerate() {
+                let mut want = vec![0.0f32; dim];
+                reference.pool(t, ids, &mut want);
+                let got = &out[slot * fw + t * dim..slot * fw + (t + 1) * dim];
+                let single_shard =
+                    ids.is_empty() || engine.partition(t).one_shard_for(ids).is_some();
+                if single_shard {
+                    assert_eq!(
+                        got,
+                        want.as_slice(),
+                        "case {case} slot {slot} table {t}: single-shard segment must be exact \
+                         (fmt {fmt}, {rows} rows, {shards} shards)"
+                    );
+                } else {
+                    let mut sum_abs = vec![0.0f64; dim];
+                    for &id in ids {
+                        for (j, v) in decoded_row(reference.table(t), id).iter().enumerate() {
+                            sum_abs[j] += v.abs() as f64;
+                        }
+                    }
+                    for j in 0..dim {
+                        let tol = 1e-4f32 * (1.0 + sum_abs[j] as f32);
+                        assert!(
+                            (got[j] - want[j]).abs() <= tol,
+                            "case {case} slot {slot} table {t} j={j}: sharded {} vs pooled {} \
+                             (tol {tol}, fmt {fmt}, {rows} rows, {shards} shards)",
+                            got[j],
+                            want[j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_server_batch_single_and_repeat_consistent() {
+    // The ServerConfig { num_shards } integration: batched lookups,
+    // single lookups, and repeated runs must all agree bitwise (the
+    // engine's shard-ordered merge makes it deterministic).
+    let mut rng = Rng::new(0x5A4E);
+    for case in 0..40u64 {
+        let num_tables = 1 + rng.below(3);
+        let rows = 10 + rng.below(100);
+        let dim = [4usize, 8, 16][rng.below(3)];
+        let shards = 1 + rng.below(8);
+        let server = EmbeddingServer::start(
+            TableSet::new(build_tables(
+                0xF0_0000 + case * 7,
+                case as usize % 5,
+                num_tables,
+                rows,
+                dim,
+            )),
+            ServerConfig { num_shards: shards, ..Default::default() },
+        );
+        assert!(server.is_sharded());
+        let reqs: Vec<Request> = (0..2 + rng.below(6))
+            .map(|_| Request {
+                ids: (0..num_tables)
+                    .map(|_| adversarial_ids(&mut rng, rows, shards))
+                    .collect(),
+            })
+            .collect();
+        let fw = num_tables * dim;
+        let mut a = vec![0.0f32; reqs.len() * fw];
+        let mut b = vec![1.0f32; reqs.len() * fw]; // stale garbage must vanish
+        server.lookup_batch_into(&reqs, &mut a);
+        server.lookup_batch_into(&reqs, &mut b);
+        assert_eq!(a, b, "case {case}: repeated batch runs must agree bitwise");
+        for (slot, req) in reqs.iter().enumerate() {
+            let single = server.lookup(req);
+            assert_eq!(
+                &a[slot * fw..(slot + 1) * fw],
+                single.as_slice(),
+                "case {case} slot {slot}: batch vs single lookup"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_ids_in_one_shard_is_bit_identical_per_format() {
+    // The headline adversarial case, pinned explicitly per format: every
+    // id inside one chunk -> sharded output == unsharded pool, bitwise.
+    for fmt in 0..5 {
+        let rows = 64;
+        let dim = 16;
+        let shards = 4; // chunk 16
+        let reference = TableSet::new(build_tables(0xAB0 + fmt as u64, fmt, 2, rows, dim));
+        let engine_set = TableSet::new(build_tables(0xAB0 + fmt as u64, fmt, 2, rows, dim));
+        let engine = ShardedEngine::start(
+            &engine_set,
+            &ShardConfig { num_shards: shards, small_table_rows: 0, ..Default::default() },
+        );
+        // Chunk 2 of table 0 (rows 32..48), chunk 0 of table 1.
+        let req = Request { ids: vec![vec![40, 32, 47, 40], vec![0, 15, 7]] };
+        let got = engine.lookup(&req);
+        for (t, ids) in req.ids.iter().enumerate() {
+            assert_eq!(engine.partition(t).one_shard_for(ids), Some(if t == 0 { 2 } else { 0 }));
+            let mut want = vec![0.0f32; dim];
+            reference.pool(t, ids, &mut want);
+            assert_eq!(&got[t * dim..(t + 1) * dim], want.as_slice(), "fmt {fmt} table {t}");
+        }
+    }
+}
