@@ -3,32 +3,31 @@
 //! Full three-layer composition on the request path:
 //!
 //! 1. L3 (Rust): the coordinator batches a Zipf request trace and answers
-//!    pooled lookups from fused INT4 tables with the native SLS kernels.
-//! 2. L2/L1 (AOT): the pooled features are scored by the JAX-lowered MLP
-//!    executable (`artifacts/mlp_b64.hlo.txt`) through PJRT — Python never
-//!    runs; weights come from a Rust-trained model.
+//!    pooled lookups from fused INT4 tables with the native SLS kernels
+//!    on the slice-resident sharded engine (per-shard stats + residency
+//!    breakdown printed per format).
+//! 2. L2/L1 (AOT, `--features xla` only): the pooled features are scored
+//!    by the JAX-lowered MLP executable (`artifacts/mlp_b64.hlo.txt`)
+//!    through PJRT — Python never runs; weights come from a Rust-trained
+//!    model. Requires `make artifacts`.
 //!
-//! Requires `make artifacts`. Reports latency percentiles + throughput for
-//! FP32 vs INT8 vs INT4 tables (the serving analogue of Table 1).
+//! Reports latency percentiles + throughput for FP32 vs INT8 vs INT4
+//! tables (the serving analogue of Table 1).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_quantized
+//! cargo run --release --example serve_quantized
+//! make artifacts && cargo run --release --features xla --example serve_quantized
 //! ```
-
-use std::path::Path;
 
 use emberq::coordinator::{BatchPolicy, EmbeddingServer, ServerConfig, TableSet};
 use emberq::data::trace::{RequestTrace, TraceConfig};
-use emberq::model::{Dlrm, DlrmConfig};
 use emberq::quant::GreedyQuantizer;
-use emberq::runtime::PjrtRuntime;
 use emberq::table::serial::AnyTable;
 use emberq::table::{EmbeddingTable, ScaleBiasDtype};
 
 // Must match python/compile/aot.py (see artifacts/manifest.json).
 const NUM_TABLES: usize = 8;
 const DIM: usize = 32;
-const DENSE_DIM: usize = 13;
 const BATCH: usize = 64;
 const ROWS: usize = 50_000;
 
@@ -78,13 +77,30 @@ fn main() {
                 num_shards: 4, // row-wise sharded engine (the multi-core path)
                 queue_depth: 64,
                 batch: BatchPolicy { max_batch: BATCH, ..Default::default() },
+                ..Default::default()
             },
         );
         let m = server.serve_trace(&trace);
         println!("{kind:>5} ({bytes:>9} B): {}", m.summary());
+        // Slice-resident accounting: the engine owns the rows, the
+        // leader keeps a catalog, and per-shard skew is visible.
+        println!("{}", server.size_report().summary());
+        println!("{}", m.per_shard_summary());
     }
 
-    // Full request path: lookups + PJRT-compiled MLP scoring.
+    score_with_pjrt(&fp32, &trace);
+}
+
+/// Full request path: lookups + PJRT-compiled MLP scoring.
+#[cfg(feature = "xla")]
+fn score_with_pjrt(fp32: &[EmbeddingTable], trace: &RequestTrace) {
+    use std::path::Path;
+
+    use emberq::model::{Dlrm, DlrmConfig};
+    use emberq::runtime::PjrtRuntime;
+
+    const DENSE_DIM: usize = 13;
+
     let artifact = Path::new("artifacts/mlp_b64.hlo.txt");
     if !artifact.exists() {
         println!("\n(artifacts missing — run `make artifacts` to add MLP scoring)");
@@ -112,12 +128,13 @@ fn main() {
     });
     let feature_dim = NUM_TABLES * DIM + DENSE_DIM;
     let server = EmbeddingServer::start(
-        build_tables("int4", &fp32),
+        build_tables("int4", fp32),
         ServerConfig {
             shards: 4,
             num_shards: 4,
             queue_depth: 64,
             batch: BatchPolicy { max_batch: BATCH, ..Default::default() },
+            ..Default::default()
         },
     );
 
@@ -156,4 +173,10 @@ fn main() {
         dt,
         scored as f64 / dt.as_secs_f64()
     );
+}
+
+/// Without the `xla` feature the AOT leg is compiled out.
+#[cfg(not(feature = "xla"))]
+fn score_with_pjrt(_fp32: &[EmbeddingTable], _trace: &RequestTrace) {
+    println!("\n(xla feature disabled — rebuild with --features xla for AOT MLP scoring)");
 }

@@ -69,6 +69,7 @@ fn main() {
                 num_shards: 0,
                 queue_depth: 64,
                 batch: BatchPolicy::default(),
+                ..Default::default()
             },
         );
         let m = server.serve_trace(&tr);
@@ -94,6 +95,7 @@ fn main() {
                 num_shards: 0,
                 queue_depth: 64,
                 batch: BatchPolicy::default(),
+                ..Default::default()
             },
         );
         let ml = legacy.serve_trace(&tr);
@@ -105,6 +107,7 @@ fn main() {
                 num_shards: shards,
                 queue_depth: 64,
                 batch: BatchPolicy::default(),
+                ..Default::default()
             },
         );
         let ms = sharded.serve_trace(&tr);
@@ -126,6 +129,7 @@ fn main() {
                 num_shards: 0,
                 queue_depth: 64,
                 batch: BatchPolicy { max_batch, ..Default::default() },
+                ..Default::default()
             },
         );
         let m = server.serve_trace(&tr);

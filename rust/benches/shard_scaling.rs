@@ -3,18 +3,24 @@
 //! (large uniform-random pooled lookups over one big fused table).
 //!
 //! The baseline is the raw `sls_fused` kernel on one core — the exact
-//! Table 1 INT4 measurement. The engine runs the same 200k pooled rows
-//! as a 2000-request batch split across N shards. Target: ≥2× at 4
-//! shards.
+//! Table 1 INT4 measurement. The engine runs the same pooled rows as a
+//! batch split across N shards (slice-resident: each engine consumes its
+//! own copy of the set). Per shard count it reports throughput, speedup,
+//! and per-shard service-latency percentiles (p50/p95/p99) so skew is
+//! visible, plus one machine-readable JSON line per configuration for
+//! the CI bench artifact.
+//!
+//! Target: ≥2× at 4 shards.
 //!
 //! ```bash
 //! cargo bench --bench shard_scaling            # full (1M rows)
 //! cargo bench --bench shard_scaling -- --quick # small + fast
+//! cargo bench --bench shard_scaling -- --tiny  # CI smoke budget
 //! ```
 
-use emberq::coordinator::TableSet;
+use emberq::coordinator::{ShardStats, TableSet};
 use emberq::data::trace::Request;
-use emberq::eval::TableWriter;
+use emberq::eval::{JsonWriter, TableWriter};
 use emberq::quant::AsymQuantizer;
 use emberq::shard::{ShardConfig, ShardedEngine};
 use emberq::sls::{sls_fused, SlsArgs};
@@ -24,25 +30,30 @@ use emberq::util::bench::measure;
 use emberq::util::Rng;
 
 const DIM: usize = 128;
-const SEGMENTS: usize = 2_000;
 const POOL: usize = 100;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
-    let rows = if quick { 200_000 } else { 1_000_000 };
-    let (warm, reps) = if quick { (0, 3) } else { (1, 5) };
-    let lookups = SEGMENTS * POOL;
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let (rows, segments, warm, reps) = if tiny {
+        (50_000, 200, 0, 1) // CI smoke: compile + one honest pass
+    } else if quick {
+        (200_000, 2_000, 0, 3)
+    } else {
+        (1_000_000, 2_000, 1, 5)
+    };
+    let lookups = segments * POOL;
 
     let fp32 = EmbeddingTable::randn_sigma(rows, DIM, 0.1, 0x51AD);
     let fused = fp32.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16);
     drop(fp32);
     let mut rng = Rng::new(0x51AE);
     let indices: Vec<u32> = (0..lookups).map(|_| rng.below(rows) as u32).collect();
-    let lengths = vec![POOL as u32; SEGMENTS];
+    let lengths = vec![POOL as u32; segments];
 
     // Single-threaded Table 1 baseline: the raw INT4 SLS kernel.
     let args = SlsArgs::new(&indices, &lengths, rows).unwrap();
-    let mut sink = vec![0.0f32; SEGMENTS * DIM];
+    let mut sink = vec![0.0f32; segments * DIM];
     let base = measure(warm, reps, || {
         sls_fused(&fused, &args, &mut sink);
         sink[0]
@@ -50,36 +61,83 @@ fn main() {
     let base_gsums = (lookups * DIM) as f64 / base.secs() / 1e9;
     println!(
         "single-thread INT4 SLS baseline: {base_gsums:.3} GSums/s \
-         ({rows} rows, d={DIM}, {lookups} pooled rows / {SEGMENTS} segments)"
+         ({rows} rows, d={DIM}, {lookups} pooled rows / {segments} segments)"
     );
 
     // The same pooled work as a batch of requests through the engine.
-    let set = TableSet::new(vec![AnyTable::Fused(fused.clone())]);
     let reqs: Vec<Request> = indices
         .chunks(POOL)
         .map(|c| Request { ids: vec![c.to_vec()] })
         .collect();
-    let mut out = vec![0.0f32; SEGMENTS * DIM];
-    let mut tw = TableWriter::new(vec!["shards", "GSums/s", "speedup vs 1-thread"]);
+    let mut out = vec![0.0f32; segments * DIM];
+    let mut tw = TableWriter::new(vec![
+        "shards",
+        "GSums/s",
+        "speedup vs 1-thread",
+        "per-shard p50/p95/p99 (max over shards)",
+    ]);
     for shards in [1usize, 2, 4, 8] {
+        // Each engine consumes its own set (slice-resident ownership).
+        let set = TableSet::new(vec![AnyTable::Fused(fused.clone())]);
         let engine = ShardedEngine::start(
-            &set,
+            set,
             &ShardConfig { num_shards: shards, small_table_rows: 0, ..Default::default() },
         );
-        let m = measure(warm, reps, || {
+        // Warm outside `measure` and snapshot, so the per-shard latency
+        // percentiles cover only the timed repetitions (cold-cache
+        // warmup would otherwise dominate p99 at these sample counts).
+        for _ in 0..warm {
+            engine.lookup_batch_into(&reqs, &mut out);
+        }
+        let before = engine.shard_stats();
+        let m = measure(0, reps, || {
             engine.lookup_batch_into(&reqs, &mut out);
             out[0]
         });
         let gsums = (lookups * DIM) as f64 / m.secs() / 1e9;
+        let stats: Vec<ShardStats> = engine
+            .shard_stats()
+            .iter()
+            .zip(&before)
+            .map(|(a, b)| a.since(b))
+            .collect();
+        let p50s: Vec<f64> = stats
+            .iter()
+            .map(|s| s.latency.quantile(0.50).as_nanos() as f64)
+            .collect();
+        let p95s: Vec<f64> = stats
+            .iter()
+            .map(|s| s.latency.quantile(0.95).as_nanos() as f64)
+            .collect();
+        let p99s: Vec<f64> = stats
+            .iter()
+            .map(|s| s.latency.quantile(0.99).as_nanos() as f64)
+            .collect();
+        let worst = |v: &[f64]| v.iter().fold(0.0f64, |a, &b| a.max(b)) / 1e6;
         tw.row(vec![
             shards.to_string(),
             format!("{gsums:.3}"),
             format!("{:.2}x", gsums / base_gsums),
+            format!("{:.2}/{:.2}/{:.2} ms", worst(&p50s), worst(&p95s), worst(&p99s)),
         ]);
         eprintln!("shards={shards}: {gsums:.3} GSums/s ({:.2}x)", gsums / base_gsums);
+        // Machine-readable line for the CI artifact (one JSON object per
+        // shard count; `grep '^{'` extracts them).
+        let mut jw = JsonWriter::new();
+        jw.str_field("bench", "shard_scaling")
+            .num_field("shards", shards as f64)
+            .num_field("rows", rows as f64)
+            .num_field("segments", segments as f64)
+            .num_field("baseline_gsums_per_s", base_gsums)
+            .num_field("gsums_per_s", gsums)
+            .num_field("speedup", gsums / base_gsums)
+            .num_array("per_shard_p50_ns", &p50s)
+            .num_array("per_shard_p95_ns", &p95s)
+            .num_array("per_shard_p99_ns", &p99s);
+        println!("{}", jw.finish());
     }
     println!(
-        "\nShard scaling — INT4 SLS, Table 1 workload as a {SEGMENTS}-request batch:\n{}",
+        "\nShard scaling — INT4 SLS, Table 1 workload as a {segments}-request batch:\n{}",
         tw.render()
     );
     println!("Paper-deployment check: >=2x at 4 shards over the single-threaded INT4 baseline.");

@@ -109,11 +109,17 @@ COMMANDS:
   eval      --rows N --dim D [--seed S] [--bits 4]
             normalized-l2 sweep of all methods over a random N(0,1) table
   serve     --table FILE [--shards N] [--workers N] [--requests N] [--batch N]
-            [--listen ADDR]
+            [--replicate-hot N] [--small-table-rows N] [--listen ADDR]
             serve a table file against a synthetic Zipf trace (or over TCP).
             --shards N > 0 splits every table's rows across N worker
-            shards (the multi-core path); --shards 0 falls back to the
-            table-parallel pool with --workers threads
+            shards (the multi-core, slice-resident path); --shards 0
+            falls back to the table-parallel pool with --workers threads.
+            --replicate-hot N replicates the N hottest *whole* tables
+            (router-observed load from the trace) across all shards;
+            tables below --small-table-rows rows (default 512) stay
+            whole and are the replication candidates.
+            Sharded runs print per-shard service stats and the resident-
+            bytes breakdown (engine vs catalog) after the trace replay
   info      --in FILE
             describe a saved table file"
     );
@@ -239,7 +245,15 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let requests: usize = flags.num("requests", 10_000)?;
     let max_batch: usize = flags.num("batch", 64)?;
     let copies: usize = flags.num("copies", 8)?;
+    let replicate_hot: usize = flags.num("replicate-hot", 0)?;
+    let small_table_rows: usize =
+        flags.num("small-table-rows", emberq::shard::ShardConfig::default().small_table_rows)?;
     let listen = flags.get("listen").map(str::to_string);
+    if replicate_hot > 0 && shards == 0 {
+        eprintln!(
+            "warning: --replicate-hot only applies to the sharded path (--shards > 0); ignoring"
+        );
+    }
 
     let loaded = open_table(table_path)?;
     let rows = loaded.rows();
@@ -262,6 +276,29 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         set.dim(),
         set.size_bytes()
     );
+    // Trace mode generates the trace up front so hot-table replication
+    // can rank candidates by the load the router will actually observe.
+    // TCP mode has no trace; replication then falls back to row counts.
+    let trace = listen.is_none().then(|| {
+        RequestTrace::generate(&TraceConfig {
+            requests,
+            num_tables: copies,
+            rows,
+            ..Default::default()
+        })
+    });
+    let hot_loads: Vec<u64> = match &trace {
+        Some(tr) if replicate_hot > 0 => {
+            let mut loads = vec![0u64; copies];
+            for req in &tr.requests {
+                for (t, ids) in req.ids.iter().enumerate() {
+                    loads[t] += ids.len() as u64;
+                }
+            }
+            loads
+        }
+        _ => Vec::new(),
+    };
     let server = EmbeddingServer::start(
         set,
         ServerConfig {
@@ -269,10 +306,23 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             num_shards: shards,
             queue_depth: 64,
             batch: BatchPolicy { max_batch, ..Default::default() },
+            small_table_rows,
+            replicate_hot,
+            hot_loads,
         },
     );
+    if replicate_hot > 0 && shards == 1 {
+        eprintln!("note: --replicate-hot needs more than one shard; nothing to replicate");
+    } else if replicate_hot > 0 && shards > 1 && server.size_report().replicated_bytes == 0 {
+        eprintln!(
+            "note: --replicate-hot found no whole-table candidates — tables with \
+             >= {small_table_rows} rows (--small-table-rows) are row-wise partitioned, \
+             which load-balances inherently"
+        );
+    }
     if let Some(addr) = listen {
-        // Socket mode: serve lookups over TCP until interrupted.
+        // Socket mode: serve lookups over TCP until interrupted (the
+        // wire-level stats frame reports the same stats block remotely).
         let server = std::sync::Arc::new(server);
         let front = emberq::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &addr)
             .map_err(|e| format!("bind {addr}: {e}"))?;
@@ -280,18 +330,17 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             "listening on {} (protocol: see coordinator::tcp docs); Ctrl-C to stop",
             front.addr()
         );
+        println!("{}", server.stats_text());
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
         }
     }
-    let trace = RequestTrace::generate(&TraceConfig {
-        requests,
-        num_tables: copies,
-        rows,
-        ..Default::default()
-    });
-    let metrics = server.serve_trace(&trace);
+    let metrics = server.serve_trace(trace.as_ref().expect("trace mode"));
     println!("{}", metrics.summary());
+    if server.is_sharded() {
+        println!("{}", metrics.per_shard_summary());
+        println!("{}", server.size_report().summary());
+    }
     Ok(())
 }
 
@@ -371,6 +420,24 @@ mod tests {
             ]))
             .unwrap();
         }
+        // Sharded with hot-table replication (50-row tables stay whole,
+        // so the hottest one gets replicated across the two shards).
+        run(&s(&[
+            "serve",
+            "--table",
+            path.to_str().unwrap(),
+            "--shards",
+            "2",
+            "--copies",
+            "2",
+            "--requests",
+            "40",
+            "--batch",
+            "8",
+            "--replicate-hot",
+            "1",
+        ]))
+        .unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,256 @@
+//! The table catalog: the only table state the leader retains once the
+//! slice-resident shard engine owns the rows.
+//!
+//! A [`TableCatalog`] records names, dims, row counts, format tags, and
+//! logical byte sizes — enough for request validation at the protocol
+//! edge and for size reporting — at a few dozen bytes per table, so
+//! sharded serving resident-costs ~1× the table bytes instead of the ~2×
+//! the leader's duplicate `TableSet` used to impose.
+
+use crate::coordinator::server::TableSet;
+use crate::data::trace::Request;
+use crate::table::serial::AnyTable;
+use crate::table::{CodebookKind, ScaleBiasDtype};
+
+/// Storage format of a table, as metadata (the payload-defining details —
+/// scales, biases, codebooks — live inside the shard slices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FormatTag {
+    /// FP32 rows.
+    F32,
+    /// Uniform-quantized fused rows (packed codes + scale/bias tail).
+    Fused {
+        /// Code width in bits (4 or 8).
+        nbits: u32,
+        /// Tail precision.
+        scale_bias: ScaleBiasDtype,
+    },
+    /// Codebook-quantized rows.
+    Codebook {
+        /// Row-wise or two-tier codebooks.
+        kind: CodebookKind,
+    },
+}
+
+impl FormatTag {
+    /// The tag of a concrete table.
+    pub fn of(table: &AnyTable) -> FormatTag {
+        match table {
+            AnyTable::F32(_) => FormatTag::F32,
+            AnyTable::Fused(t) => FormatTag::Fused {
+                nbits: t.nbits(),
+                scale_bias: t.scale_bias_dtype(),
+            },
+            AnyTable::Codebook(t) => FormatTag::Codebook { kind: t.kind() },
+        }
+    }
+
+    /// Short human label (`fp32`, `int4/f16`, `codebook`, ...).
+    pub fn label(&self) -> String {
+        match self {
+            FormatTag::F32 => "fp32".to_string(),
+            FormatTag::Fused { nbits, scale_bias } => {
+                let sb = match scale_bias {
+                    ScaleBiasDtype::F32 => "f32",
+                    ScaleBiasDtype::F16 => "f16",
+                };
+                format!("int{nbits}/{sb}")
+            }
+            FormatTag::Codebook { kind } => match kind {
+                CodebookKind::Rowwise => "codebook".to_string(),
+                CodebookKind::TwoTier { k } => format!("codebook2t/k{k}"),
+            },
+        }
+    }
+}
+
+/// Catalog entry for one table.
+#[derive(Clone, Debug)]
+pub struct TableInfo {
+    /// Stable name (synthesized `table_{t}` for in-process sets).
+    pub name: String,
+    /// Vocabulary size.
+    pub rows: usize,
+    /// Embedding dimension.
+    pub dim: usize,
+    /// Storage format.
+    pub format: FormatTag,
+    /// Logical payload bytes of the table (what the shard slices hold in
+    /// aggregate, before any hot-chunk replication).
+    pub bytes: usize,
+}
+
+/// Lightweight, leader-resident description of a served table set:
+/// request validation and size reporting without holding any row bytes.
+#[derive(Clone, Debug)]
+pub struct TableCatalog {
+    entries: Vec<TableInfo>,
+    /// `offsets[t]..offsets[t]+dims[t]` is table `t`'s slice of a
+    /// response vector; `offsets[T]` is the total feature width.
+    offsets: Vec<usize>,
+}
+
+impl TableCatalog {
+    /// Catalog `set` (cheap: metadata only, no row bytes are copied).
+    pub fn of(set: &TableSet) -> TableCatalog {
+        let entries = (0..set.num_tables())
+            .map(|t| {
+                let table = set.table(t);
+                TableInfo {
+                    name: format!("table_{t}"),
+                    rows: table.rows(),
+                    dim: table.dim(),
+                    format: FormatTag::of(table),
+                    bytes: table.size_bytes(),
+                }
+            })
+            .collect();
+        let mut offsets: Vec<usize> =
+            (0..set.num_tables()).map(|t| set.offset_of(t)).collect();
+        offsets.push(set.feature_width());
+        TableCatalog { entries, offsets }
+    }
+
+    /// Number of tables.
+    pub fn num_tables(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Entry for table `t`.
+    pub fn entry(&self, t: usize) -> &TableInfo {
+        &self.entries[t]
+    }
+
+    /// Rows of table `t`.
+    pub fn rows_of(&self, t: usize) -> usize {
+        self.entries[t].rows
+    }
+
+    /// Embedding dimension of table `t`.
+    pub fn dim_of(&self, t: usize) -> usize {
+        self.entries[t].dim
+    }
+
+    /// Offset of table `t` inside a concatenated response vector.
+    pub fn offset_of(&self, t: usize) -> usize {
+        self.offsets[t]
+    }
+
+    /// Total width of a concatenated response (Σ dims).
+    pub fn feature_width(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Logical bytes of the cataloged tables (Σ per-table payload).
+    pub fn table_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Approximate leader-resident bytes of the catalog itself (the
+    /// metadata overhead sharded serving pays on top of the slices).
+    pub fn resident_bytes(&self) -> usize {
+        let entry_bytes: usize = self
+            .entries
+            .iter()
+            .map(|e| std::mem::size_of::<TableInfo>() + e.name.len())
+            .sum();
+        std::mem::size_of::<TableCatalog>()
+            + entry_bytes
+            + self.offsets.len() * std::mem::size_of::<usize>()
+    }
+
+    /// Validate a request against the catalog: table arity and row-id
+    /// ranges. This is the leader-side check that used to require the
+    /// full `TableSet`.
+    pub fn validate(&self, req: &Request) -> Result<(), String> {
+        if req.ids.len() != self.num_tables() {
+            return Err(format!(
+                "expected {} tables, got {}",
+                self.num_tables(),
+                req.ids.len()
+            ));
+        }
+        for (t, ids) in req.ids.iter().enumerate() {
+            let rows = self.rows_of(t);
+            if let Some(&bad) = ids.iter().find(|&&i| i as usize >= rows) {
+                return Err(format!(
+                    "row id {bad} out of range for table {t} ({rows} rows)"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GreedyQuantizer;
+    use crate::table::EmbeddingTable;
+
+    fn mixed_set() -> TableSet {
+        let a = EmbeddingTable::randn(40, 8, 1);
+        let b = EmbeddingTable::randn(20, 16, 2);
+        TableSet::new(vec![
+            AnyTable::F32(a),
+            AnyTable::Fused(b.quantize_fused(
+                &GreedyQuantizer::default(),
+                4,
+                ScaleBiasDtype::F16,
+            )),
+        ])
+    }
+
+    #[test]
+    fn catalog_mirrors_set_metadata() {
+        let set = mixed_set();
+        let cat = TableCatalog::of(&set);
+        assert_eq!(cat.num_tables(), 2);
+        assert_eq!(cat.rows_of(0), 40);
+        assert_eq!(cat.rows_of(1), 20);
+        assert_eq!(cat.dim_of(1), 16);
+        assert_eq!(cat.offset_of(0), 0);
+        assert_eq!(cat.offset_of(1), 8);
+        assert_eq!(cat.feature_width(), 24);
+        assert_eq!(cat.table_bytes(), set.size_bytes());
+        assert_eq!(cat.entry(0).format, FormatTag::F32);
+        assert_eq!(
+            cat.entry(1).format,
+            FormatTag::Fused { nbits: 4, scale_bias: ScaleBiasDtype::F16 }
+        );
+        assert_eq!(cat.entry(0).name, "table_0");
+    }
+
+    #[test]
+    fn catalog_is_tiny_next_to_the_tables() {
+        let set = mixed_set();
+        let cat = TableCatalog::of(&set);
+        // The whole point: metadata, not a second copy of the rows.
+        assert!(cat.resident_bytes() < set.size_bytes() / 4);
+        assert!(cat.resident_bytes() < 1024);
+    }
+
+    #[test]
+    fn validate_checks_arity_and_ranges() {
+        let cat = TableCatalog::of(&mixed_set());
+        let ok = Request { ids: vec![vec![0, 39], vec![19]] };
+        assert!(cat.validate(&ok).is_ok());
+        let bad_arity = Request { ids: vec![vec![0]] };
+        assert!(cat.validate(&bad_arity).unwrap_err().contains("expected 2 tables"));
+        let bad_row = Request { ids: vec![vec![40], vec![]] };
+        assert!(cat.validate(&bad_row).unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn format_labels() {
+        assert_eq!(FormatTag::F32.label(), "fp32");
+        assert_eq!(
+            FormatTag::Fused { nbits: 4, scale_bias: ScaleBiasDtype::F16 }.label(),
+            "int4/f16"
+        );
+        assert_eq!(
+            FormatTag::Codebook { kind: CodebookKind::TwoTier { k: 5 } }.label(),
+            "codebook2t/k5"
+        );
+    }
+}

@@ -57,6 +57,25 @@ impl LatencyHistogram {
         self.max_ns = self.max_ns.max(other.max_ns);
     }
 
+    /// The samples recorded after `earlier` was snapshotted from this
+    /// same (monotonically growing) histogram: bucket-wise difference.
+    /// `max` is an upper bound — the lifetime max, since the window max
+    /// is not recoverable from two snapshots.
+    pub fn since(&self, earlier: &LatencyHistogram) -> LatencyHistogram {
+        let buckets = self
+            .buckets
+            .iter()
+            .zip(&earlier.buckets)
+            .map(|(a, b)| a - b)
+            .collect();
+        LatencyHistogram {
+            buckets,
+            count: self.count - earlier.count,
+            sum_ns: self.sum_ns - earlier.sum_ns,
+            max_ns: if self.count == earlier.count { 0 } else { self.max_ns },
+        }
+    }
+
     /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count
@@ -99,6 +118,63 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-shard service statistics, recorded by each shard worker and
+/// merged on snapshot so per-shard skew stays visible.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Service latency of the shard's tasks (one task = one batch's work
+    /// for this shard).
+    pub latency: LatencyHistogram,
+    /// Tasks served.
+    pub tasks: u64,
+    /// `(slot, table)` segments answered.
+    pub segments: u64,
+    /// Pooled row lookups performed.
+    pub lookups: u64,
+}
+
+impl ShardStats {
+    /// Merge another shard's stats in (for fleet-wide aggregation).
+    pub fn merge(&mut self, other: &ShardStats) {
+        self.latency.merge(&other.latency);
+        self.tasks += other.tasks;
+        self.segments += other.segments;
+        self.lookups += other.lookups;
+    }
+
+    /// The activity recorded after `earlier` was snapshotted from this
+    /// same shard (see [`LatencyHistogram::since`] for the `max` caveat).
+    pub fn since(&self, earlier: &ShardStats) -> ShardStats {
+        ShardStats {
+            latency: self.latency.since(&earlier.latency),
+            tasks: self.tasks - earlier.tasks,
+            segments: self.segments - earlier.segments,
+            lookups: self.lookups - earlier.lookups,
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let (p50, p95, p99) = self.latency.percentiles();
+        format!(
+            "{} tasks, {} segments, {} lookups, p50={:.0?} p95={:.0?} p99={:.0?}",
+            self.tasks, self.segments, self.lookups, p50, p95, p99,
+        )
+    }
+}
+
+/// One `shard {i}: ...` line per entry — the shared per-shard rendering
+/// used by [`ServerMetrics::per_shard_summary`] and the server's stats
+/// text (so the CLI output and the TCP stats frame cannot drift apart).
+pub fn per_shard_lines(stats: &[ShardStats]) -> String {
+    stats
+        .iter()
+        .enumerate()
+        .map(|(i, s)| format!("shard {i}: {}", s.summary()))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
 /// Aggregated server metrics for a serving run.
 #[derive(Clone, Debug, Default)]
 pub struct ServerMetrics {
@@ -112,6 +188,10 @@ pub struct ServerMetrics {
     pub batches: u64,
     /// Wall-clock of the run.
     pub wall: Duration,
+    /// Per-shard service stats covering exactly this run (sharded engine
+    /// only; `serve_trace` diffs snapshots taken around the replay).
+    /// Empty on the table-parallel path.
+    pub per_shard: Vec<ShardStats>,
 }
 
 impl ServerMetrics {
@@ -154,6 +234,12 @@ impl ServerMetrics {
             p95,
             p99,
         )
+    }
+
+    /// Multi-line per-shard breakdown (empty string when the run was not
+    /// sharded). One line per shard so skew is visible at a glance.
+    pub fn per_shard_summary(&self) -> String {
+        per_shard_lines(&self.per_shard)
     }
 }
 
@@ -199,6 +285,54 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.quantile(0.99), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn shard_stats_merge_and_summary() {
+        let mut a = ShardStats { tasks: 1, segments: 2, lookups: 5, ..Default::default() };
+        a.latency.record(Duration::from_micros(10));
+        let mut b = ShardStats { tasks: 3, segments: 4, lookups: 7, ..Default::default() };
+        b.latency.record(Duration::from_micros(30));
+        a.merge(&b);
+        assert_eq!(a.tasks, 4);
+        assert_eq!(a.segments, 6);
+        assert_eq!(a.lookups, 12);
+        assert_eq!(a.latency.count(), 2);
+        assert!(a.summary().contains("4 tasks"));
+    }
+
+    #[test]
+    fn since_isolates_the_window() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_micros(20));
+        let snap = h.clone();
+        h.record(Duration::from_micros(40));
+        let window = h.since(&snap);
+        assert_eq!(window.count(), 1);
+        assert_eq!(h.since(&h.clone()).count(), 0);
+        assert_eq!(h.since(&h.clone()).max(), Duration::ZERO);
+        let mut a = ShardStats { tasks: 5, segments: 9, lookups: 20, ..Default::default() };
+        a.latency.record(Duration::from_micros(10));
+        let snap = a.clone();
+        a.tasks += 1;
+        a.segments += 2;
+        a.lookups += 3;
+        a.latency.record(Duration::from_micros(30));
+        let w = a.since(&snap);
+        assert_eq!((w.tasks, w.segments, w.lookups), (1, 2, 3));
+        assert_eq!(w.latency.count(), 1);
+    }
+
+    #[test]
+    fn per_shard_summary_lists_every_shard() {
+        assert_eq!(ServerMetrics::default().per_shard_summary(), "");
+        let m = ServerMetrics {
+            per_shard: vec![ShardStats::default(), ShardStats::default()],
+            ..Default::default()
+        };
+        let text = m.per_shard_summary();
+        assert!(text.contains("shard 0:") && text.contains("shard 1:"));
     }
 
     #[test]

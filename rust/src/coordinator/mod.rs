@@ -12,8 +12,13 @@
 //!   and answers pooled-lookup work items over bounded channels
 //!   (backpressure by construction). With `ServerConfig::num_shards > 0`
 //!   it instead drives the row-wise [`crate::shard`] engine, which
-//!   splits every table's *rows* (not just whole tables) across workers.
-//! * [`metrics`] — latency histograms (p50/p95/p99) and counters.
+//!   splits every table's *rows* (not just whole tables) across workers
+//!   and *owns* the table bytes outright (slice-resident serving).
+//! * [`catalog`] — the leader-resident table metadata (names, dims, row
+//!   counts, format tags) that validates requests and reports sizes once
+//!   the shard engine owns the rows.
+//! * [`metrics`] — latency histograms (p50/p95/p99), counters, and
+//!   per-shard service stats.
 //!
 //! Threads + bounded channels (no async runtime): lookups are CPU/memory
 //! bound with sub-millisecond service times, so a thread-per-shard model
@@ -21,13 +26,15 @@
 //! executor here.
 
 pub mod batcher;
+pub mod catalog;
 pub mod metrics;
 pub mod router;
 pub mod server;
 pub mod tcp;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::{LatencyHistogram, ServerMetrics};
+pub use catalog::{FormatTag, TableCatalog, TableInfo};
+pub use metrics::{LatencyHistogram, ServerMetrics, ShardStats};
 pub use router::{Router, ShardPlan};
 pub use server::{EmbeddingServer, ServerConfig, TableSet};
 pub use tcp::{TcpClient, TcpFront};

@@ -57,6 +57,17 @@ impl Router {
         Router { assignment, shards }
     }
 
+    /// Table ids ranked by observed load, hottest first (ties to the
+    /// lowest table id, so the ranking is deterministic). At most `n`
+    /// ids are returned. The shard engine uses this to pick hot-chunk
+    /// replication candidates from router-observed traffic.
+    pub fn hottest(loads: &[u64], n: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..loads.len()).collect();
+        order.sort_by_key(|&t| (std::cmp::Reverse(loads[t]), t));
+        order.truncate(n);
+        order
+    }
+
     /// Number of shards.
     pub fn shards(&self) -> usize {
         self.shards
@@ -150,6 +161,14 @@ mod tests {
         let r = Router::balanced(&[5; 9], 3);
         let counts: Vec<usize> = (0..3).map(|s| r.tables_of_shard(s).len()).collect();
         assert_eq!(counts, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn hottest_ranks_by_load_deterministically() {
+        let loads = [5u64, 100, 7, 100, 0];
+        assert_eq!(Router::hottest(&loads, 3), vec![1, 3, 2]);
+        assert_eq!(Router::hottest(&loads, 0), Vec::<usize>::new());
+        assert_eq!(Router::hottest(&loads, 99).len(), 5);
     }
 
     #[test]

@@ -6,12 +6,16 @@
 //!   + `shards` worker threads. Each worker answers pooled-lookup work
 //!   for the tables the [`Router`] assigned to it, over a *bounded*
 //!   channel — when workers fall behind, submission blocks, which is the
-//!   backpressure production routers rely on.
+//!   backpressure production routers rely on. Workers share one
+//!   `Arc<TableSet>`.
 //! * **Row-sharded** (`num_shards > 0`): the [`crate::shard`] engine —
 //!   every table is partitioned row-wise across `num_shards` workers and
 //!   each request's pooled sum is scatter-gathered from per-shard
-//!   partials. This is the path that scales a single huge table across
-//!   cores.
+//!   partials. This path **consumes** the `TableSet`: the shard slices
+//!   are the sole owners of table bytes, and the leader keeps only a
+//!   [`TableCatalog`] (names, dims, row counts, format tags) for request
+//!   validation and size reporting — sharded serving resident-costs ~1×
+//!   the table bytes instead of the ~2× a duplicate leader copy imposes.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -19,9 +23,11 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::coordinator::batcher::BatchPolicy;
-use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::catalog::TableCatalog;
+use crate::coordinator::metrics::{ServerMetrics, ShardStats};
 use crate::coordinator::router::Router;
 use crate::data::trace::{Request, RequestTrace};
+use crate::eval::size::SizeReport;
 use crate::shard::{ShardConfig, ShardedEngine};
 use crate::sls::SlsArgs;
 use crate::table::serial::AnyTable;
@@ -97,6 +103,13 @@ impl TableSet {
         &self.tables[t]
     }
 
+    /// Consume the set, yielding the tables. The shard engine carves
+    /// these into per-shard slices one table at a time, so no leader-side
+    /// copy of any row survives startup.
+    pub fn into_tables(self) -> Vec<AnyTable> {
+        self.tables
+    }
+
     /// Pool `ids` from `table` into `out` (one segment).
     pub fn pool(&self, table: usize, ids: &[u32], out: &mut [f32]) {
         let t = &self.tables[table];
@@ -128,6 +141,17 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Dynamic-batching policy for [`EmbeddingServer::serve_trace`].
     pub batch: BatchPolicy,
+    /// Sharded path only: tables with fewer rows than this stay whole on
+    /// one shard (see [`ShardConfig::small_table_rows`]). Whole tables
+    /// are the only hot-replication candidates, so raising this widens
+    /// what `replicate_hot` can replicate.
+    pub small_table_rows: usize,
+    /// Sharded path only: replicate the `N` hottest whole tables to every
+    /// shard (see [`ShardConfig::replicate_hot`]).
+    pub replicate_hot: usize,
+    /// Sharded path only: router-observed per-table load ranking the
+    /// replication candidates (see [`ShardConfig::hot_loads`]).
+    pub hot_loads: Vec<u64>,
 }
 
 impl Default for ServerConfig {
@@ -137,44 +161,55 @@ impl Default for ServerConfig {
             num_shards: 0,
             queue_depth: 64,
             batch: BatchPolicy::default(),
+            small_table_rows: ShardConfig::default().small_table_rows,
+            replicate_hot: 0,
+            hot_loads: Vec::new(),
         }
     }
 }
 
-/// The serving runtime over a [`TableSet`]: router + table-parallel
-/// worker pool, or the row-sharded engine when `num_shards > 0`.
+/// The serving runtime: router + table-parallel worker pool over an
+/// `Arc<TableSet>`, or the slice-resident row-sharded engine when
+/// `num_shards > 0` (the leader then retains only the [`TableCatalog`]).
 pub struct EmbeddingServer {
     router: Router,
     senders: Vec<SyncSender<WorkItem>>,
     workers: Vec<JoinHandle<()>>,
     engine: Option<ShardedEngine>,
-    tables: Arc<TableSet>,
+    /// Table-parallel path only; `None` when the shard engine owns the
+    /// rows.
+    tables: Option<Arc<TableSet>>,
+    catalog: TableCatalog,
     cfg: ServerConfig,
 }
 
 impl EmbeddingServer {
     /// Start the worker pool (table-parallel or row-sharded per `cfg`).
     pub fn start(tables: TableSet, cfg: ServerConfig) -> Self {
-        let tables = Arc::new(tables);
-        let engine = if cfg.num_shards > 0 {
-            Some(ShardedEngine::start(
-                &tables,
-                &ShardConfig {
-                    num_shards: cfg.num_shards,
-                    queue_depth: cfg.queue_depth,
-                    ..ShardConfig::default()
-                },
-            ))
-        } else {
-            None
-        };
+        let catalog = TableCatalog::of(&tables);
         // In sharded mode `cfg.shards` is ignored (and may be 0); the
         // router is only consulted on the table-parallel path.
-        let router_shards = if engine.is_some() { 1 } else { cfg.shards };
+        let router_shards = if cfg.num_shards > 0 { 1 } else { cfg.shards };
         let router = Router::round_robin(tables.num_tables(), router_shards);
         let mut senders = Vec::new();
         let mut workers = Vec::new();
-        if engine.is_none() {
+        let (engine, tables) = if cfg.num_shards > 0 {
+            let engine = ShardedEngine::start(
+                tables, // consumed: the shard slices become the sole owners
+                // Exhaustive literal on purpose: a field added to
+                // ShardConfig fails to compile here instead of silently
+                // falling back to its default.
+                &ShardConfig {
+                    num_shards: cfg.num_shards,
+                    queue_depth: cfg.queue_depth,
+                    small_table_rows: cfg.small_table_rows,
+                    replicate_hot: cfg.replicate_hot,
+                    hot_loads: cfg.hot_loads.clone(),
+                },
+            );
+            (Some(engine), None)
+        } else {
+            let tables = Arc::new(tables);
             senders.reserve(cfg.shards);
             workers.reserve(cfg.shards);
             for shard in 0..cfg.shards {
@@ -189,13 +224,24 @@ impl EmbeddingServer {
                 );
                 senders.push(tx);
             }
-        }
-        EmbeddingServer { router, senders, workers, engine, tables, cfg }
+            (None, Some(tables))
+        };
+        EmbeddingServer { router, senders, workers, engine, tables, catalog, cfg }
     }
 
-    /// The served tables.
-    pub fn tables(&self) -> &TableSet {
-        &self.tables
+    /// The leader-resident catalog of the served tables (metadata only).
+    pub fn catalog(&self) -> &TableCatalog {
+        &self.catalog
+    }
+
+    /// Number of served tables.
+    pub fn num_tables(&self) -> usize {
+        self.catalog.num_tables()
+    }
+
+    /// Width of one response vector (Σ table dims).
+    pub fn feature_width(&self) -> usize {
+        self.catalog.feature_width()
     }
 
     /// Is the row-sharded engine active?
@@ -203,10 +249,60 @@ impl EmbeddingServer {
         self.engine.is_some()
     }
 
+    /// Per-shard service stats (sharded path only; cumulative since
+    /// start).
+    pub fn shard_stats(&self) -> Option<Vec<ShardStats>> {
+        self.engine.as_ref().map(ShardedEngine::shard_stats)
+    }
+
+    /// Router-observed per-table load (sharded path only; cumulative
+    /// since start).
+    pub fn observed_loads(&self) -> Option<Vec<u64>> {
+        self.engine.as_ref().map(ShardedEngine::observed_loads)
+    }
+
+    /// Resident-bytes breakdown of this deployment (engine-resident vs
+    /// leader/catalog-resident).
+    pub fn size_report(&self) -> SizeReport {
+        match &self.engine {
+            Some(e) => SizeReport {
+                table_bytes: e.table_bytes(),
+                engine_bytes: e.shard_bytes().iter().sum(),
+                replicated_bytes: e.replicated_bytes(),
+                catalog_bytes: self.catalog.resident_bytes(),
+                per_shard_bytes: e.shard_bytes().to_vec(),
+            },
+            None => {
+                // Table-parallel workers share one Arc<TableSet>: the
+                // rows are resident exactly once.
+                let bytes = self.tables.as_ref().map_or(0, |t| t.size_bytes());
+                SizeReport {
+                    table_bytes: bytes,
+                    engine_bytes: bytes,
+                    replicated_bytes: 0,
+                    catalog_bytes: self.catalog.resident_bytes(),
+                    per_shard_bytes: Vec::new(),
+                }
+            }
+        }
+    }
+
+    /// Human-readable stats block: residency breakdown plus per-shard
+    /// service stats (what `emberq serve` prints and the TCP front's
+    /// stats frame returns).
+    pub fn stats_text(&self) -> String {
+        let mut out = self.size_report().summary();
+        if let Some(stats) = self.shard_stats() {
+            out.push('\n');
+            out.push_str(&crate::coordinator::metrics::per_shard_lines(&stats));
+        }
+        out
+    }
+
     /// Pooled lookup for one request: returns per-table pooled embeddings
     /// concatenated in table order (`feature_width` floats).
     pub fn lookup(&self, req: &Request) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.tables.feature_width()];
+        let mut out = vec![0.0f32; self.catalog.feature_width()];
         self.lookup_batch_into(std::slice::from_ref(req), &mut out);
         out
     }
@@ -221,8 +317,9 @@ impl EmbeddingServer {
             engine.lookup_batch_into(reqs, out);
             return;
         }
-        let fw = self.tables.feature_width();
-        let nt = self.tables.num_tables();
+        let tables = self.tables.as_ref().expect("table-parallel path retains the TableSet");
+        let fw = tables.feature_width();
+        let nt = tables.num_tables();
         assert_eq!(out.len(), reqs.len() * fw);
         // Group lookups per shard across the whole batch.
         let mut per_shard: Vec<Vec<(usize, usize, Vec<u32>)>> =
@@ -248,20 +345,24 @@ impl EmbeddingServer {
         for _ in 0..outstanding {
             let results = rrx.recv().expect("worker reply");
             for (slot, t, vec) in results {
-                let off = slot * fw + self.tables.offset_of(t);
+                let off = slot * fw + tables.offset_of(t);
                 out[off..off + vec.len()].copy_from_slice(&vec);
             }
         }
     }
 
-    /// Replay a trace through the dynamic batcher; returns metrics.
+    /// Replay a trace through the dynamic batcher; returns metrics
+    /// (including per-shard service stats on the sharded path).
     ///
     /// Requests are submitted open-loop in arrival order; each batch is
     /// formed by the configured [`BatchPolicy`] and dispatched to all
     /// shards at once.
     pub fn serve_trace(&self, trace: &RequestTrace) -> ServerMetrics {
         let mut metrics = ServerMetrics::default();
-        let fw = self.tables.feature_width();
+        let fw = self.catalog.feature_width();
+        // Per-shard stats are cumulative in the engine; snapshot before
+        // and after so the returned metrics cover exactly this replay.
+        let shard_before = self.shard_stats();
         let run_start = Instant::now();
         // Same clamp as `chunk_ranges`: batches are never larger than
         // `max_batch.max(1)` requests.
@@ -279,6 +380,13 @@ impl EmbeddingServer {
             metrics.batches += 1;
         }
         metrics.wall = run_start.elapsed();
+        if let (Some(before), Some(after)) = (shard_before, self.shard_stats()) {
+            metrics.per_shard = after
+                .iter()
+                .zip(&before)
+                .map(|(a, b)| a.since(b))
+                .collect();
+        }
         metrics
     }
 }
@@ -395,6 +503,7 @@ mod tests {
         assert!(m.batches >= 7); // 100 / 16 -> at least 7 batches
         assert!(m.throughput() > 0.0);
         assert_eq!(m.latency.count(), 100);
+        assert!(m.per_shard.is_empty()); // table-parallel path
     }
 
     #[test]
@@ -500,5 +609,78 @@ mod tests {
         assert_eq!(m.requests, 40);
         assert_eq!(m.lookups as usize, trace.total_lookups());
         assert_eq!(m.batches, 3); // ceil(40/16)
+        // Per-shard stats must account for every pooled lookup exactly —
+        // and cover only this run, even on a second replay (the engine's
+        // counters are cumulative; serve_trace diffs snapshots).
+        for replay in 0..2 {
+            let m = if replay == 0 { m.clone() } else { server.serve_trace(&trace) };
+            assert_eq!(m.per_shard.len(), 3, "replay {replay}");
+            let shard_lookups: u64 = m.per_shard.iter().map(|s| s.lookups).sum();
+            assert_eq!(shard_lookups, m.lookups, "replay {replay}");
+            let shard_samples: u64 = m.per_shard.iter().map(|s| s.latency.count()).sum();
+            let shard_tasks: u64 = m.per_shard.iter().map(|s| s.tasks).sum();
+            assert_eq!(shard_samples, shard_tasks, "replay {replay}");
+            assert!(!m.per_shard_summary().is_empty());
+        }
+    }
+
+    #[test]
+    fn sharded_server_drops_the_leader_copy() {
+        // The tentpole: after start, the leader holds a catalog (a few
+        // hundred bytes), not a second copy of the tables.
+        let (_, set) = quantized_set(3, 4000, 16);
+        let logical = set.size_bytes();
+        let server =
+            EmbeddingServer::start(set, ServerConfig { num_shards: 4, ..Default::default() });
+        let report = server.size_report();
+        assert_eq!(report.table_bytes, logical);
+        assert_eq!(report.engine_bytes, logical); // fused carving is byte-exact
+        assert_eq!(report.replicated_bytes, 0);
+        assert!(report.catalog_bytes < logical / 100, "catalog must be epsilon");
+        assert!(report.residency_ratio() < 1.01);
+        assert_eq!(report.per_shard_bytes.iter().sum::<usize>(), report.engine_bytes);
+        // Catalog still answers the validation questions the TableSet
+        // used to.
+        assert_eq!(server.num_tables(), 3);
+        assert_eq!(server.catalog().rows_of(2), 4000);
+        assert_eq!(server.feature_width(), 48);
+        assert!(server.stats_text().contains("resident"));
+    }
+
+    #[test]
+    fn table_parallel_residency_is_one_copy_too() {
+        let (_, set) = quantized_set(2, 100, 8);
+        let logical = set.size_bytes();
+        let server = EmbeddingServer::start(set, ServerConfig { shards: 3, ..Default::default() });
+        let report = server.size_report();
+        assert_eq!(report.engine_bytes, logical); // Arc-shared, one copy
+        assert!(report.per_shard_bytes.is_empty());
+        assert!(report.residency_ratio() < 1.01);
+    }
+
+    #[test]
+    fn replicated_server_results_match_unreplicated() {
+        let (_, a_set) = quantized_set(3, 60, 8);
+        let (_, b_set) = quantized_set(3, 60, 8);
+        let plain = EmbeddingServer::start(
+            a_set,
+            ServerConfig { num_shards: 3, ..Default::default() },
+        );
+        let replicated = EmbeddingServer::start(
+            b_set,
+            ServerConfig { num_shards: 3, replicate_hot: 2, ..Default::default() },
+        );
+        // 60-row tables stay whole under the default small-table
+        // threshold, so replication kicks in on the two hottest.
+        for i in 0..8u32 {
+            let req = Request { ids: vec![vec![i, 59 - i], vec![i], vec![7]] };
+            assert_eq!(plain.lookup(&req), replicated.lookup(&req), "request {i}");
+        }
+        let report = replicated.size_report();
+        assert!(report.replicated_bytes > 0);
+        assert_eq!(
+            report.engine_bytes,
+            report.table_bytes + report.replicated_bytes
+        );
     }
 }

@@ -8,27 +8,45 @@
 //!           repeated num_tables times: u32 table_id, u32 len, len × u32 ids
 //! response: u32 num_floats, num_floats × f32   (num_tables·dim, table order)
 //! error:    u32 0xFFFF_FFFF followed by u32 msg_len + utf8 message
+//! stats:    a request whose first u32 is 0xFFFF_FFFE returns
+//!           u32 0xFFFF_FFFE, u32 len, len × utf8 — a human-readable
+//!           stats block: front-side request metrics, the residency
+//!           breakdown, and per-shard service latency (sharded mode).
 //! ```
+//!
+//! Connections are accepted on the leader; request splitting and
+//! scatter-gather happen in the sharded engine behind
+//! [`EmbeddingServer`], which records per-shard service latency the
+//! stats frame (and [`TcpFront::stats_text`]) report. Request validation
+//! uses the leader's [`TableCatalog`] — the front never touches table
+//! bytes.
 //!
 //! One thread per connection (connections are few and long-lived in an
 //! embedding tier; the per-shard workers behind it do the real fan-out).
+//!
+//! [`TableCatalog`]: crate::coordinator::TableCatalog
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
+use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::server::EmbeddingServer;
 use crate::data::trace::Request;
 
 const ERR_SENTINEL: u32 = 0xFFFF_FFFF;
+const STATS_SENTINEL: u32 = 0xFFFF_FFFE;
 
 /// A running TCP front-end.
 pub struct TcpFront {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    server: Arc<EmbeddingServer>,
+    metrics: Arc<Mutex<ServerMetrics>>,
 }
 
 impl TcpFront {
@@ -39,6 +57,9 @@ impl TcpFront {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let conn_server = Arc::clone(&server);
+        let conn_metrics = Arc::clone(&metrics);
         listener.set_nonblocking(true)?;
         let accept_thread = std::thread::Builder::new()
             .name("emberq-tcp-accept".into())
@@ -47,12 +68,13 @@ impl TcpFront {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let srv = Arc::clone(&server);
+                            let srv = Arc::clone(&conn_server);
+                            let m = Arc::clone(&conn_metrics);
                             conns.push(
                                 std::thread::Builder::new()
                                     .name("emberq-tcp-conn".into())
                                     .spawn(move || {
-                                        let _ = handle_conn(stream, &srv);
+                                        let _ = handle_conn(stream, &srv, &m);
                                     })
                                     .expect("spawn conn"),
                             );
@@ -68,12 +90,29 @@ impl TcpFront {
                 }
             })
             .expect("spawn accept");
-        Ok(TcpFront { addr: local, stop, accept_thread: Some(accept_thread) })
+        Ok(TcpFront {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            server,
+            metrics,
+        })
     }
 
     /// Bound address (useful with port 0).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// Snapshot of the front's request metrics (per-request latency over
+    /// all connections).
+    pub fn metrics(&self) -> ServerMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// The stats block the wire-level stats frame returns.
+    pub fn stats_text(&self) -> String {
+        stats_text(&self.server, &self.metrics)
     }
 }
 
@@ -86,22 +125,50 @@ impl Drop for TcpFront {
     }
 }
 
+fn stats_text(server: &EmbeddingServer, metrics: &Mutex<ServerMetrics>) -> String {
+    let front = metrics.lock().unwrap().clone();
+    let (p50, p95, p99) = front.latency.percentiles();
+    format!(
+        "front: {} req, {} lookups, p50={:.0?} p95={:.0?} p99={:.0?}\n{}",
+        front.requests,
+        front.lookups,
+        p50,
+        p95,
+        p99,
+        server.stats_text(),
+    )
+}
+
 fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn handle_conn(stream: TcpStream, server: &EmbeddingServer) -> std::io::Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    server: &EmbeddingServer,
+    metrics: &Mutex<ServerMetrics>,
+) -> std::io::Result<()> {
     stream.set_nodelay(true)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    let nt = server.tables().num_tables();
+    let catalog = server.catalog();
+    let nt = catalog.num_tables();
     loop {
         let n = match read_u32(&mut reader) {
-            Ok(n) => n as usize,
+            Ok(n) => n,
             Err(_) => return Ok(()), // client closed
         };
+        if n == STATS_SENTINEL {
+            let text = stats_text(server, metrics);
+            writer.write_all(&STATS_SENTINEL.to_le_bytes())?;
+            writer.write_all(&(text.len() as u32).to_le_bytes())?;
+            writer.write_all(text.as_bytes())?;
+            writer.flush()?;
+            continue;
+        }
+        let n = n as usize;
         let mut err: Option<String> = None;
         let mut ids: Vec<Vec<u32>> = vec![Vec::new(); nt];
         if n != nt {
@@ -120,11 +187,15 @@ fn handle_conn(stream: TcpStream, server: &EmbeddingServer) -> std::io::Result<(
             }
             if table >= nt {
                 err.get_or_insert(format!("table {table} out of range"));
-            } else if lookup.iter().any(|&i| i as usize >= server.tables().rows_of(table)) {
-                err.get_or_insert(format!("row id out of range for table {table}"));
             } else {
                 ids[table] = lookup;
             }
+        }
+        // Wire-level framing errors (arity, table id) are checked above;
+        // the request itself is validated by the leader's catalog.
+        let req = Request { ids };
+        if err.is_none() {
+            err = catalog.validate(&req).err();
         }
         if let Some(msg) = err {
             writer.write_all(&ERR_SENTINEL.to_le_bytes())?;
@@ -133,7 +204,16 @@ fn handle_conn(stream: TcpStream, server: &EmbeddingServer) -> std::io::Result<(
             writer.flush()?;
             continue;
         }
-        let out = server.lookup(&Request { ids });
+        let pooled: usize = req.ids.iter().map(Vec::len).sum();
+        let t0 = Instant::now();
+        let out = server.lookup(&req);
+        let dt = t0.elapsed();
+        {
+            let mut m = metrics.lock().unwrap();
+            m.latency.record(dt);
+            m.requests += 1;
+            m.lookups += pooled as u64;
+        }
         writer.write_all(&(out.len() as u32).to_le_bytes())?;
         for v in &out {
             writer.write_all(&v.to_le_bytes())?;
@@ -185,6 +265,21 @@ impl TcpClient {
         }
         Ok(out)
     }
+
+    /// Fetch the server's stats block (front metrics + residency +
+    /// per-shard service latency).
+    pub fn stats(&mut self) -> std::io::Result<String> {
+        self.writer.write_all(&STATS_SENTINEL.to_le_bytes())?;
+        self.writer.flush()?;
+        let sentinel = read_u32(&mut self.reader)?;
+        if sentinel != STATS_SENTINEL {
+            return Err(std::io::Error::other("unexpected stats reply"));
+        }
+        let len = read_u32(&mut self.reader)? as usize;
+        let mut text = vec![0u8; len];
+        self.reader.read_exact(&mut text)?;
+        Ok(String::from_utf8_lossy(&text).into_owned())
+    }
 }
 
 #[cfg(test)]
@@ -195,7 +290,7 @@ mod tests {
     use crate::table::serial::AnyTable;
     use crate::table::{EmbeddingTable, ScaleBiasDtype};
 
-    fn test_server() -> Arc<EmbeddingServer> {
+    fn test_server_with(cfg: ServerConfig) -> Arc<EmbeddingServer> {
         let tables: Vec<AnyTable> = (0..3)
             .map(|t| {
                 let tab = EmbeddingTable::randn(40, 8, 7100 + t);
@@ -206,10 +301,11 @@ mod tests {
                 ))
             })
             .collect();
-        Arc::new(EmbeddingServer::start(
-            TableSet::new(tables),
-            ServerConfig { shards: 2, ..Default::default() },
-        ))
+        Arc::new(EmbeddingServer::start(TableSet::new(tables), cfg))
+    }
+
+    fn test_server() -> Arc<EmbeddingServer> {
+        test_server_with(ServerConfig { shards: 2, ..Default::default() })
     }
 
     #[test]
@@ -235,6 +331,10 @@ mod tests {
             let want = server.lookup(&Request { ids });
             assert_eq!(got, want, "request {i}");
         }
+        let m = front.metrics();
+        assert_eq!(m.requests, 10);
+        assert_eq!(m.lookups, 30);
+        assert_eq!(m.latency.count(), 10);
     }
 
     #[test]
@@ -256,6 +356,33 @@ mod tests {
         let mut client = TcpClient::connect(front.addr()).unwrap();
         let err = client.lookup(&[vec![1000], vec![], vec![]]).unwrap_err();
         assert!(err.to_string().contains("out of range"));
+    }
+
+    #[test]
+    fn sharded_front_round_trip_and_stats() {
+        // The sharded front: leader accepts, the slice-resident engine
+        // splits/scatter-gathers, and the stats frame reports per-shard
+        // latency plus the residency breakdown.
+        let server = test_server_with(ServerConfig {
+            num_shards: 2,
+            replicate_hot: 1,
+            ..Default::default()
+        });
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(front.addr()).unwrap();
+        for i in 0..6u32 {
+            let ids = vec![vec![i, 39 - i], vec![i], vec![]];
+            let got = client.lookup(&ids).unwrap();
+            let want = server.lookup(&Request { ids });
+            assert_eq!(got, want, "request {i}");
+        }
+        let text = client.stats().unwrap();
+        assert!(text.contains("front: 6 req"), "{text}");
+        assert!(text.contains("resident"), "{text}");
+        assert!(text.contains("shard 0:") && text.contains("shard 1:"), "{text}");
+        // The connection still serves lookups after a stats frame.
+        assert_eq!(client.lookup(&[vec![1], vec![2], vec![3]]).unwrap().len(), 24);
+        assert!(front.stats_text().contains("front: 7 req"));
     }
 
     #[test]

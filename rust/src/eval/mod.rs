@@ -12,4 +12,4 @@ pub use auc::{expected_calibration_error, roc_auc};
 pub use histo::{ascii_histogram, histogram_counts};
 pub use l2::{normalized_l2_codebook, normalized_l2_fused, normalized_l2_method};
 pub use report::{JsonWriter, TableWriter};
-pub use size::size_ratio;
+pub use size::{size_ratio, SizeReport};

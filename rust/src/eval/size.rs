@@ -1,5 +1,68 @@
 //! Model-size accounting (the paper's Table 3 "size" column and the
-//! production "13.89% of FP32" claim).
+//! production "13.89% of FP32" claim), plus serving-residency accounting:
+//! the paper's win is only real if the *serving tier* holds the small
+//! bytes once, so [`SizeReport`] breaks resident memory into
+//! engine-resident (shard slices / shared table set) and
+//! catalog-resident (leader metadata) parts.
+
+/// Resident-bytes breakdown of a serving deployment.
+///
+/// The slice-resident sharded engine must satisfy
+/// `engine_bytes == table_bytes + replicated_bytes` and
+/// `catalog_bytes ≪ table_bytes` (the old design resident-cost
+/// ~`2 × table_bytes` because the leader kept a full duplicate).
+#[derive(Clone, Debug, Default)]
+pub struct SizeReport {
+    /// Logical bytes of the served tables (1× the payload).
+    pub table_bytes: usize,
+    /// Bytes resident inside the execution engine (Σ shard slices on the
+    /// sharded path, the shared `TableSet` on the table-parallel path).
+    pub engine_bytes: usize,
+    /// Engine bytes attributable to hot-chunk replication.
+    pub replicated_bytes: usize,
+    /// Leader-resident metadata bytes (the table catalog).
+    pub catalog_bytes: usize,
+    /// Engine bytes per shard (empty on the table-parallel path).
+    pub per_shard_bytes: Vec<usize>,
+}
+
+impl SizeReport {
+    /// Total resident bytes (engine + catalog).
+    pub fn resident_bytes(&self) -> usize {
+        self.engine_bytes + self.catalog_bytes
+    }
+
+    /// Resident bytes as a multiple of the logical table bytes (the
+    /// number that must be ≈1.0 for slice-resident serving).
+    pub fn residency_ratio(&self) -> f64 {
+        if self.table_bytes == 0 {
+            return 0.0;
+        }
+        self.resident_bytes() as f64 / self.table_bytes as f64
+    }
+
+    /// Catalog overhead as a fraction of the table bytes.
+    pub fn catalog_overhead(&self) -> f64 {
+        if self.table_bytes == 0 {
+            return 0.0;
+        }
+        self.catalog_bytes as f64 / self.table_bytes as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "resident {} B ({:.4}x of {} B tables) = engine {} B \
+             (incl. {} B hot replicas) + catalog {} B",
+            self.resident_bytes(),
+            self.residency_ratio(),
+            self.table_bytes,
+            self.engine_bytes,
+            self.replicated_bytes,
+            self.catalog_bytes,
+        )
+    }
+}
 
 /// Size of `quantized` as a fraction of `fp32` (e.g. `0.1406` → "14.06%").
 pub fn size_ratio(quantized_bytes: usize, fp32_bytes: usize) -> f64 {
@@ -44,5 +107,23 @@ mod tests {
     fn ratio_basics() {
         assert_eq!(size_ratio(25, 100), 0.25);
         assert_eq!(size_ratio(1, 0), 0.0);
+    }
+
+    #[test]
+    fn size_report_breakdown() {
+        let r = SizeReport {
+            table_bytes: 10_000,
+            engine_bytes: 10_500,
+            replicated_bytes: 500,
+            catalog_bytes: 100,
+            per_shard_bytes: vec![5_250, 5_250],
+        };
+        assert_eq!(r.resident_bytes(), 10_600);
+        assert!((r.residency_ratio() - 1.06).abs() < 1e-9);
+        assert!((r.catalog_overhead() - 0.01).abs() < 1e-9);
+        assert!(r.summary().contains("resident 10600 B"));
+        let empty = SizeReport::default();
+        assert_eq!(empty.residency_ratio(), 0.0);
+        assert_eq!(empty.catalog_overhead(), 0.0);
     }
 }

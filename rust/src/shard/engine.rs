@@ -5,21 +5,36 @@
 //!
 //! 1. **Split** — every request's per-table id list is bucketed by owning
 //!    shard and translated to shard-local ids (two integer ops per id).
+//!    Lookups against hot-replicated whole tables are spread round-robin
+//!    across the replica shards.
 //! 2. **Fan out** — each shard with work receives one `ShardTask` for the
 //!    whole batch (one channel hop per shard per batch, not per request).
 //! 3. **Pool** — workers run the format's optimized SLS kernel over their
-//!    slice, producing partial pooled sums per `(slot, table)`.
+//!    slice, producing partial pooled sums per `(slot, table)`, and record
+//!    per-shard service metrics ([`ShardStats`]).
 //! 4. **Scatter-gather** — the leader merges partials into the output in
 //!    ascending shard order, so accumulation is deterministic run to run
 //!    (f32 addition is not associative).
+//!
+//! **Slice-resident ownership:** [`ShardedEngine::start`] *consumes* the
+//! `TableSet`. The set is carved table by table into self-describing
+//! [`TableSlice`]s (each source table is dropped as soon as its slices
+//! are cut), so after startup the only copies of table bytes live inside
+//! the shard workers — the leader keeps counters and byte accounting, and
+//! callers keep a [`TableCatalog`](crate::coordinator::TableCatalog) for
+//! validation.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
-use crate::coordinator::TableSet;
+use crate::coordinator::metrics::ShardStats;
+use crate::coordinator::{Router, TableSet};
 use crate::data::trace::Request;
 use crate::shard::partition::{plan_partitions, TablePartition};
-use crate::shard::slice::ShardSlice;
+use crate::shard::slice::{ShardSlice, TableSlice};
 use crate::shard::ShardConfig;
 
 /// Work for one shard: per `(batch slot, table)` shard-local id lookups.
@@ -29,44 +44,150 @@ struct ShardTask {
     reply: SyncSender<(usize, Vec<(usize, usize, Vec<f32>)>)>,
 }
 
-/// The row-wise sharded serving engine.
+/// The row-wise sharded serving engine. Sole owner of the table bytes
+/// (inside its workers) once started.
 pub struct ShardedEngine {
     partitions: Vec<TablePartition>,
+    /// Per table: the shards holding a full copy. Whole tables list their
+    /// home shard (plus every replica when hot-replicated); row-wise
+    /// tables list nothing (ownership is per chunk).
+    replicas: Vec<Vec<usize>>,
+    /// Round-robin cursor for spreading lookups across replicas.
+    rr: AtomicUsize,
+    /// Router-observed pooled-lookup count per table.
+    loads: Vec<AtomicU64>,
+    /// Per-shard service stats, shared with the workers.
+    stats: Vec<Arc<Mutex<ShardStats>>>,
     offsets: Vec<usize>,
     feature_width: usize,
     num_tables: usize,
+    /// Logical bytes of the consumed set (1× the tables).
+    table_bytes: usize,
+    /// Resident bytes per shard (its slices, including replicas).
+    shard_bytes: Vec<usize>,
+    /// Bytes attributable to hot-chunk replication (copies beyond the
+    /// first of each replicated table).
+    replicated_bytes: usize,
     senders: Vec<SyncSender<ShardTask>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl ShardedEngine {
-    /// Partition `set` per `cfg` and start the worker pool. Each worker
-    /// thread *owns* its [`ShardSlice`] (no shared table memory on the
-    /// hot path).
-    pub fn start(set: &TableSet, cfg: &ShardConfig) -> ShardedEngine {
+    /// Partition `set` per `cfg`, carve it into per-shard slices, and
+    /// start the worker pool. **Consumes the set**: each worker thread
+    /// owns its [`ShardSlice`] and no leader-side copy of any row
+    /// remains. Peak memory during carving is the slices cut so far plus
+    /// one source table; steady state is exactly the slices.
+    pub fn start(set: TableSet, cfg: &ShardConfig) -> ShardedEngine {
         let n = cfg.num_shards.max(1);
-        let rows: Vec<usize> = (0..set.num_tables()).map(|t| set.rows_of(t)).collect();
+        let num_tables = set.num_tables();
+        let rows: Vec<usize> = (0..num_tables).map(|t| set.rows_of(t)).collect();
+        let offsets: Vec<usize> = (0..num_tables).map(|t| set.offset_of(t)).collect();
+        let feature_width = set.feature_width();
+        let table_bytes = set.size_bytes();
         let partitions = plan_partitions(&rows, n, cfg.small_table_rows);
+
+        // Hot-chunk replication: whole tables are the skew hazard (one
+        // shard answers all their traffic), so the hottest of them — by
+        // router-observed load, row count as the prior when none was
+        // observed — get a full copy on every shard.
+        let mut replicas: Vec<Vec<usize>> = partitions
+            .iter()
+            .map(|p| match p {
+                TablePartition::Whole { shard, .. } => vec![*shard],
+                TablePartition::RowWise(_) => Vec::new(),
+            })
+            .collect();
+        if cfg.replicate_hot > 0 && n > 1 {
+            // Row counts are the prior only when *no* loads were
+            // observed; a partial load vector must not mix units (a
+            // huge cold table would outrank a genuinely hot one).
+            let loads: Vec<u64> = if cfg.hot_loads.is_empty() {
+                rows.iter().map(|&r| r as u64).collect()
+            } else {
+                (0..num_tables)
+                    .map(|t| cfg.hot_loads.get(t).copied().unwrap_or(0))
+                    .collect()
+            };
+            let hot: Vec<usize> = Router::hottest(&loads, num_tables)
+                .into_iter()
+                .filter(|&t| matches!(partitions[t], TablePartition::Whole { .. }))
+                .take(cfg.replicate_hot)
+                .collect();
+            for t in hot {
+                replicas[t] = (0..n).collect();
+            }
+        }
+
+        // Carve the consumed set. Whole tables *move* into their owning
+        // shard (no copy; replicas, when asked for, are the only copies);
+        // row-wise tables are cut per chunk and the source dropped, so
+        // peak carve memory is the slices so far plus one table.
+        let mut per_shard: Vec<Vec<Option<TableSlice>>> =
+            (0..n).map(|_| Vec::with_capacity(num_tables)).collect();
+        let mut replicated_bytes = 0usize;
+        for (t, table) in set.into_tables().into_iter().enumerate() {
+            for slices in per_shard.iter_mut() {
+                slices.push(None);
+            }
+            match &partitions[t] {
+                TablePartition::Whole { .. } => {
+                    let r = &replicas[t];
+                    if r.len() > 1 {
+                        replicated_bytes += (r.len() - 1) * table.size_bytes();
+                    }
+                    // Copies for all replica shards but the last; the
+                    // last takes the source by move.
+                    for &shard in &r[..r.len() - 1] {
+                        per_shard[shard][t] = Some(TableSlice::cut(&table, 0..table.rows()));
+                    }
+                    let last = *r.last().expect("whole table has an owner");
+                    per_shard[last][t] = Some(TableSlice::from_whole(table));
+                }
+                TablePartition::RowWise(p) => {
+                    for (shard, slices) in per_shard.iter_mut().enumerate() {
+                        let range = p.range_of(shard);
+                        if !range.is_empty() {
+                            slices[t] = Some(TableSlice::cut(&table, range));
+                        }
+                    }
+                }
+            }
+        }
+        let shard_bytes: Vec<usize> = per_shard
+            .iter()
+            .map(|slices| slices.iter().flatten().map(TableSlice::size_bytes).sum())
+            .collect();
+
+        let stats: Vec<Arc<Mutex<ShardStats>>> =
+            (0..n).map(|_| Arc::new(Mutex::new(ShardStats::default()))).collect();
         let mut senders = Vec::with_capacity(n);
         let mut workers = Vec::with_capacity(n);
-        for shard in 0..n {
-            let slice = ShardSlice::build(set, &partitions, shard);
+        for (shard, slices) in per_shard.into_iter().enumerate() {
+            let slice = ShardSlice::from_slices(slices);
+            let shard_stats = Arc::clone(&stats[shard]);
             let (tx, rx): (SyncSender<ShardTask>, Receiver<ShardTask>) =
                 sync_channel(cfg.queue_depth.max(1));
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("emberq-shard-{shard}"))
-                    .spawn(move || worker_loop(shard, rx, slice))
+                    .spawn(move || worker_loop(shard, rx, slice, shard_stats))
                     .expect("spawn shard worker"),
             );
             senders.push(tx);
         }
-        let offsets = (0..set.num_tables()).map(|t| set.offset_of(t)).collect();
         ShardedEngine {
             partitions,
+            replicas,
+            rr: AtomicUsize::new(0),
+            loads: (0..num_tables).map(|_| AtomicU64::new(0)).collect(),
+            stats,
             offsets,
-            feature_width: set.feature_width(),
-            num_tables: set.num_tables(),
+            feature_width,
+            num_tables,
+            table_bytes,
+            shard_bytes,
+            replicated_bytes,
             senders,
             workers,
         }
@@ -85,6 +206,38 @@ impl ShardedEngine {
     /// The partition of `table`.
     pub fn partition(&self, table: usize) -> &TablePartition {
         &self.partitions[table]
+    }
+
+    /// Shards holding a full copy of `table` (len > 1 iff hot-replicated;
+    /// empty for row-wise tables).
+    pub fn replica_shards(&self, table: usize) -> &[usize] {
+        &self.replicas[table]
+    }
+
+    /// Logical bytes of the consumed table set (1×).
+    pub fn table_bytes(&self) -> usize {
+        self.table_bytes
+    }
+
+    /// Resident bytes per shard (each shard's slices, replicas included).
+    pub fn shard_bytes(&self) -> &[usize] {
+        &self.shard_bytes
+    }
+
+    /// Resident bytes attributable to hot-chunk replication.
+    pub fn replicated_bytes(&self) -> usize {
+        self.replicated_bytes
+    }
+
+    /// Snapshot of each shard's service stats (cumulative since start).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.stats.iter().map(|s| s.lock().unwrap().clone()).collect()
+    }
+
+    /// Router-observed pooled-lookup count per table (cumulative since
+    /// start) — the load signal hot-chunk replication keys on.
+    pub fn observed_loads(&self) -> Vec<u64> {
+        self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
     }
 
     /// Pooled lookup for one request (`feature_width` floats).
@@ -109,9 +262,21 @@ impl ShardedEngine {
                 if ids.is_empty() {
                     continue;
                 }
+                self.loads[t].fetch_add(ids.len() as u64, Ordering::Relaxed);
                 match &self.partitions[t] {
-                    TablePartition::Whole { shard, .. } => {
-                        per_shard[*shard].push((slot, t, ids.clone()));
+                    TablePartition::Whole { .. } => {
+                        // Whole tables are answered by one shard per
+                        // lookup; hot-replicated tables spread lookups
+                        // round-robin over byte-identical replicas, so
+                        // results stay bit-identical regardless of which
+                        // replica answers.
+                        let r = &self.replicas[t];
+                        let target = if r.len() > 1 {
+                            r[self.rr.fetch_add(1, Ordering::Relaxed) % r.len()]
+                        } else {
+                            r[0]
+                        };
+                        per_shard[target].push((slot, t, ids.clone()));
                     }
                     TablePartition::RowWise(p) => {
                         // Bucket by shard, preserving each id's relative
@@ -168,13 +333,30 @@ impl Drop for ShardedEngine {
     }
 }
 
-fn worker_loop(shard: usize, rx: Receiver<ShardTask>, slice: ShardSlice) {
+fn worker_loop(
+    shard: usize,
+    rx: Receiver<ShardTask>,
+    slice: ShardSlice,
+    stats: Arc<Mutex<ShardStats>>,
+) {
     while let Ok(task) = rx.recv() {
+        let t0 = Instant::now();
         let mut results = Vec::with_capacity(task.lookups.len());
+        let mut pooled = 0u64;
         for (slot, t, local_ids) in task.lookups {
+            pooled += local_ids.len() as u64;
             let mut out = vec![0.0f32; slice.dim_of(t)];
             slice.pool(t, &local_ids, &mut out);
             results.push((slot, t, out));
+        }
+        // Record before replying so a caller that has seen the batch
+        // complete also sees the stats for it.
+        {
+            let mut s = stats.lock().unwrap();
+            s.latency.record(t0.elapsed());
+            s.tasks += 1;
+            s.segments += results.len() as u64;
+            s.lookups += pooled;
         }
         // Leader may have given up (tests); ignore send failure.
         let _ = task.reply.send((shard, results));
@@ -200,10 +382,8 @@ mod tests {
     fn single_shard_matches_pool_bitwise() {
         let set = f32_set(3, 40, 8);
         let reference = f32_set(3, 40, 8);
-        let engine = ShardedEngine::start(
-            &set,
-            &ShardConfig { num_shards: 1, ..Default::default() },
-        );
+        let engine =
+            ShardedEngine::start(set, &ShardConfig { num_shards: 1, ..Default::default() });
         let req = Request { ids: vec![vec![0, 7, 7, 39], vec![], vec![12]] };
         let got = engine.lookup(&req);
         for (t, ids) in req.ids.iter().enumerate() {
@@ -218,7 +398,7 @@ mod tests {
         let set = f32_set(1, 16, 4);
         let reference = f32_set(1, 16, 4);
         let engine = ShardedEngine::start(
-            &set,
+            set,
             &ShardConfig { num_shards: 4, small_table_rows: 0, ..Default::default() },
         );
         // ids deliberately span all four chunks ([0,4) [4,8) [8,12) [12,16)).
@@ -253,10 +433,9 @@ mod tests {
                     .collect(),
             )
         };
-        let set = mk();
         let reference = mk();
         let engine = ShardedEngine::start(
-            &set,
+            mk(),
             &ShardConfig { num_shards: 3, small_table_rows: 0, ..Default::default() },
         );
         let req = Request { ids: vec![vec![29, 0, 14], vec![7, 7]] };
@@ -279,7 +458,7 @@ mod tests {
     fn batch_slots_stay_separated() {
         let set = f32_set(2, 20, 4);
         let engine = ShardedEngine::start(
-            &set,
+            set,
             &ShardConfig { num_shards: 2, small_table_rows: 0, ..Default::default() },
         );
         let reqs: Vec<Request> = (0..5)
@@ -296,7 +475,7 @@ mod tests {
     fn stale_output_buffer_is_overwritten() {
         let set = f32_set(1, 10, 4);
         let engine =
-            ShardedEngine::start(&set, &ShardConfig { num_shards: 2, ..Default::default() });
+            ShardedEngine::start(set, &ShardConfig { num_shards: 2, ..Default::default() });
         let mut out = vec![7.0f32; 4];
         engine.lookup_batch_into(
             std::slice::from_ref(&Request { ids: vec![vec![]] }),
@@ -306,10 +485,79 @@ mod tests {
     }
 
     #[test]
+    fn residency_is_exactly_the_table_bytes() {
+        // The tentpole invariant: the slices hold 1× the table bytes
+        // (f32/fused carving is byte-exact), nothing retained elsewhere.
+        let set = f32_set(3, 200, 8);
+        let logical = set.size_bytes();
+        let engine = ShardedEngine::start(
+            set,
+            &ShardConfig { num_shards: 4, small_table_rows: 64, ..Default::default() },
+        );
+        assert_eq!(engine.table_bytes(), logical);
+        assert_eq!(engine.shard_bytes().iter().sum::<usize>(), logical);
+        assert_eq!(engine.replicated_bytes(), 0);
+    }
+
+    #[test]
+    fn hot_replication_spreads_whole_table_traffic() {
+        // One whole (small) table, replicated to both shards: both
+        // workers must see tasks, and results must match the baseline
+        // bitwise (replicas are byte-identical).
+        let set = f32_set(1, 32, 4);
+        let reference = f32_set(1, 32, 4);
+        let logical = reference.size_bytes();
+        let engine = ShardedEngine::start(
+            set,
+            &ShardConfig {
+                num_shards: 2,
+                small_table_rows: usize::MAX, // keep the table whole
+                replicate_hot: 1,
+                ..Default::default()
+            },
+        );
+        assert_eq!(engine.replica_shards(0), &[0, 1]);
+        assert_eq!(engine.replicated_bytes(), logical);
+        assert_eq!(engine.shard_bytes().iter().sum::<usize>(), 2 * logical);
+        for i in 0..10u32 {
+            let req = Request { ids: vec![vec![i, 31 - i]] };
+            let got = engine.lookup(&req);
+            let mut want = vec![0.0f32; 4];
+            reference.pool(0, &req.ids[0], &mut want);
+            assert_eq!(got, want, "request {i}");
+        }
+        let stats = engine.shard_stats();
+        assert!(stats[0].tasks > 0 && stats[1].tasks > 0, "both replicas must serve");
+        assert_eq!(stats[0].lookups + stats[1].lookups, 20);
+        assert_eq!(engine.observed_loads(), vec![20]);
+    }
+
+    #[test]
+    fn shard_stats_account_for_served_batches() {
+        let set = f32_set(2, 64, 4);
+        let engine = ShardedEngine::start(
+            set,
+            &ShardConfig { num_shards: 2, small_table_rows: 0, ..Default::default() },
+        );
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request { ids: vec![vec![i as u32, 63 - i as u32], vec![i as u32]] })
+            .collect();
+        let mut out = vec![0.0f32; 6 * 8];
+        engine.lookup_batch_into(&reqs, &mut out);
+        let stats = engine.shard_stats();
+        let lookups: u64 = stats.iter().map(|s| s.lookups).sum();
+        assert_eq!(lookups, 18); // 6 × (2 + 1)
+        assert_eq!(engine.observed_loads(), vec![12, 6]);
+        for s in &stats {
+            assert_eq!(s.latency.count(), s.tasks);
+        }
+    }
+
+    #[test]
     fn clean_shutdown() {
         let set = f32_set(2, 10, 4);
         let engine =
-            ShardedEngine::start(&set, &ShardConfig { num_shards: 4, ..Default::default() });
+            ShardedEngine::start(set, &ShardConfig { num_shards: 4, ..Default::default() });
         let _ = engine.lookup(&Request { ids: vec![vec![1], vec![2]] });
         drop(engine); // must not hang or panic
     }

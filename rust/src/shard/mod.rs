@@ -8,31 +8,34 @@
 //! * [`partition`] — each table's rows are split into contiguous chunks,
 //!   one per shard ([`RowPartition`]); small tables stay whole on a
 //!   single shard (spread by load, [`plan_partitions`]).
-//! * [`slice`] — [`ShardSlice`]: the per-shard copy of every table's
-//!   owned rows, in the table's native format (FP32 / fused INT4-INT8 /
-//!   codebook), so each worker streams only its slice's bytes.
+//! * [`slice`] — [`TableSlice`] / [`ShardSlice`]: the per-shard copy of
+//!   every table's owned rows, self-describing (dims, global row range,
+//!   format; scales/biases travel inside the rows), in the table's
+//!   native format so each worker streams only its slice's bytes.
 //! * [`engine`] — [`ShardedEngine`]: a persistent worker pool (std
 //!   threads + bounded channels). A batched request is split per shard
 //!   (ids translated to shard-local row ids), each worker runs the
-//!   format's optimized SLS kernel over its slice, and the leader
-//!   scatter-gathers the partial pooled sums into the output buffer in
-//!   deterministic shard order.
+//!   format's optimized SLS kernel over its slice and records per-shard
+//!   service stats, and the leader scatter-gathers the partial pooled
+//!   sums into the output buffer in deterministic shard order.
 //!
 //! Equivalence contract: sharded output equals the unsharded
 //! `TableSet::pool` result exactly whenever a segment's ids live on one
-//! shard (including `num_shards == 1` and whole tables); when a pooled
-//! sum genuinely spans shards it is the same set of addends re-associated,
+//! shard (including `num_shards == 1`, whole tables, and hot-replicated
+//! whole tables — replicas are byte-identical); when a pooled sum
+//! genuinely spans shards it is the same set of addends re-associated,
 //! so results agree to f32 reassociation error (tested to tight bounds in
 //! `rust/tests/proptest_shard.rs`).
 //!
 //! `coordinator::ServerConfig::num_shards` switches [`EmbeddingServer`]
 //! (and the `emberq serve --shards N` CLI) onto this engine.
 //!
-//! Memory note: shard slices are *copies* of the rows they own, and the
-//! server currently retains the original `TableSet` for metadata and
-//! validation, so sharded serving resident-costs ~2× the table bytes.
-//! Serving from the slices alone (dropping the leader's row data) is a
-//! ROADMAP item.
+//! Memory note: [`ShardedEngine::start`] **consumes** the `TableSet` and
+//! carves it into the shard slices, so sharded serving resident-costs
+//! ~1× the table bytes (plus a metadata
+//! [`TableCatalog`](crate::coordinator::TableCatalog) on the leader and
+//! any hot-chunk replicas the config asks for). The pre-slice-resident
+//! design kept a full leader-side copy and paid ~2×.
 //!
 //! [`EmbeddingServer`]: crate::coordinator::EmbeddingServer
 
@@ -42,7 +45,7 @@ pub mod slice;
 
 pub use engine::ShardedEngine;
 pub use partition::{plan_partitions, RowPartition, TablePartition};
-pub use slice::ShardSlice;
+pub use slice::{ShardSlice, TableSlice};
 
 /// Configuration of the row-wise sharded execution engine.
 #[derive(Clone, Debug)]
@@ -55,10 +58,26 @@ pub struct ShardConfig {
     /// of being split row-wise (splitting tiny tables only buys channel
     /// overhead). `0` forces row-wise splitting of everything.
     pub small_table_rows: usize,
+    /// Replicate the `N` hottest *whole* tables (the skew hazard: one
+    /// shard answers all their traffic) to every shard, spreading their
+    /// lookups round-robin across byte-identical replicas. `0` (default)
+    /// replicates nothing. Costs `replicas × table bytes` extra residency,
+    /// reported by the engine's byte accounting.
+    pub replicate_hot: usize,
+    /// Router-observed per-table load (pooled lookups), used to rank
+    /// replication candidates. Empty (default) falls back to row count
+    /// as the prior.
+    pub hot_loads: Vec<u64>,
 }
 
 impl Default for ShardConfig {
     fn default() -> Self {
-        ShardConfig { num_shards: 4, queue_depth: 64, small_table_rows: 512 }
+        ShardConfig {
+            num_shards: 4,
+            queue_depth: 64,
+            small_table_rows: 512,
+            replicate_hot: 0,
+            hot_loads: Vec::new(),
+        }
     }
 }

@@ -1,23 +1,111 @@
 //! Per-shard table slices: each shard's private copy of the rows it owns,
 //! kept in the table's native storage format so the shard streams exactly
 //! the bytes the unsharded kernel would for those rows.
+//!
+//! Since the slice-resident refactor, every slice is *self-describing*
+//! ([`TableSlice`]): it carries the row payload **and** the metadata the
+//! shard needs to serve it — dims, the global row range it covers, the
+//! storage format (scales/biases travel inside the fused/codebook rows
+//! themselves). The leader keeps no table bytes, only a
+//! [`TableCatalog`](crate::coordinator::TableCatalog).
 
+use std::ops::Range;
+
+use crate::coordinator::catalog::FormatTag;
 use crate::coordinator::TableSet;
 use crate::shard::partition::TablePartition;
 use crate::sls::SlsArgs;
 use crate::table::serial::AnyTable;
 use crate::table::{CodebookKind, CodebookTable, EmbeddingTable, FusedTable};
 
-/// One shard's slice of every table in a [`TableSet`]. `tables[t]` is
-/// `None` when the shard owns no rows of table `t` (whole tables on other
-/// shards, or trailing shards of a short table).
+/// One shard's self-describing slice of one table: the owned rows in the
+/// table's native format plus the metadata to serve them (dim, global row
+/// range, format tag). Scales/biases are part of the row payload for
+/// fused tables and of the codebook payload for codebook tables, so a
+/// slice never consults any leader-side copy.
+pub struct TableSlice {
+    data: AnyTable,
+    /// Global rows this slice covers (`[0, rows)` for whole tables and
+    /// replicas; a chunk for row-wise partitions).
+    global_rows: Range<usize>,
+}
+
+impl TableSlice {
+    /// Copy global rows `range` of `table` into a new self-describing
+    /// slice of the same storage format.
+    pub fn cut(table: &AnyTable, range: Range<usize>) -> TableSlice {
+        assert!(range.start <= range.end && range.end <= table.rows());
+        TableSlice {
+            data: slice_rows(table, range.start, range.end),
+            global_rows: range,
+        }
+    }
+
+    /// Take ownership of a whole table as a slice covering every row —
+    /// the no-copy path for whole-table placement (the engine moves each
+    /// consumed table straight into its owning shard).
+    pub fn from_whole(table: AnyTable) -> TableSlice {
+        let rows = table.rows();
+        TableSlice { data: table, global_rows: 0..rows }
+    }
+
+    /// Embedding dimension.
+    pub fn dim(&self) -> usize {
+        self.data.dim()
+    }
+
+    /// Rows held (shard-local count).
+    pub fn rows(&self) -> usize {
+        self.data.rows()
+    }
+
+    /// The global row range this slice covers.
+    pub fn global_rows(&self) -> Range<usize> {
+        self.global_rows.clone()
+    }
+
+    /// Storage format of the slice.
+    pub fn format(&self) -> FormatTag {
+        FormatTag::of(&self.data)
+    }
+
+    /// Bytes resident in this slice.
+    pub fn size_bytes(&self) -> usize {
+        self.data.size_bytes()
+    }
+
+    /// Pool `local_ids` (slice-local row ids) into `out` (`dim` floats)
+    /// with the format's optimized kernel.
+    pub fn pool(&self, local_ids: &[u32], out: &mut [f32]) {
+        let lengths = [local_ids.len() as u32];
+        let args =
+            SlsArgs::new(local_ids, &lengths, self.data.rows()).expect("validated local ids");
+        self.data.sls_view().sls(&args, out);
+    }
+}
+
+/// One shard's slices of every table in the served set. `tables[t]` is
+/// `None` when the shard holds no rows of table `t` (whole tables homed
+/// on other shards, or trailing shards of a short table).
 pub struct ShardSlice {
-    tables: Vec<Option<AnyTable>>,
+    tables: Vec<Option<TableSlice>>,
 }
 
 impl ShardSlice {
-    /// Materialize shard `shard`'s slice of `set` under `partitions`
-    /// (one entry per table, as from [`plan_partitions`]).
+    /// Assemble from pre-cut slices (one entry per table, in table
+    /// order). This is the constructor the engine's consuming carve path
+    /// uses — see [`ShardedEngine::start`].
+    ///
+    /// [`ShardedEngine::start`]: crate::shard::ShardedEngine::start
+    pub fn from_slices(tables: Vec<Option<TableSlice>>) -> ShardSlice {
+        ShardSlice { tables }
+    }
+
+    /// Materialize shard `shard`'s slice of `set` under `partitions` by
+    /// copying from a borrowed set (one entry per table, as from
+    /// [`plan_partitions`]). Kept for tests and tooling; the engine
+    /// carves from an owned set instead so the source tables can be
+    /// dropped as it goes.
     ///
     /// [`plan_partitions`]: crate::shard::partition::plan_partitions
     pub fn build(set: &TableSet, partitions: &[TablePartition], shard: usize) -> ShardSlice {
@@ -30,40 +118,45 @@ impl ShardSlice {
                 if range.is_empty() {
                     None
                 } else {
-                    Some(slice_rows(set.table(t), range.start, range.end))
+                    Some(TableSlice::cut(set.table(t), range))
                 }
             })
             .collect();
         ShardSlice { tables }
     }
 
-    /// Does this shard own any rows of `table`?
+    /// Does this shard hold any rows of `table`?
     pub fn owns(&self, table: usize) -> bool {
         self.tables[table].is_some()
     }
 
-    /// Embedding dimension of `table` (panics if not owned).
+    /// The slice of `table`, if held.
+    pub fn slice_of(&self, table: usize) -> Option<&TableSlice> {
+        self.tables[table].as_ref()
+    }
+
+    /// Embedding dimension of `table` (panics if not held).
     pub fn dim_of(&self, table: usize) -> usize {
         self.tables[table].as_ref().expect("shard owns table rows").dim()
     }
 
     /// Rows of `table` held by this shard (0 if none).
     pub fn rows_of(&self, table: usize) -> usize {
-        self.tables[table].as_ref().map_or(0, AnyTable::rows)
+        self.tables[table].as_ref().map_or(0, TableSlice::rows)
     }
 
     /// Bytes held by this shard across all slices.
     pub fn size_bytes(&self) -> usize {
-        self.tables.iter().flatten().map(AnyTable::size_bytes).sum()
+        self.tables.iter().flatten().map(TableSlice::size_bytes).sum()
     }
 
     /// Pool `local_ids` (shard-local row ids) from `table` into `out`
     /// (one segment of `dim` floats), with the format's optimized kernel.
     pub fn pool(&self, table: usize, local_ids: &[u32], out: &mut [f32]) {
-        let t = self.tables[table].as_ref().expect("shard owns table rows");
-        let lengths = [local_ids.len() as u32];
-        let args = SlsArgs::new(local_ids, &lengths, t.rows()).expect("validated local ids");
-        t.sls_view().sls(&args, out);
+        self.tables[table]
+            .as_ref()
+            .expect("shard owns table rows")
+            .pool(local_ids, out);
     }
 }
 
@@ -196,6 +289,21 @@ mod tests {
     }
 
     #[test]
+    fn table_slice_is_self_describing() {
+        let t = EmbeddingTable::randn(20, 4, 4);
+        let f = t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
+        let slice = TableSlice::cut(&AnyTable::Fused(f.clone()), 5..15);
+        assert_eq!(slice.dim(), 4);
+        assert_eq!(slice.rows(), 10);
+        assert_eq!(slice.global_rows(), 5..15);
+        assert_eq!(
+            slice.format(),
+            FormatTag::Fused { nbits: 4, scale_bias: ScaleBiasDtype::F16 }
+        );
+        assert_eq!(slice.size_bytes(), 10 * f.row_bytes());
+    }
+
+    #[test]
     fn shard_slice_pools_its_rows_exactly() {
         let t = EmbeddingTable::randn(20, 4, 4);
         let set = set_of(vec![AnyTable::F32(t.clone())]);
@@ -203,6 +311,7 @@ mod tests {
         let slice = ShardSlice::build(&set, &partitions, 1); // rows 5..10
         assert!(slice.owns(0));
         assert_eq!(slice.rows_of(0), 5);
+        assert_eq!(slice.slice_of(0).unwrap().global_rows(), 5..10);
         let mut out = vec![0.0f32; 4];
         slice.pool(0, &[0, 4], &mut out); // global rows 5 and 9
         let mut want = vec![0.0f32; 4];

@@ -114,11 +114,12 @@ fn prop_sharded_equals_unsharded_pool() {
         let reference = TableSet::new(build_tables(seed, fmt, num_tables, rows, dim));
         let engine_set = TableSet::new(build_tables(seed, fmt, num_tables, rows, dim));
         let engine = ShardedEngine::start(
-            &engine_set,
+            engine_set, // consumed: the engine's slices own the rows
             &ShardConfig {
                 num_shards: shards,
                 queue_depth: 1 + rng.below(8),
                 small_table_rows,
+                ..Default::default()
             },
         );
         let reqs: Vec<Request> = (0..1 + rng.below(5))
@@ -215,6 +216,118 @@ fn prop_sharded_server_batch_single_and_repeat_consistent() {
 }
 
 #[test]
+fn prop_slice_resident_bit_exact_vs_baseline_shards_1_to_8() {
+    // Slice-resident sharded serving vs the single-threaded baseline
+    // (`TableSet::pool`), across shard counts 1..=8 and every format,
+    // with whole-table placement so the exactness contract applies to
+    // every segment: the outputs must match *bit for bit*. This is the
+    // ownership-model check — the engine consumed its set and serves
+    // purely from its slices.
+    let mut rng = Rng::new(0x51CE);
+    for shards in 1..=8usize {
+        for fmt in 0..5 {
+            let num_tables = 1 + rng.below(3);
+            let rows = 8 + rng.below(64);
+            let dim = [4usize, 8, 16][rng.below(3)];
+            let seed = 0xB00 + (shards * 31 + fmt) as u64;
+            let reference = TableSet::new(build_tables(seed, fmt, num_tables, rows, dim));
+            let engine = ShardedEngine::start(
+                TableSet::new(build_tables(seed, fmt, num_tables, rows, dim)),
+                &ShardConfig {
+                    num_shards: shards,
+                    small_table_rows: usize::MAX, // whole tables: exactness everywhere
+                    ..Default::default()
+                },
+            );
+            for _ in 0..6 {
+                let req = Request {
+                    ids: (0..num_tables)
+                        .map(|_| adversarial_ids(&mut rng, rows, shards))
+                        .collect(),
+                };
+                let got = engine.lookup(&req);
+                for (t, ids) in req.ids.iter().enumerate() {
+                    let mut want = vec![0.0f32; dim];
+                    reference.pool(t, ids, &mut want);
+                    assert_eq!(
+                        &got[t * dim..(t + 1) * dim],
+                        want.as_slice(),
+                        "shards={shards} fmt={fmt} table={t}: must be bit-exact"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hot_replication_preserves_results_and_accounts_bytes() {
+    // Hot-chunk replication spreads whole-table lookups across
+    // byte-identical replicas: results stay bit-exact vs the baseline,
+    // repeated runs agree bitwise, and the byte accounting adds up.
+    let mut rng = Rng::new(0x51CF);
+    for case in 0..24u64 {
+        let num_tables = 1 + rng.below(4);
+        let rows = 8 + rng.below(48);
+        let dim = [4usize, 8][rng.below(2)];
+        let shards = 2 + rng.below(4);
+        let replicate_hot = 1 + rng.below(num_tables);
+        let fmt = case as usize % 5;
+        let seed = 0xC00 + case * 13;
+        let reference = TableSet::new(build_tables(seed, fmt, num_tables, rows, dim));
+        let logical = reference.size_bytes();
+        let engine = ShardedEngine::start(
+            TableSet::new(build_tables(seed, fmt, num_tables, rows, dim)),
+            &ShardConfig {
+                num_shards: shards,
+                small_table_rows: usize::MAX,
+                replicate_hot,
+                ..Default::default()
+            },
+        );
+        // Replicated tables hold a copy on every shard; the rest on one.
+        let mut expected_extra = 0usize;
+        for t in 0..num_tables {
+            let r = engine.replica_shards(t);
+            assert!(r.len() == 1 || r.len() == shards, "case {case} table {t}");
+            if r.len() == shards {
+                expected_extra += (shards - 1) * reference.table(t).size_bytes();
+            }
+        }
+        assert_eq!(engine.replicated_bytes(), expected_extra, "case {case}");
+        assert_eq!(
+            engine.shard_bytes().iter().sum::<usize>(),
+            logical + expected_extra,
+            "case {case}"
+        );
+        let reqs: Vec<Request> = (0..2 + rng.below(4))
+            .map(|_| Request {
+                ids: (0..num_tables)
+                    .map(|_| adversarial_ids(&mut rng, rows, shards))
+                    .collect(),
+            })
+            .collect();
+        let fw = engine.feature_width();
+        let mut a = vec![0.0f32; reqs.len() * fw];
+        let mut b = vec![1.0f32; reqs.len() * fw];
+        engine.lookup_batch_into(&reqs, &mut a);
+        engine.lookup_batch_into(&reqs, &mut b);
+        assert_eq!(a, b, "case {case}: replica choice must not change results");
+        for (slot, req) in reqs.iter().enumerate() {
+            for (t, ids) in req.ids.iter().enumerate() {
+                let mut want = vec![0.0f32; dim];
+                reference.pool(t, ids, &mut want);
+                assert_eq!(
+                    &a[slot * fw + t * dim..slot * fw + (t + 1) * dim],
+                    want.as_slice(),
+                    "case {case} slot {slot} table {t}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn all_ids_in_one_shard_is_bit_identical_per_format() {
     // The headline adversarial case, pinned explicitly per format: every
     // id inside one chunk -> sharded output == unsharded pool, bitwise.
@@ -225,7 +338,7 @@ fn all_ids_in_one_shard_is_bit_identical_per_format() {
         let reference = TableSet::new(build_tables(0xAB0 + fmt as u64, fmt, 2, rows, dim));
         let engine_set = TableSet::new(build_tables(0xAB0 + fmt as u64, fmt, 2, rows, dim));
         let engine = ShardedEngine::start(
-            &engine_set,
+            engine_set,
             &ShardConfig { num_shards: shards, small_table_rows: 0, ..Default::default() },
         );
         // Chunk 2 of table 0 (rows 32..48), chunk 0 of table 1.

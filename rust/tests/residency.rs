@@ -1,0 +1,134 @@
+//! Residency: slice-resident sharded serving must hold ≈1× the table
+//! bytes. The PR-1 engine kept the leader's full `TableSet` next to the
+//! shard slices (~2× residency); these tests pin the new ownership model
+//! through the public `SizeReport` breakdown — engine-resident vs
+//! catalog-resident bytes — at the server and engine layers.
+
+use emberq::coordinator::{EmbeddingServer, ServerConfig, TableSet};
+use emberq::data::trace::Request;
+use emberq::quant::GreedyQuantizer;
+use emberq::shard::{ShardConfig, ShardedEngine};
+use emberq::table::serial::AnyTable;
+use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+
+fn fused_set(num_tables: usize, rows: usize, dim: usize) -> TableSet {
+    TableSet::new(
+        (0..num_tables)
+            .map(|t| {
+                let tab = EmbeddingTable::randn_sigma(rows, dim, 0.1, 0xD0 + t as u64);
+                AnyTable::Fused(tab.quantize_fused(
+                    &GreedyQuantizer::default(),
+                    4,
+                    ScaleBiasDtype::F16,
+                ))
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn sharded_residency_is_one_x_plus_catalog_epsilon() {
+    // The acceptance bar: engine-resident bytes == 1× the quantized
+    // table bytes (f32/fused carving is byte-exact), catalog overhead
+    // < 1%, across shard counts and both placement regimes.
+    for shards in [1usize, 2, 4, 8] {
+        for small_table_rows in [0usize, usize::MAX] {
+            let set = fused_set(4, 3_000, 32);
+            let logical = set.size_bytes();
+            let engine = ShardedEngine::start(
+                set,
+                &ShardConfig { num_shards: shards, small_table_rows, ..Default::default() },
+            );
+            assert_eq!(engine.table_bytes(), logical);
+            assert_eq!(
+                engine.shard_bytes().iter().sum::<usize>(),
+                logical,
+                "shards={shards} small_table_rows={small_table_rows}"
+            );
+            assert_eq!(engine.replicated_bytes(), 0);
+        }
+    }
+    // Server-level report: catalog epsilon and ratio.
+    let set = fused_set(4, 3_000, 32);
+    let logical = set.size_bytes();
+    let server =
+        EmbeddingServer::start(set, ServerConfig { num_shards: 4, ..Default::default() });
+    let report = server.size_report();
+    assert_eq!(report.table_bytes, logical);
+    assert_eq!(report.engine_bytes, logical);
+    assert!(
+        report.catalog_overhead() < 0.01,
+        "catalog {} B vs tables {} B",
+        report.catalog_bytes,
+        report.table_bytes
+    );
+    assert!(report.residency_ratio() < 1.01, "ratio {}", report.residency_ratio());
+    assert_eq!(report.per_shard_bytes.len(), 4);
+    assert_eq!(report.per_shard_bytes.iter().sum::<usize>(), report.engine_bytes);
+}
+
+#[test]
+fn codebook_residency_overhead_is_bounded() {
+    // Two-tier codebook slices each keep the (small) shared codebooks,
+    // so residency may exceed 1× — but only by the codebook bytes.
+    let set = TableSet::new(
+        (0..2)
+            .map(|t| {
+                let tab = EmbeddingTable::randn(2_000, 16, 0xE0 + t as u64);
+                AnyTable::Codebook(
+                    tab.quantize_codebook(CodebookKind::TwoTier { k: 4 }, ScaleBiasDtype::F16),
+                )
+            })
+            .collect(),
+    );
+    let logical = set.size_bytes();
+    let engine = ShardedEngine::start(
+        set,
+        &ShardConfig { num_shards: 4, small_table_rows: 0, ..Default::default() },
+    );
+    let resident: usize = engine.shard_bytes().iter().sum();
+    assert!(resident >= logical);
+    assert!(
+        (resident as f64) < 1.05 * logical as f64,
+        "codebook residency {resident} vs logical {logical}"
+    );
+}
+
+#[test]
+fn replication_cost_is_exactly_the_replicas() {
+    // Hot replication trades bytes for skew: the report must show the
+    // exact cost, and residency stays 1× + replicas.
+    let set = fused_set(3, 256, 16); // whole tables under the default threshold
+    let logical = set.size_bytes();
+    let per_table = logical / 3;
+    let server = EmbeddingServer::start(
+        set,
+        ServerConfig { num_shards: 4, replicate_hot: 1, ..Default::default() },
+    );
+    let report = server.size_report();
+    assert_eq!(report.table_bytes, logical);
+    assert_eq!(report.replicated_bytes, 3 * per_table); // 3 extra copies
+    assert_eq!(report.engine_bytes, logical + report.replicated_bytes);
+    // Serving still works and matches the catalog's shape claims.
+    let req = Request { ids: vec![vec![0, 255], vec![17], vec![42]] };
+    assert_eq!(server.lookup(&req).len(), server.feature_width());
+}
+
+#[test]
+fn residency_report_survives_serving_traffic() {
+    // The report is static accounting: serving must not change it.
+    let set = fused_set(2, 1_000, 8);
+    let server =
+        EmbeddingServer::start(set, ServerConfig { num_shards: 2, ..Default::default() });
+    let before = server.size_report();
+    for i in 0..50u32 {
+        let req = Request { ids: vec![vec![i, 999 - i], vec![i * 3]] };
+        let _ = server.lookup(&req);
+    }
+    let after = server.size_report();
+    assert_eq!(before.engine_bytes, after.engine_bytes);
+    assert_eq!(before.catalog_bytes, after.catalog_bytes);
+    // ... but the per-shard service stats did move.
+    let stats = server.shard_stats().expect("sharded");
+    assert_eq!(stats.iter().map(|s| s.lookups).sum::<u64>(), 150);
+}
