@@ -12,13 +12,21 @@
 //!
 //! Target: ≥2× at 4 shards.
 //!
+//! `--skewed` switches to the adaptive-load workload: many *whole*
+//! fused tables with Zipf-distributed table popularity (hot tables
+//! dominate, the skew real recommender traffic shows), measured with
+//! static placement vs. work stealing + runtime re-replication. It
+//! reports per-batch p50/p99 latency, steal counts, and rebalance
+//! counters per arm, and asserts the two arms agree bit-for-bit.
+//!
 //! ```bash
 //! cargo bench --bench shard_scaling            # full (1M rows)
 //! cargo bench --bench shard_scaling -- --quick # small + fast
 //! cargo bench --bench shard_scaling -- --tiny  # CI smoke budget
+//! cargo bench --bench shard_scaling -- --tiny --skewed  # adaptive arms
 //! ```
 
-use emberq::coordinator::{ShardStats, TableSet};
+use emberq::coordinator::{LatencyHistogram, ShardStats, TableSet};
 use emberq::data::trace::Request;
 use emberq::eval::{JsonWriter, TableWriter};
 use emberq::quant::AsymQuantizer;
@@ -27,7 +35,7 @@ use emberq::sls::{sls_fused, SlsArgs};
 use emberq::table::serial::AnyTable;
 use emberq::table::{EmbeddingTable, ScaleBiasDtype};
 use emberq::util::bench::measure;
-use emberq::util::Rng;
+use emberq::util::{Rng, Zipf};
 
 const DIM: usize = 128;
 const POOL: usize = 100;
@@ -35,6 +43,10 @@ const POOL: usize = 100;
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let tiny = std::env::args().any(|a| a == "--tiny");
+    if std::env::args().any(|a| a == "--skewed") {
+        run_skewed(tiny, quick);
+        return;
+    }
     let (rows, segments, warm, reps) = if tiny {
         (50_000, 200, 0, 1) // CI smoke: compile + one honest pass
     } else if quick {
@@ -141,4 +153,119 @@ fn main() {
         tw.render()
     );
     println!("Paper-deployment check: >=2x at 4 shards over the single-threaded INT4 baseline.");
+}
+
+/// Skewed-workload mode: Zipf table popularity over whole fused tables,
+/// static placement vs. stealing + runtime re-replication.
+fn run_skewed(tiny: bool, quick: bool) {
+    let (num_tables, rows, dim, requests, reps) = if tiny {
+        (12usize, 1_500usize, 32usize, 600usize, 2usize)
+    } else if quick {
+        (12, 8_000, 64, 2_000, 3)
+    } else {
+        (16, 40_000, 64, 8_000, 5)
+    };
+    let max_batch = 16usize;
+    let fp32: Vec<EmbeddingTable> = (0..num_tables)
+        .map(|t| EmbeddingTable::randn_sigma(rows, dim, 0.1, 0x5E00 + t as u64))
+        .collect();
+    let mk_set = || {
+        TableSet::new(
+            fp32.iter()
+                .map(|t| AnyTable::Fused(t.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16)))
+                .collect(),
+        )
+    };
+    // Zipf-popular tables: each request draws table picks from a Zipf
+    // over table ids, pooling a few rows per pick — hot tables get big
+    // segments, cold ones small or empty.
+    let zipf = Zipf::new(num_tables, 1.1);
+    let mut rng = Rng::new(0x5E5E);
+    let reqs: Vec<Request> = (0..requests)
+        .map(|_| {
+            let mut pools = vec![0usize; num_tables];
+            for _ in 0..24 {
+                pools[zipf.sample(&mut rng)] += 3;
+            }
+            Request {
+                ids: pools
+                    .iter()
+                    .map(|&pool| (0..pool).map(|_| rng.below(rows) as u32).collect())
+                    .collect(),
+            }
+        })
+        .collect();
+    println!(
+        "skewed workload: {num_tables} whole INT4 tables × {rows} rows × d={dim}, \
+         {requests} requests (Zipf table popularity, alpha 1.1), batches of {max_batch}"
+    );
+    for shards in [4usize, 8] {
+        let mut baseline: Option<Vec<f32>> = None;
+        for (label, steal, adapt) in [("static", false, false), ("adaptive", true, true)] {
+            let engine = ShardedEngine::start(
+                mk_set(),
+                &ShardConfig {
+                    num_shards: shards,
+                    small_table_rows: usize::MAX, // whole tables: the skew hazard
+                    steal,
+                    ..Default::default()
+                },
+            );
+            let fw = engine.feature_width();
+            let mut out = vec![0.0f32; max_batch * fw];
+            // Warm pass (drives observed_loads); the adaptive arm then
+            // runs one runtime re-replication pass off those loads —
+            // the same pass `--rebalance-interval` runs on a timer.
+            for batch in reqs.chunks(max_batch) {
+                engine.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
+            }
+            if adapt {
+                engine.rebalance_once();
+            }
+            let mut hist = LatencyHistogram::new();
+            for _ in 0..reps {
+                for batch in reqs.chunks(max_batch) {
+                    let t0 = std::time::Instant::now();
+                    engine.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
+                    hist.record(t0.elapsed());
+                }
+            }
+            // Bit-exactness across arms: adaptive must not move a bit.
+            let first = &reqs[..max_batch];
+            let mut check = vec![0.0f32; max_batch * fw];
+            engine.lookup_batch_into(first, &mut check);
+            match &baseline {
+                None => baseline = Some(check),
+                Some(b) => assert_eq!(b, &check, "arms diverged at {shards} shards"),
+            }
+            let p50 = hist.quantile(0.50).as_nanos() as f64 / 1e6;
+            let p99 = hist.quantile(0.99).as_nanos() as f64 / 1e6;
+            let steals = engine.steal_count();
+            let rb = engine.rebalance_stats();
+            eprintln!(
+                "shards={shards} {label}: batch p50={p50:.3} ms p99={p99:.3} ms, \
+                 {steals} steals, {} rebalances (+{} replicas)",
+                rb.rebalances, rb.replicas_added
+            );
+            let mut jw = JsonWriter::new();
+            jw.str_field("bench", "shard_scaling_skewed")
+                .str_field("arm", label)
+                .num_field("shards", shards as f64)
+                .num_field("tables", num_tables as f64)
+                .num_field("rows", rows as f64)
+                .num_field("requests", requests as f64)
+                .num_field("steal", u64::from(steal) as f64)
+                .num_field("batch_p50_ms", p50)
+                .num_field("batch_p99_ms", p99)
+                .num_field("steals", steals as f64)
+                .num_field("rebalances", rb.rebalances as f64)
+                .num_field("replicas_added", rb.replicas_added as f64)
+                .num_field("replicas_retired", rb.replicas_retired as f64);
+            println!("{}", jw.finish());
+        }
+    }
+    println!(
+        "\nAdaptive check: with Zipf table skew, stealing + runtime re-replication \
+         should show lower batch p99 than static placement, bit-exactly."
+    );
 }

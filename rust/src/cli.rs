@@ -25,7 +25,7 @@ impl Flags {
     fn parse(args: &[String]) -> Flags {
         // Value-less flags must be listed here so `--fp16 positional`
         // parses unambiguously.
-        const BOOL_FLAGS: &[&str] = &["fp16", "help"];
+        const BOOL_FLAGS: &[&str] = &["fp16", "help", "steal"];
         let mut f = Flags { positional: Vec::new(), kv: Vec::new(), bools: Vec::new() };
         let mut i = 0;
         while i < args.len() {
@@ -109,7 +109,8 @@ COMMANDS:
   eval      --rows N --dim D [--seed S] [--bits 4]
             normalized-l2 sweep of all methods over a random N(0,1) table
   serve     --table FILE [--shards N] [--workers N] [--requests N] [--batch N]
-            [--replicate-hot N] [--small-table-rows N] [--listen ADDR]
+            [--replicate-hot N] [--small-table-rows N] [--steal]
+            [--rebalance-interval MS] [--listen ADDR]
             serve a table file against a synthetic Zipf trace (or over TCP).
             --shards N > 0 splits every table's rows across N worker
             shards (the multi-core, slice-resident path); --shards 0
@@ -118,8 +119,15 @@ COMMANDS:
             (router-observed load from the trace) across all shards;
             tables below --small-table-rows rows (default 512) stay
             whole and are the replication candidates.
-            Sharded runs print per-shard service stats and the resident-
-            bytes breakdown (engine vs catalog) after the trace replay
+            --steal lets idle shard workers pull whole sub-requests from
+            the busiest peer's queue (bit-exact; smooths skew).
+            --rebalance-interval MS runs the background rebalancer every
+            MS milliseconds: it re-replicates whole tables that ran hot
+            since the last tick and retires replicas that went cold,
+            swapping routing atomically (0 = off, the default).
+            Sharded runs print per-shard service stats, steal/rebalance
+            counters, and the resident-bytes breakdown (engine vs
+            catalog) after the trace replay
   info      --in FILE
             describe a saved table file"
     );
@@ -248,10 +256,19 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let replicate_hot: usize = flags.num("replicate-hot", 0)?;
     let small_table_rows: usize =
         flags.num("small-table-rows", emberq::shard::ShardConfig::default().small_table_rows)?;
+    let steal = flags.flag("steal");
+    let rebalance_ms: u64 = flags.num("rebalance-interval", 0)?;
+    let rebalance_interval =
+        (rebalance_ms > 0).then_some(std::time::Duration::from_millis(rebalance_ms));
     let listen = flags.get("listen").map(str::to_string);
     if replicate_hot > 0 && shards == 0 {
         eprintln!(
             "warning: --replicate-hot only applies to the sharded path (--shards > 0); ignoring"
+        );
+    }
+    if (steal || rebalance_interval.is_some()) && shards < 2 {
+        eprintln!(
+            "note: --steal / --rebalance-interval need at least two shards (--shards N); inert"
         );
     }
 
@@ -309,6 +326,8 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             small_table_rows,
             replicate_hot,
             hot_loads,
+            steal,
+            rebalance_interval,
         },
     );
     if replicate_hot > 0 && shards == 1 {
@@ -340,6 +359,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     if server.is_sharded() {
         println!("{}", metrics.per_shard_summary());
         println!("{}", server.size_report().summary());
+        if let Some(line) = server.adaptive_summary() {
+            println!("{line}");
+        }
     }
     Ok(())
 }
@@ -436,6 +458,25 @@ mod tests {
             "8",
             "--replicate-hot",
             "1",
+        ]))
+        .unwrap();
+        // Adaptive load management: work stealing + the runtime
+        // rebalancer (bool flag parse + config plumbing).
+        run(&s(&[
+            "serve",
+            "--table",
+            path.to_str().unwrap(),
+            "--shards",
+            "2",
+            "--copies",
+            "2",
+            "--requests",
+            "40",
+            "--batch",
+            "8",
+            "--steal",
+            "--rebalance-interval",
+            "5",
         ]))
         .unwrap();
         let _ = std::fs::remove_dir_all(&dir);

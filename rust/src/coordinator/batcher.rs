@@ -43,23 +43,44 @@ pub struct Batcher<T> {
 }
 
 impl<T> Batcher<T> {
-    /// Wrap a channel receiver.
+    /// Wrap a channel receiver. A `max_batch` of 0 is clamped to 1 (the
+    /// same clamp [`BatchPolicy::chunk_ranges`] applies), so a degenerate
+    /// policy degrades to unbatched serving instead of panicking the
+    /// intake thread.
     pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
-        assert!(policy.max_batch > 0);
+        let policy = BatchPolicy { max_batch: policy.max_batch.max(1), ..policy };
         Batcher { rx, policy }
     }
 
     /// Block for the next batch. Returns `None` once the channel is closed
     /// and drained.
+    ///
+    /// A lone request dispatches immediately: the `max_wait` deadline
+    /// only arms when the opportunistic drain below proves there is
+    /// concurrent traffic worth coalescing. A closed-loop client (one
+    /// request in flight at a time) therefore never pays the deadline —
+    /// it cannot send its next request until this one is answered, so
+    /// waiting for it would add pure latency.
     pub fn next_batch(&self) -> Option<Vec<T>> {
         // Block for the first item.
         let first = match self.rx.recv() {
             Ok(item) => item,
             Err(_) => return None,
         };
-        let deadline = Instant::now() + self.policy.max_wait;
         let mut batch = Vec::with_capacity(self.policy.max_batch);
         batch.push(first);
+        // Opportunistic non-blocking drain: whatever is already queued
+        // joins the batch at zero latency cost.
+        while batch.len() < self.policy.max_batch {
+            match self.rx.try_recv() {
+                Ok(item) => batch.push(item),
+                Err(_) => break,
+            }
+        }
+        if batch.len() == 1 {
+            return Some(batch);
+        }
+        let deadline = Instant::now() + self.policy.max_wait;
         while batch.len() < self.policy.max_batch {
             let now = Instant::now();
             if now >= deadline {
@@ -142,6 +163,43 @@ mod tests {
                 assert_eq!(last.end, n);
             }
         }
+    }
+
+    #[test]
+    fn lone_request_skips_the_deadline() {
+        // A closed-loop client must not pay max_wait per request: with
+        // nothing else queued, the batch of one dispatches immediately.
+        let (tx, rx) = sync_channel(4);
+        tx.send(42).unwrap();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(10) },
+        );
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![42]);
+        assert!(t0.elapsed() < Duration::from_secs(1), "waited the deadline for a lone item");
+    }
+
+    #[test]
+    fn zero_max_batch_degrades_to_single() {
+        // The `chunk_ranges(0)`-style edge: a zero cap must not panic
+        // the intake — it clamps to batches of one.
+        let (tx, rx) = sync_channel(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 0, max_wait: Duration::from_millis(1) },
+        );
+        assert_eq!(b.policy.max_batch, 1);
+        assert_eq!(b.next_batch().unwrap(), vec![1]);
+        assert_eq!(b.next_batch().unwrap(), vec![2]);
+        assert!(b.next_batch().is_none());
+        // And the replay counterpart of the same edge: nothing to chunk.
+        let p = BatchPolicy { max_batch: 0, ..Default::default() };
+        assert_eq!(p.chunk_ranges(0).count(), 0);
+        assert_eq!(p.chunk_ranges(3).collect::<Vec<_>>(), vec![0..1, 1..2, 2..3]);
     }
 
     #[test]

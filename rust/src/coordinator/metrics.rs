@@ -122,15 +122,19 @@ impl LatencyHistogram {
 /// merged on snapshot so per-shard skew stays visible.
 #[derive(Clone, Debug, Default)]
 pub struct ShardStats {
-    /// Service latency of the shard's tasks (one task = one batch's work
-    /// for this shard).
+    /// Service latency of the shard's tasks (one task = one pooled
+    /// `(slot, table)` segment executed by this worker).
     pub latency: LatencyHistogram,
-    /// Tasks served.
+    /// Tasks (segments) served.
     pub tasks: u64,
-    /// `(slot, table)` segments answered.
-    pub segments: u64,
     /// Pooled row lookups performed.
     pub lookups: u64,
+    /// Tasks this worker *stole* from another shard's queue (counted on
+    /// the thief, so skew absorption is visible per shard).
+    pub steals: u64,
+    /// Tasks whose execution panicked (caught; the task's segment is
+    /// returned zeroed instead of wedging the batch).
+    pub panics: u64,
 }
 
 impl ShardStats {
@@ -138,8 +142,9 @@ impl ShardStats {
     pub fn merge(&mut self, other: &ShardStats) {
         self.latency.merge(&other.latency);
         self.tasks += other.tasks;
-        self.segments += other.segments;
         self.lookups += other.lookups;
+        self.steals += other.steals;
+        self.panics += other.panics;
     }
 
     /// The activity recorded after `earlier` was snapshotted from this
@@ -148,18 +153,23 @@ impl ShardStats {
         ShardStats {
             latency: self.latency.since(&earlier.latency),
             tasks: self.tasks - earlier.tasks,
-            segments: self.segments - earlier.segments,
             lookups: self.lookups - earlier.lookups,
+            steals: self.steals - earlier.steals,
+            panics: self.panics - earlier.panics,
         }
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         let (p50, p95, p99) = self.latency.percentiles();
-        format!(
-            "{} tasks, {} segments, {} lookups, p50={:.0?} p95={:.0?} p99={:.0?}",
-            self.tasks, self.segments, self.lookups, p50, p95, p99,
-        )
+        let mut s = format!(
+            "{} tasks, {} lookups, {} stolen, p50={:.0?} p95={:.0?} p99={:.0?}",
+            self.tasks, self.lookups, self.steals, p50, p95, p99,
+        );
+        if self.panics > 0 {
+            s.push_str(&format!(", {} panics", self.panics));
+        }
+        s
     }
 }
 
@@ -289,16 +299,20 @@ mod tests {
 
     #[test]
     fn shard_stats_merge_and_summary() {
-        let mut a = ShardStats { tasks: 1, segments: 2, lookups: 5, ..Default::default() };
+        let mut a = ShardStats { tasks: 1, lookups: 5, ..Default::default() };
         a.latency.record(Duration::from_micros(10));
-        let mut b = ShardStats { tasks: 3, segments: 4, lookups: 7, ..Default::default() };
+        let mut b = ShardStats { tasks: 3, lookups: 7, steals: 2, ..Default::default() };
         b.latency.record(Duration::from_micros(30));
         a.merge(&b);
         assert_eq!(a.tasks, 4);
-        assert_eq!(a.segments, 6);
         assert_eq!(a.lookups, 12);
+        assert_eq!(a.steals, 2);
         assert_eq!(a.latency.count(), 2);
         assert!(a.summary().contains("4 tasks"));
+        assert!(a.summary().contains("2 stolen"));
+        assert!(!a.summary().contains("panics"));
+        let p = ShardStats { panics: 1, ..Default::default() };
+        assert!(p.summary().contains("1 panics"));
     }
 
     #[test]
@@ -312,15 +326,14 @@ mod tests {
         assert_eq!(window.count(), 1);
         assert_eq!(h.since(&h.clone()).count(), 0);
         assert_eq!(h.since(&h.clone()).max(), Duration::ZERO);
-        let mut a = ShardStats { tasks: 5, segments: 9, lookups: 20, ..Default::default() };
+        let mut a = ShardStats { tasks: 5, lookups: 20, ..Default::default() };
         a.latency.record(Duration::from_micros(10));
         let snap = a.clone();
         a.tasks += 1;
-        a.segments += 2;
         a.lookups += 3;
         a.latency.record(Duration::from_micros(30));
         let w = a.since(&snap);
-        assert_eq!((w.tasks, w.segments, w.lookups), (1, 2, 3));
+        assert_eq!((w.tasks, w.lookups), (1, 3));
         assert_eq!(w.latency.count(), 1);
     }
 

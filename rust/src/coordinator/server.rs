@@ -20,15 +20,15 @@
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::catalog::TableCatalog;
 use crate::coordinator::metrics::{ServerMetrics, ShardStats};
 use crate::coordinator::router::Router;
 use crate::data::trace::{Request, RequestTrace};
 use crate::eval::size::SizeReport;
-use crate::shard::{ShardConfig, ShardedEngine};
+use crate::shard::{RebalanceStats, ShardConfig, ShardedEngine};
 use crate::sls::SlsArgs;
 use crate::table::serial::AnyTable;
 
@@ -152,6 +152,12 @@ pub struct ServerConfig {
     /// Sharded path only: router-observed per-table load ranking the
     /// replication candidates (see [`ShardConfig::hot_loads`]).
     pub hot_loads: Vec<u64>,
+    /// Sharded path only: let idle shard workers steal whole
+    /// sub-requests from the busiest peer (see [`ShardConfig::steal`]).
+    pub steal: bool,
+    /// Sharded path only: run the background rebalancer at this interval
+    /// (see [`ShardConfig::rebalance_interval`]).
+    pub rebalance_interval: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -164,9 +170,14 @@ impl Default for ServerConfig {
             small_table_rows: ShardConfig::default().small_table_rows,
             replicate_hot: 0,
             hot_loads: Vec::new(),
+            steal: false,
+            rebalance_interval: None,
         }
     }
 }
+
+/// A request handed to the sharded intake, with its reply slot.
+type IntakeItem = (Request, SyncSender<Vec<f32>>);
 
 /// The serving runtime: router + table-parallel worker pool over an
 /// `Arc<TableSet>`, or the slice-resident row-sharded engine when
@@ -175,10 +186,15 @@ pub struct EmbeddingServer {
     router: Router,
     senders: Vec<SyncSender<WorkItem>>,
     workers: Vec<JoinHandle<()>>,
-    engine: Option<ShardedEngine>,
+    engine: Option<Arc<ShardedEngine>>,
     /// Table-parallel path only; `None` when the shard engine owns the
     /// rows.
     tables: Option<Arc<TableSet>>,
+    /// Sharded path only: the dynamic-batching request intake
+    /// ([`EmbeddingServer::submit`] feeds it; dispatcher threads form
+    /// batches with [`Batcher::next_batch`] per `cfg.batch`).
+    intake: Option<SyncSender<IntakeItem>>,
+    dispatchers: Vec<JoinHandle<()>>,
     catalog: TableCatalog,
     cfg: ServerConfig,
 }
@@ -205,9 +221,11 @@ impl EmbeddingServer {
                     small_table_rows: cfg.small_table_rows,
                     replicate_hot: cfg.replicate_hot,
                     hot_loads: cfg.hot_loads.clone(),
+                    steal: cfg.steal,
+                    rebalance_interval: cfg.rebalance_interval,
                 },
             );
-            (Some(engine), None)
+            (Some(Arc::new(engine)), None)
         } else {
             let tables = Arc::new(tables);
             senders.reserve(cfg.shards);
@@ -226,7 +244,78 @@ impl EmbeddingServer {
             }
             (None, Some(tables))
         };
-        EmbeddingServer { router, senders, workers, engine, tables, catalog, cfg }
+        // Dynamic-batching intake for the sharded path: concurrent
+        // `submit` calls (the TCP front's connection threads) are formed
+        // into engine batches by `cfg.batch` — so `max_batch`/`max_wait`
+        // actually apply under `--shards N`, not just in trace replays.
+        // Several dispatcher threads share one batcher: batch *formation*
+        // serializes on its mutex (cheap, deadline-driven), while batch
+        // *execution* overlaps across dispatchers so the engine never
+        // idles behind a single in-flight batch.
+        let (intake, dispatchers) = match &engine {
+            Some(engine) => {
+                let (tx, rx) = sync_channel::<IntakeItem>(cfg.queue_depth.max(1));
+                let batcher = Arc::new(std::sync::Mutex::new(Batcher::new(rx, cfg.batch)));
+                let fw = catalog.feature_width();
+                let max_batch = cfg.batch.max_batch.max(1);
+                let handles = (0..cfg.num_shards.clamp(1, 4))
+                    .map(|i| {
+                        let eng = Arc::clone(engine);
+                        let batcher = Arc::clone(&batcher);
+                        std::thread::Builder::new()
+                            .name(format!("emberq-intake-{i}"))
+                            .spawn(move || {
+                                let mut buf = vec![0.0f32; max_batch * fw];
+                                loop {
+                                    let batch = {
+                                        let b = crate::util::sync::lock_ignore_poison(&batcher);
+                                        b.next_batch()
+                                    };
+                                    let Some(batch) = batch else { return };
+                                    let (reqs, replies): (
+                                        Vec<Request>,
+                                        Vec<SyncSender<Vec<f32>>>,
+                                    ) = batch.into_iter().unzip();
+                                    let n = reqs.len();
+                                    // Contain a panicking batch (malformed
+                                    // request that slipped past validation):
+                                    // drop its replies — those submitters
+                                    // fall back to direct lookups — and keep
+                                    // batching alive for everyone else.
+                                    let ok = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(|| {
+                                            eng.lookup_batch_into(&reqs, &mut buf[..n * fw])
+                                        }),
+                                    )
+                                    .is_ok();
+                                    if !ok {
+                                        continue;
+                                    }
+                                    for (i, reply) in replies.iter().enumerate() {
+                                        // A submitter that gave up is fine.
+                                        let _ =
+                                            reply.send(buf[i * fw..(i + 1) * fw].to_vec());
+                                    }
+                                }
+                            })
+                            .expect("spawn intake dispatcher")
+                    })
+                    .collect();
+                (Some(tx), handles)
+            }
+            None => (None, Vec::new()),
+        };
+        EmbeddingServer {
+            router,
+            senders,
+            workers,
+            engine,
+            tables,
+            intake,
+            dispatchers,
+            catalog,
+            cfg,
+        }
     }
 
     /// The leader-resident catalog of the served tables (metadata only).
@@ -252,26 +341,55 @@ impl EmbeddingServer {
     /// Per-shard service stats (sharded path only; cumulative since
     /// start).
     pub fn shard_stats(&self) -> Option<Vec<ShardStats>> {
-        self.engine.as_ref().map(ShardedEngine::shard_stats)
+        self.engine.as_ref().map(|e| e.shard_stats())
     }
 
     /// Router-observed per-table load (sharded path only; cumulative
     /// since start).
     pub fn observed_loads(&self) -> Option<Vec<u64>> {
-        self.engine.as_ref().map(ShardedEngine::observed_loads)
+        self.engine.as_ref().map(|e| e.observed_loads())
+    }
+
+    /// Sub-requests executed by a non-home worker (sharded path only;
+    /// cumulative since start).
+    pub fn steal_count(&self) -> Option<u64> {
+        self.engine.as_ref().map(|e| e.steal_count())
+    }
+
+    /// Runtime-rebalancer counters (sharded path only).
+    pub fn rebalance_stats(&self) -> Option<RebalanceStats> {
+        self.engine.as_ref().map(|e| e.rebalance_stats())
+    }
+
+    /// Run one rebalance pass now (sharded path only); returns whether
+    /// the placement changed.
+    pub fn rebalance_once(&self) -> Option<bool> {
+        self.engine.as_ref().map(|e| e.rebalance_once())
+    }
+
+    /// Check the engine's current routing against the leader catalog
+    /// (sharded path only; `Ok` on the table-parallel path).
+    pub fn validate_routing(&self) -> Result<(), String> {
+        match &self.engine {
+            Some(e) => e.validate_routing(&self.catalog),
+            None => Ok(()),
+        }
     }
 
     /// Resident-bytes breakdown of this deployment (engine-resident vs
     /// leader/catalog-resident).
     pub fn size_report(&self) -> SizeReport {
         match &self.engine {
-            Some(e) => SizeReport {
-                table_bytes: e.table_bytes(),
-                engine_bytes: e.shard_bytes().iter().sum(),
-                replicated_bytes: e.replicated_bytes(),
-                catalog_bytes: self.catalog.resident_bytes(),
-                per_shard_bytes: e.shard_bytes().to_vec(),
-            },
+            Some(e) => {
+                let per_shard_bytes = e.shard_bytes();
+                SizeReport {
+                    table_bytes: e.table_bytes(),
+                    engine_bytes: per_shard_bytes.iter().sum(),
+                    replicated_bytes: e.replicated_bytes(),
+                    catalog_bytes: self.catalog.resident_bytes(),
+                    per_shard_bytes,
+                }
+            }
             None => {
                 // Table-parallel workers share one Arc<TableSet>: the
                 // rows are resident exactly once.
@@ -296,7 +414,47 @@ impl EmbeddingServer {
             out.push('\n');
             out.push_str(&crate::coordinator::metrics::per_shard_lines(&stats));
         }
+        if let Some(line) = self.adaptive_summary() {
+            out.push('\n');
+            out.push_str(&line);
+        }
         out
+    }
+
+    /// One-line steal/rebalance counter summary (sharded path only) —
+    /// shared by the CLI trace-replay output and the TCP stats frame so
+    /// the two cannot drift apart.
+    pub fn adaptive_summary(&self) -> Option<String> {
+        let (steals, rb) = (self.steal_count()?, self.rebalance_stats()?);
+        Some(format!(
+            "adaptive: {} steals, {} rebalances (+{} replicas, -{} retired)",
+            steals, rb.rebalances, rb.replicas_added, rb.replicas_retired,
+        ))
+    }
+
+    /// Pooled lookup routed through the dynamic-batching intake on the
+    /// sharded path (so concurrent callers — e.g. TCP connection threads
+    /// — are grouped per [`BatchPolicy`]); a direct lookup otherwise.
+    /// Results are bit-identical either way: batch composition never
+    /// changes a slot's arithmetic.
+    pub fn submit(&self, req: &Request) -> Vec<f32> {
+        // Keep malformed requests (wrong table arity) out of the shared
+        // dispatcher: the direct path panics in the *caller's* thread,
+        // where the blame belongs, instead of poisoning a batch that
+        // innocent submitters are riding in.
+        if req.ids.len() == self.catalog.num_tables() {
+            if let Some(tx) = &self.intake {
+                let (rtx, rrx) = sync_channel(1);
+                if tx.send((req.clone(), rtx)).is_ok() {
+                    if let Ok(out) = rrx.recv() {
+                        return out;
+                    }
+                }
+                // Intake gone (shutdown race) or the batch panicked:
+                // fall through to the direct path.
+            }
+        }
+        self.lookup(req)
     }
 
     /// Pooled lookup for one request: returns per-table pooled embeddings
@@ -393,6 +551,12 @@ impl EmbeddingServer {
 
 impl Drop for EmbeddingServer {
     fn drop(&mut self) {
+        // Close the intake first so the dispatchers drain and exit
+        // before the engine (which they hold Arcs to) shuts down.
+        self.intake = None;
+        for d in self.dispatchers.drain(..) {
+            let _ = d.join();
+        }
         self.senders.clear(); // close channels -> workers exit
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -656,6 +820,83 @@ mod tests {
         assert_eq!(report.engine_bytes, logical); // Arc-shared, one copy
         assert!(report.per_shard_bytes.is_empty());
         assert!(report.residency_ratio() < 1.01);
+    }
+
+    #[test]
+    fn submit_routes_through_the_batched_intake() {
+        // Sharded path: submit must agree bitwise with direct lookups
+        // (batch composition never changes a slot's arithmetic), and
+        // concurrent submitters must all be answered.
+        let (_, set) = quantized_set(3, 80, 8);
+        let server = Arc::new(EmbeddingServer::start(
+            set,
+            ServerConfig {
+                num_shards: 2,
+                batch: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: std::time::Duration::from_millis(2),
+                },
+                ..Default::default()
+            },
+        ));
+        let req = Request { ids: vec![vec![0, 79], vec![40], vec![7, 7]] };
+        assert_eq!(server.submit(&req), server.lookup(&req));
+        let handles: Vec<_> = (0..4)
+            .map(|k| {
+                let srv = Arc::clone(&server);
+                std::thread::spawn(move || {
+                    for i in 0..10u32 {
+                        let req = Request {
+                            ids: vec![vec![(k + i) % 80], vec![], vec![(k * 7 + i) % 80]],
+                        };
+                        assert_eq!(srv.submit(&req), srv.lookup(&req), "k={k} i={i}");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Table-parallel path: submit falls back to a direct lookup.
+        let (_, set) = quantized_set(2, 20, 4);
+        let tp = EmbeddingServer::start(set, ServerConfig { shards: 2, ..Default::default() });
+        let req = Request { ids: vec![vec![0], vec![19]] };
+        assert_eq!(tp.submit(&req), tp.lookup(&req));
+    }
+
+    #[test]
+    fn steal_and_rebalance_flow_through_server_config() {
+        let (_, set) = quantized_set(3, 60, 8);
+        let server = EmbeddingServer::start(
+            set,
+            ServerConfig {
+                num_shards: 3,
+                steal: true,
+                rebalance_interval: Some(std::time::Duration::from_millis(10)),
+                ..Default::default()
+            },
+        );
+        assert_eq!(server.steal_count(), Some(0));
+        assert_eq!(server.rebalance_stats().unwrap().rebalances, 0);
+        server.validate_routing().expect("fresh routing is valid");
+        // Drive a hot table, force a pass, and check it is observable at
+        // the server layer.
+        for i in 0..20u32 {
+            let _ = server.lookup(&Request { ids: vec![vec![i % 60, 59 - i % 60], vec![], vec![]] });
+        }
+        // The 10 ms background thread may have beaten us to it; either
+        // way a pass has replicated the hot table by now.
+        let _ = server.rebalance_once();
+        assert!(server.rebalance_stats().unwrap().replicas_added >= 1);
+        server.validate_routing().expect("routing valid after rebalance");
+        assert!(server.stats_text().contains("adaptive:"), "{}", server.stats_text());
+        // Table-parallel path exposes no adaptive counters.
+        let (_, set) = quantized_set(2, 20, 4);
+        let tp = EmbeddingServer::start(set, ServerConfig { shards: 1, ..Default::default() });
+        assert_eq!(tp.steal_count(), None);
+        assert!(tp.rebalance_stats().is_none());
+        assert!(tp.rebalance_once().is_none());
+        tp.validate_routing().expect("table-parallel routing is trivially valid");
     }
 
     #[test]

@@ -36,6 +36,7 @@ use std::time::Instant;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::server::EmbeddingServer;
 use crate::data::trace::Request;
+use crate::util::sync::lock_ignore_poison;
 
 const ERR_SENTINEL: u32 = 0xFFFF_FFFF;
 const STATS_SENTINEL: u32 = 0xFFFF_FFFE;
@@ -105,9 +106,10 @@ impl TcpFront {
     }
 
     /// Snapshot of the front's request metrics (per-request latency over
-    /// all connections).
+    /// all connections). Poison-tolerant: a panicked connection thread
+    /// cannot take the stats path down with it.
     pub fn metrics(&self) -> ServerMetrics {
-        self.metrics.lock().unwrap().clone()
+        lock_ignore_poison(&self.metrics).clone()
     }
 
     /// The stats block the wire-level stats frame returns.
@@ -126,7 +128,7 @@ impl Drop for TcpFront {
 }
 
 fn stats_text(server: &EmbeddingServer, metrics: &Mutex<ServerMetrics>) -> String {
-    let front = metrics.lock().unwrap().clone();
+    let front = lock_ignore_poison(metrics).clone();
     let (p50, p95, p99) = front.latency.percentiles();
     format!(
         "front: {} req, {} lookups, p50={:.0?} p95={:.0?} p99={:.0?}\n{}",
@@ -206,10 +208,12 @@ fn handle_conn(
         }
         let pooled: usize = req.ids.iter().map(Vec::len).sum();
         let t0 = Instant::now();
-        let out = server.lookup(&req);
+        // Through the dynamic-batching intake on the sharded path, so
+        // concurrent connections coalesce per the server's BatchPolicy.
+        let out = server.submit(&req);
         let dt = t0.elapsed();
         {
-            let mut m = metrics.lock().unwrap();
+            let mut m = lock_ignore_poison(metrics);
             m.latency.record(dt);
             m.requests += 1;
             m.lookups += pooled as u64;

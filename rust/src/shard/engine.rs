@@ -1,95 +1,202 @@
-//! The sharded execution engine: a persistent pool of shard workers, each
-//! owning its row slice of every table, fed over bounded channels.
+//! The sharded execution engine: a persistent pool of shard workers over
+//! per-shard work deques, with optional work stealing and a background
+//! rebalancer that re-replicates hot whole tables at runtime.
 //!
 //! Execution of one batch:
 //!
-//! 1. **Split** — every request's per-table id list is bucketed by owning
-//!    shard and translated to shard-local ids (two integer ops per id).
-//!    Lookups against hot-replicated whole tables are spread round-robin
-//!    across the replica shards.
-//! 2. **Fan out** — each shard with work receives one `ShardTask` for the
-//!    whole batch (one channel hop per shard per batch, not per request).
-//! 3. **Pool** — workers run the format's optimized SLS kernel over their
-//!    slice, producing partial pooled sums per `(slot, table)`, and record
-//!    per-shard service metrics ([`ShardStats`]).
-//! 4. **Scatter-gather** — the leader merges partials into the output in
-//!    ascending shard order, so accumulation is deterministic run to run
-//!    (f32 addition is not associative).
+//! 1. **Split** — every request's per-table id list becomes one whole
+//!    *sub-request* (`(slot, table, ids)`), homed to the shard owning the
+//!    plurality of its rows (whole tables: a replica, round-robin).
+//!    Sub-requests are never split into per-shard partial sums — f32
+//!    addition is not associative, so no partial-sum merge order could
+//!    reproduce the unsharded kernel bit for bit.
+//! 2. **Enqueue** — sub-requests land on their home shard's deque (one
+//!    lock per shard per batch).
+//! 3. **Pool** — each worker drains its own deque front-to-back; when
+//!    [`ShardConfig::steal`] is set, an idle worker pulls whole
+//!    sub-requests from the busiest peer's deque instead of sleeping.
+//!    A segment whose ids span row chunks runs the chunked kernels in
+//!    [`crate::shard::exec`] — id-order-fixed arithmetic over the owning
+//!    chunk slices — so the result is bit-identical to the unsharded
+//!    kernel no matter which worker executes it.
+//! 4. **Gather** — each segment is computed exactly once, so the leader
+//!    just places results at their `(slot, table)` offsets; output is
+//!    deterministic regardless of completion order, by construction.
+//!
+//! **Runtime re-replication:** routing and slices live in an immutable
+//! [`Placement`] snapshot behind an `RwLock<Arc<_>>`. Each batch clones
+//! the `Arc` once; the rebalancer builds a new placement (duplicating /
+//! dropping whole-table replicas ranked by the load window since its
+//! last tick) and swaps it atomically between batches. In-flight batches
+//! keep serving from their snapshot.
+//!
+//! **Fault containment:** worker panics are caught per task (the segment
+//! is returned zeroed and counted in [`ShardStats::panics`]) and every
+//! shared lock is poison-tolerant, so one crashing task can neither
+//! wedge a batch nor cascade a panic through `serve_trace` or the TCP
+//! stats frame.
 //!
 //! **Slice-resident ownership:** [`ShardedEngine::start`] *consumes* the
-//! `TableSet`. The set is carved table by table into self-describing
-//! [`TableSlice`]s (each source table is dropped as soon as its slices
-//! are cut), so after startup the only copies of table bytes live inside
-//! the shard workers — the leader keeps counters and byte accounting, and
-//! callers keep a [`TableCatalog`](crate::coordinator::TableCatalog) for
-//! validation.
+//! `TableSet`; after startup the only copies of table bytes live in the
+//! placement's slices (the leader keeps counters and byte accounting,
+//! and callers keep a [`TableCatalog`] for validation).
 
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::ShardStats;
-use crate::coordinator::{Router, TableSet};
+use crate::coordinator::{Router, TableCatalog, TableSet};
 use crate::data::trace::Request;
-use crate::shard::partition::{plan_partitions, TablePartition};
-use crate::shard::slice::{ShardSlice, TableSlice};
+use crate::shard::exec;
+use crate::shard::partition::{plan_partitions, RowPartition, TablePartition};
+use crate::shard::slice::TableSlice;
 use crate::shard::ShardConfig;
+use crate::util::sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison};
 
-/// Work for one shard: per `(batch slot, table)` shard-local id lookups.
-struct ShardTask {
-    lookups: Vec<(usize, usize, Vec<u32>)>,
-    /// Reply: `(shard id, per-lookup partial pooled sums)`.
-    reply: SyncSender<(usize, Vec<(usize, usize, Vec<f32>)>)>,
+/// One unit of executable (and stealable) work: a whole `(slot, table)`
+/// segment of a batch. Carries its placement snapshot so execution is
+/// unaffected by a concurrent rebalance.
+struct SubRequest {
+    slot: usize,
+    table: usize,
+    ids: Vec<u32>,
+    /// Home shard (plurality row owner / routed replica). Stealing moves
+    /// the whole sub-request; execution still reads the home placement's
+    /// slices, so the result is identical either way.
+    home: usize,
+    placement: Arc<Placement>,
+    reply: SyncSender<(usize, usize, Vec<f32>)>,
 }
 
-/// The row-wise sharded serving engine. Sole owner of the table bytes
-/// (inside its workers) once started.
-pub struct ShardedEngine {
-    partitions: Vec<TablePartition>,
+/// An immutable routing + residency snapshot: which shards hold which
+/// table slices, and which replicas answer whole-table lookups. Swapped
+/// wholesale by the rebalancer; batches clone the `Arc` once at split
+/// time.
+struct Placement {
     /// Per table: the shards holding a full copy. Whole tables list their
     /// home shard (plus every replica when hot-replicated); row-wise
     /// tables list nothing (ownership is per chunk).
     replicas: Vec<Vec<usize>>,
+    /// `slices[shard][table]` — the shard's resident slice, if any.
+    slices: Vec<Vec<Option<Arc<TableSlice>>>>,
+}
+
+impl Placement {
+    fn shard_bytes(&self) -> Vec<usize> {
+        self.slices
+            .iter()
+            .map(|s| s.iter().flatten().map(|sl| sl.size_bytes()).sum())
+            .collect()
+    }
+
+    fn replicated_bytes(&self, bytes_per_table: &[usize]) -> usize {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(t, r)| r.len().saturating_sub(1) * bytes_per_table[t])
+            .sum()
+    }
+}
+
+/// Rebalancer bookkeeping (guarded by one mutex that also serializes
+/// passes).
+struct RebalanceState {
+    /// Loads at the previous tick (windowed ranking).
+    last_loads: Vec<u64>,
+    /// Consecutive non-idle ticks in which no whole table was hot.
+    quiet_ticks: u32,
+}
+
+/// Cumulative counters of the runtime rebalancer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RebalanceStats {
+    /// Placement swaps performed.
+    pub rebalances: u64,
+    /// Whole-table replicas materialized.
+    pub replicas_added: u64,
+    /// Replicas retired (table went cold).
+    pub replicas_retired: u64,
+}
+
+/// Everything the workers, the rebalancer, and the leader share.
+struct Core {
+    partitions: Vec<TablePartition>,
+    placement: RwLock<Arc<Placement>>,
+    /// Per-shard work deques (owner pops the front; thieves do too, so
+    /// the oldest queued work is served first either way).
+    queues: Vec<Mutex<VecDeque<SubRequest>>>,
+    /// Queued-count hints per shard (busiest-peer selection).
+    queued: Vec<AtomicUsize>,
+    total_queued: AtomicUsize,
+    /// Shutdown flag; the condvar's mutex.
+    gate: Mutex<bool>,
+    work_available: Condvar,
+    steal: bool,
+    stats: Vec<Mutex<ShardStats>>,
     /// Round-robin cursor for spreading lookups across replicas.
     rr: AtomicUsize,
     /// Router-observed pooled-lookup count per table.
     loads: Vec<AtomicU64>,
-    /// Per-shard service stats, shared with the workers.
-    stats: Vec<Arc<Mutex<ShardStats>>>,
     offsets: Vec<usize>,
+    dims: Vec<usize>,
     feature_width: usize,
     num_tables: usize,
     /// Logical bytes of the consumed set (1× the tables).
     table_bytes: usize,
-    /// Resident bytes per shard (its slices, including replicas).
-    shard_bytes: Vec<usize>,
-    /// Bytes attributable to hot-chunk replication (copies beyond the
-    /// first of each replicated table).
-    replicated_bytes: usize,
-    senders: Vec<SyncSender<ShardTask>>,
+    bytes_per_table: Vec<usize>,
+    /// Reply-channel capacity per batch (backpressure knob).
+    reply_capacity: usize,
+    /// Replica budget of the runtime rebalancer.
+    rebalance_budget: usize,
+    /// Rebalancer bookkeeping; one mutex, held across a whole pass, so
+    /// concurrent passes (background thread + `rebalance_once`) cannot
+    /// interleave and discard each other's placements.
+    rb_state: Mutex<RebalanceState>,
+    rebalances: AtomicU64,
+    replicas_added: AtomicU64,
+    replicas_retired: AtomicU64,
+}
+
+impl Core {
+    fn num_shards(&self) -> usize {
+        self.queues.len()
+    }
+}
+
+/// The row-wise sharded serving engine. Sole owner of the table bytes
+/// (inside its placement's slices) once started.
+pub struct ShardedEngine {
+    core: Arc<Core>,
     workers: Vec<JoinHandle<()>>,
+    rebalancer: Option<JoinHandle<()>>,
+    rb_stop: Option<Arc<(Mutex<bool>, Condvar)>>,
 }
 
 impl ShardedEngine {
     /// Partition `set` per `cfg`, carve it into per-shard slices, and
-    /// start the worker pool. **Consumes the set**: each worker thread
-    /// owns its [`ShardSlice`] and no leader-side copy of any row
-    /// remains. Peak memory during carving is the slices cut so far plus
-    /// one source table; steady state is exactly the slices.
+    /// start the worker pool (plus the rebalancer thread when
+    /// `cfg.rebalance_interval` is set). **Consumes the set**: the
+    /// placement's slices are the sole owners of the rows. Peak memory
+    /// during carving is the slices cut so far plus one source table;
+    /// steady state is exactly the slices.
     pub fn start(set: TableSet, cfg: &ShardConfig) -> ShardedEngine {
         let n = cfg.num_shards.max(1);
         let num_tables = set.num_tables();
         let rows: Vec<usize> = (0..num_tables).map(|t| set.rows_of(t)).collect();
         let offsets: Vec<usize> = (0..num_tables).map(|t| set.offset_of(t)).collect();
+        let dims: Vec<usize> = (0..num_tables).map(|t| set.dim_of(t)).collect();
         let feature_width = set.feature_width();
         let table_bytes = set.size_bytes();
         let partitions = plan_partitions(&rows, n, cfg.small_table_rows);
 
-        // Hot-chunk replication: whole tables are the skew hazard (one
-        // shard answers all their traffic), so the hottest of them — by
-        // router-observed load, row count as the prior when none was
+        // Start-time hot replication: whole tables are the skew hazard
+        // (one shard answers all their traffic), so the hottest of them —
+        // by router-observed load, row count as the prior when none was
         // observed — get a full copy on every shard.
         let mut replicas: Vec<Vec<usize>> = partitions
             .iter()
@@ -123,202 +230,354 @@ impl ShardedEngine {
         // shard (no copy; replicas, when asked for, are the only copies);
         // row-wise tables are cut per chunk and the source dropped, so
         // peak carve memory is the slices so far plus one table.
-        let mut per_shard: Vec<Vec<Option<TableSlice>>> =
+        let mut bytes_per_table = Vec::with_capacity(num_tables);
+        let mut slices: Vec<Vec<Option<Arc<TableSlice>>>> =
             (0..n).map(|_| Vec::with_capacity(num_tables)).collect();
-        let mut replicated_bytes = 0usize;
         for (t, table) in set.into_tables().into_iter().enumerate() {
-            for slices in per_shard.iter_mut() {
-                slices.push(None);
+            bytes_per_table.push(table.size_bytes());
+            for shard in slices.iter_mut() {
+                shard.push(None);
             }
             match &partitions[t] {
                 TablePartition::Whole { .. } => {
                     let r = &replicas[t];
-                    if r.len() > 1 {
-                        replicated_bytes += (r.len() - 1) * table.size_bytes();
-                    }
                     // Copies for all replica shards but the last; the
                     // last takes the source by move.
                     for &shard in &r[..r.len() - 1] {
-                        per_shard[shard][t] = Some(TableSlice::cut(&table, 0..table.rows()));
+                        slices[shard][t] =
+                            Some(Arc::new(TableSlice::cut(&table, 0..table.rows())));
                     }
                     let last = *r.last().expect("whole table has an owner");
-                    per_shard[last][t] = Some(TableSlice::from_whole(table));
+                    slices[last][t] = Some(Arc::new(TableSlice::from_whole(table)));
                 }
                 TablePartition::RowWise(p) => {
-                    for (shard, slices) in per_shard.iter_mut().enumerate() {
+                    for (shard, out) in slices.iter_mut().enumerate() {
                         let range = p.range_of(shard);
                         if !range.is_empty() {
-                            slices[t] = Some(TableSlice::cut(&table, range));
+                            out[t] = Some(Arc::new(TableSlice::cut(&table, range)));
                         }
                     }
                 }
             }
         }
-        let shard_bytes: Vec<usize> = per_shard
-            .iter()
-            .map(|slices| slices.iter().flatten().map(TableSlice::size_bytes).sum())
-            .collect();
 
-        let stats: Vec<Arc<Mutex<ShardStats>>> =
-            (0..n).map(|_| Arc::new(Mutex::new(ShardStats::default()))).collect();
-        let mut senders = Vec::with_capacity(n);
-        let mut workers = Vec::with_capacity(n);
-        for (shard, slices) in per_shard.into_iter().enumerate() {
-            let slice = ShardSlice::from_slices(slices);
-            let shard_stats = Arc::clone(&stats[shard]);
-            let (tx, rx): (SyncSender<ShardTask>, Receiver<ShardTask>) =
-                sync_channel(cfg.queue_depth.max(1));
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("emberq-shard-{shard}"))
-                    .spawn(move || worker_loop(shard, rx, slice, shard_stats))
-                    .expect("spawn shard worker"),
-            );
-            senders.push(tx);
-        }
-        ShardedEngine {
+        let core = Arc::new(Core {
             partitions,
-            replicas,
+            placement: RwLock::new(Arc::new(Placement { replicas, slices })),
+            queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            queued: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            total_queued: AtomicUsize::new(0),
+            gate: Mutex::new(false),
+            work_available: Condvar::new(),
+            steal: cfg.steal,
+            stats: (0..n).map(|_| Mutex::new(ShardStats::default())).collect(),
             rr: AtomicUsize::new(0),
             loads: (0..num_tables).map(|_| AtomicU64::new(0)).collect(),
-            stats,
             offsets,
+            dims,
             feature_width,
             num_tables,
             table_bytes,
-            shard_bytes,
-            replicated_bytes,
-            senders,
-            workers,
-        }
+            bytes_per_table,
+            reply_capacity: cfg.queue_depth.max(1) * n,
+            rebalance_budget: cfg.replicate_hot.max(1),
+            rb_state: Mutex::new(RebalanceState {
+                last_loads: vec![0; num_tables],
+                quiet_ticks: 0,
+            }),
+            rebalances: AtomicU64::new(0),
+            replicas_added: AtomicU64::new(0),
+            replicas_retired: AtomicU64::new(0),
+        });
+        let workers = (0..n)
+            .map(|shard| {
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name(format!("emberq-shard-{shard}"))
+                    .spawn(move || worker_loop(shard, core))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        let (rebalancer, rb_stop) = match cfg.rebalance_interval {
+            Some(interval) if n > 1 => {
+                let interval = interval.max(Duration::from_millis(1));
+                let stop = Arc::new((Mutex::new(false), Condvar::new()));
+                let stop2 = Arc::clone(&stop);
+                let core2 = Arc::clone(&core);
+                let handle = std::thread::Builder::new()
+                    .name("emberq-rebalance".into())
+                    .spawn(move || {
+                        let (flag, cv) = &*stop2;
+                        let mut stop_now = lock_ignore_poison(flag);
+                        loop {
+                            let (guard, _) = cv
+                                .wait_timeout(stop_now, interval)
+                                .unwrap_or_else(PoisonError::into_inner);
+                            stop_now = guard;
+                            if *stop_now {
+                                return;
+                            }
+                            drop(stop_now);
+                            rebalance_core(&core2);
+                            stop_now = lock_ignore_poison(flag);
+                        }
+                    })
+                    .expect("spawn rebalancer");
+                (Some(handle), Some(stop))
+            }
+            _ => (None, None),
+        };
+        ShardedEngine { core, workers, rebalancer, rb_stop }
     }
 
     /// Number of shards.
     pub fn num_shards(&self) -> usize {
-        self.senders.len()
+        self.core.num_shards()
     }
 
     /// Width of one response vector (Σ table dims).
     pub fn feature_width(&self) -> usize {
-        self.feature_width
+        self.core.feature_width
     }
 
     /// The partition of `table`.
     pub fn partition(&self, table: usize) -> &TablePartition {
-        &self.partitions[table]
+        &self.core.partitions[table]
     }
 
-    /// Shards holding a full copy of `table` (len > 1 iff hot-replicated;
-    /// empty for row-wise tables).
-    pub fn replica_shards(&self, table: usize) -> &[usize] {
-        &self.replicas[table]
+    /// Shards currently holding a full copy of `table` (len > 1 iff
+    /// hot-replicated; empty for row-wise tables). A snapshot: the
+    /// rebalancer may change it between calls.
+    pub fn replica_shards(&self, table: usize) -> Vec<usize> {
+        read_ignore_poison(&self.core.placement).replicas[table].clone()
     }
 
     /// Logical bytes of the consumed table set (1×).
     pub fn table_bytes(&self) -> usize {
-        self.table_bytes
+        self.core.table_bytes
     }
 
-    /// Resident bytes per shard (each shard's slices, replicas included).
-    pub fn shard_bytes(&self) -> &[usize] {
-        &self.shard_bytes
+    /// Resident bytes per shard (each shard's slices, replicas included),
+    /// for the current placement.
+    pub fn shard_bytes(&self) -> Vec<usize> {
+        read_ignore_poison(&self.core.placement).shard_bytes()
     }
 
-    /// Resident bytes attributable to hot-chunk replication.
+    /// Resident bytes attributable to whole-table replication, for the
+    /// current placement.
     pub fn replicated_bytes(&self) -> usize {
-        self.replicated_bytes
+        read_ignore_poison(&self.core.placement).replicated_bytes(&self.core.bytes_per_table)
     }
 
     /// Snapshot of each shard's service stats (cumulative since start).
+    /// Poison-tolerant: readable even after a worker panic.
     pub fn shard_stats(&self) -> Vec<ShardStats> {
-        self.stats.iter().map(|s| s.lock().unwrap().clone()).collect()
+        self.core.stats.iter().map(|s| lock_ignore_poison(s).clone()).collect()
+    }
+
+    /// Total sub-requests executed by a worker other than their home
+    /// shard (cumulative since start).
+    pub fn steal_count(&self) -> u64 {
+        self.core.stats.iter().map(|s| lock_ignore_poison(s).steals).sum()
+    }
+
+    /// Cumulative counters of the runtime rebalancer.
+    pub fn rebalance_stats(&self) -> RebalanceStats {
+        RebalanceStats {
+            rebalances: self.core.rebalances.load(Ordering::Relaxed),
+            replicas_added: self.core.replicas_added.load(Ordering::Relaxed),
+            replicas_retired: self.core.replicas_retired.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run one rebalance pass now (what the background thread does every
+    /// interval): rank tables by the load observed since the previous
+    /// pass, replicate the hottest whole tables to every shard, retire
+    /// replicas that went cold, and swap routing atomically. Returns
+    /// whether the placement changed.
+    pub fn rebalance_once(&self) -> bool {
+        rebalance_core(&self.core)
     }
 
     /// Router-observed pooled-lookup count per table (cumulative since
-    /// start) — the load signal hot-chunk replication keys on.
+    /// start) — the load signal runtime re-replication keys on.
     pub fn observed_loads(&self) -> Vec<u64> {
-        self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+        self.core.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
     }
 
-    /// Pooled lookup for one request (`feature_width` floats).
-    pub fn lookup(&self, req: &Request) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.feature_width];
-        self.lookup_batch_into(std::slice::from_ref(req), &mut out);
-        out
-    }
-
-    /// Pooled lookups for a batch; `out` is `batch × feature_width`,
-    /// overwritten entirely.
-    pub fn lookup_batch_into(&self, reqs: &[Request], out: &mut [f32]) {
-        let fw = self.feature_width;
-        assert_eq!(out.len(), reqs.len() * fw, "output buffer size mismatch");
-        out.fill(0.0);
-        let n = self.senders.len();
-        let mut per_shard: Vec<Vec<(usize, usize, Vec<u32>)>> = vec![Vec::new(); n];
-        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); n];
-        for (slot, req) in reqs.iter().enumerate() {
-            assert_eq!(req.ids.len(), self.num_tables, "request table count mismatch");
-            for (t, ids) in req.ids.iter().enumerate() {
-                if ids.is_empty() {
-                    continue;
-                }
-                self.loads[t].fetch_add(ids.len() as u64, Ordering::Relaxed);
-                match &self.partitions[t] {
-                    TablePartition::Whole { .. } => {
-                        // Whole tables are answered by one shard per
-                        // lookup; hot-replicated tables spread lookups
-                        // round-robin over byte-identical replicas, so
-                        // results stay bit-identical regardless of which
-                        // replica answers.
-                        let r = &self.replicas[t];
-                        let target = if r.len() > 1 {
-                            r[self.rr.fetch_add(1, Ordering::Relaxed) % r.len()]
-                        } else {
-                            r[0]
-                        };
-                        per_shard[target].push((slot, t, ids.clone()));
+    /// Check the current routing against the leader's catalog: every
+    /// routed replica in range and materialized with the full table,
+    /// every chunk of a row-wise table present, row counts agreeing.
+    pub fn validate_routing(&self, catalog: &TableCatalog) -> Result<(), String> {
+        let core = &self.core;
+        let n = core.num_shards();
+        if catalog.num_tables() != core.num_tables {
+            return Err(format!(
+                "catalog has {} tables, engine has {}",
+                catalog.num_tables(),
+                core.num_tables
+            ));
+        }
+        let p = read_ignore_poison(&core.placement).clone();
+        for t in 0..core.num_tables {
+            match &core.partitions[t] {
+                TablePartition::Whole { shard, rows } => {
+                    if catalog.rows_of(t) != *rows {
+                        return Err(format!(
+                            "table {t}: catalog rows {} != partition rows {rows}",
+                            catalog.rows_of(t)
+                        ));
                     }
-                    TablePartition::RowWise(p) => {
-                        // Bucket by shard, preserving each id's relative
-                        // order so per-shard summation order matches the
-                        // unsharded kernel's over those rows.
-                        for &id in ids {
-                            buckets[p.shard_of(id)].push(p.local_of(id));
+                    let r = &p.replicas[t];
+                    if r.is_empty() || !r.contains(shard) {
+                        return Err(format!(
+                            "table {t}: home shard {shard} missing from replica set {r:?}"
+                        ));
+                    }
+                    for &s in r {
+                        if s >= n {
+                            return Err(format!("table {t}: replica shard {s} out of range"));
                         }
-                        for (s, bucket) in buckets.iter_mut().enumerate() {
-                            if !bucket.is_empty() {
-                                per_shard[s].push((slot, t, std::mem::take(bucket)));
+                        match &p.slices[s][t] {
+                            Some(slice) if slice.rows() == *rows => {}
+                            Some(slice) => {
+                                return Err(format!(
+                                    "table {t}: replica on shard {s} holds {} rows, want {rows}",
+                                    slice.rows()
+                                ))
+                            }
+                            None => {
+                                return Err(format!(
+                                    "table {t}: routed replica shard {s} holds no slice"
+                                ))
+                            }
+                        }
+                    }
+                }
+                TablePartition::RowWise(rp) => {
+                    if catalog.rows_of(t) != rp.rows() {
+                        return Err(format!(
+                            "table {t}: catalog rows {} != partition rows {}",
+                            catalog.rows_of(t),
+                            rp.rows()
+                        ));
+                    }
+                    for s in 0..n {
+                        let range = rp.range_of(s);
+                        match &p.slices[s][t] {
+                            Some(slice) if slice.rows() == range.len() => {}
+                            Some(slice) => {
+                                return Err(format!(
+                                    "table {t}: shard {s} chunk holds {} rows, want {}",
+                                    slice.rows(),
+                                    range.len()
+                                ))
+                            }
+                            None if range.is_empty() => {}
+                            None => {
+                                return Err(format!(
+                                    "table {t}: shard {s} missing its chunk {range:?}"
+                                ))
                             }
                         }
                     }
                 }
             }
         }
-        let (rtx, rrx) = sync_channel(n);
-        let mut outstanding = 0usize;
-        for (shard, lookups) in per_shard.into_iter().enumerate() {
-            if lookups.is_empty() {
-                continue;
+        Ok(())
+    }
+
+    /// Pooled lookup for one request (`feature_width` floats).
+    pub fn lookup(&self, req: &Request) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.core.feature_width];
+        self.lookup_batch_into(std::slice::from_ref(req), &mut out);
+        out
+    }
+
+    /// Pooled lookups for a batch; `out` is `batch × feature_width`,
+    /// overwritten entirely. Safe to call concurrently; output is
+    /// bit-deterministic for a given batch — each segment is computed
+    /// exactly once, in id order, by whichever worker runs it.
+    pub fn lookup_batch_into(&self, reqs: &[Request], out: &mut [f32]) {
+        let core = &self.core;
+        let fw = core.feature_width;
+        assert_eq!(out.len(), reqs.len() * fw, "output buffer size mismatch");
+        out.fill(0.0);
+        let placement: Arc<Placement> = Arc::clone(&read_ignore_poison(&core.placement));
+        let n = core.num_shards();
+        let (rtx, rrx) = sync_channel(core.reply_capacity);
+        let mut per_shard: Vec<Vec<SubRequest>> = (0..n).map(|_| Vec::new()).collect();
+        let mut count = 0usize;
+        // Scratch for plurality homing, reused across every segment of
+        // the batch (row-wise partitions always span exactly `n`).
+        let mut home_counts = vec![0u32; n];
+        for (slot, req) in reqs.iter().enumerate() {
+            assert_eq!(req.ids.len(), core.num_tables, "request table count mismatch");
+            for (t, ids) in req.ids.iter().enumerate() {
+                if ids.is_empty() {
+                    continue;
+                }
+                core.loads[t].fetch_add(ids.len() as u64, Ordering::Relaxed);
+                let home = match &core.partitions[t] {
+                    TablePartition::Whole { .. } => {
+                        // Whole tables are answered by one replica per
+                        // lookup; hot-replicated tables spread lookups
+                        // round-robin over byte-identical replicas, so
+                        // results stay bit-identical regardless of which
+                        // replica answers.
+                        let r = &placement.replicas[t];
+                        if r.len() > 1 {
+                            r[core.rr.fetch_add(1, Ordering::Relaxed) % r.len()]
+                        } else {
+                            r[0]
+                        }
+                    }
+                    TablePartition::RowWise(p) => plurality_home(p, ids, &mut home_counts),
+                };
+                per_shard[home].push(SubRequest {
+                    slot,
+                    table: t,
+                    ids: ids.clone(),
+                    home,
+                    placement: Arc::clone(&placement),
+                    reply: rtx.clone(),
+                });
+                count += 1;
             }
-            self.senders[shard]
-                .send(ShardTask { lookups, reply: rtx.clone() })
-                .expect("shard worker alive");
-            outstanding += 1;
         }
         drop(rtx);
-        // Collect every reply first, then merge in ascending shard order:
-        // deterministic output regardless of worker completion order.
-        let mut by_shard: Vec<Option<Vec<(usize, usize, Vec<f32>)>>> = vec![None; n];
-        for _ in 0..outstanding {
-            let (shard, results) = rrx.recv().expect("shard reply");
-            by_shard[shard] = Some(results);
+        for (shard, subs) in per_shard.into_iter().enumerate() {
+            if subs.is_empty() {
+                continue;
+            }
+            let k = subs.len();
+            {
+                // Counters move under the same lock as the items (pop
+                // decrements under it too), so they can never transiently
+                // wrap below zero or claim work an empty deque lacks.
+                let mut q = lock_ignore_poison(&core.queues[shard]);
+                core.queued[shard].fetch_add(k, Ordering::SeqCst);
+                core.total_queued.fetch_add(k, Ordering::SeqCst);
+                q.extend(subs);
+            }
         }
-        for results in by_shard.into_iter().flatten() {
-            for (slot, t, partial) in results {
-                let off = slot * fw + self.offsets[t];
-                for (o, v) in out[off..off + partial.len()].iter_mut().zip(&partial) {
-                    *o += *v;
+        // Notify under the gate lock so a worker that just checked the
+        // counters and is about to wait cannot miss the wakeup.
+        {
+            let _gate = lock_ignore_poison(&core.gate);
+        }
+        core.work_available.notify_all();
+        for _ in 0..count {
+            // Each segment arrives exactly once; placement (not
+            // accumulation) makes the output order-independent. `Err`
+            // means every remaining sender vanished unexecuted (shutdown
+            // race) — leave those segments zeroed rather than wedge.
+            match rrx.recv() {
+                Ok((slot, t, vec)) => {
+                    let off = slot * fw + core.offsets[t];
+                    out[off..off + vec.len()].copy_from_slice(&vec);
                 }
+                Err(_) => break,
             }
         }
     }
@@ -326,41 +585,261 @@ impl ShardedEngine {
 
 impl Drop for ShardedEngine {
     fn drop(&mut self) {
-        self.senders.clear(); // close channels -> workers exit
+        {
+            let mut shut = lock_ignore_poison(&self.core.gate);
+            *shut = true;
+        }
+        self.core.work_available.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        if let Some(stop) = self.rb_stop.take() {
+            {
+                let mut flag = lock_ignore_poison(&stop.0);
+                *flag = true;
+            }
+            stop.1.notify_all();
+        }
+        if let Some(h) = self.rebalancer.take() {
+            let _ = h.join();
         }
     }
 }
 
-fn worker_loop(
-    shard: usize,
-    rx: Receiver<ShardTask>,
-    slice: ShardSlice,
-    stats: Arc<Mutex<ShardStats>>,
-) {
-    while let Ok(task) = rx.recv() {
-        let t0 = Instant::now();
-        let mut results = Vec::with_capacity(task.lookups.len());
-        let mut pooled = 0u64;
-        for (slot, t, local_ids) in task.lookups {
-            pooled += local_ids.len() as u64;
-            let mut out = vec![0.0f32; slice.dim_of(t)];
-            slice.pool(t, &local_ids, &mut out);
-            results.push((slot, t, out));
-        }
-        // Record before replying so a caller that has seen the batch
-        // complete also sees the stats for it.
-        {
-            let mut s = stats.lock().unwrap();
-            s.latency.record(t0.elapsed());
-            s.tasks += 1;
-            s.segments += results.len() as u64;
-            s.lookups += pooled;
-        }
-        // Leader may have given up (tests); ignore send failure.
-        let _ = task.reply.send((shard, results));
+/// The shard owning the plurality of `ids` (ties to the lowest shard id,
+/// so homing is deterministic for a given request). `counts` is caller
+/// scratch of at least `p.num_shards()` entries, reused across segments
+/// to keep the leader's split loop allocation-free.
+fn plurality_home(p: &RowPartition, ids: &[u32], counts: &mut [u32]) -> usize {
+    let counts = &mut counts[..p.num_shards()];
+    counts.fill(0);
+    for &id in ids {
+        counts[p.shard_of(id)] += 1;
     }
+    let mut best = 0usize;
+    for (s, &c) in counts.iter().enumerate() {
+        if c > counts[best] {
+            best = s;
+        }
+    }
+    best
+}
+
+fn pop_queue(core: &Core, shard: usize) -> Option<SubRequest> {
+    let mut q = lock_ignore_poison(&core.queues[shard]);
+    let sub = q.pop_front()?;
+    core.queued[shard].fetch_sub(1, Ordering::SeqCst);
+    core.total_queued.fetch_sub(1, Ordering::SeqCst);
+    Some(sub)
+}
+
+/// Take the next task: own deque first, then (with stealing) the busiest
+/// peer's. Returns the task and whether it was stolen.
+fn grab(core: &Core, shard: usize) -> Option<(SubRequest, bool)> {
+    if let Some(sub) = pop_queue(core, shard) {
+        return Some((sub, false));
+    }
+    if core.steal {
+        // Single allocation-free scan for the busiest peer; the counter
+        // is a racy hint re-checked by the pop itself. A failed pop just
+        // returns None — the worker loop re-scans with fresh counts.
+        let mut best: Option<usize> = None;
+        let mut best_pending = 0usize;
+        for s in (0..core.num_shards()).filter(|&s| s != shard) {
+            let pending = core.queued[s].load(Ordering::SeqCst);
+            if pending > best_pending {
+                best_pending = pending;
+                best = Some(s);
+            }
+        }
+        if let Some(s) = best {
+            if let Some(sub) = pop_queue(core, s) {
+                return Some((sub, true));
+            }
+        }
+    }
+    None
+}
+
+fn execute_sub(core: &Core, sub: &SubRequest, out: &mut [f32]) {
+    let t = sub.table;
+    match &core.partitions[t] {
+        TablePartition::Whole { .. } => {
+            // Global ids are slice-local ids for a whole table; the flat
+            // format kernel runs directly on the routed replica.
+            let slice = sub.placement.slices[sub.home][t]
+                .as_ref()
+                .expect("routed replica holds the table");
+            slice.pool(&sub.ids, out);
+        }
+        TablePartition::RowWise(p) => {
+            // Resolve chunks straight out of the placement snapshot —
+            // no per-segment scratch allocation.
+            let slices = &sub.placement.slices;
+            exec::pool_rowwise(
+                p,
+                |s| slices[s][t].as_ref().expect("owning shard holds its chunk").table(),
+                &sub.ids,
+                out,
+            );
+        }
+    }
+}
+
+fn run_sub(core: &Core, shard: usize, sub: SubRequest, stolen: bool) {
+    let t0 = Instant::now();
+    let dim = core.dims[sub.table];
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let mut out = vec![0.0f32; dim];
+        execute_sub(core, &sub, &mut out);
+        out
+    }));
+    let panicked = result.is_err();
+    // Record before replying so a caller that has seen the batch
+    // complete also sees the stats for it.
+    {
+        let mut s = lock_ignore_poison(&core.stats[shard]);
+        s.latency.record(t0.elapsed());
+        s.tasks += 1;
+        s.lookups += sub.ids.len() as u64;
+        if stolen {
+            s.steals += 1;
+        }
+        if panicked {
+            s.panics += 1;
+        }
+    }
+    // A panicked task replies with an empty vector: the segment stays
+    // zeroed and the batch completes instead of wedging. Leader may also
+    // have given up (tests); ignore send failure either way.
+    let _ = sub.reply.send((sub.slot, sub.table, result.unwrap_or_default()));
+}
+
+fn worker_loop(shard: usize, core: Arc<Core>) {
+    loop {
+        if let Some((sub, stolen)) = grab(&core, shard) {
+            run_sub(&core, shard, sub, stolen);
+            continue;
+        }
+        let shut = lock_ignore_poison(&core.gate);
+        if *shut {
+            return;
+        }
+        // Re-check under the gate lock (producers notify under it): a
+        // non-stealing worker only cares about its own deque, a stealing
+        // one about any.
+        let has_work = if core.steal {
+            core.total_queued.load(Ordering::SeqCst) > 0
+        } else {
+            core.queued[shard].load(Ordering::SeqCst) > 0
+        };
+        if has_work {
+            continue;
+        }
+        let (shut, _timeout) = core
+            .work_available
+            .wait_timeout(shut, Duration::from_millis(20))
+            .unwrap_or_else(PoisonError::into_inner);
+        if *shut {
+            return;
+        }
+    }
+}
+
+/// One rebalance pass over `core`: windowed load ranking → desired
+/// replica sets → new placement, swapped atomically. Returns whether the
+/// placement changed.
+fn rebalance_core(core: &Core) -> bool {
+    let n = core.num_shards();
+    if n < 2 {
+        return false;
+    }
+    // Serialize whole passes on the state mutex: the background thread
+    // and a caller's `rebalance_once` must not interleave their
+    // clone→compute→swap sequences, or the last writer would silently
+    // discard the other pass's placement (and its freshly-copied
+    // replicas) while both passes' counters accumulate.
+    let mut state = lock_ignore_poison(&core.rb_state);
+    let loads: Vec<u64> = core.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect();
+    let window: Vec<u64> = loads
+        .iter()
+        .zip(state.last_loads.iter())
+        .map(|(a, b)| a.saturating_sub(*b))
+        .collect();
+    state.last_loads = loads;
+    if window.iter().all(|&w| w == 0) {
+        return false; // idle tick: leave the placement alone
+    }
+    let hot: Vec<usize> = Router::hottest(&window, core.num_tables)
+        .into_iter()
+        .filter(|&t| {
+            window[t] > 0 && matches!(core.partitions[t], TablePartition::Whole { .. })
+        })
+        .take(core.rebalance_budget)
+        .collect();
+    // Hysteresis, two-sided:
+    // * Hot set non-empty — retire a replicated table only when its
+    //   window load is clearly below the selected hot set's minimum
+    //   (×2 margin), never because it merely ranked one past the budget
+    //   this tick; otherwise two near-equal hot tables under budget 1
+    //   would flip rank on window noise and re-copy full tables every
+    //   interval.
+    // * Hot set empty (only row-wise traffic kept the tick non-idle) —
+    //   all whole tables went quiet, but a single quiet window may be a
+    //   burst gap, so replicas are only retired after two consecutive
+    //   quiet ticks.
+    if hot.is_empty() {
+        state.quiet_ticks = state.quiet_ticks.saturating_add(1);
+    } else {
+        state.quiet_ticks = 0;
+    }
+    let retire_quiet = hot.is_empty() && state.quiet_ticks >= 2;
+    let min_hot = hot.iter().map(|&t| window[t]).min().unwrap_or(0);
+    let cur: Arc<Placement> = Arc::clone(&read_ignore_poison(&core.placement));
+    let mut replicas = cur.replicas.clone();
+    let mut slices = cur.slices.clone(); // Arc clones: rows are shared, not copied
+    let mut added = 0u64;
+    let mut retired = 0u64;
+    for t in 0..core.num_tables {
+        let home = match &core.partitions[t] {
+            TablePartition::Whole { shard, .. } => *shard,
+            TablePartition::RowWise(_) => continue,
+        };
+        if hot.contains(&t) {
+            for shard_slices in slices.iter_mut() {
+                if shard_slices[t].is_none() {
+                    let src =
+                        cur.slices[home][t].as_ref().expect("home shard holds its table");
+                    shard_slices[t] = Some(Arc::new(src.duplicate()));
+                    added += 1;
+                }
+            }
+            replicas[t] = (0..n).collect();
+        } else if replicas[t].len() > 1 {
+            let cold = if hot.is_empty() {
+                retire_quiet
+            } else {
+                window[t].saturating_mul(2) < min_hot
+            };
+            if cold {
+                for (s, shard_slices) in slices.iter_mut().enumerate() {
+                    if s != home && shard_slices[t].is_some() {
+                        shard_slices[t] = None;
+                        retired += 1;
+                    }
+                }
+                replicas[t] = vec![home];
+            }
+        }
+    }
+    if added == 0 && retired == 0 {
+        return false;
+    }
+    *write_ignore_poison(&core.placement) = Arc::new(Placement { replicas, slices });
+    core.rebalances.fetch_add(1, Ordering::Relaxed);
+    core.replicas_added.fetch_add(added, Ordering::Relaxed);
+    core.replicas_retired.fetch_add(retired, Ordering::Relaxed);
+    true
 }
 
 #[cfg(test)]
@@ -394,26 +873,20 @@ mod tests {
     }
 
     #[test]
-    fn split_sums_recombine_across_shards() {
+    fn split_segments_are_bit_exact_across_shards() {
         let set = f32_set(1, 16, 4);
         let reference = f32_set(1, 16, 4);
         let engine = ShardedEngine::start(
             set,
             &ShardConfig { num_shards: 4, small_table_rows: 0, ..Default::default() },
         );
-        // ids deliberately span all four chunks ([0,4) [4,8) [8,12) [12,16)).
+        // ids deliberately span all four chunks ([0,4) [4,8) [8,12) [12,16)):
+        // chunked execution must still equal the flat kernel bit for bit.
         let ids = vec![0u32, 5, 10, 15, 3, 12];
         let got = engine.lookup(&Request { ids: vec![ids.clone()] });
         let mut want = vec![0.0f32; 4];
         reference.pool(0, &ids, &mut want);
-        for j in 0..4 {
-            assert!(
-                (got[j] - want[j]).abs() < 1e-4,
-                "j={j}: sharded {} vs pooled {}",
-                got[j],
-                want[j]
-            );
-        }
+        assert_eq!(got, want);
     }
 
     #[test]
@@ -443,14 +916,7 @@ mod tests {
         for (t, ids) in req.ids.iter().enumerate() {
             let mut want = vec![0.0f32; 8];
             reference.pool(t, ids, &mut want);
-            for j in 0..8 {
-                assert!(
-                    (got[t * 8 + j] - want[j]).abs() < 1e-4,
-                    "t={t} j={j}: {} vs {}",
-                    got[t * 8 + j],
-                    want[j]
-                );
-            }
+            assert_eq!(&got[t * 8..(t + 1) * 8], want.as_slice(), "table {t}");
         }
     }
 
@@ -486,8 +952,9 @@ mod tests {
 
     #[test]
     fn residency_is_exactly_the_table_bytes() {
-        // The tentpole invariant: the slices hold 1× the table bytes
-        // (f32/fused carving is byte-exact), nothing retained elsewhere.
+        // The slice-resident invariant: the slices hold 1× the table
+        // bytes (f32/fused carving is byte-exact), nothing retained
+        // elsewhere.
         let set = f32_set(3, 200, 8);
         let logical = set.size_bytes();
         let engine = ShardedEngine::start(
@@ -516,7 +983,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        assert_eq!(engine.replica_shards(0), &[0, 1]);
+        assert_eq!(engine.replica_shards(0), vec![0, 1]);
         assert_eq!(engine.replicated_bytes(), logical);
         assert_eq!(engine.shard_bytes().iter().sum::<usize>(), 2 * logical);
         for i in 0..10u32 {
@@ -554,10 +1021,156 @@ mod tests {
     }
 
     #[test]
+    fn idle_workers_steal_from_the_busy_shard() {
+        // One whole table homed on one shard, no replication: without
+        // stealing the peer would sit idle; with it, the peer must pick
+        // up queued sub-requests and results must stay bit-exact.
+        let set = f32_set(1, 512, 16);
+        let reference = f32_set(1, 512, 16);
+        let engine = ShardedEngine::start(
+            set,
+            &ShardConfig {
+                num_shards: 2,
+                small_table_rows: usize::MAX,
+                steal: true,
+                ..Default::default()
+            },
+        );
+        let reqs: Vec<Request> = (0..800)
+            .map(|i| Request {
+                ids: vec![(0..256).map(|j| ((i * 37 + j * 11) % 512) as u32).collect()],
+            })
+            .collect();
+        let mut out = vec![0.0f32; reqs.len() * 16];
+        for _attempt in 0..5 {
+            engine.lookup_batch_into(&reqs, &mut out);
+            if engine.steal_count() > 0 {
+                break;
+            }
+        }
+        for (slot, req) in reqs.iter().enumerate() {
+            let mut want = vec![0.0f32; 16];
+            reference.pool(0, &req.ids[0], &mut want);
+            assert_eq!(&out[slot * 16..(slot + 1) * 16], want.as_slice(), "slot {slot}");
+        }
+        assert!(engine.steal_count() > 0, "idle worker never stole");
+        let stats = engine.shard_stats();
+        assert!(stats[0].tasks > 0 && stats[1].tasks > 0);
+        assert_eq!(stats.iter().map(|s| s.panics).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn rebalance_replicates_hot_and_retires_cold() {
+        let reference = f32_set(2, 48, 4);
+        let catalog = TableCatalog::of(&reference);
+        let engine = ShardedEngine::start(
+            f32_set(2, 48, 4),
+            &ShardConfig {
+                num_shards: 2,
+                small_table_rows: usize::MAX, // both tables whole
+                ..Default::default()
+            },
+        );
+        assert_eq!(engine.replica_shards(0).len(), 1);
+        // Idle tick: nothing observed, nothing changes.
+        assert!(!engine.rebalance_once());
+        // Drive table 0 hot.
+        for i in 0..20u32 {
+            let _ = engine.lookup(&Request { ids: vec![vec![i % 48, 47 - i % 48], vec![]] });
+        }
+        assert!(engine.rebalance_once());
+        assert_eq!(engine.replica_shards(0), vec![0, 1]);
+        assert_eq!(engine.replica_shards(1).len(), 1);
+        assert!(engine.replicated_bytes() > 0);
+        engine.validate_routing(&catalog).expect("routing valid after replication");
+        let after = engine.rebalance_stats();
+        assert_eq!(after.rebalances, 1);
+        assert_eq!(after.replicas_added, 1);
+        // Results unchanged by the replica (byte-identical copies).
+        let req = Request { ids: vec![vec![0, 24, 47], vec![3]] };
+        let got = engine.lookup(&req);
+        let mut want = vec![0.0f32; 8];
+        reference.pool(0, &req.ids[0], &mut want[..4]);
+        reference.pool(1, &req.ids[1], &mut want[4..]);
+        assert_eq!(got, want);
+        // Shift the load to table 1: table 0's replica is retired.
+        for i in 0..40u32 {
+            let _ = engine.lookup(&Request { ids: vec![vec![], vec![i % 48, i % 7]] });
+        }
+        assert!(engine.rebalance_once());
+        assert_eq!(engine.replica_shards(0).len(), 1);
+        assert_eq!(engine.replica_shards(1), vec![0, 1]);
+        let stats = engine.rebalance_stats();
+        assert_eq!(stats.rebalances, 2);
+        assert_eq!(stats.replicas_added, 2);
+        assert_eq!(stats.replicas_retired, 1);
+        engine.validate_routing(&catalog).expect("routing valid after retirement");
+        assert_eq!(engine.lookup(&req), want, "results survive the swap");
+    }
+
+    #[test]
+    fn poisoned_stats_mutex_does_not_cascade() {
+        // A thread that panics while holding a stats mutex poisons it;
+        // both the worker-side recording and the leader-side snapshot
+        // must shrug that off.
+        let set = f32_set(1, 16, 4);
+        let engine =
+            ShardedEngine::start(set, &ShardConfig { num_shards: 2, ..Default::default() });
+        let core = Arc::clone(&engine.core);
+        let h = std::thread::spawn(move || {
+            let _guard = core.stats[0].lock().unwrap();
+            panic!("poison the stats mutex");
+        });
+        assert!(h.join().is_err());
+        assert!(engine.core.stats[0].is_poisoned());
+        // Serving still records into the poisoned mutex...
+        let got = engine.lookup(&Request { ids: vec![vec![1, 2, 3]] });
+        assert_eq!(got.len(), 4);
+        // ...and the snapshot still reads it.
+        let stats = engine.shard_stats();
+        assert_eq!(stats.iter().map(|s| s.lookups).sum::<u64>(), 3);
+        assert_eq!(engine.steal_count(), 0);
+    }
+
+    #[test]
+    fn worker_panic_is_caught_and_counted() {
+        // An out-of-range id makes the kernel panic inside the worker.
+        // The batch must still complete (segment zeroed), the panic must
+        // be counted, and the engine must keep serving afterwards.
+        let set = f32_set(2, 20, 4);
+        let reference = f32_set(2, 20, 4);
+        let engine = ShardedEngine::start(
+            set,
+            &ShardConfig { num_shards: 2, small_table_rows: 0, ..Default::default() },
+        );
+        let bad = Request { ids: vec![vec![9999], vec![1]] };
+        let got = engine.lookup(&bad);
+        assert_eq!(&got[0..4], &[0.0; 4], "panicked segment is zeroed");
+        let mut want = vec![0.0f32; 4];
+        reference.pool(1, &[1], &mut want);
+        assert_eq!(&got[4..8], want.as_slice(), "healthy segment still served");
+        assert_eq!(engine.shard_stats().iter().map(|s| s.panics).sum::<u64>(), 1);
+        // The worker survived; a valid request is served exactly.
+        let ok = Request { ids: vec![vec![0, 19], vec![7]] };
+        let got = engine.lookup(&ok);
+        let mut want = vec![0.0f32; 8];
+        reference.pool(0, &ok.ids[0], &mut want[..4]);
+        reference.pool(1, &ok.ids[1], &mut want[4..]);
+        assert_eq!(got, want);
+    }
+
+    #[test]
     fn clean_shutdown() {
         let set = f32_set(2, 10, 4);
-        let engine =
-            ShardedEngine::start(set, &ShardConfig { num_shards: 4, ..Default::default() });
+        let engine = ShardedEngine::start(
+            set,
+            &ShardConfig {
+                num_shards: 4,
+                steal: true,
+                rebalance_interval: Some(Duration::from_millis(5)),
+                ..Default::default()
+            },
+        );
         let _ = engine.lookup(&Request { ids: vec![vec![1], vec![2]] });
         drop(engine); // must not hang or panic
     }

@@ -1,0 +1,242 @@
+//! Chunked SLS: the format kernels' exact arithmetic over a table whose
+//! rows live in per-shard chunk slices.
+//!
+//! Why this exists: f32 addition is not associative, so merging
+//! *per-shard partial sums* of a split segment can never be bit-equal to
+//! the flat kernel's single accumulation — no merge order fixes that,
+//! and the fused kernels additionally factor `Σ bias` out of the hot
+//! loop, so even the per-row addends of a partial-sum scheme differ from
+//! the flat kernel's. The engine therefore executes every pooled segment
+//! **whole**, on one worker, and when the segment's ids span row chunks
+//! these kernels walk the ids in original request order, resolving each
+//! id to its owning chunk slice. Row bytes in a slice are byte-identical
+//! to the unsharded table's rows and the accumulation loops below mirror
+//! the flat kernels in `crate::sls` operation for operation, so the
+//! result is bit-identical to the unsharded pool — for every shard
+//! count, with or without stealing, before and after a rebalance.
+//!
+//! Each `pool_*` function computes **one** segment (the flat kernels'
+//! per-segment body); `tests` pin bit-equality against the flat kernels
+//! per format.
+
+use crate::shard::partition::RowPartition;
+use crate::table::serial::AnyTable;
+use crate::table::{CodebookTable, EmbeddingTable, FusedTable};
+
+/// Pool `ids` (global row ids, in request order) from a row-wise
+/// partitioned table into `out` (`dim` floats, overwritten). `chunk_of`
+/// resolves a shard id to that shard's chunk slice of the table — a
+/// closure so the caller needs no per-segment scratch allocation to
+/// adapt its storage (the engine resolves straight out of its placement
+/// snapshot). Bit-identical to the unsharded format kernel over the
+/// same ids.
+pub fn pool_rowwise<'a, F>(p: &RowPartition, chunk_of: F, ids: &[u32], out: &mut [f32])
+where
+    F: Fn(usize) -> &'a AnyTable,
+{
+    // Shard 0 always owns rows when the table is row-wise partitioned
+    // (chunks are dense from the front), and chunks share the format.
+    match chunk_of(0) {
+        AnyTable::F32(_) => pool_f32(p, &chunk_of, ids, out),
+        AnyTable::Fused(f) => {
+            if f.nbits() == 4 {
+                pool_i4(p, &chunk_of, ids, out)
+            } else {
+                pool_i8(p, &chunk_of, ids, out)
+            }
+        }
+        AnyTable::Codebook(_) => pool_codebook(p, &chunk_of, ids, out),
+    }
+}
+
+#[inline]
+fn as_f32(t: &AnyTable) -> &EmbeddingTable {
+    match t {
+        AnyTable::F32(t) => t,
+        _ => unreachable!("chunks of one table share its format"),
+    }
+}
+
+#[inline]
+fn as_fused(t: &AnyTable) -> &FusedTable {
+    match t {
+        AnyTable::Fused(t) => t,
+        _ => unreachable!("chunks of one table share its format"),
+    }
+}
+
+#[inline]
+fn as_codebook(t: &AnyTable) -> &CodebookTable {
+    match t {
+        AnyTable::Codebook(t) => t,
+        _ => unreachable!("chunks of one table share its format"),
+    }
+}
+
+/// Mirror of `sls_f32`'s per-segment body.
+fn pool_f32<'a, F>(p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
+where
+    F: Fn(usize) -> &'a AnyTable,
+{
+    let d = out.len();
+    out.fill(0.0);
+    for &id in ids {
+        let row = as_f32(chunk_of(p.shard_of(id))).row(p.local_of(id) as usize);
+        for j in 0..d {
+            out[j] += row[j];
+        }
+    }
+}
+
+/// Mirror of `sls_i8`'s per-segment body (bias factored out of the hot
+/// loop, added once per segment — guarded exactly like the flat kernel).
+fn pool_i8<'a, F>(p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
+where
+    F: Fn(usize) -> &'a AnyTable,
+{
+    let d = out.len();
+    out.fill(0.0);
+    let mut bias_sum = 0.0f32;
+    for &id in ids {
+        let f = as_fused(chunk_of(p.shard_of(id)));
+        let raw = f.row_raw(p.local_of(id) as usize);
+        let (scale, bias) = f.read_tail(raw);
+        bias_sum += bias;
+        for (a, &c) in out.iter_mut().zip(&raw[..d]) {
+            *a += scale * c as f32;
+        }
+    }
+    if bias_sum != 0.0 {
+        for a in out.iter_mut() {
+            *a += bias_sum;
+        }
+    }
+}
+
+/// Mirror of `sls_i4`'s per-segment body: de-interleaved even/odd nibble
+/// accumulators, interleaved (with the factored bias) once at the end.
+fn pool_i4<'a, F>(p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
+where
+    F: Fn(usize) -> &'a AnyTable,
+{
+    let d = out.len();
+    let packed = d / 2;
+    let odd_tail = d % 2 == 1;
+    let half = packed + usize::from(odd_tail);
+    let mut acc_even = vec![0.0f32; half];
+    let mut acc_odd = vec![0.0f32; packed];
+    let mut bias_sum = 0.0f32;
+    for &id in ids {
+        let f = as_fused(chunk_of(p.shard_of(id)));
+        let raw = f.row_raw(p.local_of(id) as usize);
+        let (scale, bias) = f.read_tail(raw);
+        bias_sum += bias;
+        let bytes = &raw[..packed];
+        for (a, &byte) in acc_even[..packed].iter_mut().zip(bytes) {
+            *a += scale * (byte & 0x0F) as f32;
+        }
+        for (a, &byte) in acc_odd.iter_mut().zip(bytes) {
+            *a += scale * (byte >> 4) as f32;
+        }
+        if odd_tail {
+            acc_even[packed] += scale * (raw[packed] & 0x0F) as f32;
+        }
+    }
+    for b in 0..packed {
+        out[2 * b] = acc_even[b] + bias_sum;
+        out[2 * b + 1] = acc_odd[b] + bias_sum;
+    }
+    if odd_tail {
+        out[d - 1] = acc_even[packed] + bias_sum;
+    }
+}
+
+/// Mirror of `sls_codebook`'s per-segment body.
+fn pool_codebook<'a, F>(p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
+where
+    F: Fn(usize) -> &'a AnyTable,
+{
+    let d = out.len();
+    out.fill(0.0);
+    for &id in ids {
+        let c = as_codebook(chunk_of(p.shard_of(id)));
+        let local = p.local_of(id) as usize;
+        let cb = c.codebook_of_row(local);
+        let codes = c.codes_of_row(local);
+        let pairs = d / 2;
+        for b in 0..pairs {
+            let byte = codes[b];
+            out[2 * b] += cb[(byte & 0x0F) as usize];
+            out[2 * b + 1] += cb[(byte >> 4) as usize];
+        }
+        if d % 2 == 1 {
+            out[d - 1] += cb[(codes[pairs] & 0x0F) as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TableSet;
+    use crate::quant::AsymQuantizer;
+    use crate::shard::slice::TableSlice;
+    use crate::table::{CodebookKind, ScaleBiasDtype};
+    use crate::util::Rng;
+
+    fn table_of(fmt: usize, rows: usize, dim: usize, seed: u64) -> AnyTable {
+        let t = EmbeddingTable::randn(rows, dim, seed);
+        match fmt {
+            0 => AnyTable::F32(t),
+            1 => AnyTable::Fused(t.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16)),
+            2 => AnyTable::Fused(t.quantize_fused(&AsymQuantizer, 8, ScaleBiasDtype::F32)),
+            3 => AnyTable::Codebook(
+                t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32),
+            ),
+            _ => AnyTable::Codebook(
+                t.quantize_codebook(CodebookKind::TwoTier { k: 3.min(rows) }, ScaleBiasDtype::F16),
+            ),
+        }
+    }
+
+    #[test]
+    fn chunked_pool_is_bit_identical_to_flat_kernel() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for fmt in 0..5usize {
+            for shards in 1..=8usize {
+                let rows = 1 + rng.below(80);
+                let dim = [3usize, 4, 8, 16, 33][rng.below(5)];
+                let table = table_of(fmt, rows, dim, 0xF00 + (fmt * 31 + shards) as u64);
+                let reference = TableSet::new(vec![table_of(
+                    fmt,
+                    rows,
+                    dim,
+                    0xF00 + (fmt * 31 + shards) as u64,
+                )]);
+                let p = RowPartition::new(rows, shards);
+                // Cut the chunks exactly as the engine carve does.
+                let slices: Vec<Option<TableSlice>> = (0..shards)
+                    .map(|s| {
+                        let range = p.range_of(s);
+                        (!range.is_empty()).then(|| TableSlice::cut(&table, range))
+                    })
+                    .collect();
+                let chunk_of =
+                    |s: usize| slices[s].as_ref().expect("owning shard holds its chunk").table();
+                for _ in 0..12 {
+                    let len = rng.below(12); // may be empty
+                    let ids: Vec<u32> =
+                        (0..len).map(|_| rng.below(rows) as u32).collect();
+                    let mut got = vec![7.0f32; dim]; // stale garbage must vanish
+                    pool_rowwise(&p, chunk_of, &ids, &mut got);
+                    let mut want = vec![0.0f32; dim];
+                    reference.pool(0, &ids, &mut want);
+                    assert_eq!(
+                        got, want,
+                        "fmt={fmt} shards={shards} rows={rows} dim={dim} ids={ids:?}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -3,29 +3,38 @@
 //! The coordinator's original worker pool parallelizes across *tables*
 //! (each worker owns whole tables), which caps speed-up at the table
 //! count and leaves one worker holding any huge-vocab table. This module
-//! parallelizes across *rows*:
+//! parallelizes across *rows* and *segments*:
 //!
 //! * [`partition`] — each table's rows are split into contiguous chunks,
 //!   one per shard ([`RowPartition`]); small tables stay whole on a
 //!   single shard (spread by load, [`plan_partitions`]).
-//! * [`slice`] — [`TableSlice`] / [`ShardSlice`]: the per-shard copy of
-//!   every table's owned rows, self-describing (dims, global row range,
-//!   format; scales/biases travel inside the rows), in the table's
-//!   native format so each worker streams only its slice's bytes.
-//! * [`engine`] — [`ShardedEngine`]: a persistent worker pool (std
-//!   threads + bounded channels). A batched request is split per shard
-//!   (ids translated to shard-local row ids), each worker runs the
-//!   format's optimized SLS kernel over its slice and records per-shard
-//!   service stats, and the leader scatter-gathers the partial pooled
-//!   sums into the output buffer in deterministic shard order.
+//! * [`slice`] — [`TableSlice`]: a shard's self-describing copy of the
+//!   rows it owns (dims, global row range, format; scales/biases travel
+//!   inside the rows), in the table's native format so each worker
+//!   streams mostly its slice's bytes.
+//! * [`exec`] — chunked SLS: the format kernels' exact arithmetic over a
+//!   table whose rows live in per-shard chunk slices, so a pooled
+//!   segment whose ids span chunks is computed whole, in request order,
+//!   bit-identically to the unsharded kernel.
+//! * [`engine`] — [`ShardedEngine`]: a persistent worker pool over
+//!   per-shard work deques. A batched request is split into whole
+//!   `(slot, table)` *sub-requests*, each homed to the shard owning the
+//!   plurality of its rows (whole tables: a replica, round-robin).
+//!   Workers drain their own deque first; with [`ShardConfig::steal`] an
+//!   idle worker pulls whole sub-requests from the busiest peer's deque
+//!   (never splitting one, so bit-exactness is untouched). A background
+//!   rebalancer ([`ShardConfig::rebalance_interval`]) re-replicates hot
+//!   whole tables and retires cold replicas at runtime from
+//!   [`ShardedEngine::observed_loads`], swapping routing atomically
+//!   between batches.
 //!
 //! Equivalence contract: sharded output equals the unsharded
-//! `TableSet::pool` result exactly whenever a segment's ids live on one
-//! shard (including `num_shards == 1`, whole tables, and hot-replicated
-//! whole tables — replicas are byte-identical); when a pooled sum
-//! genuinely spans shards it is the same set of addends re-associated,
-//! so results agree to f32 reassociation error (tested to tight bounds in
-//! `rust/tests/proptest_shard.rs`).
+//! `TableSet::pool` result **bit for bit, always** — every shard count,
+//! stealing on or off, replicas present or not, before and after a
+//! rebalance. Segments are never split into per-shard partial sums
+//! (f32 addition is not associative, so no partial-sum merge order could
+//! honor the contract); spanning segments run the chunked kernels in
+//! [`exec`] instead. Pinned by `rust/tests/proptest_shard.rs`.
 //!
 //! `coordinator::ServerConfig::num_shards` switches [`EmbeddingServer`]
 //! (and the `emberq serve --shards N` CLI) onto this engine.
@@ -34,40 +43,59 @@
 //! carves it into the shard slices, so sharded serving resident-costs
 //! ~1× the table bytes (plus a metadata
 //! [`TableCatalog`](crate::coordinator::TableCatalog) on the leader and
-//! any hot-chunk replicas the config asks for). The pre-slice-resident
-//! design kept a full leader-side copy and paid ~2×.
+//! any whole-table replicas — start-time or rebalancer-made). The
+//! pre-slice-resident design kept a full leader-side copy and paid ~2×.
 //!
 //! [`EmbeddingServer`]: crate::coordinator::EmbeddingServer
 
 pub mod engine;
+pub mod exec;
 pub mod partition;
 pub mod slice;
 
-pub use engine::ShardedEngine;
+use std::time::Duration;
+
+pub use engine::{RebalanceStats, ShardedEngine};
 pub use partition::{plan_partitions, RowPartition, TablePartition};
-pub use slice::{ShardSlice, TableSlice};
+pub use slice::TableSlice;
 
 /// Configuration of the row-wise sharded execution engine.
 #[derive(Clone, Debug)]
 pub struct ShardConfig {
     /// Worker shards (each owns a row slice of every large table).
     pub num_shards: usize,
-    /// Bounded work-queue depth per shard (backpressure).
+    /// Bounded reply-queue depth per batch (backpressure).
     pub queue_depth: usize,
     /// Tables with fewer rows than this stay whole on one shard instead
     /// of being split row-wise (splitting tiny tables only buys channel
     /// overhead). `0` forces row-wise splitting of everything.
     pub small_table_rows: usize,
     /// Replicate the `N` hottest *whole* tables (the skew hazard: one
-    /// shard answers all their traffic) to every shard, spreading their
-    /// lookups round-robin across byte-identical replicas. `0` (default)
-    /// replicates nothing. Costs `replicas × table bytes` extra residency,
+    /// shard answers all their traffic) to every shard at start-time,
+    /// spreading their lookups round-robin across byte-identical
+    /// replicas. `0` (default) replicates nothing up front. Also the
+    /// runtime rebalancer's replica budget (minimum 1 when rebalancing
+    /// is enabled). Costs `replicas × table bytes` extra residency,
     /// reported by the engine's byte accounting.
     pub replicate_hot: usize,
     /// Router-observed per-table load (pooled lookups), used to rank
-    /// replication candidates. Empty (default) falls back to row count
-    /// as the prior.
+    /// start-time replication candidates. Empty (default) falls back to
+    /// row count as the prior.
     pub hot_loads: Vec<u64>,
+    /// Work stealing: an idle shard worker pulls whole sub-requests from
+    /// the busiest peer's deque. Sub-requests are never split, and every
+    /// segment's arithmetic is id-order fixed, so results are bit-exact
+    /// with stealing on or off; stealing only changes *who* executes.
+    /// Off by default (strict shard/slice affinity).
+    pub steal: bool,
+    /// Runtime re-replication: every interval, a background thread ranks
+    /// tables by the load observed since the previous tick
+    /// ([`ShardedEngine::observed_loads`]), replicates the hottest whole
+    /// tables to every shard and retires replicas that went cold,
+    /// swapping routing atomically between batches. `None` (default)
+    /// disables the thread; [`ShardedEngine::rebalance_once`] drives the
+    /// same pass manually.
+    pub rebalance_interval: Option<Duration>,
 }
 
 impl Default for ShardConfig {
@@ -78,6 +106,8 @@ impl Default for ShardConfig {
             small_table_rows: 512,
             replicate_hot: 0,
             hot_loads: Vec::new(),
+            steal: false,
+            rebalance_interval: None,
         }
     }
 }

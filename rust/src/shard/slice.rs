@@ -12,8 +12,6 @@
 use std::ops::Range;
 
 use crate::coordinator::catalog::FormatTag;
-use crate::coordinator::TableSet;
-use crate::shard::partition::TablePartition;
 use crate::sls::SlsArgs;
 use crate::table::serial::AnyTable;
 use crate::table::{CodebookKind, CodebookTable, EmbeddingTable, FusedTable};
@@ -49,6 +47,23 @@ impl TableSlice {
         TableSlice { data: table, global_rows: 0..rows }
     }
 
+    /// Deep copy of this slice (same rows, same format, fresh storage).
+    /// The runtime rebalancer uses it to materialize a new whole-table
+    /// replica from the home shard's slice; replicas are byte-identical
+    /// by construction, so routing to any of them is bit-exact.
+    pub fn duplicate(&self) -> TableSlice {
+        TableSlice {
+            data: slice_rows(&self.data, 0, self.data.rows()),
+            global_rows: self.global_rows.clone(),
+        }
+    }
+
+    /// The slice's payload table (rows in the source table's native
+    /// format). Chunked execution resolves global ids against this.
+    pub fn table(&self) -> &AnyTable {
+        &self.data
+    }
+
     /// Embedding dimension.
     pub fn dim(&self) -> usize {
         self.data.dim()
@@ -81,82 +96,6 @@ impl TableSlice {
         let args =
             SlsArgs::new(local_ids, &lengths, self.data.rows()).expect("validated local ids");
         self.data.sls_view().sls(&args, out);
-    }
-}
-
-/// One shard's slices of every table in the served set. `tables[t]` is
-/// `None` when the shard holds no rows of table `t` (whole tables homed
-/// on other shards, or trailing shards of a short table).
-pub struct ShardSlice {
-    tables: Vec<Option<TableSlice>>,
-}
-
-impl ShardSlice {
-    /// Assemble from pre-cut slices (one entry per table, in table
-    /// order). This is the constructor the engine's consuming carve path
-    /// uses — see [`ShardedEngine::start`].
-    ///
-    /// [`ShardedEngine::start`]: crate::shard::ShardedEngine::start
-    pub fn from_slices(tables: Vec<Option<TableSlice>>) -> ShardSlice {
-        ShardSlice { tables }
-    }
-
-    /// Materialize shard `shard`'s slice of `set` under `partitions` by
-    /// copying from a borrowed set (one entry per table, as from
-    /// [`plan_partitions`]). Kept for tests and tooling; the engine
-    /// carves from an owned set instead so the source tables can be
-    /// dropped as it goes.
-    ///
-    /// [`plan_partitions`]: crate::shard::partition::plan_partitions
-    pub fn build(set: &TableSet, partitions: &[TablePartition], shard: usize) -> ShardSlice {
-        assert_eq!(partitions.len(), set.num_tables());
-        let tables = partitions
-            .iter()
-            .enumerate()
-            .map(|(t, p)| {
-                let range = p.range_of(shard);
-                if range.is_empty() {
-                    None
-                } else {
-                    Some(TableSlice::cut(set.table(t), range))
-                }
-            })
-            .collect();
-        ShardSlice { tables }
-    }
-
-    /// Does this shard hold any rows of `table`?
-    pub fn owns(&self, table: usize) -> bool {
-        self.tables[table].is_some()
-    }
-
-    /// The slice of `table`, if held.
-    pub fn slice_of(&self, table: usize) -> Option<&TableSlice> {
-        self.tables[table].as_ref()
-    }
-
-    /// Embedding dimension of `table` (panics if not held).
-    pub fn dim_of(&self, table: usize) -> usize {
-        self.tables[table].as_ref().expect("shard owns table rows").dim()
-    }
-
-    /// Rows of `table` held by this shard (0 if none).
-    pub fn rows_of(&self, table: usize) -> usize {
-        self.tables[table].as_ref().map_or(0, TableSlice::rows)
-    }
-
-    /// Bytes held by this shard across all slices.
-    pub fn size_bytes(&self) -> usize {
-        self.tables.iter().flatten().map(TableSlice::size_bytes).sum()
-    }
-
-    /// Pool `local_ids` (shard-local row ids) from `table` into `out`
-    /// (one segment of `dim` floats), with the format's optimized kernel.
-    pub fn pool(&self, table: usize, local_ids: &[u32], out: &mut [f32]) {
-        self.tables[table]
-            .as_ref()
-            .expect("shard owns table rows")
-            .pool(local_ids, out);
     }
 }
 
@@ -228,12 +167,7 @@ fn slice_codebook(t: &CodebookTable, lo: usize, hi: usize) -> CodebookTable {
 mod tests {
     use super::*;
     use crate::quant::GreedyQuantizer;
-    use crate::shard::partition::plan_partitions;
     use crate::table::ScaleBiasDtype;
-
-    fn set_of(tables: Vec<AnyTable>) -> TableSet {
-        TableSet::new(tables)
-    }
 
     #[test]
     fn f32_slice_rows_match_source() {
@@ -304,33 +238,35 @@ mod tests {
     }
 
     #[test]
-    fn shard_slice_pools_its_rows_exactly() {
+    fn chunk_slice_pools_its_rows_exactly() {
         let t = EmbeddingTable::randn(20, 4, 4);
-        let set = set_of(vec![AnyTable::F32(t.clone())]);
-        let partitions = plan_partitions(&[20], 4, 0); // chunk 5
-        let slice = ShardSlice::build(&set, &partitions, 1); // rows 5..10
-        assert!(slice.owns(0));
-        assert_eq!(slice.rows_of(0), 5);
-        assert_eq!(slice.slice_of(0).unwrap().global_rows(), 5..10);
+        let table = AnyTable::F32(t);
+        let slice = TableSlice::cut(&table, 5..10);
+        assert_eq!(slice.rows(), 5);
+        assert_eq!(slice.global_rows(), 5..10);
         let mut out = vec![0.0f32; 4];
-        slice.pool(0, &[0, 4], &mut out); // global rows 5 and 9
+        slice.pool(&[0, 4], &mut out); // global rows 5 and 9
         let mut want = vec![0.0f32; 4];
-        set.pool(0, &[5, 9], &mut want);
+        crate::coordinator::TableSet::new(vec![table]).pool(0, &[5, 9], &mut want);
         assert_eq!(out, want);
     }
 
     #[test]
-    fn unowned_table_is_none() {
-        let t = EmbeddingTable::randn(4, 4, 5);
-        let set = set_of(vec![AnyTable::F32(t)]);
-        let partitions = plan_partitions(&[4], 3, 100); // whole, on some shard s
-        let owner = match &partitions[0] {
-            TablePartition::Whole { shard, .. } => *shard,
-            _ => panic!("expected whole"),
-        };
-        for s in 0..3 {
-            let slice = ShardSlice::build(&set, &partitions, s);
-            assert_eq!(slice.owns(0), s == owner, "shard {s}");
+    fn duplicate_is_byte_identical() {
+        let t = EmbeddingTable::randn(12, 8, 6);
+        let f = t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16);
+        let slice = TableSlice::from_whole(AnyTable::Fused(f));
+        let copy = slice.duplicate();
+        assert_eq!(copy.rows(), slice.rows());
+        assert_eq!(copy.global_rows(), slice.global_rows());
+        assert_eq!(copy.size_bytes(), slice.size_bytes());
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![0.0f32; 8];
+        for ids in [[0u32, 11].as_slice(), &[5, 5, 5], &[]] {
+            slice.pool(ids, &mut a);
+            copy.pool(ids, &mut b);
+            assert_eq!(a, b, "{ids:?}");
         }
     }
+
 }

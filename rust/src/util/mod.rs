@@ -1,11 +1,14 @@
-//! Shared utilities: deterministic RNG, f16 conversion, statistics.
+//! Shared utilities: deterministic RNG, f16 conversion, statistics,
+//! poison-tolerant locking.
 
 pub mod bench;
 pub mod f16;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use bench::{measure, measure_with_setup, Measurement};
 pub use f16::{f16_bits_to_f32, f32_to_f16, f32_to_f16_bits};
 pub use rng::{Rng, Zipf};
 pub use stats::{kurtosis, l2_sq, mean, mean_abs_dev, std_dev};
+pub use sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison};

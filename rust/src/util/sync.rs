@@ -1,0 +1,65 @@
+//! Poison-tolerant locking.
+//!
+//! A `Mutex` is poisoned when a thread panics while holding it; every
+//! later `.lock().unwrap()` then panics too, so one crashed worker
+//! cascades through every thread that shares the lock (the serving
+//! engine's stats mutexes were exactly this hazard — a panicking shard
+//! worker could take down `serve_trace` and the TCP stats frame).
+//!
+//! All state guarded by these helpers is kept consistent by construction
+//! — counters and histograms that are updated atomically under the lock,
+//! never left half-written across a panic point — so recovering the
+//! guard from a `PoisonError` is safe: the worst case is a metrics
+//! sample from just before the panic.
+
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read-lock `l`, recovering the guard if a writer panicked.
+pub fn read_ignore_poison<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock `l`, recovering the guard if a previous holder panicked.
+pub fn write_ignore_poison<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn poisoned_mutex_still_locks() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let h = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        });
+        assert!(h.join().is_err());
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_ignore_poison(&m), 7);
+        *lock_ignore_poison(&m) = 8;
+        assert_eq!(*lock_ignore_poison(&m), 8);
+    }
+
+    #[test]
+    fn poisoned_rwlock_still_locks() {
+        let l = Arc::new(RwLock::new(1u32));
+        let l2 = Arc::clone(&l);
+        let h = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        });
+        assert!(h.join().is_err());
+        assert_eq!(*read_ignore_poison(&l), 1);
+        *write_ignore_poison(&l) = 2;
+        assert_eq!(*read_ignore_poison(&l), 2);
+    }
+}

@@ -1,0 +1,190 @@
+//! Adaptive shard load management, end to end: work stealing under a
+//! skewed workload, the interval-driven runtime rebalancer, and panic
+//! containment on the serving path.
+
+use std::time::Duration;
+
+use emberq::coordinator::{EmbeddingServer, ServerConfig, TableCatalog, TableSet};
+use emberq::data::trace::Request;
+use emberq::quant::GreedyQuantizer;
+use emberq::shard::{ShardConfig, ShardedEngine};
+use emberq::table::serial::AnyTable;
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+
+fn fused_set(num_tables: usize, rows: usize, dim: usize, seed: u64) -> TableSet {
+    TableSet::new(
+        (0..num_tables)
+            .map(|t| {
+                let tab = EmbeddingTable::randn(rows, dim, seed + 7 * t as u64);
+                AnyTable::Fused(tab.quantize_fused(
+                    &GreedyQuantizer::default(),
+                    4,
+                    ScaleBiasDtype::F16,
+                ))
+            })
+            .collect(),
+    )
+}
+
+/// A skewed request: every table touched, the hot table pooling far more
+/// rows than the rest.
+fn skewed_request(num_tables: usize, rows: usize, hot: usize, i: u32) -> Request {
+    Request {
+        ids: (0..num_tables)
+            .map(|t| {
+                let pool: u32 = if t == hot { 48 } else { 2 };
+                (0..pool).map(|j| ((i * 31 + j * 13 + t as u32) % rows as u32)).collect()
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn stealing_absorbs_whole_table_skew() {
+    // Four whole tables over four shards, one of them dominating the
+    // traffic: with stealing on, the hot shard's queue must drain
+    // through its peers and results must stay bit-exact.
+    let reference = fused_set(4, 96, 8, 0xAD01);
+    let engine = ShardedEngine::start(
+        fused_set(4, 96, 8, 0xAD01),
+        &ShardConfig {
+            num_shards: 4,
+            small_table_rows: usize::MAX,
+            steal: true,
+            ..Default::default()
+        },
+    );
+    let reqs: Vec<Request> = (0..600).map(|i| skewed_request(4, 96, 0, i)).collect();
+    let fw = engine.feature_width();
+    let mut out = vec![0.0f32; reqs.len() * fw];
+    for _attempt in 0..5 {
+        engine.lookup_batch_into(&reqs, &mut out);
+        if engine.steal_count() > 0 {
+            break;
+        }
+    }
+    assert!(engine.steal_count() > 0, "peers never stole from the hot shard");
+    for (slot, req) in reqs.iter().enumerate().step_by(97) {
+        for (t, ids) in req.ids.iter().enumerate() {
+            let mut want = vec![0.0f32; 8];
+            reference.pool(t, ids, &mut want);
+            assert_eq!(
+                &out[slot * fw + t * 8..slot * fw + (t + 1) * 8],
+                want.as_slice(),
+                "slot {slot} table {t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn background_rebalancer_replicates_the_hottest_table() {
+    // The satellite acceptance check: drive a skewed load, wait at least
+    // one interval, and the rebalancer must have added replicas for the
+    // hottest table — with routing still valid against the catalog and
+    // results unchanged to the bit.
+    let reference = fused_set(3, 64, 8, 0xAD02);
+    let catalog = TableCatalog::of(&reference);
+    let engine = ShardedEngine::start(
+        fused_set(3, 64, 8, 0xAD02),
+        &ShardConfig {
+            num_shards: 3,
+            small_table_rows: usize::MAX,
+            steal: true,
+            rebalance_interval: Some(Duration::from_millis(20)),
+            ..Default::default()
+        },
+    );
+    let hot = 1usize;
+    let probe = skewed_request(3, 64, hot, 9);
+    let before = engine.lookup(&probe);
+    // Drive load, then give the 20 ms rebalancer a few intervals.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        for i in 0..50u32 {
+            let _ = engine.lookup(&skewed_request(3, 64, hot, i));
+        }
+        if engine.rebalance_stats().rebalances > 0 || std::time::Instant::now() > deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let stats = engine.rebalance_stats();
+    assert!(stats.rebalances > 0, "rebalancer never ticked with load observed");
+    assert!(stats.replicas_added > 0, "no replica added for the hot table");
+    assert_eq!(
+        engine.replica_shards(hot),
+        vec![0, 1, 2],
+        "hottest table must be replicated everywhere"
+    );
+    engine.validate_routing(&catalog).expect("routing valid after runtime re-replication");
+    assert!(engine.replicated_bytes() > 0);
+    assert_eq!(engine.lookup(&probe), before, "results survive re-replication bit-for-bit");
+}
+
+#[test]
+fn server_survives_worker_panic_and_reports_it() {
+    // A malformed id slipped past validation (engine called directly via
+    // an unvalidated request) panics inside a worker. The server must
+    // answer, count the panic, and keep the stats path alive — the
+    // poison-tolerant locking regression test at the integration layer.
+    let set = fused_set(2, 32, 8, 0xAD03);
+    let server = EmbeddingServer::start(
+        set,
+        ServerConfig { num_shards: 2, ..Default::default() },
+    );
+    let bad = Request { ids: vec![vec![31, 77777], vec![1]] };
+    let out = server.lookup(&bad);
+    assert_eq!(out.len(), 16);
+    assert_eq!(&out[0..8], &[0.0; 8], "panicked segment is zeroed, not garbage");
+    let stats = server.shard_stats().expect("sharded");
+    assert_eq!(stats.iter().map(|s| s.panics).sum::<u64>(), 1);
+    // Stats text (what the TCP stats frame serves) still renders.
+    let text = server.stats_text();
+    assert!(text.contains("adaptive:"), "{text}");
+    // And a healthy replay still accounts exactly.
+    let ok = Request { ids: vec![vec![0, 31], vec![5]] };
+    let first = server.lookup(&ok);
+    assert_eq!(server.lookup(&ok), first);
+    assert_eq!(server.submit(&ok), first, "intake path agrees bitwise");
+}
+
+#[test]
+fn adaptive_serving_stays_exact_under_trace_replay() {
+    // Full server stack with stealing + rebalancing against a replayed
+    // trace: metrics account for every lookup and the per-shard stats
+    // include the steal counters.
+    use emberq::data::trace::{RequestTrace, TraceConfig};
+    let set = fused_set(4, 256, 8, 0xAD04);
+    let server = EmbeddingServer::start(
+        set,
+        ServerConfig {
+            num_shards: 4,
+            steal: true,
+            rebalance_interval: Some(Duration::from_millis(10)),
+            ..Default::default()
+        },
+    );
+    let trace = RequestTrace::generate(&TraceConfig {
+        requests: 200,
+        num_tables: 4,
+        rows: 256,
+        mean_pool: 8,
+        zipf_alpha: 1.2,
+        seed: 0xAD05,
+    });
+    let m = server.serve_trace(&trace);
+    assert_eq!(m.requests, 200);
+    assert_eq!(m.lookups as usize, trace.total_lookups());
+    let shard_lookups: u64 = m.per_shard.iter().map(|s| s.lookups).sum();
+    assert_eq!(shard_lookups, m.lookups);
+    server.validate_routing().expect("routing stays valid under replay");
+    // Replay twice: bit-identical (stealing and rebalancing are
+    // correctness-invisible).
+    let mut a = vec![0.0f32; 32];
+    let mut b = vec![1.0f32; 32];
+    server.lookup_batch_into(&trace.requests[..1], &mut a);
+    let _ = server.rebalance_once();
+    server.lookup_batch_into(&trace.requests[..1], &mut b);
+    assert_eq!(a, b);
+}

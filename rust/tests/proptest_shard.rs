@@ -4,13 +4,12 @@
 //! property loops — the crate builds offline with no test-framework
 //! dependencies).
 //!
-//! Exactness contract (see the `shard` module docs): whenever a
-//! segment's ids live on a single shard — shard count 1, whole tables,
-//! or the all-ids-in-one-chunk adversarial case — the sharded sum runs
-//! the same kernel over byte-identical rows in the same order and must
-//! match *bit for bit*. When ids genuinely span shards the pooled sum is
-//! the same set of addends re-associated, so agreement is to f32
-//! reassociation error, bounded here by a tolerance scaled to Σ|addend|.
+//! Exactness contract (see the `shard` module docs): sharded output
+//! equals the unsharded pool **bit for bit, always** — including when a
+//! segment's ids span shards (the engine executes every segment whole,
+//! in id order, over the owning chunk slices; it never merges per-shard
+//! partial sums, which f32 non-associativity would make inexact), with
+//! work stealing on or off, and across replica placements.
 
 use emberq::coordinator::{EmbeddingServer, ServerConfig, TableSet};
 use emberq::data::trace::Request;
@@ -50,19 +49,6 @@ fn build_tables(
             }
         })
         .collect()
-}
-
-/// The f32 values row `id` contributes to a pooled sum.
-fn decoded_row(t: &AnyTable, id: u32) -> Vec<f32> {
-    match t {
-        AnyTable::F32(t) => t.row(id as usize).to_vec(),
-        AnyTable::Fused(t) => t.dequantize_row(id as usize),
-        AnyTable::Codebook(t) => {
-            let mut out = vec![0.0f32; t.dim()];
-            t.dequantize_row_into(id as usize, &mut out);
-            out
-        }
-    }
 }
 
 /// Request generator biased toward the shapes that break sharding:
@@ -137,33 +123,118 @@ fn prop_sharded_equals_unsharded_pool() {
                 let mut want = vec![0.0f32; dim];
                 reference.pool(t, ids, &mut want);
                 let got = &out[slot * fw + t * dim..slot * fw + (t + 1) * dim];
-                let single_shard =
-                    ids.is_empty() || engine.partition(t).one_shard_for(ids).is_some();
-                if single_shard {
-                    assert_eq!(
-                        got,
-                        want.as_slice(),
-                        "case {case} slot {slot} table {t}: single-shard segment must be exact \
-                         (fmt {fmt}, {rows} rows, {shards} shards)"
-                    );
-                } else {
-                    let mut sum_abs = vec![0.0f64; dim];
-                    for &id in ids {
-                        for (j, v) in decoded_row(reference.table(t), id).iter().enumerate() {
-                            sum_abs[j] += v.abs() as f64;
-                        }
-                    }
-                    for j in 0..dim {
-                        let tol = 1e-4f32 * (1.0 + sum_abs[j] as f32);
-                        assert!(
-                            (got[j] - want[j]).abs() <= tol,
-                            "case {case} slot {slot} table {t} j={j}: sharded {} vs pooled {} \
-                             (tol {tol}, fmt {fmt}, {rows} rows, {shards} shards)",
-                            got[j],
-                            want[j]
-                        );
-                    }
-                }
+                assert_eq!(
+                    got,
+                    want.as_slice(),
+                    "case {case} slot {slot} table {t}: every segment must be bit-exact, \
+                     spanning or not (fmt {fmt}, {rows} rows, {shards} shards)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_stealing_is_bit_invariant() {
+    // Work stealing changes *who* executes a sub-request, never its
+    // arithmetic: engines with stealing on and off (same tables, same
+    // requests, shard counts 1..=8, all formats) must agree bitwise with
+    // each other and with the unsharded pool, even under spanning ids.
+    let mut rng = Rng::new(0x57EA);
+    for case in 0..48u64 {
+        let num_tables = 1 + rng.below(3);
+        let rows = 4 + rng.below(100);
+        let dim = [3usize, 4, 8, 16][rng.below(4)];
+        let shards = 1 + (case as usize % 8);
+        let fmt = case as usize % 5;
+        let small_table_rows = if rng.below(3) == 0 { usize::MAX } else { 0 };
+        let seed = 0xA5_0000 + case * 131;
+        let reference = TableSet::new(build_tables(seed, fmt, num_tables, rows, dim));
+        let mk_engine = |steal: bool| {
+            ShardedEngine::start(
+                TableSet::new(build_tables(seed, fmt, num_tables, rows, dim)),
+                &ShardConfig {
+                    num_shards: shards,
+                    small_table_rows,
+                    steal,
+                    ..Default::default()
+                },
+            )
+        };
+        let plain = mk_engine(false);
+        let stealing = mk_engine(true);
+        let reqs: Vec<Request> = (0..2 + rng.below(5))
+            .map(|_| Request {
+                ids: (0..num_tables)
+                    .map(|_| adversarial_ids(&mut rng, rows, shards))
+                    .collect(),
+            })
+            .collect();
+        let fw = plain.feature_width();
+        let mut a = vec![0.0f32; reqs.len() * fw];
+        let mut b = vec![1.0f32; reqs.len() * fw]; // stale garbage must vanish
+        plain.lookup_batch_into(&reqs, &mut a);
+        stealing.lookup_batch_into(&reqs, &mut b);
+        assert_eq!(a, b, "case {case}: stealing must not change a single bit");
+        for (slot, req) in reqs.iter().enumerate() {
+            for (t, ids) in req.ids.iter().enumerate() {
+                let mut want = vec![0.0f32; dim];
+                reference.pool(t, ids, &mut want);
+                assert_eq!(
+                    &a[slot * fw + t * dim..slot * fw + (t + 1) * dim],
+                    want.as_slice(),
+                    "case {case} slot {slot} table {t}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rebalancing_is_bit_invariant() {
+    // Replicas the runtime rebalancer adds (and retires) are
+    // byte-identical, so results must not move by a bit across passes.
+    let mut rng = Rng::new(0x57EB);
+    for case in 0..16u64 {
+        let num_tables = 2 + rng.below(3);
+        let rows = 8 + rng.below(40);
+        let dim = [4usize, 8][rng.below(2)];
+        let shards = 2 + rng.below(3);
+        let fmt = case as usize % 5;
+        let seed = 0xA6_0000 + case * 17;
+        let reference = TableSet::new(build_tables(seed, fmt, num_tables, rows, dim));
+        let engine = ShardedEngine::start(
+            TableSet::new(build_tables(seed, fmt, num_tables, rows, dim)),
+            &ShardConfig {
+                num_shards: shards,
+                small_table_rows: usize::MAX, // whole tables: replication candidates
+                steal: case % 2 == 0,
+                ..Default::default()
+            },
+        );
+        let reqs: Vec<Request> = (0..4)
+            .map(|_| Request {
+                ids: (0..num_tables)
+                    .map(|_| adversarial_ids(&mut rng, rows, shards))
+                    .collect(),
+            })
+            .collect();
+        let fw = engine.feature_width();
+        let mut before = vec![0.0f32; reqs.len() * fw];
+        engine.lookup_batch_into(&reqs, &mut before);
+        let changed = engine.rebalance_once();
+        let mut after = vec![1.0f32; reqs.len() * fw];
+        engine.lookup_batch_into(&reqs, &mut after);
+        assert_eq!(before, after, "case {case} (placement changed: {changed})");
+        for (slot, req) in reqs.iter().enumerate() {
+            for (t, ids) in req.ids.iter().enumerate() {
+                let mut want = vec![0.0f32; dim];
+                reference.pool(t, ids, &mut want);
+                assert_eq!(
+                    &after[slot * fw + t * dim..slot * fw + (t + 1) * dim],
+                    want.as_slice(),
+                    "case {case} slot {slot} table {t}"
+                );
             }
         }
     }
