@@ -19,11 +19,19 @@
 //! reports per-batch p50/p99 latency, steal counts, and rebalance
 //! counters per arm, and asserts the two arms agree bit-for-bit.
 //!
+//! `--spill` switches to the tiered-storage workload: whole fused
+//! tables with Zipf popularity served under a `--resident-budget`-style
+//! byte cap (the cold tail lives on disk and promotes on touch),
+//! measured against an unlimited-budget engine on the same requests. It
+//! reports per-batch p50/p99 per arm plus promotion/demotion/spill-read
+//! counters, and asserts the two arms agree bit-for-bit.
+//!
 //! ```bash
 //! cargo bench --bench shard_scaling            # full (1M rows)
 //! cargo bench --bench shard_scaling -- --quick # small + fast
 //! cargo bench --bench shard_scaling -- --tiny  # CI smoke budget
 //! cargo bench --bench shard_scaling -- --tiny --skewed  # adaptive arms
+//! cargo bench --bench shard_scaling -- --tiny --spill   # tiered arms
 //! ```
 
 use emberq::coordinator::{LatencyHistogram, ShardStats, TableSet};
@@ -43,6 +51,10 @@ const POOL: usize = 100;
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let tiny = std::env::args().any(|a| a == "--tiny");
+    if std::env::args().any(|a| a == "--spill") {
+        run_spill(tiny, quick);
+        return;
+    }
     if std::env::args().any(|a| a == "--skewed") {
         run_skewed(tiny, quick);
         return;
@@ -267,5 +279,126 @@ fn run_skewed(tiny: bool, quick: bool) {
     println!(
         "\nAdaptive check: with Zipf table skew, stealing + runtime re-replication \
          should show lower batch p99 than static placement, bit-exactly."
+    );
+}
+
+/// Tiered-storage mode: the same Zipf whole-table workload served with a
+/// resident-bytes budget at ~45% of the table bytes (hot tables stay in
+/// RAM, the cold tail spills and promotes on touch) vs. an unlimited
+/// engine — the cost of exceeding RAM, quantified, with bit-exactness
+/// asserted across the arms.
+fn run_spill(tiny: bool, quick: bool) {
+    let (num_tables, rows, dim, requests, reps) = if tiny {
+        (12usize, 1_500usize, 32usize, 400usize, 2usize)
+    } else if quick {
+        (12, 8_000, 64, 1_500, 3)
+    } else {
+        (16, 40_000, 64, 6_000, 5)
+    };
+    let max_batch = 16usize;
+    let shards = 4usize;
+    let fp32: Vec<EmbeddingTable> = (0..num_tables)
+        .map(|t| EmbeddingTable::randn_sigma(rows, dim, 0.1, 0x5F00 + t as u64))
+        .collect();
+    let mk_set = || {
+        TableSet::new(
+            fp32.iter()
+                .map(|t| AnyTable::Fused(t.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16)))
+                .collect(),
+        )
+    };
+    // Quantize once for the first arm and read the size off that set;
+    // the second arm re-quantizes (engines consume their sets).
+    let mut prebuilt = Some(mk_set());
+    let logical = prebuilt.as_ref().expect("prebuilt set").size_bytes();
+    let budget = logical * 45 / 100;
+    let zipf = Zipf::new(num_tables, 1.1);
+    let mut rng = Rng::new(0x5F5F);
+    let reqs: Vec<Request> = (0..requests)
+        .map(|_| {
+            let mut pools = vec![0usize; num_tables];
+            for _ in 0..24 {
+                pools[zipf.sample(&mut rng)] += 3;
+            }
+            Request {
+                ids: pools
+                    .iter()
+                    .map(|&pool| (0..pool).map(|_| rng.below(rows) as u32).collect())
+                    .collect(),
+            }
+        })
+        .collect();
+    println!(
+        "tiered workload: {num_tables} whole INT4 tables × {rows} rows × d={dim} \
+         ({logical} B), Zipf traffic, resident budget {budget} B (~45%)"
+    );
+    let mut baseline: Option<Vec<f32>> = None;
+    for (label, resident_budget) in [("resident", None), ("tiered", Some(budget))] {
+        let engine = ShardedEngine::start(
+            prebuilt.take().unwrap_or_else(mk_set),
+            &ShardConfig {
+                num_shards: shards,
+                small_table_rows: usize::MAX, // whole tables: per-table tiering
+                resident_budget,
+                ..Default::default()
+            },
+        );
+        let fw = engine.feature_width();
+        let mut out = vec![0.0f32; max_batch * fw];
+        // Warm pass: loads the Zipf-hot working set into the RAM tier.
+        for batch in reqs.chunks(max_batch) {
+            engine.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
+        }
+        let mut hist = LatencyHistogram::new();
+        for _ in 0..reps {
+            for batch in reqs.chunks(max_batch) {
+                let t0 = std::time::Instant::now();
+                engine.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
+                hist.record(t0.elapsed());
+            }
+        }
+        // Bit-exactness across tiers: spilling must not move a bit.
+        let first = &reqs[..max_batch];
+        let mut check = vec![0.0f32; max_batch * fw];
+        engine.lookup_batch_into(first, &mut check);
+        match &baseline {
+            None => baseline = Some(check),
+            Some(b) => assert_eq!(b, &check, "tiered arm diverged from resident arm"),
+        }
+        let resident: usize = engine.shard_bytes().iter().sum();
+        if let Some(b) = resident_budget {
+            assert!(resident <= b, "budget violated: {resident} > {b}");
+        }
+        let p50 = hist.quantile(0.50).as_nanos() as f64 / 1e6;
+        let p99 = hist.quantile(0.99).as_nanos() as f64 / 1e6;
+        let st = engine.store_stats().unwrap_or_default();
+        eprintln!(
+            "{label}: batch p50={p50:.3} ms p99={p99:.3} ms, resident {resident} B, \
+             {} promotions / {} demotions, {} B spill reads, {} spill errors",
+            st.promotions, st.demotions, st.spill_read_bytes, st.spill_errors
+        );
+        assert_eq!(st.spill_errors, 0);
+        let mut jw = JsonWriter::new();
+        jw.str_field("bench", "shard_scaling_spill")
+            .str_field("arm", label)
+            .num_field("shards", shards as f64)
+            .num_field("tables", num_tables as f64)
+            .num_field("rows", rows as f64)
+            .num_field("requests", requests as f64)
+            .num_field("table_bytes", logical as f64)
+            .num_field("resident_budget", resident_budget.unwrap_or(0) as f64)
+            .num_field("resident_bytes", resident as f64)
+            .num_field("spilled_bytes", engine.spilled_bytes() as f64)
+            .num_field("batch_p50_ms", p50)
+            .num_field("batch_p99_ms", p99)
+            .num_field("promotions", st.promotions as f64)
+            .num_field("demotions", st.demotions as f64)
+            .num_field("spill_read_bytes", st.spill_read_bytes as f64);
+        println!("{}", jw.finish());
+    }
+    println!(
+        "\nTiered check: the spill arm serves the same bits as the resident arm \
+         while holding only the budget's bytes in RAM (Zipf-hot tables resident, \
+         cold tail on disk)."
     );
 }

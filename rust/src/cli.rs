@@ -110,7 +110,8 @@ COMMANDS:
             normalized-l2 sweep of all methods over a random N(0,1) table
   serve     --table FILE [--shards N] [--workers N] [--requests N] [--batch N]
             [--replicate-hot N] [--small-table-rows N] [--steal]
-            [--rebalance-interval MS] [--listen ADDR]
+            [--rebalance-interval MS] [--resident-budget BYTES]
+            [--spill-dir PATH] [--listen ADDR]
             serve a table file against a synthetic Zipf trace (or over TCP).
             --shards N > 0 splits every table's rows across N worker
             shards (the multi-core, slice-resident path); --shards 0
@@ -122,12 +123,21 @@ COMMANDS:
             --steal lets idle shard workers pull whole sub-requests from
             the busiest peer's queue (bit-exact; smooths skew).
             --rebalance-interval MS runs the background rebalancer every
-            MS milliseconds: it re-replicates whole tables that ran hot
-            since the last tick and retires replicas that went cold,
-            swapping routing atomically (0 = off, the default).
+            MS milliseconds: it re-replicates whole tables whose
+            exponential-decay load window ran hot and retires replicas
+            that went cold, swapping routing atomically (0 = off, the
+            default).
+            --resident-budget BYTES caps RAM-resident slice bytes: the
+            coldest slices (same decay heat) spill to disk in their
+            native quantized encoding and promote back on touch, so the
+            served model may exceed RAM; results are bit-identical to
+            fully-resident serving. --spill-dir PATH picks the spill
+            directory (default: a per-run temp dir, removed on clean
+            shutdown; a killed --listen server leaves it for the OS
+            temp reaper).
             Sharded runs print per-shard service stats, steal/rebalance
-            counters, and the resident-bytes breakdown (engine vs
-            catalog) after the trace replay
+            counters, tier-transition counters, and the resident-bytes
+            breakdown (engine vs spilled vs catalog) after the replay
   info      --in FILE
             describe a saved table file"
     );
@@ -260,6 +270,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let rebalance_ms: u64 = flags.num("rebalance-interval", 0)?;
     let rebalance_interval =
         (rebalance_ms > 0).then_some(std::time::Duration::from_millis(rebalance_ms));
+    let budget_bytes: usize = flags.num("resident-budget", 0)?;
+    let resident_budget = (budget_bytes > 0).then_some(budget_bytes);
+    let spill_dir = flags.get("spill-dir").map(std::path::PathBuf::from);
     let listen = flags.get("listen").map(str::to_string);
     if replicate_hot > 0 && shards == 0 {
         eprintln!(
@@ -270,6 +283,30 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         eprintln!(
             "note: --steal / --rebalance-interval need at least two shards (--shards N); inert"
         );
+    }
+    if (resident_budget.is_some() || spill_dir.is_some()) && shards == 0 {
+        eprintln!(
+            "warning: --resident-budget / --spill-dir only apply to the sharded path \
+             (--shards > 0); ignoring"
+        );
+    }
+    // Fail with a friendly message here rather than a panic inside the
+    // engine if the spill directory cannot be created. With a budget but
+    // no explicit dir the engine makes its own subdirectory under the
+    // system temp dir, so the probe must prove that *creating* a subdir
+    // works (an existing but read-only temp dir passes a bare
+    // create_dir_all and would still panic the engine).
+    if shards > 0 {
+        if let Some(dir) = &spill_dir {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("--spill-dir {}: {e}", dir.display()))?;
+        } else if resident_budget.is_some() {
+            let tmp = std::env::temp_dir();
+            let probe = tmp.join(format!("emberq-spill-probe-{}", std::process::id()));
+            std::fs::create_dir_all(&probe)
+                .map_err(|e| format!("spill temp dir {}: {e}", tmp.display()))?;
+            let _ = std::fs::remove_dir(&probe);
+        }
     }
 
     let loaded = open_table(table_path)?;
@@ -328,6 +365,8 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             hot_loads,
             steal,
             rebalance_interval,
+            resident_budget: resident_budget.filter(|_| shards > 0),
+            spill_dir: spill_dir.filter(|_| shards > 0),
         },
     );
     if replicate_hot > 0 && shards == 1 {
@@ -477,6 +516,27 @@ mod tests {
             "--steal",
             "--rebalance-interval",
             "5",
+        ]))
+        .unwrap();
+        // Tiered storage: a budget far below the table bytes forces the
+        // spill path through the CLI plumbing (explicit spill dir).
+        let spill = dir.join("spill");
+        run(&s(&[
+            "serve",
+            "--table",
+            path.to_str().unwrap(),
+            "--shards",
+            "2",
+            "--copies",
+            "4",
+            "--requests",
+            "40",
+            "--batch",
+            "8",
+            "--resident-budget",
+            "4000",
+            "--spill-dir",
+            spill.to_str().unwrap(),
         ]))
         .unwrap();
         let _ = std::fs::remove_dir_all(&dir);

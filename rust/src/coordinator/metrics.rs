@@ -135,6 +135,17 @@ pub struct ShardStats {
     /// Tasks whose execution panicked (caught; the task's segment is
     /// returned zeroed instead of wedging the batch).
     pub panics: u64,
+    /// Tiered storage: this shard's slices loaded back from the disk
+    /// tier on touch.
+    pub promotions: u64,
+    /// Tiered storage: this shard's slices demoted to the disk tier.
+    pub demotions: u64,
+    /// Tiered storage: bytes promotions read back from spill files.
+    pub spill_read_bytes: u64,
+    /// Tiered storage: corrupt/unreadable spill files hit on this
+    /// shard's slices (the touched segment is zeroed; resident slices
+    /// keep serving).
+    pub spill_errors: u64,
 }
 
 impl ShardStats {
@@ -145,6 +156,10 @@ impl ShardStats {
         self.lookups += other.lookups;
         self.steals += other.steals;
         self.panics += other.panics;
+        self.promotions += other.promotions;
+        self.demotions += other.demotions;
+        self.spill_read_bytes += other.spill_read_bytes;
+        self.spill_errors += other.spill_errors;
     }
 
     /// The activity recorded after `earlier` was snapshotted from this
@@ -156,6 +171,10 @@ impl ShardStats {
             lookups: self.lookups - earlier.lookups,
             steals: self.steals - earlier.steals,
             panics: self.panics - earlier.panics,
+            promotions: self.promotions - earlier.promotions,
+            demotions: self.demotions - earlier.demotions,
+            spill_read_bytes: self.spill_read_bytes - earlier.spill_read_bytes,
+            spill_errors: self.spill_errors - earlier.spill_errors,
         }
     }
 
@@ -166,6 +185,15 @@ impl ShardStats {
             "{} tasks, {} lookups, {} stolen, p50={:.0?} p95={:.0?} p99={:.0?}",
             self.tasks, self.lookups, self.steals, p50, p95, p99,
         );
+        if self.promotions > 0 || self.demotions > 0 {
+            s.push_str(&format!(
+                ", {} promoted / {} demoted ({} B spill reads)",
+                self.promotions, self.demotions, self.spill_read_bytes
+            ));
+        }
+        if self.spill_errors > 0 {
+            s.push_str(&format!(", {} spill errors", self.spill_errors));
+        }
         if self.panics > 0 {
             s.push_str(&format!(", {} panics", self.panics));
         }
@@ -299,20 +327,33 @@ mod tests {
 
     #[test]
     fn shard_stats_merge_and_summary() {
-        let mut a = ShardStats { tasks: 1, lookups: 5, ..Default::default() };
+        let mut a = ShardStats { tasks: 1, lookups: 5, promotions: 2, ..Default::default() };
         a.latency.record(Duration::from_micros(10));
-        let mut b = ShardStats { tasks: 3, lookups: 7, steals: 2, ..Default::default() };
+        let mut b = ShardStats {
+            tasks: 3,
+            lookups: 7,
+            steals: 2,
+            demotions: 4,
+            spill_read_bytes: 100,
+            ..Default::default()
+        };
         b.latency.record(Duration::from_micros(30));
         a.merge(&b);
         assert_eq!(a.tasks, 4);
         assert_eq!(a.lookups, 12);
         assert_eq!(a.steals, 2);
+        assert_eq!((a.promotions, a.demotions, a.spill_read_bytes), (2, 4, 100));
         assert_eq!(a.latency.count(), 2);
         assert!(a.summary().contains("4 tasks"));
         assert!(a.summary().contains("2 stolen"));
+        assert!(a.summary().contains("2 promoted / 4 demoted (100 B spill reads)"));
         assert!(!a.summary().contains("panics"));
-        let p = ShardStats { panics: 1, ..Default::default() };
+        assert!(!a.summary().contains("spill errors"));
+        let p = ShardStats { panics: 1, spill_errors: 3, ..Default::default() };
         assert!(p.summary().contains("1 panics"));
+        assert!(p.summary().contains("3 spill errors"));
+        // An idle shard's summary stays free of tier noise.
+        assert!(!ShardStats::default().summary().contains("promoted"));
     }
 
     #[test]

@@ -158,6 +158,14 @@ pub struct ServerConfig {
     /// Sharded path only: run the background rebalancer at this interval
     /// (see [`ShardConfig::rebalance_interval`]).
     pub rebalance_interval: Option<Duration>,
+    /// Sharded path only: tiered slice storage — cap RAM-resident slice
+    /// bytes, spilling the coldest slices to disk and promoting them
+    /// back on touch (see [`ShardConfig::resident_budget`]). Results
+    /// stay bit-exact across tier transitions.
+    pub resident_budget: Option<usize>,
+    /// Sharded path only: spill-file directory (see
+    /// [`ShardConfig::spill_dir`]); defaults to a per-engine temp dir.
+    pub spill_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -172,6 +180,8 @@ impl Default for ServerConfig {
             hot_loads: Vec::new(),
             steal: false,
             rebalance_interval: None,
+            resident_budget: None,
+            spill_dir: None,
         }
     }
 }
@@ -223,6 +233,8 @@ impl EmbeddingServer {
                     hot_loads: cfg.hot_loads.clone(),
                     steal: cfg.steal,
                     rebalance_interval: cfg.rebalance_interval,
+                    resident_budget: cfg.resident_budget,
+                    spill_dir: cfg.spill_dir.clone(),
                 },
             );
             (Some(Arc::new(engine)), None)
@@ -377,7 +389,7 @@ impl EmbeddingServer {
     }
 
     /// Resident-bytes breakdown of this deployment (engine-resident vs
-    /// leader/catalog-resident).
+    /// leader/catalog-resident, plus the disk tier under tiered storage).
     pub fn size_report(&self) -> SizeReport {
         match &self.engine {
             Some(e) => {
@@ -388,6 +400,8 @@ impl EmbeddingServer {
                     replicated_bytes: e.replicated_bytes(),
                     catalog_bytes: self.catalog.resident_bytes(),
                     per_shard_bytes,
+                    spilled_bytes: e.spilled_bytes(),
+                    resident_budget: e.resident_budget(),
                 }
             }
             None => {
@@ -400,9 +414,17 @@ impl EmbeddingServer {
                     replicated_bytes: 0,
                     catalog_bytes: self.catalog.resident_bytes(),
                     per_shard_bytes: Vec::new(),
+                    spilled_bytes: 0,
+                    resident_budget: None,
                 }
             }
         }
+    }
+
+    /// Cumulative tier-transition counters (sharded path with tiered
+    /// storage only).
+    pub fn store_stats(&self) -> Option<crate::shard::StoreStats> {
+        self.engine.as_ref().and_then(|e| e.store_stats())
     }
 
     /// Human-readable stats block: residency breakdown plus per-shard
@@ -897,6 +919,45 @@ mod tests {
         assert!(tp.rebalance_stats().is_none());
         assert!(tp.rebalance_once().is_none());
         tp.validate_routing().expect("table-parallel routing is trivially valid");
+    }
+
+    #[test]
+    fn tiered_server_stays_within_budget_and_exact() {
+        // The server-level view of tiered storage: budget honored in the
+        // size report, spilled bytes reconcile, lookups bit-equal to an
+        // unconstrained server over the same tables.
+        let (_, full_set) = quantized_set(4, 400, 16);
+        let (_, tiered_set) = quantized_set(4, 400, 16);
+        let logical = full_set.size_bytes();
+        let budget = logical / 2;
+        let full = EmbeddingServer::start(
+            full_set,
+            ServerConfig { num_shards: 2, ..Default::default() },
+        );
+        let tiered = EmbeddingServer::start(
+            tiered_set,
+            ServerConfig {
+                num_shards: 2,
+                small_table_rows: usize::MAX,
+                resident_budget: Some(budget),
+                ..Default::default()
+            },
+        );
+        for i in 0..10u32 {
+            let req = Request {
+                ids: vec![vec![i, 399 - i], vec![i * 3], vec![7, 7], vec![i]],
+            };
+            assert_eq!(tiered.lookup(&req), full.lookup(&req), "request {i}");
+        }
+        let report = tiered.size_report();
+        assert_eq!(report.resident_budget, Some(budget));
+        assert!(report.engine_bytes <= budget, "{} > {budget}", report.engine_bytes);
+        assert_eq!(report.engine_bytes + report.spilled_bytes, logical);
+        assert!(report.summary().contains("spilled"));
+        let stats = tiered.store_stats().expect("tiered");
+        assert!(stats.promotions > 0 && stats.demotions > 0);
+        assert!(full.store_stats().is_none());
+        assert_eq!(full.size_report().spilled_bytes, 0);
     }
 
     #[test]

@@ -8,22 +8,33 @@
 /// Resident-bytes breakdown of a serving deployment.
 ///
 /// The slice-resident sharded engine must satisfy
-/// `engine_bytes == table_bytes + replicated_bytes` and
-/// `catalog_bytes ≪ table_bytes` (the old design resident-cost
+/// `engine_bytes + spilled_bytes == table_bytes + replicated_bytes`
+/// (with `spilled_bytes == 0` unless tiered storage demoted something)
+/// and `catalog_bytes ≪ table_bytes` (the old design resident-cost
 /// ~`2 × table_bytes` because the leader kept a full duplicate).
 #[derive(Clone, Debug, Default)]
 pub struct SizeReport {
     /// Logical bytes of the served tables (1× the payload).
     pub table_bytes: usize,
-    /// Bytes resident inside the execution engine (Σ shard slices on the
-    /// sharded path, the shared `TableSet` on the table-parallel path).
+    /// Bytes RAM-resident inside the execution engine (Σ shard slices on
+    /// the sharded path, the shared `TableSet` on the table-parallel
+    /// path). With tiered storage, spilled slices do *not* count here.
     pub engine_bytes: usize,
-    /// Engine bytes attributable to hot-chunk replication.
+    /// Engine bytes attributable to hot-chunk replication (logical:
+    /// replicas count whether resident or spilled).
     pub replicated_bytes: usize,
     /// Leader-resident metadata bytes (the table catalog).
     pub catalog_bytes: usize,
     /// Engine bytes per shard (empty on the table-parallel path).
     pub per_shard_bytes: Vec<usize>,
+    /// Tiered storage: logical bytes of the slices currently spilled to
+    /// disk. `engine_bytes + spilled_bytes` reconciles with
+    /// `table_bytes + replicated_bytes` (exactly for fp32/fused slices;
+    /// two-tier codebook slices each carry the small shared codebooks,
+    /// so they reconcile to within that epsilon).
+    pub spilled_bytes: usize,
+    /// Tiered storage: the resident-bytes budget, when one is set.
+    pub resident_budget: Option<usize>,
 }
 
 impl SizeReport {
@@ -51,7 +62,7 @@ impl SizeReport {
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "resident {} B ({:.4}x of {} B tables) = engine {} B \
              (incl. {} B hot replicas) + catalog {} B",
             self.resident_bytes(),
@@ -60,7 +71,14 @@ impl SizeReport {
             self.engine_bytes,
             self.replicated_bytes,
             self.catalog_bytes,
-        )
+        );
+        if self.spilled_bytes > 0 || self.resident_budget.is_some() {
+            s.push_str(&format!(", {} B spilled to disk", self.spilled_bytes));
+            if let Some(budget) = self.resident_budget {
+                s.push_str(&format!(" (budget {budget} B)"));
+            }
+        }
+        s
     }
 }
 
@@ -117,13 +135,35 @@ mod tests {
             replicated_bytes: 500,
             catalog_bytes: 100,
             per_shard_bytes: vec![5_250, 5_250],
+            ..Default::default()
         };
         assert_eq!(r.resident_bytes(), 10_600);
         assert!((r.residency_ratio() - 1.06).abs() < 1e-9);
         assert!((r.catalog_overhead() - 0.01).abs() < 1e-9);
         assert!(r.summary().contains("resident 10600 B"));
+        assert!(!r.summary().contains("spilled"), "no tier noise without tiering");
         let empty = SizeReport::default();
         assert_eq!(empty.residency_ratio(), 0.0);
         assert_eq!(empty.catalog_overhead(), 0.0);
+    }
+
+    #[test]
+    fn size_report_tiered_breakdown() {
+        // Budget below the table bytes: the resident tier shrank and the
+        // spilled remainder reconciles the total.
+        let r = SizeReport {
+            table_bytes: 10_000,
+            engine_bytes: 4_000,
+            replicated_bytes: 0,
+            catalog_bytes: 100,
+            per_shard_bytes: vec![2_000, 2_000],
+            spilled_bytes: 6_000,
+            resident_budget: Some(4_096),
+        };
+        assert_eq!(r.engine_bytes + r.spilled_bytes, r.table_bytes + r.replicated_bytes);
+        assert!(r.engine_bytes <= r.resident_budget.unwrap());
+        assert!(r.residency_ratio() < 1.0, "tiering drops residency below 1x");
+        let s = r.summary();
+        assert!(s.contains("6000 B spilled to disk (budget 4096 B)"), "{s}");
     }
 }

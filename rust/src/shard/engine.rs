@@ -26,23 +26,46 @@
 //! **Runtime re-replication:** routing and slices live in an immutable
 //! [`Placement`] snapshot behind an `RwLock<Arc<_>>`. Each batch clones
 //! the `Arc` once; the rebalancer builds a new placement (duplicating /
-//! dropping whole-table replicas ranked by the load window since its
-//! last tick) and swaps it atomically between batches. In-flight batches
-//! keep serving from their snapshot.
+//! dropping whole-table replicas ranked by exponential-decay load
+//! windows — [`DecayWindow`] — fed by the traffic since its last tick,
+//! so bursty tables keep their heat across one-window gaps) and swaps
+//! it atomically between batches. In-flight batches keep serving from
+//! their snapshot.
+//!
+//! **Per-shard wakeups:** every worker parks on its own condvar
+//! ([`WorkerGate`]); the leader notifies exactly the shards whose deques
+//! received work (all of them when stealing is on, since any idle peer
+//! may steal). Producers update the queued counters *before* taking the
+//! gate lock a waiter holds from its counter check until it parks, so a
+//! wakeup can never be lost — which is why the old scheme's 20 ms idle
+//! polling tick is gone entirely.
+//!
+//! **Tiered storage:** with [`ShardConfig::resident_budget`] set, every
+//! placement entry is a [`SliceCell`] whose tier is resident or spilled
+//! ([`crate::shard::store`]). Execution resolves exactly the cells a
+//! segment touches, promoting spilled ones from disk on demand under a
+//! bounded resident-bytes budget; the coldest cells (same decay heat as
+//! the rebalancer) are demoted to disk in their native quantized
+//! encoding. Reloaded bytes are identical to the spilled bytes, so tier
+//! transitions never move a bit of output.
 //!
 //! **Fault containment:** worker panics are caught per task (the segment
 //! is returned zeroed and counted in [`ShardStats::panics`]) and every
 //! shared lock is poison-tolerant, so one crashing task can neither
 //! wedge a batch nor cascade a panic through `serve_trace` or the TCP
-//! stats frame.
+//! stats frame. A corrupt or truncated spill file is likewise contained:
+//! the touched segment is zeroed and counted (`ShardStats::spill_errors`)
+//! while every resident slice keeps serving.
 //!
 //! **Slice-resident ownership:** [`ShardedEngine::start`] *consumes* the
 //! `TableSet`; after startup the only copies of table bytes live in the
-//! placement's slices (the leader keeps counters and byte accounting,
-//! and callers keep a [`TableCatalog`] for validation).
+//! placement's cells (RAM or spill tier — the leader keeps counters and
+//! byte accounting, and callers keep a [`TableCatalog`] for validation).
 
 use std::collections::VecDeque;
+use std::io;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock};
@@ -53,8 +76,10 @@ use crate::coordinator::metrics::ShardStats;
 use crate::coordinator::{Router, TableCatalog, TableSet};
 use crate::data::trace::Request;
 use crate::shard::exec;
+use crate::shard::load::DecayWindow;
 use crate::shard::partition::{plan_partitions, RowPartition, TablePartition};
 use crate::shard::slice::TableSlice;
+use crate::shard::store::{SliceCell, SliceStore, SpillConfig, StoreStats};
 use crate::shard::ShardConfig;
 use crate::util::sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison};
 
@@ -76,22 +101,35 @@ struct SubRequest {
 /// An immutable routing + residency snapshot: which shards hold which
 /// table slices, and which replicas answer whole-table lookups. Swapped
 /// wholesale by the rebalancer; batches clone the `Arc` once at split
-/// time.
+/// time. The cells themselves are shared (`Arc`) across snapshots, so a
+/// tier transition (spill/promote) is visible to every snapshot at once.
 struct Placement {
     /// Per table: the shards holding a full copy. Whole tables list their
     /// home shard (plus every replica when hot-replicated); row-wise
     /// tables list nothing (ownership is per chunk).
     replicas: Vec<Vec<usize>>,
-    /// `slices[shard][table]` — the shard's resident slice, if any.
-    slices: Vec<Vec<Option<Arc<TableSlice>>>>,
+    /// `slices[shard][table]` — the shard's slice cell, if any (RAM- or
+    /// disk-tier).
+    slices: Vec<Vec<Option<Arc<SliceCell>>>>,
 }
 
 impl Placement {
+    /// RAM-resident bytes per shard (spilled cells cost nothing here).
     fn shard_bytes(&self) -> Vec<usize> {
         self.slices
             .iter()
-            .map(|s| s.iter().flatten().map(|sl| sl.size_bytes()).sum())
+            .map(|s| s.iter().flatten().map(|c| c.resident_bytes()).sum())
             .collect()
+    }
+
+    /// Logical bytes of the cells currently in the disk tier.
+    fn spilled_bytes(&self) -> usize {
+        self.slices
+            .iter()
+            .flat_map(|s| s.iter().flatten())
+            .filter(|c| !c.is_resident())
+            .map(|c| c.bytes())
+            .sum()
     }
 
     fn replicated_bytes(&self, bytes_per_table: &[usize]) -> usize {
@@ -103,11 +141,25 @@ impl Placement {
     }
 }
 
+/// One shard worker's parking spot: the worker re-checks the queued
+/// counters under `shut`'s lock and parks on `cv`; producers notify
+/// after taking (and releasing) that same lock, so a notification
+/// cannot slip between the check and the park.
+struct WorkerGate {
+    /// Shutdown flag; also the condvar's mutex.
+    shut: Mutex<bool>,
+    cv: Condvar,
+}
+
 /// Rebalancer bookkeeping (guarded by one mutex that also serializes
 /// passes).
 struct RebalanceState {
-    /// Loads at the previous tick (windowed ranking).
+    /// Loads at the previous tick (window deltas feed the decay).
     last_loads: Vec<u64>,
+    /// Per-table exponential-decay load windows — the ranking signal
+    /// (shared arithmetic and cadence with the spill policy's per-cell
+    /// heat).
+    windows: Vec<DecayWindow>,
     /// Consecutive non-idle ticks in which no whole table was hot.
     quiet_ticks: u32,
 }
@@ -133,10 +185,17 @@ struct Core {
     /// Queued-count hints per shard (busiest-peer selection).
     queued: Vec<AtomicUsize>,
     total_queued: AtomicUsize,
-    /// Shutdown flag; the condvar's mutex.
-    gate: Mutex<bool>,
-    work_available: Condvar,
+    /// Per-shard wakeup gates (one condvar per worker; no shared
+    /// notify_all, no idle polling tick).
+    gates: Vec<WorkerGate>,
     steal: bool,
+    /// Tiered slice storage; `None` keeps every slice resident forever.
+    /// MUST be declared after `placement` and `queues`: fields drop in
+    /// declaration order, and the store's drop removes the (per-run
+    /// default) spill directory with non-recursive `remove_dir`, which
+    /// only succeeds once every cell those fields hold has dropped and
+    /// deleted its spill file.
+    store: Option<SliceStore>,
     stats: Vec<Mutex<ShardStats>>,
     /// Round-robin cursor for spreading lookups across replicas.
     rr: AtomicUsize,
@@ -226,12 +285,45 @@ impl ShardedEngine {
             }
         }
 
+        // Tiered storage: a budget (or an explicit directory) stands up
+        // the slice store; otherwise every cell is untracked and stays
+        // resident forever.
+        let store = match (cfg.resident_budget, &cfg.spill_dir) {
+            (None, None) => None,
+            (budget, dir) => {
+                // A defaulted temp dir is ours to delete on shutdown;
+                // an operator-supplied directory is not.
+                let (dir, cleanup_dir) = match dir.clone() {
+                    Some(d) => (d, false),
+                    None => (default_spill_dir(), true),
+                };
+                let spill = SpillConfig {
+                    dir,
+                    resident_budget: budget.unwrap_or(usize::MAX),
+                    cleanup_dir,
+                };
+                // A configured rebalancer drives the heat decay; only
+                // without one does the store tick itself on promotions.
+                // A single-shard engine never runs rebalance passes
+                // (`rebalance_core` is a no-op at n < 2), so its store
+                // must keep the fallback clock even when an (inert)
+                // interval was configured.
+                let rebalancer_ticks = cfg.rebalance_interval.is_some() && n > 1;
+                let store = SliceStore::new(&spill, n, rebalancer_ticks).unwrap_or_else(|e| {
+                    panic!("create spill directory {}: {e}", spill.dir.display())
+                });
+                Some(store)
+            }
+        };
+        let mk_cell =
+            |shard: usize, t: usize, slice: TableSlice| new_cell(&store, shard, t, slice);
+
         // Carve the consumed set. Whole tables *move* into their owning
         // shard (no copy; replicas, when asked for, are the only copies);
         // row-wise tables are cut per chunk and the source dropped, so
         // peak carve memory is the slices so far plus one table.
         let mut bytes_per_table = Vec::with_capacity(num_tables);
-        let mut slices: Vec<Vec<Option<Arc<TableSlice>>>> =
+        let mut slices: Vec<Vec<Option<Arc<SliceCell>>>> =
             (0..n).map(|_| Vec::with_capacity(num_tables)).collect();
         for (t, table) in set.into_tables().into_iter().enumerate() {
             bytes_per_table.push(table.size_bytes());
@@ -245,20 +337,43 @@ impl ShardedEngine {
                     // last takes the source by move.
                     for &shard in &r[..r.len() - 1] {
                         slices[shard][t] =
-                            Some(Arc::new(TableSlice::cut(&table, 0..table.rows())));
+                            Some(mk_cell(shard, t, TableSlice::cut(&table, 0..table.rows())));
                     }
                     let last = *r.last().expect("whole table has an owner");
-                    slices[last][t] = Some(Arc::new(TableSlice::from_whole(table)));
+                    slices[last][t] = Some(mk_cell(last, t, TableSlice::from_whole(table)));
                 }
                 TablePartition::RowWise(p) => {
                     for (shard, out) in slices.iter_mut().enumerate() {
                         let range = p.range_of(shard);
                         if !range.is_empty() {
-                            out[t] = Some(Arc::new(TableSlice::cut(&table, range)));
+                            out[t] = Some(mk_cell(shard, t, TableSlice::cut(&table, range)));
                         }
                     }
                 }
             }
+        }
+        // With a budget below the carved bytes, the cold tail spills
+        // before the first request arrives. Seed carve-time heat from
+        // the router-observed prior first, so the startup eviction
+        // demotes genuinely cold tables — not the hot tables (and their
+        // just-materialized replicas) `hot_loads` told us about; the
+        // prior decays away once real touches take over. Without loads
+        // every cell ties at zero and the deterministic shard/table
+        // order decides.
+        if let Some(st) = &store {
+            if !cfg.hot_loads.is_empty() {
+                for shard_cells in &slices {
+                    for (t, cell) in shard_cells.iter().enumerate() {
+                        if let Some(cell) = cell {
+                            let prior = cfg.hot_loads.get(t).copied().unwrap_or(0);
+                            if prior > 0 {
+                                cell.touch(prior);
+                            }
+                        }
+                    }
+                }
+            }
+            st.enforce();
         }
 
         let core = Arc::new(Core {
@@ -267,9 +382,11 @@ impl ShardedEngine {
             queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
             queued: (0..n).map(|_| AtomicUsize::new(0)).collect(),
             total_queued: AtomicUsize::new(0),
-            gate: Mutex::new(false),
-            work_available: Condvar::new(),
+            gates: (0..n)
+                .map(|_| WorkerGate { shut: Mutex::new(false), cv: Condvar::new() })
+                .collect(),
             steal: cfg.steal,
+            store,
             stats: (0..n).map(|_| Mutex::new(ShardStats::default())).collect(),
             rr: AtomicUsize::new(0),
             loads: (0..num_tables).map(|_| AtomicU64::new(0)).collect(),
@@ -283,6 +400,7 @@ impl ShardedEngine {
             rebalance_budget: cfg.replicate_hot.max(1),
             rb_state: Mutex::new(RebalanceState {
                 last_loads: vec![0; num_tables],
+                windows: vec![DecayWindow::new(); num_tables],
                 quiet_ticks: 0,
             }),
             rebalances: AtomicU64::new(0),
@@ -357,22 +475,75 @@ impl ShardedEngine {
         self.core.table_bytes
     }
 
-    /// Resident bytes per shard (each shard's slices, replicas included),
-    /// for the current placement.
+    /// RAM-resident bytes per shard (each shard's RAM-tier slices,
+    /// replicas included), for the current placement. Spilled slices
+    /// cost nothing here — they show up in
+    /// [`ShardedEngine::spilled_bytes`].
     pub fn shard_bytes(&self) -> Vec<usize> {
         read_ignore_poison(&self.core.placement).shard_bytes()
     }
 
-    /// Resident bytes attributable to whole-table replication, for the
+    /// Logical bytes of the current placement's disk-tier slices.
+    pub fn spilled_bytes(&self) -> usize {
+        read_ignore_poison(&self.core.placement).spilled_bytes()
+    }
+
+    /// The resident-bytes budget, when tiered storage is enabled with a
+    /// finite budget.
+    pub fn resident_budget(&self) -> Option<usize> {
+        self.core
+            .store
+            .as_ref()
+            .map(SliceStore::budget)
+            .filter(|&b| b != usize::MAX)
+    }
+
+    /// Cumulative tier-transition counters (`None` without tiered
+    /// storage).
+    pub fn store_stats(&self) -> Option<StoreStats> {
+        self.core.store.as_ref().map(SliceStore::stats)
+    }
+
+    /// Demote every resident slice to the disk tier (tests and "drop
+    /// caches" operations); returns how many were demoted, or `Ok(0)`
+    /// without a store. Serving afterwards promotes slices back on
+    /// touch, bit-exactly.
+    pub fn spill_all(&self) -> io::Result<usize> {
+        match &self.core.store {
+            Some(st) => st.demote_all(),
+            None => Ok(0),
+        }
+    }
+
+    /// Bytes attributable to whole-table replication (logical: replicas
+    /// count whether their cells are resident or spilled), for the
     /// current placement.
     pub fn replicated_bytes(&self) -> usize {
         read_ignore_poison(&self.core.placement).replicated_bytes(&self.core.bytes_per_table)
     }
 
     /// Snapshot of each shard's service stats (cumulative since start).
-    /// Poison-tolerant: readable even after a worker panic.
+    /// Poison-tolerant: readable even after a worker panic. Tier
+    /// transitions (promotions/demotions/spill reads/spill errors) are
+    /// folded in from the slice store, attributed to the shard owning
+    /// the moved slice.
     pub fn shard_stats(&self) -> Vec<ShardStats> {
-        self.core.stats.iter().map(|s| lock_ignore_poison(s).clone()).collect()
+        self.core
+            .stats
+            .iter()
+            .enumerate()
+            .map(|(shard, s)| {
+                let mut st = lock_ignore_poison(s).clone();
+                if let Some(store) = &self.core.store {
+                    let spill = store.shard_spill(shard);
+                    st.promotions = spill.promotions;
+                    st.demotions = spill.demotions;
+                    st.spill_read_bytes = spill.spill_read_bytes;
+                    st.spill_errors = spill.spill_errors;
+                }
+                st
+            })
+            .collect()
     }
 
     /// Total sub-requests executed by a worker other than their home
@@ -546,10 +717,12 @@ impl ShardedEngine {
             }
         }
         drop(rtx);
+        let mut any_work = false;
         for (shard, subs) in per_shard.into_iter().enumerate() {
             if subs.is_empty() {
                 continue;
             }
+            any_work = true;
             let k = subs.len();
             {
                 // Counters move under the same lock as the items (pop
@@ -560,13 +733,20 @@ impl ShardedEngine {
                 core.total_queued.fetch_add(k, Ordering::SeqCst);
                 q.extend(subs);
             }
+            // Without stealing only this shard's worker can run the
+            // work, so only its gate needs the wakeup.
+            if !core.steal {
+                wake(core, shard);
+            }
         }
-        // Notify under the gate lock so a worker that just checked the
-        // counters and is about to wait cannot miss the wakeup.
-        {
-            let _gate = lock_ignore_poison(&core.gate);
+        // With stealing, any idle peer may pull this batch's work, so
+        // every gate gets the wakeup (the per-shard gates still bound
+        // the no-steal case to exactly the shards with work).
+        if core.steal && any_work {
+            for shard in 0..n {
+                wake(core, shard);
+            }
         }
-        core.work_available.notify_all();
         for _ in 0..count {
             // Each segment arrives exactly once; placement (not
             // accumulation) makes the output order-independent. `Err`
@@ -585,11 +765,10 @@ impl ShardedEngine {
 
 impl Drop for ShardedEngine {
     fn drop(&mut self) {
-        {
-            let mut shut = lock_ignore_poison(&self.core.gate);
-            *shut = true;
+        for gate in &self.core.gates {
+            *lock_ignore_poison(&gate.shut) = true;
+            gate.cv.notify_all();
         }
-        self.core.work_available.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -604,6 +783,34 @@ impl Drop for ShardedEngine {
             let _ = h.join();
         }
     }
+}
+
+/// Admit a slice into a placement cell: store-tracked when tiered
+/// storage is on, pinned-untracked otherwise. Shared by the startup
+/// carve and the rebalancer's replica materialization so the two
+/// admission paths can never diverge.
+fn new_cell(
+    store: &Option<SliceStore>,
+    shard: usize,
+    table: usize,
+    slice: TableSlice,
+) -> Arc<SliceCell> {
+    match store {
+        Some(st) => st.admit(shard, table, slice),
+        None => Arc::new(SliceCell::untracked(shard, table, slice)),
+    }
+}
+
+/// Per-engine default spill directory under the system temp dir —
+/// unique per process *and* per engine, so parallel tests (or several
+/// servers in one process) never share or clobber each other's files.
+fn default_spill_dir() -> PathBuf {
+    static ENGINE_SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "emberq-spill-{}-{}",
+        std::process::id(),
+        ENGINE_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
 }
 
 /// The shard owning the plurality of `ids` (ties to the lowest shard id,
@@ -623,6 +830,17 @@ fn plurality_home(p: &RowPartition, ids: &[u32], counts: &mut [u32]) -> usize {
         }
     }
     best
+}
+
+/// Wake one shard's worker. The empty critical section pairs with the
+/// waiter, which holds this gate's lock from its queued-counter check
+/// until it parks: either the waiter saw the (already updated) counters,
+/// or it is parked and the notify lands. This is what lets the worker
+/// loop wait without any idle-tick backstop.
+fn wake(core: &Core, shard: usize) {
+    let gate = &core.gates[shard];
+    drop(lock_ignore_poison(&gate.shut));
+    gate.cv.notify_one();
 }
 
 fn pop_queue(core: &Core, shard: usize) -> Option<SubRequest> {
@@ -661,38 +879,143 @@ fn grab(core: &Core, shard: usize) -> Option<(SubRequest, bool)> {
     None
 }
 
-fn execute_sub(core: &Core, sub: &SubRequest, out: &mut [f32]) {
+/// Touch `cell` with `lookups` heat and return its slice, promoting it
+/// from the disk tier first if needed. The promotion (and any demotions
+/// its budget enforcement triggers) happens inside the slice store;
+/// this worker holds its own `Arc`, so a concurrent demotion of the
+/// same cell cannot pull the bytes out from under the execution.
+fn resolve(core: &Core, cell: &Arc<SliceCell>, lookups: u64) -> io::Result<Arc<TableSlice>> {
+    cell.touch(lookups);
+    if let Some(slice) = cell.resident() {
+        return Ok(slice);
+    }
+    let store = core.store.as_ref().expect("spilled cell implies a slice store");
+    store.promote(cell)
+}
+
+/// Per-worker scratch for the tiered row-wise path (per-chunk touch
+/// counts + resolved slices). Workers are long-lived threads, so these
+/// two small tables are allocated once per worker and reused across
+/// every segment — the serving hot path stays allocation-free beyond
+/// the per-segment output vector itself.
+#[derive(Default)]
+struct ExecScratch {
+    per_chunk: Vec<u64>,
+    resolved: Vec<Option<Arc<TableSlice>>>,
+}
+
+/// Execute one segment into `out`. `Err` means a spill file could not be
+/// read back (corrupt/truncated/missing): the store counted it, the
+/// caller zeroes the segment, and every resident slice keeps serving.
+fn execute_sub(
+    core: &Core,
+    sub: &SubRequest,
+    out: &mut [f32],
+    scratch: &mut ExecScratch,
+) -> io::Result<()> {
     let t = sub.table;
     match &core.partitions[t] {
         TablePartition::Whole { .. } => {
             // Global ids are slice-local ids for a whole table; the flat
             // format kernel runs directly on the routed replica.
-            let slice = sub.placement.slices[sub.home][t]
+            let cell = sub.placement.slices[sub.home][t]
                 .as_ref()
                 .expect("routed replica holds the table");
-            slice.pool(&sub.ids, out);
+            match cell.pinned() {
+                // Untiered: the pinned slice — no tier lock, no heat
+                // bookkeeping, no Arc clone (the pre-tiering cost).
+                Some(slice) => slice.pool(&sub.ids, out),
+                None => {
+                    // Round-robin routing splits a replicated table's
+                    // traffic 1/replicas per cell; scale the touch back
+                    // up so each replica's heat tracks the *table's*
+                    // aggregate rate. Otherwise the hottest table's
+                    // replicas would rank colder than an unreplicated
+                    // lukewarm table and be spilled first — the exact
+                    // inversion the shared-heat design must prevent.
+                    let replicas = sub.placement.replicas[t].len().max(1) as u64;
+                    let heat = sub.ids.len() as u64 * replicas;
+                    match resolve(core, cell, heat) {
+                        Ok(slice) => slice.pool(&sub.ids, out),
+                        Err(e) => {
+                            // One replica's spill file went bad — but
+                            // replicas are byte-identical, so serve from
+                            // any healthy copy instead of zeroing this
+                            // routed share of the table's traffic (the
+                            // store already counted the error).
+                            let other = sub.placement.replicas[t].iter().find_map(|&s| {
+                                if s == sub.home {
+                                    return None;
+                                }
+                                let cell = sub.placement.slices[s][t].as_ref()?;
+                                resolve(core, cell, 0).ok()
+                            });
+                            match other {
+                                Some(slice) => slice.pool(&sub.ids, out),
+                                None => return Err(e),
+                            }
+                        }
+                    }
+                }
+            }
         }
         TablePartition::RowWise(p) => {
-            // Resolve chunks straight out of the placement snapshot —
-            // no per-segment scratch allocation.
-            let slices = &sub.placement.slices;
+            let cells = &sub.placement.slices;
+            if core.store.is_none() {
+                // Untiered: resolve straight off the placement snapshot
+                // — no per-segment scratch, exactly as before tiering
+                // existed (cells outside a store are pinned).
+                exec::pool_rowwise(
+                    p,
+                    |s| {
+                        cells[s][t]
+                            .as_ref()
+                            .expect("owning shard holds its chunk")
+                            .pinned()
+                            .expect("untracked cells pin their slice")
+                            .table()
+                    },
+                    &sub.ids,
+                    out,
+                );
+                return Ok(());
+            }
+            // Tiered: resolve exactly the chunks this segment touches
+            // (with their true per-chunk heat) before pooling, so a
+            // spilled chunk is promoted at most once per segment and
+            // untouched chunks never leave the disk tier.
+            let n = p.num_shards();
+            scratch.per_chunk.clear();
+            scratch.per_chunk.resize(n, 0);
+            for &id in &sub.ids {
+                scratch.per_chunk[p.shard_of(id)] += 1;
+            }
+            scratch.resolved.clear();
+            scratch.resolved.resize(n, None);
+            for s in 0..n {
+                if scratch.per_chunk[s] > 0 {
+                    let cell = cells[s][t].as_ref().expect("owning shard holds its chunk");
+                    scratch.resolved[s] = Some(resolve(core, cell, scratch.per_chunk[s])?);
+                }
+            }
+            let resolved = &scratch.resolved;
             exec::pool_rowwise(
                 p,
-                |s| slices[s][t].as_ref().expect("owning shard holds its chunk").table(),
+                |s| resolved[s].as_ref().expect("touched chunks were resolved").table(),
                 &sub.ids,
                 out,
             );
         }
     }
+    Ok(())
 }
 
-fn run_sub(core: &Core, shard: usize, sub: SubRequest, stolen: bool) {
+fn run_sub(core: &Core, shard: usize, sub: SubRequest, stolen: bool, scratch: &mut ExecScratch) {
     let t0 = Instant::now();
     let dim = core.dims[sub.table];
     let result = catch_unwind(AssertUnwindSafe(|| {
         let mut out = vec![0.0f32; dim];
-        execute_sub(core, &sub, &mut out);
-        out
+        execute_sub(core, &sub, &mut out, scratch).map(|()| out)
     }));
     let panicked = result.is_err();
     // Record before replying so a caller that has seen the batch
@@ -709,44 +1032,52 @@ fn run_sub(core: &Core, shard: usize, sub: SubRequest, stolen: bool) {
             s.panics += 1;
         }
     }
-    // A panicked task replies with an empty vector: the segment stays
-    // zeroed and the batch completes instead of wedging. Leader may also
-    // have given up (tests); ignore send failure either way.
-    let _ = sub.reply.send((sub.slot, sub.table, result.unwrap_or_default()));
+    // A panicked task — or one whose spill file failed to read back (the
+    // store counted the spill error) — replies with an empty vector: the
+    // segment stays zeroed and the batch completes instead of wedging.
+    // Leader may also have given up (tests); ignore send failure.
+    let payload = match result {
+        Ok(Ok(out)) => out,
+        Ok(Err(_)) | Err(_) => Vec::new(),
+    };
+    // Drop the scratch's resolved slices now rather than at the next
+    // segment, so a demoted slice's memory is not pinned past its batch.
+    scratch.resolved.clear();
+    let _ = sub.reply.send((sub.slot, sub.table, payload));
 }
 
 fn worker_loop(shard: usize, core: Arc<Core>) {
+    let mut scratch = ExecScratch::default();
     loop {
         if let Some((sub, stolen)) = grab(&core, shard) {
-            run_sub(&core, shard, sub, stolen);
+            run_sub(&core, shard, sub, stolen, &mut scratch);
             continue;
         }
-        let shut = lock_ignore_poison(&core.gate);
-        if *shut {
-            return;
-        }
-        // Re-check under the gate lock (producers notify under it): a
-        // non-stealing worker only cares about its own deque, a stealing
-        // one about any.
-        let has_work = if core.steal {
-            core.total_queued.load(Ordering::SeqCst) > 0
-        } else {
-            core.queued[shard].load(Ordering::SeqCst) > 0
-        };
-        if has_work {
-            continue;
-        }
-        let (shut, _timeout) = core
-            .work_available
-            .wait_timeout(shut, Duration::from_millis(20))
-            .unwrap_or_else(PoisonError::into_inner);
-        if *shut {
-            return;
+        let gate = &core.gates[shard];
+        let mut shut = lock_ignore_poison(&gate.shut);
+        loop {
+            if *shut {
+                return;
+            }
+            // Re-check under this gate's lock (producers take it before
+            // notifying): a non-stealing worker only cares about its own
+            // deque, a stealing one about any. Holding the lock across
+            // the check and the park is what makes a lost wakeup
+            // impossible — so the wait needs no timeout backstop.
+            let has_work = if core.steal {
+                core.total_queued.load(Ordering::SeqCst) > 0
+            } else {
+                core.queued[shard].load(Ordering::SeqCst) > 0
+            };
+            if has_work {
+                break;
+            }
+            shut = gate.cv.wait(shut).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
 
-/// One rebalance pass over `core`: windowed load ranking → desired
+/// One rebalance pass over `core`: decay-windowed load ranking → desired
 /// replica sets → new placement, swapped atomically. Returns whether the
 /// placement changed.
 fn rebalance_core(core: &Core) -> bool {
@@ -761,40 +1092,56 @@ fn rebalance_core(core: &Core) -> bool {
     // replicas) while both passes' counters accumulate.
     let mut state = lock_ignore_poison(&core.rb_state);
     let loads: Vec<u64> = core.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect();
-    let window: Vec<u64> = loads
+    let delta: Vec<u64> = loads
         .iter()
         .zip(state.last_loads.iter())
         .map(|(a, b)| a.saturating_sub(*b))
         .collect();
     state.last_loads = loads;
-    if window.iter().all(|&w| w == 0) {
-        return false; // idle tick: leave the placement alone
+    // Fold this tick's traffic into the exponential-decay windows and
+    // rank on the decayed values, not the raw last-tick delta: a bursty
+    // table with a one-window gap keeps (half) its heat instead of
+    // ranking stone cold, which is what stops replica thrash. The spill
+    // policy's per-cell heat decays on the same cadence.
+    let scores: Vec<u64> = state
+        .windows
+        .iter_mut()
+        .zip(delta.iter())
+        .map(|(w, &d)| {
+            w.observe(d);
+            w.tick()
+        })
+        .collect();
+    if let Some(store) = &core.store {
+        store.tick();
     }
-    let hot: Vec<usize> = Router::hottest(&window, core.num_tables)
+    if delta.iter().all(|&d| d == 0) {
+        return false; // idle tick: heat cooled, placement untouched
+    }
+    let hot: Vec<usize> = Router::hottest(&scores, core.num_tables)
         .into_iter()
         .filter(|&t| {
-            window[t] > 0 && matches!(core.partitions[t], TablePartition::Whole { .. })
+            scores[t] > 0 && matches!(core.partitions[t], TablePartition::Whole { .. })
         })
         .take(core.rebalance_budget)
         .collect();
-    // Hysteresis, two-sided:
+    // Hysteresis, two-sided (on the decayed scores):
     // * Hot set non-empty — retire a replicated table only when its
-    //   window load is clearly below the selected hot set's minimum
+    //   decayed heat is clearly below the selected hot set's minimum
     //   (×2 margin), never because it merely ranked one past the budget
     //   this tick; otherwise two near-equal hot tables under budget 1
     //   would flip rank on window noise and re-copy full tables every
     //   interval.
     // * Hot set empty (only row-wise traffic kept the tick non-idle) —
-    //   all whole tables went quiet, but a single quiet window may be a
-    //   burst gap, so replicas are only retired after two consecutive
-    //   quiet ticks.
+    //   every whole table's heat fully decayed, but replicas are only
+    //   retired after two consecutive such ticks as a final backstop.
     if hot.is_empty() {
         state.quiet_ticks = state.quiet_ticks.saturating_add(1);
     } else {
         state.quiet_ticks = 0;
     }
     let retire_quiet = hot.is_empty() && state.quiet_ticks >= 2;
-    let min_hot = hot.iter().map(|&t| window[t]).min().unwrap_or(0);
+    let min_hot = hot.iter().map(|&t| scores[t]).min().unwrap_or(0);
     let cur: Arc<Placement> = Arc::clone(&read_ignore_poison(&core.placement));
     let mut replicas = cur.replicas.clone();
     let mut slices = cur.slices.clone(); // Arc clones: rows are shared, not copied
@@ -806,11 +1153,28 @@ fn rebalance_core(core: &Core) -> bool {
             TablePartition::RowWise(_) => continue,
         };
         if hot.contains(&t) {
-            for shard_slices in slices.iter_mut() {
+            if slices.iter().all(|ss| ss[t].is_some()) {
+                continue; // already replicated everywhere
+            }
+            // Materialize the source once (promote() is a no-op on a
+            // resident cell and reads the disk tier otherwise); an
+            // unreadable spill file skips this table's replication
+            // instead of failing the pass — the store counted the error.
+            let src = cur.slices[home][t].as_ref().expect("home shard holds its table");
+            let src_slice = match &core.store {
+                Some(st) => st.promote(src).ok(),
+                None => src.resident(),
+            };
+            let Some(src_slice) = src_slice else { continue };
+            for (shard, shard_slices) in slices.iter_mut().enumerate() {
                 if shard_slices[t].is_none() {
-                    let src =
-                        cur.slices[home][t].as_ref().expect("home shard holds its table");
-                    shard_slices[t] = Some(Arc::new(src.duplicate()));
+                    let cell = new_cell(&core.store, shard, t, src_slice.duplicate());
+                    // A replica of the hottest table must not enter the
+                    // eviction ranking stone cold — seed it with its
+                    // source's heat, or the post-pass enforcement would
+                    // spill exactly the data that was just replicated.
+                    cell.touch(src.heat_score());
+                    shard_slices[t] = Some(cell);
                     added += 1;
                 }
             }
@@ -819,7 +1183,7 @@ fn rebalance_core(core: &Core) -> bool {
             let cold = if hot.is_empty() {
                 retire_quiet
             } else {
-                window[t].saturating_mul(2) < min_hot
+                scores[t].saturating_mul(2) < min_hot
             };
             if cold {
                 for (s, shard_slices) in slices.iter_mut().enumerate() {
@@ -836,6 +1200,14 @@ fn rebalance_core(core: &Core) -> bool {
         return false;
     }
     *write_ignore_poison(&core.placement) = Arc::new(Placement { replicas, slices });
+    // New replicas were admitted resident; push residency back under the
+    // budget (retired cells free their bytes when the last snapshot
+    // holding them drops).
+    if added > 0 {
+        if let Some(store) = &core.store {
+            store.enforce();
+        }
+    }
     core.rebalances.fetch_add(1, Ordering::Relaxed);
     core.replicas_added.fetch_add(added, Ordering::Relaxed);
     core.replicas_retired.fetch_add(retired, Ordering::Relaxed);
@@ -1173,5 +1545,158 @@ mod tests {
         );
         let _ = engine.lookup(&Request { ids: vec![vec![1], vec![2]] });
         drop(engine); // must not hang or panic
+    }
+
+    #[test]
+    fn budgeted_engine_spills_and_stays_bit_exact() {
+        // Budget for roughly half the tables: the cold tail spills at
+        // startup, touches promote on demand, and every lookup matches
+        // the fully-resident pool bitwise.
+        let reference = f32_set(4, 64, 8);
+        let set = f32_set(4, 64, 8);
+        let logical = set.size_bytes();
+        let engine = ShardedEngine::start(
+            set,
+            &ShardConfig {
+                num_shards: 2,
+                small_table_rows: usize::MAX,
+                resident_budget: Some(logical / 2),
+                ..Default::default()
+            },
+        );
+        assert!(engine.resident_budget().is_some());
+        let resident: usize = engine.shard_bytes().iter().sum();
+        assert!(resident <= logical / 2, "startup enforce: {resident} > {}", logical / 2);
+        assert_eq!(resident + engine.spilled_bytes(), logical, "tiers must reconcile");
+        for i in 0..12u32 {
+            let req = Request {
+                ids: vec![vec![i, 63 - i], vec![i], vec![2 * i], vec![i, i, 5]],
+            };
+            let got = engine.lookup(&req);
+            let mut want = vec![0.0f32; 4 * 8];
+            for (t, ids) in req.ids.iter().enumerate() {
+                reference.pool(t, ids, &mut want[t * 8..(t + 1) * 8]);
+            }
+            assert_eq!(got, want, "request {i}");
+            let resident: usize = engine.shard_bytes().iter().sum();
+            assert!(resident <= logical / 2, "budget violated after request {i}");
+        }
+        let stats = engine.store_stats().expect("store active");
+        assert!(stats.promotions > 0, "budget below total bytes must force promotions");
+        assert!(stats.demotions > 0);
+        assert_eq!(stats.spill_errors, 0);
+        // Per-shard stats carry the tier counters.
+        let per_shard = engine.shard_stats();
+        assert_eq!(per_shard.iter().map(|s| s.promotions).sum::<u64>(), stats.promotions);
+        assert_eq!(per_shard.iter().map(|s| s.demotions).sum::<u64>(), stats.demotions);
+    }
+
+    #[test]
+    fn spill_all_then_serve_promotes_on_touch() {
+        // Row-wise chunks this time: demote everything mid-stream, then
+        // a spanning request promotes exactly the touched chunks back.
+        // The explicit dir plays the operator role, so the engine leaves
+        // it in place — the test cleans it up itself at the end.
+        let dir = default_spill_dir();
+        let reference = f32_set(1, 32, 4);
+        let engine = ShardedEngine::start(
+            f32_set(1, 32, 4),
+            &ShardConfig {
+                num_shards: 4,
+                small_table_rows: 0,
+                spill_dir: Some(dir.clone()),
+                ..Default::default()
+            },
+        );
+        let req = Request { ids: vec![vec![0, 9, 17, 31]] }; // spans all 4 chunks
+        let before = engine.lookup(&req);
+        let mut want = vec![0.0f32; 4];
+        reference.pool(0, &req.ids[0], &mut want);
+        assert_eq!(before, want);
+        assert_eq!(engine.spill_all().unwrap(), 4);
+        assert_eq!(engine.shard_bytes().iter().sum::<usize>(), 0);
+        assert_eq!(engine.spilled_bytes(), engine.table_bytes());
+        assert_eq!(engine.lookup(&req), want, "post-spill serving must be bit-exact");
+        assert_eq!(engine.store_stats().unwrap().promotions, 4);
+        // A narrow request touches (and promotes) only its own chunk.
+        let narrow = Request { ids: vec![vec![2, 5]] };
+        engine.spill_all().unwrap();
+        let mut want_narrow = vec![0.0f32; 4];
+        reference.pool(0, &narrow.ids[0], &mut want_narrow);
+        assert_eq!(engine.lookup(&narrow), want_narrow);
+        assert_eq!(
+            engine.store_stats().unwrap().promotions,
+            5,
+            "untouched chunks must stay spilled"
+        );
+        drop(engine); // cells delete their files; the dir is ours to remove
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hot_loads_seed_the_startup_eviction() {
+        // A budget below the carved bytes must spill the *cold* tables
+        // at startup when a router-observed prior is available — not
+        // the known-hot table by index order.
+        let set = f32_set(3, 64, 8);
+        let logical = set.size_bytes();
+        let engine = ShardedEngine::start(
+            set,
+            &ShardConfig {
+                num_shards: 2,
+                small_table_rows: usize::MAX,
+                hot_loads: vec![5, 1000, 10], // table 1 is the hot one
+                resident_budget: Some(logical / 3), // room for one table
+                ..Default::default()
+            },
+        );
+        // Touching the hot table costs no promotion: it stayed resident.
+        let _ = engine.lookup(&Request { ids: vec![vec![], vec![0, 1], vec![]] });
+        assert_eq!(engine.store_stats().unwrap().promotions, 0, "hot table was spilled");
+        // Touching a cold table pays the promotion it was spilled into.
+        let _ = engine.lookup(&Request { ids: vec![vec![0], vec![], vec![]] });
+        assert_eq!(engine.store_stats().unwrap().promotions, 1);
+    }
+
+    #[test]
+    fn wakeups_are_prompt_without_an_idle_tick() {
+        // The lost-wakeup regression test for the per-shard gates. All
+        // traffic targets one whole table on one shard, so only that
+        // shard's gate is ever notified; each lookup starts from a fully
+        // idle pool. The old scheme relied on a 20 ms idle polling tick
+        // as a lost-wakeup backstop — a port that dropped a notification
+        // (notifying before the counter update, or skipping the gate
+        // lock) would stall every lookup up to a full tick (≥ 4 s here)
+        // or, without the tick, hang forever. The watchdog turns a hang
+        // into a failure; the elapsed bound turns tick-scale stalls into
+        // one.
+        let set = f32_set(1, 32, 4);
+        let engine = Arc::new(ShardedEngine::start(
+            set,
+            &ShardConfig {
+                num_shards: 4,
+                small_table_rows: usize::MAX,
+                ..Default::default()
+            },
+        ));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let eng = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            for i in 0..200u32 {
+                let _ = eng.lookup(&Request { ids: vec![vec![i % 32]] });
+                // Let the worker park again so every lookup exercises the
+                // park → notify → wake path, not a busy worker.
+                std::thread::yield_now();
+            }
+            let _ = tx.send(t0.elapsed());
+        });
+        let elapsed = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("lookups wedged: a wakeup was lost and no idle tick masks it");
+        assert!(
+            elapsed < Duration::from_secs(4),
+            "idle-tick-scale stalls crept back in: 200 lookups took {elapsed:?}"
+        );
     }
 }

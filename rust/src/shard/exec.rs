@@ -34,9 +34,15 @@ pub fn pool_rowwise<'a, F>(p: &RowPartition, chunk_of: F, ids: &[u32], out: &mut
 where
     F: Fn(usize) -> &'a AnyTable,
 {
-    // Shard 0 always owns rows when the table is row-wise partitioned
-    // (chunks are dense from the front), and chunks share the format.
-    match chunk_of(0) {
+    // Dispatch on the first *used* chunk's format (chunks of one table
+    // all share it). Callers with tiered storage only materialize the
+    // chunks a segment actually touches, so an untouched chunk — shard
+    // 0 included — must never be resolved here.
+    let Some(&first) = ids.first() else {
+        out.fill(0.0);
+        return;
+    };
+    match chunk_of(p.shard_of(first)) {
         AnyTable::F32(_) => pool_f32(p, &chunk_of, ids, out),
         AnyTable::Fused(f) => {
             if f.nbits() == 4 {
@@ -197,6 +203,34 @@ mod tests {
                 t.quantize_codebook(CodebookKind::TwoTier { k: 3.min(rows) }, ScaleBiasDtype::F16),
             ),
         }
+    }
+
+    #[test]
+    fn untouched_chunks_are_never_resolved() {
+        // The tiered-storage contract: pooling must only ask for chunks
+        // that own at least one id (resolving an untouched chunk would
+        // promote a spilled slice for nothing). A resolver that panics
+        // on any other shard proves it.
+        let rows = 16;
+        let p = RowPartition::new(rows, 4); // chunks of 4
+        let table = table_of(1, rows, 8, 0xDEC0);
+        let reference = TableSet::new(vec![table_of(1, rows, 8, 0xDEC0)]);
+        let slices: Vec<TableSlice> =
+            (0..4).map(|s| TableSlice::cut(&table, p.range_of(s))).collect();
+        let ids = vec![8u32, 11, 9]; // all inside chunk 2
+        let chunk_of = |s: usize| {
+            assert_eq!(s, 2, "resolved an untouched chunk");
+            slices[s].table()
+        };
+        let mut got = vec![0.0f32; 8];
+        pool_rowwise(&p, chunk_of, &ids, &mut got);
+        let mut want = vec![0.0f32; 8];
+        reference.pool(0, &ids, &mut want);
+        assert_eq!(got, want);
+        // And an empty segment resolves nothing at all (just zeroes).
+        let mut out = vec![7.0f32; 8];
+        pool_rowwise(&p, |_| panic!("empty segment resolved a chunk"), &[], &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
     }
 
     #[test]

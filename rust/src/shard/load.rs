@@ -1,0 +1,126 @@
+//! Exponential-decay load windows — the heat signal shared by the
+//! runtime rebalancer and the tiered-storage spill policy.
+//!
+//! The rebalancer used to rank tables by the raw load of the *last* tick
+//! only, which made bursty traffic thrash: a hot table with a one-window
+//! gap ranked stone cold, its replicas were retired, and the next burst
+//! re-copied full tables. A [`DecayWindow`] instead folds each tick's
+//! observations into a half-life-decayed accumulator:
+//!
+//! ```text
+//! value_t = value_{t-1} / 2 + observed_t
+//! ```
+//!
+//! Integer arithmetic, so the decay is exactly reproducible in tests;
+//! under a steady per-tick load `c` the value converges to `< 2c`
+//! (geometric series), and after a burst it halves every tick instead of
+//! vanishing. The same window type drives the spill policy's
+//! cold-slice ranking (`shard::store`), so "cold enough to retire a
+//! replica" and "cold enough to spill to disk" share one notion of heat.
+
+/// Half-life-per-tick exponential-decay counter.
+///
+/// [`DecayWindow::observe`] accumulates between ticks;
+/// [`DecayWindow::tick`] folds the accumulator into the decayed value and
+/// returns it; [`DecayWindow::score`] reads the current heat estimate
+/// (decayed history plus not-yet-folded observations) without mutating.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecayWindow {
+    /// Observations since the last tick.
+    acc: u64,
+    /// Half-life-decayed value as of the last tick.
+    decayed: u64,
+}
+
+impl DecayWindow {
+    /// A cold window.
+    pub fn new() -> DecayWindow {
+        DecayWindow::default()
+    }
+
+    /// Record `n` units of load (pooled lookups, touches) since the last
+    /// tick.
+    pub fn observe(&mut self, n: u64) {
+        self.acc = self.acc.saturating_add(n);
+    }
+
+    /// Advance one tick: halve the decayed value, fold the accumulated
+    /// observations in, and return the new value.
+    pub fn tick(&mut self) -> u64 {
+        self.decayed = (self.decayed >> 1).saturating_add(self.acc);
+        self.acc = 0;
+        self.decayed
+    }
+
+    /// Current heat estimate: the decayed history plus whatever has been
+    /// observed since the last tick.
+    pub fn score(&self) -> u64 {
+        self.decayed.saturating_add(self.acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_arithmetic_is_pinned() {
+        // value_t = value_{t-1}/2 + observed_t, integer halving.
+        let mut w = DecayWindow::new();
+        w.observe(100);
+        assert_eq!(w.score(), 100);
+        assert_eq!(w.tick(), 100);
+        assert_eq!(w.tick(), 50);
+        assert_eq!(w.tick(), 25);
+        w.observe(8);
+        assert_eq!(w.score(), 25 + 8);
+        assert_eq!(w.tick(), 12 + 8); // 25 >> 1 = 12
+        assert_eq!(w.tick(), 10);
+    }
+
+    #[test]
+    fn burst_heat_survives_a_gap() {
+        // The no-thrash property at the arithmetic level: a 300-unit
+        // burst still scores above a 10-unit steady stream one gap later.
+        let mut bursty = DecayWindow::new();
+        let mut steady = DecayWindow::new();
+        bursty.observe(300);
+        steady.observe(10);
+        assert_eq!(bursty.tick(), 300);
+        assert_eq!(steady.tick(), 10);
+        // Gap tick: bursty observes nothing, steady keeps its trickle.
+        steady.observe(10);
+        assert_eq!(bursty.tick(), 150);
+        assert_eq!(steady.tick(), 15);
+        assert!(bursty.score() > steady.score());
+    }
+
+    #[test]
+    fn steady_load_converges_below_twice_the_rate() {
+        let mut w = DecayWindow::new();
+        for _ in 0..64 {
+            w.observe(100);
+            let v = w.tick();
+            assert!(v < 200, "geometric series must cap below 2c, got {v}");
+        }
+        assert!(w.score() >= 199, "and converge to just under it");
+    }
+
+    #[test]
+    fn observations_accumulate_between_ticks() {
+        let mut w = DecayWindow::new();
+        w.observe(3);
+        w.observe(4);
+        assert_eq!(w.tick(), 7);
+    }
+
+    #[test]
+    fn saturates_instead_of_overflowing() {
+        let mut w = DecayWindow::new();
+        w.observe(u64::MAX);
+        w.observe(u64::MAX);
+        assert_eq!(w.score(), u64::MAX);
+        assert_eq!(w.tick(), u64::MAX);
+        assert_eq!(w.tick(), u64::MAX / 2);
+    }
+}

@@ -25,8 +25,18 @@
 //!   (never splitting one, so bit-exactness is untouched). A background
 //!   rebalancer ([`ShardConfig::rebalance_interval`]) re-replicates hot
 //!   whole tables and retires cold replicas at runtime from
-//!   [`ShardedEngine::observed_loads`], swapping routing atomically
-//!   between batches.
+//!   [`ShardedEngine::observed_loads`] — ranked by exponential-decay
+//!   [`load::DecayWindow`]s so bursty tables do not thrash replicas —
+//!   swapping routing atomically between batches. Each shard worker
+//!   parks on its own wakeup condvar; producers notify only the shards
+//!   that received work (all of them when stealing is on), with no idle
+//!   polling tick.
+//! * [`store`] — tiered slice storage: with
+//!   [`ShardConfig::resident_budget`] set, cold slices spill to disk in
+//!   their native quantized encoding (via `table::serial`) and promote
+//!   back on touch, so a served model no longer has to fit its bytes in
+//!   RAM. Heat comes from the same decay windows as the rebalancer;
+//!   transitions are bit-exact by construction.
 //!
 //! Equivalence contract: sharded output equals the unsharded
 //! `TableSet::pool` result **bit for bit, always** — every shard count,
@@ -50,14 +60,19 @@
 
 pub mod engine;
 pub mod exec;
+pub mod load;
 pub mod partition;
 pub mod slice;
+pub mod store;
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 pub use engine::{RebalanceStats, ShardedEngine};
+pub use load::DecayWindow;
 pub use partition::{plan_partitions, RowPartition, TablePartition};
 pub use slice::TableSlice;
+pub use store::{SliceCell, SliceStore, SliceTier, SpillConfig, SpillHandle, StoreStats};
 
 /// Configuration of the row-wise sharded execution engine.
 #[derive(Clone, Debug)]
@@ -96,6 +111,21 @@ pub struct ShardConfig {
     /// disables the thread; [`ShardedEngine::rebalance_once`] drives the
     /// same pass manually.
     pub rebalance_interval: Option<Duration>,
+    /// Tiered storage: cap the bytes of slice payload resident in RAM.
+    /// When residency exceeds the budget, the engine demotes the coldest
+    /// slices (exponential-decay touch heat, the same windows the
+    /// rebalancer ranks by) to spill files in their native quantized
+    /// encoding, and promotes them back on touch. `None` (default) keeps
+    /// everything resident. Serving stays bit-exact across tier
+    /// transitions — a reloaded slice is byte-identical by construction.
+    /// [`ShardedEngine::start`] panics if the spill directory cannot be
+    /// created (callers wanting a soft failure should pre-create it).
+    pub resident_budget: Option<usize>,
+    /// Directory for spill files. `None` with a budget set falls back to
+    /// a per-engine directory under the system temp dir. Setting only
+    /// the directory (no budget) enables the spill machinery without
+    /// automatic demotion (explicit `spill_all` / ops use).
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for ShardConfig {
@@ -108,6 +138,8 @@ impl Default for ShardConfig {
             hot_loads: Vec::new(),
             steal: false,
             rebalance_interval: None,
+            resident_budget: None,
+            spill_dir: None,
         }
     }
 }

@@ -47,6 +47,15 @@ impl TableSlice {
         TableSlice { data: table, global_rows: 0..rows }
     }
 
+    /// Reassemble a slice from its payload table and the global row range
+    /// it covers. The spill-reload path (`shard::store`) uses this after
+    /// deserializing the payload via `table::serial`; the range must
+    /// match the payload's row count.
+    pub fn from_parts(data: AnyTable, global_rows: Range<usize>) -> TableSlice {
+        assert_eq!(data.rows(), global_rows.len(), "payload rows must match the range");
+        TableSlice { data, global_rows }
+    }
+
     /// Deep copy of this slice (same rows, same format, fresh storage).
     /// The runtime rebalancer uses it to materialize a new whole-table
     /// replica from the home shard's slice; replicas are byte-identical
@@ -249,6 +258,31 @@ mod tests {
         let mut want = vec![0.0f32; 4];
         crate::coordinator::TableSet::new(vec![table]).pool(0, &[5, 9], &mut want);
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn from_parts_round_trips_through_serial() {
+        // The spill path: serialize the payload, reload, reassemble.
+        let t = EmbeddingTable::randn(20, 4, 5);
+        let slice = TableSlice::cut(&AnyTable::F32(t), 5..15);
+        let mut buf = Vec::new();
+        crate::table::serial::write_any(&mut buf, slice.table()).unwrap();
+        let back = crate::table::serial::read_any(&mut buf.as_slice()).unwrap();
+        let reloaded = TableSlice::from_parts(back, slice.global_rows());
+        assert_eq!(reloaded.rows(), slice.rows());
+        assert_eq!(reloaded.global_rows(), slice.global_rows());
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        slice.pool(&[0, 9, 3], &mut a);
+        reloaded.pool(&[0, 9, 3], &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "payload rows")]
+    fn from_parts_rejects_mismatched_range() {
+        let t = EmbeddingTable::randn(8, 4, 6);
+        TableSlice::from_parts(AnyTable::F32(t), 0..5);
     }
 
     #[test]

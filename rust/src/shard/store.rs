@@ -1,0 +1,997 @@
+//! Tiered slice storage: hot shard slices serve from RAM, cold ones
+//! spill to disk and promote back on touch.
+//!
+//! The paper shrinks embedding tables to ~14% of FP32 so production
+//! models fit in memory; this module takes the next capacity step — the
+//! served model no longer has to fit even its *quantized* bytes in RAM.
+//! Every placement entry is a [`SliceCell`] whose tier is either
+//! [`SliceTier::Resident`] (an `Arc<TableSlice>` in the table's native
+//! format) or [`SliceTier::Spilled`] (a [`SpillHandle`] naming an
+//! on-disk file). The [`SliceStore`] owns the policy:
+//!
+//! * **Spill format** — `[8B "EMBQSPL1"][global_lo u64][global_hi u64]
+//!   [payload_len u64][fnv1a64 u64][payload]` where the payload is the
+//!   slice's table in the exact `table::serial` container (`EMBQTBL1`),
+//!   so a spilled slice keeps its native quantized encoding (int4+tails,
+//!   codebook, fused, fp32) byte for byte. Headers, lengths, checksum,
+//!   and shape are all validated on load: a truncated or corrupted file
+//!   is a clean `io::Error`, never a panic.
+//! * **Write-once** — slices are immutable, so a slice is serialized at
+//!   most once; later demotions just drop the resident `Arc` and flip
+//!   the tier back to the existing file. A cell deletes its file on
+//!   drop (e.g. when the rebalancer retires a replica).
+//! * **Admission / eviction** — every slice is admitted resident
+//!   (startup carve, promotion, new replicas). Whenever residency
+//!   exceeds the byte budget, the store demotes the *coldest* resident
+//!   cells — ranked by the same exponential-decay
+//!   [`DecayWindow`](crate::shard::load::DecayWindow) heat the
+//!   rebalancer ranks tables by, ticked on the same cadence — until the
+//!   budget holds. The cell that triggered the promotion is evicted only
+//!   as a last resort (it is by definition the hottest thing in the
+//!   room), so the post-transition residency is always `<= budget`.
+//! * **Concurrency** — tier transitions serialize on the store's
+//!   registry mutex (promotion reads and demotion writes are cold-path
+//!   disk I/O); the hot path only ever takes a cell's tier `RwLock` for
+//!   the instant it takes to clone the resident `Arc`. In-flight
+//!   executions hold their own `Arc<TableSlice>` clones, so demoting a
+//!   slice mid-batch is safe — the memory is freed when the last
+//!   execution finishes.
+
+use std::fs::{self, File};
+use std::io::{self, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::time::{Duration, Instant};
+
+use crate::shard::load::DecayWindow;
+use crate::shard::slice::TableSlice;
+use crate::table::serial;
+use crate::util::sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison};
+
+const SPILL_MAGIC: &[u8; 8] = b"EMBQSPL1";
+/// magic + global_lo + global_hi + payload_len + checksum.
+const SPILL_HEADER_BYTES: u64 = 8 + 8 + 8 + 8 + 8;
+
+/// Fallback decay cadence: when no rebalancer drives [`SliceStore::tick`]
+/// (the `--resident-budget` without `--rebalance-interval` configuration),
+/// promotions tick the heat themselves at most this often, so eviction
+/// stays recency-weighted instead of silently degrading to all-time LFU.
+const HEAT_TICK_INTERVAL: Duration = Duration::from_secs(1);
+
+/// How long an external [`SliceStore::tick`] (a rebalance pass) keeps the
+/// promotion-path fallback stood down. While external ticks keep
+/// arriving inside this lease, the fallback never fires (one clock,
+/// never two); once they stop for a whole lease — e.g. a one-off manual
+/// `rebalance_once` poke on a budget-only engine — the fallback resumes,
+/// so the heat clock can never be frozen permanently.
+const EXTERNAL_CLOCK_LEASE: Duration = Duration::from_secs(5);
+
+/// Catch-up cap for the fallback clock: after an idle gap it applies one
+/// half-life per elapsed [`HEAT_TICK_INTERVAL`], at most this many (64
+/// halvings zero any u64, so a longer cap would be pure waste).
+const MAX_CATCHUP_TICKS: u32 = 64;
+
+/// Globally unique spill-file suffix, so engines sharing a directory
+/// (tests, multiple servers per process) can never collide or delete
+/// each other's files.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Tiered-storage configuration of one engine.
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Directory the spill files live in (created on start).
+    pub dir: PathBuf,
+    /// Resident-bytes budget across all slices. `usize::MAX` admits
+    /// everything and only spills on explicit demotion.
+    pub resident_budget: usize,
+    /// Remove `dir` itself on shutdown. Set for the per-run default
+    /// temp directory; an operator-supplied `--spill-dir` is left in
+    /// place (only the spill files inside it are deleted).
+    pub cleanup_dir: bool,
+}
+
+/// Where a spilled slice's bytes live on disk.
+#[derive(Clone, Debug)]
+pub struct SpillHandle {
+    path: PathBuf,
+    /// Total file bytes (header + payload) — the cost of a promotion.
+    file_len: u64,
+}
+
+impl SpillHandle {
+    /// The spill file's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Total file bytes (what a promotion reads back).
+    pub fn file_len(&self) -> u64 {
+        self.file_len
+    }
+}
+
+/// Which tier a slice currently lives in.
+pub enum SliceTier {
+    /// In RAM, serving directly.
+    Resident(Arc<TableSlice>),
+    /// On disk; a touch promotes it back.
+    Spilled(SpillHandle),
+}
+
+/// One placement entry: a slice's identity + metadata (always resident)
+/// and its tier (RAM or disk). Cells are shared by `Arc` across
+/// placement snapshots, so a promotion is visible to every snapshot at
+/// once.
+pub struct SliceCell {
+    shard: usize,
+    table: usize,
+    rows: usize,
+    dim: usize,
+    global_lo: usize,
+    /// Logical bytes when resident (the slice's native-format payload).
+    bytes: usize,
+    tier: RwLock<SliceTier>,
+    /// Spill-file path (assigned at admission; empty for untracked
+    /// cells, which never spill).
+    spill_path: PathBuf,
+    /// File bytes once written; 0 = never spilled (write-once marker).
+    file_len: AtomicU64,
+    /// Exponential-decay touch heat — same arithmetic as the
+    /// rebalancer's per-table windows, ticked on the same cadence.
+    heat: Mutex<DecayWindow>,
+    /// Untracked cells pin their slice here (the tier can never change),
+    /// giving the untiered engine a lock-free, clone-free resolution
+    /// path identical in cost to the pre-tiering design. `None` for
+    /// store-tracked cells.
+    pinned: Option<Arc<TableSlice>>,
+}
+
+impl SliceCell {
+    fn new(
+        shard: usize,
+        table: usize,
+        slice: TableSlice,
+        spill_path: PathBuf,
+        pin: bool,
+    ) -> SliceCell {
+        let range = slice.global_rows();
+        let rows = slice.rows();
+        let dim = slice.dim();
+        let bytes = slice.size_bytes();
+        let slice = Arc::new(slice);
+        SliceCell {
+            shard,
+            table,
+            rows,
+            dim,
+            global_lo: range.start,
+            bytes,
+            tier: RwLock::new(SliceTier::Resident(Arc::clone(&slice))),
+            spill_path,
+            file_len: AtomicU64::new(0),
+            heat: Mutex::new(DecayWindow::new()),
+            pinned: pin.then_some(slice),
+        }
+    }
+
+    /// A cell outside any store: always resident, never spills, and its
+    /// slice is [`SliceCell::pinned`] for lock-free resolution. The
+    /// engine uses these when tiered storage is not configured so the
+    /// placement type stays uniform without taxing the hot path.
+    pub fn untracked(shard: usize, table: usize, slice: TableSlice) -> SliceCell {
+        SliceCell::new(shard, table, slice, PathBuf::new(), true)
+    }
+
+    /// The untracked fast path: a plain borrow of the pinned slice.
+    /// `None` for store-tracked cells (their tier can change, so they
+    /// must go through `resident()`/`promote()`).
+    pub fn pinned(&self) -> Option<&TableSlice> {
+        self.pinned.as_deref()
+    }
+
+    /// Owning shard.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Table this cell slices.
+    pub fn table(&self) -> usize {
+        self.table
+    }
+
+    /// Rows held (tier-independent metadata — valid while spilled, which
+    /// is what lets routing validation run without touching disk).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Embedding dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Logical bytes when resident.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// The resident slice, if this cell is in the RAM tier.
+    pub fn resident(&self) -> Option<Arc<TableSlice>> {
+        match &*read_ignore_poison(&self.tier) {
+            SliceTier::Resident(s) => Some(Arc::clone(s)),
+            SliceTier::Spilled(_) => None,
+        }
+    }
+
+    /// Bytes this cell currently keeps in RAM (0 while spilled).
+    pub fn resident_bytes(&self) -> usize {
+        if self.is_resident() {
+            self.bytes
+        } else {
+            0
+        }
+    }
+
+    /// Is the cell serving from RAM right now?
+    pub fn is_resident(&self) -> bool {
+        matches!(&*read_ignore_poison(&self.tier), SliceTier::Resident(_))
+    }
+
+    /// Record `n` lookups against this cell (the spill policy's heat).
+    pub fn touch(&self, n: u64) {
+        lock_ignore_poison(&self.heat).observe(n);
+    }
+
+    /// Current heat estimate (decayed history + untied touches).
+    pub fn heat_score(&self) -> u64 {
+        lock_ignore_poison(&self.heat).score()
+    }
+
+    fn spill_handle(&self) -> Option<SpillHandle> {
+        match &*read_ignore_poison(&self.tier) {
+            SliceTier::Resident(_) => None,
+            SliceTier::Spilled(h) => Some(h.clone()),
+        }
+    }
+}
+
+impl Drop for SliceCell {
+    fn drop(&mut self) {
+        // Write-once files belong to exactly this cell (globally unique
+        // names), so the last placement snapshot dropping the cell may
+        // delete its spill file — retired replicas clean up after
+        // themselves.
+        if self.file_len.load(Ordering::Relaxed) > 0 {
+            let _ = fs::remove_file(&self.spill_path);
+        }
+    }
+}
+
+/// Cumulative tier-transition counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Spilled slices loaded back into RAM.
+    pub promotions: u64,
+    /// Resident slices demoted to the disk tier.
+    pub demotions: u64,
+    /// Bytes read from spill files by promotions.
+    pub spill_read_bytes: u64,
+    /// Bytes written to spill files by first-time demotions.
+    pub spill_write_bytes: u64,
+    /// Corrupt/unwritable spill files encountered (the slice keeps its
+    /// current tier; serving continues from the resident tier).
+    pub spill_errors: u64,
+}
+
+/// Per-shard transition counters (lock-free; merged into `ShardStats`
+/// snapshots by the engine).
+#[derive(Default)]
+struct ShardCounters {
+    promotions: AtomicU64,
+    demotions: AtomicU64,
+    spill_read_bytes: AtomicU64,
+    spill_errors: AtomicU64,
+}
+
+/// A per-shard snapshot of the store's transition counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardSpill {
+    /// Promotions of this shard's slices.
+    pub promotions: u64,
+    /// Demotions of this shard's slices.
+    pub demotions: u64,
+    /// Bytes promotions read back for this shard.
+    pub spill_read_bytes: u64,
+    /// Spill-file errors hit on this shard's slices.
+    pub spill_errors: u64,
+}
+
+/// The engine's tiered-storage manager: owns the spill directory, the
+/// resident-byte budget, and the registry of every admitted cell.
+pub struct SliceStore {
+    dir: PathBuf,
+    budget: usize,
+    /// Registry of admitted cells (weak: retired replicas drop out on
+    /// their own). The mutex doubles as the tier-transition lock —
+    /// promote/demote/enforce serialize on it; resident reads never
+    /// take it.
+    cells: Mutex<Vec<Weak<SliceCell>>>,
+    per_shard: Vec<ShardCounters>,
+    spill_write_bytes: AtomicU64,
+    /// When the heat last decayed (rebalancer tick or the promotion-path
+    /// fallback cadence).
+    last_tick: Mutex<Instant>,
+    /// Promotion-path decay cadence. `None` when a rebalancer drives
+    /// [`SliceStore::tick`] — the spill heat must cool on *its* cadence,
+    /// not faster, or replicas of a table the rebalancer still ranks hot
+    /// would cool ahead of the table score that justified them.
+    fallback_tick: Option<Duration>,
+    /// When an external [`SliceStore::tick`] (manual `rebalance_once`
+    /// passes included) last drove the decay. While one arrived within
+    /// [`EXTERNAL_CLOCK_LEASE`], the promotion-path fallback stands down
+    /// so heat never double-decays; once external ticks stop, the lease
+    /// expires and the fallback resumes.
+    last_external_tick: Mutex<Option<Instant>>,
+    /// Remove the directory itself on drop (per-run default dirs only).
+    cleanup_dir: bool,
+}
+
+impl SliceStore {
+    /// Open (creating if needed) a store over `cfg.dir` for `num_shards`
+    /// shards. `rebalancer_ticks` says a rebalancer will drive
+    /// [`SliceStore::tick`]; without one, promotions tick the heat
+    /// themselves at most once per [`HEAT_TICK_INTERVAL`].
+    pub fn new(
+        cfg: &SpillConfig,
+        num_shards: usize,
+        rebalancer_ticks: bool,
+    ) -> io::Result<SliceStore> {
+        fs::create_dir_all(&cfg.dir)?;
+        Ok(SliceStore {
+            dir: cfg.dir.clone(),
+            budget: cfg.resident_budget,
+            cells: Mutex::new(Vec::new()),
+            per_shard: (0..num_shards).map(|_| ShardCounters::default()).collect(),
+            spill_write_bytes: AtomicU64::new(0),
+            last_tick: Mutex::new(Instant::now()),
+            fallback_tick: (!rebalancer_ticks).then_some(HEAT_TICK_INTERVAL),
+            last_external_tick: Mutex::new(None),
+            cleanup_dir: cfg.cleanup_dir,
+        })
+    }
+
+    /// The resident-bytes budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Admit a freshly carved (or duplicated) slice: resident, tracked,
+    /// with a globally unique spill path reserved for its first
+    /// demotion.
+    pub fn admit(&self, shard: usize, table: usize, slice: TableSlice) -> Arc<SliceCell> {
+        let name = format!(
+            "slice-{}-{}.spill",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        let cell = Arc::new(SliceCell::new(shard, table, slice, self.dir.join(name), false));
+        lock_ignore_poison(&self.cells).push(Arc::downgrade(&cell));
+        cell
+    }
+
+    /// Bytes currently resident across every tracked cell (including
+    /// cells only reachable from older placement snapshots — memory is
+    /// memory, so the budget counts them too).
+    pub fn resident_bytes(&self) -> usize {
+        lock_ignore_poison(&self.cells)
+            .iter()
+            .filter_map(Weak::upgrade)
+            .map(|c| c.resident_bytes())
+            .sum()
+    }
+
+    /// Load `cell` back into the RAM tier and return its slice,
+    /// demoting the coldest resident cells if the budget overflows. The
+    /// fast path (already resident) takes no store lock, and the spill
+    /// file is read **outside** the registry lock too, so promotions of
+    /// different cells proceed in parallel (two threads racing on the
+    /// *same* cell may duplicate the read; the loser discards its copy
+    /// and only the installer counts). A corrupt or truncated spill
+    /// file is a clean error: the cell stays spilled, `spill_errors`
+    /// counts it, and everything resident keeps serving.
+    pub fn promote(&self, cell: &Arc<SliceCell>) -> io::Result<Arc<TableSlice>> {
+        loop {
+            if let Some(s) = cell.resident() {
+                return Ok(s);
+            }
+            // The tier can flip between the check above and here; retry
+            // on the (rare) mid-transition read.
+            let Some(handle) = cell.spill_handle() else { continue };
+            let loaded = match read_spill(&handle, cell) {
+                Ok(slice) => Arc::new(slice),
+                Err(e) => {
+                    self.per_shard[cell.shard].spill_errors.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            };
+            let mut reg = lock_ignore_poison(&self.cells);
+            self.maybe_tick_locked(&mut reg);
+            if let Some(s) = cell.resident() {
+                return Ok(s); // lost the race: another thread installed first
+            }
+            *write_ignore_poison(&cell.tier) = SliceTier::Resident(Arc::clone(&loaded));
+            self.per_shard[cell.shard].promotions.fetch_add(1, Ordering::Relaxed);
+            self.per_shard[cell.shard]
+                .spill_read_bytes
+                .fetch_add(handle.file_len, Ordering::Relaxed);
+            self.enforce_locked(&mut reg, Some(cell));
+            return Ok(loaded);
+        }
+    }
+
+    /// Demote coldest-first until residency fits the budget. Called
+    /// after startup carving and after rebalance passes (which admit new
+    /// replicas resident).
+    pub fn enforce(&self) {
+        let mut reg = lock_ignore_poison(&self.cells);
+        self.enforce_locked(&mut reg, None);
+    }
+
+    /// Demote every resident cell (tests and "drop caches" operations);
+    /// returns how many were demoted. Stops at the first write failure —
+    /// which is counted in `spill_errors` like every other unwritable
+    /// spill file, so the monitoring signal stays consistent with the
+    /// enforcement path.
+    pub fn demote_all(&self) -> io::Result<usize> {
+        let mut reg = lock_ignore_poison(&self.cells);
+        reg.retain(|w| w.strong_count() > 0);
+        let live: Vec<Arc<SliceCell>> = reg.iter().filter_map(Weak::upgrade).collect();
+        let mut demoted = 0usize;
+        for cell in &live {
+            match self.demote_cell(cell) {
+                Ok(0) => {}
+                Ok(_) => demoted += 1,
+                Err(e) => {
+                    self.per_shard[cell.shard].spill_errors.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(demoted)
+    }
+
+    /// Advance every cell's decay window one tick — rebalance passes
+    /// (background thread or manual `rebalance_once`) call this on their
+    /// cadence, so spill heat and replication heat cool at the same
+    /// rate. Each call renews the [`EXTERNAL_CLOCK_LEASE`] standing the
+    /// promotion-path fallback down: one clock, never two — but a
+    /// one-off poke cannot freeze the heat clock forever.
+    pub fn tick(&self) {
+        *lock_ignore_poison(&self.last_external_tick) = Some(Instant::now());
+        let mut reg = lock_ignore_poison(&self.cells);
+        self.tick_locked(&mut reg, 1);
+    }
+
+    fn tick_locked(&self, reg: &mut Vec<Weak<SliceCell>>, ticks: u32) {
+        *lock_ignore_poison(&self.last_tick) = Instant::now();
+        reg.retain(|w| w.strong_count() > 0);
+        for cell in reg.iter().filter_map(Weak::upgrade) {
+            let mut heat = lock_ignore_poison(&cell.heat);
+            for _ in 0..ticks {
+                heat.tick();
+            }
+        }
+    }
+
+    /// The promotion-path decay fallback: without a rebalancer driving
+    /// [`SliceStore::tick`], heat would otherwise accumulate forever and
+    /// eviction would degrade to all-time LFU — dead-but-once-hot slices
+    /// squatting the budget while the live working set churns. Inactive
+    /// (`fallback_tick: None`) when a rebalancer owns the cadence, or
+    /// while an external tick arrived within its lease. Applies one
+    /// half-life per elapsed interval (capped), so heat decays by wall
+    /// clock — an hour-long idle gap costs an hour of halvings, not one.
+    fn maybe_tick_locked(&self, reg: &mut Vec<Weak<SliceCell>>) {
+        let Some(interval) = self.fallback_tick else { return };
+        let external = lock_ignore_poison(&self.last_external_tick)
+            .is_some_and(|t| t.elapsed() < EXTERNAL_CLOCK_LEASE);
+        if external {
+            return; // an external clock is driving the decay right now
+        }
+        let elapsed = lock_ignore_poison(&self.last_tick).elapsed();
+        let due = (elapsed.as_nanos() / interval.as_nanos().max(1))
+            .min(MAX_CATCHUP_TICKS as u128) as u32;
+        if due > 0 {
+            self.tick_locked(reg, due);
+        }
+    }
+
+    /// Cumulative transition counters, totaled across shards.
+    pub fn stats(&self) -> StoreStats {
+        let mut s = StoreStats {
+            spill_write_bytes: self.spill_write_bytes.load(Ordering::Relaxed),
+            ..StoreStats::default()
+        };
+        for c in &self.per_shard {
+            s.promotions += c.promotions.load(Ordering::Relaxed);
+            s.demotions += c.demotions.load(Ordering::Relaxed);
+            s.spill_read_bytes += c.spill_read_bytes.load(Ordering::Relaxed);
+            s.spill_errors += c.spill_errors.load(Ordering::Relaxed);
+        }
+        s
+    }
+
+    /// One shard's transition counters (merged into `ShardStats`).
+    pub fn shard_spill(&self, shard: usize) -> ShardSpill {
+        let c = &self.per_shard[shard];
+        ShardSpill {
+            promotions: c.promotions.load(Ordering::Relaxed),
+            demotions: c.demotions.load(Ordering::Relaxed),
+            spill_read_bytes: c.spill_read_bytes.load(Ordering::Relaxed),
+            spill_errors: c.spill_errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Eviction pass under the registry lock: demote coldest-first until
+    /// `resident <= budget`. `keep` (the just-promoted cell) is evicted
+    /// only as a last resort, so a promotion can never be undone by its
+    /// own enforcement unless the budget cannot hold even one slice.
+    fn enforce_locked(&self, reg: &mut Vec<Weak<SliceCell>>, keep: Option<&Arc<SliceCell>>) {
+        reg.retain(|w| w.strong_count() > 0);
+        let live: Vec<Arc<SliceCell>> = reg.iter().filter_map(Weak::upgrade).collect();
+        let mut resident: usize = live.iter().map(|c| c.resident_bytes()).sum();
+        if resident <= self.budget {
+            return;
+        }
+        let mut victims: Vec<&Arc<SliceCell>> =
+            live.iter().filter(|c| c.is_resident()).collect();
+        // Coldest first, deterministic tie-break; the protected cell
+        // sorts last. Keys are cached: concurrent touches must not feed
+        // the sort an inconsistent ordering.
+        victims.sort_by_cached_key(|c| {
+            let protected = keep.is_some_and(|k| Arc::ptr_eq(k, *c));
+            (protected, c.heat_score(), c.shard, c.table, c.global_lo)
+        });
+        for v in victims {
+            if resident <= self.budget {
+                break;
+            }
+            match self.demote_cell(v) {
+                Ok(freed) => resident -= freed,
+                Err(_) => {
+                    // Unwritable spill file (disk full, bad dir): the
+                    // slice stays resident — over budget beats serving
+                    // nothing — and the error is counted.
+                    self.per_shard[v.shard].spill_errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Move one cell to the disk tier (writing its spill file the first
+    /// time); returns the resident bytes freed (0 if already spilled).
+    /// Caller holds the registry lock — every tier *transition* does, so
+    /// the tier cannot flip between the read below and the final swap —
+    /// but the victim's tier lock is NOT held across the file write:
+    /// lookups touching the victim keep serving the resident slice for
+    /// the whole (one-time, write-once) serialization and only wait out
+    /// the brief pointer swap at the end.
+    fn demote_cell(&self, cell: &Arc<SliceCell>) -> io::Result<usize> {
+        let Some(slice) = cell.resident() else { return Ok(0) };
+        let mut file_len = cell.file_len.load(Ordering::Relaxed);
+        if file_len == 0 {
+            file_len = match write_spill(&cell.spill_path, &slice) {
+                Ok(n) => n,
+                Err(e) => {
+                    // A half-written file must not linger: it would leak
+                    // (Drop only deletes when file_len > 0) and block the
+                    // spill directory's removal on shutdown.
+                    let _ = fs::remove_file(&cell.spill_path);
+                    return Err(e);
+                }
+            };
+            cell.file_len.store(file_len, Ordering::Relaxed);
+            self.spill_write_bytes.fetch_add(file_len, Ordering::Relaxed);
+        }
+        *write_ignore_poison(&cell.tier) = SliceTier::Spilled(SpillHandle {
+            path: cell.spill_path.clone(),
+            file_len,
+        });
+        self.per_shard[cell.shard].demotions.fetch_add(1, Ordering::Relaxed);
+        Ok(cell.bytes)
+    }
+}
+
+impl Drop for SliceStore {
+    fn drop(&mut self) {
+        // Only per-run default directories are removed (and only once
+        // every cell — so every spill file — is gone; a shared directory
+        // with other live stores survives). An operator-supplied
+        // --spill-dir belongs to the operator and stays in place.
+        if self.cleanup_dir {
+            let _ = fs::remove_dir(&self.dir);
+        }
+    }
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn bad(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("corrupt spill file: {what}"))
+}
+
+/// Serialize `slice` to `path` in the spill container; returns the file
+/// length. The payload is the slice's table in its native `table::serial`
+/// encoding, framed with the global row range and an FNV-1a checksum.
+fn write_spill(path: &Path, slice: &TableSlice) -> io::Result<u64> {
+    let mut payload = Vec::new();
+    serial::write_any(&mut payload, slice.table())?;
+    let range = slice.global_rows();
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(SPILL_MAGIC)?;
+    w.write_all(&(range.start as u64).to_le_bytes())?;
+    w.write_all(&(range.end as u64).to_le_bytes())?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(&fnv1a64(&payload).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(SPILL_HEADER_BYTES + payload.len() as u64)
+}
+
+/// Load and validate a spill file against the cell that owns it. Every
+/// failure mode — wrong magic, truncation, length mismatch, checksum
+/// mismatch, shape mismatch — is a clean `InvalidData`/`UnexpectedEof`
+/// error, never a panic.
+fn read_spill(handle: &SpillHandle, cell: &SliceCell) -> io::Result<TableSlice> {
+    let mut f = File::open(&handle.path)?;
+    let actual_len = f.metadata()?.len();
+    if actual_len != handle.file_len {
+        return Err(bad("file length changed since demotion"));
+    }
+    let mut header = [0u8; SPILL_HEADER_BYTES as usize];
+    f.read_exact(&mut header)?;
+    if &header[0..8] != SPILL_MAGIC {
+        return Err(bad("magic"));
+    }
+    let u64_at = |off: usize| {
+        u64::from_le_bytes(header[off..off + 8].try_into().expect("fixed-width header"))
+    };
+    let lo = u64_at(8) as usize;
+    let hi = u64_at(16) as usize;
+    let payload_len = u64_at(24);
+    let checksum = u64_at(32);
+    if lo != cell.global_lo || hi != cell.global_lo + cell.rows {
+        return Err(bad("global row range"));
+    }
+    if payload_len != actual_len - SPILL_HEADER_BYTES {
+        return Err(bad("payload length"));
+    }
+    let mut payload = vec![0u8; payload_len as usize];
+    f.read_exact(&mut payload)?;
+    if fnv1a64(&payload) != checksum {
+        return Err(bad("checksum"));
+    }
+    let table = serial::read_any(&mut payload.as_slice())?;
+    if table.rows() != cell.rows || table.dim() != cell.dim {
+        return Err(bad("payload shape"));
+    }
+    Ok(TableSlice::from_parts(table, lo..hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GreedyQuantizer;
+    use crate::table::serial::AnyTable;
+    use crate::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+
+    fn tmp_store(name: &str, budget: usize) -> SliceStore {
+        let dir = std::env::temp_dir()
+            .join(format!("emberq_store_test_{name}_{}", std::process::id()));
+        let cfg = SpillConfig { dir, resident_budget: budget, cleanup_dir: true };
+        SliceStore::new(&cfg, 4, false).unwrap()
+    }
+
+    fn any_table(fmt: usize, rows: usize, dim: usize, seed: u64) -> AnyTable {
+        let t = EmbeddingTable::randn(rows, dim, seed);
+        match fmt {
+            0 => AnyTable::F32(t),
+            1 => AnyTable::Fused(t.quantize_fused(
+                &GreedyQuantizer::default(),
+                4,
+                ScaleBiasDtype::F16,
+            )),
+            2 => AnyTable::Codebook(
+                t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32),
+            ),
+            _ => AnyTable::Codebook(
+                t.quantize_codebook(CodebookKind::TwoTier { k: 3 }, ScaleBiasDtype::F16),
+            ),
+        }
+    }
+
+    #[test]
+    fn demote_promote_round_trip_every_format() {
+        let store = tmp_store("round_trip", usize::MAX);
+        for fmt in 0..4usize {
+            let table = any_table(fmt, 24, 8, 0x70 + fmt as u64);
+            let slice = TableSlice::cut(&table, 4..20);
+            let mut want = vec![0.0f32; 8];
+            slice.pool(&[0, 15, 7, 7], &mut want);
+            let cell = store.admit(fmt % 4, fmt, slice);
+            assert!(cell.is_resident());
+            assert_eq!(store.demote_all().unwrap(), 1, "fmt {fmt}");
+            assert!(!cell.is_resident());
+            assert!(cell.spill_handle().unwrap().path().exists());
+            let back = store.promote(&cell).unwrap();
+            assert!(cell.is_resident());
+            assert_eq!(back.rows(), 16);
+            assert_eq!(back.global_rows(), 4..20);
+            let mut got = vec![0.0f32; 8];
+            back.pool(&[0, 15, 7, 7], &mut got);
+            assert_eq!(got, want, "fmt {fmt}: reload must be bit-exact");
+            // Drop the cell before the next format so the write-once
+            // file is cleaned up.
+            let path = cell.spill_handle().map(|h| h.path().to_path_buf());
+            drop(back);
+            drop(cell);
+            if let Some(p) = path {
+                assert!(!p.exists(), "fmt {fmt}: dropped cell must delete its file");
+            }
+        }
+        let s = store.stats();
+        assert_eq!(s.promotions, 4);
+        assert_eq!(s.demotions, 4);
+        assert!(s.spill_read_bytes > 0 && s.spill_write_bytes > 0);
+        assert_eq!(s.spill_errors, 0);
+    }
+
+    #[test]
+    fn second_demotion_reuses_the_file() {
+        let store = tmp_store("write_once", usize::MAX);
+        let slice = TableSlice::cut(&any_table(1, 16, 8, 0x80), 0..16);
+        let cell = store.admit(0, 0, slice);
+        assert_eq!(store.demote_all().unwrap(), 1);
+        let written = store.stats().spill_write_bytes;
+        assert!(written > 0);
+        store.promote(&cell).unwrap();
+        assert_eq!(store.demote_all().unwrap(), 1);
+        assert_eq!(store.stats().spill_write_bytes, written, "write-once");
+        assert_eq!(store.stats().demotions, 2);
+    }
+
+    #[test]
+    fn budget_evicts_the_coldest_cell() {
+        // Three equal slices, budget for two: after touching two of them
+        // and enforcing, the untouched one must be the spilled one.
+        let slice = |seed| TableSlice::cut(&any_table(0, 32, 8, seed), 0..32);
+        let bytes = slice(1).size_bytes();
+        let store = tmp_store("coldest", 2 * bytes);
+        let a = store.admit(0, 0, slice(1));
+        let b = store.admit(1, 1, slice(2));
+        let c = store.admit(2, 2, slice(3));
+        a.touch(100);
+        c.touch(50);
+        store.enforce();
+        assert!(a.is_resident());
+        assert!(!b.is_resident(), "the cold cell spills");
+        assert!(c.is_resident());
+        assert!(store.resident_bytes() <= 2 * bytes);
+        // Touch b hard and promote: now the coldest of the others goes.
+        b.touch(500);
+        store.promote(&b).unwrap();
+        assert!(b.is_resident());
+        assert!(!c.is_resident(), "c (heat 50) is colder than a (heat 100)");
+        assert!(store.resident_bytes() <= store.budget());
+    }
+
+    #[test]
+    fn decay_tick_cools_spill_heat() {
+        let slice = |seed| TableSlice::cut(&any_table(0, 16, 4, seed), 0..16);
+        let bytes = slice(1).size_bytes();
+        let store = tmp_store("decay", bytes);
+        let a = store.admit(0, 0, slice(1));
+        let b = store.admit(1, 1, slice(2));
+        a.touch(1000); // old burst
+        for _ in 0..12 {
+            store.tick(); // 1000 decays to 0
+        }
+        b.touch(10); // fresh trickle beats fully decayed burst
+        store.enforce();
+        assert!(!a.is_resident());
+        assert!(b.is_resident());
+    }
+
+    #[test]
+    fn truncated_and_corrupt_files_are_clean_errors() {
+        let store = tmp_store("corrupt", usize::MAX);
+        let slice = TableSlice::cut(&any_table(1, 20, 16, 0x90), 0..20);
+        let cell = store.admit(0, 0, slice);
+        store.demote_all().unwrap();
+        let path = cell.spill_handle().unwrap().path().to_path_buf();
+        let good = fs::read(&path).unwrap();
+
+        // Truncation.
+        fs::write(&path, &good[..good.len() - 7]).unwrap();
+        assert!(store.promote(&cell).is_err());
+        assert!(!cell.is_resident());
+
+        // Payload bit flip (length intact, checksum must catch it).
+        let mut flipped = good.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        fs::write(&path, &flipped).unwrap();
+        let err = store.promote(&cell).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        // Wrong magic.
+        let mut wrong = good.clone();
+        wrong[0] = b'X';
+        fs::write(&path, &wrong).unwrap();
+        assert!(store.promote(&cell).is_err());
+
+        // Missing file entirely.
+        fs::remove_file(&path).unwrap();
+        assert!(store.promote(&cell).is_err());
+        assert_eq!(store.stats().spill_errors, 4);
+        assert_eq!(store.stats().promotions, 0);
+
+        // Restore the original bytes: the cell recovers fully.
+        fs::write(&path, &good).unwrap();
+        assert!(store.promote(&cell).is_ok());
+        assert!(cell.is_resident());
+    }
+
+    #[test]
+    fn untracked_cells_never_spill_and_are_pinned() {
+        let slice = TableSlice::cut(&any_table(0, 8, 4, 0xA0), 0..8);
+        let cell = SliceCell::untracked(0, 0, slice);
+        assert!(cell.is_resident());
+        assert_eq!(cell.resident_bytes(), cell.bytes());
+        assert_eq!(cell.rows(), 8);
+        assert_eq!(cell.dim(), 4);
+        // The untiered fast path: a plain borrow, no tier lock.
+        let pinned = cell.pinned().expect("untracked cells pin their slice");
+        assert_eq!(pinned.rows(), 8);
+        // Store-tracked cells are not pinned (their tier can change).
+        let store = tmp_store("pinned", usize::MAX);
+        let tracked = store.admit(0, 0, TableSlice::cut(&any_table(0, 8, 4, 0xA1), 0..8));
+        assert!(tracked.pinned().is_none());
+    }
+
+    #[test]
+    fn promotion_fallback_tick_decays_without_a_rebalancer() {
+        // Heat decays on the promotion path itself once the fallback
+        // interval elapses — the budget-without-rebalancer configuration
+        // must not degrade to all-time LFU.
+        let slice = |seed| TableSlice::cut(&any_table(0, 16, 4, seed), 0..16);
+        let bytes = slice(1).size_bytes();
+        let store = tmp_store("fallback_tick", bytes);
+        let a = store.admit(0, 0, slice(1));
+        let b = store.admit(1, 1, slice(2));
+        a.touch(1_000_000); // historically hot, then dead
+        store.enforce(); // b spills (a is hotter)
+        assert!(a.is_resident() && !b.is_resident());
+        // Rewind the clock instead of sleeping: make the fallback
+        // cadence consider a tick due, enough times that a's ancient
+        // heat fully decays below fresh traffic.
+        for _ in 0..25 {
+            *lock_ignore_poison(&store.last_tick) = Instant::now() - HEAT_TICK_INTERVAL;
+            let mut reg = lock_ignore_poison(&store.cells);
+            store.maybe_tick_locked(&mut reg);
+        }
+        b.touch(10);
+        store.promote(&b).unwrap();
+        assert!(b.is_resident(), "fresh traffic wins");
+        assert!(!a.is_resident(), "fully decayed history loses the budget");
+    }
+
+    #[test]
+    fn external_ticks_lease_the_fallback_down_but_not_forever() {
+        // Manual rebalance_once passes (no configured interval) also
+        // drive store.tick(); while they keep arriving, the
+        // promotion-path fallback must stand down or heat would decay on
+        // two clocks. But the stand-down is a *lease*: once external
+        // ticks stop for EXTERNAL_CLOCK_LEASE, the fallback resumes — a
+        // one-off rebalance poke on a budget-only engine must not freeze
+        // the heat clock for the rest of the process.
+        let store = tmp_store("lease", usize::MAX); // fallback armed
+        let a = store.admit(0, 0, TableSlice::cut(&any_table(0, 8, 4, 0xB1), 0..8));
+        a.touch(64);
+        store.tick(); // an external clock takes over
+        assert_eq!(a.heat_score(), 64);
+        *lock_ignore_poison(&store.last_tick) = Instant::now() - HEAT_TICK_INTERVAL;
+        {
+            let mut reg = lock_ignore_poison(&store.cells);
+            store.maybe_tick_locked(&mut reg);
+        }
+        assert_eq!(a.heat_score(), 64, "no fallback decay inside the lease");
+        // The external clock goes silent past its lease: the next
+        // promotion-path check decays again.
+        *lock_ignore_poison(&store.last_external_tick) =
+            Some(Instant::now() - EXTERNAL_CLOCK_LEASE);
+        *lock_ignore_poison(&store.last_tick) = Instant::now() - HEAT_TICK_INTERVAL;
+        {
+            let mut reg = lock_ignore_poison(&store.cells);
+            store.maybe_tick_locked(&mut reg);
+        }
+        assert_eq!(a.heat_score(), 32, "expired lease hands the clock back");
+    }
+
+    #[test]
+    fn fallback_catches_up_one_halving_per_elapsed_interval() {
+        // Heat decays by wall clock, not by promotion count: a long idle
+        // gap applies every missed half-life at once, so a dead-but-
+        // once-hot slice cannot outrank live traffic for dozens of
+        // subsequent evictions.
+        let store = tmp_store("catchup", usize::MAX);
+        let a = store.admit(0, 0, TableSlice::cut(&any_table(0, 8, 4, 0xB2), 0..8));
+        a.touch(1 << 20);
+        *lock_ignore_poison(&store.last_tick) = Instant::now() - 10 * HEAT_TICK_INTERVAL;
+        {
+            let mut reg = lock_ignore_poison(&store.cells);
+            store.maybe_tick_locked(&mut reg);
+        }
+        // The first catch-up tick folds the fresh burst (no halving),
+        // the other nine halve it: 2^20 >> 9.
+        assert_eq!(a.heat_score(), 1 << 11, "10 elapsed intervals, one catch-up pass");
+        // And an absurd gap is capped at 64 ticks (enough to zero this
+        // heat) instead of looping a million times.
+        *lock_ignore_poison(&store.last_tick) =
+            Instant::now() - 1_000_000 * HEAT_TICK_INTERVAL;
+        {
+            let mut reg = lock_ignore_poison(&store.cells);
+            store.maybe_tick_locked(&mut reg);
+        }
+        assert_eq!(a.heat_score(), 0, "capped catch-up still decays stale heat to zero");
+    }
+
+    #[test]
+    fn fallback_tick_is_inert_when_a_rebalancer_owns_the_cadence() {
+        // With rebalancer_ticks the spill heat must cool on the
+        // rebalancer's clock only, or replicas of a still-hot table
+        // would cool ahead of the table score that justified them.
+        let dir = std::env::temp_dir()
+            .join(format!("emberq_store_test_inert_{}", std::process::id()));
+        let cfg = SpillConfig { dir, resident_budget: usize::MAX, cleanup_dir: true };
+        let store = SliceStore::new(&cfg, 4, true).unwrap();
+        let a = store.admit(0, 0, TableSlice::cut(&any_table(0, 16, 4, 0xB0), 0..16));
+        a.touch(100);
+        *lock_ignore_poison(&store.last_tick) = Instant::now() - 10 * HEAT_TICK_INTERVAL;
+        let mut reg = lock_ignore_poison(&store.cells);
+        store.maybe_tick_locked(&mut reg);
+        drop(reg);
+        assert_eq!(a.heat_score(), 100, "no promotion-path decay");
+        store.tick(); // the rebalancer's tick folds and decays as usual
+        assert_eq!(a.heat_score(), 100);
+        store.tick();
+        assert_eq!(a.heat_score(), 50);
+    }
+
+    #[test]
+    fn promotion_protects_the_touched_cell() {
+        // Budget of one slice: promoting a spilled cell must evict the
+        // other resident cell, not immediately re-evict itself.
+        let slice = |seed| TableSlice::cut(&any_table(0, 16, 8, seed), 0..16);
+        let bytes = slice(1).size_bytes();
+        let store = tmp_store("protect", bytes);
+        let a = store.admit(0, 0, slice(1));
+        let b = store.admit(1, 1, slice(2));
+        a.touch(10);
+        store.enforce();
+        assert!(a.is_resident() && !b.is_resident());
+        store.promote(&b).unwrap();
+        assert!(b.is_resident(), "the freshly promoted cell stays");
+        assert!(!a.is_resident(), "the other one pays");
+        assert!(store.resident_bytes() <= bytes);
+    }
+}

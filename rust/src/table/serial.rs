@@ -167,6 +167,17 @@ pub fn write_codebook<W: Write>(w: &mut W, t: &CodebookTable) -> io::Result<()> 
     Ok(())
 }
 
+/// Serialize any table format (dispatch on the variant). The shard
+/// engine's spill files (`shard::store`) embed exactly this encoding, so
+/// a spilled slice is readable by the same machinery as a saved model.
+pub fn write_any<W: Write>(w: &mut W, t: &AnyTable) -> io::Result<()> {
+    match t {
+        AnyTable::F32(t) => write_f32(w, t),
+        AnyTable::Fused(t) => write_fused(w, t),
+        AnyTable::Codebook(t) => write_codebook(w, t),
+    }
+}
+
 /// Load any table format.
 pub fn read_any<R: Read>(r: &mut R) -> io::Result<AnyTable> {
     let mut magic = [0u8; 8];
@@ -313,6 +324,27 @@ mod tests {
                 assert_eq!(c.dequantize().data(), c2.dequantize().data());
             }
             _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn write_any_dispatches_per_format() {
+        let t = EmbeddingTable::randn(5, 8, 26);
+        for table in [
+            AnyTable::F32(t.clone()),
+            AnyTable::Fused(t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16)),
+            AnyTable::Codebook(t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32)),
+        ] {
+            let mut buf = Vec::new();
+            write_any(&mut buf, &table).unwrap();
+            let back = read_any(&mut buf.as_slice()).unwrap();
+            assert_eq!(back.rows(), table.rows());
+            assert_eq!(back.dim(), table.dim());
+            assert_eq!(
+                std::mem::discriminant(&back),
+                std::mem::discriminant(&table),
+                "format must survive the round trip"
+            );
         }
     }
 

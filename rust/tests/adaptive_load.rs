@@ -122,6 +122,101 @@ fn background_rebalancer_replicates_the_hottest_table() {
     assert_eq!(engine.lookup(&probe), before, "results survive re-replication bit-for-bit");
 }
 
+/// Drive `lookups` pooled lookups at table `t` (2 ids each).
+fn drive(engine: &ShardedEngine, num_tables: usize, rows: usize, t: usize, lookups: u32) {
+    for i in 0..lookups / 2 {
+        let ids = (0..num_tables)
+            .map(|tt| {
+                if tt == t {
+                    vec![i % rows as u32, (i * 7 + 1) % rows as u32]
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        let _ = engine.lookup(&Request { ids });
+    }
+}
+
+#[test]
+fn decayed_windows_do_not_thrash_bursty_replicas() {
+    // Table 0 is bursty (heavy traffic every other rebalance tick);
+    // table 1 trickles steadily. Under the old last-tick-window ranking
+    // every gap tick ranked table 0 stone cold — its replicas were
+    // retired and the next burst re-copied the full table, every other
+    // tick. The exponential-decay windows keep half the burst's heat
+    // across the gap, so after the first replication the placement must
+    // never churn again.
+    let engine = ShardedEngine::start(
+        fused_set(2, 64, 8, 0xAD06),
+        &ShardConfig {
+            num_shards: 2,
+            small_table_rows: usize::MAX, // whole tables: replication candidates
+            ..Default::default()
+        },
+    );
+    // Burst tick: table 0 runs hot and gets replicated.
+    drive(&engine, 2, 64, 0, 300);
+    drive(&engine, 2, 64, 1, 10);
+    assert!(engine.rebalance_once());
+    assert_eq!(engine.replica_shards(0).len(), 2, "burst table replicated");
+    let after_first = engine.rebalance_stats();
+    assert_eq!(after_first.replicas_added, 1);
+    // Alternate gap/burst ticks. Decayed heat (300 → 150 → 375 → ...)
+    // keeps table 0 the hottest whole table throughout, so no tick may
+    // retire it, re-add it, or replicate the trickle table instead.
+    for round in 0..6 {
+        if round % 2 == 1 {
+            drive(&engine, 2, 64, 0, 300); // burst is back
+        }
+        drive(&engine, 2, 64, 1, 10); // the steady trickle
+        engine.rebalance_once();
+        assert_eq!(
+            engine.replica_shards(0).len(),
+            2,
+            "round {round}: bursty table lost its replica on a gap tick"
+        );
+        assert_eq!(engine.replica_shards(1).len(), 1, "round {round}");
+    }
+    let stats = engine.rebalance_stats();
+    assert_eq!(
+        stats.replicas_added, after_first.replicas_added,
+        "no re-copies: decay must absorb the bursts"
+    );
+    assert_eq!(stats.replicas_retired, 0, "no retirements across burst gaps");
+}
+
+#[test]
+fn fully_decayed_heat_still_retires_replicas() {
+    // The flip side of no-thrash: once a table goes genuinely cold (its
+    // decayed heat reaches zero while other traffic continues), the
+    // quiet-tick backstop must still reclaim the replicas.
+    let engine = ShardedEngine::start(
+        fused_set(2, 64, 8, 0xAD07),
+        &ShardConfig {
+            num_shards: 2,
+            small_table_rows: usize::MAX,
+            ..Default::default()
+        },
+    );
+    drive(&engine, 2, 64, 0, 200);
+    assert!(engine.rebalance_once());
+    assert_eq!(engine.replica_shards(0).len(), 2);
+    // Shift all traffic to table 1: table 0's heat halves every tick and
+    // table 1 takes over the hot slot, retiring table 0's replica.
+    let mut retired = false;
+    for _ in 0..16 {
+        drive(&engine, 2, 64, 1, 120);
+        engine.rebalance_once();
+        if engine.replica_shards(0).len() == 1 {
+            retired = true;
+            break;
+        }
+    }
+    assert!(retired, "a genuinely cold table must eventually lose its replica");
+    assert_eq!(engine.replica_shards(1).len(), 2, "the new hot table took over");
+}
+
 #[test]
 fn server_survives_worker_panic_and_reports_it() {
     // A malformed id slipped past validation (engine called directly via

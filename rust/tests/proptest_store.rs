@@ -1,0 +1,172 @@
+//! Property tests for tiered slice storage: spill → reload → serve must
+//! be bit-exact vs. fully-resident serving for every table format
+//! (fp32, int4/f16, int8, rowwise codebook, two-tier codebook), across
+//! shard counts, placement regimes, and mid-stream demote/promote churn
+//! (hand-rolled property loops — the crate builds offline with no
+//! test-framework dependencies).
+
+use emberq::coordinator::TableSet;
+use emberq::data::trace::Request;
+use emberq::quant::AsymQuantizer;
+use emberq::shard::{ShardConfig, ShardedEngine};
+use emberq::table::serial::AnyTable;
+use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+use emberq::util::Rng;
+
+/// Deterministic table builder so the reference set and the engine's set
+/// hold identical contents (same idiom as proptest_shard.rs).
+fn build_tables(
+    seed: u64,
+    fmt: usize,
+    num_tables: usize,
+    rows: usize,
+    dim: usize,
+) -> Vec<AnyTable> {
+    (0..num_tables)
+        .map(|t| {
+            let tab = EmbeddingTable::randn(rows, dim, seed + 31 * t as u64);
+            match fmt {
+                0 => AnyTable::F32(tab),
+                1 => AnyTable::Fused(tab.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16)),
+                2 => AnyTable::Fused(tab.quantize_fused(&AsymQuantizer, 8, ScaleBiasDtype::F32)),
+                3 => AnyTable::Codebook(
+                    tab.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32),
+                ),
+                _ => {
+                    let k = (1 + t % 3).min(rows);
+                    AnyTable::Codebook(
+                        tab.quantize_codebook(CodebookKind::TwoTier { k }, ScaleBiasDtype::F16),
+                    )
+                }
+            }
+        })
+        .collect()
+}
+
+fn random_ids(rng: &mut Rng, rows: usize) -> Vec<u32> {
+    let len = rng.below(10); // may be empty
+    (0..len).map(|_| rng.below(rows) as u32).collect()
+}
+
+#[test]
+fn prop_spill_reload_serve_is_bit_exact_every_format() {
+    // Budget around a third of the carved bytes: slices churn between
+    // tiers constantly. Every lookup must equal the unsharded pool bit
+    // for bit — including right after `spill_all` (everything demoted
+    // mid-stream) and after rebalance passes.
+    let mut rng = Rng::new(0x5709);
+    for case in 0..60usize {
+        let fmt = case % 5;
+        let shards = 1 + (case % 4);
+        let num_tables = 1 + rng.below(3);
+        let rows = 8 + rng.below(80);
+        let dim = [4usize, 8, 16][rng.below(3)];
+        // Cover both placement regimes: whole tables and row-wise chunks.
+        let small_table_rows = if case % 2 == 0 { usize::MAX } else { 0 };
+        let seed = 0xD0_0000 + case as u64 * 101;
+        let reference = TableSet::new(build_tables(seed, fmt, num_tables, rows, dim));
+        let logical = reference.size_bytes();
+        let engine = ShardedEngine::start(
+            TableSet::new(build_tables(seed, fmt, num_tables, rows, dim)),
+            &ShardConfig {
+                num_shards: shards,
+                small_table_rows,
+                resident_budget: Some((logical / 3).max(1)),
+                ..Default::default()
+            },
+        );
+        let fw = engine.feature_width();
+        for round in 0..6 {
+            // Mid-stream churn: demote everything every other round, and
+            // run a rebalance pass (decay tick + possible re-replication)
+            // on round 3.
+            if round % 2 == 1 {
+                engine.spill_all().expect("demote-all must succeed");
+            }
+            if round == 3 {
+                let _ = engine.rebalance_once();
+            }
+            let reqs: Vec<Request> = (0..2)
+                .map(|_| Request {
+                    ids: (0..num_tables).map(|_| random_ids(&mut rng, rows)).collect(),
+                })
+                .collect();
+            let mut out = vec![1.0f32; reqs.len() * fw]; // stale garbage must vanish
+            engine.lookup_batch_into(&reqs, &mut out);
+            for (slot, req) in reqs.iter().enumerate() {
+                for (t, ids) in req.ids.iter().enumerate() {
+                    let mut want = vec![0.0f32; dim];
+                    reference.pool(t, ids, &mut want);
+                    assert_eq!(
+                        &out[slot * fw + t * dim..slot * fw + (t + 1) * dim],
+                        want.as_slice(),
+                        "case {case} round {round} slot {slot} table {t} \
+                         (fmt {fmt}, {shards} shards, rows {rows})"
+                    );
+                }
+            }
+        }
+        let stats = engine.store_stats().expect("tiered storage active");
+        assert_eq!(stats.spill_errors, 0, "case {case}");
+        assert!(stats.demotions > 0, "case {case}: churn must demote");
+        // Byte reconciliation: resident + spilled is the sum of every
+        // cell's bytes, so it covers the carved total exactly for
+        // fp32/fused/rowwise-codebook slices (all linear in rows). A
+        // two-tier codebook chunk additionally keeps the K small shared
+        // codebooks (~100 B each) plus sub-byte cluster-id rounding —
+        // bound that epsilon instead of demanding equality.
+        let resident: usize = engine.shard_bytes().iter().sum();
+        let covered = resident + engine.spilled_bytes();
+        let carved = logical + engine.replicated_bytes();
+        if fmt != 4 {
+            assert_eq!(covered, carved, "case {case} (fmt {fmt})");
+        } else {
+            assert!(covered >= carved, "case {case}");
+            assert!(
+                covered <= carved + shards * num_tables * 256,
+                "case {case}: two-tier epsilon blew up ({covered} vs {carved})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_budget_is_always_honored_at_rest() {
+    // After every batch (transitions quiesced), RAM-resident bytes must
+    // sit at or under the budget, for budgets from "one slice" up to
+    // "almost everything".
+    let mut rng = Rng::new(0x570A);
+    for case in 0..20usize {
+        let shards = 1 + (case % 3);
+        let rows = 30 + rng.below(60);
+        let seed = 0xE0_0000 + case as u64 * 7;
+        let reference = TableSet::new(build_tables(seed, 1, 3, rows, 8));
+        let logical = reference.size_bytes();
+        let budget = (logical * (1 + case % 4) / 4).max(1);
+        let engine = ShardedEngine::start(
+            TableSet::new(build_tables(seed, 1, 3, rows, 8)),
+            &ShardConfig {
+                num_shards: shards,
+                small_table_rows: usize::MAX,
+                resident_budget: Some(budget),
+                ..Default::default()
+            },
+        );
+        for i in 0..8 {
+            let req = Request {
+                ids: (0..3).map(|_| random_ids(&mut rng, rows)).collect(),
+            };
+            let got = engine.lookup(&req);
+            for (t, ids) in req.ids.iter().enumerate() {
+                let mut want = vec![0.0f32; 8];
+                reference.pool(t, ids, &mut want);
+                assert_eq!(&got[t * 8..(t + 1) * 8], want.as_slice(), "case {case} req {i}");
+            }
+            let resident: usize = engine.shard_bytes().iter().sum();
+            assert!(
+                resident <= budget,
+                "case {case} req {i}: resident {resident} over budget {budget}"
+            );
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Tiered slice storage, end to end: serving under a resident-bytes
+//! budget must be bit-identical to unlimited-budget serving on the same
+//! trace, the size report must honor the budget and reconcile resident +
+//! spilled bytes against the catalog, and corrupt spill files must
+//! degrade cleanly instead of panicking.
+
+use emberq::coordinator::{BatchPolicy, EmbeddingServer, ServerConfig, TableSet};
+use emberq::data::trace::{RequestTrace, TraceConfig};
+use emberq::quant::GreedyQuantizer;
+use emberq::table::serial::AnyTable;
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+
+fn fused_set(num_tables: usize, rows: usize, dim: usize, seed: u64) -> TableSet {
+    TableSet::new(
+        (0..num_tables)
+            .map(|t| {
+                let tab = EmbeddingTable::randn_sigma(rows, dim, 0.1, seed + 13 * t as u64);
+                AnyTable::Fused(tab.quantize_fused(
+                    &GreedyQuantizer::default(),
+                    4,
+                    ScaleBiasDtype::F16,
+                ))
+            })
+            .collect(),
+    )
+}
+
+fn trace(num_tables: usize, rows: usize, seed: u64) -> RequestTrace {
+    RequestTrace::generate(&TraceConfig {
+        requests: 120,
+        num_tables,
+        rows,
+        mean_pool: 6,
+        zipf_alpha: 1.2,
+        seed,
+    })
+}
+
+/// The acceptance bar: with `--resident-budget` set below the total
+/// table bytes, `serve_trace` output is bit-identical to the
+/// unlimited-budget run on the same trace, and the size report shows
+/// resident bytes <= budget.
+#[test]
+fn budgeted_serve_trace_is_bit_identical_and_within_budget() {
+    let seed = 0x7E1A;
+    let unlimited_set = fused_set(6, 600, 16, seed);
+    let budgeted_set = fused_set(6, 600, 16, seed);
+    let logical = unlimited_set.size_bytes();
+    let budget = logical * 2 / 5; // well below the table bytes
+    let batch = BatchPolicy { max_batch: 16, ..Default::default() };
+    let unlimited = EmbeddingServer::start(
+        unlimited_set,
+        ServerConfig {
+            num_shards: 3,
+            small_table_rows: usize::MAX,
+            batch,
+            ..Default::default()
+        },
+    );
+    let budgeted = EmbeddingServer::start(
+        budgeted_set,
+        ServerConfig {
+            num_shards: 3,
+            small_table_rows: usize::MAX,
+            batch,
+            resident_budget: Some(budget),
+            ..Default::default()
+        },
+    );
+    let tr = trace(6, 600, seed + 1);
+    // The replay's output, request by request, through the same batched
+    // path serve_trace drives.
+    let fw = unlimited.feature_width();
+    for chunk in tr.requests.chunks(16) {
+        let mut a = vec![0.0f32; chunk.len() * fw];
+        let mut b = vec![1.0f32; chunk.len() * fw]; // stale garbage must vanish
+        unlimited.lookup_batch_into(chunk, &mut a);
+        budgeted.lookup_batch_into(chunk, &mut b);
+        assert_eq!(a, b, "tiered serving must not move a bit of output");
+    }
+    // And the metrics replay itself accounts identically.
+    let mu = unlimited.serve_trace(&tr);
+    let mb = budgeted.serve_trace(&tr);
+    assert_eq!(mu.requests, mb.requests);
+    assert_eq!(mu.lookups, mb.lookups);
+    let report = budgeted.size_report();
+    assert_eq!(report.resident_budget, Some(budget));
+    assert!(
+        report.engine_bytes <= budget,
+        "resident {} B exceeds the {budget} B budget",
+        report.engine_bytes
+    );
+    assert_eq!(report.engine_bytes + report.spilled_bytes, logical, "tiers reconcile");
+    assert!(report.spilled_bytes > 0, "a sub-logical budget must spill something");
+    let stats = budgeted.store_stats().expect("tiered storage active");
+    assert!(stats.promotions > 0, "the spill path must actually execute");
+    assert_eq!(stats.spill_errors, 0);
+    // Per-shard tier counters flow into the replay metrics snapshot.
+    let per_shard: u64 = mb.per_shard.iter().map(|s| s.promotions).sum();
+    assert!(per_shard > 0, "serve_trace window must see promotions");
+    assert!(budgeted.stats_text().contains("spilled"), "{}", budgeted.stats_text());
+}
+
+/// Resident + spilled bytes reconcile with the catalog's logical totals
+/// as slices move between tiers (fused slices carve byte-exactly).
+#[test]
+fn size_report_reconciles_with_catalog_across_transitions() {
+    let set = fused_set(4, 512, 8, 0x7E2A);
+    let server = EmbeddingServer::start(
+        set,
+        ServerConfig {
+            num_shards: 2,
+            small_table_rows: usize::MAX,
+            resident_budget: Some(usize::MAX >> 1), // store on, nothing forced out
+            ..Default::default()
+        },
+    );
+    let logical = server.catalog().table_bytes();
+    let check = |when: &str| {
+        let r = server.size_report();
+        assert_eq!(
+            r.engine_bytes + r.spilled_bytes,
+            logical + r.replicated_bytes,
+            "{when}: resident {} + spilled {} must reconcile with catalog {} + replicas {}",
+            r.engine_bytes,
+            r.spilled_bytes,
+            logical,
+            r.replicated_bytes
+        );
+        assert_eq!(r.per_shard_bytes.iter().sum::<usize>(), r.engine_bytes, "{when}");
+    };
+    check("fresh");
+    let tr = trace(4, 512, 0x7E2B);
+    let _ = server.serve_trace(&tr);
+    check("after traffic");
+    let _ = server.rebalance_once(); // may replicate the Zipf-hot table
+    check("after a rebalance pass");
+    server.validate_routing().expect("routing stays valid with tiering on");
+}
+
+/// A corrupt or truncated spill file is a clean error: the touched
+/// segment is zeroed and counted, no panic escapes, and every resident
+/// slice keeps serving bit-exactly.
+#[test]
+fn corrupt_spill_files_degrade_cleanly() {
+    let spill_dir = std::env::temp_dir()
+        .join(format!("emberq_tiered_corrupt_{}", std::process::id()));
+    let reference = fused_set(3, 200, 8, 0x7E3A);
+    let set = fused_set(3, 200, 8, 0x7E3A);
+    let per_table = set.size_bytes() / 3;
+    let server = EmbeddingServer::start(
+        set,
+        ServerConfig {
+            num_shards: 2,
+            small_table_rows: usize::MAX,
+            // Budget for exactly two tables: the coldest third spills.
+            resident_budget: Some(2 * per_table),
+            spill_dir: Some(spill_dir.clone()),
+            ..Default::default()
+        },
+    );
+    // Find which table spilled by probing the report.
+    assert_eq!(server.size_report().spilled_bytes, per_table);
+    // Garble every spill file on disk.
+    let mut garbled = 0usize;
+    for entry in std::fs::read_dir(&spill_dir).unwrap() {
+        let path = entry.unwrap().path();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        garbled += 1;
+    }
+    assert!(garbled > 0, "budget must have produced spill files");
+    // Touch all three tables. The spilled one's segment comes back
+    // zeroed (clean degradation); the resident ones stay bit-exact.
+    let req = emberq::data::trace::Request {
+        ids: vec![vec![0, 199], vec![5, 5], vec![17]],
+    };
+    let got = server.lookup(&req);
+    let mut zeroed_segments = 0;
+    for (t, ids) in req.ids.iter().enumerate() {
+        let mut want = vec![0.0f32; 8];
+        reference.pool(t, ids, &mut want);
+        let seg = &got[t * 8..(t + 1) * 8];
+        if seg == want.as_slice() {
+            continue;
+        }
+        assert!(seg.iter().all(|&v| v == 0.0), "table {t}: degraded segment must be zeroed");
+        zeroed_segments += 1;
+    }
+    assert_eq!(zeroed_segments, 1, "exactly the spilled table degrades");
+    let stats = server.store_stats().expect("tiered");
+    assert!(stats.spill_errors > 0, "the corrupt file must be counted");
+    let per_shard = server.shard_stats().expect("sharded");
+    assert_eq!(
+        per_shard.iter().map(|s| s.spill_errors).sum::<u64>(),
+        stats.spill_errors
+    );
+    assert_eq!(per_shard.iter().map(|s| s.panics).sum::<u64>(), 0, "no panics");
+    // The stats text renders the error without wedging anything.
+    assert!(server.stats_text().contains("spill errors"));
+    drop(server);
+    let _ = std::fs::remove_dir_all(&spill_dir);
+}
