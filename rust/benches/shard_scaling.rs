@@ -32,7 +32,17 @@
 //! cargo bench --bench shard_scaling -- --tiny  # CI smoke budget
 //! cargo bench --bench shard_scaling -- --tiny --skewed  # adaptive arms
 //! cargo bench --bench shard_scaling -- --tiny --spill   # tiered arms
+//! cargo bench --bench shard_scaling -- --tiny --spill-async  # sync vs async I/O
 //! ```
+//!
+//! `--spill-async` isolates the async spill I/O engine: row-wise
+//! chunked tables under a byte budget, with a `spill_all` storm before
+//! every measured pass so each batch pays promote stalls. The `sync`
+//! arm runs spill I/O inline (`spill_io_threads: 0` — streaming and
+//! off-lock, but no overlap); the `async` arm uses the background pool
+//! plus prefetching. Reported per arm: batch p50/p99 (the promote-stall
+//! distribution) and promotion/prefetch/stream counters, bit-exactness
+//! asserted across arms.
 
 use emberq::coordinator::{LatencyHistogram, ShardStats, TableSet};
 use emberq::data::trace::Request;
@@ -51,6 +61,10 @@ const POOL: usize = 100;
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let tiny = std::env::args().any(|a| a == "--tiny");
+    if std::env::args().any(|a| a == "--spill-async") {
+        run_spill_async(tiny, quick);
+        return;
+    }
     if std::env::args().any(|a| a == "--spill") {
         run_spill(tiny, quick);
         return;
@@ -400,5 +414,124 @@ fn run_spill(tiny: bool, quick: bool) {
         "\nTiered check: the spill arm serves the same bits as the resident arm \
          while holding only the budget's bytes in RAM (Zipf-hot tables resident, \
          cold tail on disk)."
+    );
+}
+
+/// Sync-vs-async spill I/O: identical budgeted workload, promote stalls
+/// forced by a `spill_all` storm before every measured pass. The sync
+/// arm demotes inline (no pool, no prefetch); the async arm overlaps
+/// demote writes and promote reads on the background pool.
+fn run_spill_async(tiny: bool, quick: bool) {
+    let (num_tables, rows, dim, requests, reps) = if tiny {
+        (4usize, 4_000usize, 32usize, 200usize, 2usize)
+    } else if quick {
+        (4, 16_000, 64, 800, 3)
+    } else {
+        (6, 80_000, 64, 3_000, 5)
+    };
+    let max_batch = 16usize;
+    let shards = 4usize;
+    let fp32: Vec<EmbeddingTable> = (0..num_tables)
+        .map(|t| EmbeddingTable::randn_sigma(rows, dim, 0.1, 0x6A00 + t as u64))
+        .collect();
+    let mk_set = || {
+        TableSet::new(
+            fp32.iter()
+                .map(|t| AnyTable::Fused(t.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16)))
+                .collect(),
+        )
+    };
+    let mut prebuilt = Some(mk_set());
+    let logical = prebuilt.as_ref().expect("prebuilt set").size_bytes();
+    let budget = logical * 45 / 100;
+    // Spanning pooled lookups over row-wise chunks: after a spill_all,
+    // each segment touches several spilled chunks — exactly the shape
+    // the overlapping prefetch reads exist for.
+    let mut rng = Rng::new(0x6A6A);
+    let reqs: Vec<Request> = (0..requests)
+        .map(|_| Request {
+            ids: (0..num_tables)
+                .map(|_| (0..POOL / 2).map(|_| rng.below(rows) as u32).collect())
+                .collect(),
+        })
+        .collect();
+    println!(
+        "async-spill workload: {num_tables} row-wise INT4 tables × {rows} rows × d={dim} \
+         ({logical} B), budget {budget} B (~45%), spill_all storm before every pass"
+    );
+    let mut baseline: Option<Vec<f32>> = None;
+    for (label, io_threads, prefetch_window) in [("sync", 0usize, 0usize), ("async", 2, 2)] {
+        let engine = ShardedEngine::start(
+            prebuilt.take().unwrap_or_else(mk_set),
+            &ShardConfig {
+                num_shards: shards,
+                small_table_rows: 0, // row-wise chunks everywhere
+                resident_budget: Some(budget),
+                spill_io_threads: io_threads,
+                prefetch_window,
+                ..Default::default()
+            },
+        );
+        let fw = engine.feature_width();
+        let mut out = vec![0.0f32; max_batch * fw];
+        // Warm once so the write-once spill files exist before timing:
+        // the measured passes then isolate promote stalls + tier flips,
+        // not first-time serialization cost.
+        for batch in reqs.chunks(max_batch) {
+            engine.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
+        }
+        engine.spill_all().expect("pre-bench demote-all");
+        let mut hist = LatencyHistogram::new();
+        for _ in 0..reps {
+            engine.spill_all().expect("storm demote-all");
+            for batch in reqs.chunks(max_batch) {
+                let t0 = std::time::Instant::now();
+                engine.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
+                hist.record(t0.elapsed());
+            }
+        }
+        // Bit-exactness across arms: async I/O must not move a bit.
+        let first = &reqs[..max_batch];
+        let mut check = vec![0.0f32; max_batch * fw];
+        engine.lookup_batch_into(first, &mut check);
+        match &baseline {
+            None => baseline = Some(check),
+            Some(b) => assert_eq!(b, &check, "async arm diverged from sync arm"),
+        }
+        let resident: usize = engine.shard_bytes().iter().sum();
+        assert!(resident <= budget, "budget violated: {resident} > {budget}");
+        let p50 = hist.quantile(0.50).as_nanos() as f64 / 1e6;
+        let p99 = hist.quantile(0.99).as_nanos() as f64 / 1e6;
+        let st = engine.store_stats().unwrap_or_default();
+        assert_eq!(st.spill_errors, 0);
+        eprintln!(
+            "{label} (io_threads={io_threads}): batch p50={p50:.3} ms p99={p99:.3} ms, \
+             {} promotions / {} demotions, {} prefetches, {} B streamed",
+            st.promotions, st.demotions, st.prefetches, st.demote_stream_bytes
+        );
+        let mut jw = JsonWriter::new();
+        jw.str_field("bench", "shard_scaling_spill_async")
+            .str_field("arm", label)
+            .num_field("shards", shards as f64)
+            .num_field("io_threads", io_threads as f64)
+            .num_field("prefetch_window", prefetch_window as f64)
+            .num_field("tables", num_tables as f64)
+            .num_field("rows", rows as f64)
+            .num_field("requests", requests as f64)
+            .num_field("table_bytes", logical as f64)
+            .num_field("resident_budget", budget as f64)
+            .num_field("batch_p50_ms", p50)
+            .num_field("batch_p99_ms", p99)
+            .num_field("promotions", st.promotions as f64)
+            .num_field("demotions", st.demotions as f64)
+            .num_field("prefetches", st.prefetches as f64)
+            .num_field("spill_read_bytes", st.spill_read_bytes as f64)
+            .num_field("demote_stream_bytes", st.demote_stream_bytes as f64);
+        println!("{}", jw.finish());
+    }
+    println!(
+        "\nAsync-spill check: the async arm should show lower promote-stall p50/p99 \
+         than the sync arm on the same budgeted workload, bit-exactly (overlapping \
+         prefetch reads + off-request demote writes)."
     );
 }

@@ -111,7 +111,8 @@ COMMANDS:
   serve     --table FILE [--shards N] [--workers N] [--requests N] [--batch N]
             [--replicate-hot N] [--small-table-rows N] [--steal]
             [--rebalance-interval MS] [--resident-budget BYTES]
-            [--spill-dir PATH] [--listen ADDR]
+            [--spill-dir PATH] [--spill-io-threads N] [--prefetch-window N]
+            [--listen ADDR]
             serve a table file against a synthetic Zipf trace (or over TCP).
             --shards N > 0 splits every table's rows across N worker
             shards (the multi-core, slice-resident path); --shards 0
@@ -134,7 +135,13 @@ COMMANDS:
             fully-resident serving. --spill-dir PATH picks the spill
             directory (default: a per-run temp dir, removed on clean
             shutdown; a killed --listen server leaves it for the OS
-            temp reaper).
+            temp reaper — startup sweeps an operator-supplied dir for
+            files orphaned by unclean shutdowns, re-adopting the valid
+            ones). --spill-io-threads N sizes the background spill I/O
+            pool (default 2; demote writes stream there off the store's
+            registry lock, 0 = inline I/O). --prefetch-window N warms
+            the N hottest spilled slices per heat tick so bursty tables
+            are staged before their first miss (default 0 = off).
             Sharded runs print per-shard service stats, steal/rebalance
             counters, tier-transition counters, and the resident-bytes
             breakdown (engine vs spilled vs catalog) after the replay
@@ -273,6 +280,11 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let budget_bytes: usize = flags.num("resident-budget", 0)?;
     let resident_budget = (budget_bytes > 0).then_some(budget_bytes);
     let spill_dir = flags.get("spill-dir").map(std::path::PathBuf::from);
+    let spill_io_threads: usize = flags.num(
+        "spill-io-threads",
+        emberq::shard::ShardConfig::default().spill_io_threads,
+    )?;
+    let prefetch_window: usize = flags.num("prefetch-window", 0)?;
     let listen = flags.get("listen").map(str::to_string);
     if replicate_hot > 0 && shards == 0 {
         eprintln!(
@@ -289,6 +301,15 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             "warning: --resident-budget / --spill-dir only apply to the sharded path \
              (--shards > 0); ignoring"
         );
+    }
+    if prefetch_window > 0 && resident_budget.is_none() && spill_dir.is_none() {
+        eprintln!(
+            "note: --prefetch-window needs tiered storage (--resident-budget or \
+             --spill-dir); inert"
+        );
+    }
+    if prefetch_window > 0 && spill_io_threads == 0 {
+        eprintln!("note: --prefetch-window needs --spill-io-threads > 0; inert");
     }
     // Fail with a friendly message here rather than a panic inside the
     // engine if the spill directory cannot be created. With a budget but
@@ -367,6 +388,8 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             rebalance_interval,
             resident_budget: resident_budget.filter(|_| shards > 0),
             spill_dir: spill_dir.filter(|_| shards > 0),
+            spill_io_threads,
+            prefetch_window,
         },
     );
     if replicate_hot > 0 && shards == 1 {
@@ -537,6 +560,10 @@ mod tests {
             "4000",
             "--spill-dir",
             spill.to_str().unwrap(),
+            "--spill-io-threads",
+            "2",
+            "--prefetch-window",
+            "1",
         ]))
         .unwrap();
         let _ = std::fs::remove_dir_all(&dir);

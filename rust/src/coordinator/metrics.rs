@@ -140,12 +140,24 @@ pub struct ShardStats {
     pub promotions: u64,
     /// Tiered storage: this shard's slices demoted to the disk tier.
     pub demotions: u64,
-    /// Tiered storage: bytes promotions read back from spill files.
+    /// Tiered storage: bytes promotions read back from spill files
+    /// (prefetched reads included).
     pub spill_read_bytes: u64,
     /// Tiered storage: corrupt/unreadable spill files hit on this
     /// shard's slices (the touched segment is zeroed; resident slices
     /// keep serving).
     pub spill_errors: u64,
+    /// Async spill engine: reads completed ahead of demand for this
+    /// shard's slices (segment prefetches + the `--prefetch-window`
+    /// warmer).
+    pub prefetches: u64,
+    /// Startup orphan sweep: spill files re-adopted for this shard's
+    /// slices (their first demotion skipped the write).
+    pub orphans_adopted: u64,
+    /// Startup orphan sweep: leftover temps and strays deleted. The
+    /// sweep is a leader-side startup pass with no owning shard, so the
+    /// engine reports the total on shard 0.
+    pub orphans_deleted: u64,
 }
 
 impl ShardStats {
@@ -160,6 +172,9 @@ impl ShardStats {
         self.demotions += other.demotions;
         self.spill_read_bytes += other.spill_read_bytes;
         self.spill_errors += other.spill_errors;
+        self.prefetches += other.prefetches;
+        self.orphans_adopted += other.orphans_adopted;
+        self.orphans_deleted += other.orphans_deleted;
     }
 
     /// The activity recorded after `earlier` was snapshotted from this
@@ -175,6 +190,9 @@ impl ShardStats {
             demotions: self.demotions - earlier.demotions,
             spill_read_bytes: self.spill_read_bytes - earlier.spill_read_bytes,
             spill_errors: self.spill_errors - earlier.spill_errors,
+            prefetches: self.prefetches - earlier.prefetches,
+            orphans_adopted: self.orphans_adopted - earlier.orphans_adopted,
+            orphans_deleted: self.orphans_deleted - earlier.orphans_deleted,
         }
     }
 
@@ -189,6 +207,15 @@ impl ShardStats {
             s.push_str(&format!(
                 ", {} promoted / {} demoted ({} B spill reads)",
                 self.promotions, self.demotions, self.spill_read_bytes
+            ));
+        }
+        if self.prefetches > 0 {
+            s.push_str(&format!(", {} prefetched", self.prefetches));
+        }
+        if self.orphans_adopted > 0 || self.orphans_deleted > 0 {
+            s.push_str(&format!(
+                ", {} orphans adopted / {} deleted",
+                self.orphans_adopted, self.orphans_deleted
             ));
         }
         if self.spill_errors > 0 {
@@ -354,6 +381,22 @@ mod tests {
         assert!(p.summary().contains("3 spill errors"));
         // An idle shard's summary stays free of tier noise.
         assert!(!ShardStats::default().summary().contains("promoted"));
+        assert!(!ShardStats::default().summary().contains("prefetched"));
+        assert!(!ShardStats::default().summary().contains("orphans"));
+        // Async-spill counters merge, diff, and render.
+        let mut x = ShardStats {
+            prefetches: 2,
+            orphans_adopted: 1,
+            orphans_deleted: 3,
+            ..Default::default()
+        };
+        let y = ShardStats { prefetches: 5, orphans_deleted: 1, ..Default::default() };
+        x.merge(&y);
+        assert_eq!((x.prefetches, x.orphans_adopted, x.orphans_deleted), (7, 1, 4));
+        assert!(x.summary().contains("7 prefetched"));
+        assert!(x.summary().contains("1 orphans adopted / 4 deleted"));
+        let w = x.since(&y);
+        assert_eq!((w.prefetches, w.orphans_adopted, w.orphans_deleted), (2, 1, 3));
     }
 
     #[test]

@@ -166,6 +166,12 @@ pub struct ServerConfig {
     /// Sharded path only: spill-file directory (see
     /// [`ShardConfig::spill_dir`]); defaults to a per-engine temp dir.
     pub spill_dir: Option<std::path::PathBuf>,
+    /// Sharded path only: background spill I/O pool size (see
+    /// [`ShardConfig::spill_io_threads`]; 0 = inline spill I/O).
+    pub spill_io_threads: usize,
+    /// Sharded path only: warm the N hottest spilled cells per heat
+    /// tick (see [`ShardConfig::prefetch_window`]).
+    pub prefetch_window: usize,
 }
 
 impl Default for ServerConfig {
@@ -182,6 +188,8 @@ impl Default for ServerConfig {
             rebalance_interval: None,
             resident_budget: None,
             spill_dir: None,
+            spill_io_threads: ShardConfig::default().spill_io_threads,
+            prefetch_window: 0,
         }
     }
 }
@@ -235,6 +243,8 @@ impl EmbeddingServer {
                     rebalance_interval: cfg.rebalance_interval,
                     resident_budget: cfg.resident_budget,
                     spill_dir: cfg.spill_dir.clone(),
+                    spill_io_threads: cfg.spill_io_threads,
+                    prefetch_window: cfg.prefetch_window,
                 },
             );
             (Some(Arc::new(engine)), None)
@@ -440,7 +450,29 @@ impl EmbeddingServer {
             out.push('\n');
             out.push_str(&line);
         }
+        if let Some(line) = self.spill_summary() {
+            out.push('\n');
+            out.push_str(&line);
+        }
         out
+    }
+
+    /// One-line async-spill counter summary (tiered storage only) —
+    /// shared by the CLI trace-replay output and the TCP stats frame so
+    /// the two cannot drift apart.
+    pub fn spill_summary(&self) -> Option<String> {
+        let st = self.store_stats()?;
+        Some(format!(
+            "spill: {} promotions / {} demotions, {} prefetches, {} B streamed by \
+             demote writes, {} orphans adopted / {} deleted, {} errors",
+            st.promotions,
+            st.demotions,
+            st.prefetches,
+            st.demote_stream_bytes,
+            st.orphans_adopted,
+            st.orphans_deleted,
+            st.spill_errors,
+        ))
     }
 
     /// One-line steal/rebalance counter summary (sharded path only) —
@@ -958,6 +990,42 @@ mod tests {
         assert!(stats.promotions > 0 && stats.demotions > 0);
         assert!(full.store_stats().is_none());
         assert_eq!(full.size_report().spilled_bytes, 0);
+        // The async-spill summary renders for tiered servers only.
+        assert!(tiered.stats_text().contains("spill:"), "{}", tiered.stats_text());
+        assert!(tiered.spill_summary().unwrap().contains("promotions"));
+        assert!(full.spill_summary().is_none());
+    }
+
+    #[test]
+    fn inline_spill_io_serves_identically_to_the_pool() {
+        // spill_io_threads == 0 degrades to inline (still streaming,
+        // still off-lock) spill I/O — the bytes served must not care.
+        let (_, pooled_set) = quantized_set(3, 200, 8);
+        let (_, inline_set) = quantized_set(3, 200, 8);
+        let logical = pooled_set.size_bytes();
+        let mk = |set, io_threads| {
+            EmbeddingServer::start(
+                set,
+                ServerConfig {
+                    num_shards: 2,
+                    small_table_rows: usize::MAX,
+                    resident_budget: Some(logical / 2),
+                    spill_io_threads: io_threads,
+                    ..Default::default()
+                },
+            )
+        };
+        let pooled = mk(pooled_set, 2);
+        let inline = mk(inline_set, 0);
+        for i in 0..8u32 {
+            let req = Request { ids: vec![vec![i, 199 - i], vec![i * 2], vec![7, 7]] };
+            assert_eq!(pooled.lookup(&req), inline.lookup(&req), "request {i}");
+        }
+        for srv in [&pooled, &inline] {
+            let report = srv.size_report();
+            assert!(report.engine_bytes <= logical / 2, "budget holds either way");
+            assert!(srv.store_stats().unwrap().demotions > 0);
+        }
     }
 
     #[test]

@@ -46,8 +46,13 @@
 //! segment touches, promoting spilled ones from disk on demand under a
 //! bounded resident-bytes budget; the coldest cells (same decay heat as
 //! the rebalancer) are demoted to disk in their native quantized
-//! encoding. Reloaded bytes are identical to the spilled bytes, so tier
-//! transitions never move a bit of output.
+//! encoding. The disk work runs on the store's async spill I/O engine:
+//! demotions stream to `*.tmp` + rename on a background pool with the
+//! registry lock held only for cell-state flips, a segment touching
+//! several spilled chunks prefetches them with overlapping reads, and
+//! startup sweeps the spill directory for orphans of unclean shutdowns
+//! (re-adopting byte-identical files). Reloaded bytes are identical to
+//! the spilled bytes, so tier transitions never move a bit of output.
 //!
 //! **Fault containment:** worker panics are caught per task (the segment
 //! is returned zeroed and counted in [`ShardStats::panics`]) and every
@@ -301,6 +306,8 @@ impl ShardedEngine {
                     dir,
                     resident_budget: budget.unwrap_or(usize::MAX),
                     cleanup_dir,
+                    io_threads: cfg.spill_io_threads,
+                    prefetch_window: cfg.prefetch_window,
                 };
                 // A configured rebalancer drives the heat decay; only
                 // without one does the store tick itself on promotions.
@@ -361,6 +368,13 @@ impl ShardedEngine {
         // every cell ties at zero and the deterministic shard/table
         // order decides.
         if let Some(st) = &store {
+            // Reconcile the spill directory before anything spills:
+            // leftover `*.tmp`s and strays from an unclean shutdown are
+            // deleted, and a stray whose payload is byte-identical to a
+            // just-carved cell is adopted — its first demotion then
+            // flips without writing (every cell is resident here, which
+            // is what lets adoption hash-match against live slices).
+            st.sweep_orphans();
             if !cfg.hot_loads.is_empty() {
                 for shard_cells in &slices {
                     for (t, cell) in shard_cells.iter().enumerate() {
@@ -540,6 +554,14 @@ impl ShardedEngine {
                     st.demotions = spill.demotions;
                     st.spill_read_bytes = spill.spill_read_bytes;
                     st.spill_errors = spill.spill_errors;
+                    st.prefetches = spill.prefetches;
+                    st.orphans_adopted = spill.orphans_adopted;
+                    // Stray deletions have no owning cell, hence no
+                    // shard; the sweep is a leader-side startup pass,
+                    // reported on shard 0 so the totals stay exact.
+                    if shard == 0 {
+                        st.orphans_deleted = store.stats().orphans_deleted;
+                    }
                 }
                 st
             })
@@ -961,7 +983,7 @@ fn execute_sub(
         }
         TablePartition::RowWise(p) => {
             let cells = &sub.placement.slices;
-            if core.store.is_none() {
+            let Some(store) = &core.store else {
                 // Untiered: resolve straight off the placement snapshot
                 // — no per-segment scratch, exactly as before tiering
                 // existed (cells outside a store are pinned).
@@ -979,16 +1001,25 @@ fn execute_sub(
                     out,
                 );
                 return Ok(());
-            }
+            };
             // Tiered: resolve exactly the chunks this segment touches
             // (with their true per-chunk heat) before pooling, so a
             // spilled chunk is promoted at most once per segment and
             // untouched chunks never leave the disk tier.
             let n = p.num_shards();
-            scratch.per_chunk.clear();
-            scratch.per_chunk.resize(n, 0);
-            for &id in &sub.ids {
-                scratch.per_chunk[p.shard_of(id)] += 1;
+            exec::touch_counts(p, &sub.ids, &mut scratch.per_chunk);
+            // Issue overlapping async reads for every touched spilled
+            // chunk up front, so a segment spanning k spilled chunks
+            // stalls for ~one read instead of k sequential ones. (A
+            // single spilled chunk gains nothing from a round trip
+            // through the pool; the inline read below keeps it.)
+            let spilled: Vec<&Arc<SliceCell>> = (0..n)
+                .filter(|&s| scratch.per_chunk[s] > 0)
+                .filter_map(|s| cells[s][t].as_ref())
+                .filter(|c| !c.is_resident())
+                .collect();
+            if spilled.len() > 1 {
+                store.prefetch(spilled);
             }
             scratch.resolved.clear();
             scratch.resolved.resize(n, None);

@@ -55,6 +55,20 @@ where
     }
 }
 
+/// Count how many of `ids` each shard's chunk owns, into `counts`
+/// (cleared and resized to `p.num_shards()`). This is the tiered path's
+/// up-front segment resolution: the engine promotes (and prefetches)
+/// exactly the chunks with a non-zero count — with their true per-chunk
+/// heat — before pooling, so a spilled chunk is read at most once per
+/// segment and untouched chunks never leave the disk tier.
+pub fn touch_counts(p: &RowPartition, ids: &[u32], counts: &mut Vec<u64>) {
+    counts.clear();
+    counts.resize(p.num_shards(), 0);
+    for &id in ids {
+        counts[p.shard_of(id)] += 1;
+    }
+}
+
 #[inline]
 fn as_f32(t: &AnyTable) -> &EmbeddingTable {
     match t {
@@ -231,6 +245,16 @@ mod tests {
         let mut out = vec![7.0f32; 8];
         pool_rowwise(&p, |_| panic!("empty segment resolved a chunk"), &[], &mut out);
         assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn touch_counts_cover_exactly_the_owning_chunks() {
+        let p = RowPartition::new(16, 4); // chunks of 4
+        let mut counts = vec![99u64; 1]; // stale scratch must be replaced
+        touch_counts(&p, &[0, 1, 5, 15, 15], &mut counts);
+        assert_eq!(counts, vec![2, 1, 0, 2]);
+        touch_counts(&p, &[], &mut counts);
+        assert_eq!(counts, vec![0, 0, 0, 0]);
     }
 
     #[test]

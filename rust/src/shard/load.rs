@@ -59,9 +59,31 @@ impl DecayWindow {
     }
 }
 
+/// Indices of the top-`n` entries of `scores`, hottest first, with a
+/// deterministic index tie-break; zero-score entries never qualify.
+/// This is the spill store's prefetch ranking: the `--prefetch-window`
+/// warmer ranks spilled cells by the same decayed heat the rebalancer
+/// and the eviction policy rank by, and stages the winners ahead of
+/// their first miss.
+pub fn hottest_indices(scores: &[u64], n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).filter(|&i| scores[i] > 0).collect();
+    idx.sort_by_key(|&i| (std::cmp::Reverse(scores[i]), i));
+    idx.truncate(n);
+    idx
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn hottest_indices_ranks_and_breaks_ties_deterministically() {
+        assert_eq!(hottest_indices(&[5, 0, 9, 5, 1], 3), vec![2, 0, 3]);
+        assert_eq!(hottest_indices(&[5, 0, 9, 5, 1], 10), vec![2, 0, 3, 4]);
+        assert_eq!(hottest_indices(&[0, 0], 2), Vec::<usize>::new());
+        assert_eq!(hottest_indices(&[], 4), Vec::<usize>::new());
+        assert_eq!(hottest_indices(&[7, 7, 7], 2), vec![0, 1], "ties break by index");
+    }
 
     #[test]
     fn decay_arithmetic_is_pinned() {

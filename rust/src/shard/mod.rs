@@ -31,12 +31,20 @@
 //!   parks on its own wakeup condvar; producers notify only the shards
 //!   that received work (all of them when stealing is on), with no idle
 //!   polling tick.
-//! * [`store`] — tiered slice storage: with
-//!   [`ShardConfig::resident_budget`] set, cold slices spill to disk in
-//!   their native quantized encoding (via `table::serial`) and promote
-//!   back on touch, so a served model no longer has to fit its bytes in
-//!   RAM. Heat comes from the same decay windows as the rebalancer;
-//!   transitions are bit-exact by construction.
+//! * [`store`] — tiered slice storage with an async spill I/O engine:
+//!   with [`ShardConfig::resident_budget`] set, cold slices spill to
+//!   disk in their native quantized encoding (via `table::serial`) and
+//!   promote back on touch, so a served model no longer has to fit its
+//!   bytes in RAM. Demotions stream chunk-by-chunk to `*.tmp` + atomic
+//!   rename on a small background I/O pool
+//!   ([`ShardConfig::spill_io_threads`]) with the registry lock held
+//!   only for the cell-state flips; promotions of spilled chunks are
+//!   prefetched with overlapping reads (plus an optional
+//!   [`ShardConfig::prefetch_window`] heat-driven warmer); startup
+//!   sweeps the spill directory for files orphaned by unclean
+//!   shutdowns, re-adopting byte-identical ones. Heat comes from the
+//!   same decay windows as the rebalancer; transitions are bit-exact by
+//!   construction.
 //!
 //! Equivalence contract: sharded output equals the unsharded
 //! `TableSet::pool` result **bit for bit, always** — every shard count,
@@ -126,6 +134,19 @@ pub struct ShardConfig {
     /// the directory (no budget) enables the spill machinery without
     /// automatic demotion (explicit `spill_all` / ops use).
     pub spill_dir: Option<PathBuf>,
+    /// Background spill I/O pool size per store (default 2). Demotion
+    /// writes stream to disk on these threads with the store's registry
+    /// lock held only for the cell-state flips, so promotions of other
+    /// cells never wait out a victim's serialization; they also serve
+    /// the overlapping prefetch reads. `0` runs spill I/O inline on the
+    /// transitioning thread (still streaming, still off-lock — no
+    /// overlap) and disables prefetching.
+    pub spill_io_threads: usize,
+    /// Warm the N hottest *spilled* cells (rebalancer heat) on every
+    /// heat tick by staging their payloads ahead of the first miss.
+    /// `0` (default) disables the warmer; segment-level prefetching of
+    /// touched chunks is always on when the I/O pool exists.
+    pub prefetch_window: usize,
 }
 
 impl Default for ShardConfig {
@@ -140,6 +161,8 @@ impl Default for ShardConfig {
             rebalance_interval: None,
             resident_budget: None,
             spill_dir: None,
+            spill_io_threads: 2,
+            prefetch_window: 0,
         }
     }
 }

@@ -1,5 +1,6 @@
 //! Tiered slice storage: hot shard slices serve from RAM, cold ones
-//! spill to disk and promote back on touch.
+//! spill to disk and promote back on touch — with the disk work done by
+//! an **asynchronous spill I/O engine** instead of on the serving path.
 //!
 //! The paper shrinks embedding tables to ~14% of FP32 so production
 //! models fit in memory; this module takes the next capacity step — the
@@ -13,13 +14,39 @@
 //!   [payload_len u64][fnv1a64 u64][payload]` where the payload is the
 //!   slice's table in the exact `table::serial` container (`EMBQTBL1`),
 //!   so a spilled slice keeps its native quantized encoding (int4+tails,
-//!   codebook, fused, fp32) byte for byte. Headers, lengths, checksum,
-//!   and shape are all validated on load: a truncated or corrupted file
-//!   is a clean `io::Error`, never a panic.
+//!   codebook, fp32) byte for byte. See `docs/formats.md` for the
+//!   normative byte-level spec. Headers, lengths, checksum, and shape
+//!   are all validated on load: a truncated or corrupted file is a clean
+//!   `io::Error`, never a panic.
+//! * **Streaming, crash-safe writes** — a first-time demotion streams
+//!   the slice chunk by chunk through a
+//!   [`serial::HashingWriter`](crate::table::serial::HashingWriter)
+//!   straight into `<file>.tmp` (no full serialized payload is ever
+//!   buffered in RAM), patches the header's length/checksum, and
+//!   atomically renames the temp onto the final path — a *process
+//!   crash* can never leave a torn write at a `.spill` path, only a
+//!   `.tmp` for the next startup's [`SliceStore::sweep_orphans`] to
+//!   delete. (No fsync is issued, by design: after a *power loss* the
+//!   rename may be durable while the payload is not, and that torn
+//!   file is caught by the checksum at read time — a clean error — and
+//!   deleted by the next sweep.)
 //! * **Write-once** — slices are immutable, so a slice is serialized at
 //!   most once; later demotions just drop the resident `Arc` and flip
 //!   the tier back to the existing file. A cell deletes its file on
 //!   drop (e.g. when the rebalancer retires a replica).
+//! * **Orphan sweep** — startup reconciles the spill directory against
+//!   the admitted registry: leftover `*.tmp` files are deleted, a stray
+//!   `*.spill` whose validated payload is byte-identical to an admitted
+//!   cell's serialization is **adopted** (renamed onto the cell's
+//!   reserved path, so its first demotion skips the write entirely),
+//!   and everything else matching our naming scheme is deleted. Files
+//!   bearing this process's run token (`process_token`) belong to
+//!   live sibling stores sharing the directory and are never touched —
+//!   the token folds the start time in, so a restarted process sweeps
+//!   its dead predecessor's files even when the OS recycled its pid
+//!   (containers restart as pid 1); files outside the
+//!   `slice-<token>-<seq>.spill[.tmp]` scheme are never touched either
+//!   (an operator's directory may hold unrelated data).
 //! * **Admission / eviction** — every slice is admitted resident
 //!   (startup carve, promotion, new replicas). Whenever residency
 //!   exceeds the byte budget, the store demotes the *coldest* resident
@@ -30,28 +57,59 @@
 //!   as a last resort (it is by definition the hottest thing in the
 //!   room), so the post-transition residency is always `<= budget`.
 //! * **Concurrency** — tier transitions serialize on the store's
-//!   registry mutex (promotion reads and demotion writes are cold-path
-//!   disk I/O); the hot path only ever takes a cell's tier `RwLock` for
-//!   the instant it takes to clone the resident `Arc`. In-flight
-//!   executions hold their own `Arc<TableSlice>` clones, so demoting a
-//!   slice mid-batch is safe — the memory is freed when the last
-//!   execution finishes.
+//!   registry mutex, but the mutex is held only for the **cell-state
+//!   flips** at the start (victim selection + claim) and end (the tier
+//!   pointer swap) of a demotion; the serialization and file write in
+//!   between run on a small per-store background I/O pool
+//!   ([`SpillConfig::io_threads`]) with no store lock held, so promotes
+//!   of *other* cells never wait out a victim's serialization. A caller
+//!   whose promotion overflowed the budget waits for the demotions it
+//!   commissioned (so residency is back under budget when it returns),
+//!   but it waits on a condvar, not on the registry lock. The hot path
+//!   only ever takes a cell's tier `RwLock` for the instant it takes to
+//!   clone the resident `Arc`; in-flight executions hold their own
+//!   `Arc<TableSlice>` clones, so demoting a slice mid-batch is safe.
+//! * **Prefetching promotions** — [`SliceStore::prefetch`] issues
+//!   overlapping async reads for a set of spilled cells (the engine
+//!   calls it for every spilled chunk a segment touches, so a spanning
+//!   segment pays ~one read latency instead of one per chunk).
+//!   Prefetch reads jump **ahead** of queued demote writes: a serving
+//!   thread may be parked on the read, while writes are background
+//!   work with no latency-critical waiter. A
+//!   prefetch *stages* the parsed slice on the cell; the next
+//!   [`SliceStore::promote`] consumes the staged copy and installs it
+//!   under the normal budget enforcement, so prefetching never bypasses
+//!   the byte accounting. [`SpillConfig::prefetch_window`] additionally
+//!   warms the N hottest spilled cells on every heat tick (rebalancer
+//!   cadence, or the promotion-path fallback clock), so a bursty table
+//!   is staged before its first miss. Staged slices nobody consumed
+//!   within a whole tick are dropped.
+//!
+//! Duplicate work is deduplicated by two per-cell claim flags: at most
+//! one thread (worker or I/O pool) reads a given cell's spill file at a
+//! time (`promote_pending` — latecomers wait on the store's transition
+//! condvar), and at most one demotes it (`demote_pending`).
 
+use std::collections::VecDeque;
 use std::fs::{self, File};
-use std::io::{self, BufWriter, Read, Write};
+use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock, Weak};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::shard::load::DecayWindow;
+use crate::shard::load::{hottest_indices, DecayWindow};
 use crate::shard::slice::TableSlice;
-use crate::table::serial;
+use crate::table::serial::{self, HashingWriter};
 use crate::util::sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison};
 
 const SPILL_MAGIC: &[u8; 8] = b"EMBQSPL1";
 /// magic + global_lo + global_hi + payload_len + checksum.
 const SPILL_HEADER_BYTES: u64 = 8 + 8 + 8 + 8 + 8;
+/// Byte offset of the `[payload_len][checksum]` pair the streaming
+/// writer patches after the payload has been streamed.
+const SPILL_LEN_OFFSET: u64 = 8 + 8 + 8;
 
 /// Fallback decay cadence: when no rebalancer drives [`SliceStore::tick`]
 /// (the `--resident-budget` without `--rebalance-interval` configuration),
@@ -77,6 +135,31 @@ const MAX_CATCHUP_TICKS: u32 = 64;
 /// each other's files.
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
 
+/// Per-process run token embedded in spill-file names
+/// (`slice-<token:hex>-<seq>.spill`). The orphan sweep never touches
+/// files bearing the *current* token — they belong to live sibling
+/// stores in this process — and sweeps everything else. A pid alone
+/// cannot play this role: the OS recycles pids, and a containerized
+/// server is pid 1 on *every* restart, which would make its own crash
+/// recovery permanently inert. Folding the process start time in gives
+/// a token that differs across restarts (even with a recycled pid) yet
+/// is shared by every store in one process; distinct live pids keep
+/// distinct tokens via the pid bits.
+fn process_token() -> u64 {
+    use std::sync::OnceLock;
+    static TOKEN: OnceLock<u64> = OnceLock::new();
+    *TOKEN.get_or_init(|| {
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| (d.as_secs() << 30) ^ d.subsec_nanos() as u64)
+            .unwrap_or(0);
+        // Pid in the high bits (concurrently-live processes differ),
+        // time in the low bits (restarts differ); never 0, so crafted
+        // zero-token test orphans can never match a live store.
+        ((std::process::id() as u64) << 48 ^ t) | 1
+    })
+}
+
 /// Tiered-storage configuration of one engine.
 #[derive(Clone, Debug)]
 pub struct SpillConfig {
@@ -89,6 +172,15 @@ pub struct SpillConfig {
     /// temp directory; an operator-supplied `--spill-dir` is left in
     /// place (only the spill files inside it are deleted).
     pub cleanup_dir: bool,
+    /// Background spill I/O pool size. `0` runs demotion writes inline
+    /// on the transitioning thread (still streaming, still off the
+    /// registry lock — just no overlap) and disables prefetching.
+    pub io_threads: usize,
+    /// Warm the N hottest spilled cells per heat tick by staging their
+    /// payloads ahead of the first miss. `0` (default) disables the
+    /// warmer; segment-level prefetching of touched chunks is always on
+    /// when the pool exists.
+    pub prefetch_window: usize,
 }
 
 /// Where a spilled slice's bytes live on disk.
@@ -140,6 +232,16 @@ pub struct SliceCell {
     /// Exponential-decay touch heat — same arithmetic as the
     /// rebalancer's per-table windows, ticked on the same cadence.
     heat: Mutex<DecayWindow>,
+    /// Claim flag: one thread at a time reads this cell's spill file
+    /// (inline promotion or prefetch job); latecomers wait on the
+    /// store's transition condvar instead of duplicating the read.
+    promote_pending: std::sync::atomic::AtomicBool,
+    /// Claim flag: one demotion of this cell in flight at a time.
+    demote_pending: std::sync::atomic::AtomicBool,
+    /// A prefetched slice parked here until the next promotion consumes
+    /// it (the read happened off the serving path; the *install* — and
+    /// its budget enforcement — still happens on the promoting thread).
+    staged: Mutex<Option<Arc<TableSlice>>>,
     /// Untracked cells pin their slice here (the tier can never change),
     /// giving the untiered engine a lock-free, clone-free resolution
     /// path identical in cost to the pre-tiering design. `None` for
@@ -171,6 +273,9 @@ impl SliceCell {
             spill_path,
             file_len: AtomicU64::new(0),
             heat: Mutex::new(DecayWindow::new()),
+            promote_pending: std::sync::atomic::AtomicBool::new(false),
+            demote_pending: std::sync::atomic::AtomicBool::new(false),
+            staged: Mutex::new(None),
             pinned: pin.then_some(slice),
         }
     }
@@ -275,10 +380,28 @@ pub struct StoreStats {
     pub promotions: u64,
     /// Resident slices demoted to the disk tier.
     pub demotions: u64,
-    /// Bytes read from spill files by promotions.
+    /// Bytes read from spill files by promotions (prefetched reads
+    /// included — a read is a read, whoever issued it).
     pub spill_read_bytes: u64,
-    /// Bytes written to spill files by first-time demotions.
+    /// Bytes written to spill files by first-time demotions (header
+    /// included).
     pub spill_write_bytes: u64,
+    /// Payload bytes streamed chunk-by-chunk through first-time
+    /// demotions' [`HashingWriter`] (i.e. `spill_write_bytes` minus the
+    /// fixed headers) — the bytes that never existed as an in-RAM
+    /// serialization buffer.
+    pub demote_stream_bytes: u64,
+    /// Async reads completed ahead of demand (segment prefetches and
+    /// the `prefetch_window` warmer) whose payload was staged.
+    pub prefetches: u64,
+    /// Startup-sweep adoptions: orphaned spill files whose payload was
+    /// byte-identical to an admitted cell's serialization and were
+    /// renamed onto that cell's path (its first demotion skips the
+    /// write).
+    pub orphans_adopted: u64,
+    /// Startup-sweep deletions: leftover `*.tmp` files and stray or
+    /// corrupt `*.spill` files matching no admitted cell.
+    pub orphans_deleted: u64,
     /// Corrupt/unwritable spill files encountered (the slice keeps its
     /// current tier; serving continues from the resident tier).
     pub spill_errors: u64,
@@ -292,6 +415,8 @@ struct ShardCounters {
     demotions: AtomicU64,
     spill_read_bytes: AtomicU64,
     spill_errors: AtomicU64,
+    prefetches: AtomicU64,
+    orphans_adopted: AtomicU64,
 }
 
 /// A per-shard snapshot of the store's transition counters.
@@ -305,20 +430,84 @@ pub struct ShardSpill {
     pub spill_read_bytes: u64,
     /// Spill-file errors hit on this shard's slices.
     pub spill_errors: u64,
+    /// Prefetched reads staged for this shard's slices.
+    pub prefetches: u64,
+    /// Orphaned files the startup sweep adopted for this shard's slices.
+    pub orphans_adopted: u64,
+}
+
+/// One queued unit of background spill I/O.
+enum IoJob {
+    /// Serialize (first time) and flip one cell to the disk tier.
+    Demote(Arc<SliceCell>),
+    /// Read one spilled cell's file and stage the parsed slice.
+    Prefetch(Arc<SliceCell>),
+}
+
+/// The background pool's work queue. Lock order: the registry mutex may
+/// be held while pushing here; I/O threads never touch the registry
+/// while holding this lock (they pop, release, then run).
+struct IoQueue {
+    state: Mutex<IoQueueState>,
+    cv: Condvar,
+}
+
+struct IoQueueState {
+    jobs: VecDeque<IoJob>,
+    shutdown: bool,
+}
+
+impl IoQueue {
+    /// Background demote write: joins the back of the queue.
+    fn push_back(&self, job: IoJob) {
+        lock_ignore_poison(&self.state).jobs.push_back(job);
+        self.cv.notify_one();
+    }
+
+    /// Request-path prefetch read: jumps ahead of queued demote writes.
+    /// A serving thread may be parked on this very job (its promote
+    /// lost the claim race to the prefetch), and a read is bounded and
+    /// small next to a streamed multi-MB write — without the priority,
+    /// one request could wait out the entire background write backlog.
+    fn push_front(&self, job: IoJob) {
+        lock_ignore_poison(&self.state).jobs.push_front(job);
+        self.cv.notify_one();
+    }
 }
 
 /// The engine's tiered-storage manager: owns the spill directory, the
-/// resident-byte budget, and the registry of every admitted cell.
+/// resident-byte budget, the registry of every admitted cell, and the
+/// background spill I/O pool.
 pub struct SliceStore {
+    inner: Arc<StoreInner>,
+    io_threads: Vec<JoinHandle<()>>,
+}
+
+struct StoreInner {
     dir: PathBuf,
     budget: usize,
     /// Registry of admitted cells (weak: retired replicas drop out on
-    /// their own). The mutex doubles as the tier-transition lock —
-    /// promote/demote/enforce serialize on it; resident reads never
-    /// take it.
+    /// their own). The mutex doubles as the tier-transition lock — it
+    /// serializes victim selection, claim flips, and tier-pointer swaps;
+    /// it is NEVER held across a spill-file read or write, and resident
+    /// reads never take it.
     cells: Mutex<Vec<Weak<SliceCell>>>,
     per_shard: Vec<ShardCounters>,
     spill_write_bytes: AtomicU64,
+    demote_stream_bytes: AtomicU64,
+    orphans_deleted: AtomicU64,
+    /// Demotions claimed but not yet completed (queued + writing).
+    in_flight_demotes: AtomicUsize,
+    /// Completion signaling for claim flips: demote/promote claim
+    /// holders bump-and-notify here when they finish, and budget waiters
+    /// / promote latecomers wait here. The mutex guards nothing but the
+    /// wait itself (predicates read the per-cell atomic flags).
+    transitions: Mutex<()>,
+    transition_cv: Condvar,
+    /// Background I/O queue; `None` runs spill I/O inline (still
+    /// streaming, still off the registry lock).
+    io: Option<IoQueue>,
+    prefetch_window: usize,
     /// When the heat last decayed (rebalancer tick or the promotion-path
     /// fallback cadence).
     last_tick: Mutex<Instant>,
@@ -339,40 +528,212 @@ pub struct SliceStore {
 
 impl SliceStore {
     /// Open (creating if needed) a store over `cfg.dir` for `num_shards`
-    /// shards. `rebalancer_ticks` says a rebalancer will drive
-    /// [`SliceStore::tick`]; without one, promotions tick the heat
-    /// themselves at most once per [`HEAT_TICK_INTERVAL`].
+    /// shards, and start its background I/O pool (`cfg.io_threads`
+    /// threads; 0 = inline I/O). `rebalancer_ticks` says a rebalancer
+    /// will drive [`SliceStore::tick`]; without one, promotions tick the
+    /// heat themselves at most once per [`HEAT_TICK_INTERVAL`].
     pub fn new(
         cfg: &SpillConfig,
         num_shards: usize,
         rebalancer_ticks: bool,
     ) -> io::Result<SliceStore> {
         fs::create_dir_all(&cfg.dir)?;
-        Ok(SliceStore {
+        let inner = Arc::new(StoreInner {
             dir: cfg.dir.clone(),
             budget: cfg.resident_budget,
             cells: Mutex::new(Vec::new()),
             per_shard: (0..num_shards).map(|_| ShardCounters::default()).collect(),
             spill_write_bytes: AtomicU64::new(0),
+            demote_stream_bytes: AtomicU64::new(0),
+            orphans_deleted: AtomicU64::new(0),
+            in_flight_demotes: AtomicUsize::new(0),
+            transitions: Mutex::new(()),
+            transition_cv: Condvar::new(),
+            io: (cfg.io_threads > 0).then(|| IoQueue {
+                state: Mutex::new(IoQueueState { jobs: VecDeque::new(), shutdown: false }),
+                cv: Condvar::new(),
+            }),
+            prefetch_window: cfg.prefetch_window,
             last_tick: Mutex::new(Instant::now()),
             fallback_tick: (!rebalancer_ticks).then_some(HEAT_TICK_INTERVAL),
             last_external_tick: Mutex::new(None),
             cleanup_dir: cfg.cleanup_dir,
-        })
+        });
+        let io_threads = if inner.io.is_some() {
+            (0..cfg.io_threads)
+                .map(|i| {
+                    let inner = Arc::clone(&inner);
+                    std::thread::Builder::new()
+                        .name(format!("emberq-spill-io-{i}"))
+                        .spawn(move || io_loop(&inner))
+                        .expect("spawn spill I/O worker")
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(SliceStore { inner, io_threads })
     }
 
     /// The resident-bytes budget.
     pub fn budget(&self) -> usize {
-        self.budget
+        self.inner.budget
     }
 
     /// Admit a freshly carved (or duplicated) slice: resident, tracked,
     /// with a globally unique spill path reserved for its first
     /// demotion.
     pub fn admit(&self, shard: usize, table: usize, slice: TableSlice) -> Arc<SliceCell> {
+        self.inner.admit(shard, table, slice)
+    }
+
+    /// Bytes currently resident across every tracked cell (including
+    /// cells only reachable from older placement snapshots — memory is
+    /// memory, so the budget counts them too).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.resident_bytes()
+    }
+
+    /// Load `cell` back into the RAM tier and return its slice,
+    /// demoting the coldest resident cells if the budget overflows.
+    /// The fast path (already resident) takes no store lock; per-cell
+    /// claim flags make the spill file read-once under contention; the
+    /// spill file is read and written **outside** every store lock; and
+    /// the caller waits (on a condvar, never the registry lock) for
+    /// exactly the demotions its install commissioned, so residency is
+    /// back under budget on return. A corrupt or truncated spill file
+    /// is a clean error: the cell stays spilled, `spill_errors` counts
+    /// it, and everything resident keeps serving.
+    pub fn promote(&self, cell: &Arc<SliceCell>) -> io::Result<Arc<TableSlice>> {
+        self.inner.promote(cell)
+    }
+
+    /// Demote coldest-first until residency fits the budget; returns
+    /// once the commissioned writes completed. Called after startup
+    /// carving and after rebalance passes (which admit new replicas
+    /// resident).
+    pub fn enforce(&self) {
+        self.inner.enforce()
+    }
+
+    /// Demote every resident cell (tests and "drop caches" operations);
+    /// returns how many were demoted. Runs inline (synchronous
+    /// semantics), stops at the first write failure — which is counted
+    /// in `spill_errors` like every other unwritable spill file.
+    pub fn demote_all(&self) -> io::Result<usize> {
+        self.inner.demote_all()
+    }
+
+    /// Advance every cell's decay window one tick — rebalance passes
+    /// (background thread or manual `rebalance_once`) call this on their
+    /// cadence, so spill heat and replication heat cool at the same
+    /// rate. Also drops stale staged prefetches and, with a
+    /// [`SpillConfig::prefetch_window`], warms the hottest spilled
+    /// cells. Each call renews the [`EXTERNAL_CLOCK_LEASE`] standing the
+    /// promotion-path fallback down.
+    pub fn tick(&self) {
+        self.inner.tick()
+    }
+
+    /// Issue overlapping async reads for the given spilled cells; each
+    /// completed read stages its parsed slice on the cell for the next
+    /// promotion to consume. Returns how many reads were issued (0
+    /// without an I/O pool, or when every cell was already resident,
+    /// staged, or claimed).
+    pub fn prefetch<'a, I>(&self, cells: I) -> usize
+    where
+        I: IntoIterator<Item = &'a Arc<SliceCell>>,
+    {
+        self.inner.prefetch(cells)
+    }
+
+    /// Reconcile the spill directory against the admitted registry:
+    /// delete `*.tmp` leftovers, adopt strays whose payload is
+    /// byte-identical to an admitted cell's serialization, delete the
+    /// rest (our naming scheme and other pids only). Call after
+    /// admitting every cell and before the first enforcement, so
+    /// adopted cells demote without rewriting.
+    pub fn sweep_orphans(&self) {
+        self.inner.sweep_orphans()
+    }
+
+    /// Demotions claimed but not yet completed (queued or mid-write).
+    /// Observability for tests and operators; racy by nature.
+    pub fn demotions_in_flight(&self) -> usize {
+        self.inner.in_flight_demotes.load(Ordering::Acquire)
+    }
+
+    /// Cumulative transition counters, totaled across shards.
+    pub fn stats(&self) -> StoreStats {
+        self.inner.stats()
+    }
+
+    /// One shard's transition counters (merged into `ShardStats`).
+    pub fn shard_spill(&self, shard: usize) -> ShardSpill {
+        self.inner.shard_spill(shard)
+    }
+}
+
+impl Drop for SliceStore {
+    fn drop(&mut self) {
+        if let Some(q) = &self.inner.io {
+            lock_ignore_poison(&q.state).shutdown = true;
+            q.cv.notify_all();
+        }
+        for t in self.io_threads.drain(..) {
+            let _ = t.join();
+        }
+        // Abandon whatever was still queued: dropping the jobs drops
+        // their cell Arcs now, so every spill file is deleted before
+        // StoreInner's drop tries to remove the (per-run default)
+        // directory.
+        if let Some(q) = &self.inner.io {
+            lock_ignore_poison(&q.state).jobs.clear();
+        }
+    }
+}
+
+impl Drop for StoreInner {
+    fn drop(&mut self) {
+        // Only per-run default directories are removed (and only once
+        // every cell — so every spill file — is gone; a shared directory
+        // with other live stores survives). An operator-supplied
+        // --spill-dir belongs to the operator and stays in place.
+        if self.cleanup_dir {
+            let _ = fs::remove_dir(&self.dir);
+        }
+    }
+}
+
+/// Background spill I/O worker: pop, release the queue lock, run.
+fn io_loop(inner: &StoreInner) {
+    let q = inner.io.as_ref().expect("I/O threads imply a queue");
+    loop {
+        let job = {
+            let mut st = lock_ignore_poison(&q.state);
+            loop {
+                if let Some(job) = st.jobs.pop_front() {
+                    break Some(job);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = q.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        match job {
+            Some(IoJob::Demote(cell)) => inner.run_demote(&cell),
+            Some(IoJob::Prefetch(cell)) => inner.run_prefetch(&cell),
+            None => return,
+        }
+    }
+}
+
+impl StoreInner {
+    fn admit(&self, shard: usize, table: usize, slice: TableSlice) -> Arc<SliceCell> {
         let name = format!(
-            "slice-{}-{}.spill",
-            std::process::id(),
+            "slice-{:x}-{}.spill",
+            process_token(),
             SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
         );
         let cell = Arc::new(SliceCell::new(shard, table, slice, self.dir.join(name), false));
@@ -380,10 +741,7 @@ impl SliceStore {
         cell
     }
 
-    /// Bytes currently resident across every tracked cell (including
-    /// cells only reachable from older placement snapshots — memory is
-    /// memory, so the budget counts them too).
-    pub fn resident_bytes(&self) -> usize {
+    fn resident_bytes(&self) -> usize {
         lock_ignore_poison(&self.cells)
             .iter()
             .filter_map(Weak::upgrade)
@@ -391,83 +749,154 @@ impl SliceStore {
             .sum()
     }
 
-    /// Load `cell` back into the RAM tier and return its slice,
-    /// demoting the coldest resident cells if the budget overflows. The
-    /// fast path (already resident) takes no store lock, and the spill
-    /// file is read **outside** the registry lock too, so promotions of
-    /// different cells proceed in parallel (two threads racing on the
-    /// *same* cell may duplicate the read; the loser discards its copy
-    /// and only the installer counts). A corrupt or truncated spill
-    /// file is a clean error: the cell stays spilled, `spill_errors`
-    /// counts it, and everything resident keeps serving.
-    pub fn promote(&self, cell: &Arc<SliceCell>) -> io::Result<Arc<TableSlice>> {
+    /// Load `cell` back into the RAM tier and return its slice. The fast
+    /// path (already resident) takes no store lock. The claim flag makes
+    /// this read-once under contention: the claiming thread consumes a
+    /// staged prefetch if one is parked on the cell, reads the spill
+    /// file itself otherwise — **outside** every store lock — then takes
+    /// the registry mutex only for the install + victim selection, and
+    /// finally waits (lock-free) for the demotions it commissioned, so
+    /// residency is back under budget when it returns. Latecomers for
+    /// the same cell park on the transition condvar instead of
+    /// duplicating the read. A corrupt or truncated spill file is a
+    /// clean error: the cell stays spilled, `spill_errors` counts it,
+    /// and everything resident keeps serving.
+    fn promote(&self, cell: &Arc<SliceCell>) -> io::Result<Arc<TableSlice>> {
         loop {
             if let Some(s) = cell.resident() {
                 return Ok(s);
             }
-            // The tier can flip between the check above and here; retry
-            // on the (rare) mid-transition read.
-            let Some(handle) = cell.spill_handle() else { continue };
-            let loaded = match read_spill(&handle, cell) {
-                Ok(slice) => Arc::new(slice),
-                Err(e) => {
-                    self.per_shard[cell.shard].spill_errors.fetch_add(1, Ordering::Relaxed);
-                    return Err(e);
+            if cell
+                .promote_pending
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                // Someone else (a worker or a prefetch job) owns this
+                // cell's read; wait for their claim to clear, then
+                // re-evaluate from the top.
+                let mut guard = lock_ignore_poison(&self.transitions);
+                while cell.promote_pending.load(Ordering::Acquire)
+                    && cell.resident().is_none()
+                {
+                    guard = self
+                        .transition_cv
+                        .wait(guard)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+                continue;
+            }
+            // We own the claim. The previous owner may have installed
+            // before our CAS — re-check.
+            if let Some(s) = cell.resident() {
+                self.finish_promote(cell);
+                return Ok(s);
+            }
+            let staged = lock_ignore_poison(&cell.staged).take();
+            let loaded = match staged {
+                // A prefetch already paid the read (and counted its
+                // bytes); we only install.
+                Some(s) => s,
+                None => {
+                    let Some(handle) = cell.spill_handle() else {
+                        // Unreachable in practice (not resident implies
+                        // spilled), but a lost claim must never wedge.
+                        self.finish_promote(cell);
+                        continue;
+                    };
+                    match read_spill(&handle, cell) {
+                        Ok(slice) => {
+                            self.per_shard[cell.shard]
+                                .spill_read_bytes
+                                .fetch_add(handle.file_len, Ordering::Relaxed);
+                            Arc::new(slice)
+                        }
+                        Err(e) => {
+                            self.per_shard[cell.shard]
+                                .spill_errors
+                                .fetch_add(1, Ordering::Relaxed);
+                            self.finish_promote(cell);
+                            return Err(e);
+                        }
+                    }
                 }
             };
-            let mut reg = lock_ignore_poison(&self.cells);
-            self.maybe_tick_locked(&mut reg);
-            if let Some(s) = cell.resident() {
-                return Ok(s); // lost the race: another thread installed first
-            }
-            *write_ignore_poison(&cell.tier) = SliceTier::Resident(Arc::clone(&loaded));
-            self.per_shard[cell.shard].promotions.fetch_add(1, Ordering::Relaxed);
-            self.per_shard[cell.shard]
-                .spill_read_bytes
-                .fetch_add(handle.file_len, Ordering::Relaxed);
-            self.enforce_locked(&mut reg, Some(cell));
+            // Install + eviction planning under the registry lock; the
+            // writes themselves happen after it is released.
+            let (wait_set, jobs) = {
+                let mut reg = lock_ignore_poison(&self.cells);
+                self.maybe_tick_locked(&mut reg);
+                *write_ignore_poison(&cell.tier) = SliceTier::Resident(Arc::clone(&loaded));
+                self.per_shard[cell.shard].promotions.fetch_add(1, Ordering::Relaxed);
+                self.plan_evictions(&mut reg, Some(cell))
+            };
+            self.finish_promote(cell);
+            self.dispatch_demotes(jobs);
+            self.wait_demotes(&wait_set);
             return Ok(loaded);
         }
     }
 
-    /// Demote coldest-first until residency fits the budget. Called
-    /// after startup carving and after rebalance passes (which admit new
-    /// replicas resident).
-    pub fn enforce(&self) {
-        let mut reg = lock_ignore_poison(&self.cells);
-        self.enforce_locked(&mut reg, None);
+    fn finish_promote(&self, cell: &SliceCell) {
+        cell.promote_pending.store(false, Ordering::Release);
+        self.notify_transition();
     }
 
-    /// Demote every resident cell (tests and "drop caches" operations);
-    /// returns how many were demoted. Stops at the first write failure —
-    /// which is counted in `spill_errors` like every other unwritable
-    /// spill file, so the monitoring signal stays consistent with the
-    /// enforcement path.
-    pub fn demote_all(&self) -> io::Result<usize> {
-        let mut reg = lock_ignore_poison(&self.cells);
-        reg.retain(|w| w.strong_count() > 0);
-        let live: Vec<Arc<SliceCell>> = reg.iter().filter_map(Weak::upgrade).collect();
-        let mut demoted = 0usize;
-        for cell in &live {
-            match self.demote_cell(cell) {
-                Ok(0) => {}
-                Ok(_) => demoted += 1,
-                Err(e) => {
-                    self.per_shard[cell.shard].spill_errors.fetch_add(1, Ordering::Relaxed);
-                    return Err(e);
+    fn enforce(&self) {
+        let (wait_set, jobs) = {
+            let mut reg = lock_ignore_poison(&self.cells);
+            self.plan_evictions(&mut reg, None)
+        };
+        self.dispatch_demotes(jobs);
+        self.wait_demotes(&wait_set);
+    }
+
+    fn demote_all(&self) -> io::Result<usize> {
+        // Claim every resident cell; cells another thread is already
+        // demoting are waited out at the end instead.
+        let (claimed, preexisting) = {
+            let mut reg = lock_ignore_poison(&self.cells);
+            reg.retain(|w| w.strong_count() > 0);
+            let mut claimed: Vec<Arc<SliceCell>> = Vec::new();
+            let mut preexisting: Vec<Arc<SliceCell>> = Vec::new();
+            for cell in reg.iter().filter_map(Weak::upgrade) {
+                if !cell.is_resident() {
+                    continue;
+                }
+                if self.claim_demote(&cell) {
+                    claimed.push(cell);
+                } else {
+                    preexisting.push(cell);
                 }
             }
+            (claimed, preexisting)
+        };
+        let mut demoted = 0usize;
+        let mut failure: Option<io::Error> = None;
+        for cell in &claimed {
+            if failure.is_none() {
+                match self.demote_cell(cell) {
+                    Ok(0) => {}
+                    Ok(_) => demoted += 1,
+                    Err(e) => {
+                        self.per_shard[cell.shard]
+                            .spill_errors
+                            .fetch_add(1, Ordering::Relaxed);
+                        failure = Some(e);
+                    }
+                }
+            }
+            // Unprocessed tail after a failure just releases its claim
+            // (matching the old stop-at-first-error semantics).
+            self.finish_demote(cell);
         }
-        Ok(demoted)
+        self.wait_demotes(&preexisting);
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(demoted),
+        }
     }
 
-    /// Advance every cell's decay window one tick — rebalance passes
-    /// (background thread or manual `rebalance_once`) call this on their
-    /// cadence, so spill heat and replication heat cool at the same
-    /// rate. Each call renews the [`EXTERNAL_CLOCK_LEASE`] standing the
-    /// promotion-path fallback down: one clock, never two — but a
-    /// one-off poke cannot freeze the heat clock forever.
-    pub fn tick(&self) {
+    fn tick(&self) {
         *lock_ignore_poison(&self.last_external_tick) = Some(Instant::now());
         let mut reg = lock_ignore_poison(&self.cells);
         self.tick_locked(&mut reg, 1);
@@ -476,12 +905,97 @@ impl SliceStore {
     fn tick_locked(&self, reg: &mut Vec<Weak<SliceCell>>, ticks: u32) {
         *lock_ignore_poison(&self.last_tick) = Instant::now();
         reg.retain(|w| w.strong_count() > 0);
-        for cell in reg.iter().filter_map(Weak::upgrade) {
-            let mut heat = lock_ignore_poison(&cell.heat);
-            for _ in 0..ticks {
-                heat.tick();
+        let cells: Vec<Arc<SliceCell>> = reg.iter().filter_map(Weak::upgrade).collect();
+        for cell in &cells {
+            {
+                let mut heat = lock_ignore_poison(&cell.heat);
+                for _ in 0..ticks {
+                    heat.tick();
+                }
+            }
+            // A staged prefetch nobody consumed within a whole tick is
+            // stale: drop it, so warming a cell whose burst never came
+            // cannot park its bytes outside the budgeted tier forever.
+            // (Claimed cells are left alone — their prefetch is mid
+            // flight and will stage a fresh copy.)
+            if !cell.promote_pending.load(Ordering::Acquire) {
+                lock_ignore_poison(&cell.staged).take();
             }
         }
+        self.warm_locked(&cells);
+    }
+
+    /// The `prefetch_window` warmer: stage the N hottest spilled cells
+    /// (rebalancer heat, hottest first) so a bursty table's first miss
+    /// finds its payload already parsed.
+    fn warm_locked(&self, cells: &[Arc<SliceCell>]) {
+        if self.prefetch_window == 0 || self.io.is_none() {
+            return;
+        }
+        let spilled: Vec<&Arc<SliceCell>> =
+            cells.iter().filter(|c| !c.is_resident()).collect();
+        let scores: Vec<u64> = spilled.iter().map(|c| c.heat_score()).collect();
+        for i in hottest_indices(&scores, self.prefetch_window) {
+            self.issue_prefetch(spilled[i]);
+        }
+    }
+
+    fn prefetch<'a, I>(&self, cells: I) -> usize
+    where
+        I: IntoIterator<Item = &'a Arc<SliceCell>>,
+    {
+        let mut issued = 0usize;
+        for cell in cells {
+            if self.issue_prefetch(cell) {
+                issued += 1;
+            }
+        }
+        issued
+    }
+
+    fn issue_prefetch(&self, cell: &Arc<SliceCell>) -> bool {
+        let Some(q) = &self.io else { return false };
+        if cell.pinned.is_some() || cell.is_resident() {
+            return false;
+        }
+        if lock_ignore_poison(&cell.staged).is_some() {
+            return false; // already staged, nothing to read
+        }
+        if cell
+            .promote_pending
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false; // someone is already reading this cell
+        }
+        q.push_front(IoJob::Prefetch(Arc::clone(cell)));
+        true
+    }
+
+    /// Prefetch job body (claim already held): read, stage, release.
+    fn run_prefetch(&self, cell: &Arc<SliceCell>) {
+        if cell.resident().is_none() {
+            if let Some(handle) = cell.spill_handle() {
+                match read_spill(&handle, cell) {
+                    Ok(slice) => {
+                        *lock_ignore_poison(&cell.staged) = Some(Arc::new(slice));
+                        self.per_shard[cell.shard]
+                            .spill_read_bytes
+                            .fetch_add(handle.file_len, Ordering::Relaxed);
+                        self.per_shard[cell.shard].prefetches.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        // Nothing staged; the consuming promote re-reads
+                        // inline and counts the failure there — counting
+                        // here too would report two errors per failed
+                        // access. A warm-only failure on a never-touched
+                        // cell stays uncounted until something actually
+                        // needs the file.
+                    }
+                }
+            }
+        }
+        self.finish_promote(cell);
     }
 
     /// The promotion-path decay fallback: without a rebalancer driving
@@ -507,10 +1021,11 @@ impl SliceStore {
         }
     }
 
-    /// Cumulative transition counters, totaled across shards.
-    pub fn stats(&self) -> StoreStats {
+    fn stats(&self) -> StoreStats {
         let mut s = StoreStats {
             spill_write_bytes: self.spill_write_bytes.load(Ordering::Relaxed),
+            demote_stream_bytes: self.demote_stream_bytes.load(Ordering::Relaxed),
+            orphans_deleted: self.orphans_deleted.load(Ordering::Relaxed),
             ..StoreStats::default()
         };
         for c in &self.per_shard {
@@ -518,132 +1033,358 @@ impl SliceStore {
             s.demotions += c.demotions.load(Ordering::Relaxed);
             s.spill_read_bytes += c.spill_read_bytes.load(Ordering::Relaxed);
             s.spill_errors += c.spill_errors.load(Ordering::Relaxed);
+            s.prefetches += c.prefetches.load(Ordering::Relaxed);
+            s.orphans_adopted += c.orphans_adopted.load(Ordering::Relaxed);
         }
         s
     }
 
-    /// One shard's transition counters (merged into `ShardStats`).
-    pub fn shard_spill(&self, shard: usize) -> ShardSpill {
+    fn shard_spill(&self, shard: usize) -> ShardSpill {
         let c = &self.per_shard[shard];
         ShardSpill {
             promotions: c.promotions.load(Ordering::Relaxed),
             demotions: c.demotions.load(Ordering::Relaxed),
             spill_read_bytes: c.spill_read_bytes.load(Ordering::Relaxed),
             spill_errors: c.spill_errors.load(Ordering::Relaxed),
+            prefetches: c.prefetches.load(Ordering::Relaxed),
+            orphans_adopted: c.orphans_adopted.load(Ordering::Relaxed),
         }
     }
 
-    /// Eviction pass under the registry lock: demote coldest-first until
-    /// `resident <= budget`. `keep` (the just-promoted cell) is evicted
-    /// only as a last resort, so a promotion can never be undone by its
-    /// own enforcement unless the budget cannot hold even one slice.
-    fn enforce_locked(&self, reg: &mut Vec<Weak<SliceCell>>, keep: Option<&Arc<SliceCell>>) {
+    /// Eviction planning under the registry lock: pick coldest-first
+    /// victims until residency (minus what in-flight demotions will
+    /// free) fits the budget, claim them, and return `(wait_set, jobs)`
+    /// — the cells whose completion the caller must wait out before its
+    /// budget guarantee holds, and the newly claimed victims to hand to
+    /// [`StoreInner::dispatch_demotes`] after the lock is released. No
+    /// I/O happens here. `keep` (the just-promoted cell) is evicted only
+    /// as a last resort, so a promotion can never be undone by its own
+    /// enforcement unless the budget cannot hold even one slice.
+    fn plan_evictions(
+        &self,
+        reg: &mut Vec<Weak<SliceCell>>,
+        keep: Option<&Arc<SliceCell>>,
+    ) -> (Vec<Arc<SliceCell>>, Vec<Arc<SliceCell>>) {
         reg.retain(|w| w.strong_count() > 0);
         let live: Vec<Arc<SliceCell>> = reg.iter().filter_map(Weak::upgrade).collect();
-        let mut resident: usize = live.iter().map(|c| c.resident_bytes()).sum();
-        if resident <= self.budget {
-            return;
-        }
-        let mut victims: Vec<&Arc<SliceCell>> =
-            live.iter().filter(|c| c.is_resident()).collect();
-        // Coldest first, deterministic tie-break; the protected cell
-        // sorts last. Keys are cached: concurrent touches must not feed
-        // the sort an inconsistent ordering.
-        victims.sort_by_cached_key(|c| {
-            let protected = keep.is_some_and(|k| Arc::ptr_eq(k, *c));
-            (protected, c.heat_score(), c.shard, c.table, c.global_lo)
-        });
-        for v in victims {
-            if resident <= self.budget {
-                break;
+        let mut wait_set: Vec<Arc<SliceCell>> = Vec::new();
+        let mut resident = 0usize;
+        let mut in_flight = 0usize;
+        for c in &live {
+            let rb = c.resident_bytes();
+            resident += rb;
+            if rb > 0 && c.demote_pending.load(Ordering::Acquire) {
+                in_flight += c.bytes;
+                wait_set.push(Arc::clone(c));
             }
-            match self.demote_cell(v) {
-                Ok(freed) => resident -= freed,
-                Err(_) => {
-                    // Unwritable spill file (disk full, bad dir): the
-                    // slice stays resident — over budget beats serving
-                    // nothing — and the error is counted.
-                    self.per_shard[v.shard].spill_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if resident <= self.budget {
+            // Under budget right now: nothing to do, nothing to wait on.
+            return (Vec::new(), Vec::new());
+        }
+        let mut jobs: Vec<Arc<SliceCell>> = Vec::new();
+        if resident - in_flight > self.budget {
+            let mut victims: Vec<&Arc<SliceCell>> = live
+                .iter()
+                .filter(|c| c.is_resident() && !c.demote_pending.load(Ordering::Acquire))
+                .collect();
+            // Coldest first, deterministic tie-break; the protected cell
+            // sorts last. Keys are cached: concurrent touches must not
+            // feed the sort an inconsistent ordering.
+            victims.sort_by_cached_key(|c| {
+                let protected = keep.is_some_and(|k| Arc::ptr_eq(k, *c));
+                (protected, c.heat_score(), c.shard, c.table, c.global_lo)
+            });
+            let mut effective = resident - in_flight;
+            for v in victims {
+                if effective <= self.budget {
+                    break;
+                }
+                if self.claim_demote(v) {
+                    effective -= v.bytes;
+                    jobs.push(Arc::clone(v));
+                    wait_set.push(Arc::clone(v));
+                }
+            }
+        }
+        (wait_set, jobs)
+    }
+
+    fn claim_demote(&self, cell: &Arc<SliceCell>) -> bool {
+        if cell
+            .demote_pending
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            self.in_flight_demotes.fetch_add(1, Ordering::AcqRel);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn finish_demote(&self, cell: &SliceCell) {
+        cell.demote_pending.store(false, Ordering::Release);
+        self.in_flight_demotes.fetch_sub(1, Ordering::AcqRel);
+        self.notify_transition();
+    }
+
+    /// Hand claimed victims to the I/O pool, or run them inline (still
+    /// off the registry lock) when no pool exists.
+    fn dispatch_demotes(&self, jobs: Vec<Arc<SliceCell>>) {
+        match &self.io {
+            Some(q) => {
+                for cell in jobs {
+                    q.push_back(IoJob::Demote(cell));
+                }
+            }
+            None => {
+                for cell in &jobs {
+                    self.run_demote(cell);
                 }
             }
         }
     }
 
-    /// Move one cell to the disk tier (writing its spill file the first
-    /// time); returns the resident bytes freed (0 if already spilled).
-    /// Caller holds the registry lock — every tier *transition* does, so
-    /// the tier cannot flip between the read below and the final swap —
-    /// but the victim's tier lock is NOT held across the file write:
-    /// lookups touching the victim keep serving the resident slice for
-    /// the whole (one-time, write-once) serialization and only wait out
-    /// the brief pointer swap at the end.
+    /// Demote job body (claim already held): write (first time), flip,
+    /// release. Errors are counted; the cell then stays resident — over
+    /// budget beats serving nothing.
+    fn run_demote(&self, cell: &Arc<SliceCell>) {
+        if self.demote_cell(cell).is_err() {
+            self.per_shard[cell.shard].spill_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.finish_demote(cell);
+    }
+
+    /// Block until every listed cell's demotion claim has cleared
+    /// (written and flipped, or failed). Lock-free with respect to the
+    /// registry: only the transition condvar's mutex is held, and only
+    /// across the predicate check.
+    fn wait_demotes(&self, cells: &[Arc<SliceCell>]) {
+        if cells.is_empty() {
+            return;
+        }
+        let mut guard = lock_ignore_poison(&self.transitions);
+        while cells.iter().any(|c| c.demote_pending.load(Ordering::Acquire)) {
+            guard = self
+                .transition_cv
+                .wait(guard)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Empty critical section pairing with the waiters: a claim flag is
+    /// always cleared before this runs, and waiters hold the transitions
+    /// mutex from their predicate check until they park, so the notify
+    /// can never be lost.
+    fn notify_transition(&self) {
+        drop(lock_ignore_poison(&self.transitions));
+        self.transition_cv.notify_all();
+    }
+
+    /// Move one cell to the disk tier (streaming its spill file the
+    /// first time); returns the resident bytes freed (0 if it was not
+    /// resident). Caller holds the cell's demote claim, NOT the registry
+    /// lock: the whole serialization runs lock-free — lookups touching
+    /// the victim keep serving the resident slice for the entire write,
+    /// and promotions of other cells proceed in parallel. The registry
+    /// mutex is taken only for the final tier-pointer flip.
     fn demote_cell(&self, cell: &Arc<SliceCell>) -> io::Result<usize> {
         let Some(slice) = cell.resident() else { return Ok(0) };
         let mut file_len = cell.file_len.load(Ordering::Relaxed);
         if file_len == 0 {
-            file_len = match write_spill(&cell.spill_path, &slice) {
-                Ok(n) => n,
-                Err(e) => {
-                    // A half-written file must not linger: it would leak
-                    // (Drop only deletes when file_len > 0) and block the
-                    // spill directory's removal on shutdown.
-                    let _ = fs::remove_file(&cell.spill_path);
-                    return Err(e);
-                }
-            };
+            let (total, payload) = write_spill(&cell.spill_path, &slice)?;
+            file_len = total;
             cell.file_len.store(file_len, Ordering::Relaxed);
             self.spill_write_bytes.fetch_add(file_len, Ordering::Relaxed);
+            self.demote_stream_bytes.fetch_add(payload, Ordering::Relaxed);
         }
-        *write_ignore_poison(&cell.tier) = SliceTier::Spilled(SpillHandle {
-            path: cell.spill_path.clone(),
-            file_len,
-        });
+        {
+            let _reg = lock_ignore_poison(&self.cells);
+            *write_ignore_poison(&cell.tier) = SliceTier::Spilled(SpillHandle {
+                path: cell.spill_path.clone(),
+                file_len,
+            });
+        }
         self.per_shard[cell.shard].demotions.fetch_add(1, Ordering::Relaxed);
         Ok(cell.bytes)
     }
-}
 
-impl Drop for SliceStore {
-    fn drop(&mut self) {
-        // Only per-run default directories are removed (and only once
-        // every cell — so every spill file — is gone; a shared directory
-        // with other live stores survives). An operator-supplied
-        // --spill-dir belongs to the operator and stays in place.
-        if self.cleanup_dir {
-            let _ = fs::remove_dir(&self.dir);
+    fn sweep_orphans(&self) {
+        let me = process_token();
+        let Ok(entries) = fs::read_dir(&self.dir) else { return };
+        let cells: Vec<Arc<SliceCell>> = {
+            let mut reg = lock_ignore_poison(&self.cells);
+            reg.retain(|w| w.strong_count() > 0);
+            reg.iter().filter_map(Weak::upgrade).collect()
+        };
+        // Lazy content fingerprints: serializing a slice through a
+        // hash-only sink is CPU work, so each candidate pays it at most
+        // once however many orphans probe it.
+        let mut digests: Vec<Option<Option<(u64, u64)>>> = vec![None; cells.len()];
+        let mut deleted = 0u64;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            // Only files of our own naming scheme are ours to judge; an
+            // operator's directory may hold unrelated data.
+            if !name.starts_with("slice-") {
+                continue;
+            }
+            let is_tmp = name.ends_with(".spill.tmp");
+            if !is_tmp && !name.ends_with(".spill") {
+                continue;
+            }
+            // Files bearing this process's run token belong to live
+            // sibling stores sharing the directory — never adopt or
+            // delete them. A dead predecessor's files carry a different
+            // token even when the OS recycled our pid.
+            if spill_file_token(name) == Some(me) {
+                continue;
+            }
+            if is_tmp {
+                // A crashed demotion's half-written temp: always garbage
+                // (a completed write renames away from .tmp atomically).
+                if fs::remove_file(&path).is_ok() {
+                    deleted += 1;
+                }
+                continue;
+            }
+            if self.try_adopt(&path, &cells, &mut digests) {
+                continue;
+            }
+            if fs::remove_file(&path).is_ok() {
+                deleted += 1;
+            }
         }
+        self.orphans_deleted.fetch_add(deleted, Ordering::Relaxed);
+    }
+
+    /// Adopt `path` into an admitted cell if its (validated) payload is
+    /// byte-identical to what that cell's first demotion would write:
+    /// rename it onto the cell's reserved path and mark the write-once
+    /// step done. Returns whether the file was adopted.
+    fn try_adopt(
+        &self,
+        path: &Path,
+        cells: &[Arc<SliceCell>],
+        digests: &mut [Option<Option<(u64, u64)>>],
+    ) -> bool {
+        let Ok(info) = read_orphan(path) else { return false };
+        for (i, cell) in cells.iter().enumerate() {
+            if cell.file_len.load(Ordering::Relaxed) != 0 {
+                continue; // already has its own file
+            }
+            if info.lo != cell.global_lo || info.hi != cell.global_lo + cell.rows {
+                continue;
+            }
+            let digest = digests[i].get_or_insert_with(|| cell_digest(cell));
+            if *digest != Some((info.payload_len, info.checksum)) {
+                continue;
+            }
+            if fs::rename(path, &cell.spill_path).is_err() {
+                return false; // unusable in place; let the caller delete it
+            }
+            cell.file_len.store(info.file_len, Ordering::Relaxed);
+            self.per_shard[cell.shard].orphans_adopted.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
     }
 }
 
-fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
+/// `(payload_len, fnv1a64)` of a cell's serialization, computed through
+/// a hash-only sink — no bytes are buffered or written anywhere.
+fn cell_digest(cell: &SliceCell) -> Option<(u64, u64)> {
+    let slice = cell.resident()?;
+    let mut hw = HashingWriter::new(io::sink());
+    serial::write_any(&mut hw, slice.table()).ok()?;
+    Some(hw.digest())
+}
+
+/// The run-token component of a `slice-<token:hex>-<seq>.spill[.tmp]`
+/// file name.
+fn spill_file_token(name: &str) -> Option<u64> {
+    let rest = name.strip_prefix("slice-")?;
+    let (token, _) = rest.split_once('-')?;
+    u64::from_str_radix(token, 16).ok()
+}
+
+/// A validated orphan spill file's identity.
+struct OrphanInfo {
+    lo: usize,
+    hi: usize,
+    payload_len: u64,
+    checksum: u64,
+    file_len: u64,
+}
+
+/// Parse and fully validate an orphan candidate: header fields, payload
+/// length, and checksum (the payload is hash-streamed, never buffered).
+fn read_orphan(path: &Path) -> io::Result<OrphanInfo> {
+    let mut f = File::open(path)?;
+    let file_len = f.metadata()?.len();
+    let mut header = [0u8; SPILL_HEADER_BYTES as usize];
+    f.read_exact(&mut header)?;
+    if &header[0..8] != SPILL_MAGIC {
+        return Err(bad("magic"));
     }
-    h
+    let u64_at = |off: usize| {
+        u64::from_le_bytes(header[off..off + 8].try_into().expect("fixed-width header"))
+    };
+    let lo = u64_at(8) as usize;
+    let hi = u64_at(16) as usize;
+    let payload_len = u64_at(24);
+    let checksum = u64_at(32);
+    if payload_len != file_len.saturating_sub(SPILL_HEADER_BYTES) {
+        return Err(bad("payload length"));
+    }
+    let mut hw = HashingWriter::new(io::sink());
+    io::copy(&mut f, &mut hw)?;
+    if hw.digest() != (payload_len, checksum) {
+        return Err(bad("checksum"));
+    }
+    Ok(OrphanInfo { lo, hi, payload_len, checksum, file_len })
 }
 
 fn bad(what: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, format!("corrupt spill file: {what}"))
 }
 
-/// Serialize `slice` to `path` in the spill container; returns the file
-/// length. The payload is the slice's table in its native `table::serial`
-/// encoding, framed with the global row range and an FNV-1a checksum.
-fn write_spill(path: &Path, slice: &TableSlice) -> io::Result<u64> {
-    let mut payload = Vec::new();
-    serial::write_any(&mut payload, slice.table())?;
+/// Stream `slice` into the spill container at `path`, crash-safely:
+/// the bytes go to `<path>.tmp` first (payload streamed chunk by chunk
+/// through a [`HashingWriter`] — no full serialized payload in RAM),
+/// the header's length/checksum are patched in place, and the temp is
+/// atomically renamed onto `path`. Returns `(file_len, payload_len)`.
+/// On any failure the temp is removed and `path` is untouched.
+fn write_spill(path: &Path, slice: &TableSlice) -> io::Result<(u64, u64)> {
+    let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+    let result = write_spill_tmp(&tmp, slice).and_then(|lens| {
+        fs::rename(&tmp, path)?;
+        Ok(lens)
+    });
+    if result.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    result
+}
+
+fn write_spill_tmp(tmp: &Path, slice: &TableSlice) -> io::Result<(u64, u64)> {
     let range = slice.global_rows();
-    let mut w = BufWriter::new(File::create(path)?);
+    let mut w = BufWriter::new(File::create(tmp)?);
     w.write_all(SPILL_MAGIC)?;
     w.write_all(&(range.start as u64).to_le_bytes())?;
     w.write_all(&(range.end as u64).to_le_bytes())?;
-    w.write_all(&(payload.len() as u64).to_le_bytes())?;
-    w.write_all(&fnv1a64(&payload).to_le_bytes())?;
-    w.write_all(&payload)?;
-    w.flush()?;
-    Ok(SPILL_HEADER_BYTES + payload.len() as u64)
+    // Placeholder for [payload_len][checksum], patched after streaming.
+    w.write_all(&[0u8; 16])?;
+    let mut hw = HashingWriter::new(w);
+    serial::write_any(&mut hw, slice.table())?;
+    let (payload_len, checksum) = hw.digest();
+    let mut f = hw.into_inner().into_inner().map_err(|e| e.into_error())?;
+    f.seek(SeekFrom::Start(SPILL_LEN_OFFSET))?;
+    f.write_all(&payload_len.to_le_bytes())?;
+    f.write_all(&checksum.to_le_bytes())?;
+    Ok((SPILL_HEADER_BYTES + payload_len, payload_len))
 }
 
 /// Load and validate a spill file against the cell that owns it. Every
@@ -676,7 +1417,7 @@ fn read_spill(handle: &SpillHandle, cell: &SliceCell) -> io::Result<TableSlice> 
     }
     let mut payload = vec![0u8; payload_len as usize];
     f.read_exact(&mut payload)?;
-    if fnv1a64(&payload) != checksum {
+    if serial::fnv1a64(&payload) != checksum {
         return Err(bad("checksum"));
     }
     let table = serial::read_any(&mut payload.as_slice())?;
@@ -693,11 +1434,20 @@ mod tests {
     use crate::table::serial::AnyTable;
     use crate::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
 
+    fn cfg_for(dir: PathBuf, budget: usize) -> SpillConfig {
+        SpillConfig {
+            dir,
+            resident_budget: budget,
+            cleanup_dir: true,
+            io_threads: 2,
+            prefetch_window: 0,
+        }
+    }
+
     fn tmp_store(name: &str, budget: usize) -> SliceStore {
         let dir = std::env::temp_dir()
             .join(format!("emberq_store_test_{name}_{}", std::process::id()));
-        let cfg = SpillConfig { dir, resident_budget: budget, cleanup_dir: true };
-        SliceStore::new(&cfg, 4, false).unwrap()
+        SliceStore::new(&cfg_for(dir, budget), 4, false).unwrap()
     }
 
     fn any_table(fmt: usize, rows: usize, dim: usize, seed: u64) -> AnyTable {
@@ -715,6 +1465,16 @@ mod tests {
             _ => AnyTable::Codebook(
                 t.quantize_codebook(CodebookKind::TwoTier { k: 3 }, ScaleBiasDtype::F16),
             ),
+        }
+    }
+
+    /// Spin (bounded) until `cond` holds — the async pool's completions
+    /// are signaled, not synchronous, so tests poll with a watchdog.
+    fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+        let t0 = Instant::now();
+        while !cond() {
+            assert!(t0.elapsed() < Duration::from_secs(20), "timed out waiting for {what}");
+            std::thread::yield_now();
         }
     }
 
@@ -752,6 +1512,29 @@ mod tests {
         assert_eq!(s.demotions, 4);
         assert!(s.spill_read_bytes > 0 && s.spill_write_bytes > 0);
         assert_eq!(s.spill_errors, 0);
+    }
+
+    #[test]
+    fn streaming_demote_is_crash_safe_and_counted() {
+        let store = tmp_store("streaming", usize::MAX);
+        let slice = TableSlice::cut(&any_table(1, 40, 16, 0x71), 0..40);
+        let cell = store.admit(0, 0, slice);
+        assert_eq!(store.demote_all().unwrap(), 1);
+        // The temp never survives a completed write; the final file does.
+        let path = cell.spill_handle().unwrap().path().to_path_buf();
+        assert!(path.exists());
+        assert!(
+            !PathBuf::from(format!("{}.tmp", path.display())).exists(),
+            "completed demote must leave no .tmp behind"
+        );
+        // Streamed-payload accounting: file bytes = header + payload.
+        let s = store.stats();
+        assert!(s.demote_stream_bytes > 0);
+        assert_eq!(s.spill_write_bytes, s.demote_stream_bytes + SPILL_HEADER_BYTES);
+        assert_eq!(s.spill_write_bytes, fs::metadata(&path).unwrap().len());
+        // And the streamed header round-trips through the validating
+        // reader (length + checksum were patched correctly).
+        assert!(store.promote(&cell).is_ok());
     }
 
     #[test]
@@ -885,9 +1668,9 @@ mod tests {
         // cadence consider a tick due, enough times that a's ancient
         // heat fully decays below fresh traffic.
         for _ in 0..25 {
-            *lock_ignore_poison(&store.last_tick) = Instant::now() - HEAT_TICK_INTERVAL;
-            let mut reg = lock_ignore_poison(&store.cells);
-            store.maybe_tick_locked(&mut reg);
+            *lock_ignore_poison(&store.inner.last_tick) = Instant::now() - HEAT_TICK_INTERVAL;
+            let mut reg = lock_ignore_poison(&store.inner.cells);
+            store.inner.maybe_tick_locked(&mut reg);
         }
         b.touch(10);
         store.promote(&b).unwrap();
@@ -909,20 +1692,20 @@ mod tests {
         a.touch(64);
         store.tick(); // an external clock takes over
         assert_eq!(a.heat_score(), 64);
-        *lock_ignore_poison(&store.last_tick) = Instant::now() - HEAT_TICK_INTERVAL;
+        *lock_ignore_poison(&store.inner.last_tick) = Instant::now() - HEAT_TICK_INTERVAL;
         {
-            let mut reg = lock_ignore_poison(&store.cells);
-            store.maybe_tick_locked(&mut reg);
+            let mut reg = lock_ignore_poison(&store.inner.cells);
+            store.inner.maybe_tick_locked(&mut reg);
         }
         assert_eq!(a.heat_score(), 64, "no fallback decay inside the lease");
         // The external clock goes silent past its lease: the next
         // promotion-path check decays again.
-        *lock_ignore_poison(&store.last_external_tick) =
+        *lock_ignore_poison(&store.inner.last_external_tick) =
             Some(Instant::now() - EXTERNAL_CLOCK_LEASE);
-        *lock_ignore_poison(&store.last_tick) = Instant::now() - HEAT_TICK_INTERVAL;
+        *lock_ignore_poison(&store.inner.last_tick) = Instant::now() - HEAT_TICK_INTERVAL;
         {
-            let mut reg = lock_ignore_poison(&store.cells);
-            store.maybe_tick_locked(&mut reg);
+            let mut reg = lock_ignore_poison(&store.inner.cells);
+            store.inner.maybe_tick_locked(&mut reg);
         }
         assert_eq!(a.heat_score(), 32, "expired lease hands the clock back");
     }
@@ -936,21 +1719,22 @@ mod tests {
         let store = tmp_store("catchup", usize::MAX);
         let a = store.admit(0, 0, TableSlice::cut(&any_table(0, 8, 4, 0xB2), 0..8));
         a.touch(1 << 20);
-        *lock_ignore_poison(&store.last_tick) = Instant::now() - 10 * HEAT_TICK_INTERVAL;
+        *lock_ignore_poison(&store.inner.last_tick) =
+            Instant::now() - 10 * HEAT_TICK_INTERVAL;
         {
-            let mut reg = lock_ignore_poison(&store.cells);
-            store.maybe_tick_locked(&mut reg);
+            let mut reg = lock_ignore_poison(&store.inner.cells);
+            store.inner.maybe_tick_locked(&mut reg);
         }
         // The first catch-up tick folds the fresh burst (no halving),
         // the other nine halve it: 2^20 >> 9.
         assert_eq!(a.heat_score(), 1 << 11, "10 elapsed intervals, one catch-up pass");
         // And an absurd gap is capped at 64 ticks (enough to zero this
         // heat) instead of looping a million times.
-        *lock_ignore_poison(&store.last_tick) =
+        *lock_ignore_poison(&store.inner.last_tick) =
             Instant::now() - 1_000_000 * HEAT_TICK_INTERVAL;
         {
-            let mut reg = lock_ignore_poison(&store.cells);
-            store.maybe_tick_locked(&mut reg);
+            let mut reg = lock_ignore_poison(&store.inner.cells);
+            store.inner.maybe_tick_locked(&mut reg);
         }
         assert_eq!(a.heat_score(), 0, "capped catch-up still decays stale heat to zero");
     }
@@ -962,13 +1746,13 @@ mod tests {
         // would cool ahead of the table score that justified them.
         let dir = std::env::temp_dir()
             .join(format!("emberq_store_test_inert_{}", std::process::id()));
-        let cfg = SpillConfig { dir, resident_budget: usize::MAX, cleanup_dir: true };
-        let store = SliceStore::new(&cfg, 4, true).unwrap();
+        let store = SliceStore::new(&cfg_for(dir, usize::MAX), 4, true).unwrap();
         let a = store.admit(0, 0, TableSlice::cut(&any_table(0, 16, 4, 0xB0), 0..16));
         a.touch(100);
-        *lock_ignore_poison(&store.last_tick) = Instant::now() - 10 * HEAT_TICK_INTERVAL;
-        let mut reg = lock_ignore_poison(&store.cells);
-        store.maybe_tick_locked(&mut reg);
+        *lock_ignore_poison(&store.inner.last_tick) =
+            Instant::now() - 10 * HEAT_TICK_INTERVAL;
+        let mut reg = lock_ignore_poison(&store.inner.cells);
+        store.inner.maybe_tick_locked(&mut reg);
         drop(reg);
         assert_eq!(a.heat_score(), 100, "no promotion-path decay");
         store.tick(); // the rebalancer's tick folds and decays as usual
@@ -993,5 +1777,173 @@ mod tests {
         assert!(b.is_resident(), "the freshly promoted cell stays");
         assert!(!a.is_resident(), "the other one pays");
         assert!(store.resident_bytes() <= bytes);
+    }
+
+    #[test]
+    fn registry_lock_is_free_during_demote_serialization() {
+        // The tentpole contract: the registry mutex is held only for the
+        // cell-state flips, never across a victim's serialization. A big
+        // FP32 slice makes the first-time write take real wall time; a
+        // concurrent thread must be able to take the registry lock (and
+        // promote a different cell) while that write is in flight.
+        let store = tmp_store("off_lock", usize::MAX);
+        // Small cell, spilled up front (tiny file).
+        let small = TableSlice::cut(&any_table(1, 16, 8, 0xC0), 0..16);
+        let mut want = vec![0.0f32; 8];
+        small.pool(&[0, 15], &mut want);
+        let b = store.admit(1, 1, small);
+        assert_eq!(store.demote_all().unwrap(), 1);
+        // Big cell: ~16 MB of f32, serialized 4 bytes at a time — its
+        // first demotion takes milliseconds, not microseconds.
+        let a = store.admit(0, 0, TableSlice::cut(&any_table(0, 16_384, 256, 0xC1), 0..16_384));
+        std::thread::scope(|scope| {
+            let t = scope.spawn(|| store.demote_all().unwrap());
+            wait_for("the big demote to start", || store.demotions_in_flight() > 0);
+            // While the victim is serializing, the registry lock must be
+            // takeable (the I/O thread only grabs it for the final flip).
+            let mut proven = false;
+            while store.demotions_in_flight() > 0 {
+                if let Ok(guard) = store.inner.cells.try_lock() {
+                    let still_writing = store.demotions_in_flight() > 0;
+                    drop(guard);
+                    if still_writing {
+                        proven = true;
+                        break;
+                    }
+                }
+                std::thread::yield_now();
+            }
+            assert!(proven, "registry lock was held for the whole serialization");
+            // And a promotion of a *different* cell completes while the
+            // victim is still being written.
+            let back = store.promote(&b).unwrap();
+            let mut got = vec![0.0f32; 8];
+            back.pool(&[0, 15], &mut got);
+            assert_eq!(got, want, "concurrent promote must serve bit-exactly");
+            assert_eq!(t.join().unwrap(), 1, "demote_all demoted exactly the big cell");
+        });
+        assert!(!a.is_resident());
+        assert!(b.is_resident());
+        assert_eq!(store.stats().spill_errors, 0);
+    }
+
+    #[test]
+    fn orphan_sweep_adopts_valid_files_and_deletes_strays() {
+        let dir = std::env::temp_dir()
+            .join(format!("emberq_store_test_sweep_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mk_slice = || TableSlice::cut(&any_table(1, 30, 8, 0xD0), 2..28);
+        let mut want = vec![0.0f32; 8];
+        mk_slice().pool(&[0, 25, 13], &mut want);
+        // A previous "run" writes a spill file whose bytes we keep as an
+        // orphan (crafted under run token 0, which a live store can
+        // never hold — the sweep must never touch files bearing the
+        // live process's token, which belong to sibling stores). The
+        // unrelated table's file plays the stale stray.
+        {
+            let mut cfg = cfg_for(dir.clone(), usize::MAX);
+            cfg.cleanup_dir = false;
+            let prev = SliceStore::new(&cfg, 4, false).unwrap();
+            let cell = prev.admit(0, 0, mk_slice());
+            let other =
+                prev.admit(1, 1, TableSlice::cut(&any_table(1, 30, 8, 0xD1), 2..28));
+            prev.demote_all().unwrap();
+            fs::copy(&cell.spill_path, dir.join("slice-0-100.spill")).unwrap();
+            // Same shape + range, different content: must NOT be adopted.
+            fs::copy(&other.spill_path, dir.join("slice-0-101.spill")).unwrap();
+        } // prev drops: its own files deleted, our copies survive
+        fs::write(dir.join("slice-0-102.spill.tmp"), b"half-written junk").unwrap();
+        fs::write(dir.join("slice-0-103.spill"), b"not a spill file at all").unwrap();
+        fs::write(dir.join("keep.txt"), b"operator data, not ours").unwrap();
+
+        let mut cfg = cfg_for(dir.clone(), usize::MAX);
+        cfg.cleanup_dir = false;
+        let store = SliceStore::new(&cfg, 4, false).unwrap();
+        let cell = store.admit(2, 0, mk_slice());
+        store.sweep_orphans();
+        let s = store.stats();
+        assert_eq!(s.orphans_adopted, 1, "the byte-identical orphan is adopted");
+        assert_eq!(
+            s.orphans_deleted, 3,
+            "tmp + garbage + wrong-content strays are deleted"
+        );
+        assert!(dir.join("keep.txt").exists(), "foreign files are never touched");
+        assert!(!dir.join("slice-0-101.spill").exists());
+        assert!(!dir.join("slice-0-102.spill.tmp").exists());
+        assert!(!dir.join("slice-0-103.spill").exists());
+        // Adoption attribution lands on the owning cell's shard.
+        assert_eq!(store.shard_spill(2).orphans_adopted, 1);
+        // The payoff: the adopted file satisfies the write-once step, so
+        // the first demotion flips without writing a byte...
+        assert!(cell.file_len.load(Ordering::Relaxed) > 0);
+        assert_eq!(store.demote_all().unwrap(), 1);
+        assert_eq!(store.stats().spill_write_bytes, 0, "no rewrite after adoption");
+        // ...and the re-adopted file serves bit-exactly.
+        let back = store.promote(&cell).unwrap();
+        let mut got = vec![0.0f32; 8];
+        back.pool(&[0, 25, 13], &mut got);
+        assert_eq!(got, want, "adopted spill file must serve bit-exactly");
+        assert_eq!(store.stats().spill_errors, 0);
+        drop(back);
+        drop(cell);
+        drop(store);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefetch_stages_the_read_and_promote_consumes_it() {
+        let store = tmp_store("prefetch", usize::MAX);
+        let slice = TableSlice::cut(&any_table(1, 24, 8, 0xE0), 0..24);
+        let mut want = vec![0.0f32; 8];
+        slice.pool(&[3, 23], &mut want);
+        let a = store.admit(0, 0, slice);
+        store.demote_all().unwrap();
+        let file_len = a.spill_handle().unwrap().file_len();
+        assert_eq!(store.prefetch([&a]), 1, "one async read issued");
+        wait_for("the prefetch to stage", || store.stats().prefetches == 1);
+        assert_eq!(store.stats().spill_read_bytes, file_len);
+        assert!(!a.is_resident(), "staging must not install (budget accounting)");
+        // The promotion consumes the staged copy: no second read.
+        let back = store.promote(&a).unwrap();
+        assert!(a.is_resident());
+        assert_eq!(store.stats().spill_read_bytes, file_len, "read exactly once");
+        assert_eq!(store.stats().promotions, 1);
+        let mut got = vec![0.0f32; 8];
+        back.pool(&[3, 23], &mut got);
+        assert_eq!(got, want);
+        // Prefetching a resident cell is a no-op.
+        assert_eq!(store.prefetch([&a]), 0);
+    }
+
+    #[test]
+    fn warm_window_stages_the_hottest_spilled_cell_and_ticks_drop_stale_stages() {
+        let dir = std::env::temp_dir()
+            .join(format!("emberq_store_test_warm_{}", std::process::id()));
+        let mut cfg = cfg_for(dir, usize::MAX);
+        cfg.prefetch_window = 1;
+        let store = SliceStore::new(&cfg, 4, false).unwrap();
+        let slice = |seed| TableSlice::cut(&any_table(1, 24, 8, seed), 0..24);
+        let a = store.admit(0, 0, slice(0xE1));
+        let b = store.admit(1, 1, slice(0xE2));
+        store.demote_all().unwrap();
+        b.touch(50);
+        a.touch(5);
+        store.tick(); // warms exactly the hottest spilled cell: b
+        wait_for("the warmer to stage b", || store.stats().prefetches == 1);
+        let b_len = b.spill_handle().unwrap().file_len();
+        assert_eq!(store.stats().spill_read_bytes, b_len, "only b was read");
+        store.promote(&b).unwrap();
+        assert_eq!(store.stats().spill_read_bytes, b_len, "warm read was consumed");
+        // A staged copy nobody consumes is dropped on the next tick: the
+        // eventual promote pays a fresh read.
+        assert_eq!(store.prefetch([&a]), 1);
+        wait_for("the prefetch to stage a", || store.stats().prefetches == 2);
+        let read_after_stage = store.stats().spill_read_bytes;
+        store.tick(); // drops a's stale staged slice (b is resident now)
+        store.promote(&a).unwrap();
+        assert!(
+            store.stats().spill_read_bytes > read_after_stage,
+            "stale staged copy was dropped, so the promote re-read the file"
+        );
     }
 }

@@ -87,6 +87,71 @@ fn bad(what: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, format!("corrupt table file: {what}"))
 }
 
+/// One-shot FNV-1a-64 of a byte slice (the checksum both the spill
+/// container and [`HashingWriter`] use — byte-for-byte the same fold, so
+/// a streamed hash always equals the buffered one).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = fnv_fold(h, b);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+#[inline]
+fn fnv_fold(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+}
+
+/// A streaming checksum/length adapter: forwards every chunk to the
+/// inner writer while folding it into a running FNV-1a-64 hash and byte
+/// count. This is what lets `shard::store` demote a slice straight to
+/// its spill file chunk by chunk — [`write_any`] streams through one of
+/// these, so no full serialized payload ever sits in RAM, yet the
+/// header's `payload_len`/checksum come out identical to the buffered
+/// encoding. With [`std::io::sink`] as the inner writer it doubles as a
+/// content fingerprinter (the orphan-sweep's adoption check hashes a
+/// resident slice without writing a byte anywhere).
+pub struct HashingWriter<W> {
+    inner: W,
+    hash: u64,
+    len: u64,
+}
+
+impl<W> HashingWriter<W> {
+    /// Wrap `inner`, starting a fresh hash and byte count.
+    pub fn new(inner: W) -> HashingWriter<W> {
+        HashingWriter { inner, hash: FNV_OFFSET, len: 0 }
+    }
+
+    /// `(bytes_written, fnv1a64)` of everything streamed so far.
+    pub fn digest(&self) -> (u64, u64) {
+        (self.len, self.hash)
+    }
+
+    /// Unwrap the inner writer (does not flush).
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for HashingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        for &b in &buf[..n] {
+            self.hash = fnv_fold(self.hash, b);
+        }
+        self.len += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
 fn w_u64<W: Write>(w: &mut W, v: u64) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
 }
@@ -346,6 +411,42 @@ mod tests {
                 "format must survive the round trip"
             );
         }
+    }
+
+    #[test]
+    fn hashing_writer_matches_buffered_encoding() {
+        // The streaming writer must produce exactly the bytes (and hash)
+        // of the buffered path, for every format — the spill container's
+        // header depends on it.
+        let t = EmbeddingTable::randn(11, 16, 27);
+        for table in [
+            AnyTable::F32(t.clone()),
+            AnyTable::Fused(t.quantize_fused(&GreedyQuantizer::default(), 4, ScaleBiasDtype::F16)),
+            AnyTable::Codebook(t.quantize_codebook(CodebookKind::TwoTier { k: 3 }, ScaleBiasDtype::F32)),
+        ] {
+            let mut buffered = Vec::new();
+            write_any(&mut buffered, &table).unwrap();
+            let mut hw = HashingWriter::new(Vec::new());
+            write_any(&mut hw, &table).unwrap();
+            let (len, hash) = hw.digest();
+            let streamed = hw.into_inner();
+            assert_eq!(streamed, buffered, "streamed bytes must equal buffered bytes");
+            assert_eq!(len, buffered.len() as u64);
+            assert_eq!(hash, fnv1a64(&buffered), "running hash must equal one-shot hash");
+            // And the sink-backed fingerprint agrees without storing bytes.
+            let mut sink = HashingWriter::new(std::io::sink());
+            write_any(&mut sink, &table).unwrap();
+            assert_eq!(sink.digest(), (len, hash));
+        }
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // Standard FNV-1a-64 vectors pin the fold (the spill-file
+        // checksum must never silently change).
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
     }
 
     #[test]

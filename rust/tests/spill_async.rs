@@ -1,0 +1,279 @@
+//! The async spill I/O engine, end to end: startup orphan sweeps after
+//! an unclean shutdown (adoption must serve bit-exactly and skip the
+//! rewrite), prefetching promotions under budget churn, and concurrent
+//! serving while demotions stream in the background — all bit-identical
+//! to fully-resident serving.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use emberq::coordinator::TableSet;
+use emberq::data::trace::Request;
+use emberq::quant::AsymQuantizer;
+use emberq::shard::{ShardConfig, ShardedEngine};
+use emberq::table::serial::AnyTable;
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+use emberq::util::Rng;
+
+fn fused_set(num_tables: usize, rows: usize, dim: usize, seed: u64) -> TableSet {
+    TableSet::new(
+        (0..num_tables)
+            .map(|t| {
+                let tab = EmbeddingTable::randn_sigma(rows, dim, 0.1, seed + 17 * t as u64);
+                AnyTable::Fused(tab.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16))
+            })
+            .collect(),
+    )
+}
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("emberq_spill_async_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Unclean-shutdown simulation: a previous run's spill files survive as
+/// orphans (plus a half-written `*.tmp` and a corrupt stray). The next
+/// startup must adopt the valid ones — first demotion then skips the
+/// write entirely — delete the garbage, count both, and serve the
+/// re-adopted bytes bit-exactly.
+#[test]
+fn orphan_sweep_recovers_an_unclean_shutdown() {
+    let dir = test_dir("sweep");
+    let seed = 0xA51C;
+    let reference = fused_set(3, 120, 8, seed);
+    let cfg = ShardConfig {
+        num_shards: 2,
+        small_table_rows: usize::MAX, // 3 whole tables -> 3 cells
+        spill_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+
+    // "Previous run": spill everything, then impersonate a crash by
+    // copying every spill file to an orphan name under a dead run
+    // token (a clean drop deletes the engine's own files; the copies
+    // survive exactly like files orphaned by a kill -9 would have).
+    {
+        let engine = ShardedEngine::start(fused_set(3, 120, 8, seed), &cfg);
+        assert_eq!(engine.spill_all().unwrap(), 3);
+        let mut orphaned = 0usize;
+        for (i, entry) in std::fs::read_dir(&dir).unwrap().flatten().enumerate() {
+            let path = entry.path();
+            if path.extension().is_some_and(|e| e == "spill") {
+                std::fs::copy(&path, dir.join(format!("slice-0-{i}.spill"))).unwrap();
+                orphaned += 1;
+            }
+        }
+        assert_eq!(orphaned, 3, "every cell must have produced a spill file");
+    }
+    std::fs::write(dir.join("slice-0-90.spill.tmp"), b"torn demote write").unwrap();
+    std::fs::write(dir.join("slice-0-91.spill"), b"corrupt stray").unwrap();
+    std::fs::write(dir.join("operator-notes.txt"), b"not ours").unwrap();
+
+    // "Recovery run": same model, same directory.
+    let engine = ShardedEngine::start(fused_set(3, 120, 8, seed), &cfg);
+    let stats = engine.store_stats().expect("spill machinery active");
+    assert_eq!(stats.orphans_adopted, 3, "every orphan matches a carved cell");
+    assert_eq!(stats.orphans_deleted, 2, "tmp + corrupt stray deleted");
+    assert_eq!(stats.spill_write_bytes, 0);
+    assert!(dir.join("operator-notes.txt").exists(), "foreign files untouched");
+    // Per-shard attribution flows into ShardStats; the shard-less
+    // deletion total is reported on shard 0.
+    let per_shard = engine.shard_stats();
+    assert_eq!(per_shard.iter().map(|s| s.orphans_adopted).sum::<u64>(), 3);
+    assert_eq!(per_shard[0].orphans_deleted, 2);
+    assert_eq!(per_shard.iter().skip(1).map(|s| s.orphans_deleted).sum::<u64>(), 0);
+    // The payoff: demoting everything writes nothing (the adopted files
+    // already satisfy the write-once step)...
+    assert_eq!(engine.spill_all().unwrap(), 3);
+    assert_eq!(
+        engine.store_stats().unwrap().spill_write_bytes,
+        0,
+        "adopted files must spare the serialization"
+    );
+    // ...and serving from the re-adopted files is bit-exact.
+    let req = Request { ids: vec![vec![0, 119, 60], vec![7, 7], vec![13]] };
+    let got = engine.lookup(&req);
+    let mut want = vec![0.0f32; 3 * 8];
+    for (t, ids) in req.ids.iter().enumerate() {
+        reference.pool(t, ids, &mut want[t * 8..(t + 1) * 8]);
+    }
+    assert_eq!(got, want, "re-adopted spill files must serve bit-exactly");
+    assert_eq!(engine.store_stats().unwrap().spill_errors, 0);
+    drop(engine);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A content change between runs must NOT be adopted: the sweep hash-
+/// matches payloads, so stale orphans from a different model are
+/// deleted, never served.
+#[test]
+fn orphan_sweep_rejects_stale_content() {
+    let dir = test_dir("stale");
+    let cfg = ShardConfig {
+        num_shards: 2,
+        small_table_rows: usize::MAX,
+        spill_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    {
+        let engine = ShardedEngine::start(fused_set(1, 64, 8, 0xBAD), &cfg);
+        engine.spill_all().unwrap();
+        for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+            if entry.path().extension().is_some_and(|e| e == "spill") {
+                std::fs::copy(entry.path(), dir.join("slice-0-0.spill")).unwrap();
+            }
+        }
+    }
+    // Same shape, different weights: the orphan's range matches but its
+    // payload hash cannot.
+    let reference = fused_set(1, 64, 8, 0x600D);
+    let engine = ShardedEngine::start(fused_set(1, 64, 8, 0x600D), &cfg);
+    let stats = engine.store_stats().unwrap();
+    assert_eq!(stats.orphans_adopted, 0, "stale content must not be adopted");
+    assert_eq!(stats.orphans_deleted, 1);
+    engine.spill_all().unwrap();
+    let req = Request { ids: vec![vec![0, 63, 31]] };
+    let mut want = vec![0.0f32; 8];
+    reference.pool(0, &req.ids[0], &mut want);
+    assert_eq!(engine.lookup(&req), want, "the fresh model's bytes serve");
+    drop(engine);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Budgeted serving with the async engine fully lit — overlapping
+/// segment prefetches (row-wise chunks), the heat-driven warmer, and
+/// background demotions — must stay bit-identical to the unsharded pool
+/// and at-or-under budget at rest, across spill_all churn.
+#[test]
+fn async_budgeted_serving_is_bit_identical_and_within_budget() {
+    let seed = 0xA5F0;
+    let reference = fused_set(2, 96, 8, seed);
+    let logical = reference.size_bytes();
+    let budget = logical / 3;
+    let engine = ShardedEngine::start(
+        fused_set(2, 96, 8, seed),
+        &ShardConfig {
+            num_shards: 4,
+            small_table_rows: 0, // row-wise chunks: spanning segments prefetch
+            resident_budget: Some(budget),
+            spill_io_threads: 2,
+            prefetch_window: 2,
+            ..Default::default()
+        },
+    );
+    let fw = engine.feature_width();
+    let mut rng = Rng::new(0xA5F1);
+    for round in 0..8 {
+        if round % 2 == 1 {
+            // Everything to disk: the next spanning request promotes
+            // several spilled chunks per segment -> overlapping reads.
+            engine.spill_all().unwrap();
+        }
+        if round == 4 {
+            // A rebalance pass ticks the store's heat clock, which also
+            // drives the prefetch_window warmer.
+            let _ = engine.rebalance_once();
+        }
+        let reqs: Vec<Request> = (0..3)
+            .map(|_| {
+                Request {
+                    ids: (0..2)
+                        .map(|_| {
+                            // Spanning id lists: hit all four chunks.
+                            (0..12).map(|_| rng.below(96) as u32).collect()
+                        })
+                        .collect(),
+                }
+            })
+            .collect();
+        let mut out = vec![1.0f32; reqs.len() * fw];
+        engine.lookup_batch_into(&reqs, &mut out);
+        for (slot, req) in reqs.iter().enumerate() {
+            for (t, ids) in req.ids.iter().enumerate() {
+                let mut want = vec![0.0f32; 8];
+                reference.pool(t, ids, &mut want);
+                assert_eq!(
+                    &out[slot * fw + t * 8..slot * fw + (t + 1) * 8],
+                    want.as_slice(),
+                    "round {round} slot {slot} table {t}"
+                );
+            }
+        }
+        let resident: usize = engine.shard_bytes().iter().sum();
+        assert!(
+            resident <= budget,
+            "round {round}: resident {resident} over budget {budget}"
+        );
+    }
+    let stats = engine.store_stats().unwrap();
+    assert_eq!(stats.spill_errors, 0);
+    assert!(stats.promotions > 0 && stats.demotions > 0);
+    assert!(
+        stats.prefetches > 0,
+        "spanning segments over spilled chunks must issue overlapping reads"
+    );
+    assert!(stats.demote_stream_bytes > 0, "demotions must stream their payloads");
+    // Per-shard prefetch counters reconcile with the total.
+    let per_shard: u64 = engine.shard_stats().iter().map(|s| s.prefetches).sum();
+    assert_eq!(per_shard, stats.prefetches);
+}
+
+/// Concurrency hammer: many client threads serve through a tight budget
+/// (tier churn on every batch) while spill_all storms run in between —
+/// every single lookup must match the unsharded pool bit for bit and
+/// nothing may deadlock.
+#[test]
+fn concurrent_clients_survive_background_tier_churn_bit_exactly() {
+    let seed = 0xA5E0;
+    let reference = Arc::new(fused_set(3, 80, 8, seed));
+    let logical = reference.size_bytes();
+    let engine = Arc::new(ShardedEngine::start(
+        fused_set(3, 80, 8, seed),
+        &ShardConfig {
+            num_shards: 2,
+            small_table_rows: usize::MAX,
+            resident_budget: Some(logical / 2),
+            spill_io_threads: 1, // a single I/O lane maximizes queueing
+            ..Default::default()
+        },
+    ));
+    let threads: Vec<_> = (0..4)
+        .map(|k| {
+            let engine = Arc::clone(&engine);
+            let reference = Arc::clone(&reference);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xA5E1 + k as u64);
+                for i in 0..30 {
+                    if i % 10 == 9 {
+                        engine.spill_all().expect("demote-all under load");
+                    }
+                    let req = Request {
+                        ids: (0..3)
+                            .map(|_| {
+                                (0..1 + rng.below(4)).map(|_| rng.below(80) as u32).collect()
+                            })
+                            .collect(),
+                    };
+                    let got = engine.lookup(&req);
+                    for (t, ids) in req.ids.iter().enumerate() {
+                        let mut want = vec![0.0f32; 8];
+                        reference.pool(t, ids, &mut want);
+                        assert_eq!(
+                            &got[t * 8..(t + 1) * 8],
+                            want.as_slice(),
+                            "thread {k} iter {i} table {t}"
+                        );
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("client thread must not panic");
+    }
+    let stats = engine.store_stats().unwrap();
+    assert_eq!(stats.spill_errors, 0);
+    assert!(stats.demotions > 0 && stats.promotions > 0);
+}
