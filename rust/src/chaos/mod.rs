@@ -1,0 +1,46 @@
+//! Deterministic chaos/scenario harness for the sharded serving engine.
+//!
+//! Real embedding tiers fail in boring, repeated ways: a worker thread
+//! panics, a spill file is corrupted or truncated under the server, the
+//! spill volume fills or disappears, the background I/O pool wedges —
+//! all while the model keeps taking live row updates. This module turns
+//! those failures into *scenarios*: a seeded, replayable schedule of
+//! Zipf + diurnal traffic, concurrent [`update_table`] writers, and
+//! fault injections, with the invariants the rest of the crate promises
+//! checked continuously:
+//!
+//! * **Bit-exactness** — every lookup observed outside a destructive
+//!   fault window must equal the unsharded oracle
+//!   ([`VersionedOracle`]) at *some* single snapshot version in the
+//!   `[version-before, version-after]` window of the read. No request
+//!   may ever observe a mix of two table versions.
+//! * **Recovery** — after each fault heals, a probe must serve
+//!   bit-exactly again (and the final full-table sweep must match the
+//!   oracle at the final version exactly).
+//! * **Budget** — with a resident budget configured, RAM-resident slice
+//!   bytes stay at or under it at rest, and the resident + spilled
+//!   tiers always reconcile to the logical table bytes.
+//! * **Version monotonicity** — [`ShardedEngine::version`] never moves
+//!   backwards, and the per-shard stats frames report the same version.
+//!
+//! Everything is derived from [`ScenarioConfig::seed`]: traffic,
+//! update payloads, and the fault schedule. Two runs of the same config
+//! produce the same [`ScenarioReport`] — the integration suite asserts
+//! this, so a scenario failure reproduces under its printed seed.
+//! Concurrency (reader/updater threads) is real; determinism is kept by
+//! reporting only schedule-derived facts and checking race-dependent
+//! observations against windows instead of point values.
+//!
+//! See `docs/serving.md` ("Chaos harness") for running scenarios and
+//! writing new ones.
+//!
+//! [`update_table`]: crate::shard::ShardedEngine::update_table
+//! [`ShardedEngine::version`]: crate::shard::ShardedEngine::version
+
+mod oracle;
+mod scenario;
+mod traffic;
+
+pub use oracle::VersionedOracle;
+pub use scenario::{run_scenario, FaultKind, ScenarioConfig, ScenarioReport};
+pub use traffic::DiurnalTraffic;

@@ -1,0 +1,224 @@
+//! Versioned unsharded oracle: the ground truth a chaos scenario
+//! compares the sharded engine against.
+//!
+//! The oracle keeps the FP32 master tables plus one immutable quantized
+//! [`TableSet`] snapshot *per committed version*, mirroring the
+//! engine's MVCC swap protocol: a snapshot for version `v` is published
+//! **before** the engine can report `version() == v`, so a reader that
+//! observes engine version `v` can always fetch the matching oracle
+//! snapshot. Commits serialize on an internal mutex — the same total
+//! order the engine imposes through its own update lock — which makes
+//! "engine version n == oracle snapshot n" hold by construction.
+//!
+//! Bit-exactness leans on an invariant proven in the `shard::engine`
+//! tests: patching a fused row with
+//! [`quantize_row_fused`](crate::table::quantize_row_fused) is
+//! bit-identical to requantizing the whole patched FP32 table. The
+//! oracle therefore patches its FP32 masters and requantizes from
+//! scratch per commit, while the engine patches packed rows in place —
+//! two different code paths that must (and do) land on identical bytes.
+
+use std::io;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::coordinator::TableSet;
+use crate::data::trace::Request;
+use crate::quant::Quantizer;
+use crate::table::serial::AnyTable;
+use crate::table::{EmbeddingTable, ScaleBiasDtype};
+
+/// Unsharded reference store with one quantized snapshot per version.
+pub struct VersionedOracle {
+    /// FP32 masters; the mutex also serializes commits.
+    masters: Mutex<Vec<EmbeddingTable>>,
+    /// `snapshots[v]` is the quantized set at version `v`. Versions
+    /// start at 1, so index 0 holds a duplicate of version 1.
+    snapshots: RwLock<Vec<Arc<TableSet>>>,
+    nbits: u32,
+    sb: ScaleBiasDtype,
+}
+
+impl VersionedOracle {
+    /// Build from FP32 masters, quantizing each table to fused rows.
+    pub fn new(masters: Vec<EmbeddingTable>, q: &dyn Quantizer, nbits: u32, sb: ScaleBiasDtype) -> Self {
+        let v1 = Arc::new(Self::quantize(&masters, q, nbits, sb));
+        VersionedOracle {
+            masters: Mutex::new(masters),
+            snapshots: RwLock::new(vec![Arc::clone(&v1), v1]),
+            nbits,
+            sb,
+        }
+    }
+
+    fn quantize(
+        masters: &[EmbeddingTable],
+        q: &dyn Quantizer,
+        nbits: u32,
+        sb: ScaleBiasDtype,
+    ) -> TableSet {
+        TableSet::new(
+            masters.iter().map(|m| AnyTable::Fused(m.quantize_fused(q, nbits, sb))).collect(),
+        )
+    }
+
+    /// A fresh quantized set for starting an engine. Bit-identical to
+    /// snapshot 1, so only meaningful before the first [`commit`].
+    ///
+    /// [`commit`]: VersionedOracle::commit
+    pub fn quantized_set(&self, q: &dyn Quantizer) -> TableSet {
+        Self::quantize(&self.masters.lock().unwrap(), q, self.nbits, self.sb)
+    }
+
+    /// Latest committed version.
+    pub fn latest_version(&self) -> u64 {
+        self.snapshots.read().unwrap().len() as u64 - 1
+    }
+
+    /// Apply one update batch through the engine while keeping the
+    /// oracle in lockstep.
+    ///
+    /// `apply` performs the engine-side swap (typically a closure over
+    /// [`ShardedEngine::update_table`]); the oracle publishes its own
+    /// speculative snapshot for the expected new version *first*, so a
+    /// reader that races the swap and observes the new engine version
+    /// already finds the matching snapshot. On `Err` the speculative
+    /// snapshot is retracted and the masters are rolled back — readers
+    /// cannot have used it, because the engine never reported the
+    /// version it would have carried.
+    ///
+    /// [`ShardedEngine::update_table`]: crate::shard::ShardedEngine::update_table
+    pub fn commit<F>(
+        &self,
+        table: usize,
+        rows: &[(u32, Vec<f32>)],
+        q: &dyn Quantizer,
+        apply: F,
+    ) -> io::Result<u64>
+    where
+        F: FnOnce() -> io::Result<u64>,
+    {
+        let mut masters = self.masters.lock().unwrap();
+        let valid = table < masters.len()
+            && rows.iter().all(|(id, v)| {
+                (*id as usize) < masters[table].rows() && v.len() == masters[table].dim()
+            });
+        if !valid {
+            // The engine rejects malformed updates without swapping, so
+            // the oracle has nothing to mirror or roll back.
+            let r = apply();
+            debug_assert!(r.is_err(), "engine accepted an update the oracle rejected");
+            return r;
+        }
+        // Patch the masters speculatively, remembering the old rows.
+        let saved: Vec<(u32, Vec<f32>)> =
+            rows.iter().map(|(id, _)| (*id, masters[table].row(*id as usize).to_vec())).collect();
+        for (id, vals) in rows {
+            masters[table].row_mut(*id as usize).copy_from_slice(vals);
+        }
+        let candidate = Arc::new(Self::quantize(&masters, q, self.nbits, self.sb));
+        let expected = {
+            let mut snaps = self.snapshots.write().unwrap();
+            let expected = snaps.len() as u64;
+            snaps.push(candidate);
+            expected
+        };
+        match apply() {
+            Ok(v) => {
+                assert_eq!(v, expected, "engine and oracle versions diverged");
+                Ok(v)
+            }
+            Err(e) => {
+                for (id, old) in &saved {
+                    masters[table].row_mut(*id as usize).copy_from_slice(old);
+                }
+                let mut snaps = self.snapshots.write().unwrap();
+                assert_eq!(snaps.len() as u64, expected + 1, "commit serialization broken");
+                snaps.pop();
+                Err(e)
+            }
+        }
+    }
+
+    /// Pooled lookup against the snapshot at `version` (panics if the
+    /// version was never committed).
+    pub fn pool_at(&self, version: u64, req: &Request) -> Vec<f32> {
+        let set = Arc::clone(&self.snapshots.read().unwrap()[version as usize]);
+        let mut out = vec![0.0f32; set.feature_width()];
+        for t in 0..set.num_tables() {
+            if req.ids[t].is_empty() {
+                continue;
+            }
+            let lo = set.offset_of(t);
+            let hi = lo + set.dim_of(t);
+            set.pool(t, &req.ids[t], &mut out[lo..hi]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GreedyQuantizer;
+    use crate::shard::{ShardConfig, ShardedEngine};
+
+    fn masters(n: usize, rows: usize, dim: usize) -> Vec<EmbeddingTable> {
+        (0..n).map(|t| EmbeddingTable::randn(rows, dim, 4300 + t as u64)).collect()
+    }
+
+    #[test]
+    fn oracle_tracks_engine_versions_bit_exactly() {
+        let q = GreedyQuantizer::default();
+        let oracle = VersionedOracle::new(masters(2, 24, 4), &q, 4, ScaleBiasDtype::F16);
+        let engine = ShardedEngine::start(
+            oracle.quantized_set(&q),
+            &ShardConfig { num_shards: 2, small_table_rows: 0, ..ShardConfig::default() },
+        );
+        let req = Request { ids: vec![vec![0, 3, 23], vec![5, 5]] };
+        assert_eq!(engine.lookup(&req), oracle.pool_at(1, &req), "version 1 agrees");
+
+        let rows: Vec<(u32, Vec<f32>)> = vec![(3, vec![0.5; 4]), (17, vec![-1.25; 4])];
+        let v = oracle
+            .commit(0, &rows, &q, || engine.update_table(0, &rows, &q))
+            .expect("commit succeeds");
+        assert_eq!(v, 2);
+        assert_eq!(oracle.latest_version(), 2);
+        assert_eq!(engine.version(), 2);
+        let req2 = Request { ids: vec![vec![3, 17], vec![1]] };
+        assert_eq!(engine.lookup(&req2), oracle.pool_at(2, &req2), "version 2 agrees");
+        // The old snapshot is still readable and still different.
+        assert_ne!(oracle.pool_at(1, &req2), oracle.pool_at(2, &req2));
+    }
+
+    #[test]
+    fn failed_commits_are_rolled_back() {
+        let q = GreedyQuantizer::default();
+        let oracle = VersionedOracle::new(masters(1, 16, 4), &q, 4, ScaleBiasDtype::F16);
+        let engine = ShardedEngine::start(
+            oracle.quantized_set(&q),
+            &ShardConfig { num_shards: 2, small_table_rows: 0, ..ShardConfig::default() },
+        );
+        let before = oracle.pool_at(1, &Request { ids: vec![vec![2]] });
+        // A valid-looking batch whose apply fails mid-swap.
+        let rows: Vec<(u32, Vec<f32>)> = vec![(2, vec![9.0; 4])];
+        let err = oracle
+            .commit(0, &rows, &q, || Err(io::Error::new(io::ErrorKind::Other, "injected")))
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Other);
+        assert_eq!(oracle.latest_version(), 1, "speculative snapshot retracted");
+        assert_eq!(
+            oracle.pool_at(1, &Request { ids: vec![vec![2]] }),
+            before,
+            "masters rolled back"
+        );
+        // A malformed batch is rejected by the engine and leaves no trace.
+        let bad: Vec<(u32, Vec<f32>)> = vec![(999, vec![1.0; 4])];
+        assert!(oracle.commit(0, &bad, &q, || engine.update_table(0, &bad, &q)).is_err());
+        assert_eq!(oracle.latest_version(), 1);
+        // After all that, a real commit still lands cleanly at version 2.
+        let v = oracle.commit(0, &rows, &q, || engine.update_table(0, &rows, &q)).unwrap();
+        assert_eq!(v, 2);
+        let req = Request { ids: vec![vec![2]] };
+        assert_eq!(engine.lookup(&req), oracle.pool_at(2, &req));
+    }
+}

@@ -1,0 +1,660 @@
+//! Scenario driver: seeded traffic + concurrent updaters + fault
+//! injection, with invariants checked continuously.
+//!
+//! A scenario is a pure function of its [`ScenarioConfig`]: the traffic
+//! stream, update payloads, and fault schedule all derive from
+//! `config.seed`, and the returned [`ScenarioReport`] contains only
+//! schedule-derived facts, so running the same config twice yields the
+//! same report (the integration suite asserts exactly that).
+//!
+//! # Determinism under real concurrency
+//!
+//! Reader and updater threads are real OS threads racing the fault
+//! injector, so *point* observations (which version a given read saw,
+//! how many promote errors a corrupt window produced) are not
+//! reproducible. The harness keeps its checks sound anyway:
+//!
+//! * **Window checks** — every checked read records the engine version
+//!   before and after; the result must equal the oracle at *some single
+//!   version in that window*. A result that matches no single version
+//!   is a torn (mixed-version) or corrupt read and fails the run.
+//! * **Epoch gating** — destructive fault windows (corrupt/truncated
+//!   spill files) flip a shared epoch counter to odd before damaging
+//!   bytes and back to even only after restoring them. Readers sample
+//!   the epoch before and after each read and skip the comparison if it
+//!   was odd or changed mid-read; the engine still *serves* (exercising
+//!   its error paths), it just isn't held to bit-exactness while its
+//!   disk tier is actively sabotaged. Only the main thread mutates the
+//!   epoch, at tick boundaries, so which ticks are gated is a pure
+//!   function of the schedule.
+//! * **Disjoint-table updaters** — updater `u` only writes tables `t`
+//!   with `t % updaters == u`, and applies its own batches in program
+//!   order (retrying through fault windows until the commit lands).
+//!   Cross-updater interleaving therefore commutes: the final table
+//!   state and final version (`1 + update_batches`) are deterministic
+//!   even though intermediate snapshots are not.
+
+use std::fs;
+use std::io;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::data::trace::Request;
+use crate::quant::GreedyQuantizer;
+use crate::shard::{ShardConfig, ShardedEngine};
+use crate::table::{EmbeddingTable, ScaleBiasDtype};
+use crate::util::Rng;
+
+use super::{DiurnalTraffic, VersionedOracle};
+
+/// A fault the scenario driver can inject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic a shard worker mid-batch via an out-of-range id; the
+    /// engine must zero the segment, count the panic, and keep serving.
+    WorkerPanic,
+    /// Spill everything, then flip a byte in every spill file. Promotes
+    /// fail (checksum mismatch) until the heal restores the bytes.
+    CorruptSpill,
+    /// Spill everything, then truncate every spill file below its
+    /// header. Promotes fail (short read) until the heal restores them.
+    TruncateSpill,
+    /// Delete the spill directory outright. Demotions fail and slices
+    /// stay resident — serving and updates continue bit-exactly, just
+    /// over budget — until the heal recreates the directory. Requires
+    /// `budget_frac: None` (with a budget, background demotions would
+    /// have written files whose deletion loses data permanently —
+    /// demotes are write-once).
+    SpillDirOutage,
+    /// Stall every spill I/O worker for [`ScenarioConfig::wedge_ms`].
+    /// Foreground reads resolve inline and stay bit-exact throughout.
+    WedgeIo,
+}
+
+/// Everything a scenario run derives from. See [`run_scenario`].
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    /// Master seed for traffic, update payloads, and reader streams.
+    pub seed: u64,
+    /// Number of embedding tables (all `rows × dim`).
+    pub tables: usize,
+    /// Rows per table.
+    pub rows: usize,
+    /// Embedding dimension.
+    pub dim: usize,
+    /// Worker shards.
+    pub shards: usize,
+    /// Main-loop ticks (the fault schedule is spread across these).
+    pub ticks: usize,
+    /// Mean requests per tick (diurnal envelope swings ±75%).
+    pub base_batch: usize,
+    /// Diurnal cycle length in ticks.
+    pub diurnal_period: usize,
+    /// Mean pooled ids per table per request.
+    pub mean_pool: usize,
+    /// Zipf skew of row popularity.
+    pub zipf_alpha: f64,
+    /// Resident budget as a fraction of logical table bytes; `None`
+    /// runs un-budgeted (required by [`FaultKind::SpillDirOutage`]).
+    pub budget_frac: Option<f64>,
+    /// Spill directory; `None` creates (and removes) a unique temp dir.
+    pub spill_dir: Option<PathBuf>,
+    /// Concurrent updater threads (each owns the tables
+    /// `t % updaters == u`; must be ≤ `tables`).
+    pub updaters: usize,
+    /// Total update batches across all updaters; the final version is
+    /// `1 + update_batches`.
+    pub update_batches: usize,
+    /// Rows patched per update batch.
+    pub update_rows: usize,
+    /// Concurrent checking reader threads.
+    pub readers: usize,
+    /// Fault schedule, injected in order at evenly spread ticks.
+    pub faults: Vec<FaultKind>,
+    /// Stall length for [`FaultKind::WedgeIo`].
+    pub wedge_ms: u64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            seed: 0xC0DE,
+            tables: 3,
+            rows: 512,
+            dim: 8,
+            shards: 4,
+            ticks: 32,
+            base_batch: 6,
+            diurnal_period: 16,
+            mean_pool: 4,
+            zipf_alpha: 1.1,
+            budget_frac: Some(0.5),
+            spill_dir: None,
+            updaters: 2,
+            update_batches: 12,
+            update_rows: 8,
+            readers: 2,
+            faults: Vec::new(),
+            wedge_ms: 50,
+        }
+    }
+}
+
+/// What a scenario run observed. Every field is a pure function of the
+/// [`ScenarioConfig`] — race-dependent observations are checked inline
+/// (panicking the run on violation) rather than reported.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScenarioReport {
+    /// Engine version after all updates landed (`1 + update_batches`).
+    pub final_version: u64,
+    /// Update batches committed (== `update_batches`; every batch
+    /// retries until it lands).
+    pub committed_updates: u64,
+    /// The derived fault schedule: `(start_tick, heal_tick, kind)`.
+    pub schedule: Vec<(usize, usize, FaultKind)>,
+    /// Main-loop requests compared bit-exactly against the oracle
+    /// (requests served during gated fault windows are excluded).
+    pub main_reads_checked: u64,
+    /// Faults injected and healed, each followed by a verified probe.
+    pub recoveries: usize,
+    /// Final per-row sweep matched the oracle at `final_version`.
+    pub bit_exact_final: bool,
+    /// Resident bytes settled at or under the budget after the run
+    /// (vacuously true without a budget).
+    pub budget_ok: bool,
+    /// `version()` never decreased and every shard's stats reported the
+    /// final version at the end.
+    pub version_monotone: bool,
+}
+
+/// Bytes restored on heal, keyed by path.
+type SavedFiles = Vec<(PathBuf, Vec<u8>)>;
+
+enum ActiveFault {
+    /// Corrupt/truncated files to restore; the epoch is odd (gated).
+    Damaged(SavedFiles),
+    /// Spill directory deleted; nothing to restore but the directory.
+    DirGone,
+    /// Panic/wedge: transparent to correctness, heal is probe-only.
+    Transparent,
+}
+
+/// Serial for unique per-process spill dirs (two runs of the same
+/// config must not share one).
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Run one scenario to completion, panicking on any invariant
+/// violation and returning the deterministic [`ScenarioReport`].
+pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
+    assert!(cfg.tables > 0 && cfg.rows > 0 && cfg.dim > 0 && cfg.ticks > 0);
+    if cfg.update_batches > 0 {
+        assert!(
+            cfg.updaters > 0 && cfg.updaters <= cfg.tables,
+            "updaters must be in 1..=tables so each owns a disjoint, non-empty table set"
+        );
+    }
+    if cfg.faults.contains(&FaultKind::SpillDirOutage) {
+        assert!(
+            cfg.budget_frac.is_none(),
+            "SpillDirOutage needs budget_frac: None — background demotions under a budget \
+             write spill files whose deletion would lose rows permanently"
+        );
+        assert!(
+            !cfg.faults.iter().any(|f| matches!(
+                f,
+                FaultKind::CorruptSpill | FaultKind::TruncateSpill
+            )),
+            "SpillDirOutage cannot share a run with spill_all-based faults: deleting the \
+             directory while slices live on disk is unrecoverable data loss, not a fault"
+        );
+    }
+
+    // --- Build the world: masters, oracle, engine, spill dir. ---
+    let q = GreedyQuantizer::default();
+    let masters: Vec<EmbeddingTable> = (0..cfg.tables)
+        .map(|t| EmbeddingTable::randn(cfg.rows, cfg.dim, cfg.seed ^ (0xA5A5 + t as u64)))
+        .collect();
+    let oracle = VersionedOracle::new(masters, &q, 4, ScaleBiasDtype::F16);
+    let set = oracle.quantized_set(&q);
+    let table_bytes = set.size_bytes();
+    let budget = cfg.budget_frac.map(|f| (table_bytes as f64 * f) as usize);
+    let (dir, own_dir) = match &cfg.spill_dir {
+        Some(d) => (d.clone(), false),
+        None => {
+            let d = std::env::temp_dir().join(format!(
+                "emberq-chaos-{}-{}",
+                std::process::id(),
+                DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            (d, true)
+        }
+    };
+    fs::create_dir_all(&dir).expect("create spill dir");
+    let engine = ShardedEngine::start(
+        set,
+        &ShardConfig {
+            num_shards: cfg.shards,
+            small_table_rows: 0,
+            resident_budget: budget,
+            spill_dir: Some(dir.clone()),
+            spill_io_threads: 2,
+            prefetch_window: 0,
+            ..ShardConfig::default()
+        },
+    );
+    let fw = engine.feature_width();
+
+    // --- Derive the fault schedule: evenly spread, non-overlapping. ---
+    let n = cfg.faults.len();
+    let schedule: Vec<(usize, usize, FaultKind)> = cfg
+        .faults
+        .iter()
+        .enumerate()
+        .map(|(i, &f)| {
+            let start = (i + 1) * cfg.ticks / (n + 1);
+            let span = (cfg.ticks / (2 * n.max(1))).max(1);
+            (start, (start + span).min(cfg.ticks - 1), f)
+        })
+        .collect();
+    for w in schedule.windows(2) {
+        assert!(w[0].1 < w[1].0, "fault windows overlap — use more ticks or fewer faults");
+    }
+    if let Some(last) = schedule.last() {
+        assert!(last.1 < cfg.ticks, "last fault never heals — use more ticks");
+    }
+
+    // --- Precompute each updater's deterministic batch program. ---
+    // Batch b belongs to updater `b % updaters`; updater u only touches
+    // tables `t % updaters == u`, so cross-updater commits commute.
+    let mut programs: Vec<Vec<(usize, Vec<(u32, Vec<f32>)>)>> = vec![Vec::new(); cfg.updaters];
+    for u in 0..cfg.updaters {
+        let own: Vec<usize> = (0..cfg.tables).filter(|t| t % cfg.updaters == u).collect();
+        let mut rng = Rng::new(cfg.seed ^ (0x5EED + u as u64));
+        for b in 0..cfg.update_batches {
+            if b % cfg.updaters != u {
+                continue;
+            }
+            let table = own[rng.below(own.len())];
+            let rows = (0..cfg.update_rows)
+                .map(|_| (rng.below(cfg.rows) as u32, rng.normal_vec(cfg.dim, 0.25)))
+                .collect();
+            programs[u].push((table, rows));
+        }
+    }
+
+    let epoch = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    let committed = AtomicU64::new(0);
+    let mut main_reads_checked = 0u64;
+    let mut recoveries = 0usize;
+    let mut version_monotone = true;
+
+    std::thread::scope(|s| {
+        let updater_handles: Vec<_> = programs
+            .iter()
+            .enumerate()
+            .map(|(u, program)| {
+                let (engine, oracle, committed, q) = (&engine, &oracle, &committed, &q);
+                s.spawn(move || {
+                    for (table, rows) in program {
+                        let deadline = Instant::now() + Duration::from_secs(30);
+                        loop {
+                            let r = oracle.commit(*table, rows, q, || {
+                                engine.update_table(*table, rows, q)
+                            });
+                            match r {
+                                Ok(_) => {
+                                    committed.fetch_add(1, Ordering::Relaxed);
+                                    break;
+                                }
+                                Err(_) if Instant::now() < deadline => {
+                                    std::thread::sleep(Duration::from_millis(2));
+                                }
+                                Err(e) => {
+                                    panic!("updater {u} wedged > 30s; last error: {e}")
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        let reader_handles: Vec<_> = (0..cfg.readers)
+            .map(|r| {
+                let (engine, oracle, epoch, stop) = (&engine, &oracle, &epoch, &stop);
+                let mut rng = Rng::new(cfg.seed ^ (0xBEEF + r as u64));
+                let (tables, rows, pool) = (cfg.tables, cfg.rows, cfg.mean_pool);
+                s.spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        let e0 = epoch.load(Ordering::Acquire);
+                        if e0 % 2 == 0 {
+                            let req = Request {
+                                ids: (0..tables)
+                                    .map(|_| {
+                                        (0..1 + rng.below(pool))
+                                            .map(|_| rng.below(rows) as u32)
+                                            .collect()
+                                    })
+                                    .collect(),
+                            };
+                            let v_pre = engine.version();
+                            let got = engine.lookup(&req);
+                            let v_post = engine.version();
+                            if epoch.load(Ordering::Acquire) == e0 {
+                                let ok =
+                                    (v_pre..=v_post).any(|v| oracle.pool_at(v, &req) == got);
+                                assert!(
+                                    ok,
+                                    "reader {r}: result matches no single version in \
+                                     [{v_pre}, {v_post}] — torn or corrupt read: {req:?}"
+                                );
+                            }
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                })
+            })
+            .collect();
+
+        // --- Main loop: traffic, faults, continuous checks. ---
+        let mut traffic = DiurnalTraffic::new(
+            cfg.seed ^ 0xD1A1,
+            cfg.tables,
+            cfg.rows,
+            cfg.base_batch,
+            cfg.diurnal_period,
+            cfg.mean_pool,
+            cfg.zipf_alpha,
+        );
+        let mut active: Option<ActiveFault> = None;
+        let mut fault_idx = 0usize;
+        let mut last_version = engine.version();
+        for tick in 0..cfg.ticks {
+            if fault_idx > 0 && schedule[fault_idx - 1].1 == tick {
+                if let Some(f) = active.take() {
+                    heal(f, &engine, &oracle, &dir, &epoch, cfg);
+                    recoveries += 1;
+                }
+            }
+            if fault_idx < schedule.len() && schedule[fault_idx].0 == tick {
+                assert!(active.is_none(), "fault injected while another is active");
+                active = Some(inject(schedule[fault_idx].2, &engine, &dir, &epoch, cfg));
+                fault_idx += 1;
+            }
+
+            let reqs = traffic.tick(tick);
+            let gated = epoch.load(Ordering::Acquire) % 2 == 1;
+            let mut out = vec![0.0f32; reqs.len() * fw];
+            let v_pre = engine.version();
+            engine.lookup_batch_into(&reqs, &mut out);
+            let v_post = engine.version();
+            version_monotone &= v_pre >= last_version && v_post >= v_pre;
+            last_version = v_post;
+            if !gated {
+                for (i, req) in reqs.iter().enumerate() {
+                    let got = &out[i * fw..(i + 1) * fw];
+                    let ok = (v_pre..=v_post).any(|v| oracle.pool_at(v, req) == got);
+                    assert!(
+                        ok,
+                        "tick {tick}, request {i}: result matches no single version in \
+                         [{v_pre}, {v_post}] — torn or corrupt read"
+                    );
+                    main_reads_checked += 1;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if let Some(f) = active.take() {
+            heal(f, &engine, &oracle, &dir, &epoch, cfg);
+            recoveries += 1;
+        }
+
+        for h in updater_handles {
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+        }
+        stop.store(true, Ordering::Release);
+        for h in reader_handles {
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+        }
+    });
+
+    // --- Final sweep: versions, bit-exactness, tiers, budget. ---
+    let final_version = engine.version();
+    assert_eq!(final_version, oracle.latest_version(), "engine and oracle diverged");
+    assert_eq!(
+        final_version,
+        1 + cfg.update_batches as u64,
+        "every update batch must have committed exactly once"
+    );
+    let stats = engine.shard_stats();
+    version_monotone &= stats.iter().all(|st| st.version == final_version);
+
+    let mut bit_exact_final = true;
+    for id in 0..cfg.rows {
+        let req = Request { ids: vec![vec![id as u32]; cfg.tables] };
+        if engine.lookup(&req) != oracle.pool_at(final_version, &req) {
+            bit_exact_final = false;
+            break;
+        }
+    }
+
+    // Tier accounting must reconcile at every instant; budget
+    // enforcement is asynchronous, so give it a moment to settle.
+    let resident = || engine.shard_bytes().iter().sum::<usize>();
+    assert_eq!(
+        resident() + engine.spilled_bytes(),
+        engine.table_bytes(),
+        "RAM + disk tiers must cover the logical bytes exactly"
+    );
+    let budget_ok = match budget {
+        None => true,
+        Some(b) => {
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                if resident() <= b {
+                    break true;
+                }
+                if Instant::now() >= deadline {
+                    break false;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    };
+
+    drop(engine);
+    if own_dir {
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    ScenarioReport {
+        final_version,
+        committed_updates: committed.load(Ordering::Relaxed),
+        schedule,
+        main_reads_checked,
+        recoveries,
+        bit_exact_final,
+        budget_ok,
+        version_monotone,
+    }
+}
+
+/// Inject one fault (main thread only). Returns what `heal` must undo.
+fn inject(
+    kind: FaultKind,
+    engine: &ShardedEngine,
+    dir: &std::path::Path,
+    epoch: &AtomicU64,
+    cfg: &ScenarioConfig,
+) -> ActiveFault {
+    match kind {
+        FaultKind::WorkerPanic => {
+            let before: u64 = engine.shard_stats().iter().map(|s| s.panics).sum();
+            let mut ids = vec![vec![0u32]; cfg.tables];
+            ids[0] = vec![cfg.rows as u32 * 4];
+            let got = engine.lookup(&Request { ids });
+            assert_eq!(&got[..cfg.dim], &vec![0.0f32; cfg.dim][..], "panicked segment zeroed");
+            let after: u64 = engine.shard_stats().iter().map(|s| s.panics).sum();
+            assert!(after > before, "worker panic must be counted");
+            ActiveFault::Transparent
+        }
+        FaultKind::WedgeIo => {
+            engine.wedge_spill_io(Duration::from_millis(cfg.wedge_ms), 8);
+            ActiveFault::Transparent
+        }
+        FaultKind::CorruptSpill | FaultKind::TruncateSpill => {
+            // Gate first so readers stop holding results to bit-
+            // exactness, then damage the disk tier.
+            epoch.fetch_add(1, Ordering::Release);
+            engine.spill_all().expect("spill_all over a healthy dir");
+            let mut saved = Vec::new();
+            let mut paths: Vec<PathBuf> = fs::read_dir(dir)
+                .expect("list spill dir")
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| p.extension().is_some_and(|x| x == "spill"))
+                .collect();
+            paths.sort();
+            for p in paths {
+                // Updates race us and may unlink files mid-walk; damage
+                // only what we could save.
+                let Ok(orig) = fs::read(&p) else { continue };
+                let damaged = match kind {
+                    FaultKind::CorruptSpill => {
+                        let mut d = orig.clone();
+                        let last = d.len() - 1;
+                        d[last] ^= 0xFF;
+                        d
+                    }
+                    _ => orig[..orig.len().min(20)].to_vec(),
+                };
+                if fs::write(&p, &damaged).is_ok() {
+                    saved.push((p, orig));
+                }
+            }
+            assert!(!saved.is_empty(), "nothing spilled — the fault would be a no-op");
+            ActiveFault::Damaged(saved)
+        }
+        FaultKind::SpillDirOutage => {
+            assert_eq!(engine.spilled_bytes(), 0, "outage must precede any demotion");
+            fs::remove_dir_all(dir).expect("delete spill dir");
+            let err = engine.spill_all().expect_err("demotion into a missing dir must fail");
+            assert!(err.kind() == io::ErrorKind::NotFound || err.raw_os_error().is_some());
+            // Over budget beats serving nothing: everything stayed
+            // resident, so serving continues bit-exactly un-gated.
+            assert_eq!(engine.spilled_bytes(), 0);
+            ActiveFault::DirGone
+        }
+    }
+}
+
+/// Undo a fault (main thread only), then prove the engine recovered:
+/// a full-table probe must match the oracle at some single version in
+/// its read window.
+fn heal(
+    fault: ActiveFault,
+    engine: &ShardedEngine,
+    oracle: &VersionedOracle,
+    dir: &std::path::Path,
+    epoch: &AtomicU64,
+    cfg: &ScenarioConfig,
+) {
+    match fault {
+        ActiveFault::Transparent => {}
+        ActiveFault::Damaged(saved) => {
+            for (p, orig) in saved {
+                // A committed update may have retired (unlinked) the
+                // file since; restoring it would recreate a stale
+                // orphan, so skip paths that are gone.
+                if p.exists() {
+                    fs::write(&p, &orig).expect("restore spill file");
+                }
+            }
+            epoch.fetch_add(1, Ordering::Release);
+        }
+        ActiveFault::DirGone => {
+            fs::create_dir_all(dir).expect("recreate spill dir");
+            engine.spill_all().expect("demotion works again after the dir returns");
+        }
+    }
+    let req = Request { ids: vec![(0..cfg.rows as u32).collect(); cfg.tables] };
+    let v_pre = engine.version();
+    let got = engine.lookup(&req);
+    let v_post = engine.version();
+    let ok = (v_pre..=v_post).any(|v| oracle.pool_at(v, &req) == got);
+    assert!(ok, "post-heal probe is not bit-exact — the engine did not recover");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_free_scenario_is_deterministic_and_bit_exact() {
+        let cfg = ScenarioConfig {
+            seed: 0xFA_CE,
+            tables: 2,
+            rows: 64,
+            dim: 4,
+            shards: 2,
+            ticks: 8,
+            base_batch: 3,
+            diurnal_period: 8,
+            updaters: 1,
+            update_batches: 4,
+            update_rows: 4,
+            readers: 1,
+            ..ScenarioConfig::default()
+        };
+        let a = run_scenario(&cfg);
+        assert_eq!(a.final_version, 5);
+        assert_eq!(a.committed_updates, 4);
+        assert!(a.bit_exact_final && a.budget_ok && a.version_monotone);
+        assert!(a.main_reads_checked > 0, "an ungated run checks every main read");
+        assert_eq!(a, run_scenario(&cfg), "same config, same report");
+    }
+
+    #[test]
+    fn transparent_faults_never_gate_the_checks() {
+        // Panic + wedge leave serving bit-exact, so every main-loop
+        // read stays checked and recovery probes pass.
+        let cfg = ScenarioConfig {
+            seed: 0xB0_07,
+            tables: 2,
+            rows: 48,
+            dim: 4,
+            shards: 2,
+            ticks: 12,
+            base_batch: 3,
+            diurnal_period: 6,
+            updaters: 1,
+            update_batches: 3,
+            update_rows: 2,
+            readers: 1,
+            faults: vec![FaultKind::WorkerPanic, FaultKind::WedgeIo],
+            wedge_ms: 10,
+            ..ScenarioConfig::default()
+        };
+        let r = run_scenario(&cfg);
+        assert_eq!(r.recoveries, 2);
+        assert_eq!(r.schedule.len(), 2);
+        assert!(r.bit_exact_final && r.budget_ok && r.version_monotone);
+        let ungated: u64 = r.main_reads_checked;
+        assert!(ungated > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "budget_frac: None")]
+    fn dir_outage_under_a_budget_is_rejected() {
+        run_scenario(&ScenarioConfig {
+            faults: vec![FaultKind::SpillDirOutage],
+            ..ScenarioConfig::default()
+        });
+    }
+}

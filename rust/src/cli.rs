@@ -112,7 +112,8 @@ COMMANDS:
             [--replicate-hot N] [--small-table-rows N] [--steal]
             [--rebalance-interval MS] [--resident-budget BYTES]
             [--spill-dir PATH] [--spill-io-threads N] [--prefetch-window N]
-            [--listen ADDR]
+            [--listen ADDR] [--update-port PORT] [--update-every MS]
+            [--update-rows N]
             serve a table file against a synthetic Zipf trace (or over TCP).
             --shards N > 0 splits every table's rows across N worker
             shards (the multi-core, slice-resident path); --shards 0
@@ -142,9 +143,18 @@ COMMANDS:
             registry lock, 0 = inline I/O). --prefetch-window N warms
             the N hottest spilled slices per heat tick so bursty tables
             are staged before their first miss (default 0 = off).
+            Live updates (sharded path only): the TCP protocol accepts
+            update frames that patch rows and swap an MVCC table
+            snapshot (fused rows re-quantized on ingest, bit-identical
+            to a full requantization). --update-port PORT binds a second
+            TCP endpoint next to --listen ADDR for ingest pipelines.
+            --update-every MS (trace mode) churns synthetic updates from
+            a background updater during the replay; --update-rows N
+            sizes each update batch (default 16).
             Sharded runs print per-shard service stats, steal/rebalance
-            counters, tier-transition counters, and the resident-bytes
-            breakdown (engine vs spilled vs catalog) after the replay
+            counters, tier-transition counters, the current snapshot
+            version, and the resident-bytes breakdown (engine vs
+            spilled vs catalog) after the replay
   info      --in FILE
             describe a saved table file"
     );
@@ -286,6 +296,28 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     )?;
     let prefetch_window: usize = flags.num("prefetch-window", 0)?;
     let listen = flags.get("listen").map(str::to_string);
+    let update_port: u16 = flags.num("update-port", 0)?;
+    let update_every_ms: u64 = flags.num("update-every", 0)?;
+    let update_rows: usize = flags.num("update-rows", 16)?;
+    if update_port > 0 && listen.is_none() {
+        return Err("--update-port requires --listen (it binds a second TCP endpoint \
+                    next to the serving one)"
+            .into());
+    }
+    if (update_port > 0 || update_every_ms > 0) && shards == 0 {
+        return Err("--update-port / --update-every need the row-sharded engine \
+                    (--shards > 0): live table updates swap MVCC snapshots there"
+            .into());
+    }
+    if update_every_ms > 0 && listen.is_some() {
+        return Err("--update-every drives synthetic update churn through a trace \
+                    replay; with --listen, send update frames over TCP instead \
+                    (optionally via --update-port)"
+            .into());
+    }
+    if update_rows == 0 {
+        return Err("--update-rows: must be at least 1".into());
+    }
     if replicate_hot > 0 && shards == 0 {
         eprintln!(
             "warning: --replicate-hot only applies to the sharded path (--shards > 0); ignoring"
@@ -339,6 +371,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         tables.push(open_table(table_path)?);
     }
     let set = TableSet::new(tables);
+    let dim = set.dim();
     let mode = if shards > 0 {
         format!("{shards} row-wise shards")
     } else {
@@ -407,6 +440,22 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         let server = std::sync::Arc::new(server);
         let front = emberq::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &addr)
             .map_err(|e| format!("bind {addr}: {e}"))?;
+        // A dedicated update endpoint next to the serving one, so an
+        // ingest pipeline can push row updates without competing with
+        // lookup connections for accept slots. Same wire protocol —
+        // both ports accept every frame kind.
+        // Bound (not `_`-discarded) so the endpoint stays open for the
+        // serve loop below.
+        let _update_front = if update_port > 0 {
+            let host = addr.rsplit_once(':').map_or("127.0.0.1", |(h, _)| h);
+            let uaddr = format!("{host}:{update_port}");
+            let f = emberq::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &uaddr)
+                .map_err(|e| format!("bind --update-port {uaddr}: {e}"))?;
+            println!("update endpoint on {}", f.addr());
+            Some(f)
+        } else {
+            None
+        };
         println!(
             "listening on {} (protocol: see coordinator::tcp docs); Ctrl-C to stop",
             front.addr()
@@ -416,7 +465,45 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_secs(3600));
         }
     }
-    let metrics = server.serve_trace(trace.as_ref().expect("trace mode"));
+    let trace = trace.as_ref().expect("trace mode");
+    let metrics = if update_every_ms > 0 {
+        // Update-churn replay: a background updater patches random rows
+        // of random tables every --update-every ms while the trace is
+        // served, exercising the MVCC swap path under live traffic.
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|sc| {
+            let srv = &server;
+            let stop_ref = &stop;
+            let updater = sc.spawn(move || {
+                let mut rng = emberq::util::Rng::new(0xE0BE);
+                let (mut committed, mut rejected) = (0u64, 0u64);
+                while !stop_ref.load(std::sync::atomic::Ordering::Relaxed) {
+                    let t = rng.below(copies);
+                    let batch: Vec<(u32, Vec<f32>)> = (0..update_rows)
+                        .map(|_| (rng.below(rows) as u32, rng.normal_vec(dim, 0.1)))
+                        .collect();
+                    // Codebook tables reject live updates; keep churning.
+                    match srv.update_table(t, &batch) {
+                        Ok(_) => committed += 1,
+                        Err(_) => rejected += 1,
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(update_every_ms));
+                }
+                (committed, rejected)
+            });
+            let m = server.serve_trace(trace);
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            let (committed, rejected) = updater.join().expect("updater thread");
+            println!(
+                "update churn: {committed} update batches committed, {rejected} rejected, \
+                 final version {}",
+                server.version().unwrap_or(0)
+            );
+            m
+        })
+    } else {
+        server.serve_trace(trace)
+    };
     println!("{}", metrics.summary());
     if server.is_sharded() {
         println!("{}", metrics.per_shard_summary());
@@ -566,6 +653,45 @@ mod tests {
             "1",
         ]))
         .unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_update_churn_and_flag_validation() {
+        let dir = std::env::temp_dir().join("emberq_cli_update_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.embq");
+        let table = EmbeddingTable::randn(50, 8, 19);
+        let f = File::create(&path).unwrap();
+        serial::write_f32(&mut BufWriter::new(f), &table).unwrap();
+        let p = path.to_str().unwrap();
+        // Churn replay: background updater commits MVCC swaps while the
+        // trace is served.
+        run(&s(&[
+            "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "40",
+            "--batch", "8", "--update-every", "1", "--update-rows", "4",
+        ]))
+        .unwrap();
+        // Bad combos are rejected with a message naming the fix.
+        let e = run(&s(&["serve", "--table", p, "--update-port", "19999"])).unwrap_err();
+        assert!(e.contains("--listen"), "{e}");
+        let e = run(&s(&[
+            "serve", "--table", p, "--shards", "0", "--update-every", "5",
+        ]))
+        .unwrap_err();
+        assert!(e.contains("--shards"), "{e}");
+        let e = run(&s(&[
+            "serve", "--table", p, "--shards", "2", "--listen", "127.0.0.1:0",
+            "--update-every", "5",
+        ]))
+        .unwrap_err();
+        assert!(e.contains("--update-port"), "{e}");
+        let e = run(&s(&[
+            "serve", "--table", p, "--shards", "2", "--update-every", "1",
+            "--update-rows", "0",
+        ]))
+        .unwrap_err();
+        assert!(e.contains("--update-rows"), "{e}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -158,6 +158,14 @@ pub struct ShardStats {
     /// sweep is a leader-side startup pass with no owning shard, so the
     /// engine reports the total on shard 0.
     pub orphans_deleted: u64,
+    /// Live-update MVCC snapshot version visible to this shard when the
+    /// stats were taken (0 = engine without live updates, 1 = initial
+    /// load, +1 per committed
+    /// [`update_table`](crate::shard::ShardedEngine::update_table)
+    /// swap). Not a counter: `merge` takes the max and `since` keeps the
+    /// newer snapshot's value, so aggregated views report the most
+    /// recent version seen.
+    pub version: u64,
 }
 
 impl ShardStats {
@@ -175,6 +183,7 @@ impl ShardStats {
         self.prefetches += other.prefetches;
         self.orphans_adopted += other.orphans_adopted;
         self.orphans_deleted += other.orphans_deleted;
+        self.version = self.version.max(other.version);
     }
 
     /// The activity recorded after `earlier` was snapshotted from this
@@ -193,6 +202,9 @@ impl ShardStats {
             prefetches: self.prefetches - earlier.prefetches,
             orphans_adopted: self.orphans_adopted - earlier.orphans_adopted,
             orphans_deleted: self.orphans_deleted - earlier.orphans_deleted,
+            // A snapshot, not a counter: the window is described by the
+            // version in force when it closed.
+            version: self.version,
         }
     }
 
@@ -223,6 +235,9 @@ impl ShardStats {
         }
         if self.panics > 0 {
             s.push_str(&format!(", {} panics", self.panics));
+        }
+        if self.version > 0 {
+            s.push_str(&format!(", v{}", self.version));
         }
         s
     }
@@ -397,6 +412,23 @@ mod tests {
         assert!(x.summary().contains("1 orphans adopted / 4 deleted"));
         let w = x.since(&y);
         assert_eq!((w.prefetches, w.orphans_adopted, w.orphans_deleted), (2, 1, 3));
+    }
+
+    #[test]
+    fn version_is_a_snapshot_not_a_counter() {
+        // Merging shards at different versions reports the newest one
+        // (a swap propagates shard by shard; the fleet view must not sum
+        // them into a number no shard ever held).
+        let mut a = ShardStats { version: 3, ..Default::default() };
+        let b = ShardStats { version: 4, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.version, 4);
+        // Diffing two snapshots keeps the window-closing version.
+        let earlier = ShardStats { version: 3, ..Default::default() };
+        assert_eq!(a.since(&earlier).version, 4);
+        // Rendering: versioned engines show it, read-only ones stay quiet.
+        assert!(a.summary().contains(", v4"));
+        assert!(!ShardStats::default().summary().contains(", v"));
     }
 
     #[test]

@@ -389,6 +389,35 @@ impl EmbeddingServer {
         self.engine.as_ref().map(|e| e.rebalance_once())
     }
 
+    /// Current MVCC table-snapshot version (sharded path only): 1 after
+    /// startup, +1 per committed [`EmbeddingServer::update_table`] swap.
+    /// `None` on the table-parallel path, which serves a frozen set.
+    pub fn version(&self) -> Option<u64> {
+        self.engine.as_ref().map(|e| e.version())
+    }
+
+    /// Replace `(row, values)` pairs of `table` with new FP32 embeddings
+    /// and atomically swap in the next table snapshot (sharded path
+    /// only — see [`ShardedEngine::update_table`] for the MVCC and
+    /// failure-atomicity contract). Fused tables are re-quantized on
+    /// ingest with the default [`GreedyQuantizer`](crate::quant::GreedyQuantizer)
+    /// — the same quantizer `emberq quantize` defaults to — so patched
+    /// rows are bit-identical to a full requantization of the updated
+    /// master. Returns the new version.
+    pub fn update_table(
+        &self,
+        table: usize,
+        rows: &[(u32, Vec<f32>)],
+    ) -> std::io::Result<u64> {
+        match &self.engine {
+            Some(e) => e.update_table(table, rows, &crate::quant::GreedyQuantizer::default()),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "live table updates require the row-sharded engine (--shards N)",
+            )),
+        }
+    }
+
     /// Check the engine's current routing against the leader catalog
     /// (sharded path only; `Ok` on the table-parallel path).
     pub fn validate_routing(&self) -> Result<(), String> {
@@ -1026,6 +1055,49 @@ mod tests {
             assert!(report.engine_bytes <= logical / 2, "budget holds either way");
             assert!(srv.store_stats().unwrap().demotions > 0);
         }
+    }
+
+    #[test]
+    fn live_updates_swap_versions_on_the_sharded_path_only() {
+        // Sharded: an update commits a new snapshot whose rows serve
+        // bit-identically to a server started from the patched master.
+        let (mut fp32, set) = quantized_set(2, 60, 8);
+        let server = EmbeddingServer::start(
+            set,
+            ServerConfig { num_shards: 2, ..Default::default() },
+        );
+        assert_eq!(server.version(), Some(1));
+        let rows: Vec<(u32, Vec<f32>)> =
+            vec![(0, vec![1.0; 8]), (59, (0..8).map(|d| d as f32).collect())];
+        for (r, vals) in &rows {
+            fp32[1].row_mut(*r as usize).copy_from_slice(vals);
+        }
+        assert_eq!(server.update_table(1, &rows).unwrap(), 2);
+        assert_eq!(server.version(), Some(2));
+        let patched = EmbeddingServer::start(
+            TableSet::new(
+                fp32.iter()
+                    .map(|t| {
+                        AnyTable::Fused(t.quantize_fused(
+                            &GreedyQuantizer::default(),
+                            4,
+                            ScaleBiasDtype::F16,
+                        ))
+                    })
+                    .collect(),
+            ),
+            ServerConfig { num_shards: 2, ..Default::default() },
+        );
+        let req = Request { ids: vec![vec![5], vec![0, 59, 30]] };
+        assert_eq!(server.lookup(&req), patched.lookup(&req));
+        // The version reaches the stats frame text.
+        assert!(server.stats_text().contains("v2"), "{}", server.stats_text());
+        // Table-parallel: no versions, updates are a clean error.
+        let (_, set) = quantized_set(2, 20, 4);
+        let tp = EmbeddingServer::start(set, ServerConfig { shards: 2, ..Default::default() });
+        assert_eq!(tp.version(), None);
+        let err = tp.update_table(0, &[(0, vec![0.0; 4])]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::Unsupported);
     }
 
     #[test]

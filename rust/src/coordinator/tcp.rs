@@ -12,6 +12,13 @@
 //!           u32 0xFFFF_FFFE, u32 len, len × utf8 — a human-readable
 //!           stats block: front-side request metrics, the residency
 //!           breakdown, and per-shard service latency (sharded mode).
+//! update:   a request whose first u32 is 0xFFFF_FFFD carries
+//!           u32 table_id, u32 num_rows, then num_rows ×
+//!           (u32 row_id, dim × f32) — dim is the table's embedding
+//!           dimension from the catalog. On success the reply is
+//!           u32 0xFFFF_FFFD followed by u64 version (the committed
+//!           MVCC snapshot version); on failure an error frame, with
+//!           the connection kept framed (sharded mode only).
 //! ```
 //!
 //! Connections are accepted on the leader; request splitting and
@@ -40,6 +47,7 @@ use crate::util::sync::lock_ignore_poison;
 
 const ERR_SENTINEL: u32 = 0xFFFF_FFFF;
 const STATS_SENTINEL: u32 = 0xFFFF_FFFE;
+const UPDATE_SENTINEL: u32 = 0xFFFF_FFFD;
 
 /// A running TCP front-end.
 pub struct TcpFront {
@@ -170,6 +178,43 @@ fn handle_conn(
             writer.flush()?;
             continue;
         }
+        if n == UPDATE_SENTINEL {
+            let table = read_u32(&mut reader)? as usize;
+            let num_rows = read_u32(&mut reader)? as usize;
+            if table >= nt || num_rows > 1 << 20 {
+                // Without a valid table there is no dim to frame the
+                // payload with — the stream cannot stay synchronized, so
+                // refuse the connection outright (same policy as absurd
+                // lookup frames).
+                return Ok(());
+            }
+            let dim = catalog.dim_of(table);
+            let mut rows = Vec::with_capacity(num_rows);
+            let mut b = [0u8; 4];
+            for _ in 0..num_rows {
+                let id = read_u32(&mut reader)?;
+                let mut vals = Vec::with_capacity(dim);
+                for _ in 0..dim {
+                    reader.read_exact(&mut b)?;
+                    vals.push(f32::from_le_bytes(b));
+                }
+                rows.push((id, vals));
+            }
+            match server.update_table(table, &rows) {
+                Ok(version) => {
+                    writer.write_all(&UPDATE_SENTINEL.to_le_bytes())?;
+                    writer.write_all(&version.to_le_bytes())?;
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    writer.write_all(&ERR_SENTINEL.to_le_bytes())?;
+                    writer.write_all(&(msg.len() as u32).to_le_bytes())?;
+                    writer.write_all(msg.as_bytes())?;
+                }
+            }
+            writer.flush()?;
+            continue;
+        }
         let n = n as usize;
         let mut err: Option<String> = None;
         let mut ids: Vec<Vec<u32>> = vec![Vec::new(); nt];
@@ -268,6 +313,36 @@ impl TcpClient {
             *v = f32::from_le_bytes(b);
         }
         Ok(out)
+    }
+
+    /// Replace `(row, values)` pairs of `table` with new FP32 embeddings
+    /// (re-quantized server-side for fused tables). Returns the new MVCC
+    /// snapshot version on commit; failures come back as error frames
+    /// and the connection stays usable.
+    pub fn update(&mut self, table: u32, rows: &[(u32, Vec<f32>)]) -> std::io::Result<u64> {
+        self.writer.write_all(&UPDATE_SENTINEL.to_le_bytes())?;
+        self.writer.write_all(&table.to_le_bytes())?;
+        self.writer.write_all(&(rows.len() as u32).to_le_bytes())?;
+        for (id, vals) in rows {
+            self.writer.write_all(&id.to_le_bytes())?;
+            for v in vals {
+                self.writer.write_all(&v.to_le_bytes())?;
+            }
+        }
+        self.writer.flush()?;
+        let sentinel = read_u32(&mut self.reader)?;
+        if sentinel == ERR_SENTINEL {
+            let len = read_u32(&mut self.reader)? as usize;
+            let mut msg = vec![0u8; len];
+            self.reader.read_exact(&mut msg)?;
+            return Err(std::io::Error::other(String::from_utf8_lossy(&msg).into_owned()));
+        }
+        if sentinel != UPDATE_SENTINEL {
+            return Err(std::io::Error::other("unexpected update reply"));
+        }
+        let mut b = [0u8; 8];
+        self.reader.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
     }
 
     /// Fetch the server's stats block (front metrics + residency +
@@ -387,6 +462,53 @@ mod tests {
         // The connection still serves lookups after a stats frame.
         assert_eq!(client.lookup(&[vec![1], vec![2], vec![3]]).unwrap().len(), 24);
         assert!(front.stats_text().contains("front: 7 req"));
+    }
+
+    #[test]
+    fn update_frame_commits_a_version_and_serves_the_new_rows() {
+        let server = test_server_with(ServerConfig { num_shards: 2, ..Default::default() });
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(front.addr()).unwrap();
+        let before = client.lookup(&[vec![0], vec![], vec![]]).unwrap();
+        let rows = vec![(0u32, vec![2.5f32; 8]), (39, vec![-1.0f32; 8])];
+        assert_eq!(client.update(0, &rows).unwrap(), 2);
+        // The same connection serves the patched snapshot...
+        let after = client.lookup(&[vec![0], vec![], vec![]]).unwrap();
+        assert_ne!(before, after, "update must be visible");
+        assert_eq!(after, server.lookup(&Request { ids: vec![vec![0], vec![], vec![]] }));
+        // ...and the stats frame carries the new version.
+        let text = client.stats().unwrap();
+        assert!(text.contains("v2"), "{text}");
+        // A failed update is an error frame, not a torn connection.
+        let err = client.update(0, &[(1000, vec![0.0; 8])]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert_eq!(client.update(2, &[(7, vec![0.5; 8])]).unwrap(), 3);
+        assert_eq!(client.lookup(&[vec![1], vec![2], vec![3]]).unwrap().len(), 24);
+    }
+
+    #[test]
+    fn update_frame_on_the_table_parallel_path_is_an_error() {
+        let server = test_server(); // table-parallel: no engine
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(front.addr()).unwrap();
+        let err = client.update(0, &[(0, vec![0.0; 8])]).unwrap_err();
+        assert!(err.to_string().contains("row-sharded"), "{err}");
+        // The connection survives the rejected update.
+        assert_eq!(client.lookup(&[vec![1], vec![2], vec![3]]).unwrap().len(), 24);
+    }
+
+    #[test]
+    fn update_frame_with_bad_table_id_drops_the_connection() {
+        let server = test_server_with(ServerConfig { num_shards: 2, ..Default::default() });
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(front.addr()).unwrap();
+        // Table 9 does not exist: no dim to frame the payload with, so
+        // the front closes rather than desynchronize the stream.
+        let err = client.update(9, &[(0, vec![0.0; 8])]).unwrap_err();
+        assert!(err.kind() == std::io::ErrorKind::UnexpectedEof
+            || err.kind() == std::io::ErrorKind::ConnectionReset
+            || err.kind() == std::io::ErrorKind::BrokenPipe,
+            "{err:?}");
     }
 
     #[test]

@@ -25,6 +25,11 @@
 //! * [`coordinator`] — L3 serving runtime: request router, dynamic
 //!   batcher, worker pool, latency metrics. `ServerConfig::num_shards`
 //!   switches it onto the [`shard`] engine.
+//! * [`chaos`] — deterministic chaos/scenario harness: seeded Zipf +
+//!   diurnal traffic, concurrent live updaters, and fault injectors
+//!   (worker panics, corrupt/truncated spill files, spill-dir outages,
+//!   wedged I/O pools) with invariant checks — recovery, bit-exactness
+//!   against an unsharded oracle, budget and version monotonicity.
 //! * [`runtime`] — PJRT client wrapper that loads AOT artifacts
 //!   (`artifacts/*.hlo.txt`, lowered from JAX/Pallas) and executes them
 //!   on the serving path. Gated behind the off-by-default `xla` feature:
@@ -52,6 +57,7 @@
 //!          / table.size_bytes() as f64);
 //! ```
 
+pub mod chaos;
 pub mod coordinator;
 pub mod data;
 pub mod eval;

@@ -66,6 +66,19 @@
 //! `TableSet`; after startup the only copies of table bytes live in the
 //! placement's cells (RAM or spill tier — the leader keeps counters and
 //! byte accounting, and callers keep a [`TableCatalog`] for validation).
+//!
+//! **Live table updates (MVCC):** [`ShardedEngine::update_table`] builds
+//! the next placement snapshot exactly like the rebalancer does —
+//! clone → patch only the cells holding updated rows → swap the
+//! `Arc<Placement>` atomically. Fused rows are re-quantized on ingest
+//! through the same single-row path as [`crate::table::TableRefresher`]
+//! (bit-identical to a full requantization), the monotonic snapshot
+//! `version` flows through [`ShardStats`] into the stats frame, and
+//! replaced cells are [`invalidated`](SliceStore::invalidate) in the
+//! slice store so their stale spill bytes are unlinked (resident cells)
+//! or deleted with the last old snapshot (spilled cells) — never
+//! re-adopted. Batches split against one snapshot, so no request ever
+//! observes a mix of two table versions.
 
 use std::collections::VecDeque;
 use std::io;
@@ -80,12 +93,15 @@ use std::time::{Duration, Instant};
 use crate::coordinator::metrics::ShardStats;
 use crate::coordinator::{Router, TableCatalog, TableSet};
 use crate::data::trace::Request;
+use crate::quant::Quantizer;
 use crate::shard::exec;
 use crate::shard::load::DecayWindow;
 use crate::shard::partition::{plan_partitions, RowPartition, TablePartition};
 use crate::shard::slice::TableSlice;
 use crate::shard::store::{SliceCell, SliceStore, SpillConfig, StoreStats};
 use crate::shard::ShardConfig;
+use crate::table::serial::AnyTable;
+use crate::table::{quantize_row_fused, EmbeddingTable, FusedTable};
 use crate::util::sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison};
 
 /// One unit of executable (and stealable) work: a whole `(slot, table)`
@@ -224,6 +240,13 @@ struct Core {
     rebalances: AtomicU64,
     replicas_added: AtomicU64,
     replicas_retired: AtomicU64,
+    /// MVCC table-snapshot version: 1 = the initial load, +1 per
+    /// committed [`ShardedEngine::update_table`] swap. Bumped under the
+    /// `rb_state` mutex, after the new placement is published, so the
+    /// value is monotone and never runs ahead of the data: a reader
+    /// that sees `version() == v` is guaranteed the `v`-th snapshot is
+    /// already serving. Stamped into every [`ShardStats`] snapshot.
+    version: AtomicU64,
 }
 
 impl Core {
@@ -420,6 +443,7 @@ impl ShardedEngine {
             rebalances: AtomicU64::new(0),
             replicas_added: AtomicU64::new(0),
             replicas_retired: AtomicU64::new(0),
+            version: AtomicU64::new(1),
         });
         let workers = (0..n)
             .map(|shard| {
@@ -529,6 +553,15 @@ impl ShardedEngine {
         }
     }
 
+    /// Stall `threads` spill I/O workers for `d` (fault injection for the
+    /// chaos harness: a wedged I/O pool). Returns how many workers were
+    /// stalled — `0` without tiered storage. While wedged, promotions
+    /// fall back to inline reads on the requesting thread, so serving
+    /// degrades in latency but never in correctness.
+    pub fn wedge_spill_io(&self, d: Duration, threads: usize) -> usize {
+        self.core.store.as_ref().map_or(0, |st| st.wedge_io(d, threads))
+    }
+
     /// Bytes attributable to whole-table replication (logical: replicas
     /// count whether their cells are resident or spilled), for the
     /// current placement.
@@ -548,6 +581,7 @@ impl ShardedEngine {
             .enumerate()
             .map(|(shard, s)| {
                 let mut st = lock_ignore_poison(s).clone();
+                st.version = self.core.version.load(Ordering::Acquire);
                 if let Some(store) = &self.core.store {
                     let spill = store.shard_spill(shard);
                     st.promotions = spill.promotions;
@@ -783,6 +817,177 @@ impl ShardedEngine {
             }
         }
     }
+
+    /// Current MVCC table-snapshot version: 1 after startup, +1 per
+    /// committed [`ShardedEngine::update_table`] swap. Monotone.
+    pub fn version(&self) -> u64 {
+        self.core.version.load(Ordering::Acquire)
+    }
+
+    /// Replace the given `(row, values)` pairs of `table` with new FP32
+    /// embeddings, quantizing on ingest for fused tables (the same
+    /// single-row path as [`crate::table::TableRefresher`], so the
+    /// patched bytes are bit-identical to a full requantization), and
+    /// swap in the next placement snapshot atomically. Returns the new
+    /// version.
+    ///
+    /// MVCC semantics: only the cells actually holding updated rows are
+    /// rebuilt — every other cell is shared by `Arc` with the previous
+    /// snapshot — and batches split against exactly one snapshot, so a
+    /// request sees either the old table or the new one, never a mix.
+    /// In-flight batches finish on the old snapshot; its cells (and
+    /// their spill files) are released when the last such batch drops.
+    /// Replaced cells are retired from the slice store eagerly
+    /// ([`SliceStore::invalidate`]): a stale spill file is unlinked
+    /// right away when nothing can read it again, and can never be
+    /// re-adopted by a later orphan sweep either way (adoption matches
+    /// on content digest, and the content changed).
+    ///
+    /// Failure atomicity: any error — a row out of range, a wrong
+    /// dimension, a codebook table (unsupported), or a corrupt spill
+    /// file hit while reading the old bytes — aborts *before* the swap.
+    /// The old snapshot keeps serving, the version does not advance,
+    /// and a spill error is attributed to the shard's counters under
+    /// the still-current (old) version like any other read failure.
+    ///
+    /// Updates serialize with each other and with rebalance passes on
+    /// the same mutex, so concurrent writers cannot discard each
+    /// other's placements; readers are never blocked.
+    pub fn update_table(
+        &self,
+        table: usize,
+        rows: &[(u32, Vec<f32>)],
+        q: &dyn Quantizer,
+    ) -> io::Result<u64> {
+        let core = &self.core;
+        let invalid = |msg: String| io::Error::new(io::ErrorKind::InvalidInput, msg);
+        if table >= core.num_tables {
+            return Err(invalid(format!(
+                "table {table} out of range ({} tables)",
+                core.num_tables
+            )));
+        }
+        let dim = core.dims[table];
+        let table_rows = match &core.partitions[table] {
+            TablePartition::Whole { rows, .. } => *rows,
+            TablePartition::RowWise(p) => p.rows(),
+        };
+        for (id, vals) in rows {
+            if *id as usize >= table_rows {
+                return Err(invalid(format!(
+                    "table {table}: row {id} out of range ({table_rows} rows)"
+                )));
+            }
+            if vals.len() != dim {
+                return Err(invalid(format!(
+                    "table {table}: row {id} has dim {}, want {dim}",
+                    vals.len()
+                )));
+            }
+        }
+        // One writer at a time: updates and rebalance passes share the
+        // clone → mutate → swap critical section.
+        let _swap = lock_ignore_poison(&core.rb_state);
+        if rows.is_empty() {
+            return Ok(core.version.load(Ordering::Acquire));
+        }
+        let cur: Arc<Placement> = Arc::clone(&read_ignore_poison(&core.placement));
+        let replicas = cur.replicas.clone();
+        let mut slices = cur.slices.clone(); // Arc clones: rows are shared, not copied
+        let mut replaced: Vec<Arc<SliceCell>> = Vec::new();
+        match &core.partitions[table] {
+            TablePartition::Whole { .. } => {
+                // Patch once from any healthy copy (replicas are
+                // byte-identical; prefer a resident one so an update
+                // avoids disk when it can), then give every replica
+                // shard the patched slice.
+                let shards = &cur.replicas[table];
+                let resident = shards
+                    .iter()
+                    .find_map(|&s| cur.slices[s][table].as_ref().and_then(|c| c.resident()));
+                let src = match resident {
+                    Some(s) => s,
+                    None => {
+                        let mut found = Err(invalid(format!(
+                            "table {table}: no replica holds a slice"
+                        )));
+                        for &s in shards {
+                            let cell = cur.slices[s][table]
+                                .as_ref()
+                                .expect("routed replica holds the table");
+                            match resolve(core, cell, 0) {
+                                Ok(slice) => {
+                                    found = Ok(slice);
+                                    break;
+                                }
+                                Err(e) => found = Err(e),
+                            }
+                        }
+                        found?
+                    }
+                };
+                let pairs: Vec<(u32, &[f32])> =
+                    rows.iter().map(|(i, v)| (*i, v.as_slice())).collect();
+                let patched = patch_slice(&src, &pairs, q)?;
+                let (last, dup) = shards.split_last().expect("whole table has an owner");
+                for &s in dup {
+                    let old = cur.slices[s][table]
+                        .as_ref()
+                        .expect("routed replica holds the table");
+                    let cell = new_cell(&core.store, s, table, patched.duplicate());
+                    cell.touch(old.heat_score());
+                    replaced.push(Arc::clone(old));
+                    slices[s][table] = Some(cell);
+                }
+                let old = cur.slices[*last][table]
+                    .as_ref()
+                    .expect("routed replica holds the table");
+                let cell = new_cell(&core.store, *last, table, patched);
+                cell.touch(old.heat_score());
+                replaced.push(Arc::clone(old));
+                slices[*last][table] = Some(cell);
+            }
+            TablePartition::RowWise(p) => {
+                // Delta-aware: only the chunks holding updated rows are
+                // rebuilt; untouched chunks stay shared with the old
+                // snapshot (and keep their tier, heat, and spill file).
+                let n = p.num_shards();
+                let mut per_chunk: Vec<Vec<(u32, &[f32])>> = vec![Vec::new(); n];
+                for (id, vals) in rows {
+                    per_chunk[p.shard_of(*id)].push((*id, vals.as_slice()));
+                }
+                for (s, chunk_rows) in per_chunk.iter().enumerate() {
+                    if chunk_rows.is_empty() {
+                        continue;
+                    }
+                    let old = cur.slices[s][table]
+                        .as_ref()
+                        .expect("owning shard holds its chunk");
+                    // Reading the old bytes may hit a corrupt spill
+                    // file: abort before any swap (the `?`), with the
+                    // error counted on the shard under the old version.
+                    let src = resolve(core, old, 0)?;
+                    let patched = patch_slice(&src, chunk_rows, q)?;
+                    let cell = new_cell(&core.store, s, table, patched);
+                    cell.touch(old.heat_score());
+                    replaced.push(Arc::clone(old));
+                    slices[s][table] = Some(cell);
+                }
+            }
+        }
+        *write_ignore_poison(&core.placement) = Arc::new(Placement { replicas, slices });
+        // The swap is published: retire the replaced cells from the
+        // spill policy (stale files unlinked now or with the last old
+        // snapshot), then push the just-admitted patched cells' bytes
+        // back under the budget.
+        if let Some(store) = &core.store {
+            for old in &replaced {
+                store.invalidate(old);
+            }
+            store.enforce();
+        }
+        Ok(core.version.fetch_add(1, Ordering::AcqRel) + 1)
+    }
 }
 
 impl Drop for ShardedEngine {
@@ -821,6 +1026,58 @@ fn new_cell(
         Some(st) => st.admit(shard, table, slice),
         None => Arc::new(SliceCell::untracked(shard, table, slice)),
     }
+}
+
+/// Build a copy of `slice` with the given `(global_row, values)` pairs
+/// rewritten. FP32 slices splice the floats in place; fused slices
+/// re-quantize each updated row through
+/// [`quantize_row_fused`] — the exact single-row arithmetic
+/// `table::refresh` uses, so the patched image is bit-identical to
+/// requantizing the whole table with the new rows in it. Rows not
+/// listed keep their exact bytes (the quantization params are per-row,
+/// so patching one row can never perturb another). Codebook slices are
+/// rejected: their codebooks are trained across rows, so a row-local
+/// patch could not reproduce the full-requantization bytes.
+fn patch_slice(
+    slice: &TableSlice,
+    rows: &[(u32, &[f32])],
+    q: &dyn Quantizer,
+) -> io::Result<TableSlice> {
+    let range = slice.global_rows();
+    let dim = slice.dim();
+    let table = match slice.table() {
+        AnyTable::F32(t) => {
+            let mut data = t.data().to_vec();
+            for (id, vals) in rows {
+                let local = *id as usize - range.start;
+                data[local * dim..(local + 1) * dim].copy_from_slice(vals);
+            }
+            AnyTable::F32(EmbeddingTable::from_data(dim, data))
+        }
+        AnyTable::Fused(t) => {
+            let mut fused = FusedTable::from_raw(
+                t.rows(),
+                dim,
+                t.nbits(),
+                t.scale_bias_dtype(),
+                t.data().to_vec(),
+            );
+            for (id, vals) in rows {
+                let local = *id as usize - range.start;
+                let raw = quantize_row_fused(vals, q, t.nbits(), t.scale_bias_dtype());
+                fused.patch_row(local, &raw);
+            }
+            AnyTable::Fused(fused)
+        }
+        AnyTable::Codebook(_) => {
+            return Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "live updates support f32 and fused tables only \
+                 (codebook rows share trained codebooks)",
+            ))
+        }
+    };
+    Ok(TableSlice::from_parts(table, range))
 }
 
 /// Per-engine default spill directory under the system temp dir —
@@ -1729,5 +1986,205 @@ mod tests {
             elapsed < Duration::from_secs(4),
             "idle-tick-scale stalls crept back in: 200 lookups took {elapsed:?}"
         );
+    }
+
+    #[test]
+    fn update_table_is_bit_exact_and_bumps_version() {
+        // Row-wise f32: patch rows in two different chunks, leave the
+        // rest untouched, and compare spanning lookups against a freshly
+        // built reference set holding the same patched rows.
+        let q = GreedyQuantizer::default();
+        let engine = ShardedEngine::start(
+            f32_set(1, 32, 4),
+            &ShardConfig { num_shards: 4, small_table_rows: 0, ..Default::default() },
+        );
+        assert_eq!(engine.version(), 1);
+        let a = vec![1.5f32, -2.0, 0.25, 8.0];
+        let b = vec![-0.5f32, 3.0, 3.0, -1.0];
+        let mut master = EmbeddingTable::randn(32, 4, 9100);
+        master.row_mut(3).copy_from_slice(&a);
+        master.row_mut(20).copy_from_slice(&b);
+        let reference = TableSet::new(vec![AnyTable::F32(master)]);
+        let v = engine.update_table(0, &[(3, a), (20, b)], &q).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(engine.version(), 2);
+        let req = Request { ids: vec![vec![3, 20, 0, 31, 9]] }; // spans all chunks
+        let mut want = vec![0.0f32; 4];
+        reference.pool(0, &req.ids[0], &mut want);
+        assert_eq!(engine.lookup(&req), want, "patched rows must serve bit-exactly");
+        // An empty update is a no-op: same version back, no bump.
+        assert_eq!(engine.update_table(0, &[], &q).unwrap(), 2);
+        assert_eq!(engine.version(), 2);
+        // The version flows through the stats snapshot.
+        assert!(engine.shard_stats().iter().all(|s| s.version == 2));
+    }
+
+    #[test]
+    fn fused_update_is_bit_identical_to_full_requantization() {
+        // Whole fused table replicated to both shards: the on-ingest
+        // single-row quantization must make every replica byte-equal to
+        // quantizing the patched FP32 master from scratch.
+        let q = GreedyQuantizer::default();
+        let mut master = EmbeddingTable::randn(30, 8, 9300);
+        let engine = ShardedEngine::start(
+            TableSet::new(vec![AnyTable::Fused(master.quantize_fused(
+                &q,
+                4,
+                ScaleBiasDtype::F16,
+            ))]),
+            &ShardConfig {
+                num_shards: 2,
+                small_table_rows: usize::MAX,
+                replicate_hot: 1,
+                ..Default::default()
+            },
+        );
+        assert_eq!(engine.replica_shards(0), vec![0, 1]);
+        let rows: Vec<(u32, Vec<f32>)> = [0usize, 13, 29]
+            .iter()
+            .map(|&r| (r as u32, (0..8).map(|d| (r as f32) * 0.1 - d as f32).collect()))
+            .collect();
+        for (r, vals) in &rows {
+            master.row_mut(*r as usize).copy_from_slice(vals);
+        }
+        let reference =
+            TableSet::new(vec![AnyTable::Fused(master.quantize_fused(
+                &q,
+                4,
+                ScaleBiasDtype::F16,
+            ))]);
+        assert_eq!(engine.update_table(0, &rows, &q).unwrap(), 2);
+        // Round-robin across replicas: every copy must hold the patch.
+        for i in 0..10u32 {
+            let req = Request { ids: vec![vec![0, 13, 29, i % 30]] };
+            let mut want = vec![0.0f32; 8];
+            reference.pool(0, &req.ids[0], &mut want);
+            assert_eq!(engine.lookup(&req), want, "request {i}");
+        }
+    }
+
+    #[test]
+    fn update_rejects_bad_input_and_codebook_tables() {
+        let q = GreedyQuantizer::default();
+        let master = EmbeddingTable::randn(16, 4, 9400);
+        let engine = ShardedEngine::start(
+            TableSet::new(vec![
+                AnyTable::F32(EmbeddingTable::randn(16, 4, 9401)),
+                AnyTable::Codebook(
+                    master.quantize_codebook(crate::table::CodebookKind::Rowwise, ScaleBiasDtype::F32),
+                ),
+            ]),
+            &ShardConfig { num_shards: 2, ..Default::default() },
+        );
+        let ok_row = vec![0.0f32; 4];
+        // Table index out of range.
+        let e = engine.update_table(5, &[(0, ok_row.clone())], &q).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidInput);
+        // Row out of range.
+        let e = engine.update_table(0, &[(16, ok_row.clone())], &q).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidInput);
+        // Wrong dimension.
+        let e = engine.update_table(0, &[(0, vec![1.0; 3])], &q).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidInput);
+        // Codebook tables: unsupported (codebooks are trained across rows).
+        let e = engine.update_table(1, &[(0, ok_row)], &q).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::Unsupported);
+        // No failed attempt advanced the snapshot.
+        assert_eq!(engine.version(), 1);
+    }
+
+    #[test]
+    fn corrupt_spill_during_update_aborts_under_the_old_version() {
+        // Regression: an update whose source chunk sits on a corrupt
+        // spill file must fail *before* the swap — old snapshot keeps
+        // serving, version does not advance, and the error is counted on
+        // the shard's spill_errors under the old version (it must never
+        // panic the updater).
+        let dir = default_spill_dir();
+        let q = GreedyQuantizer::default();
+        let reference = f32_set(1, 32, 4);
+        let engine = ShardedEngine::start(
+            f32_set(1, 32, 4),
+            &ShardConfig {
+                num_shards: 4,
+                small_table_rows: 0,
+                spill_dir: Some(dir.clone()),
+                ..Default::default()
+            },
+        );
+        assert_eq!(engine.spill_all().unwrap(), 4);
+        // Promote chunk 0 ([0, 8)) back so part of the table is healthy.
+        let mut want = vec![0.0f32; 4];
+        reference.pool(0, &[0, 5], &mut want);
+        assert_eq!(engine.lookup(&Request { ids: vec![vec![0, 5]] }), want);
+        // Corrupt every file still on disk, remembering the originals.
+        let mut saved = Vec::new();
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.extension().is_some_and(|e| e == "spill") {
+                let orig = std::fs::read(&path).unwrap();
+                let mut bad = orig.clone();
+                let last = bad.len() - 1;
+                bad[last] ^= 0xFF; // flip payload bytes: checksum mismatch
+                std::fs::write(&path, &bad).unwrap();
+                saved.push((path, orig));
+            }
+        }
+        assert!(!saved.is_empty(), "spilled chunks must have files");
+        // Row 9 lives in chunk 1 ([8, 16)) — spilled and now corrupt.
+        let patch = vec![9.0f32, 9.0, 9.0, 9.0];
+        let err = engine.update_table(0, &[(9, patch.clone())], &q).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{err}");
+        assert_eq!(engine.version(), 1, "failed update must not advance the version");
+        let stats = engine.shard_stats();
+        assert!(stats.iter().map(|s| s.spill_errors).sum::<u64>() >= 1);
+        assert!(stats.iter().all(|s| s.version == 1));
+        // The old snapshot still serves its healthy rows bit-exactly.
+        assert_eq!(engine.lookup(&Request { ids: vec![vec![0, 5]] }), want);
+        // Heal the files: the same update must now commit and serve.
+        for (path, orig) in &saved {
+            std::fs::write(path, orig).unwrap();
+        }
+        assert_eq!(engine.update_table(0, &[(9, patch.clone())], &q).unwrap(), 2);
+        assert_eq!(engine.lookup(&Request { ids: vec![vec![9]] }), patch);
+        drop(engine);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn update_retires_stale_spill_state() {
+        // Updating a spilled chunk promotes its source, patches it, and
+        // invalidates the old cell — the budget enforcement afterwards
+        // must still hold resident bytes at or under the budget, and the
+        // updated rows must serve bit-exactly from whichever tier they
+        // land on.
+        let q = GreedyQuantizer::default();
+        let set = f32_set(1, 64, 8);
+        let logical = set.size_bytes();
+        let budget = logical / 2;
+        let engine = ShardedEngine::start(
+            set,
+            &ShardConfig {
+                num_shards: 4,
+                small_table_rows: 0,
+                resident_budget: Some(budget),
+                ..Default::default()
+            },
+        );
+        let mut master = EmbeddingTable::randn(64, 8, 9100);
+        let rows: Vec<(u32, Vec<f32>)> =
+            [2u32, 33, 63].iter().map(|&r| (r, vec![r as f32; 8])).collect();
+        for (r, vals) in &rows {
+            master.row_mut(*r as usize).copy_from_slice(vals);
+        }
+        let reference = TableSet::new(vec![AnyTable::F32(master)]);
+        assert_eq!(engine.update_table(0, &rows, &q).unwrap(), 2);
+        let resident: usize = engine.shard_bytes().iter().sum();
+        assert!(resident <= budget, "update must re-enforce the budget: {resident} > {budget}");
+        assert_eq!(resident + engine.spilled_bytes(), logical, "tiers must reconcile");
+        let req = Request { ids: vec![vec![2, 33, 63, 17]] };
+        let mut want = vec![0.0f32; 8];
+        reference.pool(0, &req.ids[0], &mut want);
+        assert_eq!(engine.lookup(&req), want);
     }
 }

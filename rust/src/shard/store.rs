@@ -442,6 +442,11 @@ enum IoJob {
     Demote(Arc<SliceCell>),
     /// Read one spilled cell's file and stage the parsed slice.
     Prefetch(Arc<SliceCell>),
+    /// Fault injection: occupy one worker doing nothing for the given
+    /// time, simulating a wedged disk. Only the chaos harness pushes
+    /// these — they let scenarios prove that serving degrades to inline
+    /// reads (and recovers) when the async pool stops making progress.
+    Stall(Duration),
 }
 
 /// The background pool's work queue. Lock order: the registry mutex may
@@ -657,6 +662,38 @@ impl SliceStore {
         self.inner.sweep_orphans()
     }
 
+    /// Retire a cell that a live-update snapshot swap replaced: drop it
+    /// from the eviction registry (so it can never be chosen as a demote
+    /// victim or counted against warming again) and, when it is resident
+    /// with an already written spill file and no demotion in flight,
+    /// unlink that file eagerly — its bytes describe the *old* table
+    /// version, and nothing will ever read them again (promotions only
+    /// happen from the spilled tier). A cell that is currently *spilled*
+    /// keeps its file: in-flight batches on older placement snapshots
+    /// may still promote it, and [`SliceCell`]'s drop deletes the file
+    /// the moment the last snapshot lets go. Either way the stale bytes
+    /// can never be re-adopted after a crash — the orphan sweep adopts
+    /// on content digest, and the replacement cell's content differs.
+    pub fn invalidate(&self, cell: &Arc<SliceCell>) {
+        self.inner.invalidate(cell)
+    }
+
+    /// Fault injection for the chaos harness: occupy up to `threads`
+    /// background I/O workers with jobs that do nothing but sleep for
+    /// `d` (jumping the queue, like a stuck disk would stall whatever
+    /// came first). Returns how many stall jobs were queued — 0 without
+    /// an async pool. Serving must keep working while the pool is
+    /// wedged: promotions fall back to inline reads on the serving
+    /// thread by design.
+    pub fn wedge_io(&self, d: Duration, threads: usize) -> usize {
+        let Some(q) = &self.inner.io else { return 0 };
+        let n = threads.min(self.io_threads.len());
+        for _ in 0..n {
+            q.push_front(IoJob::Stall(d));
+        }
+        n
+    }
+
     /// Demotions claimed but not yet completed (queued or mid-write).
     /// Observability for tests and operators; racy by nature.
     pub fn demotions_in_flight(&self) -> usize {
@@ -724,6 +761,7 @@ fn io_loop(inner: &StoreInner) {
         match job {
             Some(IoJob::Demote(cell)) => inner.run_demote(&cell),
             Some(IoJob::Prefetch(cell)) => inner.run_prefetch(&cell),
+            Some(IoJob::Stall(d)) => std::thread::sleep(d),
             None => return,
         }
     }
@@ -747,6 +785,31 @@ impl StoreInner {
             .filter_map(Weak::upgrade)
             .map(|c| c.resident_bytes())
             .sum()
+    }
+
+    fn invalidate(&self, cell: &Arc<SliceCell>) {
+        let target = Arc::downgrade(cell);
+        let demote_in_flight = {
+            // Deregister under the lock: demote claims are only ever
+            // minted from the registry (plan_evictions / demote_all)
+            // while it is held, so after this block no *new* demotion
+            // can touch the cell — only a claim that already existed.
+            let mut reg = lock_ignore_poison(&self.cells);
+            reg.retain(|w| w.strong_count() > 0 && !w.ptr_eq(&target));
+            cell.demote_pending.load(Ordering::Acquire)
+        };
+        if demote_in_flight {
+            // A demotion is mid-write (or about to flip the tier to the
+            // file): leave the file alone; the cell's drop deletes it
+            // once the last old placement snapshot releases the cell.
+            return;
+        }
+        if cell.is_resident() && cell.file_len.swap(0, Ordering::AcqRel) > 0 {
+            // Resident with a stale write-once file: nothing can read it
+            // (promotions only start from the spilled tier), so reclaim
+            // the disk bytes now instead of at the cell's drop.
+            let _ = fs::remove_file(&cell.spill_path);
+        }
     }
 
     /// Load `cell` back into the RAM tier and return its slice. The fast
@@ -1945,5 +2008,75 @@ mod tests {
             store.stats().spill_read_bytes > read_after_stage,
             "stale staged copy was dropped, so the promote re-read the file"
         );
+    }
+
+    #[test]
+    fn invalidate_unlinks_resident_stale_files_and_defers_spilled_ones() {
+        let store = tmp_store("invalidate", usize::MAX);
+        let slice = |seed| TableSlice::cut(&any_table(1, 20, 8, seed), 0..20);
+        // Resident cell with a written file: invalidation reclaims the
+        // stale bytes immediately.
+        let a = store.admit(0, 0, slice(0xF0));
+        store.demote_all().unwrap();
+        store.promote(&a).unwrap();
+        let a_path = a.spill_path.clone();
+        assert!(a_path.exists());
+        store.invalidate(&a);
+        assert!(!a_path.exists(), "resident cell's stale file is unlinked eagerly");
+        assert_eq!(a.file_len.load(Ordering::Relaxed), 0);
+        // Spilled cell: the file must survive invalidation (an in-flight
+        // batch on the old snapshot may still promote it) and serve
+        // bit-exactly, then disappear with the last reference.
+        let b = store.admit(1, 1, slice(0xF1));
+        let mut want = vec![0.0f32; 8];
+        slice(0xF1).pool(&[2, 19], &mut want);
+        store.demote_all().unwrap();
+        let b_path = b.spill_path.clone();
+        store.invalidate(&b);
+        assert!(b_path.exists(), "spilled cell keeps its file for old-snapshot readers");
+        let back = store.promote(&b).unwrap();
+        let mut got = vec![0.0f32; 8];
+        back.pool(&[2, 19], &mut got);
+        assert_eq!(got, want, "old version stays promotable until released");
+        drop(back);
+        drop(b);
+        assert!(!b_path.exists(), "drop of the last reference deletes the file");
+        // Invalidated cells are out of the registry: an enforce pass
+        // must not pick them as victims (budget 0 would demote anything
+        // it can see).
+        let store2 = tmp_store("invalidate2", 0);
+        let c = store2.admit(0, 0, slice(0xF2));
+        store2.invalidate(&c);
+        store2.enforce();
+        assert!(c.is_resident(), "deregistered cells are never demoted");
+    }
+
+    #[test]
+    fn wedged_io_pool_degrades_to_inline_reads_and_recovers() {
+        let store = tmp_store("wedge", usize::MAX);
+        let slice = TableSlice::cut(&any_table(1, 24, 8, 0xF5), 0..24);
+        let mut want = vec![0.0f32; 8];
+        slice.pool(&[1, 23], &mut want);
+        let cell = store.admit(0, 0, slice);
+        store.demote_all().unwrap();
+        // Wedge both workers, then promote: the read must complete
+        // inline on this thread, well before the stalls expire.
+        assert_eq!(store.wedge_io(Duration::from_millis(300), 2), 2);
+        let t0 = Instant::now();
+        let back = store.promote(&cell).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(250),
+            "promotion must not wait out a wedged pool"
+        );
+        let mut got = vec![0.0f32; 8];
+        back.pool(&[1, 23], &mut got);
+        assert_eq!(got, want);
+        // Recovery: once the stalls drain, queued work flows again.
+        drop(back);
+        store.demote_all().unwrap();
+        assert_eq!(store.prefetch([&cell]), 1);
+        wait_for("the pool to recover and stage the prefetch", || {
+            store.stats().prefetches == 1
+        });
     }
 }

@@ -23,4 +23,4 @@ pub mod serial;
 pub use codebook::{CodebookKind, CodebookTable};
 pub use embedding::EmbeddingTable;
 pub use fused::{FusedTable, ScaleBiasDtype};
-pub use refresh::TableRefresher;
+pub use refresh::{quantize_row_fused, TableRefresher};

@@ -13,6 +13,23 @@
 use crate::quant::Quantizer;
 use crate::table::{EmbeddingTable, FusedTable, ScaleBiasDtype};
 
+/// Quantize one FP32 row into its fused byte image, with arithmetic
+/// identical to the full-table path: the row is lifted into a 1-row
+/// table and quantized through [`EmbeddingTable::quantize_fused`], so
+/// patching the result into a fused table is bit-equal to requantizing
+/// the whole table. Shared by [`TableRefresher::refresh`] and the
+/// serving engine's live-update path — the two must never diverge.
+pub fn quantize_row_fused(
+    row: &[f32],
+    q: &dyn Quantizer,
+    nbits: u32,
+    sb: ScaleBiasDtype,
+) -> Vec<u8> {
+    let single = EmbeddingTable::from_data(row.len(), row.to_vec());
+    let fused = single.quantize_fused(q, nbits, sb);
+    fused.row_raw(0).to_vec()
+}
+
 /// Incremental fused-table maintainer.
 pub struct TableRefresher {
     fused: FusedTable,
@@ -63,12 +80,11 @@ impl TableRefresher {
             if !self.dirty[row] {
                 continue;
             }
-            // Quantize this row alone into a 1-row table and splice its
-            // bytes into the image — identical arithmetic to the full
-            // path, so the result is bit-equal to requantizing everything.
-            let single = EmbeddingTable::from_data(table.dim(), table.row(row).to_vec());
-            let fused_row = single.quantize_fused(q, self.nbits, self.sb);
-            self.fused.patch_row(row, fused_row.row_raw(0));
+            // Quantize this row alone and splice its bytes into the
+            // image — identical arithmetic to the full path, so the
+            // result is bit-equal to requantizing everything.
+            let raw = quantize_row_fused(table.row(row), q, self.nbits, self.sb);
+            self.fused.patch_row(row, &raw);
             self.dirty[row] = false;
             refreshed += 1;
         }

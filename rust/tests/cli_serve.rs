@@ -1,0 +1,167 @@
+//! End-to-end CLI tests for `emberq serve` flag handling.
+//!
+//! These spawn the real binary (`CARGO_BIN_EXE_emberq`), so they cover
+//! the full surface a user hits: parsing, validation order, error
+//! wording on stderr, exit codes, and the `--help` text. The in-module
+//! tests in `cli.rs` call `run()` directly; this suite is the contract
+//! for scripts and operators wrapping the executable.
+
+use std::fs::File;
+use std::io::BufWriter;
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+use emberq::table::serial;
+use emberq::table::EmbeddingTable;
+
+/// Write a small FP32 table file and return its path.
+fn table_file(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("emberq-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let t = EmbeddingTable::randn(64, 8, 31);
+    let f = File::create(&path).unwrap();
+    serial::write_f32(&mut BufWriter::new(f), &t).unwrap();
+    path
+}
+
+fn emberq(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_emberq"))
+        .args(args)
+        .output()
+        .expect("spawn emberq binary")
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+#[test]
+fn serve_requires_a_table() {
+    let out = emberq(&["serve"]);
+    assert!(!out.status.success(), "missing --table must fail");
+    assert!(stderr_of(&out).contains("--table required"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn serve_rejects_bad_update_flag_combos() {
+    let p = table_file("combos.embq");
+    let p = p.to_str().unwrap();
+
+    // --update-port only makes sense with a TCP front.
+    let out = emberq(&["serve", "--table", p, "--update-port", "19999"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--listen"), "{}", stderr_of(&out));
+
+    // Live updates need the row-sharded engine.
+    let out = emberq(&["serve", "--table", p, "--shards", "0", "--update-every", "5"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--shards"), "{}", stderr_of(&out));
+
+    // Churn is a trace-mode feature; TCP clients send update frames.
+    let out = emberq(&[
+        "serve", "--table", p, "--listen", "127.0.0.1:0", "--update-every", "5",
+    ]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--update-port"), "{}", stderr_of(&out));
+
+    // A zero-row update batch is meaningless.
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "2", "--update-every", "1", "--update-rows", "0",
+    ]);
+    assert!(!out.status.success());
+    assert!(
+        stderr_of(&out).contains("--update-rows") && stderr_of(&out).contains("at least 1"),
+        "{}",
+        stderr_of(&out)
+    );
+
+    // Validation fires before any server start: a bad numeric flag is a
+    // clean one-line error, not a panic.
+    let out = emberq(&["serve", "--table", p, "--shards", "not-a-number"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).starts_with("error:"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn serve_tier_flags_warn_or_fail_cleanly() {
+    let p = table_file("tiers.embq");
+    let p = p.to_str().unwrap();
+
+    // Tier flags on the table-parallel path: loud warning, run continues.
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "0", "--workers", "1", "--copies", "2",
+        "--requests", "5", "--batch", "2", "--resident-budget", "4096",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("warning:"), "{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("--resident-budget"), "{}", stderr_of(&out));
+
+    // An uncreatable spill dir fails up front with the flag named.
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "5",
+        "--spill-dir", "/dev/null/nope",
+    ]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--spill-dir"), "{}", stderr_of(&out));
+
+    // --prefetch-window without tiered storage is inert, not fatal.
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "5",
+        "--batch", "2", "--prefetch-window", "3",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("--prefetch-window"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn serve_update_churn_runs_end_to_end() {
+    let p = table_file("churn.embq");
+    let out = emberq(&[
+        "serve", "--table", p.to_str().unwrap(), "--shards", "2", "--copies", "2",
+        "--requests", "200", "--batch", "8", "--update-every", "1", "--update-rows", "4",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(stdout.contains("update churn:"), "{stdout}");
+    assert!(stdout.contains("final version"), "{stdout}");
+}
+
+#[test]
+fn help_lists_every_serve_flag() {
+    // Drift guard: every flag `cmd_serve` parses must appear in the
+    // help text. Adding a flag to the parser without documenting it
+    // here fails this list — update both.
+    const SERVE_FLAGS: &[&str] = &[
+        "--table",
+        "--shards",
+        "--workers",
+        "--requests",
+        "--batch",
+        "--copies",
+        "--replicate-hot",
+        "--small-table-rows",
+        "--steal",
+        "--rebalance-interval",
+        "--resident-budget",
+        "--spill-dir",
+        "--spill-io-threads",
+        "--prefetch-window",
+        "--listen",
+        "--update-port",
+        "--update-every",
+        "--update-rows",
+    ];
+    let out = emberq(&["serve", "--help"]);
+    assert!(out.status.success());
+    let help = String::from_utf8_lossy(&out.stdout).into_owned();
+    for flag in SERVE_FLAGS {
+        assert!(help.contains(flag), "help text is missing `{flag}`");
+    }
+    // And the same help is reachable the other two documented ways.
+    for invocation in [&["--help"][..], &["help"][..]] {
+        let out = emberq(invocation);
+        assert!(out.status.success());
+        assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE: emberq"));
+    }
+}

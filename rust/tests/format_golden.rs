@@ -1,0 +1,168 @@
+//! Golden byte-level tests for the two on-disk containers.
+//!
+//! `docs/formats.md` is the *normative* spec for `EMBQTBL1` and
+//! `EMBQSPL1`; these tests re-derive every header offset, field width,
+//! and the checksum from that prose — independently of the writer code
+//! in `table::serial` and `shard::store` — so an implementation change
+//! that silently shifts a byte fails here, not in a reader two releases
+//! later. The layouts are frozen: a legitimate format change must bump
+//! the magic (`EMBQTBL2`, ...) and get new goldens, not edit these.
+
+use std::fs;
+
+use emberq::quant::GreedyQuantizer;
+use emberq::shard::{SliceStore, SpillConfig, TableSlice};
+use emberq::table::serial::{self, AnyTable};
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+
+/// Independent FNV-1a-64, straight from the constants in
+/// docs/formats.md — deliberately NOT `serial::fnv1a64`.
+fn fnv1a64_ref(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+#[test]
+fn fnv_reference_vectors_from_the_spec() {
+    assert_eq!(fnv1a64_ref(b""), 0xcbf2_9ce4_8422_2325);
+    assert_eq!(fnv1a64_ref(b"a"), 0xaf63_dc4c_8601_ec8c);
+    assert_eq!(fnv1a64_ref(b"foobar"), 0x8594_4171_f739_67e8);
+}
+
+#[test]
+fn embqtbl1_fp32_layout_matches_the_spec() {
+    // kind 0: [magic 8][kind 1][rows u64][dim u64][rows×dim f32].
+    let t = EmbeddingTable::randn(5, 3, 77);
+    let mut buf = Vec::new();
+    serial::write_f32(&mut buf, &t).unwrap();
+
+    assert_eq!(buf.len(), 8 + 1 + 8 + 8 + 5 * 3 * 4, "no padding anywhere");
+    assert_eq!(&buf[0..8], b"EMBQTBL1");
+    assert_eq!(buf[8], 0, "kind 0 = FP32");
+    assert_eq!(u64_at(&buf, 9), 5, "rows at [9..17)");
+    assert_eq!(u64_at(&buf, 17), 3, "dim at [17..25)");
+    // Payload: row-major little-endian f32 starting at byte 25.
+    for r in 0..5 {
+        for d in 0..3 {
+            let off = 25 + (r * 3 + d) * 4;
+            let got = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+            assert_eq!(got.to_bits(), t.row(r)[d].to_bits(), "row {r} dim {d}");
+        }
+    }
+}
+
+#[test]
+fn embqtbl1_fused_layout_matches_the_spec() {
+    // kind 1: [magic 8][kind 1][rows u64][dim u64][nbits u8][sb u8]
+    // [rows×row_bytes]. Odd dim exercises the ceil(dim/2) packing.
+    let q = GreedyQuantizer::default();
+    let t = EmbeddingTable::randn(7, 5, 78).quantize_fused(&q, 4, ScaleBiasDtype::F16);
+    let mut buf = Vec::new();
+    serial::write_fused(&mut buf, &t).unwrap();
+
+    // row_bytes re-derived from the spec, not from the table:
+    // packed = ceil(5/2) = 3, f16 tail = 4 → 7 bytes per row.
+    let row_bytes = (5 + 1) / 2 + 4;
+    assert_eq!(buf.len(), 8 + 1 + 8 + 8 + 1 + 1 + 7 * row_bytes);
+    assert_eq!(&buf[0..8], b"EMBQTBL1");
+    assert_eq!(buf[8], 1, "kind 1 = Fused");
+    assert_eq!(u64_at(&buf, 9), 7, "rows at [9..17)");
+    assert_eq!(u64_at(&buf, 17), 5, "dim at [17..25)");
+    assert_eq!(buf[25], 4, "nbits at [25]");
+    assert_eq!(buf[26], 1, "sb tag at [26]: 1 = f16");
+    assert_eq!(&buf[27..], t.data(), "payload is the raw fused rows, verbatim");
+
+    // And with f32 scale/bias the tail widens to 8 bytes, nothing else
+    // moves.
+    let t32 = EmbeddingTable::randn(7, 5, 79).quantize_fused(&q, 8, ScaleBiasDtype::F32);
+    let mut buf32 = Vec::new();
+    serial::write_fused(&mut buf32, &t32).unwrap();
+    assert_eq!(buf32.len(), 27 + 7 * (5 + 8), "8-bit packs one code per byte");
+    assert_eq!(buf32[25], 8);
+    assert_eq!(buf32[26], 0, "sb tag 0 = f32");
+
+    // Round trip through the reader: bit-identical table.
+    let back = serial::read_any(&mut buf.as_slice()).unwrap();
+    match back {
+        AnyTable::Fused(b) => assert_eq!(b.data(), t.data()),
+        other => panic!("wrong kind decoded: {} rows", other.rows()),
+    }
+}
+
+#[test]
+fn embqspl1_layout_and_checksum_match_the_spec() {
+    // [magic 8][global_lo u64][global_hi u64][payload_len u64 @24]
+    // [fnv1a64 u64 @32][payload = verbatim EMBQTBL1].
+    let q = GreedyQuantizer::default();
+    let table = EmbeddingTable::randn(12, 4, 80).quantize_fused(&q, 4, ScaleBiasDtype::F16);
+    // The slice covers global rows [3, 12) of some larger table — the
+    // header must carry the range, not just a length.
+    let whole = AnyTable::Fused(table);
+    let slice = TableSlice::cut(&whole, 3..12);
+    let mut expect_payload = Vec::new();
+    serial::write_any(&mut expect_payload, slice.table()).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("emberq-golden-{}", std::process::id()));
+    fs::create_dir_all(&dir).unwrap();
+    let store = SliceStore::new(
+        &SpillConfig {
+            dir: dir.clone(),
+            resident_budget: usize::MAX,
+            cleanup_dir: true,
+            io_threads: 0,
+            prefetch_window: 0,
+        },
+        1,
+        false,
+    )
+    .unwrap();
+    let _cell = store.admit(0, 0, slice);
+    assert_eq!(store.demote_all().unwrap(), 1);
+
+    // Exactly one spill file, named per the spec's scheme.
+    let files: Vec<_> = fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "spill"))
+        .collect();
+    assert_eq!(files.len(), 1, "one admitted slice, one spill file");
+    let name = files[0].file_name().unwrap().to_str().unwrap();
+    assert!(
+        name.starts_with("slice-") && name.ends_with(".spill"),
+        "naming scheme slice-<token>-<seq>.spill, got {name}"
+    );
+    assert_eq!(name.matches('-').count(), 2, "token and seq, dash-separated: {name}");
+
+    let bytes = fs::read(&files[0]).unwrap();
+    assert_eq!(&bytes[0..8], b"EMBQSPL1");
+    assert_eq!(u64_at(&bytes, 8), 3, "global_lo at [8..16)");
+    assert_eq!(u64_at(&bytes, 16), 12, "global_hi at [16..24) is one past the end");
+    assert_eq!(u64_at(&bytes, 24), (bytes.len() - 40) as u64, "payload_len at [24..32)");
+    assert_eq!(
+        u64_at(&bytes, 32),
+        fnv1a64_ref(&bytes[40..]),
+        "checksum at [32..40) is FNV-1a-64 of the payload only"
+    );
+    assert_eq!(&bytes[40..], &expect_payload[..], "payload is the slice's table, verbatim");
+    // The payload really is a self-contained EMBQTBL1 container.
+    let decoded = serial::read_any(&mut &bytes[40..]).unwrap();
+    assert_eq!(decoded.rows(), 9);
+    // No .tmp leftovers: the write protocol renames atomically.
+    let tmps = fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().to_string_lossy().ends_with(".tmp"))
+        .count();
+    assert_eq!(tmps, 0);
+
+    drop(store); // cleanup_dir removes the directory
+    assert!(!dir.exists(), "cleanup_dir honors its contract");
+}
