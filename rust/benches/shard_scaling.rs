@@ -34,6 +34,13 @@
 //! state is bit-identical to requantizing the masters with the same
 //! update program applied.
 //!
+//! `--simd` measures the kernel-backend dispatch itself: the same
+//! pooled workload per row format (FP32, INT4, INT8, codebook) timed on
+//! the scalar oracle and on the best backend this CPU detects, p50/p99
+//! per arm plus the speedup, with `to_bits` equality asserted between
+//! the arms before anything is timed. On a CPU with no SIMD the arms
+//! coincide (speedup ~1.0) and the JSON says `"backend": "scalar"`.
+//!
 //! ```bash
 //! cargo bench --bench shard_scaling            # full (1M rows)
 //! cargo bench --bench shard_scaling -- --quick # small + fast
@@ -42,6 +49,7 @@
 //! cargo bench --bench shard_scaling -- --tiny --spill   # tiered arms
 //! cargo bench --bench shard_scaling -- --tiny --spill-async  # sync vs async I/O
 //! cargo bench --bench shard_scaling -- --tiny --update-churn # live-update arms
+//! cargo bench --bench shard_scaling -- --tiny --simd    # scalar vs SIMD kernels
 //! ```
 //!
 //! `--spill-async` isolates the async spill I/O engine: row-wise
@@ -58,9 +66,9 @@ use emberq::data::trace::Request;
 use emberq::eval::{JsonWriter, TableWriter};
 use emberq::quant::AsymQuantizer;
 use emberq::shard::{ShardConfig, ShardedEngine};
-use emberq::sls::{sls_fused, SlsArgs};
+use emberq::sls::{backend, sls_fused, KernelBackend, SlsArgs, SlsTable};
 use emberq::table::serial::AnyTable;
-use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
 use emberq::util::bench::measure;
 use emberq::util::{Rng, Zipf};
 
@@ -70,6 +78,10 @@ const POOL: usize = 100;
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let tiny = std::env::args().any(|a| a == "--tiny");
+    if std::env::args().any(|a| a == "--simd") {
+        run_simd(tiny, quick);
+        return;
+    }
     if std::env::args().any(|a| a == "--update-churn") {
         run_update_churn(tiny, quick);
         return;
@@ -192,6 +204,107 @@ fn main() {
         tw.render()
     );
     println!("Paper-deployment check: >=2x at 4 shards over the single-threaded INT4 baseline.");
+}
+
+/// Kernel-backend mode: the flat SLS kernels per row format, scalar
+/// oracle vs. the best backend this CPU detects, on one fixed pooled
+/// workload. Outputs are proven bit-identical before anything is
+/// timed; per-pass latencies feed a histogram so the JSON carries
+/// honest p50/p99 per arm, not just a mean.
+fn run_simd(tiny: bool, quick: bool) {
+    let (rows, segments, passes) = if tiny {
+        (20_000usize, 100usize, 30usize)
+    } else if quick {
+        (100_000, 400, 60)
+    } else {
+        (200_000, 1_000, 120)
+    };
+    let lookups = segments * POOL;
+    let simd = backend::detected();
+    if simd == KernelBackend::Scalar {
+        eprintln!("note: no SIMD backend on this CPU — both arms run the scalar kernels");
+    }
+
+    let fp32 = EmbeddingTable::randn_sigma(rows, DIM, 0.1, 0x51F0);
+    let fused4 = fp32.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16);
+    let fused8 = fp32.quantize_fused(&AsymQuantizer, 8, ScaleBiasDtype::F16);
+    // TwoTier keeps quantization setup cheap at bench row counts; the
+    // kernel being timed is the same codebook gather either way.
+    let cb = fp32.quantize_codebook(CodebookKind::TwoTier { k: 16 }, ScaleBiasDtype::F16);
+    let mut rng = Rng::new(0x51F1);
+    let indices: Vec<u32> = (0..lookups).map(|_| rng.below(rows) as u32).collect();
+    let lengths = vec![POOL as u32; segments];
+    let args = SlsArgs::new(&indices, &lengths, rows).unwrap();
+
+    println!(
+        "kernel backends: scalar vs {simd} — {rows} rows, d={DIM}, \
+         {lookups} pooled rows / {segments} segments, {passes} passes per arm"
+    );
+    let mut tw = TableWriter::new(vec![
+        "format",
+        "scalar p50/p99 (ms)",
+        "detected p50/p99 (ms)",
+        "speedup (p50)",
+    ]);
+    let views = [
+        ("f32", SlsTable::F32(&fp32)),
+        ("int4", SlsTable::Fused(&fused4)),
+        ("int8", SlsTable::Fused(&fused8)),
+        ("codebook", SlsTable::Codebook(&cb)),
+    ];
+    for (fmt, view) in &views {
+        let mut want = vec![0.0f32; segments * DIM];
+        let mut out = want.clone();
+        // Bit-equality gate: a wrong fast kernel must fail here, not
+        // produce an impressive-but-meaningless number below.
+        view.sls_with(KernelBackend::Scalar, &args, &mut want);
+        view.sls_with(simd, &args, &mut out);
+        for (i, (w, g)) in want.iter().zip(&out).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "{fmt}: backends diverged at element {i}");
+        }
+
+        let mut time_arm = |kb: KernelBackend| {
+            let mut hist = LatencyHistogram::new();
+            for _ in 0..passes {
+                let t0 = std::time::Instant::now();
+                view.sls_with(kb, &args, &mut out);
+                hist.record(t0.elapsed());
+            }
+            let p50 = hist.quantile(0.50).as_nanos() as f64 / 1e6;
+            let p99 = hist.quantile(0.99).as_nanos() as f64 / 1e6;
+            (p50, p99)
+        };
+        let (s50, s99) = time_arm(KernelBackend::Scalar);
+        let (v50, v99) = time_arm(simd);
+        let speedup = s50 / v50;
+        tw.row(vec![
+            fmt.to_string(),
+            format!("{s50:.3}/{s99:.3}"),
+            format!("{v50:.3}/{v99:.3}"),
+            format!("{speedup:.2}x"),
+        ]);
+        eprintln!(
+            "{fmt}: scalar p50={s50:.3} ms p99={s99:.3} ms, {simd} p50={v50:.3} ms \
+             p99={v99:.3} ms ({speedup:.2}x)"
+        );
+        let mut jw = JsonWriter::new();
+        jw.str_field("bench", "shard_scaling_simd")
+            .str_field("format", fmt)
+            .str_field("backend", &simd.to_string())
+            .num_field("rows", rows as f64)
+            .num_field("segments", segments as f64)
+            .num_field("pooled_rows", lookups as f64)
+            .num_field("dim", DIM as f64)
+            .num_field("passes", passes as f64)
+            .num_field("scalar_p50_ms", s50)
+            .num_field("scalar_p99_ms", s99)
+            .num_field("simd_p50_ms", v50)
+            .num_field("simd_p99_ms", v99)
+            .num_field("speedup_p50", speedup);
+        println!("{}", jw.finish());
+    }
+    println!("\nKernel backends — scalar oracle vs {simd}, bit-identical outputs:\n{}", tw.render());
+    println!("Dispatch check: the SIMD arm must match the scalar arm bit-for-bit (asserted).");
 }
 
 /// Skewed-workload mode: Zipf table popularity over whole fused tables,

@@ -114,6 +114,12 @@ pub struct ScenarioConfig {
     pub faults: Vec<FaultKind>,
     /// Stall length for [`FaultKind::WedgeIo`].
     pub wedge_ms: u64,
+    /// Pin the engine's SLS kernel backend (`None` = resolve from the
+    /// environment and CPU, like production). The oracle always pools
+    /// through the process-default backend, so a pinned run is itself a
+    /// cross-backend bit-exactness check: every window comparison holds
+    /// the pinned engine to the oracle's results bit-for-bit.
+    pub kernel_backend: Option<crate::sls::KernelBackend>,
 }
 
 impl Default for ScenarioConfig {
@@ -137,6 +143,7 @@ impl Default for ScenarioConfig {
             readers: 2,
             faults: Vec::new(),
             wedge_ms: 50,
+            kernel_backend: None,
         }
     }
 }
@@ -240,6 +247,7 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
             spill_dir: Some(dir.clone()),
             spill_io_threads: 2,
             prefetch_window: 0,
+            kernel_backend: cfg.kernel_backend,
             ..ShardConfig::default()
         },
     );

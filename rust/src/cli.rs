@@ -1,16 +1,49 @@
 //! Hand-rolled CLI for the `emberq` binary.
+//!
+//! Lives in the library (not just the binary) so the flag surface is a
+//! testable contract: [`SERVE_FLAGS`] is the single source of truth for
+//! what `emberq serve` accepts — the parser rejects anything outside it
+//! and `rust/tests/cli_serve.rs` asserts the `--help` text documents
+//! every entry, so the list, the parser, and the help cannot drift.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter};
 
-use emberq::coordinator::{BatchPolicy, EmbeddingServer, ServerConfig, TableSet};
-use emberq::data::trace::{RequestTrace, TraceConfig};
-use emberq::data::{CriteoConfig, SyntheticCriteo};
-use emberq::eval::{normalized_l2_method, TableWriter};
-use emberq::model::{Dlrm, DlrmConfig, Trainer, TrainerConfig};
-use emberq::quant::{method_by_name, Method};
-use emberq::table::serial::{self, AnyTable};
-use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+use crate::coordinator::{BatchPolicy, EmbeddingServer, ServerConfig, TableSet};
+use crate::data::trace::{RequestTrace, TraceConfig};
+use crate::data::{CriteoConfig, SyntheticCriteo};
+use crate::eval::{normalized_l2_method, TableWriter};
+use crate::model::{Dlrm, DlrmConfig, Trainer, TrainerConfig};
+use crate::quant::{method_by_name, Method};
+use crate::table::serial::{self, AnyTable};
+use crate::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+
+/// Every flag `emberq serve` accepts — the single source of truth.
+/// `cmd_serve` rejects flags outside this list, and the end-to-end help
+/// drift guard (`rust/tests/cli_serve.rs`) asserts `--help` documents
+/// each entry, so adding a flag to the parser without documenting it is
+/// a test failure instead of silent drift.
+pub const SERVE_FLAGS: &[&str] = &[
+    "--table",
+    "--shards",
+    "--workers",
+    "--requests",
+    "--batch",
+    "--copies",
+    "--replicate-hot",
+    "--small-table-rows",
+    "--steal",
+    "--rebalance-interval",
+    "--resident-budget",
+    "--spill-dir",
+    "--spill-io-threads",
+    "--prefetch-window",
+    "--kernel-backend",
+    "--listen",
+    "--update-port",
+    "--update-every",
+    "--update-rows",
+];
 
 type Result<T> = std::result::Result<T, String>;
 
@@ -67,6 +100,14 @@ impl Flags {
     fn flag(&self, key: &str) -> bool {
         self.bools.iter().any(|b| b == key)
     }
+
+    /// Every flag key the user passed (`--key value` and bare `--key`).
+    fn keys(&self) -> impl Iterator<Item = &str> {
+        self.kv
+            .iter()
+            .map(|(k, _)| k.as_str())
+            .chain(self.bools.iter().map(String::as_str))
+    }
 }
 
 /// Entry point used by `main`.
@@ -109,15 +150,19 @@ COMMANDS:
   eval      --rows N --dim D [--seed S] [--bits 4]
             normalized-l2 sweep of all methods over a random N(0,1) table
   serve     --table FILE [--shards N] [--workers N] [--requests N] [--batch N]
-            [--replicate-hot N] [--small-table-rows N] [--steal]
+            [--copies N] [--replicate-hot N] [--small-table-rows N] [--steal]
             [--rebalance-interval MS] [--resident-budget BYTES]
             [--spill-dir PATH] [--spill-io-threads N] [--prefetch-window N]
+            [--kernel-backend auto|scalar|avx2|neon]
             [--listen ADDR] [--update-port PORT] [--update-every MS]
             [--update-rows N]
             serve a table file against a synthetic Zipf trace (or over TCP).
             --shards N > 0 splits every table's rows across N worker
             shards (the multi-core, slice-resident path); --shards 0
             falls back to the table-parallel pool with --workers threads.
+            --copies N serves N logical tables backed by re-reading the
+            same file (default 8) so the request shape matches a
+            multi-table ranking model.
             --replicate-hot N replicates the N hottest *whole* tables
             (router-observed load from the trace) across all shards;
             tables below --small-table-rows rows (default 512) stay
@@ -143,6 +188,14 @@ COMMANDS:
             registry lock, 0 = inline I/O). --prefetch-window N warms
             the N hottest spilled slices per heat tick so bursty tables
             are staged before their first miss (default 0 = off).
+            --kernel-backend pins the SLS kernel backend for the sharded
+            path; `auto` (the default) picks the best one the CPU
+            supports, and the env var EMBERQ_FORCE_SCALAR=1 forces
+            scalar without a flag. Backends are bit-identical — the pin
+            only changes speed — and an unsupported pin is a clean
+            startup error. The resolved choice is printed at startup and
+            shows up as `kernel=` in the per-shard stats (CLI summary
+            and TCP stats frame alike).
             Live updates (sharded path only): the TCP protocol accepts
             update frames that patch rows and swap an MVCC table
             snapshot (fused rows re-quantized on ingest, bit-identical
@@ -237,7 +290,7 @@ fn cmd_quantize(flags: &Flags) -> Result<()> {
         }
         Method::KmeansCls(_) => {
             let budget = table.rows() * sb.tail_bytes();
-            let k = emberq::quant::KmeansClsQuantizer::k_for_budget(table.rows(), budget)
+            let k = crate::quant::KmeansClsQuantizer::k_for_budget(table.rows(), budget)
                 .min(table.rows());
             let cb = table.quantize_codebook(CodebookKind::TwoTier { k }, sb);
             serial::write_codebook(&mut w, &cb).map_err(|e| e.to_string())?;
@@ -273,6 +326,14 @@ fn cmd_eval(flags: &Flags) -> Result<()> {
 }
 
 fn cmd_serve(flags: &Flags) -> Result<()> {
+    // `SERVE_FLAGS` is load-bearing, not documentation: a flag missing
+    // from the list is rejected here, so the list, the parser, and the
+    // help text stay one surface.
+    for key in flags.keys() {
+        if !SERVE_FLAGS.iter().any(|f| f.strip_prefix("--") == Some(key)) {
+            return Err(format!("serve: unknown flag --{key} (see `emberq serve --help`)"));
+        }
+    }
     let table_path = flags.get("table").ok_or("--table required")?;
     let shards: usize = flags.num("shards", 4)?;
     // The table-parallel pool needs at least one worker.
@@ -282,7 +343,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let copies: usize = flags.num("copies", 8)?;
     let replicate_hot: usize = flags.num("replicate-hot", 0)?;
     let small_table_rows: usize =
-        flags.num("small-table-rows", emberq::shard::ShardConfig::default().small_table_rows)?;
+        flags.num("small-table-rows", crate::shard::ShardConfig::default().small_table_rows)?;
     let steal = flags.flag("steal");
     let rebalance_ms: u64 = flags.num("rebalance-interval", 0)?;
     let rebalance_interval =
@@ -292,9 +353,20 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let spill_dir = flags.get("spill-dir").map(std::path::PathBuf::from);
     let spill_io_threads: usize = flags.num(
         "spill-io-threads",
-        emberq::shard::ShardConfig::default().spill_io_threads,
+        crate::shard::ShardConfig::default().spill_io_threads,
     )?;
     let prefetch_window: usize = flags.num("prefetch-window", 0)?;
+    let kernel_backend = match flags.get("kernel-backend") {
+        None | Some("auto") => None,
+        Some(v) => Some(
+            v.parse::<crate::sls::KernelBackend>()
+                .map_err(|e| format!("--kernel-backend: {e}"))?,
+        ),
+    };
+    // Resolve up front: an unsupported pin is a clean one-line error
+    // here instead of an engine panic after the tables are loaded.
+    let resolved_kernel = crate::sls::backend::resolve(kernel_backend)
+        .map_err(|e| format!("--kernel-backend: {e}"))?;
     let listen = flags.get("listen").map(str::to_string);
     let update_port: u16 = flags.num("update-port", 0)?;
     let update_every_ms: u64 = flags.num("update-every", 0)?;
@@ -343,6 +415,12 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     if prefetch_window > 0 && spill_io_threads == 0 {
         eprintln!("note: --prefetch-window needs --spill-io-threads > 0; inert");
     }
+    if kernel_backend.is_some() && shards == 0 {
+        eprintln!(
+            "warning: --kernel-backend only applies to the sharded path (--shards > 0); \
+             the table-parallel pool runs the process default"
+        );
+    }
     // Fail with a friendly message here rather than a panic inside the
     // engine if the spill directory cannot be created. With a budget but
     // no explicit dir the engine makes its own subdirectory under the
@@ -373,7 +451,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let set = TableSet::new(tables);
     let dim = set.dim();
     let mode = if shards > 0 {
-        format!("{shards} row-wise shards")
+        format!("{shards} row-wise shards ({resolved_kernel} kernels)")
     } else {
         format!("{workers} table-parallel workers")
     };
@@ -423,6 +501,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             spill_dir: spill_dir.filter(|_| shards > 0),
             spill_io_threads,
             prefetch_window,
+            kernel_backend: kernel_backend.filter(|_| shards > 0),
         },
     );
     if replicate_hot > 0 && shards == 1 {
@@ -438,7 +517,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         // Socket mode: serve lookups over TCP until interrupted (the
         // wire-level stats frame reports the same stats block remotely).
         let server = std::sync::Arc::new(server);
-        let front = emberq::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &addr)
+        let front = crate::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &addr)
             .map_err(|e| format!("bind {addr}: {e}"))?;
         // A dedicated update endpoint next to the serving one, so an
         // ingest pipeline can push row updates without competing with
@@ -449,7 +528,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         let _update_front = if update_port > 0 {
             let host = addr.rsplit_once(':').map_or("127.0.0.1", |(h, _)| h);
             let uaddr = format!("{host}:{update_port}");
-            let f = emberq::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &uaddr)
+            let f = crate::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &uaddr)
                 .map_err(|e| format!("bind --update-port {uaddr}: {e}"))?;
             println!("update endpoint on {}", f.addr());
             Some(f)
@@ -475,7 +554,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             let srv = &server;
             let stop_ref = &stop;
             let updater = sc.spawn(move || {
-                let mut rng = emberq::util::Rng::new(0xE0BE);
+                let mut rng = crate::util::Rng::new(0xE0BE);
                 let (mut committed, mut rejected) = (0u64, 0u64);
                 while !stop_ref.load(std::sync::atomic::Ordering::Relaxed) {
                     let t = rng.below(copies);
@@ -692,6 +771,37 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(e.contains("--update-rows"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_kernel_backend_flag_validates() {
+        let dir = std::env::temp_dir().join("emberq_cli_kernel_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.embq");
+        let table = EmbeddingTable::randn(50, 8, 29);
+        let f = File::create(&path).unwrap();
+        serial::write_f32(&mut BufWriter::new(f), &table).unwrap();
+        let p = path.to_str().unwrap();
+        // `scalar` resolves on every CPU; the replay must succeed.
+        run(&s(&[
+            "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "20",
+            "--batch", "8", "--kernel-backend", "scalar",
+        ]))
+        .unwrap();
+        // `auto` is the spelled-out default.
+        run(&s(&[
+            "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "20",
+            "--batch", "8", "--kernel-backend", "auto",
+        ]))
+        .unwrap();
+        // Garbage names the flag in the error, before any table loads.
+        let e = run(&s(&["serve", "--table", p, "--kernel-backend", "warp9"])).unwrap_err();
+        assert!(e.contains("--kernel-backend"), "{e}");
+        assert!(e.contains("warp9"), "{e}");
+        // Flags outside SERVE_FLAGS are rejected, not silently ignored.
+        let e = run(&s(&["serve", "--table", p, "--shardz", "2"])).unwrap_err();
+        assert!(e.contains("unknown flag --shardz"), "{e}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

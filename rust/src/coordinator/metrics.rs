@@ -166,6 +166,12 @@ pub struct ShardStats {
     /// newer snapshot's value, so aggregated views report the most
     /// recent version seen.
     pub version: u64,
+    /// SLS kernel backend the shard's workers pool with, stamped by the
+    /// sharded engine (`None` on paths that predate backends, e.g. the
+    /// table-parallel pool). Like `version`, a snapshot rather than a
+    /// counter: `merge` keeps the first stamped value (one engine's
+    /// shards all share a backend) and `since` keeps self's.
+    pub kernel: Option<crate::sls::KernelBackend>,
 }
 
 impl ShardStats {
@@ -184,6 +190,7 @@ impl ShardStats {
         self.orphans_adopted += other.orphans_adopted;
         self.orphans_deleted += other.orphans_deleted;
         self.version = self.version.max(other.version);
+        self.kernel = self.kernel.or(other.kernel);
     }
 
     /// The activity recorded after `earlier` was snapshotted from this
@@ -205,6 +212,7 @@ impl ShardStats {
             // A snapshot, not a counter: the window is described by the
             // version in force when it closed.
             version: self.version,
+            kernel: self.kernel,
         }
     }
 
@@ -238,6 +246,9 @@ impl ShardStats {
         }
         if self.version > 0 {
             s.push_str(&format!(", v{}", self.version));
+        }
+        if let Some(kb) = self.kernel {
+            s.push_str(&format!(", kernel={kb}"));
         }
         s
     }
@@ -429,6 +440,23 @@ mod tests {
         // Rendering: versioned engines show it, read-only ones stay quiet.
         assert!(a.summary().contains(", v4"));
         assert!(!ShardStats::default().summary().contains(", v"));
+    }
+
+    #[test]
+    fn kernel_is_a_snapshot_not_a_counter() {
+        use crate::sls::KernelBackend;
+        // One engine's shards all share a backend, so merging keeps the
+        // first stamped value; a pre-backend peer (None) never erases it.
+        let mut a = ShardStats { kernel: Some(KernelBackend::Scalar), ..Default::default() };
+        a.merge(&ShardStats::default());
+        assert_eq!(a.kernel, Some(KernelBackend::Scalar));
+        let mut unstamped = ShardStats::default();
+        unstamped.merge(&a);
+        assert_eq!(unstamped.kernel, Some(KernelBackend::Scalar));
+        // Diffing keeps self's stamp, and rendering shows it.
+        assert_eq!(a.since(&ShardStats::default()).kernel, Some(KernelBackend::Scalar));
+        assert!(a.summary().contains(", kernel=scalar"));
+        assert!(!ShardStats::default().summary().contains("kernel="));
     }
 
     #[test]

@@ -172,6 +172,10 @@ pub struct ServerConfig {
     /// Sharded path only: warm the N hottest spilled cells per heat
     /// tick (see [`ShardConfig::prefetch_window`]).
     pub prefetch_window: usize,
+    /// Sharded path only: pin the SLS kernel backend (see
+    /// [`ShardConfig::kernel_backend`]). `None` (default) resolves
+    /// `EMBERQ_FORCE_SCALAR`, then the best backend the CPU supports.
+    pub kernel_backend: Option<crate::sls::KernelBackend>,
 }
 
 impl Default for ServerConfig {
@@ -190,6 +194,7 @@ impl Default for ServerConfig {
             spill_dir: None,
             spill_io_threads: ShardConfig::default().spill_io_threads,
             prefetch_window: 0,
+            kernel_backend: None,
         }
     }
 }
@@ -245,6 +250,7 @@ impl EmbeddingServer {
                     spill_dir: cfg.spill_dir.clone(),
                     spill_io_threads: cfg.spill_io_threads,
                     prefetch_window: cfg.prefetch_window,
+                    kernel_backend: cfg.kernel_backend,
                 },
             );
             (Some(Arc::new(engine)), None)

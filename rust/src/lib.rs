@@ -42,6 +42,13 @@
 //! `python -m compile.quant_ref --out tests/golden/quant_golden.txt` from
 //! the `python/` directory (see `rust/tests/golden_cross_lang.rs`).
 //!
+//! The SLS kernels dispatch at runtime between a scalar backend (the
+//! bit-exactness oracle) and SIMD backends (AVX2 / NEON) that are
+//! bit-identical to it — see [`sls::backend`]. `unsafe` is confined to
+//! the intrinsic calls in [`sls::kernel`]; `unsafe_op_in_unsafe_fn` is
+//! denied crate-wide so every intrinsic sits in an explicit, documented
+//! `unsafe` block.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -57,7 +64,10 @@
 //!          / table.size_bytes() as f64);
 //! ```
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod chaos;
+pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod eval;

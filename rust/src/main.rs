@@ -14,7 +14,7 @@
 
 use std::process::ExitCode;
 
-mod cli;
+use emberq::cli;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();

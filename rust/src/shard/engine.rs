@@ -100,6 +100,7 @@ use crate::shard::partition::{plan_partitions, RowPartition, TablePartition};
 use crate::shard::slice::TableSlice;
 use crate::shard::store::{SliceCell, SliceStore, SpillConfig, StoreStats};
 use crate::shard::ShardConfig;
+use crate::sls::KernelBackend;
 use crate::table::serial::AnyTable;
 use crate::table::{quantize_row_fused, EmbeddingTable, FusedTable};
 use crate::util::sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison};
@@ -247,6 +248,15 @@ struct Core {
     /// that sees `version() == v` is guaranteed the `v`-th snapshot is
     /// already serving. Stamped into every [`ShardStats`] snapshot.
     version: AtomicU64,
+    /// SLS kernel backend every worker pools with, resolved once at
+    /// start from [`ShardConfig::kernel_backend`]
+    /// (`EMBERQ_FORCE_SCALAR` → config pin → CPU detection). Backends are
+    /// bit-identical; threading the resolved value explicitly (rather
+    /// than re-reading the process default per segment) keeps a pinned
+    /// engine pinned even when tests run engines with different
+    /// backends side by side. Stamped into every [`ShardStats`]
+    /// snapshot.
+    kernel: KernelBackend,
 }
 
 impl Core {
@@ -273,6 +283,12 @@ impl ShardedEngine {
     /// steady state is exactly the slices.
     pub fn start(set: TableSet, cfg: &ShardConfig) -> ShardedEngine {
         let n = cfg.num_shards.max(1);
+        // Resolve the kernel backend up front so a misconfigured pin
+        // fails loudly at startup, not mid-serve (mirrors the spill-dir
+        // policy; pre-validate with `sls::backend::resolve` for a soft
+        // failure).
+        let kernel = crate::sls::backend::resolve(cfg.kernel_backend)
+            .unwrap_or_else(|e| panic!("resolve kernel backend: {e}"));
         let num_tables = set.num_tables();
         let rows: Vec<usize> = (0..num_tables).map(|t| set.rows_of(t)).collect();
         let offsets: Vec<usize> = (0..num_tables).map(|t| set.offset_of(t)).collect();
@@ -444,6 +460,7 @@ impl ShardedEngine {
             replicas_added: AtomicU64::new(0),
             replicas_retired: AtomicU64::new(0),
             version: AtomicU64::new(1),
+            kernel,
         });
         let workers = (0..n)
             .map(|shard| {
@@ -569,6 +586,13 @@ impl ShardedEngine {
         read_ignore_poison(&self.core.placement).replicated_bytes(&self.core.bytes_per_table)
     }
 
+    /// The kernel backend every worker pools with, resolved once at
+    /// start (`EMBERQ_FORCE_SCALAR` → [`ShardConfig::kernel_backend`]
+    /// → CPU detection).
+    pub fn kernel_backend(&self) -> KernelBackend {
+        self.core.kernel
+    }
+
     /// Snapshot of each shard's service stats (cumulative since start).
     /// Poison-tolerant: readable even after a worker panic. Tier
     /// transitions (promotions/demotions/spill reads/spill errors) are
@@ -582,6 +606,7 @@ impl ShardedEngine {
             .map(|(shard, s)| {
                 let mut st = lock_ignore_poison(s).clone();
                 st.version = self.core.version.load(Ordering::Acquire);
+                st.kernel = Some(self.core.kernel);
                 if let Some(store) = &self.core.store {
                     let spill = store.shard_spill(shard);
                     st.promotions = spill.promotions;
@@ -1203,7 +1228,7 @@ fn execute_sub(
             match cell.pinned() {
                 // Untiered: the pinned slice — no tier lock, no heat
                 // bookkeeping, no Arc clone (the pre-tiering cost).
-                Some(slice) => slice.pool(&sub.ids, out),
+                Some(slice) => slice.pool_with(core.kernel, &sub.ids, out),
                 None => {
                     // Round-robin routing splits a replicated table's
                     // traffic 1/replicas per cell; scale the touch back
@@ -1215,7 +1240,7 @@ fn execute_sub(
                     let replicas = sub.placement.replicas[t].len().max(1) as u64;
                     let heat = sub.ids.len() as u64 * replicas;
                     match resolve(core, cell, heat) {
-                        Ok(slice) => slice.pool(&sub.ids, out),
+                        Ok(slice) => slice.pool_with(core.kernel, &sub.ids, out),
                         Err(e) => {
                             // One replica's spill file went bad — but
                             // replicas are byte-identical, so serve from
@@ -1230,7 +1255,7 @@ fn execute_sub(
                                 resolve(core, cell, 0).ok()
                             });
                             match other {
-                                Some(slice) => slice.pool(&sub.ids, out),
+                                Some(slice) => slice.pool_with(core.kernel, &sub.ids, out),
                                 None => return Err(e),
                             }
                         }
@@ -1244,7 +1269,8 @@ fn execute_sub(
                 // Untiered: resolve straight off the placement snapshot
                 // — no per-segment scratch, exactly as before tiering
                 // existed (cells outside a store are pinned).
-                exec::pool_rowwise(
+                exec::pool_rowwise_with(
+                    core.kernel,
                     p,
                     |s| {
                         cells[s][t]
@@ -1287,7 +1313,8 @@ fn execute_sub(
                 }
             }
             let resolved = &scratch.resolved;
-            exec::pool_rowwise(
+            exec::pool_rowwise_with(
+                core.kernel,
                 p,
                 |s| resolved[s].as_ref().expect("touched chunks were resolved").table(),
                 &sub.ids,

@@ -11,15 +11,23 @@
 //! these kernels walk the ids in original request order, resolving each
 //! id to its owning chunk slice. Row bytes in a slice are byte-identical
 //! to the unsharded table's rows and the accumulation loops below mirror
-//! the flat kernels in `crate::sls` operation for operation, so the
-//! result is bit-identical to the unsharded pool — for every shard
-//! count, with or without stealing, before and after a rebalance.
+//! the flat kernels in `crate::sls` operation for operation — same
+//! [`crate::sls::kernel`] primitives on the same [`KernelBackend`], same
+//! column blocking, same bias factoring — so the result is bit-identical
+//! to the unsharded pool for every shard count and every backend, with
+//! or without stealing, before and after a rebalance.
+//!
+//! Prefetch resolves only the *next pooled id's* chunk, and every id in
+//! the segment has an owning chunk the segment touches anyway, so
+//! prefetching never resolves (and never promotes) an untouched chunk.
 //!
 //! Each `pool_*` function computes **one** segment (the flat kernels'
 //! per-segment body); `tests` pin bit-equality against the flat kernels
-//! per format.
+//! per format and per backend.
 
 use crate::shard::partition::RowPartition;
+use crate::sls::backend::{self, KernelBackend};
+use crate::sls::kernel;
 use crate::table::serial::AnyTable;
 use crate::table::{CodebookTable, EmbeddingTable, FusedTable};
 
@@ -29,9 +37,22 @@ use crate::table::{CodebookTable, EmbeddingTable, FusedTable};
 /// closure so the caller needs no per-segment scratch allocation to
 /// adapt its storage (the engine resolves straight out of its placement
 /// snapshot). Bit-identical to the unsharded format kernel over the
-/// same ids.
+/// same ids. Runs the process-default backend ([`backend::active`]).
 pub fn pool_rowwise<'a, F>(p: &RowPartition, chunk_of: F, ids: &[u32], out: &mut [f32])
 where
+    F: Fn(usize) -> &'a AnyTable,
+{
+    pool_rowwise_with(backend::active(), p, chunk_of, ids, out);
+}
+
+/// [`pool_rowwise`] pinned to an explicit kernel backend.
+pub fn pool_rowwise_with<'a, F>(
+    kb: KernelBackend,
+    p: &RowPartition,
+    chunk_of: F,
+    ids: &[u32],
+    out: &mut [f32],
+) where
     F: Fn(usize) -> &'a AnyTable,
 {
     // Dispatch on the first *used* chunk's format (chunks of one table
@@ -43,15 +64,15 @@ where
         return;
     };
     match chunk_of(p.shard_of(first)) {
-        AnyTable::F32(_) => pool_f32(p, &chunk_of, ids, out),
+        AnyTable::F32(_) => pool_f32(kb, p, &chunk_of, ids, out),
         AnyTable::Fused(f) => {
             if f.nbits() == 4 {
-                pool_i4(p, &chunk_of, ids, out)
+                pool_i4(kb, p, &chunk_of, ids, out)
             } else {
-                pool_i8(p, &chunk_of, ids, out)
+                pool_i8(kb, p, &chunk_of, ids, out)
             }
         }
-        AnyTable::Codebook(_) => pool_codebook(p, &chunk_of, ids, out),
+        AnyTable::Codebook(_) => pool_codebook(kb, p, &chunk_of, ids, out),
     }
 }
 
@@ -93,49 +114,73 @@ fn as_codebook(t: &AnyTable) -> &CodebookTable {
     }
 }
 
-/// Mirror of `sls_f32`'s per-segment body.
-fn pool_f32<'a, F>(p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
+/// Mirror of `sls_f32_with`'s per-segment body: column-blocked wide
+/// rows, prefetch of the upcoming pooled row, lane-parallel accumulate.
+fn pool_f32<'a, F>(kb: KernelBackend, p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
 where
     F: Fn(usize) -> &'a AnyTable,
 {
     let d = out.len();
     out.fill(0.0);
-    for &id in ids {
-        let row = as_f32(chunk_of(p.shard_of(id))).row(p.local_of(id) as usize);
-        for j in 0..d {
-            out[j] += row[j];
+    let block = d.min(kernel::CACHE_BLOCK);
+    let mut col = 0usize;
+    loop {
+        let hi = (col + block).min(d);
+        for (i, &id) in ids.iter().enumerate() {
+            if let Some(&nxt) = ids.get(i + kernel::PREFETCH_AHEAD) {
+                let t = as_f32(chunk_of(p.shard_of(nxt)));
+                kernel::prefetch_f32s(t.row(p.local_of(nxt) as usize));
+            }
+            let row = as_f32(chunk_of(p.shard_of(id))).row(p.local_of(id) as usize);
+            kernel::accum_f32(kb, &mut out[col..hi], &row[col..hi]);
+        }
+        col = hi;
+        if col >= d {
+            break;
         }
     }
 }
 
 /// Mirror of `sls_i8`'s per-segment body (bias factored out of the hot
-/// loop, added once per segment — guarded exactly like the flat kernel).
-fn pool_i8<'a, F>(p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
+/// loop, accumulated on the first column block only, added once per
+/// segment — guarded exactly like the flat kernel).
+fn pool_i8<'a, F>(kb: KernelBackend, p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
 where
     F: Fn(usize) -> &'a AnyTable,
 {
     let d = out.len();
     out.fill(0.0);
+    let block = d.min(kernel::CACHE_BLOCK);
     let mut bias_sum = 0.0f32;
-    for &id in ids {
-        let f = as_fused(chunk_of(p.shard_of(id)));
-        let raw = f.row_raw(p.local_of(id) as usize);
-        let (scale, bias) = f.read_tail(raw);
-        bias_sum += bias;
-        for (a, &c) in out.iter_mut().zip(&raw[..d]) {
-            *a += scale * c as f32;
+    let mut col = 0usize;
+    loop {
+        let hi = (col + block).min(d);
+        for (i, &id) in ids.iter().enumerate() {
+            if let Some(&nxt) = ids.get(i + kernel::PREFETCH_AHEAD) {
+                let f = as_fused(chunk_of(p.shard_of(nxt)));
+                kernel::prefetch_bytes(f.row_raw(p.local_of(nxt) as usize));
+            }
+            let f = as_fused(chunk_of(p.shard_of(id)));
+            let raw = f.row_raw(p.local_of(id) as usize);
+            let (scale, bias) = f.read_tail(raw);
+            if col == 0 {
+                bias_sum += bias;
+            }
+            kernel::accum_scaled_u8(kb, &mut out[col..hi], &raw[col..hi], scale);
+        }
+        col = hi;
+        if col >= d {
+            break;
         }
     }
     if bias_sum != 0.0 {
-        for a in out.iter_mut() {
-            *a += bias_sum;
-        }
+        kernel::add_bias(kb, out, bias_sum);
     }
 }
 
 /// Mirror of `sls_i4`'s per-segment body: de-interleaved even/odd nibble
 /// accumulators, interleaved (with the factored bias) once at the end.
-fn pool_i4<'a, F>(p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
+fn pool_i4<'a, F>(kb: KernelBackend, p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
 where
     F: Fn(usize) -> &'a AnyTable,
 {
@@ -146,18 +191,16 @@ where
     let mut acc_even = vec![0.0f32; half];
     let mut acc_odd = vec![0.0f32; packed];
     let mut bias_sum = 0.0f32;
-    for &id in ids {
+    for (i, &id) in ids.iter().enumerate() {
+        if let Some(&nxt) = ids.get(i + kernel::PREFETCH_AHEAD) {
+            let f = as_fused(chunk_of(p.shard_of(nxt)));
+            kernel::prefetch_bytes(f.row_raw(p.local_of(nxt) as usize));
+        }
         let f = as_fused(chunk_of(p.shard_of(id)));
         let raw = f.row_raw(p.local_of(id) as usize);
         let (scale, bias) = f.read_tail(raw);
         bias_sum += bias;
-        let bytes = &raw[..packed];
-        for (a, &byte) in acc_even[..packed].iter_mut().zip(bytes) {
-            *a += scale * (byte & 0x0F) as f32;
-        }
-        for (a, &byte) in acc_odd.iter_mut().zip(bytes) {
-            *a += scale * (byte >> 4) as f32;
-        }
+        kernel::accum_nibbles(kb, &mut acc_even[..packed], &mut acc_odd, &raw[..packed], scale);
         if odd_tail {
             acc_even[packed] += scale * (raw[packed] & 0x0F) as f32;
         }
@@ -171,27 +214,66 @@ where
     }
 }
 
-/// Mirror of `sls_codebook`'s per-segment body.
-fn pool_codebook<'a, F>(p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
-where
+/// Mirror of `sls_codebook_with`'s per-segment body: direct interleaved
+/// accumulation off AVX2, de-interleaved gather scratch on it. Both
+/// arms keep each output element's scalar addend order.
+fn pool_codebook<'a, F>(
+    kb: KernelBackend,
+    p: &RowPartition,
+    chunk_of: &F,
+    ids: &[u32],
+    out: &mut [f32],
+) where
     F: Fn(usize) -> &'a AnyTable,
 {
     let d = out.len();
-    out.fill(0.0);
-    for &id in ids {
+    let pairs = d / 2;
+    let odd_tail = d % 2 == 1;
+    if kb != KernelBackend::Avx2 {
+        out.fill(0.0);
+        for (i, &id) in ids.iter().enumerate() {
+            if let Some(&nxt) = ids.get(i + kernel::PREFETCH_AHEAD) {
+                let c = as_codebook(chunk_of(p.shard_of(nxt)));
+                kernel::prefetch_bytes(c.codes_of_row(p.local_of(nxt) as usize));
+            }
+            let c = as_codebook(chunk_of(p.shard_of(id)));
+            let local = p.local_of(id) as usize;
+            let cb = c.codebook_of_row(local);
+            let codes = c.codes_of_row(local);
+            for b in 0..pairs {
+                let byte = codes[b];
+                out[2 * b] += cb[(byte & 0x0F) as usize];
+                out[2 * b + 1] += cb[(byte >> 4) as usize];
+            }
+            if odd_tail {
+                out[d - 1] += cb[(codes[pairs] & 0x0F) as usize];
+            }
+        }
+        return;
+    }
+    let half = pairs + usize::from(odd_tail);
+    let mut acc_even = vec![0.0f32; half];
+    let mut acc_odd = vec![0.0f32; pairs];
+    for (i, &id) in ids.iter().enumerate() {
+        if let Some(&nxt) = ids.get(i + kernel::PREFETCH_AHEAD) {
+            let c = as_codebook(chunk_of(p.shard_of(nxt)));
+            kernel::prefetch_bytes(c.codes_of_row(p.local_of(nxt) as usize));
+        }
         let c = as_codebook(chunk_of(p.shard_of(id)));
         let local = p.local_of(id) as usize;
         let cb = c.codebook_of_row(local);
         let codes = c.codes_of_row(local);
-        let pairs = d / 2;
-        for b in 0..pairs {
-            let byte = codes[b];
-            out[2 * b] += cb[(byte & 0x0F) as usize];
-            out[2 * b + 1] += cb[(byte >> 4) as usize];
+        kernel::accum_codebook(kb, &mut acc_even[..pairs], &mut acc_odd, &codes[..pairs], cb);
+        if odd_tail {
+            acc_even[pairs] += cb[(codes[pairs] & 0x0F) as usize];
         }
-        if d % 2 == 1 {
-            out[d - 1] += cb[(codes[pairs] & 0x0F) as usize];
-        }
+    }
+    for b in 0..pairs {
+        out[2 * b] = acc_even[b];
+        out[2 * b + 1] = acc_odd[b];
+    }
+    if odd_tail {
+        out[d - 1] = acc_even[pairs];
     }
 }
 
@@ -201,6 +283,7 @@ mod tests {
     use crate::coordinator::TableSet;
     use crate::quant::AsymQuantizer;
     use crate::shard::slice::TableSlice;
+    use crate::sls::{SlsArgs, SlsTable};
     use crate::table::{CodebookKind, ScaleBiasDtype};
     use crate::util::Rng;
 
@@ -224,14 +307,15 @@ mod tests {
         // The tiered-storage contract: pooling must only ask for chunks
         // that own at least one id (resolving an untouched chunk would
         // promote a spilled slice for nothing). A resolver that panics
-        // on any other shard proves it.
+        // on any other shard proves it — prefetch included, since the
+        // ids below exceed PREFETCH_AHEAD and keep the lookahead live.
         let rows = 16;
         let p = RowPartition::new(rows, 4); // chunks of 4
         let table = table_of(1, rows, 8, 0xDEC0);
         let reference = TableSet::new(vec![table_of(1, rows, 8, 0xDEC0)]);
         let slices: Vec<TableSlice> =
             (0..4).map(|s| TableSlice::cut(&table, p.range_of(s))).collect();
-        let ids = vec![8u32, 11, 9]; // all inside chunk 2
+        let ids = vec![8u32, 11, 9, 10, 8, 11, 9]; // all inside chunk 2
         let chunk_of = |s: usize| {
             assert_eq!(s, 2, "resolved an untouched chunk");
             slices[s].table()
@@ -293,6 +377,40 @@ mod tests {
                         got, want,
                         "fmt={fmt} shards={shards} rows={rows} dim={dim} ids={ids:?}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_pool_matches_flat_kernel_on_every_backend() {
+        // The broad sweep above runs the process default; this pins the
+        // backend explicitly on both sides — scalar and best-detected
+        // must reproduce the flat `_with` kernel bit for bit through
+        // the chunked path, misaligned chunk boundaries included.
+        for kb in [KernelBackend::Scalar, backend::detected()] {
+            for fmt in 0..5usize {
+                let rows = 40;
+                let dim = 33;
+                let table = table_of(fmt, rows, dim, 0xBAC0 + fmt as u64);
+                let flat = table_of(fmt, rows, dim, 0xBAC0 + fmt as u64);
+                let p = RowPartition::new(rows, 3);
+                let slices: Vec<TableSlice> =
+                    (0..3).map(|s| TableSlice::cut(&table, p.range_of(s))).collect();
+                let ids = [1u32, 39, 7, 20, 20, 5, 13, 13, 26];
+                let mut got = vec![7.0f32; dim];
+                pool_rowwise_with(kb, &p, |s| slices[s].table(), &ids, &mut got);
+                let view: SlsTable = match &flat {
+                    AnyTable::F32(t) => SlsTable::F32(t),
+                    AnyTable::Fused(t) => SlsTable::Fused(t),
+                    AnyTable::Codebook(t) => SlsTable::Codebook(t),
+                };
+                let lengths = [ids.len() as u32];
+                let args = SlsArgs::new(&ids, &lengths, rows).unwrap();
+                let mut want = vec![0.0f32; dim];
+                view.sls_with(kb, &args, &mut want);
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "kb={kb} fmt={fmt}");
                 }
             }
         }

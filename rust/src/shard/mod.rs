@@ -147,6 +147,15 @@ pub struct ShardConfig {
     /// `0` (default) disables the warmer; segment-level prefetching of
     /// touched chunks is always on when the I/O pool exists.
     pub prefetch_window: usize,
+    /// SLS kernel backend for every shard worker. `None` (default)
+    /// resolves the process default — `EMBERQ_FORCE_SCALAR` if set, else
+    /// the best backend the CPU supports
+    /// ([`crate::sls::backend::from_env_and_cpu`]). `Some(b)` pins `b`;
+    /// [`ShardedEngine::start`] panics if `b` cannot run on this CPU
+    /// (pre-validate with [`crate::sls::backend::resolve`] for a soft
+    /// failure). Backends are bit-identical, so this only changes speed;
+    /// the resolved choice is reported via shard stats (`kernel=`).
+    pub kernel_backend: Option<crate::sls::KernelBackend>,
 }
 
 impl Default for ShardConfig {
@@ -163,6 +172,7 @@ impl Default for ShardConfig {
             spill_dir: None,
             spill_io_threads: 2,
             prefetch_window: 0,
+            kernel_backend: None,
         }
     }
 }

@@ -99,12 +99,20 @@ impl TableSlice {
     }
 
     /// Pool `local_ids` (slice-local row ids) into `out` (`dim` floats)
-    /// with the format's optimized kernel.
+    /// with the format's optimized kernel on the process-default
+    /// backend ([`crate::sls::backend::active`]).
     pub fn pool(&self, local_ids: &[u32], out: &mut [f32]) {
+        self.pool_with(crate::sls::backend::active(), local_ids, out);
+    }
+
+    /// [`TableSlice::pool`] pinned to an explicit kernel backend. The
+    /// engine threads its resolved backend through here so a forced
+    /// configuration applies to every slice it serves.
+    pub fn pool_with(&self, kb: crate::sls::KernelBackend, local_ids: &[u32], out: &mut [f32]) {
         let lengths = [local_ids.len() as u32];
         let args =
             SlsArgs::new(local_ids, &lengths, self.data.rows()).expect("validated local ids");
-        self.data.sls_view().sls(&args, out);
+        self.data.sls_view().sls_with(kb, &args, out);
     }
 }
 

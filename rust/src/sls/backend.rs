@@ -1,0 +1,215 @@
+//! Kernel backend selection: runtime CPU dispatch with a scalar escape
+//! hatch.
+//!
+//! The SLS kernels ship three implementations of their row-level inner
+//! loops ([`crate::sls::kernel`]): portable scalar (the bit-exactness
+//! oracle), AVX2 (`x86_64`), and NEON (`aarch64`). Which one runs is a
+//! [`KernelBackend`] value resolved **once** per engine (or lazily, for
+//! bare kernel calls) from three inputs, in priority order:
+//!
+//! 1. **`EMBERQ_FORCE_SCALAR`** — if set to anything non-empty other
+//!    than `0`, every resolution yields [`KernelBackend::Scalar`],
+//!    overriding explicit configuration. This is the operator escape
+//!    hatch and the lever CI's `kernel-matrix` job pulls to prove the
+//!    scalar arm on AVX2 hardware.
+//! 2. **Explicit configuration** — `ShardConfig::kernel_backend` /
+//!    `ServerConfig::kernel_backend` / `serve --kernel-backend`. A
+//!    backend the CPU cannot run is an error ([`resolve`] returns
+//!    `Err`), never a silent fallback.
+//! 3. **Detection** — [`detected`] picks the best backend the CPU
+//!    supports (`std::arch` runtime feature detection).
+//!
+//! Every backend computes bit-identical results (see the invariants in
+//! [`crate::sls::kernel`]); selection is purely a speed choice, which is
+//! why forcing scalar is always legal.
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::OnceLock;
+
+/// Which implementation of the SLS inner loops to run.
+///
+/// All variants exist on all architectures (so configs parse anywhere);
+/// [`supported`] says whether the *running* CPU can execute one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Portable scalar loops — always supported, the oracle.
+    Scalar,
+    /// AVX2 (`x86_64`): 8-lane f32, byte→f32 widening, codebook gathers.
+    Avx2,
+    /// NEON (`aarch64`): 4-lane f32, byte→f32 widening; codebook pooling
+    /// falls back to scalar (no efficient 16-entry gather).
+    Neon,
+}
+
+impl fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Neon => "neon",
+        })
+    }
+}
+
+impl FromStr for KernelBackend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(KernelBackend::Scalar),
+            "avx2" => Ok(KernelBackend::Avx2),
+            "neon" => Ok(KernelBackend::Neon),
+            other => Err(format!(
+                "unknown kernel backend `{other}` (expected scalar, avx2, or neon)"
+            )),
+        }
+    }
+}
+
+/// Can the running CPU execute `b`?
+pub fn supported(b: KernelBackend) -> bool {
+    match b {
+        KernelBackend::Scalar => true,
+        KernelBackend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                std::arch::is_x86_feature_detected!("avx2")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        KernelBackend::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                std::arch::is_aarch64_feature_detected!("neon")
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            {
+                false
+            }
+        }
+    }
+}
+
+/// The best backend the running CPU supports, ignoring the env override.
+pub fn detected() -> KernelBackend {
+    if supported(KernelBackend::Avx2) {
+        KernelBackend::Avx2
+    } else if supported(KernelBackend::Neon) {
+        KernelBackend::Neon
+    } else {
+        KernelBackend::Scalar
+    }
+}
+
+/// Is `EMBERQ_FORCE_SCALAR` active? (Set, non-empty, and not `"0"`.)
+///
+/// Read once and cached: flipping the variable mid-process must not
+/// change the arithmetic backend under a running engine.
+pub fn env_forced_scalar() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| match std::env::var("EMBERQ_FORCE_SCALAR") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    })
+}
+
+/// The process-default backend: env override, else detection.
+pub fn from_env_and_cpu() -> KernelBackend {
+    if env_forced_scalar() {
+        KernelBackend::Scalar
+    } else {
+        detected()
+    }
+}
+
+/// The lazily cached process-default backend. Bare kernel entry points
+/// (`sls_fused`, `sls_f32`, ...) use this; engines resolve once at start
+/// and thread their choice explicitly instead.
+pub fn active() -> KernelBackend {
+    static ACTIVE: OnceLock<KernelBackend> = OnceLock::new();
+    *ACTIVE.get_or_init(from_env_and_cpu)
+}
+
+/// Resolve a configured request to a runnable backend.
+///
+/// `None` means "auto" (detection). `EMBERQ_FORCE_SCALAR` wins over
+/// everything — an operator killing SIMD in an emergency beats a stale
+/// config file. An explicit backend the CPU cannot run is an `Err`
+/// naming both sides; callers surface it before serving starts.
+pub fn resolve(requested: Option<KernelBackend>) -> Result<KernelBackend, String> {
+    if env_forced_scalar() {
+        return Ok(KernelBackend::Scalar);
+    }
+    match requested {
+        None => Ok(detected()),
+        Some(b) if supported(b) => Ok(b),
+        Some(b) => Err(format!(
+            "kernel backend `{b}` is not supported on this CPU (detected: `{}`); \
+             unset --kernel-backend / ShardConfig::kernel_backend or pick `scalar`",
+            detected()
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for b in [KernelBackend::Scalar, KernelBackend::Avx2, KernelBackend::Neon] {
+            assert_eq!(b.to_string().parse::<KernelBackend>(), Ok(b));
+        }
+        assert!("sse9".parse::<KernelBackend>().is_err());
+        assert!("Scalar".parse::<KernelBackend>().is_err(), "names are lowercase");
+    }
+
+    #[test]
+    fn scalar_always_resolves_and_auto_is_runnable() {
+        assert!(supported(KernelBackend::Scalar));
+        let auto = resolve(None).unwrap();
+        assert!(supported(auto), "auto-resolved backend must be runnable");
+        assert_eq!(active(), from_env_and_cpu());
+        // Explicit scalar resolves under any env: forcing and requesting
+        // scalar agree.
+        assert_eq!(resolve(Some(KernelBackend::Scalar)), Ok(KernelBackend::Scalar));
+    }
+
+    #[test]
+    fn unsupported_backend_is_a_friendly_error() {
+        // No CPU supports both AVX2 and NEON, so one of them is always
+        // an impossible request on the running machine.
+        let impossible = if cfg!(target_arch = "aarch64") {
+            KernelBackend::Avx2
+        } else {
+            KernelBackend::Neon
+        };
+        assert!(!supported(impossible));
+        if env_forced_scalar() {
+            // The escape hatch beats the bad config instead of erroring.
+            assert_eq!(resolve(Some(impossible)), Ok(KernelBackend::Scalar));
+        } else {
+            let err = resolve(Some(impossible)).unwrap_err();
+            assert!(err.contains("not supported"), "{err}");
+            assert!(err.contains(&impossible.to_string()), "{err}");
+        }
+    }
+
+    #[test]
+    fn ci_expected_backend_matches() {
+        // CI's kernel-matrix job exports EMBERQ_EXPECT_BACKEND beside
+        // RUSTFLAGS / EMBERQ_FORCE_SCALAR, turning "which arm am I
+        // actually testing?" into an assertion. Unset locally: no-op.
+        if let Ok(want) = std::env::var("EMBERQ_EXPECT_BACKEND") {
+            assert_eq!(
+                active().to_string(),
+                want,
+                "EMBERQ_EXPECT_BACKEND says this run must exercise `{want}`"
+            );
+        }
+    }
+}

@@ -20,8 +20,15 @@
 //! the non-resident case, reproducing Table 1's shape: INT4 moves `d/2+4`
 //! bytes per row vs `d+8` (INT8) and `4d` (FP32), so it wins whenever the
 //! table doesn't fit in cache.
+//!
+//! The inner loops live in [`crate::sls::kernel`] with explicit SIMD
+//! arms (AVX2/NEON) selected by a [`KernelBackend`]: `sls_fused` runs
+//! the process default ([`backend::active`]), `sls_fused_with` pins one.
+//! All backends are bit-identical; `sls_fused_scalar` remains the
+//! dispatch-free oracle.
 
-use crate::sls::SlsArgs;
+use crate::sls::backend::{self, KernelBackend};
+use crate::sls::{kernel, SlsArgs};
 use crate::table::FusedTable;
 
 /// Reference kernel: straightforward nibble/byte decode per element.
@@ -43,38 +50,67 @@ pub fn sls_fused_scalar(table: &FusedTable, args: &SlsArgs, out: &mut [f32]) {
     }
 }
 
-/// Optimized fused-row SLS (INT4 and INT8).
+/// Optimized fused-row SLS (INT4 and INT8) on the process-default
+/// backend ([`backend::active`]).
 pub fn sls_fused(table: &FusedTable, args: &SlsArgs, out: &mut [f32]) {
+    sls_fused_with(backend::active(), table, args, out);
+}
+
+/// [`sls_fused`] pinned to an explicit kernel backend. Results are
+/// bit-identical across backends (see [`crate::sls::kernel`]); engines
+/// thread their resolved backend through here.
+pub fn sls_fused_with(
+    kb: KernelBackend,
+    table: &FusedTable,
+    args: &SlsArgs,
+    out: &mut [f32],
+) {
     match table.nbits() {
-        4 => sls_i4(table, args, out),
-        8 => sls_i8(table, args, out),
+        4 => sls_i4(kb, table, args, out),
+        8 => sls_i8(kb, table, args, out),
         _ => unreachable!("fused tables are 4- or 8-bit"),
     }
 }
 
 /// INT8 fused SLS: `acc[j] += scale·code[j]`, bias factored out.
-fn sls_i8(table: &FusedTable, args: &SlsArgs, out: &mut [f32]) {
+///
+/// Wide rows (`d >= kernel::CACHE_BLOCK`) are processed in column
+/// blocks — all pooled rows for block 0, then block 1, ... — so the
+/// live accumulator slice stays cache-resident across the segment. Per
+/// output element the addend sequence is unchanged, so blocking is
+/// bit-transparent; `bias_sum` is gathered only on the first block to
+/// keep its row-order accumulation single-pass.
+fn sls_i8(kb: KernelBackend, table: &FusedTable, args: &SlsArgs, out: &mut [f32]) {
     let d = table.dim();
     debug_assert_eq!(out.len(), args.segments() * d);
+    let block = d.min(kernel::CACHE_BLOCK);
     let mut pos = 0usize;
     for (s, &len) in args.lengths.iter().enumerate() {
+        let ids = &args.indices[pos..pos + len as usize];
         let acc = &mut out[s * d..(s + 1) * d];
         acc.fill(0.0);
         let mut bias_sum = 0.0f32;
-        for &idx in &args.indices[pos..pos + len as usize] {
-            let raw = table.row_raw(idx as usize);
-            let (scale, bias) = table.read_tail(raw);
-            bias_sum += bias;
-            // zip kills the bounds checks; LLVM emits vpmovzxbd +
-            // vcvtdq2ps + fma over full vectors.
-            for (a, &c) in acc.iter_mut().zip(&raw[..d]) {
-                *a += scale * c as f32;
+        let mut col = 0usize;
+        loop {
+            let hi = (col + block).min(d);
+            for (i, &idx) in ids.iter().enumerate() {
+                if let Some(&nxt) = ids.get(i + kernel::PREFETCH_AHEAD) {
+                    kernel::prefetch_bytes(table.row_raw(nxt as usize));
+                }
+                let raw = table.row_raw(idx as usize);
+                let (scale, bias) = table.read_tail(raw);
+                if col == 0 {
+                    bias_sum += bias;
+                }
+                kernel::accum_scaled_u8(kb, &mut acc[col..hi], &raw[col..hi], scale);
+            }
+            col = hi;
+            if col >= d {
+                break;
             }
         }
         if bias_sum != 0.0 {
-            for a in acc.iter_mut() {
-                *a += bias_sum;
-            }
+            kernel::add_bias(kb, acc, bias_sum);
         }
         pos += len as usize;
     }
@@ -89,7 +125,7 @@ fn sls_i8(table: &FusedTable, args: &SlsArgs, out: &mut [f32]) {
 /// halves are interleaved into the output once per *segment*, not once
 /// per row. Measured ~3.5× over the naive layout at d=64 (EXPERIMENTS.md
 /// §Perf).
-fn sls_i4(table: &FusedTable, args: &SlsArgs, out: &mut [f32]) {
+fn sls_i4(kb: KernelBackend, table: &FusedTable, args: &SlsArgs, out: &mut [f32]) {
     let d = table.dim();
     debug_assert_eq!(out.len(), args.segments() * d);
     let packed = d / 2; // full byte pairs
@@ -102,17 +138,18 @@ fn sls_i4(table: &FusedTable, args: &SlsArgs, out: &mut [f32]) {
         acc_even.fill(0.0);
         acc_odd.fill(0.0);
         let mut bias_sum = 0.0f32;
-        for &idx in &args.indices[pos..pos + len as usize] {
+        let ids = &args.indices[pos..pos + len as usize];
+        for (i, &idx) in ids.iter().enumerate() {
+            if let Some(&nxt) = ids.get(i + kernel::PREFETCH_AHEAD) {
+                kernel::prefetch_bytes(table.row_raw(nxt as usize));
+            }
             let raw = table.row_raw(idx as usize);
             let (scale, bias) = table.read_tail(raw);
             bias_sum += bias;
-            let bytes = &raw[..packed];
-            for (a, &byte) in acc_even[..packed].iter_mut().zip(bytes) {
-                *a += scale * (byte & 0x0F) as f32;
-            }
-            for (a, &byte) in acc_odd.iter_mut().zip(bytes) {
-                *a += scale * (byte >> 4) as f32;
-            }
+            // No column blocking here: the even/odd split already halves
+            // the live accumulator, and INT4 rows are half the bytes of
+            // INT8 to begin with.
+            kernel::accum_nibbles(kb, &mut acc_even[..packed], &mut acc_odd, &raw[..packed], scale);
             if odd_tail {
                 acc_even[packed] += scale * (raw[packed] & 0x0F) as f32;
             }
@@ -206,6 +243,28 @@ mod tests {
             .sum();
         let den: f64 = exact.iter().map(|&a| (a as f64).powi(2)).sum();
         assert!((num / den.max(1e-12)).sqrt() < 0.1, "rel={}", (num / den).sqrt());
+    }
+
+    #[test]
+    fn backends_are_bit_identical_here_too() {
+        // The exhaustive oracle lives in rust/tests/simd_oracle.rs; this
+        // is the in-module smoke: detected backend vs pinned scalar,
+        // exact bits, both widths, odd dim included.
+        let mut rng = Rng::new(51);
+        let best = backend::detected();
+        for (bits, d) in [(4u32, 33usize), (4, 64), (8, 24), (8, 96)] {
+            let t = EmbeddingTable::randn(80, d, 90 + d as u64);
+            let f = t.quantize_fused(&GreedyQuantizer::default(), bits, ScaleBiasDtype::F16);
+            let (indices, lengths) = random_args(&mut rng, 80, 6, 12);
+            let args = SlsArgs::new(&indices, &lengths, 80).unwrap();
+            let mut a = vec![0.0; 6 * d];
+            let mut b = a.clone();
+            sls_fused_with(KernelBackend::Scalar, &f, &args, &mut a);
+            sls_fused_with(best, &f, &args, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "bits={bits} d={d}: {x} vs {y}");
+            }
+        }
     }
 
     #[test]

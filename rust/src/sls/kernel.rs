@@ -1,0 +1,692 @@
+//! Row-level SIMD primitives behind the SLS kernels.
+//!
+//! Every pooled-lookup kernel (flat `sls::*` and the chunked mirrors in
+//! `shard::exec`) decomposes a segment into per-row inner loops; this
+//! module owns those loops, once per [`KernelBackend`]:
+//!
+//! * **scalar** — byte-for-byte the loops the kernels shipped with
+//!   before SIMD existed. This arm is the oracle.
+//! * **avx2** (`x86_64`) — 8-lane f32: unaligned `loadu`/`storeu`,
+//!   `vpmovzxbd + vcvtdq2ps` byte→f32 widening for INT8/INT4 codes, and
+//!   `vgatherdps` for the 16-entry codebook lookup.
+//! * **neon** (`aarch64`) — 4-lane f32 with `vmovl`-chain widening; the
+//!   codebook gather has no NEON equivalent, so codebook pooling stays
+//!   scalar there.
+//!
+//! # The bit-exactness contract
+//!
+//! SIMD arms must produce **bit-identical** results to the scalar arm —
+//! the serving stack's sharded==unsharded guarantee is an `assert_eq!`
+//! on f32 bits, not a tolerance. The arms achieve that by construction:
+//!
+//! * Lanes parallelize across the embedding dimension `j`, never across
+//!   pooled rows — each output element sees the same addends in the same
+//!   order as the scalar loop.
+//! * Multiply and add stay separate instructions (`mul_ps` + `add_ps`,
+//!   `vmulq` + `vaddq`) — **never** an FMA, which rounds once where the
+//!   scalar code rounds twice. Rust does not contract float expressions,
+//!   so `a + s * c` in the scalar arm is exactly mul-then-add.
+//! * Integer code→f32 conversions are exact (codes are 0..=255, well
+//!   inside f32's integer range), so widening lanes in a different
+//!   *instruction* order cannot change a value.
+//!
+//! The `simd_matches_scalar` suite (`rust/tests/simd_oracle.rs`) and the
+//! in-module tests below enforce the contract with `to_bits` equality.
+//!
+//! # Prefetch and cache blocking
+//!
+//! [`prefetch_bytes`]/[`prefetch_f32s`] issue non-faulting software
+//! prefetches (`prefetcht0`; a no-op off `x86_64`) — the segment loops
+//! call them a few ids ahead so a pooled row's cache miss overlaps the
+//! current row's arithmetic. [`CACHE_BLOCK`] is the column-block width
+//! the wide-row kernels (`sls_f32`, INT8) tile large dimensions with so
+//! the accumulator stays L1/L2-resident across the whole segment; both
+//! are bit-transparent (they change *when* memory moves, never what is
+//! computed).
+
+use crate::sls::backend::{self, KernelBackend};
+
+/// How many ids ahead the segment loops prefetch the next pooled row.
+pub const PREFETCH_AHEAD: usize = 4;
+
+/// Bytes of a row prefetched per call (4 cache lines).
+pub const PREFETCH_SPAN: usize = 256;
+
+/// Column-block width (in f32 elements) for cache-blocking wide rows:
+/// segments with `dim >= CACHE_BLOCK` accumulate block by block so the
+/// live accumulator slice stays cache-resident. 4096 f32 = 16 KiB, half
+/// a typical L1d.
+pub const CACHE_BLOCK: usize = 4096;
+
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn prefetch_span(p: *const i8, byte_len: usize) {
+    use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+    let span = byte_len.min(PREFETCH_SPAN);
+    let mut off = 0;
+    while off < span {
+        // SAFETY: `off < span <= byte_len` keeps the address inside the
+        // caller's live slice, and `prefetcht0` is a pure hint — it
+        // cannot fault or write.
+        unsafe { _mm_prefetch::<_MM_HINT_T0>(p.add(off)) };
+        off += 64;
+    }
+}
+
+/// Hint the CPU to pull the head of `data` (up to [`PREFETCH_SPAN`]
+/// bytes) toward L1. No-op off `x86_64`.
+#[inline(always)]
+pub fn prefetch_bytes(data: &[u8]) {
+    #[cfg(target_arch = "x86_64")]
+    prefetch_span(data.as_ptr().cast::<i8>(), data.len());
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = data;
+}
+
+/// [`prefetch_bytes`] for f32 rows.
+#[inline(always)]
+pub fn prefetch_f32s(data: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    prefetch_span(data.as_ptr().cast::<i8>(), data.len() * 4);
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = data;
+}
+
+/// Panic unless the running CPU can execute `b`.
+///
+/// The SIMD arms are reached through safe public functions, so the
+/// dispatchers re-verify the CPU before the `unsafe` call — a caller
+/// hand-constructing `KernelBackend::Avx2` on the wrong machine gets a
+/// panic, not undefined behavior. After the first call this is a cached
+/// atomic load.
+#[inline(always)]
+fn require(b: KernelBackend) {
+    assert!(
+        backend::supported(b),
+        "KernelBackend::{b} dispatched on a CPU without that feature \
+         (use sls::backend::resolve to pick a runnable backend)"
+    );
+}
+
+/// `acc[j] += row[j]` (FP32 pooling).
+#[inline]
+pub fn accum_f32(b: KernelBackend, acc: &mut [f32], row: &[f32]) {
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => {
+            require(b);
+            // SAFETY: `require` just proved AVX2 is available — the
+            // callee's only precondition.
+            unsafe { avx2::accum_f32(acc, row) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => {
+            require(b);
+            // SAFETY: `require` just proved NEON is available.
+            unsafe { neon::accum_f32(acc, row) }
+        }
+        _ => scalar::accum_f32(acc, row),
+    }
+}
+
+/// `acc[j] += w * row[j]` (weighted FP32 pooling).
+#[inline]
+pub fn accum_weighted_f32(b: KernelBackend, acc: &mut [f32], row: &[f32], w: f32) {
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => {
+            require(b);
+            // SAFETY: `require` just proved AVX2 is available.
+            unsafe { avx2::accum_weighted_f32(acc, row, w) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => {
+            require(b);
+            // SAFETY: `require` just proved NEON is available.
+            unsafe { neon::accum_weighted_f32(acc, row, w) }
+        }
+        _ => scalar::accum_weighted_f32(acc, row, w),
+    }
+}
+
+/// `acc[j] += scale * codes[j] as f32` (INT8 rows; weighted callers pass
+/// `w * scale` as the scale).
+#[inline]
+pub fn accum_scaled_u8(b: KernelBackend, acc: &mut [f32], codes: &[u8], scale: f32) {
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => {
+            require(b);
+            // SAFETY: `require` just proved AVX2 is available.
+            unsafe { avx2::accum_scaled_u8(acc, codes, scale) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => {
+            require(b);
+            // SAFETY: `require` just proved NEON is available.
+            unsafe { neon::accum_scaled_u8(acc, codes, scale) }
+        }
+        _ => scalar::accum_scaled_u8(acc, codes, scale),
+    }
+}
+
+/// De-interleaved INT4 accumulation over full byte pairs:
+/// `acc_even[i] += scale * (bytes[i] & 0x0F)`,
+/// `acc_odd[i] += scale * (bytes[i] >> 4)`. The caller handles an odd
+/// final column (a lone low nibble) itself.
+#[inline]
+pub fn accum_nibbles(
+    b: KernelBackend,
+    acc_even: &mut [f32],
+    acc_odd: &mut [f32],
+    bytes: &[u8],
+    scale: f32,
+) {
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => {
+            require(b);
+            // SAFETY: `require` just proved AVX2 is available.
+            unsafe { avx2::accum_nibbles(acc_even, acc_odd, bytes, scale) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => {
+            require(b);
+            // SAFETY: `require` just proved NEON is available.
+            unsafe { neon::accum_nibbles(acc_even, acc_odd, bytes, scale) }
+        }
+        _ => scalar::accum_nibbles(acc_even, acc_odd, bytes, scale),
+    }
+}
+
+/// De-interleaved codebook accumulation over full code-byte pairs:
+/// `acc_even[i] += cb[bytes[i] & 0x0F]`, `acc_odd[i] += cb[bytes[i] >> 4]`.
+/// `cb` must hold at least 16 entries. AVX2 gathers; every other backend
+/// runs the scalar lookup (NEON has no usable gather).
+#[inline]
+pub fn accum_codebook(
+    b: KernelBackend,
+    acc_even: &mut [f32],
+    acc_odd: &mut [f32],
+    bytes: &[u8],
+    cb: &[f32],
+) {
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => {
+            require(b);
+            // SAFETY: `require` just proved AVX2 is available.
+            unsafe { avx2::accum_codebook(acc_even, acc_odd, bytes, cb) }
+        }
+        _ => scalar::accum_codebook(acc_even, acc_odd, bytes, cb),
+    }
+}
+
+/// `acc[j] += bias` (the per-segment factored bias add).
+#[inline]
+pub fn add_bias(b: KernelBackend, acc: &mut [f32], bias: f32) {
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => {
+            require(b);
+            // SAFETY: `require` just proved AVX2 is available.
+            unsafe { avx2::add_bias(acc, bias) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => {
+            require(b);
+            // SAFETY: `require` just proved NEON is available.
+            unsafe { neon::add_bias(acc, bias) }
+        }
+        _ => scalar::add_bias(acc, bias),
+    }
+}
+
+/// The oracle arms: exactly the inner loops the pre-SIMD kernels ran.
+pub(crate) mod scalar {
+    #[inline(always)]
+    pub fn accum_f32(acc: &mut [f32], row: &[f32]) {
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += v;
+        }
+    }
+
+    #[inline(always)]
+    pub fn accum_weighted_f32(acc: &mut [f32], row: &[f32], w: f32) {
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += w * v;
+        }
+    }
+
+    #[inline(always)]
+    pub fn accum_scaled_u8(acc: &mut [f32], codes: &[u8], scale: f32) {
+        for (a, &c) in acc.iter_mut().zip(codes) {
+            *a += scale * c as f32;
+        }
+    }
+
+    #[inline(always)]
+    pub fn accum_nibbles(acc_even: &mut [f32], acc_odd: &mut [f32], bytes: &[u8], scale: f32) {
+        for (a, &byte) in acc_even.iter_mut().zip(bytes) {
+            *a += scale * (byte & 0x0F) as f32;
+        }
+        for (a, &byte) in acc_odd.iter_mut().zip(bytes) {
+            *a += scale * (byte >> 4) as f32;
+        }
+    }
+
+    #[inline(always)]
+    pub fn accum_codebook(acc_even: &mut [f32], acc_odd: &mut [f32], bytes: &[u8], cb: &[f32]) {
+        debug_assert!(cb.len() >= 16);
+        for (i, &byte) in bytes.iter().enumerate() {
+            acc_even[i] += cb[(byte & 0x0F) as usize];
+            acc_odd[i] += cb[(byte >> 4) as usize];
+        }
+    }
+
+    #[inline(always)]
+    pub fn add_bias(acc: &mut [f32], bias: f32) {
+        for a in acc.iter_mut() {
+            *a += bias;
+        }
+    }
+}
+
+/// AVX2 arms. Every function's contract: the caller has verified the
+/// `avx2` CPU feature (the dispatchers above do so via `require`).
+///
+/// All loads/stores are the unaligned variants — slices carry no
+/// alignment guarantee. Arithmetic is `mul_ps`/`add_ps`, never FMA.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum_f32(acc: &mut [f32], row: &[f32]) {
+        let n = acc.len();
+        debug_assert!(row.len() >= n);
+        let mut j = 0;
+        while j + 8 <= n {
+            // SAFETY: `j + 8 <= n <= acc.len() <= row.len()` bounds both
+            // 8-lane unaligned loads and the store.
+            unsafe {
+                let a = _mm256_loadu_ps(acc.as_ptr().add(j));
+                let v = _mm256_loadu_ps(row.as_ptr().add(j));
+                _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_add_ps(a, v));
+            }
+            j += 8;
+        }
+        super::scalar::accum_f32(&mut acc[j..], &row[j..n]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum_weighted_f32(acc: &mut [f32], row: &[f32], w: f32) {
+        let n = acc.len();
+        debug_assert!(row.len() >= n);
+        let mut j = 0;
+        while j + 8 <= n {
+            // SAFETY: `j + 8 <= n` bounds the unaligned loads/store; the
+            // splat and arithmetic touch no memory.
+            unsafe {
+                let wv = _mm256_set1_ps(w);
+                let a = _mm256_loadu_ps(acc.as_ptr().add(j));
+                let v = _mm256_loadu_ps(row.as_ptr().add(j));
+                // mul then add: two roundings, same as the scalar oracle.
+                _mm256_storeu_ps(
+                    acc.as_mut_ptr().add(j),
+                    _mm256_add_ps(a, _mm256_mul_ps(wv, v)),
+                );
+            }
+            j += 8;
+        }
+        super::scalar::accum_weighted_f32(&mut acc[j..], &row[j..n], w);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum_scaled_u8(acc: &mut [f32], codes: &[u8], scale: f32) {
+        let n = acc.len();
+        debug_assert!(codes.len() >= n);
+        let mut j = 0;
+        while j + 8 <= n {
+            // SAFETY: `j + 8 <= n <= codes.len()` covers the 8-byte
+            // `loadl` and `j + 8 <= acc.len()` the f32 load/store; the
+            // widening converts are register-only and exact for 0..=255.
+            unsafe {
+                let bytes = _mm_loadl_epi64(codes.as_ptr().add(j).cast::<__m128i>());
+                let wide = _mm256_cvtepu8_epi32(bytes);
+                let vals = _mm256_cvtepi32_ps(wide);
+                let s = _mm256_set1_ps(scale);
+                let a = _mm256_loadu_ps(acc.as_ptr().add(j));
+                _mm256_storeu_ps(
+                    acc.as_mut_ptr().add(j),
+                    _mm256_add_ps(a, _mm256_mul_ps(s, vals)),
+                );
+            }
+            j += 8;
+        }
+        super::scalar::accum_scaled_u8(&mut acc[j..], &codes[j..n], scale);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum_nibbles(
+        acc_even: &mut [f32],
+        acc_odd: &mut [f32],
+        bytes: &[u8],
+        scale: f32,
+    ) {
+        let n = bytes.len();
+        debug_assert!(acc_even.len() >= n && acc_odd.len() >= n);
+        let mut j = 0;
+        while j + 8 <= n {
+            // SAFETY: `j + 8 <= n` bounds the 8-byte load and, via the
+            // debug-asserted lengths (callers pass `packed`-sized
+            // slices), both accumulator load/store pairs. The 16-bit
+            // shift pulls neighbor bits into each byte's low half, but
+            // the 0x0F mask keeps only the byte's own high nibble.
+            unsafe {
+                let raw = _mm_loadl_epi64(bytes.as_ptr().add(j).cast::<__m128i>());
+                let mask = _mm_set1_epi8(0x0F);
+                let lo = _mm_and_si128(raw, mask);
+                let hi = _mm_and_si128(_mm_srli_epi16::<4>(raw), mask);
+                let s = _mm256_set1_ps(scale);
+                let lo_f = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(lo));
+                let e = _mm256_loadu_ps(acc_even.as_ptr().add(j));
+                _mm256_storeu_ps(
+                    acc_even.as_mut_ptr().add(j),
+                    _mm256_add_ps(e, _mm256_mul_ps(s, lo_f)),
+                );
+                let hi_f = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(hi));
+                let o = _mm256_loadu_ps(acc_odd.as_ptr().add(j));
+                _mm256_storeu_ps(
+                    acc_odd.as_mut_ptr().add(j),
+                    _mm256_add_ps(o, _mm256_mul_ps(s, hi_f)),
+                );
+            }
+            j += 8;
+        }
+        super::scalar::accum_nibbles(&mut acc_even[j..n], &mut acc_odd[j..n], &bytes[j..], scale);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum_codebook(
+        acc_even: &mut [f32],
+        acc_odd: &mut [f32],
+        bytes: &[u8],
+        cb: &[f32],
+    ) {
+        let n = bytes.len();
+        debug_assert!(acc_even.len() >= n && acc_odd.len() >= n);
+        assert!(cb.len() >= 16, "codebooks hold 16 entries");
+        let mut j = 0;
+        while j + 8 <= n {
+            // SAFETY: `j + 8 <= n` bounds the byte load and accumulator
+            // load/store pairs; gather indices are nibbles (0..=15) and
+            // `cb.len() >= 16` is asserted above, so every gathered lane
+            // reads inside `cb`.
+            unsafe {
+                let raw = _mm_loadl_epi64(bytes.as_ptr().add(j).cast::<__m128i>());
+                let mask = _mm_set1_epi8(0x0F);
+                let lo = _mm256_cvtepu8_epi32(_mm_and_si128(raw, mask));
+                let hi = _mm256_cvtepu8_epi32(_mm_and_si128(_mm_srli_epi16::<4>(raw), mask));
+                let lo_v = _mm256_i32gather_ps::<4>(cb.as_ptr(), lo);
+                let e = _mm256_loadu_ps(acc_even.as_ptr().add(j));
+                _mm256_storeu_ps(acc_even.as_mut_ptr().add(j), _mm256_add_ps(e, lo_v));
+                let hi_v = _mm256_i32gather_ps::<4>(cb.as_ptr(), hi);
+                let o = _mm256_loadu_ps(acc_odd.as_ptr().add(j));
+                _mm256_storeu_ps(acc_odd.as_mut_ptr().add(j), _mm256_add_ps(o, hi_v));
+            }
+            j += 8;
+        }
+        super::scalar::accum_codebook(&mut acc_even[j..n], &mut acc_odd[j..n], &bytes[j..], cb);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add_bias(acc: &mut [f32], bias: f32) {
+        let n = acc.len();
+        let mut j = 0;
+        while j + 8 <= n {
+            // SAFETY: `j + 8 <= n` bounds the unaligned load/store pair.
+            unsafe {
+                let b = _mm256_set1_ps(bias);
+                let a = _mm256_loadu_ps(acc.as_ptr().add(j));
+                _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_add_ps(a, b));
+            }
+            j += 8;
+        }
+        super::scalar::add_bias(&mut acc[j..], bias);
+    }
+}
+
+/// NEON arms. Caller contract: the `neon` CPU feature is verified (the
+/// dispatchers do so via `require`).
+///
+/// `vmulq_f32` + `vaddq_f32` are kept separate — `vmlaq`/`vfmaq` may
+/// fuse into a single rounding and would break bit-exactness.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn accum_f32(acc: &mut [f32], row: &[f32]) {
+        let n = acc.len();
+        debug_assert!(row.len() >= n);
+        let mut j = 0;
+        while j + 4 <= n {
+            // SAFETY: `j + 4 <= n` bounds both 4-lane loads and the store.
+            unsafe {
+                let a = vld1q_f32(acc.as_ptr().add(j));
+                let v = vld1q_f32(row.as_ptr().add(j));
+                vst1q_f32(acc.as_mut_ptr().add(j), vaddq_f32(a, v));
+            }
+            j += 4;
+        }
+        super::scalar::accum_f32(&mut acc[j..], &row[j..n]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn accum_weighted_f32(acc: &mut [f32], row: &[f32], w: f32) {
+        let n = acc.len();
+        debug_assert!(row.len() >= n);
+        let mut j = 0;
+        while j + 4 <= n {
+            // SAFETY: `j + 4 <= n` bounds the loads and the store.
+            unsafe {
+                let wv = vdupq_n_f32(w);
+                let a = vld1q_f32(acc.as_ptr().add(j));
+                let v = vld1q_f32(row.as_ptr().add(j));
+                vst1q_f32(acc.as_mut_ptr().add(j), vaddq_f32(a, vmulq_f32(wv, v)));
+            }
+            j += 4;
+        }
+        super::scalar::accum_weighted_f32(&mut acc[j..], &row[j..n], w);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn accum_scaled_u8(acc: &mut [f32], codes: &[u8], scale: f32) {
+        let n = acc.len();
+        debug_assert!(codes.len() >= n);
+        let mut j = 0;
+        while j + 8 <= n {
+            // SAFETY: `j + 8 <= n <= codes.len()` covers the 8-byte load
+            // and both 4-lane halves of the accumulator; the vmovl/vcvt
+            // widening chain is register-only and exact for 0..=255.
+            unsafe {
+                let b = vld1_u8(codes.as_ptr().add(j));
+                let wide = vmovl_u8(b);
+                let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wide)));
+                let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wide)));
+                let s = vdupq_n_f32(scale);
+                let a0 = vld1q_f32(acc.as_ptr().add(j));
+                vst1q_f32(acc.as_mut_ptr().add(j), vaddq_f32(a0, vmulq_f32(s, lo)));
+                let a1 = vld1q_f32(acc.as_ptr().add(j + 4));
+                vst1q_f32(acc.as_mut_ptr().add(j + 4), vaddq_f32(a1, vmulq_f32(s, hi)));
+            }
+            j += 8;
+        }
+        super::scalar::accum_scaled_u8(&mut acc[j..], &codes[j..n], scale);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn accum_nibbles(
+        acc_even: &mut [f32],
+        acc_odd: &mut [f32],
+        bytes: &[u8],
+        scale: f32,
+    ) {
+        let n = bytes.len();
+        debug_assert!(acc_even.len() >= n && acc_odd.len() >= n);
+        let mut j = 0;
+        while j + 8 <= n {
+            // SAFETY: `j + 8 <= n` bounds the 8-byte load and (via the
+            // caller passing `packed`-sized accumulators) the two 4-lane
+            // halves of each accumulator; `vshr_n_u8` zero-fills, so the
+            // high nibble needs no extra mask.
+            unsafe {
+                let raw = vld1_u8(bytes.as_ptr().add(j));
+                let lo = vand_u8(raw, vdup_n_u8(0x0F));
+                let hi = vshr_n_u8::<4>(raw);
+                let s = vdupq_n_f32(scale);
+                let lo_w = vmovl_u8(lo);
+                let e0 = vld1q_f32(acc_even.as_ptr().add(j));
+                let lo0 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(lo_w)));
+                vst1q_f32(acc_even.as_mut_ptr().add(j), vaddq_f32(e0, vmulq_f32(s, lo0)));
+                let e1 = vld1q_f32(acc_even.as_ptr().add(j + 4));
+                let lo1 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(lo_w)));
+                vst1q_f32(acc_even.as_mut_ptr().add(j + 4), vaddq_f32(e1, vmulq_f32(s, lo1)));
+                let hi_w = vmovl_u8(hi);
+                let o0 = vld1q_f32(acc_odd.as_ptr().add(j));
+                let hi0 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(hi_w)));
+                vst1q_f32(acc_odd.as_mut_ptr().add(j), vaddq_f32(o0, vmulq_f32(s, hi0)));
+                let o1 = vld1q_f32(acc_odd.as_ptr().add(j + 4));
+                let hi1 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(hi_w)));
+                vst1q_f32(acc_odd.as_mut_ptr().add(j + 4), vaddq_f32(o1, vmulq_f32(s, hi1)));
+            }
+            j += 8;
+        }
+        super::scalar::accum_nibbles(&mut acc_even[j..n], &mut acc_odd[j..n], &bytes[j..], scale);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn add_bias(acc: &mut [f32], bias: f32) {
+        let n = acc.len();
+        let mut j = 0;
+        while j + 4 <= n {
+            // SAFETY: `j + 4 <= n` bounds the load/store pair.
+            unsafe {
+                let b = vdupq_n_f32(bias);
+                let a = vld1q_f32(acc.as_ptr().add(j));
+                vst1q_f32(acc.as_mut_ptr().add(j), vaddq_f32(a, b));
+            }
+            j += 4;
+        }
+        super::scalar::add_bias(&mut acc[j..], bias);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Every length worth testing: lane multiples, tails, tiny, empty.
+    const LENS: &[usize] = &[0, 1, 3, 4, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100];
+
+    fn floats(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_in(-2.0, 2.0) as f32).collect()
+    }
+
+    fn bytes(rng: &mut Rng, n: usize) -> Vec<u8> {
+        (0..n).map(|_| rng.below(256) as u8).collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// The primitive-level oracle: the detected backend must be
+    /// bit-identical to scalar on every primitive, length, and tail
+    /// shape. On a machine without SIMD this compares scalar to scalar
+    /// (the real arms are covered by CI's kernel-matrix job).
+    #[test]
+    fn every_primitive_matches_scalar_bit_for_bit() {
+        let best = backend::detected();
+        if best == KernelBackend::Scalar {
+            eprintln!("warning: no SIMD backend on this CPU; oracle test is scalar-vs-scalar");
+        }
+        let mut rng = Rng::new(0x51_3D);
+        for &n in LENS {
+            let base = floats(&mut rng, n);
+            let row = floats(&mut rng, n);
+            let codes = bytes(&mut rng, n);
+            let cb = floats(&mut rng, 16);
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            accum_f32(KernelBackend::Scalar, &mut a, &row);
+            accum_f32(best, &mut b, &row);
+            assert_bits_eq(&a, &b, "accum_f32");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            accum_weighted_f32(KernelBackend::Scalar, &mut a, &row, -1.75);
+            accum_weighted_f32(best, &mut b, &row, -1.75);
+            assert_bits_eq(&a, &b, "accum_weighted_f32");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            accum_scaled_u8(KernelBackend::Scalar, &mut a, &codes, 0.031_25);
+            accum_scaled_u8(best, &mut b, &codes, 0.031_25);
+            assert_bits_eq(&a, &b, "accum_scaled_u8");
+
+            let odd_base = floats(&mut rng, n);
+            let mut ae = base.clone();
+            let mut ao = odd_base.clone();
+            let mut be = base.clone();
+            let mut bo = odd_base.clone();
+            accum_nibbles(KernelBackend::Scalar, &mut ae, &mut ao, &codes, 0.6);
+            accum_nibbles(best, &mut be, &mut bo, &codes, 0.6);
+            assert_bits_eq(&ae, &be, "accum_nibbles even");
+            assert_bits_eq(&ao, &bo, "accum_nibbles odd");
+
+            let mut ae = base.clone();
+            let mut ao = odd_base.clone();
+            let mut be = base.clone();
+            let mut bo = odd_base.clone();
+            accum_codebook(KernelBackend::Scalar, &mut ae, &mut ao, &codes, &cb);
+            accum_codebook(best, &mut be, &mut bo, &codes, &cb);
+            assert_bits_eq(&ae, &be, "accum_codebook even");
+            assert_bits_eq(&ao, &bo, "accum_codebook odd");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            add_bias(KernelBackend::Scalar, &mut a, 0.123);
+            add_bias(best, &mut b, 0.123);
+            assert_bits_eq(&a, &b, "add_bias");
+        }
+    }
+
+    #[test]
+    fn nibble_decode_agrees_with_the_definition() {
+        // One concrete vector pinned by hand: byte 0xB7 is low nibble 7
+        // (even column), high nibble 11 (odd column).
+        let mut even = vec![0.0f32; 1];
+        let mut odd = vec![0.0f32; 1];
+        accum_nibbles(KernelBackend::Scalar, &mut even, &mut odd, &[0xB7], 2.0);
+        assert_eq!(even, vec![14.0]);
+        assert_eq!(odd, vec![22.0]);
+    }
+
+    #[test]
+    fn prefetch_is_inert_and_safe_on_any_slice() {
+        prefetch_bytes(&[]);
+        prefetch_f32s(&[]);
+        let small = [1u8, 2, 3];
+        prefetch_bytes(&small);
+        let big = vec![0u8; 10_000];
+        prefetch_bytes(&big);
+        let rows = vec![1.0f32; 4096];
+        prefetch_f32s(&rows);
+    }
+}

@@ -16,15 +16,21 @@
 //! benchmarks can reproduce both the *cache-resident* and *non-resident*
 //! columns of Table 1.
 
+pub mod backend;
 pub mod flush;
 pub mod fused_kernels;
+pub mod kernel;
 pub mod plain;
 pub mod weighted;
 
+pub use backend::KernelBackend;
 pub use flush::CacheFlusher;
-pub use fused_kernels::{sls_fused, sls_fused_scalar};
-pub use plain::{sls_codebook, sls_f32};
-pub use weighted::{sls_mean_fused, sls_weighted_f32, sls_weighted_fused};
+pub use fused_kernels::{sls_fused, sls_fused_scalar, sls_fused_with};
+pub use plain::{sls_codebook, sls_codebook_with, sls_f32, sls_f32_with};
+pub use weighted::{
+    sls_mean_fused, sls_mean_fused_with, sls_weighted_f32, sls_weighted_f32_with,
+    sls_weighted_fused, sls_weighted_fused_with,
+};
 
 use crate::table::{CodebookTable, EmbeddingTable, FusedTable};
 
@@ -91,13 +97,18 @@ impl SlsTable<'_> {
     }
 
     /// Pool `args` into `out` (`segments × dim`, row-major), using the
-    /// optimized kernel for the format.
+    /// optimized kernel for the format on the process-default backend.
     pub fn sls(&self, args: &SlsArgs, out: &mut [f32]) {
+        self.sls_with(backend::active(), args, out);
+    }
+
+    /// [`SlsTable::sls`] pinned to an explicit kernel backend.
+    pub fn sls_with(&self, kb: KernelBackend, args: &SlsArgs, out: &mut [f32]) {
         assert_eq!(out.len(), args.segments() * self.dim());
         match self {
-            SlsTable::F32(t) => sls_f32(t, args, out),
-            SlsTable::Fused(t) => sls_fused(t, args, out),
-            SlsTable::Codebook(t) => sls_codebook(t, args, out),
+            SlsTable::F32(t) => sls_f32_with(kb, t, args, out),
+            SlsTable::Fused(t) => sls_fused_with(kb, t, args, out),
+            SlsTable::Codebook(t) => sls_codebook_with(kb, t, args, out),
         }
     }
 }

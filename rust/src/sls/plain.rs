@@ -1,24 +1,56 @@
 //! SLS kernels for FP32 and codebook tables.
+//!
+//! Both kernels dispatch their inner loops through
+//! [`crate::sls::kernel`] on a [`KernelBackend`]: the bare entry points
+//! run the process default ([`backend::active`]), the `_with` variants
+//! pin one. Backends are bit-identical (lane-parallel across the
+//! dimension, scalar addend order preserved per output element).
 
-use crate::sls::SlsArgs;
+use crate::sls::backend::{self, KernelBackend};
+use crate::sls::{kernel, SlsArgs};
 use crate::table::{CodebookTable, EmbeddingTable};
 
 /// FP32 `SparseLengthsSum`: the production baseline of Table 1.
 ///
-/// The inner loop is a straight `out[j] += row[j]` over contiguous f32s —
-/// LLVM autovectorizes it; throughput is bound by the bytes streamed per
-/// pooled row (`4·d`).
+/// The inner loop is a straight `out[j] += row[j]` over contiguous f32s
+/// (8-lane AVX2 / 4-lane NEON when available); throughput is bound by
+/// the bytes streamed per pooled row (`4·d`).
 pub fn sls_f32(table: &EmbeddingTable, args: &SlsArgs, out: &mut [f32]) {
+    sls_f32_with(backend::active(), table, args, out);
+}
+
+/// [`sls_f32`] pinned to an explicit kernel backend.
+///
+/// Wide rows (`d >= kernel::CACHE_BLOCK`) accumulate in column blocks so
+/// the live accumulator slice stays cache-resident across the segment;
+/// per output element the addend order is unchanged (bit-transparent).
+pub fn sls_f32_with(
+    kb: KernelBackend,
+    table: &EmbeddingTable,
+    args: &SlsArgs,
+    out: &mut [f32],
+) {
     let d = table.dim();
     debug_assert_eq!(out.len(), args.segments() * d);
+    let block = d.min(kernel::CACHE_BLOCK);
     let mut pos = 0usize;
     for (s, &len) in args.lengths.iter().enumerate() {
+        let ids = &args.indices[pos..pos + len as usize];
         let acc = &mut out[s * d..(s + 1) * d];
         acc.fill(0.0);
-        for &idx in &args.indices[pos..pos + len as usize] {
-            let row = table.row(idx as usize);
-            for j in 0..d {
-                acc[j] += row[j];
+        let mut col = 0usize;
+        loop {
+            let hi = (col + block).min(d);
+            for (i, &idx) in ids.iter().enumerate() {
+                if let Some(&nxt) = ids.get(i + kernel::PREFETCH_AHEAD) {
+                    kernel::prefetch_f32s(table.row(nxt as usize));
+                }
+                let row = table.row(idx as usize);
+                kernel::accum_f32(kb, &mut acc[col..hi], &row[col..hi]);
+            }
+            col = hi;
+            if col >= d {
+                break;
             }
         }
         pos += len as usize;
@@ -30,24 +62,78 @@ pub fn sls_f32(table: &EmbeddingTable, args: &SlsArgs, out: &mut [f32]) {
 /// The codebook fits in one cache line (FP32) so decode is a register
 /// lookup; bytes streamed per row are `d/2` codes + the codebook line.
 pub fn sls_codebook(table: &CodebookTable, args: &SlsArgs, out: &mut [f32]) {
+    sls_codebook_with(backend::active(), table, args, out);
+}
+
+/// [`sls_codebook`] pinned to an explicit kernel backend.
+///
+/// The scalar arm accumulates straight into the interleaved output. The
+/// AVX2 arm decodes 8 code bytes at a time with two `vgatherdps` into
+/// de-interleaved even/odd scratch halves and interleaves once per
+/// segment — per output element the addends and their order match the
+/// scalar arm exactly (the interleave is a pure copy; there is no bias
+/// term). NEON has no usable 16-entry gather, so it runs the scalar arm.
+pub fn sls_codebook_with(
+    kb: KernelBackend,
+    table: &CodebookTable,
+    args: &SlsArgs,
+    out: &mut [f32],
+) {
     let d = table.dim();
     debug_assert_eq!(out.len(), args.segments() * d);
+    let pairs = d / 2;
+    let odd_tail = d % 2 == 1;
+    if kb != KernelBackend::Avx2 {
+        let mut pos = 0usize;
+        for (s, &len) in args.lengths.iter().enumerate() {
+            let acc = &mut out[s * d..(s + 1) * d];
+            acc.fill(0.0);
+            let ids = &args.indices[pos..pos + len as usize];
+            for (i, &idx) in ids.iter().enumerate() {
+                if let Some(&nxt) = ids.get(i + kernel::PREFETCH_AHEAD) {
+                    kernel::prefetch_bytes(table.codes_of_row(nxt as usize));
+                }
+                let cb = table.codebook_of_row(idx as usize);
+                let codes = table.codes_of_row(idx as usize);
+                for b in 0..pairs {
+                    let byte = codes[b];
+                    acc[2 * b] += cb[(byte & 0x0F) as usize];
+                    acc[2 * b + 1] += cb[(byte >> 4) as usize];
+                }
+                if odd_tail {
+                    acc[d - 1] += cb[(codes[pairs] & 0x0F) as usize];
+                }
+            }
+            pos += len as usize;
+        }
+        return;
+    }
+    let half = pairs + usize::from(odd_tail);
+    let mut acc_even = vec![0.0f32; half];
+    let mut acc_odd = vec![0.0f32; pairs];
     let mut pos = 0usize;
     for (s, &len) in args.lengths.iter().enumerate() {
-        let acc = &mut out[s * d..(s + 1) * d];
-        acc.fill(0.0);
-        for &idx in &args.indices[pos..pos + len as usize] {
+        acc_even.fill(0.0);
+        acc_odd.fill(0.0);
+        let ids = &args.indices[pos..pos + len as usize];
+        for (i, &idx) in ids.iter().enumerate() {
+            if let Some(&nxt) = ids.get(i + kernel::PREFETCH_AHEAD) {
+                kernel::prefetch_bytes(table.codes_of_row(nxt as usize));
+            }
             let cb = table.codebook_of_row(idx as usize);
             let codes = table.codes_of_row(idx as usize);
-            let pairs = d / 2;
-            for b in 0..pairs {
-                let byte = codes[b];
-                acc[2 * b] += cb[(byte & 0x0F) as usize];
-                acc[2 * b + 1] += cb[(byte >> 4) as usize];
+            kernel::accum_codebook(kb, &mut acc_even[..pairs], &mut acc_odd, &codes[..pairs], cb);
+            if odd_tail {
+                acc_even[pairs] += cb[(codes[pairs] & 0x0F) as usize];
             }
-            if d % 2 == 1 {
-                acc[d - 1] += cb[(codes[pairs] & 0x0F) as usize];
-            }
+        }
+        let acc = &mut out[s * d..(s + 1) * d];
+        for b in 0..pairs {
+            acc[2 * b] = acc_even[b];
+            acc[2 * b + 1] = acc_odd[b];
+        }
+        if odd_tail {
+            acc[d - 1] = acc_even[pairs];
         }
         pos += len as usize;
     }
@@ -106,6 +192,39 @@ mod tests {
         let expect = naive_sls(&dq, &indices, &lengths);
         for (a, b) in out.iter().zip(&expect) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn backends_are_bit_identical_here_too() {
+        // Exhaustive oracle in rust/tests/simd_oracle.rs; in-module
+        // smoke for f32 (incl. a blocked-width dim) and both codebook
+        // kinds at an odd dim.
+        let best = backend::detected();
+        let indices = [1u32, 2, 3, 30, 31, 7, 7];
+        let lengths = [2u32, 0, 3, 2];
+        for d in [7usize, 24, kernel::CACHE_BLOCK + 5] {
+            let t = EmbeddingTable::randn(32, d, 34);
+            let args = SlsArgs::new(&indices, &lengths, 32).unwrap();
+            let mut a = vec![0.0; 4 * d];
+            let mut b = a.clone();
+            sls_f32_with(KernelBackend::Scalar, &t, &args, &mut a);
+            sls_f32_with(best, &t, &args, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "f32 d={d}");
+            }
+        }
+        for kind in [CodebookKind::Rowwise, CodebookKind::TwoTier { k: 3 }] {
+            let t = EmbeddingTable::randn(32, 21, 35);
+            let c = t.quantize_codebook(kind, ScaleBiasDtype::F32);
+            let args = SlsArgs::new(&indices, &lengths, 32).unwrap();
+            let mut a = vec![0.0; 4 * 21];
+            let mut b = a.clone();
+            sls_codebook_with(KernelBackend::Scalar, &c, &args, &mut a);
+            sls_codebook_with(best, &c, &args, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "codebook {kind:?}");
+            }
         }
     }
 }

@@ -10,8 +10,13 @@
 //! The weighted variant cannot factor the bias out of the inner loop as a
 //! plain count (each row's bias is scaled by its weight), so it tracks
 //! `Σ wᵢ·biasᵢ` instead — same trick, one extra FMA per row.
+//!
+//! Like the plain kernels, the inner loops dispatch through
+//! [`crate::sls::kernel`]: bare names run [`backend::active`], `_with`
+//! variants pin a [`KernelBackend`]. All backends are bit-identical.
 
-use crate::sls::SlsArgs;
+use crate::sls::backend::{self, KernelBackend};
+use crate::sls::{kernel, SlsArgs};
 use crate::table::{EmbeddingTable, FusedTable};
 
 /// Weighted pooled sum over FP32 rows:
@@ -22,26 +27,50 @@ pub fn sls_weighted_f32(
     weights: &[f32],
     out: &mut [f32],
 ) {
+    sls_weighted_f32_with(backend::active(), table, args, weights, out);
+}
+
+/// [`sls_weighted_f32`] pinned to an explicit kernel backend.
+pub fn sls_weighted_f32_with(
+    kb: KernelBackend,
+    table: &EmbeddingTable,
+    args: &SlsArgs,
+    weights: &[f32],
+    out: &mut [f32],
+) {
     let d = table.dim();
     debug_assert_eq!(weights.len(), args.indices.len());
     debug_assert_eq!(out.len(), args.segments() * d);
     let mut pos = 0usize;
     for (s, &len) in args.lengths.iter().enumerate() {
+        let seg_end = pos + len as usize;
         let acc = &mut out[s * d..(s + 1) * d];
         acc.fill(0.0);
-        for k in pos..pos + len as usize {
-            let row = table.row(args.indices[k] as usize);
-            let w = weights[k];
-            for (a, &v) in acc.iter_mut().zip(row) {
-                *a += w * v;
+        for k in pos..seg_end {
+            if k + kernel::PREFETCH_AHEAD < seg_end {
+                let nxt = args.indices[k + kernel::PREFETCH_AHEAD];
+                kernel::prefetch_f32s(table.row(nxt as usize));
             }
+            let row = table.row(args.indices[k] as usize);
+            kernel::accum_weighted_f32(kb, acc, row, weights[k]);
         }
-        pos += len as usize;
+        pos = seg_end;
     }
 }
 
 /// Weighted pooled sum over fused INT4/INT8 rows.
 pub fn sls_weighted_fused(
+    table: &FusedTable,
+    args: &SlsArgs,
+    weights: &[f32],
+    out: &mut [f32],
+) {
+    sls_weighted_fused_with(backend::active(), table, args, weights, out);
+}
+
+/// [`sls_weighted_fused`] pinned to an explicit kernel backend.
+pub fn sls_weighted_fused_with(
+    kb: KernelBackend,
     table: &FusedTable,
     args: &SlsArgs,
     weights: &[f32],
@@ -57,24 +86,29 @@ pub fn sls_weighted_fused(
     let mut acc_odd = vec![0.0f32; packed];
     let mut pos = 0usize;
     for (s, &len) in args.lengths.iter().enumerate() {
+        let seg_end = pos + len as usize;
         let mut wbias_sum = 0.0f32;
         match table.nbits() {
             4 => {
                 acc_even[..half].fill(0.0);
                 acc_odd.fill(0.0);
-                for k in pos..pos + len as usize {
+                for k in pos..seg_end {
+                    if k + kernel::PREFETCH_AHEAD < seg_end {
+                        let nxt = args.indices[k + kernel::PREFETCH_AHEAD];
+                        kernel::prefetch_bytes(table.row_raw(nxt as usize));
+                    }
                     let raw = table.row_raw(args.indices[k] as usize);
                     let (scale, bias) = table.read_tail(raw);
                     let w = weights[k];
                     let ws = w * scale;
                     wbias_sum += w * bias;
-                    let bytes = &raw[..packed];
-                    for (a, &byte) in acc_even[..packed].iter_mut().zip(bytes) {
-                        *a += ws * (byte & 0x0F) as f32;
-                    }
-                    for (a, &byte) in acc_odd.iter_mut().zip(bytes) {
-                        *a += ws * (byte >> 4) as f32;
-                    }
+                    kernel::accum_nibbles(
+                        kb,
+                        &mut acc_even[..packed],
+                        &mut acc_odd,
+                        &raw[..packed],
+                        ws,
+                    );
                     if odd_tail {
                         acc_even[packed] += ws * (raw[packed] & 0x0F) as f32;
                     }
@@ -91,30 +125,44 @@ pub fn sls_weighted_fused(
             8 => {
                 let acc = &mut out[s * d..(s + 1) * d];
                 acc.fill(0.0);
-                for k in pos..pos + len as usize {
+                for k in pos..seg_end {
+                    if k + kernel::PREFETCH_AHEAD < seg_end {
+                        let nxt = args.indices[k + kernel::PREFETCH_AHEAD];
+                        kernel::prefetch_bytes(table.row_raw(nxt as usize));
+                    }
                     let raw = table.row_raw(args.indices[k] as usize);
                     let (scale, bias) = table.read_tail(raw);
                     let w = weights[k];
                     let ws = w * scale;
                     wbias_sum += w * bias;
-                    for (a, &c) in acc.iter_mut().zip(&raw[..d]) {
-                        *a += ws * c as f32;
-                    }
+                    kernel::accum_scaled_u8(kb, acc, &raw[..d], ws);
                 }
-                for a in out[s * d..(s + 1) * d].iter_mut() {
-                    *a += wbias_sum;
-                }
+                // Unlike plain INT8 pooling this add is unguarded: the
+                // historical weighted kernel always ran it, and a
+                // semantically inert `+ 0.0` still flips `-0.0` to
+                // `+0.0` — per-path behavior is preserved exactly.
+                kernel::add_bias(kb, &mut out[s * d..(s + 1) * d], wbias_sum);
             }
             _ => unreachable!(),
         }
-        pos += len as usize;
+        pos = seg_end;
     }
 }
 
 /// Mean pooling over fused rows: weighted sum with weight `1/len`
 /// (empty segments yield zeros, matching Caffe2's `SparseLengthsMean`).
 pub fn sls_mean_fused(table: &FusedTable, args: &SlsArgs, out: &mut [f32]) {
-    crate::sls::sls_fused(table, args, out);
+    sls_mean_fused_with(backend::active(), table, args, out);
+}
+
+/// [`sls_mean_fused`] pinned to an explicit kernel backend.
+pub fn sls_mean_fused_with(
+    kb: KernelBackend,
+    table: &FusedTable,
+    args: &SlsArgs,
+    out: &mut [f32],
+) {
+    crate::sls::sls_fused_with(kb, table, args, out);
     let d = table.dim();
     for (s, &len) in args.lengths.iter().enumerate() {
         if len > 1 {
@@ -204,6 +252,43 @@ mod tests {
             for j in 0..16 {
                 let want = if len == 0 { 0.0 } else { sum[s * 16 + j] / len.max(1) as f32 };
                 assert!((mean[s * 16 + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn backends_are_bit_identical_here_too() {
+        let best = backend::detected();
+        for (bits, d) in [(4u32, 15usize), (4, 64), (8, 24)] {
+            let t = EmbeddingTable::randn(50, d, 71 + d as u64);
+            let f = t.quantize_fused(&GreedyQuantizer::default(), bits, ScaleBiasDtype::F32);
+            let mut rng = Rng::new(72);
+            let lengths = vec![3u32, 0, 5, 1];
+            let indices: Vec<u32> = (0..9).map(|_| rng.below(50) as u32).collect();
+            let weights: Vec<f32> =
+                (0..9).map(|_| rng.uniform_in(-1.0, 2.0) as f32).collect();
+            let args = SlsArgs::new(&indices, &lengths, 50).unwrap();
+            let mut a = vec![0.0f32; 4 * d];
+            let mut b = a.clone();
+            sls_weighted_fused_with(KernelBackend::Scalar, &f, &args, &weights, &mut a);
+            sls_weighted_fused_with(best, &f, &args, &weights, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "weighted bits={bits} d={d}");
+            }
+            let mut a = vec![0.0f32; 4 * d];
+            let mut b = a.clone();
+            sls_mean_fused_with(KernelBackend::Scalar, &f, &args, &mut a);
+            sls_mean_fused_with(best, &f, &args, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "mean bits={bits} d={d}");
+            }
+            let dq = f.dequantize();
+            let mut a = vec![0.0f32; 4 * d];
+            let mut b = a.clone();
+            sls_weighted_f32_with(KernelBackend::Scalar, &dq, &args, &weights, &mut a);
+            sls_weighted_f32_with(best, &dq, &args, &weights, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "weighted f32 d={d}");
             }
         }
     }

@@ -13,6 +13,7 @@
 //! printed report is the repro recipe.
 
 use emberq::chaos::{run_scenario, FaultKind, ScenarioConfig, ScenarioReport};
+use emberq::sls::{backend, KernelBackend};
 
 /// The canonical acceptance scenario: four fault kinds (three beyond
 /// the transparent ones) interleaved with two concurrent updaters and
@@ -42,6 +43,7 @@ fn canonical() -> ScenarioConfig {
             FaultKind::TruncateSpill,
         ],
         wedge_ms: 50,
+        kernel_backend: None,
     }
 }
 
@@ -82,6 +84,29 @@ fn canonical_scenario_is_deterministic() {
     // properties of the engine, not of one lucky interleaving).
     let other = ScenarioConfig { seed: 0xD15EA5E, ..cfg.clone() };
     assert_healthy(&run_scenario(&other), &other);
+}
+
+#[test]
+fn canonical_scenario_holds_on_every_kernel_backend() {
+    // Pin the engine to each runnable backend in turn. The oracle pools
+    // through the process-default backend, so every window check inside
+    // the run is already a cross-backend bit-exactness assertion; on
+    // top of that, the schedule-derived reports must be identical —
+    // the kernel backend must be invisible to every observable.
+    let scalar_cfg =
+        ScenarioConfig { kernel_backend: Some(KernelBackend::Scalar), ..canonical() };
+    let scalar = run_scenario(&scalar_cfg);
+    assert_healthy(&scalar, &scalar_cfg);
+
+    let simd = backend::detected();
+    if simd == KernelBackend::Scalar {
+        eprintln!("note: no SIMD backend on this CPU; scalar-pinned leg covered the harness");
+        return;
+    }
+    let simd_cfg = ScenarioConfig { kernel_backend: Some(simd), ..canonical() };
+    let report = run_scenario(&simd_cfg);
+    assert_healthy(&report, &simd_cfg);
+    assert_eq!(scalar, report, "backend choice must not change a single observable");
 }
 
 #[test]

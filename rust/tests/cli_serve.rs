@@ -11,6 +11,7 @@ use std::io::BufWriter;
 use std::path::PathBuf;
 use std::process::{Command, Output};
 
+use emberq::cli::SERVE_FLAGS;
 use emberq::table::serial;
 use emberq::table::EmbeddingTable;
 
@@ -129,29 +130,11 @@ fn serve_update_churn_runs_end_to_end() {
 
 #[test]
 fn help_lists_every_serve_flag() {
-    // Drift guard: every flag `cmd_serve` parses must appear in the
-    // help text. Adding a flag to the parser without documenting it
-    // here fails this list — update both.
-    const SERVE_FLAGS: &[&str] = &[
-        "--table",
-        "--shards",
-        "--workers",
-        "--requests",
-        "--batch",
-        "--copies",
-        "--replicate-hot",
-        "--small-table-rows",
-        "--steal",
-        "--rebalance-interval",
-        "--resident-budget",
-        "--spill-dir",
-        "--spill-io-threads",
-        "--prefetch-window",
-        "--listen",
-        "--update-port",
-        "--update-every",
-        "--update-rows",
-    ];
+    // Drift guard against the parser's own source of truth: `cmd_serve`
+    // rejects flags outside `emberq::cli::SERVE_FLAGS`, so asserting the
+    // help documents every entry covers the parser too — no hand-copied
+    // flag list to go stale (the old copy here silently drifted).
+    assert!(!SERVE_FLAGS.is_empty());
     let out = emberq(&["serve", "--help"]);
     assert!(out.status.success());
     let help = String::from_utf8_lossy(&out.stdout).into_owned();
@@ -164,4 +147,39 @@ fn help_lists_every_serve_flag() {
         assert!(out.status.success());
         assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE: emberq"));
     }
+}
+
+#[test]
+fn serve_kernel_backend_surface() {
+    let p = table_file("kernel.embq");
+    let p = p.to_str().unwrap();
+
+    // A pinned scalar run works everywhere and reports its backend both
+    // at startup and in the per-shard stats lines.
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "20",
+        "--batch", "8", "--kernel-backend", "scalar",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(stdout.contains("(scalar kernels)"), "{stdout}");
+    assert!(stdout.contains("kernel=scalar"), "{stdout}");
+
+    // An unknown backend is a clean one-line error naming the flag.
+    let out = emberq(&["serve", "--table", p, "--kernel-backend", "warp9"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--kernel-backend"), "{}", stderr_of(&out));
+
+    // Unknown serve flags are rejected against SERVE_FLAGS.
+    let out = emberq(&["serve", "--table", p, "--shardz", "2"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("unknown flag --shardz"), "{}", stderr_of(&out));
+
+    // Pinning on the table-parallel path warns loudly but still runs.
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "0", "--workers", "1", "--copies", "2",
+        "--requests", "5", "--batch", "2", "--kernel-backend", "scalar",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("--kernel-backend"), "{}", stderr_of(&out));
 }

@@ -1,0 +1,262 @@
+//! SIMD-vs-scalar oracle: the scalar kernels are the bit-exactness
+//! reference, and every other backend must reproduce them *exactly* —
+//! `f32::to_bits` equality, never a tolerance. The property sweep
+//! hand-rolls its cases from the crate's own deterministic
+//! [`emberq::util::Rng`] (the crate is dependency-free, so no proptest):
+//! all formats × a dim ladder straddling every SIMD lane width and the
+//! cache-blocking threshold × empty segments × duplicate and
+//! out-of-order ids.
+//!
+//! On a CPU with no SIMD backend — or under `EMBERQ_FORCE_SCALAR`,
+//! where the engines legitimately resolve to scalar — the sweep skips
+//! and says so loudly; the CI kernel matrix supplies the real AVX2 leg
+//! and pins which arm ran via `EMBERQ_EXPECT_BACKEND`.
+
+use emberq::coordinator::{EmbeddingServer, ServerConfig, TableSet};
+use emberq::data::trace::{Request, RequestTrace, TraceConfig};
+use emberq::quant::AsymQuantizer;
+use emberq::shard::{ShardConfig, ShardedEngine};
+use emberq::sls::{
+    backend, sls_mean_fused_with, sls_weighted_f32_with, sls_weighted_fused_with, KernelBackend,
+    SlsArgs, SlsTable,
+};
+use emberq::table::serial::AnyTable;
+use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+use emberq::util::Rng;
+
+/// The backend under test, or `None` (loudly) when there is nothing
+/// beyond scalar to compare against. Uses [`backend::active`] rather
+/// than raw CPU detection so the suite skips on CI's forced-scalar leg
+/// too: there the engines resolve `EMBERQ_FORCE_SCALAR` down to scalar,
+/// and asserting they picked a SIMD backend would be asserting a lie.
+fn simd_backend() -> Option<KernelBackend> {
+    let b = backend::active();
+    if b == KernelBackend::Scalar {
+        eprintln!(
+            "note: no SIMD backend on this CPU (or EMBERQ_FORCE_SCALAR is set) — \
+             oracle sweep skipped; scalar is its own reference"
+        );
+        None
+    } else {
+        Some(b)
+    }
+}
+
+/// Dims straddling every interesting boundary: scalar-only (< any lane
+/// width), exact lane multiples (8 = one AVX2 register, 16, 64), every
+/// tail residue class around them, odd/prime dims for the nibble
+/// even/odd split, and one past the cache-blocking threshold (4096).
+const DIMS: &[usize] = &[1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100, 513, 4100];
+
+/// Random SLS args with empty segments, duplicates, and repeats mixed
+/// in. Returns `(indices, lengths)`.
+fn random_args(rng: &mut Rng, rows: usize, segments: usize) -> (Vec<u32>, Vec<u32>) {
+    let mut indices = Vec::new();
+    let mut lengths = Vec::with_capacity(segments);
+    for s in 0..segments {
+        // Segment 0 is always empty; others are empty 1 time in 5.
+        let len = if s == 0 || rng.below(5) == 0 { 0 } else { 1 + rng.below(9) };
+        lengths.push(len as u32);
+        for _ in 0..len {
+            indices.push(rng.below(rows) as u32);
+        }
+    }
+    (indices, lengths)
+}
+
+/// Assert two pooled outputs are bit-identical, with a useful failure.
+fn assert_bits_eq(want: &[f32], got: &[f32], what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: length mismatch");
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(
+            w.to_bits(),
+            g.to_bits(),
+            "{what}: bit divergence at element {i}: scalar {w:?} vs simd {g:?}"
+        );
+    }
+}
+
+#[test]
+fn simd_matches_scalar_on_every_format_and_dim() {
+    let Some(simd) = simd_backend() else { return };
+    let q = AsymQuantizer;
+    let mut rng = Rng::new(0x0_51D_0_2AC1E);
+    for &d in DIMS {
+        // Keep the 4100-dim case cheap: fewer rows, fewer segments.
+        let (rows, segments) = if d >= 4096 { (12, 3) } else { (57, 7) };
+        let master = EmbeddingTable::randn(rows, d, 0xBA5E ^ d as u64);
+        let mut tables: Vec<(String, AnyTable)> = vec![
+            ("f32".into(), AnyTable::F32(master.clone())),
+            ("cb-rowwise".into(), {
+                AnyTable::Codebook(master.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32))
+            }),
+            ("cb-twotier".into(), {
+                AnyTable::Codebook(
+                    master.quantize_codebook(CodebookKind::TwoTier { k: 3 }, ScaleBiasDtype::F16),
+                )
+            }),
+        ];
+        for nbits in [4u32, 8] {
+            for sb in [ScaleBiasDtype::F16, ScaleBiasDtype::F32] {
+                let name = format!("i{nbits}-{sb:?}");
+                tables.push((name, AnyTable::Fused(master.quantize_fused(&q, nbits, sb))));
+            }
+        }
+
+        for trial in 0..4 {
+            let (indices, lengths) = random_args(&mut rng, rows, segments);
+            for (name, any) in &tables {
+                let view = match any {
+                    AnyTable::F32(t) => SlsTable::F32(t),
+                    AnyTable::Fused(t) => SlsTable::Fused(t),
+                    AnyTable::Codebook(t) => SlsTable::Codebook(t),
+                };
+                let args = SlsArgs::new(&indices, &lengths, rows).unwrap();
+                let mut want = vec![0.0f32; segments * d];
+                let mut got = want.clone();
+                view.sls_with(KernelBackend::Scalar, &args, &mut want);
+                view.sls_with(simd, &args, &mut got);
+                assert_bits_eq(&want, &got, &format!("{name} d={d} trial={trial}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_matches_scalar_on_weighted_and_mean_variants() {
+    let Some(simd) = simd_backend() else { return };
+    let q = AsymQuantizer;
+    let mut rng = Rng::new(0x3EE_D5);
+    for &d in &[1usize, 7, 8, 16, 33, 100] {
+        let rows = 41;
+        let master = EmbeddingTable::randn(rows, d, 0xFEED ^ d as u64);
+        let fused4 = master.quantize_fused(&q, 4, ScaleBiasDtype::F16);
+        let fused8 = master.quantize_fused(&q, 8, ScaleBiasDtype::F32);
+        for trial in 0..4 {
+            let (indices, lengths) = random_args(&mut rng, rows, 5);
+            let weights: Vec<f32> =
+                indices.iter().map(|_| rng.uniform_in(-1.5, 1.5) as f32).collect();
+            let args = SlsArgs::new(&indices, &lengths, rows).unwrap();
+            let mut want = vec![0.0f32; 5 * d];
+            let mut got = want.clone();
+
+            sls_weighted_f32_with(KernelBackend::Scalar, &master, &args, &weights, &mut want);
+            sls_weighted_f32_with(simd, &master, &args, &weights, &mut got);
+            assert_bits_eq(&want, &got, &format!("weighted-f32 d={d} trial={trial}"));
+
+            for (name, fused) in [("i4", &fused4), ("i8", &fused8)] {
+                sls_weighted_fused_with(KernelBackend::Scalar, fused, &args, &weights, &mut want);
+                sls_weighted_fused_with(simd, fused, &args, &weights, &mut got);
+                assert_bits_eq(&want, &got, &format!("weighted-{name} d={d} trial={trial}"));
+
+                sls_mean_fused_with(KernelBackend::Scalar, fused, &args, &mut want);
+                sls_mean_fused_with(simd, fused, &args, &mut got);
+                assert_bits_eq(&want, &got, &format!("mean-{name} d={d} trial={trial}"));
+            }
+        }
+    }
+}
+
+/// Build the mixed-format table set used by the serving-path tests:
+/// rows=61 with shard counts 3/5/8 puts chunk boundaries at non-lane-
+/// aligned, non-equal offsets, so segment pooling crosses misaligned
+/// chunk starts.
+fn mixed_set(rows: usize, dim: usize) -> TableSet {
+    let q = AsymQuantizer;
+    let mk = |seed: u64| EmbeddingTable::randn(rows, dim, seed);
+    TableSet::new(vec![
+        AnyTable::F32(mk(11)),
+        AnyTable::Fused(mk(22).quantize_fused(&q, 4, ScaleBiasDtype::F16)),
+        AnyTable::Fused(mk(33).quantize_fused(&q, 8, ScaleBiasDtype::F32)),
+        AnyTable::Codebook(mk(44).quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32)),
+    ])
+}
+
+fn small_trace(rows: usize, tables: usize) -> RequestTrace {
+    RequestTrace::generate(&TraceConfig {
+        requests: 60,
+        num_tables: tables,
+        rows,
+        mean_pool: 6,
+        zipf_alpha: 1.05,
+        seed: 0xD00D_1E5,
+    })
+}
+
+#[test]
+fn sharded_engine_is_backend_invariant_at_every_shard_count() {
+    let Some(simd) = simd_backend() else { return };
+    let (rows, dim, tables) = (61usize, 33usize, 4usize);
+    let trace = small_trace(rows, tables);
+    for &shards in &[1usize, 2, 3, 5, 8] {
+        let cfg = |kb| ShardConfig {
+            num_shards: shards,
+            small_table_rows: 0,
+            kernel_backend: Some(kb),
+            ..ShardConfig::default()
+        };
+        let scalar = ShardedEngine::start(mixed_set(rows, dim), &cfg(KernelBackend::Scalar));
+        let fast = ShardedEngine::start(mixed_set(rows, dim), &cfg(simd));
+        assert_eq!(scalar.kernel_backend(), KernelBackend::Scalar);
+        assert_eq!(fast.kernel_backend(), simd);
+        for (i, req) in trace.requests.iter().enumerate() {
+            let want = scalar.lookup(req);
+            let got = fast.lookup(req);
+            assert_bits_eq(&want, &got, &format!("shards={shards} request={i}"));
+        }
+    }
+}
+
+#[test]
+fn served_trace_is_backend_invariant_end_to_end() {
+    let Some(simd) = simd_backend() else { return };
+    let (rows, dim, tables) = (61usize, 17usize, 4usize);
+    let trace = small_trace(rows, tables);
+    let cfg = |kb| ServerConfig {
+        num_shards: 3,
+        small_table_rows: 0,
+        kernel_backend: Some(kb),
+        ..ServerConfig::default()
+    };
+    let scalar = EmbeddingServer::start(mixed_set(rows, dim), cfg(KernelBackend::Scalar));
+    let fast = EmbeddingServer::start(mixed_set(rows, dim), cfg(simd));
+    for (i, req) in trace.requests.iter().enumerate() {
+        assert_bits_eq(&scalar.lookup(req), &fast.lookup(req), &format!("request={i}"));
+    }
+    // The chosen backend is observable in the per-shard stats.
+    let stats = fast.shard_stats().expect("sharded server reports shard stats");
+    for st in &stats {
+        assert_eq!(st.kernel, Some(simd));
+        assert!(st.summary().contains(&format!("kernel={simd}")), "{}", st.summary());
+    }
+}
+
+#[test]
+fn empty_and_degenerate_requests_are_backend_invariant() {
+    let Some(simd) = simd_backend() else { return };
+    let rows = 19;
+    let master = EmbeddingTable::randn(rows, 24, 0xE_0);
+    let view = SlsTable::F32(&master);
+    // All-empty args: zero segments, and segments that are all empty.
+    for (indices, lengths) in [(vec![], vec![]), (vec![], vec![0u32, 0, 0])] {
+        let args = SlsArgs::new(&indices, &lengths, rows).unwrap();
+        let mut want = vec![7.0f32; lengths.len() * 24];
+        let mut got = want.clone();
+        view.sls_with(KernelBackend::Scalar, &args, &mut want);
+        view.sls_with(simd, &args, &mut got);
+        assert_bits_eq(&want, &got, "empty segments");
+        assert!(want.iter().all(|&v| v == 0.0), "empty segments must pool to zero");
+    }
+    // A one-table engine request whose only segment is empty.
+    let engine = ShardedEngine::start(
+        TableSet::new(vec![AnyTable::F32(master.clone())]),
+        &ShardConfig {
+            num_shards: 2,
+            small_table_rows: 0,
+            kernel_backend: Some(simd),
+            ..ShardConfig::default()
+        },
+    );
+    let got = engine.lookup(&Request { ids: vec![vec![]] });
+    assert!(got.iter().all(|&v| v == 0.0));
+}
