@@ -66,11 +66,14 @@ impl VersionedOracle {
     ///
     /// [`commit`]: VersionedOracle::commit
     pub fn quantized_set(&self, q: &dyn Quantizer) -> TableSet {
+        // lint:allow(raw_lock) — poison must propagate: a panic mid-commit
+        // leaves half-patched masters, and recovering would serve them.
         Self::quantize(&self.masters.lock().unwrap(), q, self.nbits, self.sb)
     }
 
     /// Latest committed version.
     pub fn latest_version(&self) -> u64 {
+        // lint:allow(raw_lock) — poison must propagate (see commit).
         self.snapshots.read().unwrap().len() as u64 - 1
     }
 
@@ -97,6 +100,9 @@ impl VersionedOracle {
     where
         F: FnOnce() -> io::Result<u64>,
     {
+        // lint:allow(raw_lock) — deliberately poison-propagating: an
+        // updater that panics mid-commit leaves the masters half-patched,
+        // and every later oracle call MUST fail loudly, not serve them.
         let mut masters = self.masters.lock().unwrap();
         let valid = table < masters.len()
             && rows.iter().all(|(id, v)| {
@@ -117,6 +123,7 @@ impl VersionedOracle {
         }
         let candidate = Arc::new(Self::quantize(&masters, q, self.nbits, self.sb));
         let expected = {
+            // lint:allow(raw_lock) — poison must propagate (see above).
             let mut snaps = self.snapshots.write().unwrap();
             let expected = snaps.len() as u64;
             snaps.push(candidate);
@@ -131,6 +138,7 @@ impl VersionedOracle {
                 for (id, old) in &saved {
                     masters[table].row_mut(*id as usize).copy_from_slice(old);
                 }
+                // lint:allow(raw_lock) — poison must propagate (see above).
                 let mut snaps = self.snapshots.write().unwrap();
                 assert_eq!(snaps.len() as u64, expected + 1, "commit serialization broken");
                 snaps.pop();
@@ -142,6 +150,7 @@ impl VersionedOracle {
     /// Pooled lookup against the snapshot at `version` (panics if the
     /// version was never committed).
     pub fn pool_at(&self, version: u64, req: &Request) -> Vec<f32> {
+        // lint:allow(raw_lock) — poison must propagate (see commit).
         let set = Arc::clone(&self.snapshots.read().unwrap()[version as usize]);
         let mut out = vec![0.0f32; set.feature_width()];
         for t in 0..set.num_tables() {

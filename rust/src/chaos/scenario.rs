@@ -38,7 +38,7 @@ use std::fs;
 use std::io;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::data::trace::Request;
 use crate::quant::GreedyQuantizer;
@@ -306,7 +306,12 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
                 let (engine, oracle, committed, q) = (&engine, &oracle, &committed, &q);
                 s.spawn(move || {
                     for (table, rows) in program {
-                        let deadline = Instant::now() + Duration::from_secs(30);
+                        // Bounded retry budget instead of a wall-clock
+                        // deadline: the retry *count* is identical on
+                        // every run, so a wedged engine fails after the
+                        // same number of attempts regardless of host
+                        // speed (~30s at the nominal 2ms backoff).
+                        let mut retries_left = 15_000u32;
                         loop {
                             let r = oracle.commit(*table, rows, q, || {
                                 engine.update_table(*table, rows, q)
@@ -316,11 +321,12 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
                                     committed.fetch_add(1, Ordering::Relaxed);
                                     break;
                                 }
-                                Err(_) if Instant::now() < deadline => {
+                                Err(_) if retries_left > 0 => {
+                                    retries_left -= 1;
                                     std::thread::sleep(Duration::from_millis(2));
                                 }
                                 Err(e) => {
-                                    panic!("updater {u} wedged > 30s; last error: {e}")
+                                    panic!("updater {u} wedged after retry budget; last error: {e}")
                                 }
                             }
                         }
@@ -463,14 +469,18 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
     let budget_ok = match budget {
         None => true,
         Some(b) => {
-            let deadline = Instant::now() + Duration::from_secs(10);
+            // Bounded poll budget instead of a wall-clock deadline (same
+            // rationale as the updater retry loop): ~10s at the nominal
+            // 5ms poll, but the attempt count is host-independent.
+            let mut polls_left = 2_000u32;
             loop {
                 if resident() <= b {
                     break true;
                 }
-                if Instant::now() >= deadline {
+                if polls_left == 0 {
                     break false;
                 }
+                polls_left -= 1;
                 std::thread::sleep(Duration::from_millis(5));
             }
         }

@@ -283,7 +283,7 @@ impl EmbeddingServer {
         let (intake, dispatchers) = match &engine {
             Some(engine) => {
                 let (tx, rx) = sync_channel::<IntakeItem>(cfg.queue_depth.max(1));
-                let batcher = Arc::new(std::sync::Mutex::new(Batcher::new(rx, cfg.batch)));
+                let batcher = Arc::new(crate::util::sync::Mutex::new(Batcher::new(rx, cfg.batch)));
                 let fw = catalog.feature_width();
                 let max_batch = cfg.batch.max_batch.max(1);
                 let handles = (0..cfg.num_shards.clamp(1, 4))

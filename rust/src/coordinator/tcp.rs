@@ -35,15 +35,15 @@
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::server::EmbeddingServer;
 use crate::data::trace::Request;
-use crate::util::sync::lock_ignore_poison;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{lock_ignore_poison, Mutex};
 
 const ERR_SENTINEL: u32 = 0xFFFF_FFFF;
 const STATS_SENTINEL: u32 = 0xFFFF_FFFE;

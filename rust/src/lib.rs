@@ -35,7 +35,15 @@
 //!   on the serving path. Gated behind the off-by-default `xla` feature:
 //!   it needs the `xla` bridge crate and `libxla`, so the default build
 //!   stays offline-clean.
-//! * [`util`] — deterministic RNG, f16 conversion, statistics helpers.
+//! * [`util`] — deterministic RNG, f16 conversion, statistics helpers, and
+//!   the crate-wide sync surface ([`util::sync`]): std re-exports normally,
+//!   swapped to the instrumented model-checker primitives under
+//!   `RUSTFLAGS="--cfg loom"`.
+//! * [`verify`] — the concurrency verification layer: a vendored
+//!   exhaustive-interleaving model checker (loom-style, zero dependencies)
+//!   plus distilled models of the store transition protocol, the MVCC
+//!   placement swap, and the worker wakeup gate. See
+//!   `docs/verification.md`.
 //!
 //! Cross-language golden data for the quantizers lives in
 //! `python/tests/golden/quant_golden.txt`; regenerate it with
@@ -65,6 +73,11 @@
 //! ```
 
 #![deny(unsafe_op_in_unsafe_fn)]
+// `--cfg loom` is set by the loom_models CI leg via RUSTFLAGS; cargo's
+// automatic check-cfg does not know about it. A crate-level allow (rather
+// than a [lints] check-cfg table) keeps the manifest parseable by the
+// pinned MSRV toolchain.
+#![allow(unexpected_cfgs)]
 
 pub mod chaos;
 pub mod cli;
@@ -79,3 +92,4 @@ pub mod shard;
 pub mod sls;
 pub mod table;
 pub mod util;
+pub mod verify;

@@ -84,9 +84,8 @@ use std::collections::VecDeque;
 use std::io;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
-use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -95,6 +94,7 @@ use crate::coordinator::{Router, TableCatalog, TableSet};
 use crate::data::trace::Request;
 use crate::quant::Quantizer;
 use crate::shard::exec;
+use crate::shard::gate::WakeGate;
 use crate::shard::load::DecayWindow;
 use crate::shard::partition::{plan_partitions, RowPartition, TablePartition};
 use crate::shard::slice::TableSlice;
@@ -103,7 +103,11 @@ use crate::shard::ShardConfig;
 use crate::sls::KernelBackend;
 use crate::table::serial::AnyTable;
 use crate::table::{quantize_row_fused, EmbeddingTable, FusedTable};
-use crate::util::sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison};
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{
+    lock_ignore_poison, read_ignore_poison, write_ignore_poison, Condvar, Mutex, PoisonError,
+    RwLock,
+};
 
 /// One unit of executable (and stealable) work: a whole `(slot, table)`
 /// segment of a batch. Carries its placement snapshot so execution is
@@ -163,16 +167,6 @@ impl Placement {
     }
 }
 
-/// One shard worker's parking spot: the worker re-checks the queued
-/// counters under `shut`'s lock and parks on `cv`; producers notify
-/// after taking (and releasing) that same lock, so a notification
-/// cannot slip between the check and the park.
-struct WorkerGate {
-    /// Shutdown flag; also the condvar's mutex.
-    shut: Mutex<bool>,
-    cv: Condvar,
-}
-
 /// Rebalancer bookkeeping (guarded by one mutex that also serializes
 /// passes).
 struct RebalanceState {
@@ -208,8 +202,9 @@ struct Core {
     queued: Vec<AtomicUsize>,
     total_queued: AtomicUsize,
     /// Per-shard wakeup gates (one condvar per worker; no shared
-    /// notify_all, no idle polling tick).
-    gates: Vec<WorkerGate>,
+    /// notify_all, no idle polling tick). The park/wake protocol lives
+    /// in [`WakeGate`] and is model-checked — see `shard::gate`.
+    gates: Vec<WakeGate>,
     steal: bool,
     /// Tiered slice storage; `None` keeps every slice resident forever.
     /// MUST be declared after `placement` and `queues`: fields drop in
@@ -435,9 +430,7 @@ impl ShardedEngine {
             queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
             queued: (0..n).map(|_| AtomicUsize::new(0)).collect(),
             total_queued: AtomicUsize::new(0),
-            gates: (0..n)
-                .map(|_| WorkerGate { shut: Mutex::new(false), cv: Condvar::new() })
-                .collect(),
+            gates: (0..n).map(|_| WakeGate::new()).collect(),
             steal: cfg.steal,
             store,
             stats: (0..n).map(|_| Mutex::new(ShardStats::default())).collect(),
@@ -1018,8 +1011,7 @@ impl ShardedEngine {
 impl Drop for ShardedEngine {
     fn drop(&mut self) {
         for gate in &self.core.gates {
-            *lock_ignore_poison(&gate.shut) = true;
-            gate.cv.notify_all();
+            gate.shutdown();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -1136,15 +1128,13 @@ fn plurality_home(p: &RowPartition, ids: &[u32], counts: &mut [u32]) -> usize {
     best
 }
 
-/// Wake one shard's worker. The empty critical section pairs with the
-/// waiter, which holds this gate's lock from its queued-counter check
-/// until it parks: either the waiter saw the (already updated) counters,
-/// or it is parked and the notify lands. This is what lets the worker
-/// loop wait without any idle-tick backstop.
+/// Wake one shard's worker. [`WakeGate::wake`]'s lock round-trip pairs
+/// with the waiter, which holds the gate's lock from its queued-counter
+/// check until it parks: either the waiter saw the (already updated)
+/// counters, or it is parked and the notify lands. This is what lets the
+/// worker loop wait without any idle-tick backstop.
 fn wake(core: &Core, shard: usize) {
-    let gate = &core.gates[shard];
-    drop(lock_ignore_poison(&gate.shut));
-    gate.cv.notify_one();
+    core.gates[shard].wake();
 }
 
 fn pop_queue(core: &Core, shard: usize) -> Option<SubRequest> {
@@ -1368,26 +1358,20 @@ fn worker_loop(shard: usize, core: Arc<Core>) {
             run_sub(&core, shard, sub, stolen, &mut scratch);
             continue;
         }
-        let gate = &core.gates[shard];
-        let mut shut = lock_ignore_poison(&gate.shut);
-        loop {
-            if *shut {
-                return;
-            }
-            // Re-check under this gate's lock (producers take it before
-            // notifying): a non-stealing worker only cares about its own
-            // deque, a stealing one about any. Holding the lock across
-            // the check and the park is what makes a lost wakeup
-            // impossible — so the wait needs no timeout backstop.
-            let has_work = if core.steal {
+        // Park on the gate; the predicate re-checks under the gate's
+        // lock (producers take it before notifying): a non-stealing
+        // worker only cares about its own deque, a stealing one about
+        // any. Evaluating the check under that lock is what makes a lost
+        // wakeup impossible — so the wait needs no timeout backstop.
+        let parked = core.gates[shard].park_until(|| {
+            if core.steal {
                 core.total_queued.load(Ordering::SeqCst) > 0
             } else {
                 core.queued[shard].load(Ordering::SeqCst) > 0
-            };
-            if has_work {
-                break;
             }
-            shut = gate.cv.wait(shut).unwrap_or_else(PoisonError::into_inner);
+        });
+        if !parked {
+            return;
         }
     }
 }
@@ -1805,6 +1789,8 @@ mod tests {
             ShardedEngine::start(set, &ShardConfig { num_shards: 2, ..Default::default() });
         let core = Arc::clone(&engine.core);
         let h = std::thread::spawn(move || {
+            // lint:allow(raw_lock) — deliberately raw: this test *wants*
+            // the panic below to poison the mutex.
             let _guard = core.stats[0].lock().unwrap();
             panic!("poison the stats mutex");
         });

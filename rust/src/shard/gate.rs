@@ -1,0 +1,121 @@
+//! Worker wakeup gate: the park/wake protocol for idle shard workers.
+//!
+//! Extracted from `shard::engine`'s inline `(Mutex<bool>, Condvar)` pairs
+//! so the protocol exists once, on the swap-in primitives from
+//! [`crate::util::sync`] — which means the `--cfg loom` CI leg model-checks
+//! this exact type (see `rust/tests/loom_models.rs` and the distilled
+//! model in [`crate::verify::protocol::wakeup_gate`]).
+//!
+//! The protocol invariant: **a wake can never be lost.** Producers publish
+//! work (queue pushes + atomic counters), then call [`WakeGate::wake`],
+//! which takes and drops the gate lock *before* notifying. A worker checks
+//! its work counters only while holding that same lock
+//! ([`WakeGate::park_until`]), so the producer's lock round-trip cannot
+//! complete inside the gap between a worker's last check and its park —
+//! the notify always finds either a parked worker or a worker that will
+//! re-check and see the work. Model-checked exhaustively; a variant
+//! without the lock round-trip is proven (by the checker) to deadlock.
+
+use crate::util::sync::{cv_wait_ignore_poison, lock_ignore_poison, Condvar, Mutex};
+
+/// One worker's park/wake gate.
+pub struct WakeGate {
+    shut: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Default for WakeGate {
+    fn default() -> Self {
+        WakeGate::new()
+    }
+}
+
+impl WakeGate {
+    pub fn new() -> Self {
+        WakeGate {
+            shut: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Wake the worker after publishing work. The empty critical section is
+    /// load-bearing: it serialises this notify after any in-flight
+    /// check-then-park in [`Self::park_until`].
+    pub fn wake(&self) {
+        drop(lock_ignore_poison(&self.shut));
+        self.cv.notify_one();
+    }
+
+    /// Shut the gate and wake everyone parked on it. Idempotent.
+    pub fn shutdown(&self) {
+        *lock_ignore_poison(&self.shut) = true;
+        self.cv.notify_all();
+    }
+
+    /// Park until `has_work` holds (returns `true`) or the gate is shut
+    /// (returns `false`). `has_work` is evaluated under the gate lock;
+    /// spurious wakeups are absorbed by the predicate loop.
+    pub fn park_until(&self, has_work: impl Fn() -> bool) -> bool {
+        let mut shut = lock_ignore_poison(&self.shut);
+        loop {
+            if *shut {
+                return false;
+            }
+            if has_work() {
+                return true;
+            }
+            shut = cv_wait_ignore_poison(&self.cv, shut);
+        }
+    }
+
+    /// Whether the gate has been shut.
+    pub fn is_shut(&self) -> bool {
+        *lock_ignore_poison(&self.shut)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn wake_releases_parked_worker() {
+        let gate = Arc::new(WakeGate::new());
+        let work = Arc::new(AtomicUsize::new(0));
+        let (g2, w2) = (gate.clone(), work.clone());
+        let h = std::thread::spawn(move || g2.park_until(|| w2.load(Ordering::SeqCst) > 0));
+        work.store(1, Ordering::SeqCst);
+        gate.wake();
+        assert!(h.join().unwrap(), "worker should report work, not shutdown");
+    }
+
+    #[test]
+    fn shutdown_releases_parked_worker() {
+        let gate = Arc::new(WakeGate::new());
+        let g2 = gate.clone();
+        let h = std::thread::spawn(move || g2.park_until(|| false));
+        gate.shutdown();
+        assert!(!h.join().unwrap(), "worker should report shutdown");
+        assert!(gate.is_shut());
+    }
+
+    #[test]
+    fn park_returns_immediately_when_work_already_queued() {
+        let gate = WakeGate::new();
+        assert!(gate.park_until(|| true));
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_sticky() {
+        let gate = WakeGate::new();
+        gate.shutdown();
+        gate.shutdown();
+        assert!(gate.is_shut());
+        // Shut wins even when work is pending: drain-at-shutdown is the
+        // engine's policy decision, not the gate's.
+        assert!(!gate.park_until(|| true));
+        assert!(!gate.park_until(|| false));
+    }
+}

@@ -45,6 +45,14 @@
 //!   shutdowns, re-adopting byte-identical ones. Heat comes from the
 //!   same decay windows as the rebalancer; transitions are bit-exact by
 //!   construction.
+//! * [`gate`] / [`transition`] — the extracted concurrency protocols the
+//!   engine and store are built on: [`WakeGate`] (lost-wakeup-free worker
+//!   parking) and [`ClaimFlag`] + [`TransitionSignal`] (read-once tier
+//!   transitions with lost-broadcast-free completion waits). Both live on
+//!   the [`crate::util::sync`] swap-in primitives and are exhaustively
+//!   model-checked — distilled models under plain `cargo test`
+//!   ([`crate::verify::protocol`]), the real types under the
+//!   `RUSTFLAGS="--cfg loom"` CI leg (`rust/tests/loom_models.rs`).
 //!
 //! Equivalence contract: sharded output equals the unsharded
 //! `TableSet::pool` result **bit for bit, always** — every shard count,
@@ -68,16 +76,20 @@
 
 pub mod engine;
 pub mod exec;
+pub mod gate;
 pub mod load;
 pub mod partition;
 pub mod slice;
 pub mod store;
+pub mod transition;
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 pub use engine::{RebalanceStats, ShardedEngine};
+pub use gate::WakeGate;
 pub use load::DecayWindow;
+pub use transition::{ClaimFlag, TransitionSignal};
 pub use partition::{plan_partitions, RowPartition, TablePartition};
 pub use slice::TableSlice;
 pub use store::{SliceCell, SliceStore, SliceTier, SpillConfig, SpillHandle, StoreStats};

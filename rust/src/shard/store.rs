@@ -85,17 +85,24 @@
 //!   is staged before its first miss. Staged slices nobody consumed
 //!   within a whole tick are dropped.
 //!
-//! Duplicate work is deduplicated by two per-cell claim flags: at most
-//! one thread (worker or I/O pool) reads a given cell's spill file at a
-//! time (`promote_pending` — latecomers wait on the store's transition
-//! condvar), and at most one demotes it (`demote_pending`).
+//! Duplicate work is deduplicated by two per-cell
+//! [`ClaimFlag`](crate::shard::transition::ClaimFlag)s: at most one
+//! thread (worker or I/O pool) reads a given cell's spill file at a time
+//! (`promote_claim` — latecomers wait on the store's
+//! [`TransitionSignal`](crate::shard::transition::TransitionSignal)),
+//! and at most one demotes it (`demote_claim`). The claim/notify
+//! protocol is model-checked exhaustively — see
+//! [`crate::verify::protocol::store_transition`] and
+//! `rust/tests/loom_models.rs`.
 
 use std::collections::VecDeque;
 use std::fs::{self, File};
 use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock, Weak};
+use crate::shard::transition::{ClaimFlag, TransitionSignal};
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{Condvar, Mutex, PoisonError, RwLock};
+use std::sync::{Arc, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -234,10 +241,10 @@ pub struct SliceCell {
     heat: Mutex<DecayWindow>,
     /// Claim flag: one thread at a time reads this cell's spill file
     /// (inline promotion or prefetch job); latecomers wait on the
-    /// store's transition condvar instead of duplicating the read.
-    promote_pending: std::sync::atomic::AtomicBool,
+    /// store's transition signal instead of duplicating the read.
+    promote_claim: ClaimFlag,
     /// Claim flag: one demotion of this cell in flight at a time.
-    demote_pending: std::sync::atomic::AtomicBool,
+    demote_claim: ClaimFlag,
     /// A prefetched slice parked here until the next promotion consumes
     /// it (the read happened off the serving path; the *install* — and
     /// its budget enforcement — still happens on the promoting thread).
@@ -273,8 +280,8 @@ impl SliceCell {
             spill_path,
             file_len: AtomicU64::new(0),
             heat: Mutex::new(DecayWindow::new()),
-            promote_pending: std::sync::atomic::AtomicBool::new(false),
-            demote_pending: std::sync::atomic::AtomicBool::new(false),
+            promote_claim: ClaimFlag::new(),
+            demote_claim: ClaimFlag::new(),
             staged: Mutex::new(None),
             pinned: pin.then_some(slice),
         }
@@ -504,11 +511,10 @@ struct StoreInner {
     /// Demotions claimed but not yet completed (queued + writing).
     in_flight_demotes: AtomicUsize,
     /// Completion signaling for claim flips: demote/promote claim
-    /// holders bump-and-notify here when they finish, and budget waiters
-    /// / promote latecomers wait here. The mutex guards nothing but the
-    /// wait itself (predicates read the per-cell atomic flags).
-    transitions: Mutex<()>,
-    transition_cv: Condvar,
+    /// holders notify here when they finish, and budget waiters /
+    /// promote latecomers wait here. The signal's mutex guards nothing
+    /// but the wait itself (predicates read the per-cell claim flags).
+    transitions: TransitionSignal,
     /// Background I/O queue; `None` runs spill I/O inline (still
     /// streaming, still off the registry lock).
     io: Option<IoQueue>,
@@ -552,8 +558,7 @@ impl SliceStore {
             demote_stream_bytes: AtomicU64::new(0),
             orphans_deleted: AtomicU64::new(0),
             in_flight_demotes: AtomicUsize::new(0),
-            transitions: Mutex::new(()),
-            transition_cv: Condvar::new(),
+            transitions: TransitionSignal::new(),
             io: (cfg.io_threads > 0).then(|| IoQueue {
                 state: Mutex::new(IoQueueState { jobs: VecDeque::new(), shutdown: false }),
                 cv: Condvar::new(),
@@ -796,7 +801,7 @@ impl StoreInner {
             // can touch the cell — only a claim that already existed.
             let mut reg = lock_ignore_poison(&self.cells);
             reg.retain(|w| w.strong_count() > 0 && !w.ptr_eq(&target));
-            cell.demote_pending.load(Ordering::Acquire)
+            cell.demote_claim.is_claimed()
         };
         if demote_in_flight {
             // A demotion is mid-write (or about to flip the tier to the
@@ -829,23 +834,13 @@ impl StoreInner {
             if let Some(s) = cell.resident() {
                 return Ok(s);
             }
-            if cell
-                .promote_pending
-                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
-                .is_err()
-            {
+            if !cell.promote_claim.claim() {
                 // Someone else (a worker or a prefetch job) owns this
                 // cell's read; wait for their claim to clear, then
                 // re-evaluate from the top.
-                let mut guard = lock_ignore_poison(&self.transitions);
-                while cell.promote_pending.load(Ordering::Acquire)
-                    && cell.resident().is_none()
-                {
-                    guard = self
-                        .transition_cv
-                        .wait(guard)
-                        .unwrap_or_else(PoisonError::into_inner);
-                }
+                self.transitions.wait_until(|| {
+                    !cell.promote_claim.is_claimed() || cell.resident().is_some()
+                });
                 continue;
             }
             // We own the claim. The previous owner may have installed
@@ -900,8 +895,8 @@ impl StoreInner {
     }
 
     fn finish_promote(&self, cell: &SliceCell) {
-        cell.promote_pending.store(false, Ordering::Release);
-        self.notify_transition();
+        cell.promote_claim.release();
+        self.transitions.notify();
     }
 
     fn enforce(&self) {
@@ -981,7 +976,7 @@ impl StoreInner {
             // cannot park its bytes outside the budgeted tier forever.
             // (Claimed cells are left alone — their prefetch is mid
             // flight and will stage a fresh copy.)
-            if !cell.promote_pending.load(Ordering::Acquire) {
+            if !cell.promote_claim.is_claimed() {
                 lock_ignore_poison(&cell.staged).take();
             }
         }
@@ -1024,11 +1019,7 @@ impl StoreInner {
         if lock_ignore_poison(&cell.staged).is_some() {
             return false; // already staged, nothing to read
         }
-        if cell
-            .promote_pending
-            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
-            .is_err()
-        {
+        if !cell.promote_claim.claim() {
             return false; // someone is already reading this cell
         }
         q.push_front(IoJob::Prefetch(Arc::clone(cell)));
@@ -1136,7 +1127,7 @@ impl StoreInner {
         for c in &live {
             let rb = c.resident_bytes();
             resident += rb;
-            if rb > 0 && c.demote_pending.load(Ordering::Acquire) {
+            if rb > 0 && c.demote_claim.is_claimed() {
                 in_flight += c.bytes;
                 wait_set.push(Arc::clone(c));
             }
@@ -1149,7 +1140,7 @@ impl StoreInner {
         if resident - in_flight > self.budget {
             let mut victims: Vec<&Arc<SliceCell>> = live
                 .iter()
-                .filter(|c| c.is_resident() && !c.demote_pending.load(Ordering::Acquire))
+                .filter(|c| c.is_resident() && !c.demote_claim.is_claimed())
                 .collect();
             // Coldest first, deterministic tie-break; the protected cell
             // sorts last. Keys are cached: concurrent touches must not
@@ -1174,11 +1165,7 @@ impl StoreInner {
     }
 
     fn claim_demote(&self, cell: &Arc<SliceCell>) -> bool {
-        if cell
-            .demote_pending
-            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
-            .is_ok()
-        {
+        if cell.demote_claim.claim() {
             self.in_flight_demotes.fetch_add(1, Ordering::AcqRel);
             true
         } else {
@@ -1187,9 +1174,9 @@ impl StoreInner {
     }
 
     fn finish_demote(&self, cell: &SliceCell) {
-        cell.demote_pending.store(false, Ordering::Release);
+        cell.demote_claim.release();
         self.in_flight_demotes.fetch_sub(1, Ordering::AcqRel);
-        self.notify_transition();
+        self.transitions.notify();
     }
 
     /// Hand claimed victims to the I/O pool, or run them inline (still
@@ -1227,22 +1214,8 @@ impl StoreInner {
         if cells.is_empty() {
             return;
         }
-        let mut guard = lock_ignore_poison(&self.transitions);
-        while cells.iter().any(|c| c.demote_pending.load(Ordering::Acquire)) {
-            guard = self
-                .transition_cv
-                .wait(guard)
-                .unwrap_or_else(PoisonError::into_inner);
-        }
-    }
-
-    /// Empty critical section pairing with the waiters: a claim flag is
-    /// always cleared before this runs, and waiters hold the transitions
-    /// mutex from their predicate check until they park, so the notify
-    /// can never be lost.
-    fn notify_transition(&self) {
-        drop(lock_ignore_poison(&self.transitions));
-        self.transition_cv.notify_all();
+        self.transitions
+            .wait_until(|| !cells.iter().any(|c| c.demote_claim.is_claimed()));
     }
 
     /// Move one cell to the disk tier (streaming its spill file the

@@ -1,0 +1,164 @@
+//! Tier-transition primitives for the tiered slice store.
+//!
+//! Extracted from `shard::store`'s inline fields so the claim/notify
+//! protocol exists once, on the swap-in primitives from
+//! [`crate::util::sync`] — the `--cfg loom` CI leg model-checks these
+//! exact types (see `rust/tests/loom_models.rs`; the distilled model
+//! lives in [`crate::verify::protocol::store_transition`]).
+//!
+//! The store's transition protocol (PR 5):
+//!
+//! 1. exactly one thread wins the cell's [`ClaimFlag`] (promote or demote);
+//! 2. the winner does the expensive work (spill read / serialize+rename)
+//!    holding **no** lock;
+//! 3. the winner flips the tier pointer, releases the claim, and calls
+//!    [`TransitionSignal::notify`] — whose lock round-trip guarantees the
+//!    broadcast serialises after any latecomer's check-then-wait, so a
+//!    completion wakeup can never be lost.
+//!
+//! Model-checked guarantees: the spill file is read exactly once per
+//! promotion regardless of racing threads, latecomers always observe
+//! completion, and budget waits settle with residency back under budget.
+
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{cv_wait_ignore_poison, lock_ignore_poison, Condvar, Mutex};
+
+/// A read-once transition claim: a CAS-guarded flag that exactly one
+/// thread may hold at a time. Replaces the store's raw
+/// `promote_pending` / `demote_pending` atomics.
+pub struct ClaimFlag(AtomicBool);
+
+impl Default for ClaimFlag {
+    fn default() -> Self {
+        ClaimFlag::new()
+    }
+}
+
+impl ClaimFlag {
+    pub const fn new() -> Self {
+        ClaimFlag(AtomicBool::new(false))
+    }
+
+    /// Try to win the claim. Returns `true` for exactly one caller until
+    /// [`Self::release`] is called.
+    #[must_use]
+    pub fn claim(&self) -> bool {
+        self.0
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Release the claim. Callers must have completed (and made visible)
+    /// the tier flip first: waiters treat a clear claim as "transition
+    /// finished".
+    pub fn release(&self) {
+        self.0.store(false, Ordering::Release);
+    }
+
+    pub fn is_claimed(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// The store-wide transition broadcast: latecomers and budget waiters
+/// park here until a claimant finishes. Replaces the store's raw
+/// `(Mutex<()>, Condvar)` pair.
+pub struct TransitionSignal {
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Default for TransitionSignal {
+    fn default() -> Self {
+        TransitionSignal::new()
+    }
+}
+
+impl TransitionSignal {
+    pub const fn new() -> Self {
+        TransitionSignal {
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Broadcast that a transition finished. The empty critical section is
+    /// load-bearing: it serialises this notify after any in-flight
+    /// check-then-wait in [`Self::wait_until`], so the wakeup cannot land
+    /// in the gap and be lost.
+    pub fn notify(&self) {
+        drop(lock_ignore_poison(&self.lock));
+        self.cv.notify_all();
+    }
+
+    /// Park until `done` holds. The predicate is re-checked around every
+    /// wakeup (spurious or broadcast), and evaluated under the signal
+    /// lock so it serialises against [`Self::notify`].
+    pub fn wait_until(&self, mut done: impl FnMut() -> bool) {
+        let mut g = lock_ignore_poison(&self.lock);
+        while !done() {
+            g = cv_wait_ignore_poison(&self.cv, g);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn claim_is_exclusive_until_released() {
+        let c = ClaimFlag::new();
+        assert!(c.claim());
+        assert!(!c.claim(), "second claim must lose");
+        assert!(c.is_claimed());
+        c.release();
+        assert!(!c.is_claimed());
+        assert!(c.claim(), "claim must be reusable after release");
+        c.release();
+    }
+
+    #[test]
+    fn racing_claims_have_exactly_one_winner() {
+        use crate::util::sync::atomic::{AtomicUsize, Ordering as O};
+        let c = Arc::new(ClaimFlag::new());
+        let wins = Arc::new(AtomicUsize::new(0));
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let (c, wins) = (c.clone(), wins.clone());
+                std::thread::spawn(move || {
+                    if c.claim() {
+                        wins.fetch_add(1, O::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(wins.load(O::SeqCst), 1);
+    }
+
+    #[test]
+    fn wait_until_observes_release_and_notify() {
+        let claim = Arc::new(ClaimFlag::new());
+        let sig = Arc::new(TransitionSignal::new());
+        assert!(claim.claim());
+        let (c2, s2) = (claim.clone(), sig.clone());
+        let h = std::thread::spawn(move || {
+            s2.wait_until(|| !c2.is_claimed());
+        });
+        // Finish the "transition": release then broadcast.
+        claim.release();
+        sig.notify();
+        h.join().unwrap();
+        assert!(!claim.is_claimed());
+    }
+
+    #[test]
+    fn wait_until_with_true_predicate_returns_immediately() {
+        let sig = TransitionSignal::new();
+        sig.wait_until(|| true);
+    }
+}

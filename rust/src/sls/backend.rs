@@ -141,16 +141,31 @@ pub fn active() -> KernelBackend {
 /// config file. An explicit backend the CPU cannot run is an `Err`
 /// naming both sides; callers surface it before serving starts.
 pub fn resolve(requested: Option<KernelBackend>) -> Result<KernelBackend, String> {
-    if env_forced_scalar() {
+    resolve_with(env_forced_scalar(), requested, supported)
+}
+
+/// The precedence logic of [`resolve`], as a pure function of its three
+/// inputs: env escape hatch > explicit pin > CPU detection. Split out so
+/// the precedence table is testable on any machine — the real `resolve`
+/// is hostage to whatever CPU and environment CI happens to run on.
+fn resolve_with(
+    forced_scalar: bool,
+    requested: Option<KernelBackend>,
+    supported: impl Fn(KernelBackend) -> bool,
+) -> Result<KernelBackend, String> {
+    if forced_scalar {
         return Ok(KernelBackend::Scalar);
     }
+    let detected = [KernelBackend::Avx2, KernelBackend::Neon]
+        .into_iter()
+        .find(|&b| supported(b))
+        .unwrap_or(KernelBackend::Scalar);
     match requested {
-        None => Ok(detected()),
+        None => Ok(detected),
         Some(b) if supported(b) => Ok(b),
         Some(b) => Err(format!(
-            "kernel backend `{b}` is not supported on this CPU (detected: `{}`); \
-             unset --kernel-backend / ShardConfig::kernel_backend or pick `scalar`",
-            detected()
+            "kernel backend `{b}` is not supported on this CPU (detected: `{detected}`); \
+             unset --kernel-backend / ShardConfig::kernel_backend or pick `scalar`"
         )),
     }
 }
@@ -196,6 +211,52 @@ mod tests {
             let err = resolve(Some(impossible)).unwrap_err();
             assert!(err.contains("not supported"), "{err}");
             assert!(err.contains(&impossible.to_string()), "{err}");
+        }
+    }
+
+    #[test]
+    fn resolve_precedence_table() {
+        use KernelBackend::{Avx2, Neon, Scalar};
+        // One simulated CPU per row set: an AVX2 box, a NEON box, and a
+        // plain scalar box. supported() is a closure, so every row runs
+        // on every real host.
+        let avx2_cpu = |b: KernelBackend| matches!(b, Scalar | Avx2);
+        let neon_cpu = |b: KernelBackend| matches!(b, Scalar | Neon);
+        let plain_cpu = |b: KernelBackend| matches!(b, Scalar);
+
+        // (forced_scalar, requested, cpu, expected) — env beats pin
+        // beats detection; an unrunnable pin is an error, never a
+        // silent fallback.
+        let table: &[(bool, Option<KernelBackend>, &dyn Fn(KernelBackend) -> bool, Result<KernelBackend, ()>)] = &[
+            // Detection alone picks the best the CPU has.
+            (false, None, &avx2_cpu, Ok(Avx2)),
+            (false, None, &neon_cpu, Ok(Neon)),
+            (false, None, &plain_cpu, Ok(Scalar)),
+            // An explicit runnable pin beats detection.
+            (false, Some(Scalar), &avx2_cpu, Ok(Scalar)),
+            (false, Some(Avx2), &avx2_cpu, Ok(Avx2)),
+            (false, Some(Neon), &neon_cpu, Ok(Neon)),
+            // An unrunnable pin is a clean error.
+            (false, Some(Neon), &avx2_cpu, Err(())),
+            (false, Some(Avx2), &neon_cpu, Err(())),
+            (false, Some(Avx2), &plain_cpu, Err(())),
+            // The env escape hatch beats everything — even a pin the
+            // CPU could not run (emergency override, not an error).
+            (true, None, &avx2_cpu, Ok(Scalar)),
+            (true, Some(Avx2), &avx2_cpu, Ok(Scalar)),
+            (true, Some(Neon), &avx2_cpu, Ok(Scalar)),
+        ];
+        for (i, (forced, req, cpu, want)) in table.iter().enumerate() {
+            let got = resolve_with(*forced, *req, cpu);
+            match want {
+                Ok(b) => assert_eq!(got.as_ref(), Ok(b), "row {i}"),
+                Err(()) => {
+                    let err = got.expect_err(&format!("row {i} must fail"));
+                    let pinned = req.expect("error rows pin a backend");
+                    assert!(err.contains("not supported"), "row {i}: {err}");
+                    assert!(err.contains(&pinned.to_string()), "row {i}: {err}");
+                }
+            }
         }
     }
 

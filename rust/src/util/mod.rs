@@ -11,4 +11,7 @@ pub use bench::{measure, measure_with_setup, Measurement};
 pub use f16::{f16_bits_to_f32, f32_to_f16, f32_to_f16_bits};
 pub use rng::{Rng, Zipf};
 pub use stats::{kurtosis, l2_sq, mean, mean_abs_dev, std_dev};
-pub use sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison};
+pub use sync::{
+    cv_wait_ignore_poison, lock_ignore_poison, poison_recoveries, read_ignore_poison,
+    write_ignore_poison,
+};

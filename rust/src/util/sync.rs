@@ -1,4 +1,18 @@
-//! Poison-tolerant locking.
+//! Crate-wide synchronisation surface: swap-in primitives + poison
+//! tolerance.
+//!
+//! Every concurrency-bearing module (`shard::store`, `shard::engine`,
+//! `shard::gate`, `shard::transition`, `coordinator::server`,
+//! `coordinator::tcp`, `chaos::oracle`) imports its `Mutex`/`Condvar`/
+//! `RwLock`/atomics from here instead of `std::sync` (enforced by
+//! `cargo xtask lint`). In a normal build these re-exports *are* the std
+//! types — pure aliases, zero overhead, nothing to compile out. Under
+//! `RUSTFLAGS="--cfg loom"` they swap to the instrumented primitives in
+//! [`crate::verify::sync`] (the vendored loom-style model checker), so the
+//! `loom_models` CI leg exhaustively model-checks the real product
+//! protocol types with no test doubles.
+//!
+//! ## Poison tolerance
 //!
 //! A `Mutex` is poisoned when a thread panics while holding it; every
 //! later `.lock().unwrap()` then panics too, so one crashed worker
@@ -10,32 +24,80 @@
 //! — counters and histograms that are updated atomically under the lock,
 //! never left half-written across a panic point — so recovering the
 //! guard from a `PoisonError` is safe: the worst case is a metrics
-//! sample from just before the panic.
+//! sample from just before the panic. Every recovery is counted in
+//! [`poison_recoveries`] so operators (and tests) can observe that a
+//! panic was absorbed rather than silently papered over.
 
-use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+#[cfg(loom)]
+pub use crate::verify::loom::sync::{
+    atomic, Condvar, LockResult, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard,
+    RwLockWriteGuard, TryLockError, TryLockResult, WaitTimeoutResult,
+};
 
-/// Lock `m`, recovering the guard if a previous holder panicked.
+#[cfg(not(loom))]
+pub use std::sync::{
+    Condvar, LockResult, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard,
+    RwLockWriteGuard, TryLockError, TryLockResult, WaitTimeoutResult,
+};
+
+/// The atomics submodule mirrors `std::sync::atomic` (and
+/// `loom::sync::atomic`) so call sites write `sync::atomic::AtomicU64`
+/// either way.
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Total number of poisoned-lock recoveries since process start, across
+/// all of the `*_ignore_poison` helpers. Deliberately a plain std atomic —
+/// it is observability metadata, not protocol state, and must not become a
+/// model yield point under `cfg(loom)`.
+static POISON_RECOVERIES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// How many times a poisoned lock has been recovered process-wide.
+pub fn poison_recoveries() -> u64 {
+    POISON_RECOVERIES.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+fn recovered<G>(e: PoisonError<G>) -> G {
+    POISON_RECOVERIES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    e.into_inner()
+}
+
+/// Lock `m`, recovering (and counting) the guard if a previous holder
+/// panicked.
 pub fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
+    m.lock().unwrap_or_else(recovered)
 }
 
-/// Read-lock `l`, recovering the guard if a writer panicked.
+/// Read-lock `l`, recovering (and counting) the guard if a writer panicked.
 pub fn read_ignore_poison<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
-    l.read().unwrap_or_else(PoisonError::into_inner)
+    l.read().unwrap_or_else(recovered)
 }
 
-/// Write-lock `l`, recovering the guard if a previous holder panicked.
+/// Write-lock `l`, recovering (and counting) the guard if a previous
+/// holder panicked.
 pub fn write_ignore_poison<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
-    l.write().unwrap_or_else(PoisonError::into_inner)
+    l.write().unwrap_or_else(recovered)
+}
+
+/// Wait on `cv`, recovering (and counting) the re-acquired guard if the
+/// mutex was poisoned while we slept. Callers must re-check their
+/// predicate in a loop: condvar waits can wake spuriously (a property the
+/// model checker exercises explicitly via `Builder::spurious`).
+pub fn cv_wait_ignore_poison<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(recovered)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::Arc;
+    use std::time::Duration;
 
     #[test]
-    fn poisoned_mutex_still_locks() {
+    fn poisoned_mutex_is_recovered_and_counted() {
+        let before = poison_recoveries();
         let m = Arc::new(Mutex::new(7u32));
         let m2 = Arc::clone(&m);
         let h = std::thread::spawn(move || {
@@ -47,10 +109,16 @@ mod tests {
         assert_eq!(*lock_ignore_poison(&m), 7);
         *lock_ignore_poison(&m) = 8;
         assert_eq!(*lock_ignore_poison(&m), 8);
+        assert!(
+            poison_recoveries() >= before + 3,
+            "recoveries not counted: before={before} after={}",
+            poison_recoveries()
+        );
     }
 
     #[test]
-    fn poisoned_rwlock_still_locks() {
+    fn poisoned_rwlock_is_recovered_and_counted() {
+        let before = poison_recoveries();
         let l = Arc::new(RwLock::new(1u32));
         let l2 = Arc::clone(&l);
         let h = std::thread::spawn(move || {
@@ -61,5 +129,67 @@ mod tests {
         assert_eq!(*read_ignore_poison(&l), 1);
         *write_ignore_poison(&l) = 2;
         assert_eq!(*read_ignore_poison(&l), 2);
+        assert!(poison_recoveries() >= before + 3);
+    }
+
+    #[test]
+    fn wait_loop_tolerates_extra_wakeups() {
+        // The notifier fires several notify_alls *before* making the
+        // predicate true — from the waiter's point of view these are
+        // indistinguishable from spurious wakeups. The predicate loop must
+        // absorb them all and only exit once the flag is really set.
+        let state = Arc::new((Mutex::new(false), Condvar::new()));
+        let s2 = Arc::clone(&state);
+        let notifier = std::thread::spawn(move || {
+            let (lock, cv) = &*s2;
+            for _ in 0..5 {
+                // Wakeups with no state change.
+                drop(lock_ignore_poison(lock));
+                cv.notify_all();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            *lock_ignore_poison(lock) = true;
+            cv.notify_all();
+        });
+        let (lock, cv) = &*state;
+        let mut done = lock_ignore_poison(lock);
+        while !*done {
+            done = cv_wait_ignore_poison(cv, done);
+        }
+        assert!(*done, "wait loop exited before the predicate held");
+        drop(done);
+        notifier.join().unwrap();
+    }
+
+    #[test]
+    fn cv_wait_recovers_poisoned_mutex_and_counts() {
+        let before = poison_recoveries();
+        let state = Arc::new((Mutex::new(false), Condvar::new()));
+        let s2 = Arc::clone(&state);
+        // Poison the mutex first.
+        let h = std::thread::spawn(move || {
+            let _g = s2.0.lock().unwrap();
+            panic!("poison it");
+        });
+        assert!(h.join().is_err());
+        assert!(state.0.is_poisoned());
+
+        // A waiter must still be able to wait on the poisoned mutex and a
+        // notifier must still be able to release it.
+        let s3 = Arc::clone(&state);
+        let notifier = std::thread::spawn(move || {
+            let (lock, cv) = &*s3;
+            std::thread::sleep(Duration::from_millis(5));
+            *lock_ignore_poison(lock) = true;
+            cv.notify_all();
+        });
+        let (lock, cv) = &*state;
+        let mut done = lock_ignore_poison(lock);
+        while !*done {
+            done = cv_wait_ignore_poison(cv, done);
+        }
+        drop(done);
+        notifier.join().unwrap();
+        assert!(poison_recoveries() > before);
     }
 }

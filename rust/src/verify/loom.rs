@@ -1,0 +1,63 @@
+//! `loom`-shaped facade over the vendored checker.
+//!
+//! Mirrors the subset of the real `loom` crate's API that this crate uses,
+//! so `util::sync` can re-export `crate::verify::loom::sync` under
+//! `cfg(loom)` exactly as it would re-export `loom::sync` if the external
+//! crate were available (the workspace builds fully offline with zero
+//! dependencies, so it is not). Model entry is [`model`]; threads inside a
+//! model must be spawned via [`thread::spawn`].
+
+pub use crate::verify::sched::model;
+
+pub mod sync {
+    pub use crate::verify::sync::{
+        Condvar, LockResult, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard,
+        RwLockWriteGuard, TryLockError, TryLockResult, WaitTimeoutResult,
+    };
+    pub mod atomic {
+        pub use crate::verify::sync::atomic::{
+            AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+        };
+    }
+}
+
+pub mod thread {
+    use crate::verify::sched;
+
+    /// Handle to a model thread. Unlike `std::thread::JoinHandle` it carries
+    /// no return value — models communicate through shared state, and a
+    /// panic anywhere fails the whole schedule with its decision trace.
+    pub struct JoinHandle {
+        id: usize,
+    }
+
+    impl JoinHandle {
+        pub(crate) fn new(id: usize) -> Self {
+            JoinHandle { id }
+        }
+
+        /// Block until the thread finishes. Joining is itself a scheduling
+        /// event, so join-vs-work orderings are explored.
+        pub fn join(self) {
+            let ctx = sched::current().expect("verify: join() outside a model");
+            ctx.sched.join_thread(ctx.id, self.id);
+        }
+    }
+
+    /// Spawn a model thread. Panics if called outside [`super::model`].
+    pub fn spawn<F>(f: F) -> JoinHandle
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        sched::spawn_model_thread(f)
+    }
+
+    /// Cooperative yield: a pure scheduling point with no data effect.
+    pub fn yield_now() {
+        if let Some(ctx) = sched::current() {
+            ctx.sched.yield_now(ctx.id);
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Concurrency verification layer: a vendored exhaustive-interleaving model
+//! checker plus distilled models of the engine's concurrency protocols.
+//!
+//! The crate builds fully offline with zero dependencies, so the real
+//! [`loom`](https://crates.io/crates/loom) crate cannot be used; `verify`
+//! re-implements its core — serialised execution, exhaustive DFS over
+//! scheduling decisions, deadlock detection, bounded spurious wakeups — in
+//! ~600 lines with the same API shape, exposed through the
+//! [`loom`](crate::verify::loom) facade so the rest of the crate is written
+//! as if against the real thing:
+//!
+//! - [`sched`] — the scheduler/explorer ([`sched::Builder`], [`sched::model`]).
+//! - [`sync`] — instrumented `Mutex`/`Condvar`/`RwLock`/atomics. Outside a
+//!   model they delegate to std at zero cost; `util::sync` re-exports them
+//!   crate-wide under `RUSTFLAGS="--cfg loom"`.
+//! - [`loom`] — the `loom`-shaped facade (`model`, `thread::spawn`, `sync`).
+//! - [`protocol`] — distilled models of the store transition protocol, the
+//!   MVCC placement swap, and the worker wakeup gate, with exhaustive
+//!   checks that run under plain `cargo test` *and* (against the real
+//!   product types) under the `--cfg loom` CI leg.
+//!
+//! See `docs/verification.md` for what each model proves and how to run the
+//! legs locally.
+
+pub mod loom;
+pub mod protocol;
+pub mod sched;
+pub mod sync;

@@ -1,0 +1,31 @@
+//! Distilled models of the engine's concurrency protocols.
+//!
+//! Each module reduces one hand-reasoned protocol from the serving engine
+//! to its essential shared state and orderings, then checks it under
+//! **every** interleaving with the exhaustive explorer in
+//! [`crate::verify::sched`]:
+//!
+//! - [`wakeup_gate`] — the per-shard worker wakeup gate (PR 4): a missed
+//!   `notify` must be impossible, and the model shows the naive
+//!   notify-without-lock variant *is* caught as a deadlock.
+//! - [`store_transition`] — the tiered store's claim → off-lock work →
+//!   tier flip protocol (PR 5): spill files are read **once** per
+//!   promotion no matter how many threads race, latecomers always observe
+//!   completion, prefetch staging never duplicates the read, and the
+//!   resident-byte budget is respected once transitions settle.
+//! - [`placement_swap`] — the MVCC placement swap (PR 6): readers never
+//!   observe a torn snapshot, advertised versions never run ahead of
+//!   installed snapshots, and snapshots are monotone.
+//!
+//! The models import [`crate::verify::sync`] directly, so they are
+//! exhaustively explored under plain `cargo test` (tier 1). The
+//! `rust/tests/loom_models.rs` integration test re-runs every `check_*`
+//! entry point under `RUSTFLAGS="--cfg loom"` — where `util::sync` swaps
+//! the *product* protocol types (`shard::gate::WakeGate`,
+//! `shard::transition::{ClaimFlag, TransitionSignal}`) onto the same
+//! instrumented primitives — and additionally model-checks those real
+//! types end to end.
+
+pub mod placement_swap;
+pub mod store_transition;
+pub mod wakeup_gate;

@@ -1,0 +1,320 @@
+//! Model: the tiered store's transition protocol.
+//!
+//! `shard::store` moves slices between RAM and spill files with a
+//! three-step protocol (PR 5), now embodied by
+//! `shard::transition::{ClaimFlag, TransitionSignal}`:
+//!
+//! 1. **claim** — exactly one thread wins a CAS on the cell's transition
+//!    flag; losers wait on the transition condvar, re-checking a predicate.
+//! 2. **off-lock work** — the winner performs the expensive I/O (spill
+//!    read for promotion, serialize+rename for demotion) holding no lock.
+//! 3. **flip + release + notify** — the tier pointer flips, the claim is
+//!    released, and the transition condvar is broadcast (after a lock
+//!    round-trip, so the wakeup cannot be lost).
+//!
+//! The models distil that to atomic flags plus a signal and assert, over
+//! every interleaving:
+//!
+//! - [`check_promote_reads_spill_once`] — no matter how promoters race,
+//!   the spill file is read **exactly once**, the tier pointer is never
+//!   torn (claim released only after the flip), and every latecomer
+//!   terminates (no lost completion wakeup; checked with spurious wakeups
+//!   both disabled and enabled).
+//! - [`check_prefetch_stages_single_read`] — a racing prefetcher stages
+//!   bytes for the promoter without ever duplicating the read, because
+//!   staging happens under the same claim with a post-claim re-check.
+//! - [`check_budget_settles_without_overshoot`] — a promotion that pushes
+//!   residency over budget claims a victim demote, hands it to the I/O
+//!   thread, and waits on the transition signal; once the wait returns,
+//!   residency is back under budget (no overshoot at rest) and the
+//!   victim's bytes were subtracted before the claim release became
+//!   visible.
+
+use crate::verify::loom::thread;
+use crate::verify::sched::Builder;
+use crate::verify::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::verify::sync::{Condvar, Mutex, PoisonError};
+use std::sync::Arc;
+
+/// Distilled transition claim: mirrors `shard::transition::ClaimFlag`.
+pub struct Claim(AtomicBool);
+
+impl Default for Claim {
+    fn default() -> Self {
+        Claim::new()
+    }
+}
+
+impl Claim {
+    pub const fn new() -> Self {
+        Claim(AtomicBool::new(false))
+    }
+
+    /// Read-once claim: true for exactly one caller until released.
+    pub fn claim(&self) -> bool {
+        self.0
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    pub fn release(&self) {
+        self.0.store(false, Ordering::Release);
+    }
+
+    pub fn is_claimed(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Distilled transition signal: mirrors `shard::transition::TransitionSignal`
+/// (a `Mutex<()>` + `Condvar` pair; notify takes the lock round-trip so
+/// wakeups serialise with waiters' predicate checks).
+pub struct Signal {
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Default for Signal {
+    fn default() -> Self {
+        Signal::new()
+    }
+}
+
+impl Signal {
+    pub const fn new() -> Self {
+        Signal {
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn notify(&self) {
+        drop(self.lock.lock().unwrap_or_else(PoisonError::into_inner));
+        self.cv.notify_all();
+    }
+
+    pub fn wait_until(&self, mut done: impl FnMut() -> bool) {
+        let mut g = self.lock.lock().unwrap_or_else(PoisonError::into_inner);
+        while !done() {
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// One slice cell, reduced to what the promote race touches.
+struct Cell {
+    resident: AtomicBool,
+    claim: Claim,
+    /// How many times the "spill file" was read.
+    reads: AtomicUsize,
+}
+
+impl Cell {
+    fn new() -> Self {
+        Cell {
+            resident: AtomicBool::new(false),
+            claim: Claim::new(),
+            reads: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// The distilled promote path: fast-path check, CAS claim, post-claim
+/// re-check, off-lock read, flip, release, notify; losers wait on the
+/// signal until the claim clears, then re-check residency.
+fn promote(cell: &Cell, sig: &Signal) {
+    loop {
+        if cell.resident.load(Ordering::Acquire) {
+            return;
+        }
+        if cell.claim.claim() {
+            // Re-check under the claim: a finished promoter may have flipped
+            // the tier between our fast-path check and our CAS.
+            if !cell.resident.load(Ordering::Acquire) {
+                cell.reads.fetch_add(1, Ordering::SeqCst); // expensive spill read
+                cell.resident.store(true, Ordering::Release); // tier flip
+            }
+            cell.claim.release();
+            sig.notify();
+            return;
+        }
+        // Latecomer: wait for the claimant to finish, then re-check.
+        sig.wait_until(|| !cell.claim.is_claimed());
+    }
+}
+
+fn promote_race_model() {
+    let cell = Arc::new(Cell::new());
+    let sig = Arc::new(Signal::new());
+    let (c2, s2) = (cell.clone(), sig.clone());
+    let t = thread::spawn(move || promote(&c2, &s2));
+    promote(&cell, &sig);
+    t.join();
+    assert!(
+        cell.resident.load(Ordering::SeqCst),
+        "promotion finished without a resident tier"
+    );
+    assert_eq!(
+        cell.reads.load(Ordering::SeqCst),
+        1,
+        "spill file read more than once (or not at all)"
+    );
+    assert!(
+        !cell.claim.is_claimed(),
+        "transition claim leaked past completion"
+    );
+}
+
+/// Two promoters race one cold cell: the spill read happens exactly once,
+/// the claim never leaks, and — because a lost completion wakeup would
+/// deadlock the latecomer — every schedule terminates. Checked both with
+/// spurious wakeups disabled (lost-notify detection) and enabled (predicate
+/// loops must re-check, never assume).
+pub fn check_promote_reads_spill_once() {
+    Builder::new()
+        .spurious(false)
+        .max_schedules(1_000_000)
+        .check(promote_race_model);
+    Builder::new()
+        .spurious(true)
+        .max_schedules(1_000_000)
+        .check(promote_race_model);
+}
+
+/// A prefetcher stages the spill bytes under the same claim the promoter
+/// uses, re-checking residency after the CAS; the promoter consumes the
+/// staged bytes instead of re-reading. Over every interleaving the read
+/// happens exactly once and promotion always completes.
+pub fn check_prefetch_stages_single_read() {
+    Builder::new()
+        .spurious(false)
+        .max_schedules(1_000_000)
+        .check(|| {
+            let cell = Arc::new(Cell::new());
+            let sig = Arc::new(Signal::new());
+            let staged: Arc<Mutex<Option<u32>>> = Arc::new(Mutex::new(None));
+            let (c2, s2, st2) = (cell.clone(), sig.clone(), staged.clone());
+            let prefetcher = thread::spawn(move || {
+                // Prefetch is opportunistic: skip unless the cell is cold
+                // and the claim is free right now.
+                if c2.resident.load(Ordering::Acquire) {
+                    return;
+                }
+                if !c2.claim.claim() {
+                    return;
+                }
+                if !c2.resident.load(Ordering::Acquire) {
+                    c2.reads.fetch_add(1, Ordering::SeqCst);
+                    *st2.lock().unwrap_or_else(PoisonError::into_inner) = Some(7);
+                }
+                c2.claim.release();
+                s2.notify();
+            });
+
+            // Promoter: same protocol, but consumes staged bytes if present.
+            loop {
+                if cell.resident.load(Ordering::Acquire) {
+                    break;
+                }
+                if cell.claim.claim() {
+                    if !cell.resident.load(Ordering::Acquire) {
+                        let pre = staged
+                            .lock()
+                            .unwrap_or_else(PoisonError::into_inner)
+                            .take();
+                        match pre {
+                            Some(v) => assert_eq!(v, 7, "staged bytes corrupted"),
+                            None => {
+                                cell.reads.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                        cell.resident.store(true, Ordering::Release);
+                    }
+                    cell.claim.release();
+                    sig.notify();
+                    break;
+                }
+                sig.wait_until(|| !cell.claim.is_claimed());
+            }
+
+            prefetcher.join();
+            assert!(cell.resident.load(Ordering::SeqCst));
+            assert_eq!(
+                cell.reads.load(Ordering::SeqCst),
+                1,
+                "prefetch + promote must read the spill exactly once"
+            );
+        });
+}
+
+/// Budget wait: installing a new slice overshoots the resident budget, so
+/// the promoter claims a victim demote, hands it to the I/O thread, and
+/// blocks on the transition signal until the claim clears. At that point —
+/// "at rest" — residency must be back under budget, and the victim's bytes
+/// must already be gone (the flip precedes the release).
+pub fn check_budget_settles_without_overshoot() {
+    Builder::new()
+        .spurious(false)
+        .max_schedules(1_000_000)
+        .check(|| {
+            const BUDGET: u64 = 1;
+            let resident_bytes = Arc::new(AtomicU64::new(1)); // the future victim
+            let demote_claim = Arc::new(Claim::new());
+            let io_queue = Arc::new(Signal::new());
+            let transitions = Arc::new(Signal::new());
+            let stop = Arc::new(AtomicBool::new(false));
+
+            let (rb, dc, ioq, tr, stop2) = (
+                resident_bytes.clone(),
+                demote_claim.clone(),
+                io_queue.clone(),
+                transitions.clone(),
+                stop.clone(),
+            );
+            let io = thread::spawn(move || {
+                // The async demote engine: wait for a claimed victim, write
+                // it out, subtract its bytes (tier flip), then release the
+                // claim and broadcast.
+                ioq.wait_until(|| dc.is_claimed() || stop2.load(Ordering::Acquire));
+                if !dc.is_claimed() {
+                    return;
+                }
+                rb.fetch_sub(1, Ordering::SeqCst); // victim flipped to spilled
+                dc.release();
+                tr.notify();
+            });
+
+            // Promoter: install the new slice (overshoot), claim the victim,
+            // dispatch, then wait for transitions to settle.
+            resident_bytes.fetch_add(1, Ordering::SeqCst);
+            assert!(demote_claim.claim(), "victim claim must be free");
+            io_queue.notify();
+            transitions.wait_until(|| !demote_claim.is_claimed());
+            assert!(
+                resident_bytes.load(Ordering::SeqCst) <= BUDGET,
+                "resident bytes over budget after transitions settled"
+            );
+
+            stop.store(true, Ordering::Release);
+            io_queue.notify();
+            io.join();
+        });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn promote_reads_spill_once() {
+        super::check_promote_reads_spill_once();
+    }
+
+    #[test]
+    fn prefetch_stages_single_read() {
+        super::check_prefetch_stages_single_read();
+    }
+
+    #[test]
+    fn budget_settles_without_overshoot() {
+        super::check_budget_settles_without_overshoot();
+    }
+}

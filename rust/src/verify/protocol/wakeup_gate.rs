@@ -1,0 +1,164 @@
+//! Model: the per-shard worker wakeup gate.
+//!
+//! `shard::engine` parks idle workers on a `(Mutex<bool>, Condvar)` pair
+//! (now extracted as `shard::gate::WakeGate`). The producer side enqueues
+//! work (atomic counters + queue pushes), then **takes and drops the gate
+//! lock before notifying**. That lock round-trip is the whole protocol: it
+//! forces the notify to serialise after any in-flight "check the counters,
+//! then wait" sequence in the worker, so a wakeup can never fall into the
+//! gap between the worker's last check and its park.
+//!
+//! [`check_wake_is_not_lost`] verifies that under every interleaving (with
+//! spurious wakeups disabled, so a lost notify has nothing to hide behind:
+//! it becomes a deadlock the explorer reports). The deliberately broken
+//! variant — notify without the lock round-trip — is asserted to be
+//! *caught* by [`check_broken_wake_is_caught`], which is as much a test of
+//! the checker as of the protocol.
+
+use crate::verify::loom::thread;
+use crate::verify::sched::Builder;
+use crate::verify::sync::atomic::{AtomicUsize, Ordering};
+use crate::verify::sync::{Condvar, Mutex, PoisonError};
+use std::sync::Arc;
+
+/// Distilled gate: mirrors `shard::gate::WakeGate` on the always-
+/// instrumented `verify::sync` primitives.
+pub struct Gate {
+    shut: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Default for Gate {
+    fn default() -> Self {
+        Gate::new()
+    }
+}
+
+impl Gate {
+    pub const fn new() -> Self {
+        Gate {
+            shut: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Correct wake: serialise on the gate lock, then notify.
+    pub fn wake(&self) {
+        drop(self.shut.lock().unwrap_or_else(PoisonError::into_inner));
+        self.cv.notify_one();
+    }
+
+    /// The bug under test: notify without the lock round-trip. The notify
+    /// can then land between a worker's predicate check and its park.
+    pub fn wake_without_lock(&self) {
+        self.cv.notify_one();
+    }
+
+    pub fn shutdown(&self) {
+        *self.shut.lock().unwrap_or_else(PoisonError::into_inner) = true;
+        self.cv.notify_all();
+    }
+
+    /// Park until there is work (true) or the gate is shut (false).
+    pub fn park_until(&self, has_work: impl Fn() -> bool) -> bool {
+        let mut shut = self.shut.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if *shut {
+                return false;
+            }
+            if has_work() {
+                return true;
+            }
+            shut = self
+                .cv
+                .wait(shut)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+fn lost_wakeup_model(broken: bool) {
+    let gate = Arc::new(Gate::new());
+    let work = Arc::new(AtomicUsize::new(0));
+    let done = Arc::new(AtomicUsize::new(0));
+    let (g2, w2, d2) = (gate.clone(), work.clone(), done.clone());
+    let worker = thread::spawn(move || {
+        loop {
+            if w2.swap(0, Ordering::SeqCst) > 0 {
+                d2.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
+            if !g2.park_until(|| w2.load(Ordering::SeqCst) > 0) {
+                return;
+            }
+        }
+    });
+    work.store(1, Ordering::SeqCst);
+    if broken {
+        gate.wake_without_lock();
+    } else {
+        gate.wake();
+    }
+    // If the wake is lost the worker parks forever and this join deadlocks —
+    // which the explorer reports together with the failing schedule.
+    worker.join();
+    assert_eq!(done.load(Ordering::SeqCst), 1, "work item was dropped");
+}
+
+/// No interleaving loses the wakeup: the worker always processes the item
+/// and terminates. Run with spurious wakeups disabled — a spurious wake
+/// would mask a genuinely lost notify.
+pub fn check_wake_is_not_lost() {
+    Builder::new().spurious(false).check(|| lost_wakeup_model(false));
+}
+
+/// The checker's teeth: the notify-without-lock variant must be reported
+/// as a deadlock on some schedule.
+pub fn check_broken_wake_is_caught() {
+    let res = std::panic::catch_unwind(|| {
+        Builder::new().spurious(false).check(|| lost_wakeup_model(true));
+    });
+    let err = res.expect_err(
+        "notify-without-lock variant passed the checker — the model \
+         or the explorer lost its ability to detect lost wakeups",
+    );
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "<non-string panic>".into());
+    assert!(msg.contains("deadlock"), "unexpected failure mode: {msg}");
+}
+
+/// Shutdown always frees a parked worker, and the park loop tolerates
+/// spurious wakeups (predicates are re-checked, never assumed).
+pub fn check_shutdown_unparks_and_survives_spurious_wakeups() {
+    Builder::new().spurious(true).check(|| {
+        let gate = Arc::new(Gate::new());
+        let g2 = gate.clone();
+        let worker = thread::spawn(move || {
+            // No work will ever arrive; only shutdown may release us.
+            let woke_for_work = g2.park_until(|| false);
+            assert!(!woke_for_work, "park returned 'work' with no work");
+        });
+        gate.shutdown();
+        worker.join();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wake_is_not_lost() {
+        super::check_wake_is_not_lost();
+    }
+
+    #[test]
+    fn broken_wake_is_caught() {
+        super::check_broken_wake_is_caught();
+    }
+
+    #[test]
+    fn shutdown_unparks_and_survives_spurious_wakeups() {
+        super::check_shutdown_unparks_and_survives_spurious_wakeups();
+    }
+}

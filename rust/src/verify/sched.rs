@@ -1,0 +1,920 @@
+//! Exhaustive-interleaving model checker: the scheduler.
+//!
+//! This is a vendored, dependency-free miniature of the `loom` model
+//! checker, specialised to what this crate's concurrency protocols need.
+//! The real `loom` crate cannot be used here — the workspace is built and
+//! tested fully offline with zero external dependencies — so `verify`
+//! re-implements the core idea:
+//!
+//! - A model (a closure spawning threads via [`crate::verify::loom::thread`]
+//!   and synchronising via [`crate::verify::sync`]) is executed many times.
+//! - Execution is **serialised**: only one model thread runs at a time, and
+//!   control transfers only at *yield points* (every atomic op, every lock
+//!   acquisition attempt, every condvar interaction). Between yield points a
+//!   thread runs uninterrupted, which matches the granularity loom checks at.
+//! - Every scheduling decision ("which runnable thread proceeds?", "which
+//!   waiter does `notify_one` wake?") is a branch. The explorer enumerates
+//!   the whole decision tree depth-first by *replaying* a recorded prefix
+//!   and then diverging at the deepest not-yet-exhausted branch point.
+//!
+//! What this checker can prove for a model:
+//!
+//! - An assertion holds on **every** interleaving at yield-point
+//!   granularity (under sequentially-consistent semantics — see the
+//!   "memory model" note below).
+//! - No interleaving deadlocks: if no thread is runnable and at least one
+//!   is blocked on a lock, a condvar, or a join, the schedule is reported
+//!   as a deadlock together with the decision trace that reached it. With
+//!   spurious wakeups disabled this is exactly the *lost wakeup* failure
+//!   mode of a missed-notify protocol bug.
+//! - Optionally, that condvar wait loops tolerate **spurious wakeups**:
+//!   with [`Builder::spurious`] enabled, every blocked-on-condvar thread is
+//!   also schedulable (bounded per thread, see below), so a wait that is
+//!   not re-checked in a loop fails its model.
+//!
+//! ### Memory model honesty
+//!
+//! The instrumented atomics in [`crate::verify::sync`] delegate to the real
+//! std atomics with the *caller's* orderings, but because execution is
+//! serialised every run is in practice sequentially consistent. Unlike real
+//! loom, this checker therefore does **not** explore weak-memory
+//! reorderings; it explores interleavings only. That is the right tool for
+//! the protocols verified here (lost wakeups, torn pointer flips, read-once
+//! claims, budget accounting) which are all interleaving bugs, and it is
+//! documented as such in `docs/verification.md`.
+//!
+//! ### Bounding
+//!
+//! Exhaustive exploration must terminate:
+//!
+//! - `max_schedules` caps the number of distinct schedules. Exceeding it
+//!   panics loudly ("state space too large") rather than silently passing
+//!   a partial search — "exhaustive" stays honest.
+//! - `max_decisions` caps the length of a single schedule, turning an
+//!   accidental livelock in a model into a clear failure.
+//! - Spurious wakeups are budgeted per thread per schedule
+//!   (`spurious_budget`), otherwise a wait loop could be woken spuriously
+//!   forever and the decision tree would be infinite. One spurious wakeup
+//!   per wait site is enough to verify that predicates are re-checked.
+//!
+//! The scheduler itself synchronises with **plain std primitives** — it is
+//! the meta level and must never be instrumented. The invariant linter
+//! (`cargo xtask lint`) allowlists `rust/src/verify/` for exactly this
+//! reason.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Sentinel panic payload used to unwind model threads when a run aborts
+/// (another thread failed, or the driver declared a deadlock). Filtered by
+/// the panic hook so aborted runs do not spam stderr.
+pub(crate) struct ModelAbort;
+
+thread_local! {
+    static CURRENT: std::cell::RefCell<Option<Ctx>> = const { std::cell::RefCell::new(None) };
+}
+
+#[derive(Clone)]
+pub(crate) struct Ctx {
+    pub(crate) sched: Arc<Sched>,
+    pub(crate) id: usize,
+}
+
+/// Returns the scheduler context of the calling thread, if it is a model
+/// thread. The instrumented primitives call this on every operation: when
+/// `None` (normal test/product execution) they degrade to zero-cost
+/// delegation to std.
+pub(crate) fn current() -> Option<Ctx> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+fn set_current(ctx: Option<Ctx>) {
+    CURRENT.with(|c| *c.borrow_mut() = ctx);
+}
+
+/// One recorded decision: `(chosen, arity)`. The explorer advances the
+/// deepest decision with `chosen + 1 < arity` to enumerate the tree.
+type Decision = (usize, usize);
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TState {
+    /// Eligible to be granted the token.
+    Ready,
+    /// Currently holds the token (at most one thread).
+    Running,
+    /// Parked until the mutex at this address is released.
+    MutexBlocked(usize),
+    /// Parked until the rwlock at this address changes state.
+    RwBlocked(usize),
+    /// Parked on the condvar at this address.
+    CondBlocked(usize),
+    /// Parked until thread `.0` finishes.
+    JoinBlocked(usize),
+    Finished,
+}
+
+struct State {
+    threads: Vec<TState>,
+    /// The thread currently granted the token, if any. The driver only
+    /// makes scheduling decisions while this is `None`.
+    active: Option<usize>,
+    /// Replay prefix for this schedule; beyond it, first branch (0) is taken.
+    prefix: Vec<usize>,
+    cursor: usize,
+    trace: Vec<Decision>,
+    /// Threads queued on a mutex / rwlock address.
+    lock_waiters: BTreeMap<usize, Vec<usize>>,
+    /// Threads parked on a condvar address, in wait order.
+    cond_waiters: BTreeMap<usize, Vec<usize>>,
+    /// thread id -> threads blocked joining it.
+    joiners: BTreeMap<usize, Vec<usize>>,
+    /// Remaining spurious wakeups each thread may suffer this schedule.
+    spurious_budget: Vec<usize>,
+    /// Set when the run must unwind (model panic or declared deadlock).
+    abort: bool,
+    /// First failure message of the run, with its decision trace.
+    failure: Option<String>,
+}
+
+pub(crate) struct Sched {
+    state: Mutex<State>,
+    cv: Condvar,
+    spurious: bool,
+    spurious_per_thread: usize,
+    max_decisions: usize,
+    /// OS join handles for threads spawned during the run.
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+fn meta_lock(s: &Sched) -> MutexGuard<'_, State> {
+    // Meta-level lock; a poisoned state is still structurally sound because
+    // every mutation below is a plain field store.
+    s.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Sched {
+    fn new(spurious: bool, spurious_per_thread: usize, max_decisions: usize) -> Self {
+        Sched {
+            state: Mutex::new(State {
+                threads: Vec::new(),
+                active: None,
+                prefix: Vec::new(),
+                cursor: 0,
+                trace: Vec::new(),
+                lock_waiters: BTreeMap::new(),
+                cond_waiters: BTreeMap::new(),
+                joiners: BTreeMap::new(),
+                spurious_budget: Vec::new(),
+                abort: false,
+                failure: None,
+            }),
+            cv: Condvar::new(),
+            spurious,
+            spurious_per_thread,
+            max_decisions,
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Consume one decision from the replay stream (or branch 0 past the
+    /// prefix). Must be called with the state lock held.
+    fn decide_locked(&self, st: &mut State, arity: usize) -> usize {
+        debug_assert!(arity > 0);
+        let choice = if st.cursor < st.prefix.len() {
+            let c = st.prefix[st.cursor];
+            assert!(
+                c < arity,
+                "verify: nondeterministic model — replayed decision {c} out of \
+                 range for arity {arity} at step {} (a model must make identical \
+                 decisions when replayed; avoid wall clocks, OS randomness and \
+                 HashMap iteration inside models)",
+                st.cursor
+            );
+            c
+        } else {
+            0
+        };
+        st.cursor += 1;
+        st.trace.push((choice, arity));
+        if st.trace.len() > self.max_decisions {
+            st.abort = true;
+            if st.failure.is_none() {
+                st.failure = Some(format!(
+                    "verify: schedule exceeded {} decisions — the model livelocks \
+                     (an unbounded retry loop?) or is far too large to check \
+                     exhaustively",
+                    self.max_decisions
+                ));
+            }
+        }
+        choice
+    }
+
+    /// Hand the token back (if held) and wake the driver. Must be called
+    /// with the state lock held, before parking in [`Self::wait_for_grant`].
+    fn release_token(&self, st: &mut State, id: usize) {
+        if st.active == Some(id) {
+            st.active = None;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Park the calling model thread until it is granted the token.
+    /// Must be called with the state lock held and `threads[id]` already set
+    /// to its blocked/ready state; returns with `threads[id] == Running`.
+    /// Does NOT release the token — newly spawned threads park here while
+    /// their spawner still holds it; yield paths call `release_token` first.
+    fn wait_for_grant<'a>(&'a self, mut st: MutexGuard<'a, State>, id: usize) {
+        loop {
+            if st.abort {
+                drop(st);
+                std::panic::panic_any(ModelAbort);
+            }
+            if st.threads[id] == TState::Ready && st.active == Some(id) {
+                st.threads[id] = TState::Running;
+                return;
+            }
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// A plain yield point: hand the token back and let the driver pick the
+    /// next thread (possibly this one again).
+    pub(crate) fn yield_now(&self, id: usize) {
+        let mut st = meta_lock(self);
+        st.threads[id] = TState::Ready;
+        self.release_token(&mut st, id);
+        self.wait_for_grant(st, id);
+    }
+
+    /// Block on the mutex/rwlock at `addr` after a failed try-acquire.
+    /// Returns once re-granted (the lock may have been re-taken — callers
+    /// retry their try-acquire in a loop).
+    pub(crate) fn block_on_lock(&self, id: usize, addr: usize, rw: bool) {
+        let mut st = meta_lock(self);
+        st.threads[id] = if rw {
+            TState::RwBlocked(addr)
+        } else {
+            TState::MutexBlocked(addr)
+        };
+        st.lock_waiters.entry(addr).or_default().push(id);
+        self.release_token(&mut st, id);
+        self.wait_for_grant(st, id);
+    }
+
+    /// A mutex/rwlock at `addr` was released: every queued waiter becomes
+    /// runnable again (they re-contend; the scheduler explores every order).
+    pub(crate) fn on_release(&self, addr: usize) {
+        let mut st = meta_lock(self);
+        if let Some(ws) = st.lock_waiters.remove(&addr) {
+            for w in ws {
+                st.threads[w] = TState::Ready;
+            }
+        }
+    }
+
+    /// Atomically release the token and park on the condvar at `cv_addr`.
+    /// The caller has already released the associated mutex. Returns once
+    /// notified (or spuriously woken) *and* granted the token.
+    pub(crate) fn block_on_cond(&self, id: usize, cv_addr: usize) {
+        let mut st = meta_lock(self);
+        st.threads[id] = TState::CondBlocked(cv_addr);
+        st.cond_waiters.entry(cv_addr).or_default().push(id);
+        self.release_token(&mut st, id);
+        self.wait_for_grant(st, id);
+    }
+
+    /// `notify_one`: if waiters exist, *which* one wakes is a scheduling
+    /// decision (std makes no ordering promise, so the model must not
+    /// either). No waiters → provably lost notification, exactly like std.
+    pub(crate) fn notify_one(&self, cv_addr: usize) {
+        let mut st = meta_lock(self);
+        let n = st.cond_waiters.get(&cv_addr).map_or(0, Vec::len);
+        if n == 0 {
+            return;
+        }
+        let pick = if n == 1 {
+            0
+        } else {
+            self.decide_locked(&mut st, n)
+        };
+        let w = st.cond_waiters.get_mut(&cv_addr).unwrap().remove(pick);
+        st.threads[w] = TState::Ready;
+    }
+
+    pub(crate) fn notify_all(&self, cv_addr: usize) {
+        let mut st = meta_lock(self);
+        if let Some(ws) = st.cond_waiters.remove(&cv_addr) {
+            for w in ws {
+                st.threads[w] = TState::Ready;
+            }
+        }
+    }
+
+    /// Register a newly spawned model thread as runnable; returns its id.
+    pub(crate) fn register_thread(&self) -> usize {
+        let mut st = meta_lock(self);
+        let id = st.threads.len();
+        st.threads.push(TState::Ready);
+        st.spurious_budget.push(self.spurious_per_thread);
+        id
+    }
+
+    pub(crate) fn push_handle(&self, h: std::thread::JoinHandle<()>) {
+        self.handles
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(h);
+    }
+
+    /// Model-level join: park until `child` finishes.
+    pub(crate) fn join_thread(&self, id: usize, child: usize) {
+        // Joining is an observable ordering event; give the scheduler a
+        // chance to run others first even when the child already finished.
+        self.yield_now(id);
+        let mut st = meta_lock(self);
+        if st.threads[child] == TState::Finished {
+            return;
+        }
+        st.threads[id] = TState::JoinBlocked(child);
+        st.joiners.entry(child).or_default().push(id);
+        self.release_token(&mut st, id);
+        self.wait_for_grant(st, id);
+    }
+
+    /// Mark the calling model thread finished and release the token.
+    fn finish_thread(&self, id: usize, panic_msg: Option<String>) {
+        let mut st = meta_lock(self);
+        st.threads[id] = TState::Finished;
+        if let Some(ws) = st.joiners.remove(&id) {
+            for w in ws {
+                st.threads[w] = TState::Ready;
+            }
+        }
+        if let Some(msg) = panic_msg {
+            st.abort = true;
+            if st.failure.is_none() {
+                st.failure = Some(msg);
+            }
+        }
+        if st.active == Some(id) {
+            st.active = None;
+        }
+        self.cv.notify_all();
+    }
+
+    fn describe_blocked(st: &State) -> String {
+        let mut parts = Vec::new();
+        for (id, t) in st.threads.iter().enumerate() {
+            let what = match t {
+                TState::MutexBlocked(a) => format!("thread {id} blocked on Mutex@{a:#x}"),
+                TState::RwBlocked(a) => format!("thread {id} blocked on RwLock@{a:#x}"),
+                TState::CondBlocked(a) => format!("thread {id} waiting on Condvar@{a:#x}"),
+                TState::JoinBlocked(c) => format!("thread {id} joining thread {c}"),
+                TState::Finished => continue,
+                TState::Ready | TState::Running => format!("thread {id} runnable(?)"),
+            };
+            parts.push(what);
+        }
+        parts.join("; ")
+    }
+
+    /// Drive one schedule to completion. Returns the decision trace, or the
+    /// failure message for this interleaving.
+    fn drive(&self) -> Result<Vec<Decision>, String> {
+        let mut st = meta_lock(self);
+        loop {
+            while st.active.is_some() {
+                st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            if st.abort {
+                // Unblock every parked thread so it can observe `abort` and
+                // unwind via ModelAbort.
+                self.cv.notify_all();
+                let all_done = st.threads.iter().all(|t| *t == TState::Finished);
+                if all_done {
+                    let msg = st.failure.take().unwrap_or_else(|| "model aborted".into());
+                    let trace: Vec<usize> = st.trace.iter().map(|d| d.0).collect();
+                    return Err(format!("{msg}\n  schedule (decision trace): {trace:?}"));
+                }
+                // Blocked and ready-but-ungranted threads are all parked in
+                // wait_for_grant; the notify above frees them to observe
+                // `abort` and unwind. Wait for the next completion.
+                st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                continue;
+            }
+
+            let runnable: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| **t == TState::Ready)
+                .map(|(i, _)| i)
+                .collect();
+            let spurious: Vec<usize> = if self.spurious {
+                st.threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, t)| {
+                        matches!(t, TState::CondBlocked(_)) && st.spurious_budget[*i] > 0
+                    })
+                    .map(|(i, _)| i)
+                    .collect()
+            } else {
+                Vec::new()
+            };
+
+            if runnable.is_empty() && spurious.is_empty() {
+                if st.threads.iter().all(|t| *t == TState::Finished) {
+                    return Ok(st.trace.clone());
+                }
+                // Deadlock. With spurious wakeups disabled this is precisely
+                // what a lost wakeup looks like.
+                let msg = format!(
+                    "verify: deadlock — no thread can make progress: {}",
+                    Self::describe_blocked(&st)
+                );
+                st.abort = true;
+                if st.failure.is_none() {
+                    st.failure = Some(msg);
+                }
+                self.cv.notify_all();
+                continue;
+            }
+
+            // The next thread to run is a decision over runnable threads
+            // plus (budget permitting) spuriously-wakeable waiters.
+            // Every grant is recorded, even at arity 1: the trace length then
+            // counts scheduler steps, so the `max_decisions` cap catches
+            // single-threaded livelocks too (arity-1 entries are never
+            // incrementable, so DFS enumeration is unaffected).
+            let mut choices = runnable;
+            let spur_start = choices.len();
+            choices.extend_from_slice(&spurious);
+            let pick_idx = self.decide_locked(&mut st, choices.len());
+            if st.abort {
+                self.cv.notify_all();
+                continue;
+            }
+            let pick = choices[pick_idx];
+            if pick_idx >= spur_start {
+                // Spurious wakeup: pull the thread out of the waiter queue.
+                st.spurious_budget[pick] -= 1;
+                if let TState::CondBlocked(addr) = st.threads[pick] {
+                    if let Some(q) = st.cond_waiters.get_mut(&addr) {
+                        q.retain(|w| *w != pick);
+                    }
+                }
+                st.threads[pick] = TState::Ready;
+            }
+            st.active = Some(pick);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Spawn a model thread running `f`. Called by the `verify::loom::thread`
+/// facade; panics if invoked outside a model.
+pub(crate) fn spawn_model_thread<F>(f: F) -> crate::verify::loom::thread::JoinHandle
+where
+    F: FnOnce() + Send + 'static,
+{
+    let ctx = current().expect("verify: thread::spawn used outside verify::model()");
+    let sched = ctx.sched.clone();
+    let id = sched.register_thread();
+    let sched2 = sched.clone();
+    let os = std::thread::Builder::new()
+        .name(format!("verify-model-{id}"))
+        .spawn(move || {
+            set_current(Some(Ctx {
+                sched: sched2.clone(),
+                id,
+            }));
+            // Wait to be granted before running the body: spawning is not a
+            // context switch, the spawner keeps the token.
+            {
+                let st = meta_lock(&sched2);
+                // New threads start Ready but ungranted.
+                sched2.wait_for_grant(st, id);
+            }
+            let result = catch_unwind(AssertUnwindSafe(f));
+            let msg = match result {
+                Ok(()) => None,
+                Err(p) => {
+                    if p.downcast_ref::<ModelAbort>().is_some() {
+                        None // sibling failure already recorded
+                    } else {
+                        Some(format!("model thread {id} panicked: {}", payload_str(&p)))
+                    }
+                }
+            };
+            sched2.finish_thread(id, msg);
+        })
+        .expect("verify: failed to spawn model thread");
+    sched.push_handle(os);
+    crate::verify::loom::thread::JoinHandle::new(id)
+}
+
+fn payload_str(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".into()
+    }
+}
+
+/// Install (once) a panic hook that silences expected model-thread panics:
+/// every model panic is caught, recorded, and re-reported with its decision
+/// trace by the explorer, so the default hook's stderr dump is pure noise —
+/// especially for the `ModelAbort` unwinds of sibling threads.
+fn install_quiet_hook() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if current().is_some() {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+/// Outcome of an exhaustive exploration, for asserting on search size.
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    /// Number of distinct schedules executed.
+    pub schedules: usize,
+    /// Longest decision trace seen.
+    pub max_depth: usize,
+}
+
+/// Configures and runs an exhaustive model check.
+///
+/// ```ignore
+/// verify::sched::Builder::new().spurious(true).check(|| { ... });
+/// ```
+pub struct Builder {
+    spurious: bool,
+    spurious_per_thread: usize,
+    max_schedules: usize,
+    max_decisions: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Builder {
+            spurious: true,
+            spurious_per_thread: 1,
+            max_schedules: 250_000,
+            max_decisions: 2_000,
+        }
+    }
+
+    /// Explore spurious condvar wakeups (default on). Turn **off** to detect
+    /// lost wakeups: a missed notify only manifests as a deadlock when the
+    /// scheduler is not allowed to paper over it with a spurious wake.
+    pub fn spurious(mut self, yes: bool) -> Self {
+        self.spurious = yes;
+        self
+    }
+
+    /// How many spurious wakeups each thread may suffer per schedule
+    /// (default 1). Must be bounded for the decision tree to be finite.
+    pub fn spurious_per_thread(mut self, n: usize) -> Self {
+        self.spurious_per_thread = n;
+        self
+    }
+
+    /// Cap on distinct schedules before the checker fails loudly
+    /// (default 250k). Raising this is honest; silently truncating is not.
+    pub fn max_schedules(mut self, n: usize) -> Self {
+        self.max_schedules = n;
+        self
+    }
+
+    /// Cap on decisions within one schedule (default 2000); exceeding it
+    /// reports a livelock.
+    pub fn max_decisions(mut self, n: usize) -> Self {
+        self.max_decisions = n;
+        self
+    }
+
+    /// Run `f` under every interleaving. Panics (with the failing decision
+    /// trace) if any interleaving panics, deadlocks, or livelocks.
+    pub fn check<F>(self, f: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        install_quiet_hook();
+        assert!(
+            current().is_none(),
+            "verify: model() must not be nested inside another model"
+        );
+        let f = Arc::new(f);
+        let mut prefix: Vec<usize> = Vec::new();
+        let mut schedules = 0usize;
+        let mut max_depth = 0usize;
+        loop {
+            schedules += 1;
+            assert!(
+                schedules <= self.max_schedules,
+                "verify: state space exceeds {} schedules — this model is too \
+                 large to check exhaustively; shrink the model (fewer threads / \
+                 fewer yield points) or raise max_schedules explicitly",
+                self.max_schedules
+            );
+            let trace = match self.run_one(f.clone(), &prefix) {
+                Ok(t) => t,
+                Err(msg) => panic!("verify: model failed on schedule #{schedules}:\n  {msg}"),
+            };
+            max_depth = max_depth.max(trace.len());
+            // DFS successor: bump the deepest decision that still has an
+            // unexplored branch; drop everything after it.
+            let mut next: Option<Vec<usize>> = None;
+            for i in (0..trace.len()).rev() {
+                let (chosen, arity) = trace[i];
+                if chosen + 1 < arity {
+                    let mut p: Vec<usize> = trace[..i].iter().map(|d| d.0).collect();
+                    p.push(chosen + 1);
+                    next = Some(p);
+                    break;
+                }
+            }
+            match next {
+                Some(p) => prefix = p,
+                None => return Report {
+                    schedules,
+                    max_depth,
+                },
+            }
+        }
+    }
+
+    fn run_one(&self, f: Arc<dyn Fn() + Send + Sync>, prefix: &[usize]) -> Result<Vec<Decision>, String> {
+        let sched = Arc::new(Sched::new(
+            self.spurious,
+            self.spurious_per_thread,
+            self.max_decisions,
+        ));
+        {
+            let mut st = meta_lock(&sched);
+            st.prefix = prefix.to_vec();
+        }
+        // Thread 0 is the model closure itself.
+        let root = sched.register_thread();
+        debug_assert_eq!(root, 0);
+        let sched0 = sched.clone();
+        let os = std::thread::Builder::new()
+            .name("verify-model-0".into())
+            .spawn(move || {
+                set_current(Some(Ctx {
+                    sched: sched0.clone(),
+                    id: 0,
+                }));
+                {
+                    let st = meta_lock(&sched0);
+                    sched0.wait_for_grant(st, 0);
+                }
+                let result = catch_unwind(AssertUnwindSafe(|| f()));
+                let msg = match result {
+                    Ok(()) => None,
+                    Err(p) => {
+                        if p.downcast_ref::<ModelAbort>().is_some() {
+                            None
+                        } else {
+                            Some(format!("model thread 0 panicked: {}", payload_str(&p)))
+                        }
+                    }
+                };
+                sched0.finish_thread(0, msg);
+            })
+            .expect("verify: failed to spawn model root thread");
+        sched.push_handle(os);
+
+        let outcome = sched.drive();
+        // Every OS thread either finished or unwound via ModelAbort; join
+        // them all so no run leaks threads into the next schedule.
+        let handles = std::mem::take(&mut *sched.handles.lock().unwrap_or_else(PoisonError::into_inner));
+        for h in handles {
+            let _ = h.join();
+        }
+        outcome
+    }
+}
+
+/// Convenience: `Builder::new().check(f)` — spurious wakeups on, default
+/// bounds. Mirrors `loom::model`.
+pub fn model<F>(f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Builder::new().check(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verify::loom::thread;
+    use crate::verify::sync::atomic::{AtomicUsize, Ordering as O};
+    use crate::verify::sync::{Condvar as VCondvar, Mutex as VMutex};
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn single_thread_model_runs_once() {
+        let hits = StdArc::new(std::sync::atomic::AtomicUsize::new(0));
+        let h = hits.clone();
+        let report = model(move || {
+            h.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(report.schedules, 1);
+        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn two_increments_explore_multiple_schedules() {
+        let report = model(|| {
+            let n = StdArc::new(AtomicUsize::new(0));
+            let n2 = n.clone();
+            let t = thread::spawn(move || {
+                n2.fetch_add(1, O::SeqCst);
+            });
+            n.fetch_add(1, O::SeqCst);
+            t.join();
+            assert_eq!(n.load(O::SeqCst), 2);
+        });
+        // At minimum the two fetch_adds interleave both ways.
+        assert!(report.schedules >= 2, "got {}", report.schedules);
+    }
+
+    #[test]
+    fn mutex_provides_mutual_exclusion_in_every_schedule() {
+        model(|| {
+            let m = StdArc::new(VMutex::new(0u32));
+            let m2 = m.clone();
+            let t = thread::spawn(move || {
+                let mut g = m2.lock().unwrap();
+                let v = *g;
+                *g = v + 1;
+            });
+            {
+                let mut g = m.lock().unwrap();
+                let v = *g;
+                *g = v + 1;
+            }
+            t.join();
+            assert_eq!(*m.lock().unwrap(), 2);
+        });
+    }
+
+    #[test]
+    fn atomicity_violation_is_found() {
+        // A non-atomic read-modify-write across a yield point must lose an
+        // update in *some* schedule; the checker must find it.
+        let found = catch_unwind(AssertUnwindSafe(|| {
+            model(|| {
+                let n = StdArc::new(AtomicUsize::new(0));
+                let n2 = n.clone();
+                let t = thread::spawn(move || {
+                    let v = n2.load(O::SeqCst);
+                    n2.store(v + 1, O::SeqCst);
+                });
+                let v = n.load(O::SeqCst);
+                n.store(v + 1, O::SeqCst);
+                t.join();
+                assert_eq!(n.load(O::SeqCst), 2, "lost update");
+            });
+        }));
+        assert!(found.is_err(), "checker missed a classic lost update");
+    }
+
+    #[test]
+    fn ab_ba_deadlock_is_detected() {
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            Builder::new().spurious(false).check(|| {
+                let a = StdArc::new(VMutex::new(()));
+                let b = StdArc::new(VMutex::new(()));
+                let (a2, b2) = (a.clone(), b.clone());
+                let t = thread::spawn(move || {
+                    let _ga = a2.lock().unwrap();
+                    let _gb = b2.lock().unwrap();
+                });
+                let _gb = b.lock().unwrap();
+                let _ga = a.lock().unwrap();
+                drop(_ga);
+                drop(_gb);
+                t.join();
+            });
+        }));
+        let msg = format!("{:?}", res.expect_err("AB-BA deadlock not detected"));
+        assert!(msg.contains("deadlock"), "unexpected failure: {msg}");
+    }
+
+    #[test]
+    fn missed_notify_is_a_deadlock_without_spurious_wakeups() {
+        // Classic lost wakeup: the flag is set *without* holding the lock the
+        // waiter checks it under, so the notify can land between the
+        // waiter's check and its wait.
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            Builder::new().spurious(false).check(|| {
+                let pair = StdArc::new((VMutex::new(false), VCondvar::new()));
+                let p2 = pair.clone();
+                let t = thread::spawn(move || {
+                    // BUG: no lock around the store.
+                    // (Model the store as a plain atomic-free write via the
+                    // mutex's data without holding it long: emulate by
+                    // locking, writing, unlocking, but notifying only after
+                    // a yield gives the waiter room? Simplest faithful bug:
+                    // notify BEFORE setting the flag under the lock order
+                    // the waiter assumes.)
+                    p2.1.notify_one();
+                    *p2.0.lock().unwrap() = true;
+                });
+                let (lock, cv) = &*pair;
+                let mut done = lock.lock().unwrap();
+                while !*done {
+                    done = cv.wait(done).unwrap();
+                }
+                drop(done);
+                t.join();
+            });
+        }));
+        let msg = format!("{:?}", res.expect_err("lost wakeup not detected"));
+        assert!(msg.contains("deadlock"), "unexpected failure: {msg}");
+    }
+
+    #[test]
+    fn correct_notify_protocol_passes_without_spurious_wakeups() {
+        Builder::new().spurious(false).check(|| {
+            let pair = StdArc::new((VMutex::new(false), VCondvar::new()));
+            let p2 = pair.clone();
+            let t = thread::spawn(move || {
+                *p2.0.lock().unwrap() = true;
+                p2.1.notify_one();
+            });
+            let (lock, cv) = &*pair;
+            let mut done = lock.lock().unwrap();
+            while !*done {
+                done = cv.wait(done).unwrap();
+            }
+            drop(done);
+            t.join();
+        });
+    }
+
+    #[test]
+    fn spurious_wakeups_are_explored_and_survived_by_predicate_loops() {
+        let report = Builder::new().spurious(true).check(|| {
+            let pair = StdArc::new((VMutex::new(false), VCondvar::new()));
+            let p2 = pair.clone();
+            let t = thread::spawn(move || {
+                *p2.0.lock().unwrap() = true;
+                p2.1.notify_one();
+            });
+            let (lock, cv) = &*pair;
+            let mut done = lock.lock().unwrap();
+            while !*done {
+                done = cv.wait(done).unwrap();
+            }
+            drop(done);
+            t.join();
+        });
+        assert!(report.schedules >= 2);
+    }
+
+    #[test]
+    fn livelock_hits_decision_cap_not_infinite_loop() {
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            Builder::new().max_decisions(64).check(|| {
+                let n = AtomicUsize::new(0);
+                // Never terminates: every load is a yield point.
+                while n.load(O::SeqCst) == 0 {}
+            });
+        }));
+        let msg = format!("{:?}", res.expect_err("livelock not caught"));
+        assert!(msg.contains("livelock") || msg.contains("decisions"), "{msg}");
+    }
+
+    #[test]
+    fn join_observes_child_writes() {
+        model(|| {
+            let n = StdArc::new(AtomicUsize::new(0));
+            let n2 = n.clone();
+            let t = thread::spawn(move || {
+                n2.store(7, O::SeqCst);
+            });
+            t.join();
+            assert_eq!(n.load(O::SeqCst), 7);
+        });
+    }
+}

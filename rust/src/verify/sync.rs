@@ -1,0 +1,642 @@
+//! Instrumented synchronisation primitives for the model checker.
+//!
+//! API-compatible subset of `std::sync` (and therefore of `loom::sync`):
+//! [`Mutex`], [`Condvar`], [`RwLock`] and the `atomic` module. Outside a
+//! model ([`crate::verify::sched::current`] is `None`) every operation
+//! delegates straight to the wrapped std primitive; inside a model every
+//! acquisition attempt, atomic access and condvar interaction is a yield
+//! point reported to the scheduler, so the exhaustive explorer can place a
+//! context switch there.
+//!
+//! `util::sync` re-exports these types when the crate is built with
+//! `RUSTFLAGS="--cfg loom"`, which is how the *product* protocol types
+//! (`shard::gate::WakeGate`, `shard::transition::{ClaimFlag,
+//! TransitionSignal}`) get model-checked without test doubles. The distilled
+//! protocol models in [`crate::verify::protocol`] import from here directly
+//! so they run exhaustively under plain `cargo test` too.
+//!
+//! Poisoning is preserved: the wrappers delegate to std's poison tracking,
+//! so the crate's poison-tolerance story (`util::sync::lock_ignore_poison`
+//! and friends) is exercised identically under the checker.
+
+use crate::verify::sched;
+use std::sync as ssync;
+
+pub use std::sync::{LockResult, PoisonError, TryLockError, TryLockResult};
+
+fn maybe_yield() {
+    if let Some(ctx) = sched::current() {
+        ctx.sched.yield_now(ctx.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+/// Instrumented `std::sync::Mutex`. Zero-cost delegation outside models.
+pub struct Mutex<T> {
+    inner: ssync::Mutex<T>,
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Mutex {
+            inner: ssync::Mutex::new(t),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const _ as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match sched::current() {
+            None => wrap_lock(self, self.inner.lock()),
+            Some(ctx) => {
+                // The acquisition attempt itself is a yield point.
+                ctx.sched.yield_now(ctx.id);
+                loop {
+                    match self.inner.try_lock() {
+                        Ok(g) => return Ok(MutexGuard::new(self, g)),
+                        Err(TryLockError::Poisoned(pe)) => {
+                            return Err(PoisonError::new(MutexGuard::new(self, pe.into_inner())))
+                        }
+                        Err(TryLockError::WouldBlock) => {
+                            // Park until the owner releases; then re-contend.
+                            ctx.sched.block_on_lock(ctx.id, self.addr(), false);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+        maybe_yield();
+        match self.inner.try_lock() {
+            Ok(g) => Ok(MutexGuard::new(self, g)),
+            Err(TryLockError::Poisoned(pe)) => Err(TryLockError::Poisoned(PoisonError::new(
+                MutexGuard::new(self, pe.into_inner()),
+            ))),
+            Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.inner.is_poisoned()
+    }
+}
+
+fn wrap_lock<'a, T>(
+    lock: &'a Mutex<T>,
+    r: LockResult<ssync::MutexGuard<'a, T>>,
+) -> LockResult<MutexGuard<'a, T>> {
+    match r {
+        Ok(g) => Ok(MutexGuard::new(lock, g)),
+        Err(pe) => Err(PoisonError::new(MutexGuard::new(lock, pe.into_inner()))),
+    }
+}
+
+/// Guard for [`Mutex`]; reports the release to the scheduler on drop.
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<ssync::MutexGuard<'a, T>>,
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    fn new(lock: &'a Mutex<T>, inner: ssync::MutexGuard<'a, T>) -> Self {
+        MutexGuard {
+            lock,
+            inner: Some(inner),
+        }
+    }
+
+    /// Dismantle without running the release logic (the caller takes over
+    /// responsibility for the release notification).
+    fn into_parts(mut self) -> (&'a Mutex<T>, ssync::MutexGuard<'a, T>) {
+        let inner = self.inner.take().expect("guard already dismantled");
+        let lock = self.lock;
+        std::mem::forget(self);
+        (lock, inner)
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard dismantled")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard dismantled")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the OS lock first, then tell the scheduler so parked
+        // waiters become runnable only once try_lock can actually succeed.
+        drop(self.inner.take());
+        if let Some(ctx) = sched::current() {
+            ctx.sched.on_release(self.lock.addr());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+/// Result of [`Condvar::wait_timeout`]. `std`'s type has no public
+/// constructor, so the instrumented API defines its own; call sites only
+/// ever destructure the tuple and/or call [`WaitTimeoutResult::timed_out`],
+/// which keeps the two interchangeable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaitTimeoutResult {
+    timed_out: bool,
+}
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+}
+
+/// Instrumented `std::sync::Condvar`.
+///
+/// Inside a model, `notify_one` picks the woken waiter via a scheduler
+/// decision (std promises no ordering), and waits can additionally wake
+/// spuriously when the model runs with spurious wakeups enabled.
+pub struct Condvar {
+    inner: ssync::Condvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Condvar {
+            inner: ssync::Condvar::new(),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const _ as usize
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match sched::current() {
+            None => {
+                let (lock, inner) = guard.into_parts();
+                match self.inner.wait(inner) {
+                    Ok(g) => Ok(MutexGuard::new(lock, g)),
+                    Err(pe) => Err(PoisonError::new(MutexGuard::new(lock, pe.into_inner()))),
+                }
+            }
+            Some(ctx) => {
+                // Entering wait is a yield point *while still holding the
+                // mutex*: POSIX only makes the release+park step atomic, so
+                // a lockless notify may land in the gap between the caller's
+                // predicate check and the park — the exact lost-wakeup
+                // window the gate protocol's lock round-trip exists to
+                // close. Without this yield that window would be
+                // unexplorable and the checker would miss the bug.
+                ctx.sched.yield_now(ctx.id);
+                let (lock, inner) = guard.into_parts();
+                // Release + park, atomic from the model's point of view
+                // (no yield in between), matching POSIX wait semantics.
+                drop(inner);
+                ctx.sched.on_release(lock.addr());
+                ctx.sched.block_on_cond(ctx.id, self.addr());
+                // Woken (notify or spurious): re-acquire through the model
+                // lock protocol, exploring contention with other threads.
+                lock.lock()
+            }
+        }
+    }
+
+    pub fn wait_while<'a, T, F>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        mut condition: F,
+    ) -> LockResult<MutexGuard<'a, T>>
+    where
+        F: FnMut(&mut T) -> bool,
+    {
+        while condition(&mut guard) {
+            guard = match self.wait(guard) {
+                Ok(g) => g,
+                Err(pe) => return Err(pe),
+            };
+        }
+        Ok(guard)
+    }
+
+    /// Inside a model, the timeout is modelled as firing immediately after
+    /// an interleaving opportunity: the mutex is released, other threads may
+    /// run, then the wait returns with `timed_out() == true`. A model must
+    /// therefore not rely on `wait_timeout` for a notification to make
+    /// progress — which is exactly the discipline timeouts are for.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match sched::current() {
+            None => {
+                let (lock, inner) = guard.into_parts();
+                match self.inner.wait_timeout(inner, dur) {
+                    Ok((g, r)) => Ok((
+                        MutexGuard::new(lock, g),
+                        WaitTimeoutResult {
+                            timed_out: r.timed_out(),
+                        },
+                    )),
+                    Err(pe) => {
+                        let (g, r) = pe.into_inner();
+                        Err(PoisonError::new((
+                            MutexGuard::new(lock, g),
+                            WaitTimeoutResult {
+                                timed_out: r.timed_out(),
+                            },
+                        )))
+                    }
+                }
+            }
+            Some(ctx) => {
+                // Same wait-entry yield point as `wait` (see above).
+                ctx.sched.yield_now(ctx.id);
+                let (lock, inner) = guard.into_parts();
+                drop(inner);
+                ctx.sched.on_release(lock.addr());
+                ctx.sched.yield_now(ctx.id);
+                match lock.lock() {
+                    Ok(g) => Ok((g, WaitTimeoutResult { timed_out: true })),
+                    Err(pe) => Err(PoisonError::new((
+                        pe.into_inner(),
+                        WaitTimeoutResult { timed_out: true },
+                    ))),
+                }
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match sched::current() {
+            None => self.inner.notify_one(),
+            Some(ctx) => {
+                // The notify itself is an ordering event worth exploring.
+                ctx.sched.yield_now(ctx.id);
+                ctx.sched.notify_one(self.addr());
+            }
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match sched::current() {
+            None => self.inner.notify_all(),
+            Some(ctx) => {
+                ctx.sched.yield_now(ctx.id);
+                ctx.sched.notify_all(self.addr());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RwLock
+// ---------------------------------------------------------------------------
+
+/// Instrumented `std::sync::RwLock`.
+pub struct RwLock<T> {
+    inner: ssync::RwLock<T>,
+}
+
+impl<T: Default> Default for RwLock<T> {
+    fn default() -> Self {
+        RwLock::new(T::default())
+    }
+}
+
+impl<T> RwLock<T> {
+    pub const fn new(t: T) -> Self {
+        RwLock {
+            inner: ssync::RwLock::new(t),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const _ as usize
+    }
+
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        match sched::current() {
+            None => match self.inner.read() {
+                Ok(g) => Ok(RwLockReadGuard::new(self, g)),
+                Err(pe) => Err(PoisonError::new(RwLockReadGuard::new(
+                    self,
+                    pe.into_inner(),
+                ))),
+            },
+            Some(ctx) => {
+                ctx.sched.yield_now(ctx.id);
+                loop {
+                    match self.inner.try_read() {
+                        Ok(g) => return Ok(RwLockReadGuard::new(self, g)),
+                        Err(TryLockError::Poisoned(pe)) => {
+                            return Err(PoisonError::new(RwLockReadGuard::new(
+                                self,
+                                pe.into_inner(),
+                            )))
+                        }
+                        Err(TryLockError::WouldBlock) => {
+                            ctx.sched.block_on_lock(ctx.id, self.addr(), true);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        match sched::current() {
+            None => match self.inner.write() {
+                Ok(g) => Ok(RwLockWriteGuard::new(self, g)),
+                Err(pe) => Err(PoisonError::new(RwLockWriteGuard::new(
+                    self,
+                    pe.into_inner(),
+                ))),
+            },
+            Some(ctx) => {
+                ctx.sched.yield_now(ctx.id);
+                loop {
+                    match self.inner.try_write() {
+                        Ok(g) => return Ok(RwLockWriteGuard::new(self, g)),
+                        Err(TryLockError::Poisoned(pe)) => {
+                            return Err(PoisonError::new(RwLockWriteGuard::new(
+                                self,
+                                pe.into_inner(),
+                            )))
+                        }
+                        Err(TryLockError::WouldBlock) => {
+                            ctx.sched.block_on_lock(ctx.id, self.addr(), true);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.inner.is_poisoned()
+    }
+}
+
+/// Read guard for [`RwLock`]; reports release on drop.
+pub struct RwLockReadGuard<'a, T> {
+    lock: &'a RwLock<T>,
+    inner: Option<ssync::RwLockReadGuard<'a, T>>,
+}
+
+impl<'a, T> RwLockReadGuard<'a, T> {
+    fn new(lock: &'a RwLock<T>, inner: ssync::RwLockReadGuard<'a, T>) -> Self {
+        RwLockReadGuard {
+            lock,
+            inner: Some(inner),
+        }
+    }
+}
+
+impl<T> std::ops::Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard dismantled")
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if let Some(ctx) = sched::current() {
+            ctx.sched.on_release(self.lock.addr());
+        }
+    }
+}
+
+/// Write guard for [`RwLock`]; reports release on drop.
+pub struct RwLockWriteGuard<'a, T> {
+    lock: &'a RwLock<T>,
+    inner: Option<ssync::RwLockWriteGuard<'a, T>>,
+}
+
+impl<'a, T> RwLockWriteGuard<'a, T> {
+    fn new(lock: &'a RwLock<T>, inner: ssync::RwLockWriteGuard<'a, T>) -> Self {
+        RwLockWriteGuard {
+            lock,
+            inner: Some(inner),
+        }
+    }
+}
+
+impl<T> std::ops::Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard dismantled")
+    }
+}
+
+impl<T> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard dismantled")
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if let Some(ctx) = sched::current() {
+            ctx.sched.on_release(self.lock.addr());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+/// Instrumented atomics: every access is a yield point inside a model.
+///
+/// The wrapped std atomic executes with the caller's ordering, but because
+/// model execution is serialised, every explored run is sequentially
+/// consistent — this checker explores interleavings, not weak-memory
+/// reorderings (see the memory-model note in `verify::sched`).
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    macro_rules! instrumented_atomic {
+        ($name:ident, $std:ty, $val:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $val) -> Self {
+                    $name {
+                        inner: <$std>::new(v),
+                    }
+                }
+
+                pub fn load(&self, order: Ordering) -> $val {
+                    super::maybe_yield();
+                    self.inner.load(order)
+                }
+
+                pub fn store(&self, val: $val, order: Ordering) {
+                    super::maybe_yield();
+                    self.inner.store(val, order)
+                }
+
+                pub fn swap(&self, val: $val, order: Ordering) -> $val {
+                    super::maybe_yield();
+                    self.inner.swap(val, order)
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $val,
+                    new: $val,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$val, $val> {
+                    super::maybe_yield();
+                    self.inner.compare_exchange(current, new, success, failure)
+                }
+
+                pub fn into_inner(self) -> $val {
+                    self.inner.into_inner()
+                }
+            }
+        };
+    }
+
+    macro_rules! instrumented_atomic_int {
+        ($name:ident, $std:ty, $val:ty) => {
+            instrumented_atomic!($name, $std, $val);
+
+            impl $name {
+                pub fn fetch_add(&self, val: $val, order: Ordering) -> $val {
+                    super::maybe_yield();
+                    self.inner.fetch_add(val, order)
+                }
+
+                pub fn fetch_sub(&self, val: $val, order: Ordering) -> $val {
+                    super::maybe_yield();
+                    self.inner.fetch_sub(val, order)
+                }
+
+                pub fn fetch_max(&self, val: $val, order: Ordering) -> $val {
+                    super::maybe_yield();
+                    self.inner.fetch_max(val, order)
+                }
+
+                pub fn fetch_min(&self, val: $val, order: Ordering) -> $val {
+                    super::maybe_yield();
+                    self.inner.fetch_min(val, order)
+                }
+            }
+        };
+    }
+
+    instrumented_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    instrumented_atomic_int!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    instrumented_atomic_int!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    instrumented_atomic_int!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Outside a model the wrappers must behave exactly like std, including
+    // poison propagation.
+    #[test]
+    fn delegates_outside_models() {
+        let m = Mutex::new(5u32);
+        {
+            let mut g = m.lock().unwrap();
+            *g += 1;
+        }
+        assert_eq!(*m.lock().unwrap(), 6);
+        assert!(m.try_lock().is_ok());
+
+        let rw = RwLock::new(vec![1, 2]);
+        assert_eq!(rw.read().unwrap().len(), 2);
+        rw.write().unwrap().push(3);
+        assert_eq!(rw.read().unwrap().len(), 3);
+
+        let a = atomic::AtomicU64::new(1);
+        assert_eq!(a.fetch_add(2, atomic::Ordering::SeqCst), 1);
+        assert_eq!(a.load(atomic::Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn poison_propagates_like_std() {
+        let m = std::sync::Arc::new(Mutex::new(0u8));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let v = *m.lock().unwrap_or_else(PoisonError::into_inner);
+        assert_eq!(v, 0);
+    }
+
+    #[test]
+    fn wait_timeout_times_out_outside_models() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = m.lock().unwrap();
+        let (_g, r) = cv
+            .wait_timeout(g, std::time::Duration::from_millis(1))
+            .unwrap();
+        assert!(r.timed_out());
+    }
+}

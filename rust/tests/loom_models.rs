@@ -1,0 +1,146 @@
+//! Exhaustive model checks of the REAL concurrency product types, run
+//! under `RUSTFLAGS="--cfg loom"` (the `loom-models` CI leg):
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test -p emberq --test loom_models --release
+//! ```
+//!
+//! Under that cfg, [`emberq::util::sync`] swaps its std re-exports for the
+//! instrumented primitives in [`emberq::verify`], so `WakeGate`,
+//! `ClaimFlag`, and `TransitionSignal` — the exact types the sharded
+//! engine and the tiered store run on in production — execute here under
+//! every interleaving the checker can reach. The distilled protocol
+//! models (which run in plain `cargo test` too) live in
+//! [`emberq::verify::protocol`]; this binary re-runs them alongside the
+//! real-type models so one CI job covers both layers.
+//!
+//! Ordinary builds compile this file to an empty test binary (the
+//! `#![cfg(loom)]` below), so tier-1 `cargo test` is unaffected.
+
+#![allow(unexpected_cfgs)]
+#![cfg(loom)]
+
+use std::sync::Arc;
+
+use emberq::shard::{ClaimFlag, TransitionSignal, WakeGate};
+use emberq::util::sync::atomic::{AtomicUsize, Ordering};
+use emberq::verify::loom::thread;
+use emberq::verify::sched::Builder;
+
+// ---- the real WakeGate under the checker -------------------------------
+
+/// A producer publishes work (counter increment) and wakes; a worker
+/// parks until it sees the work. With spurious wakeups disabled, the only
+/// way the worker ever unparks is the producer's wake — so this passing
+/// proves the gate's lock round-trip makes lost wakeups impossible for
+/// the exact type `shard::engine` parks on.
+#[test]
+fn real_wake_gate_never_loses_a_wake() {
+    Builder::new().spurious(false).max_schedules(1_000_000).check(|| {
+        let gate = Arc::new(WakeGate::new());
+        let work = Arc::new(AtomicUsize::new(0));
+        let (g2, w2) = (Arc::clone(&gate), Arc::clone(&work));
+        let worker = thread::spawn(move || {
+            assert!(
+                g2.park_until(|| w2.load(Ordering::SeqCst) > 0),
+                "gate was never shut, park_until must report work"
+            );
+            assert!(w2.load(Ordering::SeqCst) > 0);
+        });
+        work.store(1, Ordering::SeqCst);
+        gate.wake();
+        worker.join();
+    });
+}
+
+/// Shutdown must unpark a worker that has no work, under every
+/// interleaving and with spurious wakeups explored (the predicate loop
+/// has to absorb them without returning early).
+#[test]
+fn real_wake_gate_shutdown_always_unparks() {
+    Builder::new().max_schedules(1_000_000).check(|| {
+        let gate = Arc::new(WakeGate::new());
+        let g2 = Arc::clone(&gate);
+        let worker = thread::spawn(move || {
+            assert!(!g2.park_until(|| false), "only shutdown can unpark this worker");
+            assert!(g2.is_shut());
+        });
+        gate.shutdown();
+        worker.join();
+    });
+}
+
+// ---- the real ClaimFlag + TransitionSignal under the checker -----------
+
+/// Two racing claimants: exactly one may win, and after the winner
+/// releases, a fresh claim must succeed — the CAS protocol the store's
+/// promote/demote paths gate on.
+#[test]
+fn real_claim_flag_is_exclusive_under_all_interleavings() {
+    Builder::new().max_schedules(1_000_000).check(|| {
+        let claim = Arc::new(ClaimFlag::new());
+        let wins = Arc::new(AtomicUsize::new(0));
+        let (c2, w2) = (Arc::clone(&claim), Arc::clone(&wins));
+        let racer = thread::spawn(move || {
+            if c2.claim() {
+                w2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        if claim.claim() {
+            wins.fetch_add(1, Ordering::SeqCst);
+        }
+        racer.join();
+        assert_eq!(wins.load(Ordering::SeqCst), 1, "exactly one claimant may win");
+    });
+}
+
+/// The store's latecomer protocol on the real types: a claimant holds the
+/// claim, does its "transition", releases, then notifies; a latecomer
+/// waits for the release via `wait_until`. With spurious wakeups off,
+/// this passing proves the signal's lock round-trip means the completion
+/// broadcast can never land in the latecomer's check-then-park gap and
+/// be lost — the store would otherwise hang exactly like PR 5's
+/// `wait_demotes` would have.
+#[test]
+fn real_transition_signal_never_loses_completion() {
+    Builder::new().spurious(false).max_schedules(1_000_000).check(|| {
+        let claim = Arc::new(ClaimFlag::new());
+        let sig = Arc::new(TransitionSignal::new());
+        let done = Arc::new(AtomicUsize::new(0));
+        assert!(claim.claim());
+        let (c2, s2, d2) = (Arc::clone(&claim), Arc::clone(&sig), Arc::clone(&done));
+        let latecomer = thread::spawn(move || {
+            s2.wait_until(|| !c2.is_claimed());
+            assert_eq!(d2.load(Ordering::SeqCst), 1, "release happens-after the transition");
+        });
+        // The "transition": publish the result, release the claim, then
+        // broadcast — the order the store's finish_promote/finish_demote
+        // are required to follow.
+        done.store(1, Ordering::SeqCst);
+        claim.release();
+        sig.notify();
+        latecomer.join();
+    });
+}
+
+// ---- the distilled protocol models (same binary, one CI job) -----------
+
+#[test]
+fn protocol_wakeup_gate() {
+    emberq::verify::protocol::wakeup_gate::check_wake_is_not_lost();
+    emberq::verify::protocol::wakeup_gate::check_broken_wake_is_caught();
+    emberq::verify::protocol::wakeup_gate::check_shutdown_unparks_and_survives_spurious_wakeups();
+}
+
+#[test]
+fn protocol_store_transition() {
+    emberq::verify::protocol::store_transition::check_promote_reads_spill_once();
+    emberq::verify::protocol::store_transition::check_prefetch_stages_single_read();
+    emberq::verify::protocol::store_transition::check_budget_settles_without_overshoot();
+}
+
+#[test]
+fn protocol_placement_swap() {
+    emberq::verify::protocol::placement_swap::check_swap_never_tears();
+    emberq::verify::protocol::placement_swap::check_writers_serialise();
+}

@@ -1,0 +1,437 @@
+//! The concurrency-invariant linter behind `cargo xtask lint`.
+//!
+//! Six rules, each guarding an invariant the compiler cannot express and
+//! CI's clippy pass cannot see (they are *placement* rules — what may
+//! appear in which module — not syntax rules):
+//!
+//! | rule            | invariant                                                    |
+//! |-----------------|--------------------------------------------------------------|
+//! | `unsafe_code`   | `unsafe` lives only in `sls/kernel.rs`                       |
+//! | `raw_lock`      | `.lock().unwrap()` & friends only in `util/sync.rs`/`verify/`|
+//! | `safety_comment`| every `unsafe {` block carries a `// SAFETY:` rationale      |
+//! | `wall_clock`    | no `Instant::now`/`SystemTime` inside `chaos/` (determinism) |
+//! | `magic_docs`    | on-disk magics in code ⇔ the formats documented in docs      |
+//! | `sync_import`   | `shard/`+`coordinator/` use `util::sync`, never raw std sync |
+//!
+//! A site that must break a rule carries a waiver comment —
+//! `lint:allow(<rule>)` on the same line or within the two lines above —
+//! which this linter honors and `git grep lint:allow` can audit.
+//!
+//! Rules run on scanner output ([`crate::scan`]), so comments and string
+//! literals cannot trigger code rules. The engine takes `(path, source)`
+//! pairs rather than touching the filesystem, which is what makes the
+//! seeded-violation tests below (and `cargo xtask lint --self-test`)
+//! possible without writing temp files.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::scan::{has_token, scan, Scanned};
+
+#[derive(Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// The two files whose on-disk magic literals rule 5 tracks, and the doc
+/// that must describe them.
+const MAGIC_SOURCES: [&str; 2] = ["rust/src/table/serial.rs", "rust/src/shard/store.rs"];
+const MAGIC_DOC: &str = "docs/formats.md";
+
+/// Lint a whole tree given as `(repo-relative path, contents)` pairs.
+/// `docs/formats.md` must be among them for the `magic_docs` rule.
+pub fn lint_files(files: &[(String, String)]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut code_magics: Vec<(String, usize, String)> = Vec::new();
+    for (path, src) in files {
+        if !path.ends_with(".rs") {
+            continue;
+        }
+        let scanned = scan(src);
+        lint_one(path, &scanned, &mut out);
+        if MAGIC_SOURCES.contains(&path.as_str()) {
+            for (line, text) in &scanned.strings {
+                for m in extract_magics(text) {
+                    code_magics.push((path.clone(), *line, m));
+                }
+            }
+        }
+    }
+    if let Some((_, doc)) = files.iter().find(|(p, _)| p == MAGIC_DOC) {
+        check_magics(&code_magics, doc, &mut out);
+    } else if !code_magics.is_empty() {
+        out.push(Violation {
+            file: MAGIC_DOC.into(),
+            line: 1,
+            rule: "magic_docs",
+            msg: "docs/formats.md is missing but the code defines format magics".into(),
+        });
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    out
+}
+
+fn lint_one(path: &str, s: &Scanned, out: &mut Vec<Violation>) {
+    let in_dir = |dir: &str| path.starts_with(dir);
+    let kernel = path == "rust/src/sls/kernel.rs";
+    let sync_home = path == "rust/src/util/sync.rs" || in_dir("rust/src/verify/");
+    let sync_banned = in_dir("rust/src/shard/") || in_dir("rust/src/coordinator/");
+    let chaos = in_dir("rust/src/chaos/");
+
+    // Multi-line `use std::sync::{...}` statements: accumulate code from
+    // the opening line until the terminating `;` so rule 6 sees the full
+    // import list.
+    let mut pending_use: Option<(usize, String)> = None;
+
+    for (idx, line) in s.lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = line.code.as_str();
+        let mut report = |rule: &'static str, msg: String| {
+            if !waived(s, idx, rule) {
+                out.push(Violation { file: path.into(), line: lineno, rule, msg });
+            }
+        };
+
+        // Rule 1: `unsafe` stays in the kernel.
+        if !kernel && has_token(code, "unsafe") {
+            report(
+                "unsafe_code",
+                "`unsafe` is confined to rust/src/sls/kernel.rs; move the code or \
+                 waive with `lint:allow(unsafe_code)` and a justification"
+                    .into(),
+            );
+        }
+
+        let squashed: String = code.chars().filter(|c| !c.is_whitespace()).collect();
+
+        // Rule 2: raw poison-unwrapping lock acquisition.
+        if !sync_home {
+            for pat in [".lock().unwrap()", ".read().unwrap()", ".write().unwrap()"] {
+                if squashed.contains(pat) {
+                    report(
+                        "raw_lock",
+                        format!(
+                            "raw `{pat}` — use util::sync::{{lock,read,write}}_ignore_poison \
+                             (counted recovery) or waive with `lint:allow(raw_lock)` if poison \
+                             propagation is the point"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+
+        // Rule 3: every unsafe *block* in the kernel carries its rationale
+        // (`unsafe fn` declarations document their contract in rustdoc —
+        // the block at each call site is where the proof belongs).
+        if kernel && squashed.contains("unsafe{") && !safety_documented(s, idx) {
+            report(
+                "safety_comment",
+                "`unsafe {` without a `// SAFETY:` comment in the block above it".into(),
+            );
+        }
+
+        // Rule 4: chaos must be deterministic — no wall-clock reads.
+        if chaos {
+            for tok in ["Instant", "SystemTime"] {
+                if has_token(code, tok) {
+                    report(
+                        "wall_clock",
+                        format!(
+                            "`{tok}` inside chaos/ breaks run-to-run determinism; use seeded \
+                             virtual time or a bounded retry counter"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+
+        // Rule 6: shard/ and coordinator/ go through util::sync.
+        if sync_banned {
+            let stmt = if let Some((start, mut buf)) = pending_use.take() {
+                buf.push_str(code);
+                if code.contains(';') {
+                    Some((start, buf))
+                } else {
+                    pending_use = Some((start, buf));
+                    None
+                }
+            } else if code.contains("std::sync") {
+                if code.contains(';') || !code.contains("std::sync::{") {
+                    Some((lineno, code.to_string()))
+                } else {
+                    pending_use = Some((lineno, code.to_string()));
+                    None
+                }
+            } else {
+                None
+            };
+            if let Some((start, stmt)) = stmt {
+                for banned in ["Mutex", "Condvar", "RwLock", "atomic"] {
+                    if stmt.contains(&format!("std::sync::{banned}"))
+                        || (stmt.contains("std::sync::{") && has_token(&stmt, banned))
+                    {
+                        if !waived(s, start - 1, "sync_import") {
+                            out.push(Violation {
+                                file: path.into(),
+                                line: start,
+                                rule: "sync_import",
+                                msg: format!(
+                                    "`std::sync::…{banned}` in shard//coordinator/ — import from \
+                                     crate::util::sync so the `--cfg loom` leg can instrument it"
+                                ),
+                            });
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Is a `lint:allow(<rule>)` waiver present on this line or within the
+/// two lines above it (comment text only — a waiver in a string does not
+/// count)?
+fn waived(s: &Scanned, idx: usize, rule: &str) -> bool {
+    let needle = format!("lint:allow({rule})");
+    (idx.saturating_sub(2)..=idx).any(|i| s.lines[i].comment.contains(&needle))
+}
+
+/// Is there a `SAFETY:` comment on this line or in the contiguous
+/// comment block immediately above it?
+fn safety_documented(s: &Scanned, idx: usize) -> bool {
+    if s.lines[idx].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let l = &s.lines[i];
+        if !l.comment.is_empty() && l.code.trim().is_empty() {
+            if l.comment.contains("SAFETY:") {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// `EMBQ[A-Z0-9]{4}` occurrences in `text`.
+fn extract_magics(text: &str) -> Vec<String> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 8 <= b.len() {
+        if &b[i..i + 4] == b"EMBQ"
+            && b[i + 4..i + 8].iter().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit())
+        {
+            out.push(text[i..i + 8].to_string());
+            i += 8;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Rule 5, bidirectional: the set of magic literals the code writes must
+/// equal the set of formats `docs/formats.md` documents as headings
+/// (`# …EMBQxxxx…`). Mentions of *future* magics in prose are fine; a
+/// heading is a documented format.
+fn check_magics(code_magics: &[(String, usize, String)], doc: &str, out: &mut Vec<Violation>) {
+    let mut documented: Vec<String> = Vec::new();
+    for l in doc.lines() {
+        if l.starts_with("## ") {
+            documented.extend(extract_magics(l));
+        }
+    }
+    for (file, line, m) in code_magics {
+        if !documented.contains(m) {
+            out.push(Violation {
+                file: file.clone(),
+                line: *line,
+                rule: "magic_docs",
+                msg: format!(
+                    "magic `{m}` is written by the code but has no `## {m}` section in \
+                     docs/formats.md — document the format (readers reject unknown magics)"
+                ),
+            });
+        }
+    }
+    let written: Vec<&String> = code_magics.iter().map(|(_, _, m)| m).collect();
+    for m in &documented {
+        if !written.contains(&m) {
+            out.push(Violation {
+                file: MAGIC_DOC.into(),
+                line: 1,
+                rule: "magic_docs",
+                msg: format!(
+                    "docs/formats.md documents `{m}` as a format but no magic literal in \
+                     {MAGIC_SOURCES:?} writes it — stale docs or a renamed magic"
+                ),
+            });
+        }
+    }
+}
+
+/// Collect the repo's lintable files from disk: `rust/src`, `rust/tests`,
+/// `rust/benches` (the xtask crate itself is excluded — its source is
+/// made of the patterns it hunts), plus `docs/formats.md`.
+pub fn collect_repo(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let mut files = Vec::new();
+    for dir in ["rust/src", "rust/tests", "rust/benches"] {
+        collect_rs(root, &root.join(dir), &mut files)?;
+    }
+    let doc = root.join(MAGIC_DOC);
+    if doc.exists() {
+        files.push((MAGIC_DOC.to_string(), std::fs::read_to_string(doc)?));
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(files)
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<(String, String)>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path: PathBuf = entry?.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .expect("collect_rs walks under root")
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, std::fs::read_to_string(&path)?));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(path: &str, src: &str) -> Vec<Violation> {
+        lint_files(&[(path.to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn unsafe_outside_kernel_is_flagged_and_waivable() {
+        let v = one("rust/src/table/mod.rs", "fn f() { unsafe { g() } }\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unsafe_code");
+        let v = one(
+            "rust/src/table/mod.rs",
+            "// lint:allow(unsafe_code) — justified\nfn f() { unsafe { g() } }\n",
+        );
+        assert!(v.is_empty(), "{v:?}");
+        // In the kernel (with a SAFETY comment) it is legal.
+        let v = one("rust/src/sls/kernel.rs", "// SAFETY: fine\nunsafe { g() }\n");
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn unsafe_in_comments_and_strings_is_ignored() {
+        let v = one(
+            "rust/src/table/mod.rs",
+            "// unsafe in a comment\nlet s = \"unsafe in a string\";\n",
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn raw_lock_is_flagged_outside_sync_home() {
+        let v = one("rust/src/shard/engine.rs", "let g = m.lock().unwrap();\n");
+        assert!(v.iter().any(|v| v.rule == "raw_lock"), "{v:?}");
+        // Spacing does not dodge the rule.
+        let v = one("rust/src/model/mod.rs", "let g = m.lock() . unwrap();\n");
+        assert!(v.iter().any(|v| v.rule == "raw_lock"), "{v:?}");
+        // util/sync.rs and verify/ are the implementation homes.
+        assert!(one("rust/src/util/sync.rs", "let g = m.lock().unwrap();\n").is_empty());
+        assert!(one("rust/src/verify/sched.rs", "let g = m.lock().unwrap();\n").is_empty());
+        // io::Read-style calls with arguments do not match.
+        assert!(one("rust/src/table/serial.rs", "f.read(&mut buf).unwrap();\n").is_empty());
+    }
+
+    #[test]
+    fn missing_safety_comment_is_flagged_in_kernel() {
+        let v = one("rust/src/sls/kernel.rs", "fn f() {\n    unsafe { g() }\n}\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "safety_comment");
+        // A contiguous comment block above counts, even several lines.
+        let ok = "fn f() {\n    // SAFETY: bounds were checked by the caller\n    // and the pointer is live.\n    unsafe { g() }\n}\n";
+        assert!(one("rust/src/sls/kernel.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_in_chaos_is_flagged() {
+        let v = one("rust/src/chaos/scenario.rs", "let t = Instant::now();\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "wall_clock");
+        // Outside chaos/, wall clocks are fine (metrics need them).
+        assert!(one("rust/src/coordinator/metrics.rs", "let t = Instant::now();\n").is_empty());
+    }
+
+    #[test]
+    fn sync_imports_are_banned_in_shard_and_coordinator() {
+        let v = one("rust/src/shard/engine.rs", "use std::sync::{Arc, Mutex};\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "sync_import");
+        // Multi-line use statements are seen whole.
+        let v = one(
+            "rust/src/coordinator/server.rs",
+            "use std::sync::{\n    Arc,\n    Condvar,\n};\n",
+        );
+        assert_eq!(v.len(), 1, "{v:?}");
+        // Arc / mpsc / OnceLock stay legal.
+        assert!(one("rust/src/shard/store.rs", "use std::sync::{Arc, Weak};\n").is_empty());
+        assert!(one("rust/src/shard/engine.rs", "use std::sync::mpsc::channel;\n").is_empty());
+        assert!(one("rust/src/shard/store.rs", "use std::sync::OnceLock;\n").is_empty());
+        // Fully-qualified paths are caught too.
+        let v = one("rust/src/coordinator/tcp.rs", "let m = std::sync::Mutex::new(0);\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        // Elsewhere std sync is allowed (chaos deliberately keeps it).
+        assert!(one("rust/src/chaos/oracle.rs", "use std::sync::Mutex;\n").is_empty());
+    }
+
+    #[test]
+    fn magic_docs_is_bidirectional() {
+        let code = ("rust/src/table/serial.rs".to_string(),
+                    "const MAGIC: &[u8; 8] = b\"EMBQTBL1\";\n".to_string());
+        let good_doc = (MAGIC_DOC.to_string(),
+                        "# formats\n## `EMBQTBL1` — container\n".to_string());
+        assert!(lint_files(&[code.clone(), good_doc]).is_empty());
+        // Undocumented code magic.
+        let stale_doc = (MAGIC_DOC.to_string(),
+                         "# formats\n## `EMBQTBL2` — container\n".to_string());
+        let v = lint_files(&[code, stale_doc]);
+        assert_eq!(v.len(), 2, "{v:?}"); // code magic undocumented + doc magic unwritten
+        assert!(v.iter().all(|v| v.rule == "magic_docs"));
+        // Prose mentions of future magics are not headings: no violation.
+        let code = ("rust/src/shard/store.rs".to_string(),
+                    "const M: &[u8; 8] = b\"EMBQSPL1\";\n".to_string());
+        let doc = (MAGIC_DOC.to_string(),
+                   "# formats\nfuture: EMBQSPL2 etc.\n## `EMBQSPL1` — spill\n".to_string());
+        assert!(lint_files(&[code, doc]).is_empty());
+    }
+
+    #[test]
+    fn waiver_reaches_only_two_lines_down() {
+        let src = "// lint:allow(wall_clock)\n\n\nlet t = Instant::now();\n";
+        let v = one("rust/src/chaos/traffic.rs", src);
+        assert_eq!(v.len(), 1, "a waiver three lines up must not apply: {v:?}");
+    }
+}

@@ -1,0 +1,96 @@
+//! `cargo xtask` — repo automation (the alias lives in
+//! `.cargo/config.toml`).
+//!
+//! Commands:
+//!
+//! * `cargo xtask lint` — run the concurrency-invariant linter
+//!   ([`lint`]) over the tree; nonzero exit on any violation. CI runs
+//!   this as a blocking job.
+//! * `cargo xtask lint --self-test` — additionally lint a synthetic
+//!   file seeded with one violation of every rule and fail unless the
+//!   linter catches them all. This keeps CI honest: a lint job that
+//!   passes because the linter rotted to a no-op fails here instead.
+
+mod lint;
+mod scan;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(args.iter().any(|a| a == "--self-test")),
+        Some(other) => {
+            eprintln!("xtask: unknown command `{other}`\n\nusage: cargo xtask lint [--self-test]");
+            ExitCode::FAILURE
+        }
+        None => {
+            eprintln!("usage: cargo xtask lint [--self-test]");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// The repo root: xtask always lives at `<root>/rust/xtask`, so the
+/// compile-time manifest dir pins it regardless of the invocation cwd.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("rust/xtask sits two levels below the repo root")
+        .to_path_buf()
+}
+
+fn run_lint(self_test: bool) -> ExitCode {
+    let root = repo_root();
+    let files = match lint::collect_repo(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("xtask lint: cannot read the tree under {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    let violations = lint::lint_files(&files);
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    if self_test && !seeded_violations_are_caught(&files) {
+        return ExitCode::FAILURE;
+    }
+    if violations.is_empty() {
+        let rs = files.iter().filter(|(p, _)| p.ends_with(".rs")).count();
+        eprintln!("xtask lint: {rs} files clean{}", if self_test { " (self-test ok)" } else { "" });
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// Re-lint the real tree plus one synthetic file that violates every
+/// line rule, and assert each seeded violation is reported. Returns
+/// `false` (after explaining) if the linter has gone blind.
+fn seeded_violations_are_caught(files: &[(String, String)]) -> bool {
+    let seeded_path = "rust/src/shard/__xtask_seeded__.rs";
+    let seeded = "\
+        fn f() { unsafe { g() } }\n\
+        fn h(m: &std::sync::Mutex<u8>) { let _ = m.lock().unwrap(); }\n\
+        use std::sync::Mutex;\n";
+    let chaos_path = "rust/src/chaos/__xtask_seeded__.rs";
+    let chaos = "fn t() -> Instant { Instant::now() }\n";
+
+    let mut tree = files.to_vec();
+    tree.push((seeded_path.to_string(), seeded.to_string()));
+    tree.push((chaos_path.to_string(), chaos.to_string()));
+    let got = lint::lint_files(&tree);
+
+    let mut ok = true;
+    for rule in ["unsafe_code", "raw_lock", "sync_import", "wall_clock"] {
+        if !got.iter().any(|v| v.rule == rule && v.file.contains("__xtask_seeded__")) {
+            eprintln!("xtask lint --self-test: seeded `{rule}` violation was NOT caught");
+            ok = false;
+        }
+    }
+    ok
+}

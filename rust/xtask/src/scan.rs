@@ -1,0 +1,263 @@
+//! A line-oriented Rust source scanner: separates each line into its
+//! *code* text and its *comment* text, and collects string literals.
+//!
+//! This is deliberately not a parser. The lint rules in [`crate::lint`]
+//! are token- and substring-level invariants ("no `unsafe` token here",
+//! "this magic string must appear in that doc"), so all they need is to
+//! not be fooled by comments and string literals — which a hand-rolled
+//! state machine delivers without pulling `syn` (and its transitive
+//! tree) into an otherwise dependency-free offline workspace.
+//!
+//! Handled: line comments, nested block comments, string literals with
+//! escapes, raw strings (`r"…"`, `r#"…"#`, any hash depth), byte and
+//! byte-raw strings, char literals (including escapes) vs lifetimes.
+//! Known blind spot: none of this understands macros — a violation
+//! *generated* by a macro body is invisible. That is acceptable for a
+//! repo lint; CI's clippy pass sees post-expansion code.
+
+/// One source line, split.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// The line's text outside comments and string/char literals.
+    /// String literals are replaced by `""` so code shape survives.
+    pub code: String,
+    /// The line's comment text (line and block comments merged).
+    pub comment: String,
+}
+
+/// A scanned file: split lines plus every string literal with the
+/// 1-indexed line it starts on.
+#[derive(Debug, Default)]
+pub struct Scanned {
+    pub lines: Vec<Line>,
+    pub strings: Vec<(usize, String)>,
+}
+
+pub fn scan(src: &str) -> Scanned {
+    let bytes: Vec<char> = src.chars().collect();
+    let mut out = Scanned::default();
+    let mut line = Line::default();
+    let mut lineno = 1usize;
+
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(usize),
+        Str { raw_hashes: Option<usize>, start: usize, buf: String },
+        Char,
+    }
+    let mut st = St::Code;
+    let mut i = 0usize;
+
+    // Push the finished line and start the next.
+    macro_rules! newline {
+        () => {{
+            out.lines.push(std::mem::take(&mut line));
+            lineno += 1;
+        }};
+    }
+
+    while i < bytes.len() {
+        let c = bytes[i];
+        let next = bytes.get(i + 1).copied();
+        match &mut st {
+            St::Code => match c {
+                '\n' => {
+                    newline!();
+                    i += 1;
+                }
+                '/' if next == Some('/') => {
+                    st = St::LineComment;
+                    i += 2;
+                }
+                '/' if next == Some('*') => {
+                    st = St::BlockComment(1);
+                    i += 2;
+                }
+                '"' => {
+                    st = St::Str { raw_hashes: None, start: lineno, buf: String::new() };
+                    i += 1;
+                }
+                'r' | 'b' if !ends_in_ident(&line.code) => {
+                    // Possible raw/byte string prefix: r", r#", br", b".
+                    let mut j = i + 1;
+                    if c == 'b' && bytes.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0usize;
+                    while bytes.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    let is_raw = c == 'r' || (c == 'b' && bytes.get(i + 1) == Some(&'r'));
+                    if bytes.get(j) == Some(&'"') && (is_raw || hashes == 0) {
+                        let raw = if is_raw { Some(hashes) } else { None };
+                        st = St::Str { raw_hashes: raw, start: lineno, buf: String::new() };
+                        i = j + 1;
+                    } else {
+                        line.code.push(c);
+                        i += 1;
+                    }
+                }
+                '\'' => {
+                    // Char literal vs lifetime: a lifetime is '\'' + ident
+                    // NOT followed by a closing quote.
+                    let is_char = match next {
+                        Some('\\') => true,
+                        Some(_) => bytes.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    if is_char {
+                        st = St::Char;
+                        i += 1;
+                    } else {
+                        line.code.push('\'');
+                        i += 1;
+                    }
+                }
+                _ => {
+                    line.code.push(c);
+                    i += 1;
+                }
+            },
+            St::LineComment => {
+                if c == '\n' {
+                    st = St::Code;
+                    newline!();
+                } else {
+                    line.comment.push(c);
+                }
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if c == '\n' {
+                    newline!();
+                    i += 1;
+                } else if c == '/' && next == Some('*') {
+                    *depth += 1;
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    *depth -= 1;
+                    if *depth == 0 {
+                        st = St::Code;
+                    }
+                    i += 2;
+                } else {
+                    line.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str { raw_hashes, start, buf } => {
+                if c == '\n' {
+                    buf.push('\n');
+                    newline!();
+                    i += 1;
+                } else if let Some(h) = *raw_hashes {
+                    // Raw string: ends at '"' + h hashes, no escapes.
+                    if c == '"' && (i + 1..=i + h).all(|k| bytes.get(k) == Some(&'#')) {
+                        out.strings.push((*start, std::mem::take(buf)));
+                        line.code.push_str("\"\"");
+                        st = St::Code;
+                        i += 1 + h;
+                    } else {
+                        buf.push(c);
+                        i += 1;
+                    }
+                } else if c == '\\' {
+                    if let Some(n) = next {
+                        buf.push(n);
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    out.strings.push((*start, std::mem::take(buf)));
+                    line.code.push_str("\"\"");
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    buf.push(c);
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    line.code.push_str("' '");
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.lines.push(line);
+    out
+}
+
+/// Does `code` end mid-identifier? (Used to tell `r"…"` from `var"…"`
+/// never occurring — e.g. the `r` in `for` must not open a raw string.)
+fn ends_in_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Does `code` contain `tok` as a whole word (not an identifier slice)?
+pub fn has_token(code: &str, tok: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(tok) {
+        let at = from + pos;
+        let before = code[..at].chars().next_back();
+        let after = code[at + tok.len()..].chars().next();
+        let is_ident = |c: Option<char>| c.is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if !is_ident(before) && !is_ident(after) {
+            return true;
+        }
+        from = at + tok.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_stripped_from_code() {
+        let s = scan("let x = 1; // unsafe here\n/* unsafe\nblock */ let y;\n");
+        assert!(!s.lines[0].code.contains("unsafe"));
+        assert!(s.lines[0].comment.contains("unsafe"));
+        assert!(s.lines[1].comment.contains("unsafe"));
+        assert!(s.lines[2].code.contains("let y"));
+    }
+
+    #[test]
+    fn strings_are_collected_and_blanked() {
+        let s = scan(r##"let m = b"EMBQTBL1"; let r = r#"raw "stuff""# ; let p = "a\"b";"##);
+        let texts: Vec<&str> = s.strings.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts, vec!["EMBQTBL1", "raw \"stuff\"", "a\"b"]);
+        assert!(!s.lines[0].code.contains("EMBQTBL1"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_multiline_strings() {
+        let s = scan("/* a /* b */ still */ code\nlet s = \"two\nlines\";\n");
+        assert!(s.lines[0].code.contains("code"));
+        assert_eq!(s.strings.len(), 1);
+        assert_eq!(s.strings[0], (2, "two\nlines".to_string()));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let s = scan("fn f<'a>(x: &'a str) { let c = '\"'; let d = '\\n'; }\n");
+        // The quote inside the char literal must not open a string.
+        assert!(s.strings.is_empty());
+        assert!(s.lines[0].code.contains("'a"));
+    }
+
+    #[test]
+    fn token_matching_respects_word_boundaries() {
+        assert!(has_token("unsafe { }", "unsafe"));
+        assert!(!has_token("unsafe_op_in_unsafe_fn", "unsafe"));
+        assert!(has_token("x.unsafe()", "unsafe"));
+    }
+}
