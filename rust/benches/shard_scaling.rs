@@ -34,6 +34,15 @@
 //! state is bit-identical to requantizing the masters with the same
 //! update program applied.
 //!
+//! `--saturate` drives an open-loop arrival-rate curve at the live TCP
+//! fronts (reactor arms plus one blocking-front comparison arm): a
+//! closed-loop probe against an unarmed server estimates capacity, then
+//! each arm offers a fixed multiple of it on a precomputed schedule and
+//! reports admitted vs shed plus the p50/p99 of *admitted* requests.
+//! Past the knee the shed fraction must rise while admitted p99 stays
+//! bounded — graceful degradation under overload, asserted — and every
+//! served reply is checked bit-exactly against the engine's own answer.
+//!
 //! `--simd` measures the kernel-backend dispatch itself: the same
 //! pooled workload per row format (FP32, INT4, INT8, codebook) timed on
 //! the scalar oracle and on the best backend this CPU detects, p50/p99
@@ -50,6 +59,7 @@
 //! cargo bench --bench shard_scaling -- --tiny --spill-async  # sync vs async I/O
 //! cargo bench --bench shard_scaling -- --tiny --update-churn # live-update arms
 //! cargo bench --bench shard_scaling -- --tiny --simd    # scalar vs SIMD kernels
+//! cargo bench --bench shard_scaling -- --tiny --saturate # admission-control curve
 //! ```
 //!
 //! `--spill-async` isolates the async spill I/O engine: row-wise
@@ -61,7 +71,15 @@
 //! distribution) and promotion/prefetch/stream counters, bit-exactness
 //! asserted across arms.
 
-use emberq::coordinator::{LatencyHistogram, ShardStats, TableSet};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use emberq::coordinator::{
+    AdmissionSnapshot, EmbeddingServer, LatencyHistogram, ReactorFront, ServerConfig, ShardStats,
+    TableSet, TcpClient, TcpFront,
+};
 use emberq::data::trace::Request;
 use emberq::eval::{JsonWriter, TableWriter};
 use emberq::quant::AsymQuantizer;
@@ -78,6 +96,10 @@ const POOL: usize = 100;
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let tiny = std::env::args().any(|a| a == "--tiny");
+    if std::env::args().any(|a| a == "--saturate") {
+        run_saturate(tiny, quick);
+        return;
+    }
     if std::env::args().any(|a| a == "--simd") {
         run_simd(tiny, quick);
         return;
@@ -204,6 +226,291 @@ fn main() {
         tw.render()
     );
     println!("Paper-deployment check: >=2x at 4 shards over the single-threaded INT4 baseline.");
+}
+
+/// Saturation mode: the admission-control curve, measured open-loop at
+/// the live TCP fronts.
+///
+/// A closed-loop probe against an *unarmed* server (no inflight cap, no
+/// SLO — the probe that calibrates admission must not be shed by it)
+/// estimates capacity; the SLO and inflight cap for the measured server
+/// derive from that estimate, so the bench is self-scaling across
+/// machines. Each ladder arm then offers `multiple × capacity` on a
+/// precomputed arrival schedule: requests are *due* at fixed instants
+/// regardless of how the server is coping (open loop — the regime where
+/// an unprotected server's queue grows without bound), a late sender
+/// fires immediately, and admitted latency is measured from the
+/// scheduled arrival so queueing delay is charged honestly.
+///
+/// Sub-capacity arms should sail through; past the knee the shed
+/// fraction must rise (asserted) while the p99 of *admitted* requests
+/// stays bounded (asserted) — load is refused at the door, not absorbed
+/// into an ever-deeper queue. Every served reply is compared bit-exactly
+/// against the engine's direct answer, and client-observed replies must
+/// conserve: served + shed == offered.
+fn run_saturate(tiny: bool, quick: bool) {
+    let (rows, conns, budget, multiples): (usize, usize, usize, &[f64]) = if tiny {
+        (4_000, 8, 1_200, &[0.5, 3.0])
+    } else if quick {
+        (10_000, 12, 4_000, &[0.5, 1.5, 3.0])
+    } else {
+        (40_000, 16, 12_000, &[0.5, 1.0, 2.0, 4.0])
+    };
+    // Heavy enough per-lookup work (4 tables × POOL rows × d=128) that
+    // server-side service dominates the localhost round trip — otherwise
+    // an offered rate derived from a closed-loop probe would not
+    // translate into server-side overload.
+    let num_tables = 4usize;
+    let max_inflight = (conns / 2).max(2);
+    let mk_tables = || -> Vec<AnyTable> {
+        (0..num_tables)
+            .map(|t| {
+                let fp32 = EmbeddingTable::randn_sigma(rows, DIM, 0.1, 0x5A70 + t as u64);
+                AnyTable::Fused(fp32.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16))
+            })
+            .collect()
+    };
+
+    // A fixed request pool, cycled by arrival index, so every served
+    // reply has a precomputed oracle answer to match bit-for-bit.
+    let mut rng = Rng::new(0x5A7A);
+    let pool: Vec<Request> = (0..64)
+        .map(|_| Request {
+            ids: (0..num_tables)
+                .map(|_| (0..POOL).map(|_| rng.below(rows) as u32).collect())
+                .collect(),
+        })
+        .collect();
+
+    // Closed-loop capacity probe (unarmed server, few conns).
+    let probe_server = Arc::new(EmbeddingServer::start(
+        TableSet::new(mk_tables()),
+        ServerConfig { num_shards: 2, ..Default::default() },
+    ));
+    let probe_front =
+        ReactorFront::start(Arc::clone(&probe_server), "127.0.0.1:0").expect("probe front");
+    let probe_secs = if tiny { 0.15 } else { 0.4 };
+    let probe_conns = conns.min(4);
+    let t0 = Instant::now();
+    let done: usize = std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..probe_conns)
+            .map(|c| {
+                let pool = &pool;
+                let addr = probe_front.addr();
+                sc.spawn(move || {
+                    let mut client = TcpClient::connect(addr).expect("probe connect");
+                    let mut n = 0usize;
+                    while t0.elapsed().as_secs_f64() < probe_secs {
+                        client.lookup(&pool[(c + n) % pool.len()].ids).expect("probe lookup");
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("probe thread")).sum()
+    });
+    let capacity = done as f64 / t0.elapsed().as_secs_f64();
+    drop(probe_front);
+    drop(probe_server);
+    // SLO: a few multiples of the unloaded mean — tight enough that an
+    // unbounded queue would blow it, loose enough that healthy jitter
+    // does not.
+    let mean_ms = probe_conns as f64 / capacity * 1e3;
+    let slo_ms = (mean_ms * 4.0).ceil().clamp(1.0, 50.0) as u64;
+
+    // The measured server: same tables, admission armed.
+    let server = Arc::new(EmbeddingServer::start(
+        TableSet::new(mk_tables()),
+        ServerConfig { num_shards: 2, max_inflight, slo_ms, ..Default::default() },
+    ));
+    let oracle: Vec<Vec<f32>> = pool.iter().map(|r| server.lookup(r)).collect();
+    let reactor = ReactorFront::start(Arc::clone(&server), "127.0.0.1:0").expect("reactor front");
+    let blocking = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").expect("blocking front");
+    println!(
+        "saturation workload: {num_tables} fused INT4 tables × {rows} rows × d={DIM}, \
+         {POOL} pooled rows per table per lookup; capacity ≈ {capacity:.0} req/s \
+         (closed loop, {probe_conns} conns); slo {slo_ms} ms, max-inflight {max_inflight}; \
+         {conns} open-loop conns × {budget} requests per arm"
+    );
+
+    struct Arm {
+        served: usize,
+        shed: usize,
+        p50_ms: f64,
+        p99_ms: f64,
+        achieved: f64,
+        snap: AdmissionSnapshot,
+    }
+    let run_arm = |addr: SocketAddr, rate: f64, n: usize| -> Arm {
+        let before = server.admission().snapshot();
+        let next = AtomicUsize::new(0);
+        let start = Instant::now();
+        let (mut lats, mut shed) = (Vec::new(), 0usize);
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..conns)
+                .map(|_| {
+                    let (next, pool, oracle) = (&next, &pool, &oracle);
+                    sc.spawn(move || {
+                        let mut client = TcpClient::connect(addr).expect("arm connect");
+                        let mut lats = Vec::new();
+                        let mut shed = 0usize;
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            let due = start + Duration::from_secs_f64(i as f64 / rate);
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                            match client.lookup(&pool[i % pool.len()].ids) {
+                                Ok(got) => {
+                                    assert_eq!(
+                                        got,
+                                        oracle[i % pool.len()],
+                                        "served reply diverged from the oracle"
+                                    );
+                                    // From the *scheduled* arrival: lateness
+                                    // and queueing are charged to the server.
+                                    lats.push(due.elapsed().as_secs_f64() * 1e3);
+                                }
+                                Err(e) => {
+                                    let msg = e.to_string();
+                                    assert!(
+                                        msg.starts_with("shed: "),
+                                        "unexpected error under load: {msg}"
+                                    );
+                                    shed += 1;
+                                }
+                            }
+                        }
+                        (lats, shed)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (l, s) = h.join().expect("arm thread");
+                lats.extend(l);
+                shed += s;
+            }
+        });
+        let wall = start.elapsed().as_secs_f64();
+        lats.sort_by(f64::total_cmp);
+        let pctl = |q: f64| -> f64 {
+            if lats.is_empty() {
+                0.0
+            } else {
+                lats[((lats.len() - 1) as f64 * q).round() as usize]
+            }
+        };
+        let after = server.admission().snapshot();
+        Arm {
+            served: lats.len(),
+            shed,
+            p50_ms: pctl(0.50),
+            p99_ms: pctl(0.99),
+            achieved: n as f64 / wall,
+            snap: AdmissionSnapshot {
+                admitted: after.admitted - before.admitted,
+                shed_inflight: after.shed_inflight - before.shed_inflight,
+                shed_slo: after.shed_slo - before.shed_slo,
+                shed_deadline: after.shed_deadline - before.shed_deadline,
+                refused_conns: after.refused_conns - before.refused_conns,
+                idle_closed: after.idle_closed - before.idle_closed,
+                inflight: after.inflight,
+            },
+        }
+    };
+
+    let mut tw = TableWriter::new(vec![
+        "front",
+        "rate (x capacity)",
+        "offered/s",
+        "served",
+        "shed",
+        "admitted p50/p99 (ms)",
+    ]);
+    let emit = |tw: &mut TableWriter, front: &str, m: f64, rate: f64, arm: &Arm| {
+        assert_eq!(arm.served + arm.shed, budget, "replies must conserve: served + shed == offered");
+        assert!(arm.served > 0, "{front} at {m}x: admitted traffic must keep flowing");
+        assert!(
+            arm.p99_ms < 1_000.0,
+            "{front} at {m}x: admitted p99 {:.1} ms is unbounded-queue territory",
+            arm.p99_ms
+        );
+        tw.row(vec![
+            front.to_string(),
+            format!("{m:.1}x"),
+            format!("{:.0}", arm.achieved),
+            arm.served.to_string(),
+            arm.shed.to_string(),
+            format!("{:.3}/{:.3}", arm.p50_ms, arm.p99_ms),
+        ]);
+        eprintln!(
+            "{front} {m:.1}x: offered {:.0}/s, served {}, shed {} \
+             (inflight {}, slo {}, deadline {}), admitted p50={:.3} ms p99={:.3} ms",
+            arm.achieved,
+            arm.served,
+            arm.shed,
+            arm.snap.shed_inflight,
+            arm.snap.shed_slo,
+            arm.snap.shed_deadline,
+            arm.p50_ms,
+            arm.p99_ms
+        );
+        let mut jw = JsonWriter::new();
+        jw.str_field("bench", "shard_scaling_saturate")
+            .str_field("front", front)
+            .num_field("rate_multiple", m)
+            .num_field("capacity_per_s", capacity)
+            .num_field("target_rate_per_s", rate)
+            .num_field("achieved_rate_per_s", arm.achieved)
+            .num_field("requests", budget as f64)
+            .num_field("served", arm.served as f64)
+            .num_field("shed", arm.shed as f64)
+            .num_field("shed_frac", arm.shed as f64 / budget as f64)
+            .num_field("admitted_p50_ms", arm.p50_ms)
+            .num_field("admitted_p99_ms", arm.p99_ms)
+            .num_field("adm_admitted", arm.snap.admitted as f64)
+            .num_field("adm_shed_inflight", arm.snap.shed_inflight as f64)
+            .num_field("adm_shed_slo", arm.snap.shed_slo as f64)
+            .num_field("adm_shed_deadline", arm.snap.shed_deadline as f64)
+            .num_field("max_inflight", max_inflight as f64)
+            .num_field("slo_ms", slo_ms as f64)
+            .num_field("conns", conns as f64);
+        println!("{}", jw.finish());
+    };
+
+    let mut fracs: Vec<f64> = Vec::new();
+    for &m in multiples {
+        let rate = capacity * m;
+        let arm = run_arm(reactor.addr(), rate, budget);
+        fracs.push(arm.shed as f64 / budget as f64);
+        emit(&mut tw, "reactor", m, rate, &arm);
+    }
+    // One blocking-front arm at the bottom rate: the legacy front shares
+    // the same admission state and must behave, not just the reactor.
+    let arm = run_arm(blocking.addr(), capacity * multiples[0], budget);
+    emit(&mut tw, "blocking", multiples[0], capacity * multiples[0], &arm);
+
+    let (first, last) = (fracs[0], *fracs.last().expect("at least one reactor arm"));
+    assert!(
+        last > 0.0,
+        "top arm ({}x capacity) must shed — overload has to hit the admission valves",
+        multiples.last().expect("multiples")
+    );
+    assert!(
+        last > first,
+        "shed fraction must rise past the knee (bottom {first:.3} vs top {last:.3})"
+    );
+    println!("\nSaturation — open-loop arrival curve, admission armed:\n{}", tw.render());
+    println!(
+        "Degradation check: past the knee the shed fraction rises while the p99 of \
+         admitted requests stays bounded (both asserted) — excess load is refused at \
+         the door with `shed: ` error frames, not absorbed into an unbounded queue."
+    );
 }
 
 /// Kernel-backend mode: the flat SLS kernels per row format, scalar

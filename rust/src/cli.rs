@@ -40,6 +40,9 @@ pub const SERVE_FLAGS: &[&str] = &[
     "--prefetch-window",
     "--kernel-backend",
     "--listen",
+    "--front",
+    "--slo-ms",
+    "--max-inflight",
     "--update-port",
     "--update-every",
     "--update-rows",
@@ -154,7 +157,8 @@ COMMANDS:
             [--rebalance-interval MS] [--resident-budget BYTES]
             [--spill-dir PATH] [--spill-io-threads N] [--prefetch-window N]
             [--kernel-backend auto|scalar|avx2|neon]
-            [--listen ADDR] [--update-port PORT] [--update-every MS]
+            [--listen ADDR] [--front reactor|blocking] [--slo-ms MS]
+            [--max-inflight N] [--update-port PORT] [--update-every MS]
             [--update-rows N]
             serve a table file against a synthetic Zipf trace (or over TCP).
             --shards N > 0 splits every table's rows across N worker
@@ -196,6 +200,25 @@ COMMANDS:
             startup error. The resolved choice is printed at startup and
             shows up as `kernel=` in the per-shard stats (CLI summary
             and TCP stats frame alike).
+            --front picks the TCP front for --listen: `reactor` (the
+            default) multiplexes every connection onto one epoll poller
+            thread (portable scan fallback off Linux) plus a fixed
+            worker pool, so an idle connection costs a table slot
+            rather than a thread; `blocking` keeps the legacy
+            thread-per-connection front as a bit-exact baseline. Both
+            speak the same wire protocol and share one set of admission
+            counters.
+            Admission control (either front): --max-inflight N sheds
+            lookups past N concurrently admitted requests; --slo-ms MS
+            sheds new arrivals while the sliding p99 of served lookups
+            is over MS (a deterministic 1-in-8 probe trickle detects
+            recovery) and drops queued requests that already waited
+            past MS. Shed replies are error frames prefixed \"shed: \"
+            so clients can tell overload from semantic errors; the
+            counters appear on the stats frame's admission line. 0
+            disables either control (the default). The trace replay is
+            closed-loop and never sheds, so both flags are inert
+            without --listen.
             Live updates (sharded path only): the TCP protocol accepts
             update frames that patch rows and swap an MVCC table
             snapshot (fused rows re-quantized on ingest, bit-identical
@@ -325,6 +348,37 @@ fn cmd_eval(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// The TCP front `--front` selected: the epoll reactor (default) or
+/// the legacy thread-per-connection baseline. Both speak the same wire
+/// protocol against the same server, so `serve` only needs to hold
+/// whichever one was started.
+enum Front {
+    Reactor(crate::coordinator::ReactorFront),
+    Blocking(crate::coordinator::TcpFront),
+}
+
+impl Front {
+    fn start(
+        kind: &str,
+        server: &std::sync::Arc<EmbeddingServer>,
+        addr: &str,
+    ) -> std::io::Result<Front> {
+        match kind {
+            "blocking" => crate::coordinator::TcpFront::start(std::sync::Arc::clone(server), addr)
+                .map(Front::Blocking),
+            _ => crate::coordinator::ReactorFront::start(std::sync::Arc::clone(server), addr)
+                .map(Front::Reactor),
+        }
+    }
+
+    fn addr(&self) -> std::net::SocketAddr {
+        match self {
+            Front::Reactor(f) => f.addr(),
+            Front::Blocking(f) => f.addr(),
+        }
+    }
+}
+
 fn cmd_serve(flags: &Flags) -> Result<()> {
     // `SERVE_FLAGS` is load-bearing, not documentation: a flag missing
     // from the list is rejected here, so the list, the parser, and the
@@ -368,6 +422,14 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let resolved_kernel = crate::sls::backend::resolve(kernel_backend)
         .map_err(|e| format!("--kernel-backend: {e}"))?;
     let listen = flags.get("listen").map(str::to_string);
+    let front_choice = flags.get("front").unwrap_or("reactor");
+    if !matches!(front_choice, "reactor" | "blocking") {
+        return Err(format!(
+            "--front: unknown front '{front_choice}' (expected `reactor` or `blocking`)"
+        ));
+    }
+    let slo_ms: u64 = flags.num("slo-ms", 0)?;
+    let max_inflight: usize = flags.num("max-inflight", 0)?;
     let update_port: u16 = flags.num("update-port", 0)?;
     let update_every_ms: u64 = flags.num("update-every", 0)?;
     let update_rows: usize = flags.num("update-rows", 16)?;
@@ -414,6 +476,15 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
     if prefetch_window > 0 && spill_io_threads == 0 {
         eprintln!("note: --prefetch-window needs --spill-io-threads > 0; inert");
+    }
+    if flags.get("front").is_some() && listen.is_none() {
+        eprintln!("note: --front picks the TCP front; inert without --listen");
+    }
+    if (slo_ms > 0 || max_inflight > 0) && listen.is_none() {
+        eprintln!(
+            "note: --slo-ms / --max-inflight shed TCP traffic; the trace replay is \
+             closed-loop and never sheds — inert without --listen"
+        );
     }
     if kernel_backend.is_some() && shards == 0 {
         eprintln!(
@@ -502,6 +573,8 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             spill_io_threads,
             prefetch_window,
             kernel_backend: kernel_backend.filter(|_| shards > 0),
+            max_inflight,
+            slo_ms,
         },
     );
     if replicate_hot > 0 && shards == 1 {
@@ -517,26 +590,33 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         // Socket mode: serve lookups over TCP until interrupted (the
         // wire-level stats frame reports the same stats block remotely).
         let server = std::sync::Arc::new(server);
-        let front = crate::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &addr)
-            .map_err(|e| format!("bind {addr}: {e}"))?;
+        let front =
+            Front::start(front_choice, &server, &addr).map_err(|e| format!("bind {addr}: {e}"))?;
         // A dedicated update endpoint next to the serving one, so an
         // ingest pipeline can push row updates without competing with
         // lookup connections for accept slots. Same wire protocol —
-        // both ports accept every frame kind.
+        // both ports accept every frame kind and both run the chosen
+        // front.
         // Bound (not `_`-discarded) so the endpoint stays open for the
         // serve loop below.
         let _update_front = if update_port > 0 {
             let host = addr.rsplit_once(':').map_or("127.0.0.1", |(h, _)| h);
             let uaddr = format!("{host}:{update_port}");
-            let f = crate::coordinator::TcpFront::start(std::sync::Arc::clone(&server), &uaddr)
+            let f = Front::start(front_choice, &server, &uaddr)
                 .map_err(|e| format!("bind --update-port {uaddr}: {e}"))?;
             println!("update endpoint on {}", f.addr());
             Some(f)
         } else {
             None
         };
+        if slo_ms > 0 || max_inflight > 0 {
+            println!(
+                "admission control armed: max-inflight={max_inflight} slo-ms={slo_ms} (0 = off)"
+            );
+        }
         println!(
-            "listening on {} (protocol: see coordinator::tcp docs); Ctrl-C to stop",
+            "listening on {} ({front_choice} front; protocol: see coordinator::tcp docs); \
+             Ctrl-C to stop",
             front.addr()
         );
         println!("{}", server.stats_text());
@@ -803,6 +883,19 @@ mod tests {
         let e = run(&s(&["serve", "--table", p, "--shardz", "2"])).unwrap_err();
         assert!(e.contains("unknown flag --shardz"), "{e}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_front_and_admission_flags_validate() {
+        // All three fail before any table file is opened, so a bogus
+        // path proves the ordering as a side effect.
+        let e = run(&s(&["serve", "--table", "nope.embq", "--front", "warp9"])).unwrap_err();
+        assert!(e.contains("--front"), "{e}");
+        assert!(e.contains("warp9"), "{e}");
+        let e = run(&s(&["serve", "--table", "nope.embq", "--slo-ms", "fast"])).unwrap_err();
+        assert!(e.contains("--slo-ms"), "{e}");
+        let e = run(&s(&["serve", "--table", "nope.embq", "--max-inflight", "-3"])).unwrap_err();
+        assert!(e.contains("--max-inflight"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,503 @@
+//! Wire-frame codec shared by both TCP fronts (the blocking
+//! thread-per-connection front and the epoll reactor).
+//!
+//! The frame grammar itself is documented in [`crate::coordinator::tcp`]
+//! and, normatively, in `docs/formats.md`. This module owns the
+//! *incremental* decoder — `parse_frame` consumes a byte buffer and
+//! either yields a complete [`Frame`], asks for more bytes, or reports a
+//! [`ProtoError`] — plus the reply encoders, so the two fronts cannot
+//! drift apart on framing.
+//!
+//! ## Hard limits (the wire is attacker-controlled)
+//!
+//! Every length field on the wire is an untrusted `u32`. The decoder
+//! enforces two documented caps **before allocating anything**:
+//!
+//! * [`MAX_WIRE_ELEMS`] — no single length field (lookup ids per table,
+//!   update rows) may declare more than this many elements;
+//! * [`MAX_FRAME_BYTES`] — the total declared size of one frame may not
+//!   exceed this many bytes.
+//!
+//! A frame that violates either cap is a [`ProtoError`] with
+//! `reply = true`: the front sends a clean error frame naming the limit
+//! and then closes the connection (the stream cannot stay framed past a
+//! refused payload). Structural violations where no error frame can be
+//! framed safely (an update naming a table the catalog does not have —
+//! there is no dim to size the payload with) set `reply = false` and the
+//! connection is closed silently, matching the historical behaviour the
+//! client tests pin.
+//!
+//! Allocation discipline: vectors are only materialised once the bytes
+//! they decode are already in the buffer, so a malicious length field can
+//! never force an allocation larger than what the peer actually sent
+//! (which is itself bounded by the frame cap).
+
+use crate::coordinator::catalog::TableCatalog;
+
+/// Error-frame sentinel (`u32` little-endian on the wire).
+pub const ERR_SENTINEL: u32 = 0xFFFF_FFFF;
+/// Stats-frame sentinel.
+pub const STATS_SENTINEL: u32 = 0xFFFF_FFFE;
+/// Update-frame sentinel.
+pub const UPDATE_SENTINEL: u32 = 0xFFFF_FFFD;
+
+/// Hard cap on the total declared size of a single wire frame, in bytes
+/// (64 MiB). Documented in `docs/formats.md`; frames past it get an
+/// error frame naming the limit, then the connection is closed.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Hard cap on any single length field, in elements (ids per table in a
+/// lookup, rows in an update). Matches the historical `1 << 20` refusal
+/// threshold, but now yields a clean protocol error instead of a silent
+/// hangup.
+pub const MAX_WIRE_ELEMS: usize = 1 << 20;
+
+/// A protocol violation detected by the decoder.
+#[derive(Debug)]
+pub struct ProtoError {
+    /// Human-readable reason, safe to echo to the peer.
+    pub msg: String,
+    /// Whether the front should send an error frame before closing.
+    /// `false` means the stream cannot stay framed long enough even for
+    /// that (e.g. an update naming an unknown table).
+    pub reply: bool,
+}
+
+impl ProtoError {
+    fn limit(msg: String) -> ProtoError {
+        ProtoError { msg, reply: true }
+    }
+
+    fn fatal(msg: String) -> ProtoError {
+        ProtoError { msg, reply: false }
+    }
+}
+
+/// One fully decoded request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Stats request (sentinel only, no body).
+    Stats,
+    /// Row update: `(row_id, fp32 values)` pairs for one table.
+    Update {
+        /// Target table index (already checked against the catalog).
+        table: usize,
+        /// Replacement rows; each value vector is exactly `dim` long.
+        rows: Vec<(u32, Vec<f32>)>,
+    },
+    /// Pooled lookup: `(table_id, ids)` per declared entry. Table ids
+    /// are *not* yet validated — semantic checks (arity, ranges) happen
+    /// in the front so malformed requests get error frames, not drops.
+    Lookup {
+        /// Declared entries in wire order.
+        entries: Vec<(u32, Vec<u32>)>,
+    },
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn has(&self, n: usize) -> bool {
+        self.buf.len() - self.pos >= n
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        if !self.has(4) {
+            return None;
+        }
+        let b = [
+            self.buf[self.pos],
+            self.buf[self.pos + 1],
+            self.buf[self.pos + 2],
+            self.buf[self.pos + 3],
+        ];
+        self.pos += 4;
+        Some(u32::from_le_bytes(b))
+    }
+
+    fn f32(&mut self) -> Option<f32> {
+        self.u32().map(f32::from_bits)
+    }
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// * `Ok(Some((frame, consumed)))` — a complete frame; drop `consumed`
+///   bytes from the buffer before the next call.
+/// * `Ok(None)` — the buffer holds only a prefix; read more. Length
+///   limits are still enforced on whatever prefix is visible, so a peer
+///   cannot grow the buffer past [`MAX_FRAME_BYTES`] by drip-feeding a
+///   frame that is doomed anyway.
+/// * `Err(_)` — protocol violation; see [`ProtoError::reply`].
+pub fn parse_frame(
+    buf: &[u8],
+    catalog: &TableCatalog,
+) -> Result<Option<(Frame, usize)>, ProtoError> {
+    let mut cur = Cursor { buf, pos: 0 };
+    let first = match cur.u32() {
+        Some(v) => v,
+        None => return Ok(None),
+    };
+    if first == STATS_SENTINEL {
+        return Ok(Some((Frame::Stats, cur.pos)));
+    }
+    if first == UPDATE_SENTINEL {
+        return parse_update(&mut cur, catalog);
+    }
+    // Anything else is a lookup whose first u32 is the table count
+    // (including unknown sentinels, which fail the budget check below
+    // and get a clean error frame instead of desynchronising the
+    // stream).
+    parse_lookup(&mut cur, first as usize)
+}
+
+fn parse_update(
+    cur: &mut Cursor<'_>,
+    catalog: &TableCatalog,
+) -> Result<Option<(Frame, usize)>, ProtoError> {
+    let table = match cur.u32() {
+        Some(v) => v as usize,
+        None => return Ok(None),
+    };
+    let num_rows = match cur.u32() {
+        Some(v) => v as usize,
+        None => return Ok(None),
+    };
+    if table >= catalog.num_tables() {
+        // No valid table means no dim to frame the payload with: the
+        // stream cannot stay synchronized, so this is a silent close.
+        return Err(ProtoError::fatal(format!(
+            "update table {table} out of range ({} tables)",
+            catalog.num_tables()
+        )));
+    }
+    if num_rows > MAX_WIRE_ELEMS {
+        return Err(ProtoError::limit(format!(
+            "update declares {num_rows} rows; the per-field cap is {MAX_WIRE_ELEMS} elements"
+        )));
+    }
+    let dim = catalog.dim_of(table);
+    let row_bytes = 4 + dim * 4;
+    let payload = match num_rows.checked_mul(row_bytes) {
+        Some(p) => p,
+        None => {
+            return Err(ProtoError::limit(format!(
+                "update frame overflows the {MAX_FRAME_BYTES}-byte frame limit"
+            )))
+        }
+    };
+    if 12 + payload > MAX_FRAME_BYTES {
+        return Err(ProtoError::limit(format!(
+            "update frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte frame limit",
+            12 + payload
+        )));
+    }
+    if !cur.has(payload) {
+        return Ok(None);
+    }
+    // The whole payload is on hand: allocation is bounded by bytes
+    // actually received.
+    let mut rows = Vec::with_capacity(num_rows);
+    for _ in 0..num_rows {
+        let id = cur.u32().expect("payload length checked above");
+        let mut vals = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            vals.push(cur.f32().expect("payload length checked above"));
+        }
+        rows.push((id, vals));
+    }
+    Ok(Some((Frame::Update { table, rows }, cur.pos)))
+}
+
+fn parse_lookup(
+    cur: &mut Cursor<'_>,
+    num_tables: usize,
+) -> Result<Option<(Frame, usize)>, ProtoError> {
+    // Every entry carries at least an 8-byte header, so a table count
+    // that cannot fit in the frame budget is rejected before anything
+    // is read or allocated.
+    if num_tables > (MAX_FRAME_BYTES - 4) / 8 {
+        return Err(ProtoError::limit(format!(
+            "lookup declares {num_tables} tables; the frame limit is {MAX_FRAME_BYTES} bytes"
+        )));
+    }
+    let mut entries: Vec<(u32, Vec<u32>)> = Vec::new();
+    for _ in 0..num_tables {
+        let table = match cur.u32() {
+            Some(v) => v,
+            None => return Ok(None),
+        };
+        let len = match cur.u32() {
+            Some(v) => v as usize,
+            None => return Ok(None),
+        };
+        if len > MAX_WIRE_ELEMS {
+            return Err(ProtoError::limit(format!(
+                "lookup length {len} exceeds the per-field cap of {MAX_WIRE_ELEMS} elements"
+            )));
+        }
+        if cur.pos + len * 4 > MAX_FRAME_BYTES {
+            return Err(ProtoError::limit(format!(
+                "lookup frame exceeds the {MAX_FRAME_BYTES}-byte frame limit"
+            )));
+        }
+        if !cur.has(len * 4) {
+            return Ok(None);
+        }
+        let mut ids = Vec::with_capacity(len);
+        for _ in 0..len {
+            ids.push(cur.u32().expect("entry length checked above"));
+        }
+        entries.push((table, ids));
+    }
+    Ok(Some((Frame::Lookup { entries }, cur.pos)))
+}
+
+/// Encode an error frame (`ERR_SENTINEL`, msg len, utf-8 message).
+pub fn error_frame(msg: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + msg.len());
+    out.extend_from_slice(&ERR_SENTINEL.to_le_bytes());
+    out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
+/// Encode a stats reply (`STATS_SENTINEL`, text len, utf-8 text).
+pub fn stats_frame(text: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + text.len());
+    out.extend_from_slice(&STATS_SENTINEL.to_le_bytes());
+    out.extend_from_slice(&(text.len() as u32).to_le_bytes());
+    out.extend_from_slice(text.as_bytes());
+    out
+}
+
+/// Encode a successful update reply (`UPDATE_SENTINEL`, u64 version).
+pub fn update_ok_frame(version: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12);
+    out.extend_from_slice(&UPDATE_SENTINEL.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
+    out
+}
+
+/// Encode a lookup reply (`u32` float count, then the floats).
+pub fn lookup_reply_frame(out_vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + out_vals.len() * 4);
+    out.extend_from_slice(&(out_vals.len() as u32).to_le_bytes());
+    for v in out_vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Client-side guard for reply length fields: the server is trusted more
+/// than an arbitrary peer, but a confused or malicious endpoint must not
+/// be able to make [`crate::coordinator::TcpClient`] allocate
+/// unboundedly either.
+pub fn check_reply_len(len: usize, what: &str) -> std::io::Result<()> {
+    if len * 4 > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("{what} length {len} exceeds the {MAX_FRAME_BYTES}-byte frame limit"),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::TableSet;
+    use crate::table::serial::AnyTable;
+    use crate::table::EmbeddingTable;
+
+    fn catalog(dims: &[usize]) -> TableCatalog {
+        let tables: Vec<AnyTable> = dims
+            .iter()
+            .enumerate()
+            .map(|(t, &d)| AnyTable::F32(EmbeddingTable::randn(8, d, 900 + t as u64)))
+            .collect();
+        TableCatalog::of(&TableSet::new(tables))
+    }
+
+    fn lookup_bytes(entries: &[(u32, Vec<u32>)]) -> Vec<u8> {
+        let mut b = (entries.len() as u32).to_le_bytes().to_vec();
+        for (t, ids) in entries {
+            b.extend_from_slice(&t.to_le_bytes());
+            b.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+            for id in ids {
+                b.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn lookup_roundtrip_and_incremental_prefixes() {
+        let cat = catalog(&[4, 4]);
+        let entries = vec![(0u32, vec![1u32, 2, 3]), (1, vec![7])];
+        let bytes = lookup_bytes(&entries);
+        // Every strict prefix wants more bytes; the full frame decodes.
+        for cut in 0..bytes.len() {
+            assert!(
+                parse_frame(&bytes[..cut], &cat).unwrap().is_none(),
+                "prefix of {cut} bytes must be incomplete"
+            );
+        }
+        let (frame, consumed) = parse_frame(&bytes, &cat).unwrap().unwrap();
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(frame, Frame::Lookup { entries });
+    }
+
+    #[test]
+    fn trailing_bytes_are_left_for_the_next_frame() {
+        let cat = catalog(&[4]);
+        let mut bytes = lookup_bytes(&[(0, vec![1])]);
+        let one = bytes.len();
+        bytes.extend_from_slice(&STATS_SENTINEL.to_le_bytes());
+        let (_, consumed) = parse_frame(&bytes, &cat).unwrap().unwrap();
+        assert_eq!(consumed, one);
+        let (frame, c2) = parse_frame(&bytes[consumed..], &cat).unwrap().unwrap();
+        assert_eq!(frame, Frame::Stats);
+        assert_eq!(c2, 4);
+    }
+
+    #[test]
+    fn oversized_lookup_len_is_a_clean_limit_error() {
+        let cat = catalog(&[4]);
+        let mut b = 1u32.to_le_bytes().to_vec();
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&((MAX_WIRE_ELEMS as u32) + 1).to_le_bytes());
+        // The violation is detected from the header alone — no payload
+        // bytes were ever sent, nothing was allocated.
+        let err = parse_frame(&b, &cat).unwrap_err();
+        assert!(err.reply);
+        assert!(err.msg.contains("per-field cap"), "{}", err.msg);
+    }
+
+    #[test]
+    fn absurd_table_count_is_a_clean_limit_error() {
+        let cat = catalog(&[4]);
+        // An unknown sentinel value parses as a lookup table count and
+        // trips the frame budget immediately.
+        let b = 0xFFFF_FFFCu32.to_le_bytes().to_vec();
+        let err = parse_frame(&b, &cat).unwrap_err();
+        assert!(err.reply);
+        assert!(err.msg.contains("frame limit"), "{}", err.msg);
+    }
+
+    #[test]
+    fn lookup_cumulative_budget_is_enforced() {
+        let cat = catalog(&[4]);
+        // Each entry stays under the per-field cap, but together the
+        // declared payloads blow the frame budget. Only headers are
+        // sent; the decoder must fail from declared sizes alone.
+        let per = MAX_WIRE_ELEMS; // 4 MiB of ids per entry
+        let n = MAX_FRAME_BYTES / (per * 4) + 2;
+        let mut b = (n as u32).to_le_bytes().to_vec();
+        for _ in 0..n {
+            b.extend_from_slice(&0u32.to_le_bytes());
+            b.extend_from_slice(&(per as u32).to_le_bytes());
+            // ... and a token payload so parsing advances entry by
+            // entry until the budget trips.
+            b.extend_from_slice(&vec![0u8; per * 4]);
+            if b.len() > MAX_FRAME_BYTES {
+                break; // enough declared to trip the budget
+            }
+        }
+        let err = parse_frame(&b, &cat).unwrap_err();
+        assert!(err.reply);
+        assert!(err.msg.contains("frame limit"), "{}", err.msg);
+    }
+
+    #[test]
+    fn update_roundtrip() {
+        let cat = catalog(&[2, 3]);
+        let mut b = UPDATE_SENTINEL.to_le_bytes().to_vec();
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        for (id, vals) in [(5u32, [1.0f32, 2.0, 3.0]), (6, [4.0, 5.0, 6.0])] {
+            b.extend_from_slice(&id.to_le_bytes());
+            for v in vals {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for cut in 0..b.len() {
+            assert!(parse_frame(&b[..cut], &cat).unwrap().is_none());
+        }
+        let (frame, consumed) = parse_frame(&b, &cat).unwrap().unwrap();
+        assert_eq!(consumed, b.len());
+        match frame {
+            Frame::Update { table, rows } => {
+                assert_eq!(table, 1);
+                assert_eq!(rows.len(), 2);
+                assert_eq!(rows[0], (5, vec![1.0, 2.0, 3.0]));
+            }
+            other => panic!("expected update, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn update_with_unknown_table_is_fatal_without_reply() {
+        let cat = catalog(&[2]);
+        let mut b = UPDATE_SENTINEL.to_le_bytes().to_vec();
+        b.extend_from_slice(&9u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        let err = parse_frame(&b, &cat).unwrap_err();
+        assert!(!err.reply, "no dim to frame the payload: silent close");
+        assert!(err.msg.contains("out of range"), "{}", err.msg);
+    }
+
+    #[test]
+    fn update_row_count_cap_is_enforced() {
+        let cat = catalog(&[2]);
+        let mut b = UPDATE_SENTINEL.to_le_bytes().to_vec();
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&((MAX_WIRE_ELEMS as u32) + 1).to_le_bytes());
+        let err = parse_frame(&b, &cat).unwrap_err();
+        assert!(err.reply);
+        assert!(err.msg.contains("per-field cap"), "{}", err.msg);
+    }
+
+    #[test]
+    fn update_byte_budget_is_enforced_before_any_payload() {
+        // dim 1024 → 20k rows declare ~82 MiB, over the 64 MiB budget,
+        // detected from the 12-byte header alone.
+        let cat = catalog(&[1024]);
+        let mut b = UPDATE_SENTINEL.to_le_bytes().to_vec();
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&20_000u32.to_le_bytes());
+        let err = parse_frame(&b, &cat).unwrap_err();
+        assert!(err.reply);
+        assert!(err.msg.contains("frame limit"), "{}", err.msg);
+    }
+
+    #[test]
+    fn encoders_roundtrip_through_the_wire_shapes() {
+        let e = error_frame("boom");
+        assert_eq!(&e[0..4], &ERR_SENTINEL.to_le_bytes());
+        assert_eq!(&e[4..8], &4u32.to_le_bytes());
+        assert_eq!(&e[8..], b"boom");
+
+        let s = stats_frame("ok");
+        assert_eq!(&s[0..4], &STATS_SENTINEL.to_le_bytes());
+        assert_eq!(&s[8..], b"ok");
+
+        let u = update_ok_frame(7);
+        assert_eq!(&u[0..4], &UPDATE_SENTINEL.to_le_bytes());
+        assert_eq!(u[4..12], 7u64.to_le_bytes());
+
+        let l = lookup_reply_frame(&[1.5, -2.0]);
+        assert_eq!(&l[0..4], &2u32.to_le_bytes());
+        assert_eq!(l[4..8], 1.5f32.to_le_bytes());
+    }
+
+    #[test]
+    fn client_reply_guard_rejects_absurd_lengths() {
+        assert!(check_reply_len(10, "reply").is_ok());
+        let err = check_reply_len(MAX_FRAME_BYTES, "reply").unwrap_err();
+        assert!(err.to_string().contains("frame limit"), "{err}");
+    }
+}

@@ -1,6 +1,11 @@
-//! Serving metrics: log-bucketed latency histogram and counters.
+//! Serving metrics: log-bucketed latency histogram, counters, and the
+//! TCP fronts' admission-control state ([`Admission`]).
 
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{lock_ignore_poison, Mutex};
 
 /// Latency histogram with ~4% resolution log buckets from 100 ns to ~100 s.
 ///
@@ -334,6 +339,266 @@ impl ServerMetrics {
     }
 }
 
+/// Size of the sliding window of admitted-request latencies the SLO
+/// shedder judges p99 over.
+const ADMISSION_WINDOW: usize = 256;
+/// Minimum samples before the window's p99 is trusted (a couple of slow
+/// warmup requests must not shed a cold server).
+const ADMISSION_MIN_SAMPLES: usize = 32;
+/// While the SLO is breached, 1 in this many arrivals is still admitted
+/// as a deterministic probe so the p99 estimate can recover; everything
+/// else is shed.
+const SLO_PROBE_EVERY: u64 = 8;
+
+/// Sliding window of recent admitted-request latencies (µs, saturating).
+struct LatencyWindow {
+    samples: [u32; ADMISSION_WINDOW],
+    len: usize,
+    next: usize,
+}
+
+impl LatencyWindow {
+    fn new() -> LatencyWindow {
+        LatencyWindow { samples: [0; ADMISSION_WINDOW], len: 0, next: 0 }
+    }
+
+    fn push(&mut self, us: u32) {
+        self.samples[self.next] = us;
+        self.next = (self.next + 1) % ADMISSION_WINDOW;
+        self.len = (self.len + 1).min(ADMISSION_WINDOW);
+    }
+
+    fn p99_us(&self) -> Option<u32> {
+        if self.len < ADMISSION_MIN_SAMPLES {
+            return None;
+        }
+        let mut sorted = self.samples[..self.len].to_vec();
+        sorted.sort_unstable();
+        let idx = (self.len * 99 / 100).min(self.len - 1);
+        Some(sorted[idx])
+    }
+}
+
+/// Why a request was shed by admission control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The `--max-inflight` cap was reached.
+    Inflight,
+    /// Recent admitted p99 is over the `--slo-ms` target.
+    Slo,
+    /// The request already waited longer than the SLO before it could
+    /// be served (deadline-aware shedding at dequeue).
+    Deadline,
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::Inflight => write!(f, "inflight limit"),
+            ShedReason::Slo => write!(f, "p99 over SLO"),
+            ShedReason::Deadline => write!(f, "deadline exceeded"),
+        }
+    }
+}
+
+/// Admission control for the TCP fronts: a bounded-inflight gate, an
+/// SLO-driven load shedder over a sliding p99 window, and the shed /
+/// refused / idle-closed counters both fronts report through the stats
+/// surfaces (CLI summary + TCP stats frame).
+///
+/// Shedding policy (documented in `docs/serving.md`):
+///
+/// 1. a request whose queue wait already exceeds the SLO is shed
+///    (`deadline exceeded`) — serving it late helps nobody;
+/// 2. if `max_inflight` admitted requests are already in flight, new
+///    arrivals are shed (`inflight limit`);
+/// 3. if the p99 of recently *admitted* requests is over the SLO, all
+///    but a deterministic 1-in-[`SLO_PROBE_EVERY`] trickle are shed
+///    (`p99 over SLO`) until the estimate recovers.
+///
+/// With both knobs off (`max_inflight == 0`, no SLO) every request is
+/// admitted and the struct only tracks counters.
+pub struct Admission {
+    max_inflight: usize,
+    slo: Option<Duration>,
+    inflight: AtomicUsize,
+    admitted: AtomicU64,
+    shed_inflight: AtomicU64,
+    shed_slo: AtomicU64,
+    shed_deadline: AtomicU64,
+    refused_conns: AtomicU64,
+    idle_closed: AtomicU64,
+    probe: AtomicU64,
+    window: Mutex<LatencyWindow>,
+}
+
+/// Counter snapshot of an [`Admission`] (for benches and tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionSnapshot {
+    /// Requests admitted to the engine.
+    pub admitted: u64,
+    /// Requests shed at the inflight cap.
+    pub shed_inflight: u64,
+    /// Requests shed by the SLO p99 shedder.
+    pub shed_slo: u64,
+    /// Requests shed because their queue wait blew the SLO.
+    pub shed_deadline: u64,
+    /// Connections refused (accept-side: spawn failure or conn cap).
+    pub refused_conns: u64,
+    /// Connections closed by the reactor's idle-deadline sweep.
+    pub idle_closed: u64,
+    /// Requests in flight at snapshot time.
+    pub inflight: usize,
+}
+
+impl AdmissionSnapshot {
+    /// Total requests shed for any reason.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_inflight + self.shed_slo + self.shed_deadline
+    }
+}
+
+/// RAII inflight slot: dropping it releases the admitted request's slot.
+pub struct InflightGuard {
+    adm: Arc<Admission>,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.adm.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Admission {
+    /// Build an admission gate; `max_inflight == 0` disables the cap and
+    /// `slo == None` disables both SLO shedding and deadline shedding.
+    pub fn new(max_inflight: usize, slo: Option<Duration>) -> Admission {
+        Admission {
+            max_inflight,
+            slo,
+            inflight: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            shed_inflight: AtomicU64::new(0),
+            shed_slo: AtomicU64::new(0),
+            shed_deadline: AtomicU64::new(0),
+            refused_conns: AtomicU64::new(0),
+            idle_closed: AtomicU64::new(0),
+            probe: AtomicU64::new(0),
+            window: Mutex::new(LatencyWindow::new()),
+        }
+    }
+
+    /// Try to admit a request that arrived at `arrival`. On success the
+    /// returned guard holds an inflight slot until dropped; on shed the
+    /// matching counter is already incremented.
+    pub fn admit(this: &Arc<Admission>, arrival: Instant) -> Result<InflightGuard, ShedReason> {
+        if this.shed_if_deadline_lapsed(arrival) {
+            return Err(ShedReason::Deadline);
+        }
+        let prev = this.inflight.fetch_add(1, Ordering::Relaxed);
+        if this.max_inflight > 0 && prev >= this.max_inflight {
+            this.inflight.fetch_sub(1, Ordering::Relaxed);
+            this.shed_inflight.fetch_add(1, Ordering::Relaxed);
+            return Err(ShedReason::Inflight);
+        }
+        if let (Some(slo), Some(p99)) = (this.slo, this.p99()) {
+            if p99 > slo {
+                let k = this.probe.fetch_add(1, Ordering::Relaxed);
+                if k % SLO_PROBE_EVERY != 0 {
+                    this.inflight.fetch_sub(1, Ordering::Relaxed);
+                    this.shed_slo.fetch_add(1, Ordering::Relaxed);
+                    return Err(ShedReason::Slo);
+                }
+            }
+        }
+        this.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(InflightGuard { adm: Arc::clone(this) })
+    }
+
+    /// Deadline-aware shedding: true (and counted) when a request that
+    /// arrived at `arrival` has already waited past the SLO. Called both
+    /// at admission and when a queued request is finally dequeued.
+    pub fn shed_if_deadline_lapsed(&self, arrival: Instant) -> bool {
+        match self.slo {
+            Some(slo) if arrival.elapsed() > slo => {
+                self.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Feed one admitted request's service latency into the SLO window.
+    pub fn record(&self, dt: Duration) {
+        let us = dt.as_micros().min(u32::MAX as u128) as u32;
+        lock_ignore_poison(&self.window).push(us);
+    }
+
+    /// p99 of the sliding window of admitted latencies, once it has
+    /// enough samples to be meaningful.
+    pub fn p99(&self) -> Option<Duration> {
+        lock_ignore_poison(&self.window)
+            .p99_us()
+            .map(|us| Duration::from_micros(us as u64))
+    }
+
+    /// Count one refused connection (accept-side failure or cap).
+    pub fn record_refused_conn(&self) {
+        self.refused_conns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one connection closed by the idle-deadline sweep.
+    pub fn record_idle_close(&self) {
+        self.idle_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Counter snapshot.
+    pub fn snapshot(&self) -> AdmissionSnapshot {
+        AdmissionSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed_inflight: self.shed_inflight.load(Ordering::Relaxed),
+            shed_slo: self.shed_slo.load(Ordering::Relaxed),
+            shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
+            refused_conns: self.refused_conns.load(Ordering::Relaxed),
+            idle_closed: self.idle_closed.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One-line human summary for the stats surfaces, or `None` when
+    /// admission is unconfigured and nothing has happened (so read-only
+    /// stats output stays unchanged on pre-admission setups).
+    pub fn summary(&self) -> Option<String> {
+        let s = self.snapshot();
+        let configured = self.max_inflight > 0 || self.slo.is_some();
+        if !configured
+            && s.admitted == 0
+            && s.shed_total() == 0
+            && s.refused_conns == 0
+            && s.idle_closed == 0
+        {
+            return None;
+        }
+        let mut line = format!(
+            "admission: {} admitted, {} inflight, {} shed \
+             ({} inflight-cap / {} slo / {} deadline)",
+            s.admitted,
+            s.inflight,
+            s.shed_total(),
+            s.shed_inflight,
+            s.shed_slo,
+            s.shed_deadline,
+        );
+        if s.refused_conns > 0 {
+            line.push_str(&format!(", {} conns refused", s.refused_conns));
+        }
+        if s.idle_closed > 0 {
+            line.push_str(&format!(", {} idle-closed", s.idle_closed));
+        }
+        Some(line)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -505,5 +770,93 @@ mod tests {
         assert_eq!(m.lookup_rate(), 2500.0);
         assert_eq!(m.mean_batch(), 10.0);
         assert!(m.summary().contains("req/s"));
+    }
+
+    #[test]
+    fn admission_inflight_cap_sheds_and_releases() {
+        let adm = Arc::new(Admission::new(1, None));
+        let now = Instant::now();
+        let guard = Admission::admit(&adm, now).unwrap();
+        assert_eq!(Admission::admit(&adm, now).unwrap_err(), ShedReason::Inflight);
+        assert_eq!(adm.snapshot().shed_inflight, 1);
+        assert_eq!(adm.snapshot().inflight, 1);
+        drop(guard);
+        assert_eq!(adm.snapshot().inflight, 0);
+        // The slot freed: the next request is admitted again.
+        assert!(Admission::admit(&adm, Instant::now()).is_ok());
+        assert_eq!(adm.snapshot().admitted, 2);
+    }
+
+    #[test]
+    fn admission_unconfigured_admits_everything() {
+        let adm = Arc::new(Admission::new(0, None));
+        let guards: Vec<_> = (0..64)
+            .map(|_| Admission::admit(&adm, Instant::now()).unwrap())
+            .collect();
+        assert_eq!(adm.snapshot().inflight, 64);
+        assert_eq!(adm.snapshot().shed_total(), 0);
+        drop(guards);
+        assert_eq!(adm.snapshot().inflight, 0);
+    }
+
+    #[test]
+    fn admission_deadline_shedding_is_counted() {
+        let adm = Arc::new(Admission::new(0, Some(Duration::from_millis(1))));
+        let arrival = Instant::now();
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(Admission::admit(&adm, arrival).unwrap_err(), ShedReason::Deadline);
+        assert!(adm.shed_if_deadline_lapsed(arrival));
+        assert_eq!(adm.snapshot().shed_deadline, 2);
+        // A fresh arrival is fine.
+        assert!(Admission::admit(&adm, Instant::now()).is_ok());
+    }
+
+    #[test]
+    fn admission_slo_shedder_probes_deterministically() {
+        let adm = Arc::new(Admission::new(0, Some(Duration::from_millis(1))));
+        // Below the sample floor the window is not trusted.
+        for _ in 0..ADMISSION_MIN_SAMPLES - 1 {
+            adm.record(Duration::from_millis(50));
+        }
+        assert!(adm.p99().is_none());
+        adm.record(Duration::from_millis(50));
+        assert!(adm.p99().unwrap() > Duration::from_millis(1));
+        // Breached: 1 in SLO_PROBE_EVERY arrivals is still admitted so
+        // the estimate can recover; the rest are shed.
+        let mut ok = 0;
+        let mut shed = 0;
+        for _ in 0..16 {
+            match Admission::admit(&adm, Instant::now()) {
+                Ok(_g) => ok += 1,
+                Err(ShedReason::Slo) => shed += 1,
+                Err(other) => panic!("unexpected shed reason {other:?}"),
+            }
+        }
+        assert_eq!((ok, shed), (2, 14), "deterministic 1-in-8 probe");
+        assert_eq!(adm.snapshot().shed_slo, 14);
+        // Once the window refills with fast samples, shedding stops.
+        for _ in 0..ADMISSION_WINDOW {
+            adm.record(Duration::from_micros(10));
+        }
+        assert!(Admission::admit(&adm, Instant::now()).is_ok());
+        assert!(Admission::admit(&adm, Instant::now()).is_ok());
+    }
+
+    #[test]
+    fn admission_summary_stays_quiet_until_touched() {
+        let quiet = Admission::new(0, None);
+        assert!(quiet.summary().is_none());
+        quiet.record_refused_conn();
+        assert!(quiet.summary().unwrap().contains("1 conns refused"));
+
+        let adm = Arc::new(Admission::new(4, Some(Duration::from_millis(5))));
+        // Configured gates always report, even before traffic.
+        assert!(adm.summary().unwrap().contains("0 admitted"));
+        let _g = Admission::admit(&adm, Instant::now()).unwrap();
+        adm.record_idle_close();
+        let line = adm.summary().unwrap();
+        assert!(line.contains("1 admitted"), "{line}");
+        assert!(line.contains("1 inflight"), "{line}");
+        assert!(line.contains("1 idle-closed"), "{line}");
     }
 }

@@ -17,24 +17,42 @@
 //! * [`catalog`] — the leader-resident table metadata (names, dims, row
 //!   counts, format tags) that validates requests and reports sizes once
 //!   the shard engine owns the rows.
-//! * [`metrics`] — latency histograms (p50/p95/p99), counters, and
-//!   per-shard service stats.
+//! * [`metrics`] — latency histograms (p50/p95/p99), counters, per-shard
+//!   service stats, and the [`metrics::Admission`] control state (inflight
+//!   cap, SLO shedder) shared by the TCP fronts.
+//! * [`frame`] — the incremental wire codec both fronts share, including
+//!   the hard per-frame byte limits that keep attacker-controlled length
+//!   fields from driving allocations.
+//! * [`tcp`] — the legacy blocking (thread-per-connection) TCP front,
+//!   kept behind `--front blocking` as the bit-exactness baseline.
+//! * [`reactor`] — the production TCP front: a dependency-free epoll
+//!   reactor (portable scan fallback elsewhere) holding tens of
+//!   thousands of idle connections on one poller thread plus a fixed
+//!   compute worker pool, with admission control and backpressure.
 //!
-//! Threads + bounded channels (no async runtime): lookups are CPU/memory
-//! bound with sub-millisecond service times, so a thread-per-shard model
-//! with synchronous handoff is both simpler and faster than an async
-//! executor here.
+//! The *compute* path stays threads + bounded channels (no async
+//! runtime): lookups are CPU/memory bound with sub-millisecond service
+//! times, so a thread-per-shard model with synchronous handoff is both
+//! simpler and faster than an async executor there. The *connection*
+//! path is where thread-per-connection stops scaling — the reactor
+//! multiplexes sockets onto one poller and hands decoded requests to
+//! the same bounded intake the blocking front uses.
 
 pub mod batcher;
 pub mod catalog;
+pub mod frame;
 pub mod metrics;
+pub mod reactor;
 pub mod router;
 pub mod server;
 pub mod tcp;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use catalog::{FormatTag, TableCatalog, TableInfo};
-pub use metrics::{LatencyHistogram, ServerMetrics, ShardStats};
+pub use metrics::{
+    Admission, AdmissionSnapshot, LatencyHistogram, ServerMetrics, ShardStats, ShedReason,
+};
+pub use reactor::{ReactorConfig, ReactorFront};
 pub use router::{Router, ShardPlan};
 pub use server::{EmbeddingServer, ServerConfig, TableSet};
 pub use tcp::{TcpClient, TcpFront};

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::catalog::TableCatalog;
-use crate::coordinator::metrics::{ServerMetrics, ShardStats};
+use crate::coordinator::metrics::{Admission, ServerMetrics, ShardStats};
 use crate::coordinator::router::Router;
 use crate::data::trace::{Request, RequestTrace};
 use crate::eval::size::SizeReport;
@@ -176,6 +176,18 @@ pub struct ServerConfig {
     /// [`ShardConfig::kernel_backend`]). `None` (default) resolves
     /// `EMBERQ_FORCE_SCALAR`, then the best backend the CPU supports.
     pub kernel_backend: Option<crate::sls::KernelBackend>,
+    /// Admission control: maximum concurrently-admitted lookups across
+    /// all TCP connections (see [`Admission`]). Requests past the cap
+    /// are shed with an error frame instead of queued. `0` (default)
+    /// disables the cap.
+    pub max_inflight: usize,
+    /// Admission control: latency SLO in milliseconds (see
+    /// [`Admission`]). When the sliding-window p99 of admitted lookups
+    /// exceeds this, new arrivals are shed (minus a deterministic probe
+    /// trickle that detects recovery), and requests that already waited
+    /// longer than the SLO before reaching a worker are shed as
+    /// deadline-expired. `0` (default) disables SLO shedding.
+    pub slo_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -195,6 +207,8 @@ impl Default for ServerConfig {
             spill_io_threads: ShardConfig::default().spill_io_threads,
             prefetch_window: 0,
             kernel_backend: None,
+            max_inflight: 0,
+            slo_ms: 0,
         }
     }
 }
@@ -220,6 +234,10 @@ pub struct EmbeddingServer {
     dispatchers: Vec<JoinHandle<()>>,
     catalog: TableCatalog,
     cfg: ServerConfig,
+    /// Shared admission-control state for the TCP fronts (both the
+    /// reactor and the legacy blocking front count refusals and shed
+    /// decisions here, so the stats frame reports one truth).
+    admission: Arc<Admission>,
 }
 
 impl EmbeddingServer {
@@ -333,6 +351,10 @@ impl EmbeddingServer {
             }
             None => (None, Vec::new()),
         };
+        let admission = Arc::new(Admission::new(
+            cfg.max_inflight,
+            if cfg.slo_ms > 0 { Some(Duration::from_millis(cfg.slo_ms)) } else { None },
+        ));
         EmbeddingServer {
             router,
             senders,
@@ -343,7 +365,14 @@ impl EmbeddingServer {
             dispatchers,
             catalog,
             cfg,
+            admission,
         }
+    }
+
+    /// The admission-control state shared by the TCP fronts (inflight
+    /// cap, SLO shedder, refusal/idle-close counters).
+    pub fn admission(&self) -> &Arc<Admission> {
+        &self.admission
     }
 
     /// The leader-resident catalog of the served tables (metadata only).
@@ -486,6 +515,10 @@ impl EmbeddingServer {
             out.push_str(&line);
         }
         if let Some(line) = self.spill_summary() {
+            out.push('\n');
+            out.push_str(&line);
+        }
+        if let Some(line) = self.admission.summary() {
             out.push('\n');
             out.push_str(&line);
         }
@@ -1104,6 +1137,29 @@ mod tests {
         assert_eq!(tp.version(), None);
         let err = tp.update_table(0, &[(0, vec![0.0; 4])]).unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::Unsupported);
+    }
+
+    #[test]
+    fn admission_state_flows_through_server_config() {
+        let (_, set) = quantized_set(2, 20, 4);
+        let server = EmbeddingServer::start(
+            set,
+            ServerConfig { max_inflight: 1, slo_ms: 50, ..Default::default() },
+        );
+        // Configured admission is visible in the stats block even
+        // before traffic (the operator can see the control is armed).
+        assert!(server.stats_text().contains("admission: 0 admitted"));
+        let guard = Admission::admit(server.admission(), Instant::now()).expect("first fits");
+        let shed = Admission::admit(server.admission(), Instant::now());
+        assert!(shed.is_err(), "second must hit the inflight cap");
+        drop(guard);
+        let text = server.stats_text();
+        assert!(text.contains("admission: 1 admitted"), "{text}");
+        assert_eq!(server.admission().snapshot().shed_total(), 1);
+        // Unconfigured, untouched admission stays out of the block.
+        let (_, set) = quantized_set(2, 20, 4);
+        let plain = EmbeddingServer::start(set, ServerConfig::default());
+        assert!(!plain.stats_text().contains("admission:"));
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! TCP front-end: the embedding server over a socket, so non-Rust
-//! clients (the ranking tier) can query pooled embeddings.
+//! Blocking TCP front-end: the embedding server over a socket, so
+//! non-Rust clients (the ranking tier) can query pooled embeddings.
 //!
 //! Wire protocol (little-endian, one request per frame):
 //!
@@ -21,35 +21,46 @@
 //!           the connection kept framed (sharded mode only).
 //! ```
 //!
-//! Connections are accepted on the leader; request splitting and
-//! scatter-gather happen in the sharded engine behind
-//! [`EmbeddingServer`], which records per-shard service latency the
-//! stats frame (and [`TcpFront::stats_text`]) report. Request validation
-//! uses the leader's [`TableCatalog`] — the front never touches table
-//! bytes.
+//! Frame decoding — including the [`frame::MAX_FRAME_BYTES`] /
+//! [`frame::MAX_WIRE_ELEMS`] limits that keep attacker-controlled
+//! length fields from driving allocations — lives in
+//! [`crate::coordinator::frame`], shared with the epoll reactor front
+//! ([`crate::coordinator::reactor`]) so the two cannot drift apart.
+//! Admission control (inflight cap, SLO shedding) is shared state on
+//! [`EmbeddingServer::admission`]; shed requests get an error frame
+//! prefixed `"shed: "`.
 //!
-//! One thread per connection (connections are few and long-lived in an
-//! embedding tier; the per-shard workers behind it do the real fan-out).
+//! This front is **one thread per connection** — the legacy
+//! (`--front blocking`) baseline kept for bit-exactness comparisons and
+//! as the simplest-possible reference implementation. Production
+//! concurrency belongs to the reactor front, which holds idle
+//! connections without threads.
 //!
 //! [`TableCatalog`]: crate::coordinator::TableCatalog
+//! [`EmbeddingServer::admission`]: crate::coordinator::EmbeddingServer::admission
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::catalog::TableCatalog;
+use crate::coordinator::frame::{self, Frame};
+use crate::coordinator::metrics::{Admission, InflightGuard, ServerMetrics, ShedReason};
 use crate::coordinator::server::EmbeddingServer;
 use crate::data::trace::Request;
 use crate::util::sync::atomic::{AtomicBool, Ordering};
 use crate::util::sync::{lock_ignore_poison, Mutex};
 
-const ERR_SENTINEL: u32 = 0xFFFF_FFFF;
-const STATS_SENTINEL: u32 = 0xFFFF_FFFE;
-const UPDATE_SENTINEL: u32 = 0xFFFF_FFFD;
+// io-policy: blocking-front sockets carry 30 s read/write timeouts (a
+// slowloris peer is disconnected, not waited on forever), and every
+// frame is decoded by coordinator::frame, which refuses declared sizes
+// past MAX_FRAME_BYTES / MAX_WIRE_ELEMS before allocating.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// A running TCP front-end.
+/// A running blocking (thread-per-connection) TCP front-end.
 pub struct TcpFront {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
@@ -79,14 +90,24 @@ impl TcpFront {
                         Ok((stream, _)) => {
                             let srv = Arc::clone(&conn_server);
                             let m = Arc::clone(&conn_metrics);
-                            conns.push(
-                                std::thread::Builder::new()
-                                    .name("emberq-tcp-conn".into())
-                                    .spawn(move || {
-                                        let _ = handle_conn(stream, &srv, &m);
-                                    })
-                                    .expect("spawn conn"),
-                            );
+                            let spawned = std::thread::Builder::new()
+                                .name("emberq-tcp-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_conn(stream, &srv, &m);
+                                });
+                            match spawned {
+                                Ok(h) => conns.push(h),
+                                // Thread exhaustion must not kill the
+                                // accept loop: refuse this connection
+                                // (dropping the closure closes the
+                                // socket), count the refusal, and keep
+                                // accepting — earlier connections
+                                // finishing will free threads.
+                                Err(_) => {
+                                    conn_server.admission().record_refused_conn();
+                                }
+                            }
+                            conns.retain(|h| !h.is_finished());
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(2));
@@ -135,7 +156,9 @@ impl Drop for TcpFront {
     }
 }
 
-fn stats_text(server: &EmbeddingServer, metrics: &Mutex<ServerMetrics>) -> String {
+/// The stats block both fronts return for a stats frame: front-side
+/// request metrics on top of the server's own residency/shard block.
+pub(crate) fn stats_text(server: &EmbeddingServer, metrics: &Mutex<ServerMetrics>) -> String {
     let front = lock_ignore_poison(metrics).clone();
     let (p50, p95, p99) = front.latency.percentiles();
     format!(
@@ -149,6 +172,85 @@ fn stats_text(server: &EmbeddingServer, metrics: &Mutex<ServerMetrics>) -> Strin
     )
 }
 
+/// Semantic validation of a decoded lookup frame against the catalog:
+/// table arity, table range, then row-id ranges — first violation wins,
+/// all reported as error frames (the stream stays framed). Shared by
+/// both fronts.
+pub(crate) fn lookup_request(
+    entries: Vec<(u32, Vec<u32>)>,
+    catalog: &TableCatalog,
+) -> Result<Request, String> {
+    let nt = catalog.num_tables();
+    let mut err = if entries.len() != nt {
+        Some(format!("expected {nt} tables, got {}", entries.len()))
+    } else {
+        None
+    };
+    let mut ids: Vec<Vec<u32>> = vec![Vec::new(); nt];
+    for (table, lookup) in entries {
+        let t = table as usize;
+        if t >= nt {
+            err.get_or_insert(format!("table {t} out of range"));
+        } else {
+            ids[t] = lookup;
+        }
+    }
+    let req = Request { ids };
+    match err.or_else(|| catalog.validate(&req).err()) {
+        Some(msg) => Err(msg),
+        None => Ok(req),
+    }
+}
+
+/// Encode the error frame for a shed request. The `"shed: "` prefix is
+/// load-bearing: clients and the saturation bench use it to tell
+/// admission-control rejections from semantic errors.
+pub(crate) fn shed_frame(reason: ShedReason) -> Vec<u8> {
+    frame::error_frame(&format!("shed: {reason}"))
+}
+
+/// Run one admitted lookup to completion: submit through the server
+/// (dynamic-batching intake on the sharded path), record front metrics
+/// and the admitted latency the SLO shedder judges, release the
+/// inflight slot, and encode the reply. Shared by both fronts.
+pub(crate) fn execute_lookup(
+    server: &EmbeddingServer,
+    metrics: &Mutex<ServerMetrics>,
+    req: &Request,
+    guard: InflightGuard,
+) -> Vec<u8> {
+    let pooled: usize = req.ids.iter().map(Vec::len).sum();
+    let t0 = Instant::now();
+    // Through the dynamic-batching intake on the sharded path, so
+    // concurrent connections coalesce per the server's BatchPolicy.
+    let out = server.submit(req);
+    let dt = t0.elapsed();
+    server.admission().record(dt);
+    drop(guard);
+    {
+        let mut m = lock_ignore_poison(metrics);
+        m.latency.record(dt);
+        m.requests += 1;
+        m.lookups += pooled as u64;
+    }
+    frame::lookup_reply_frame(&out)
+}
+
+/// Apply a decoded update frame and encode the reply (version on
+/// commit, error frame on rejection). Updates bypass admission: they
+/// are rare control-plane traffic, and shedding one would silently
+/// drop a data correction. Shared by both fronts.
+pub(crate) fn update_reply(
+    server: &EmbeddingServer,
+    table: usize,
+    rows: &[(u32, Vec<f32>)],
+) -> Vec<u8> {
+    match server.update_table(table, rows) {
+        Ok(version) => frame::update_ok_frame(version),
+        Err(e) => frame::error_frame(&e.to_string()),
+    }
+}
+
 fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
@@ -156,119 +258,75 @@ fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
 }
 
 fn handle_conn(
-    stream: TcpStream,
+    mut stream: TcpStream,
     server: &EmbeddingServer,
     metrics: &Mutex<ServerMetrics>,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true)?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
     let catalog = server.catalog();
-    let nt = catalog.num_tables();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
     loop {
-        let n = match read_u32(&mut reader) {
-            Ok(n) => n,
-            Err(_) => return Ok(()), // client closed
-        };
-        if n == STATS_SENTINEL {
-            let text = stats_text(server, metrics);
-            writer.write_all(&STATS_SENTINEL.to_le_bytes())?;
-            writer.write_all(&(text.len() as u32).to_le_bytes())?;
-            writer.write_all(text.as_bytes())?;
-            writer.flush()?;
-            continue;
-        }
-        if n == UPDATE_SENTINEL {
-            let table = read_u32(&mut reader)? as usize;
-            let num_rows = read_u32(&mut reader)? as usize;
-            if table >= nt || num_rows > 1 << 20 {
-                // Without a valid table there is no dim to frame the
-                // payload with — the stream cannot stay synchronized, so
-                // refuse the connection outright (same policy as absurd
-                // lookup frames).
-                return Ok(());
-            }
-            let dim = catalog.dim_of(table);
-            let mut rows = Vec::with_capacity(num_rows);
-            let mut b = [0u8; 4];
-            for _ in 0..num_rows {
-                let id = read_u32(&mut reader)?;
-                let mut vals = Vec::with_capacity(dim);
-                for _ in 0..dim {
-                    reader.read_exact(&mut b)?;
-                    vals.push(f32::from_le_bytes(b));
+        // Decode every complete frame the buffer holds before reading
+        // more. parse_frame enforces the byte budget on *declared*
+        // sizes, so the buffer never grows meaningfully past
+        // MAX_FRAME_BYTES before a doomed frame is rejected.
+        loop {
+            match frame::parse_frame(&buf, catalog) {
+                Ok(None) => break, // incomplete: need more bytes
+                Ok(Some((fr, consumed))) => {
+                    buf.drain(..consumed);
+                    let arrival = Instant::now();
+                    let reply = match fr {
+                        Frame::Stats => frame::stats_frame(&stats_text(server, metrics)),
+                        Frame::Update { table, rows } => update_reply(server, table, &rows),
+                        Frame::Lookup { entries } => match lookup_request(entries, catalog) {
+                            Err(msg) => frame::error_frame(&msg),
+                            Ok(req) => match Admission::admit(server.admission(), arrival) {
+                                Err(reason) => shed_frame(reason),
+                                Ok(guard) => execute_lookup(server, metrics, &req, guard),
+                            },
+                        },
+                    };
+                    stream.write_all(&reply)?;
                 }
-                rows.push((id, vals));
-            }
-            match server.update_table(table, &rows) {
-                Ok(version) => {
-                    writer.write_all(&UPDATE_SENTINEL.to_le_bytes())?;
-                    writer.write_all(&version.to_le_bytes())?;
-                }
-                Err(e) => {
-                    let msg = e.to_string();
-                    writer.write_all(&ERR_SENTINEL.to_le_bytes())?;
-                    writer.write_all(&(msg.len() as u32).to_le_bytes())?;
-                    writer.write_all(msg.as_bytes())?;
+                Err(pe) => {
+                    // Limit violations get a clean error frame naming
+                    // the limit; structural violations (pe.reply ==
+                    // false) cannot keep the stream framed even for
+                    // that. Either way the connection is done.
+                    if pe.reply {
+                        let _ = stream.write_all(&frame::error_frame(&pe.msg));
+                    }
+                    return Ok(());
                 }
             }
-            writer.flush()?;
-            continue;
         }
-        let n = n as usize;
-        let mut err: Option<String> = None;
-        let mut ids: Vec<Vec<u32>> = vec![Vec::new(); nt];
-        if n != nt {
-            err = Some(format!("expected {nt} tables, got {n}"));
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            // WouldBlock/TimedOut is the read timeout firing: a
+            // slowloris (or dead) peer — disconnect rather than pin
+            // this thread forever.
+            Err(_) => return Ok(()),
         }
-        // Always drain the declared payload so the stream stays framed.
-        for _ in 0..n {
-            let table = read_u32(&mut reader)? as usize;
-            let len = read_u32(&mut reader)? as usize;
-            if len > 1 << 20 {
-                return Ok(()); // refuse absurd frames outright
-            }
-            let mut lookup = Vec::with_capacity(len);
-            for _ in 0..len {
-                lookup.push(read_u32(&mut reader)?);
-            }
-            if table >= nt {
-                err.get_or_insert(format!("table {table} out of range"));
-            } else {
-                ids[table] = lookup;
-            }
-        }
-        // Wire-level framing errors (arity, table id) are checked above;
-        // the request itself is validated by the leader's catalog.
-        let req = Request { ids };
-        if err.is_none() {
-            err = catalog.validate(&req).err();
-        }
-        if let Some(msg) = err {
-            writer.write_all(&ERR_SENTINEL.to_le_bytes())?;
-            writer.write_all(&(msg.len() as u32).to_le_bytes())?;
-            writer.write_all(msg.as_bytes())?;
-            writer.flush()?;
-            continue;
-        }
-        let pooled: usize = req.ids.iter().map(Vec::len).sum();
-        let t0 = Instant::now();
-        // Through the dynamic-batching intake on the sharded path, so
-        // concurrent connections coalesce per the server's BatchPolicy.
-        let out = server.submit(&req);
-        let dt = t0.elapsed();
-        {
-            let mut m = lock_ignore_poison(metrics);
-            m.latency.record(dt);
-            m.requests += 1;
-            m.lookups += pooled as u64;
-        }
-        writer.write_all(&(out.len() as u32).to_le_bytes())?;
-        for v in &out {
-            writer.write_all(&v.to_le_bytes())?;
-        }
-        writer.flush()?;
     }
+}
+
+/// Client-side guard for text-frame lengths (error messages, stats
+/// blocks): byte counts rather than the element counts
+/// [`frame::check_reply_len`] covers.
+fn check_text_len(len: usize, what: &str) -> std::io::Result<()> {
+    if len > frame::MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("{what} length {len} exceeds the {}-byte frame limit", frame::MAX_FRAME_BYTES),
+        ));
+    }
+    Ok(())
 }
 
 /// Minimal client for tests/examples.
@@ -278,7 +336,8 @@ pub struct TcpClient {
 }
 
 impl TcpClient {
-    /// Connect to a [`TcpFront`].
+    /// Connect to a serving front (blocking or reactor — the wire
+    /// protocol is identical).
     pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<TcpClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
@@ -286,6 +345,14 @@ impl TcpClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
         })
+    }
+
+    fn read_error(&mut self) -> std::io::Result<std::io::Error> {
+        let len = read_u32(&mut self.reader)? as usize;
+        check_text_len(len, "error message")?;
+        let mut msg = vec![0u8; len];
+        self.reader.read_exact(&mut msg)?;
+        Ok(std::io::Error::other(String::from_utf8_lossy(&msg).into_owned()))
     }
 
     /// One pooled lookup; `ids[t]` are the rows pooled from table `t`.
@@ -300,12 +367,10 @@ impl TcpClient {
         }
         self.writer.flush()?;
         let n = read_u32(&mut self.reader)?;
-        if n == ERR_SENTINEL {
-            let len = read_u32(&mut self.reader)? as usize;
-            let mut msg = vec![0u8; len];
-            self.reader.read_exact(&mut msg)?;
-            return Err(std::io::Error::other(String::from_utf8_lossy(&msg).into_owned()));
+        if n == frame::ERR_SENTINEL {
+            return Err(self.read_error()?);
         }
+        frame::check_reply_len(n as usize, "lookup reply")?;
         let mut out = vec![0.0f32; n as usize];
         let mut b = [0u8; 4];
         for v in out.iter_mut() {
@@ -320,7 +385,7 @@ impl TcpClient {
     /// snapshot version on commit; failures come back as error frames
     /// and the connection stays usable.
     pub fn update(&mut self, table: u32, rows: &[(u32, Vec<f32>)]) -> std::io::Result<u64> {
-        self.writer.write_all(&UPDATE_SENTINEL.to_le_bytes())?;
+        self.writer.write_all(&frame::UPDATE_SENTINEL.to_le_bytes())?;
         self.writer.write_all(&table.to_le_bytes())?;
         self.writer.write_all(&(rows.len() as u32).to_le_bytes())?;
         for (id, vals) in rows {
@@ -331,13 +396,10 @@ impl TcpClient {
         }
         self.writer.flush()?;
         let sentinel = read_u32(&mut self.reader)?;
-        if sentinel == ERR_SENTINEL {
-            let len = read_u32(&mut self.reader)? as usize;
-            let mut msg = vec![0u8; len];
-            self.reader.read_exact(&mut msg)?;
-            return Err(std::io::Error::other(String::from_utf8_lossy(&msg).into_owned()));
+        if sentinel == frame::ERR_SENTINEL {
+            return Err(self.read_error()?);
         }
-        if sentinel != UPDATE_SENTINEL {
+        if sentinel != frame::UPDATE_SENTINEL {
             return Err(std::io::Error::other("unexpected update reply"));
         }
         let mut b = [0u8; 8];
@@ -346,15 +408,16 @@ impl TcpClient {
     }
 
     /// Fetch the server's stats block (front metrics + residency +
-    /// per-shard service latency).
+    /// per-shard service latency + admission counters).
     pub fn stats(&mut self) -> std::io::Result<String> {
-        self.writer.write_all(&STATS_SENTINEL.to_le_bytes())?;
+        self.writer.write_all(&frame::STATS_SENTINEL.to_le_bytes())?;
         self.writer.flush()?;
         let sentinel = read_u32(&mut self.reader)?;
-        if sentinel != STATS_SENTINEL {
+        if sentinel != frame::STATS_SENTINEL {
             return Err(std::io::Error::other("unexpected stats reply"));
         }
         let len = read_u32(&mut self.reader)? as usize;
+        check_text_len(len, "stats block")?;
         let mut text = vec![0u8; len];
         self.reader.read_exact(&mut text)?;
         Ok(String::from_utf8_lossy(&text).into_owned())
@@ -459,6 +522,9 @@ mod tests {
         assert!(text.contains("front: 6 req"), "{text}");
         assert!(text.contains("resident"), "{text}");
         assert!(text.contains("shard 0:") && text.contains("shard 1:"), "{text}");
+        // Served traffic went through admission (unconfigured: nothing
+        // shed), so the counters are visible in the stats block.
+        assert!(text.contains("admission: 6 admitted"), "{text}");
         // The connection still serves lookups after a stats frame.
         assert_eq!(client.lookup(&[vec![1], vec![2], vec![3]]).unwrap().len(), 24);
         assert!(front.stats_text().contains("front: 7 req"));
@@ -530,5 +596,48 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn oversized_length_gets_a_clean_error_frame_then_close() {
+        // A lookup header declaring more ids than MAX_WIRE_ELEMS: the
+        // front must answer with an error frame naming the limit (no
+        // allocation happened server-side) and then close.
+        let server = test_server();
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(front.addr()).unwrap();
+        stream.write_all(&1u32.to_le_bytes()).unwrap();
+        stream.write_all(&0u32.to_le_bytes()).unwrap();
+        stream
+            .write_all(&((frame::MAX_WIRE_ELEMS as u32) + 1).to_le_bytes())
+            .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(read_u32(&mut reader).unwrap(), frame::ERR_SENTINEL);
+        let len = read_u32(&mut reader).unwrap() as usize;
+        let mut msg = vec![0u8; len];
+        reader.read_exact(&mut msg).unwrap();
+        let msg = String::from_utf8_lossy(&msg).into_owned();
+        assert!(msg.contains("per-field cap"), "{msg}");
+        // The connection is closed after the error frame...
+        let mut b = [0u8; 1];
+        assert_eq!(reader.read(&mut b).unwrap(), 0, "peer must close");
+        // ...but the server keeps serving new connections.
+        let mut client = TcpClient::connect(front.addr()).unwrap();
+        assert_eq!(client.lookup(&[vec![1], vec![2], vec![3]]).unwrap().len(), 24);
+    }
+
+    #[test]
+    fn half_frame_then_disconnect_leaves_the_server_serving() {
+        let server = test_server();
+        let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        {
+            let mut stream = TcpStream::connect(front.addr()).unwrap();
+            // Two bytes of a four-byte header, then hang up.
+            stream.write_all(&[0x03, 0x00]).unwrap();
+            stream.flush().unwrap();
+        }
+        let mut client = TcpClient::connect(front.addr()).unwrap();
+        assert_eq!(client.lookup(&[vec![1], vec![2], vec![3]]).unwrap().len(), 24);
     }
 }

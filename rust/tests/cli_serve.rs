@@ -150,6 +150,35 @@ fn help_lists_every_serve_flag() {
 }
 
 #[test]
+fn serve_front_and_admission_surface() {
+    let p = table_file("front.embq");
+    let p = p.to_str().unwrap();
+
+    // An unknown front is a clean one-line error naming the flag.
+    let out = emberq(&["serve", "--table", p, "--front", "warp9"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--front"), "{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("warp9"), "{}", stderr_of(&out));
+
+    // Admission flags without --listen: loud note, run continues (the
+    // closed-loop trace replay never sheds).
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "5",
+        "--batch", "2", "--slo-ms", "5", "--max-inflight", "8",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("--slo-ms"), "{}", stderr_of(&out));
+
+    // Same note for --front without --listen.
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "5",
+        "--batch", "2", "--front", "blocking",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("--front"), "{}", stderr_of(&out));
+}
+
+#[test]
 fn serve_kernel_backend_surface() {
     let p = table_file("kernel.embq");
     let p = p.to_str().unwrap();

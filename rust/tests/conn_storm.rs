@@ -1,0 +1,171 @@
+//! Connection-storm chaos scenario for the TCP fronts.
+//!
+//! A deterministic-shape storm (seeded `Rng`/`Zipf`, wall-clock-free
+//! decisions) hammers each front with everything a production accept
+//! loop sees at once:
+//!
+//! * **churners** — connect, fire a couple of lookups, disconnect, loop;
+//! * **idlers** — connect and go silent (the reactor's sweep and the
+//!   blocking front's socket timeouts exist for these);
+//! * **vandals** — send garbage or half frames and vanish;
+//! * **workers** — long-lived connections streaming Zipf-shaped lookups
+//!   whose replies must stay **bit-exact** against an unsharded oracle
+//!   server the whole time.
+//!
+//! The storm passes when every worker lookup matched the oracle, the
+//! front still serves a fresh connection afterwards, and the admission
+//! counters saw no sheds (nothing here is admission-limited — a shed
+//! would mean the storm corrupted the control state).
+
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use emberq::coordinator::{
+    EmbeddingServer, ReactorFront, ServerConfig, TableSet, TcpClient, TcpFront,
+};
+use emberq::data::trace::Request;
+use emberq::quant::GreedyQuantizer;
+use emberq::table::serial::AnyTable;
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+use emberq::util::{Rng, Zipf};
+
+const TABLES: usize = 3;
+const ROWS: usize = 64;
+const DIM: usize = 8;
+
+fn quantized_tables(seed: u64) -> Vec<AnyTable> {
+    (0..TABLES)
+        .map(|t| {
+            let tab = EmbeddingTable::randn(ROWS, DIM, seed + t as u64);
+            AnyTable::Fused(tab.quantize_fused(
+                &GreedyQuantizer::default(),
+                4,
+                ScaleBiasDtype::F16,
+            ))
+        })
+        .collect()
+}
+
+/// Zipf-shaped pooled lookup: a few hot rows dominate, like real
+/// embedding traffic.
+fn storm_request(rng: &mut Rng, zipf: &Zipf) -> Vec<Vec<u32>> {
+    (0..TABLES)
+        .map(|_| {
+            let pool = 1 + rng.below(6);
+            (0..pool).map(|_| zipf.sample(rng) as u32).collect()
+        })
+        .collect()
+}
+
+fn run_storm(addr: SocketAddr, oracle: &Arc<EmbeddingServer>) {
+    // Idlers: open sockets that never speak; they must not wedge an
+    // accept slot or a worker thread for anyone else. Held here so
+    // they stay open for the entire storm (the scope joins below).
+    let idlers: Vec<TcpStream> = (0..8).map(|_| TcpStream::connect(addr).unwrap()).collect();
+    std::thread::scope(|sc| {
+        // Workers: sustained bit-exact traffic through the whole storm.
+        for w in 0..4u64 {
+            let oracle = Arc::clone(oracle);
+            sc.spawn(move || {
+                let mut rng = Rng::new(0x5708 + w);
+                let zipf = Zipf::new(ROWS, 1.1);
+                let mut client = TcpClient::connect(addr).unwrap();
+                for i in 0..60 {
+                    let ids = storm_request(&mut rng, &zipf);
+                    let got = client.lookup(&ids).unwrap();
+                    let want = oracle.lookup(&Request { ids });
+                    assert_eq!(got, want, "worker {w} lookup {i} diverged");
+                }
+            });
+        }
+        // Churners: connect, a couple of lookups, disconnect, repeat.
+        for c in 0..3u64 {
+            let oracle = Arc::clone(oracle);
+            sc.spawn(move || {
+                let mut rng = Rng::new(0xC0C0 + c);
+                let zipf = Zipf::new(ROWS, 1.1);
+                for _ in 0..15 {
+                    let mut client = TcpClient::connect(addr).unwrap();
+                    for _ in 0..2 {
+                        let ids = storm_request(&mut rng, &zipf);
+                        let got = client.lookup(&ids).unwrap();
+                        assert_eq!(got, oracle.lookup(&Request { ids }), "churner diverged");
+                    }
+                }
+            });
+        }
+        // Vandals: garbage headers and half frames, then vanish.
+        for v in 0..3u64 {
+            sc.spawn(move || {
+                let mut rng = Rng::new(0xBAD + v);
+                for _ in 0..10 {
+                    let mut s = TcpStream::connect(addr).unwrap();
+                    match rng.below(3) {
+                        0 => {
+                            // Absurd table count: earns an error frame.
+                            let _ = s.write_all(&u32::MAX.to_le_bytes());
+                        }
+                        1 => {
+                            // Half a frame, then silence.
+                            let _ = s.write_all(&3u32.to_le_bytes());
+                            let _ = s.write_all(&1u32.to_le_bytes());
+                        }
+                        _ => {
+                            // Random bytes.
+                            let junk: Vec<u8> =
+                                (0..13).map(|_| rng.next_u64() as u8).collect();
+                            let _ = s.write_all(&junk);
+                        }
+                    }
+                    let _ = s.shutdown(Shutdown::Write);
+                }
+            });
+        }
+    });
+    drop(idlers);
+}
+
+fn assert_healthy_after(addr: SocketAddr, server: &EmbeddingServer) {
+    let mut c = TcpClient::connect(addr).unwrap();
+    assert_eq!(c.lookup(&[vec![1], vec![2], vec![3]]).unwrap().len(), TABLES * DIM);
+    let snap = server.admission().snapshot();
+    assert_eq!(snap.shed_total(), 0, "unconfigured admission must never shed: {snap:?}");
+    // 4 workers x 60 + 3 churners x 15 x 2 = 330 admitted lookups, plus
+    // the health check; vandal junk never reaches admission.
+    assert!(snap.admitted >= 331, "{snap:?}");
+    let stats = c.stats().unwrap();
+    assert!(stats.contains("admission:"), "{stats}");
+}
+
+#[test]
+fn connection_storm_reactor_front_stays_bit_exact() {
+    let server = Arc::new(EmbeddingServer::start(
+        TableSet::new(quantized_tables(4400)),
+        ServerConfig { num_shards: 2, ..Default::default() },
+    ));
+    // The oracle serves the same tables unsharded, straight through the
+    // table-parallel pool — no reactor, no batcher coalescing races.
+    let oracle = Arc::new(EmbeddingServer::start(
+        TableSet::new(quantized_tables(4400)),
+        ServerConfig::default(),
+    ));
+    let front = ReactorFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+    run_storm(front.addr(), &oracle);
+    assert_healthy_after(front.addr(), &server);
+}
+
+#[test]
+fn connection_storm_blocking_front_stays_bit_exact() {
+    let server = Arc::new(EmbeddingServer::start(
+        TableSet::new(quantized_tables(4400)),
+        ServerConfig { num_shards: 2, ..Default::default() },
+    ));
+    let oracle = Arc::new(EmbeddingServer::start(
+        TableSet::new(quantized_tables(4400)),
+        ServerConfig::default(),
+    ));
+    let front = TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+    run_storm(front.addr(), &oracle);
+    assert_healthy_after(front.addr(), &server);
+}

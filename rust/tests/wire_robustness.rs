@@ -1,0 +1,246 @@
+//! Wire-path robustness: truncated, oversized, and garbage frames
+//! against BOTH TCP fronts.
+//!
+//! The wire decoder trusts nothing: every declared length is checked
+//! against the documented frame limits *before* any allocation, limit
+//! violations come back as clean error frames (then a close), and a
+//! structurally unframeable stream is closed without desynchronizing.
+//! These tests drive raw sockets — no client-library framing to hide
+//! behind — and every property is asserted for the reactor front and
+//! the legacy blocking front alike, since both must hold the line.
+//!
+//! The "before any allocation" claim is tested by construction: the
+//! oversize tests declare multi-gigabyte payloads and never send them.
+//! A decoder that allocated-and-read the declared size would sit
+//! waiting for bytes that never come (and trip the socket timeout);
+//! the error frame arriving proves the refusal happened on the header
+//! alone.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use emberq::coordinator::frame::{ERR_SENTINEL, UPDATE_SENTINEL};
+use emberq::coordinator::{
+    EmbeddingServer, ReactorFront, ServerConfig, TableSet, TcpClient, TcpFront,
+};
+use emberq::quant::GreedyQuantizer;
+use emberq::table::serial::AnyTable;
+use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+
+fn make_server() -> Arc<EmbeddingServer> {
+    let tables: Vec<AnyTable> = (0..3)
+        .map(|t| {
+            let tab = EmbeddingTable::randn(40, 8, 9200 + t);
+            AnyTable::Fused(tab.quantize_fused(
+                &GreedyQuantizer::default(),
+                4,
+                ScaleBiasDtype::F16,
+            ))
+        })
+        .collect();
+    Arc::new(EmbeddingServer::start(
+        TableSet::new(tables),
+        ServerConfig { num_shards: 2, ..Default::default() },
+    ))
+}
+
+enum AnyFront {
+    Reactor(ReactorFront),
+    Blocking(TcpFront),
+}
+
+impl AnyFront {
+    fn addr(&self) -> SocketAddr {
+        match self {
+            AnyFront::Reactor(f) => f.addr(),
+            AnyFront::Blocking(f) => f.addr(),
+        }
+    }
+}
+
+/// Run `check` against a fresh server behind each front, so every
+/// robustness property is proven for the reactor AND the blocking path.
+fn on_both_fronts(check: impl Fn(&AnyFront)) {
+    for kind in ["reactor", "blocking"] {
+        let server = make_server();
+        let front = match kind {
+            "reactor" => AnyFront::Reactor(
+                ReactorFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap(),
+            ),
+            _ => AnyFront::Blocking(TcpFront::start(Arc::clone(&server), "127.0.0.1:0").unwrap()),
+        };
+        check(&front);
+    }
+}
+
+fn raw_conn(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    // A decoder that waits for a declared-but-unsent payload shows up
+    // as a clean failure here rather than a hung test.
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s
+}
+
+fn read_error_frame(s: &mut TcpStream) -> String {
+    let mut head = [0u8; 8];
+    s.read_exact(&mut head).unwrap();
+    assert_eq!(
+        u32::from_le_bytes(head[0..4].try_into().unwrap()),
+        ERR_SENTINEL,
+        "expected an error frame"
+    );
+    let len = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    let mut msg = vec![0u8; len];
+    s.read_exact(&mut msg).unwrap();
+    String::from_utf8_lossy(&msg).into_owned()
+}
+
+fn assert_eof(s: &mut TcpStream) {
+    let mut b = [0u8; 1];
+    let n = s.read(&mut b).unwrap_or(0);
+    assert_eq!(n, 0, "peer should have closed the connection");
+}
+
+fn assert_still_serving(addr: SocketAddr) {
+    let mut c = TcpClient::connect(addr).unwrap();
+    let out = c.lookup(&[vec![1], vec![2], vec![3]]).unwrap();
+    assert_eq!(out.len(), 24, "server must keep serving after abuse");
+}
+
+#[test]
+fn truncated_lookup_then_disconnect_leaves_the_server_serving() {
+    on_both_fronts(|front| {
+        let mut s = raw_conn(front.addr());
+        s.write_all(&3u32.to_le_bytes()).unwrap(); // table count...
+        s.write_all(&0u32.to_le_bytes()).unwrap(); // ...one table id, then vanish
+        s.shutdown(Shutdown::Write).unwrap();
+        assert_eof(&mut s); // half a frame is owed nothing
+        assert_still_serving(front.addr());
+    });
+}
+
+#[test]
+fn truncated_update_then_disconnect_leaves_the_server_serving() {
+    on_both_fronts(|front| {
+        let mut s = raw_conn(front.addr());
+        s.write_all(&UPDATE_SENTINEL.to_le_bytes()).unwrap();
+        s.write_all(&0u32.to_le_bytes()).unwrap(); // valid table, then vanish
+        s.shutdown(Shutdown::Write).unwrap();
+        assert_eof(&mut s);
+        assert_still_serving(front.addr());
+    });
+}
+
+#[test]
+fn oversized_lookup_length_is_refused_before_allocation() {
+    on_both_fronts(|front| {
+        let mut s = raw_conn(front.addr());
+        s.write_all(&1u32.to_le_bytes()).unwrap();
+        s.write_all(&0u32.to_le_bytes()).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap(); // ~4G ids declared, none sent
+        let msg = read_error_frame(&mut s);
+        assert!(msg.contains("per-field cap"), "{msg}");
+        assert_eof(&mut s);
+        assert_still_serving(front.addr());
+    });
+}
+
+#[test]
+fn oversized_update_row_count_is_refused_before_allocation() {
+    on_both_fronts(|front| {
+        let mut s = raw_conn(front.addr());
+        s.write_all(&UPDATE_SENTINEL.to_le_bytes()).unwrap();
+        s.write_all(&0u32.to_le_bytes()).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap(); // ~4G rows declared, none sent
+        let msg = read_error_frame(&mut s);
+        assert!(msg.contains("per-field cap"), "{msg}");
+        assert_eof(&mut s);
+        assert_still_serving(front.addr());
+    });
+}
+
+#[test]
+fn absurd_table_count_is_refused_on_the_header_alone() {
+    on_both_fronts(|front| {
+        let mut s = raw_conn(front.addr());
+        // Garbage that still parses as a lookup header: 0xDEADBEEF
+        // tables could never fit in a frame, so the budget check fires
+        // before any entry is read.
+        s.write_all(&0xDEAD_BEEFu32.to_le_bytes()).unwrap();
+        let msg = read_error_frame(&mut s);
+        assert!(msg.contains("frame limit"), "{msg}");
+        assert_eof(&mut s);
+        assert_still_serving(front.addr());
+    });
+}
+
+#[test]
+fn update_with_unknown_table_is_a_silent_close() {
+    on_both_fronts(|front| {
+        let mut s = raw_conn(front.addr());
+        s.write_all(&UPDATE_SENTINEL.to_le_bytes()).unwrap();
+        s.write_all(&99u32.to_le_bytes()).unwrap(); // no such table: no dim
+        s.write_all(&1u32.to_le_bytes()).unwrap();
+        // Without a dim the payload cannot be framed, so the front
+        // closes rather than desynchronize. No error frame is owed.
+        assert_eof(&mut s);
+        assert_still_serving(front.addr());
+    });
+}
+
+#[test]
+fn last_request_before_half_close_still_gets_its_reply() {
+    on_both_fronts(|front| {
+        let mut s = raw_conn(front.addr());
+        // A complete, valid 3-table lookup, then write-side shutdown:
+        // the request was fully delivered, so a reply is owed even
+        // though no more bytes will ever arrive.
+        s.write_all(&3u32.to_le_bytes()).unwrap();
+        for t in 0..3u32 {
+            s.write_all(&t.to_le_bytes()).unwrap();
+            s.write_all(&1u32.to_le_bytes()).unwrap();
+            s.write_all(&t.to_le_bytes()).unwrap(); // row id = t
+        }
+        s.shutdown(Shutdown::Write).unwrap();
+        let mut head = [0u8; 4];
+        s.read_exact(&mut head).unwrap();
+        let n = u32::from_le_bytes(head) as usize;
+        assert_eq!(n, 24, "3 tables x dim 8");
+        let mut payload = vec![0u8; n * 4];
+        s.read_exact(&mut payload).unwrap();
+        assert_eof(&mut s);
+        assert_still_serving(front.addr());
+    });
+}
+
+#[test]
+fn garbage_after_a_valid_frame_poisons_only_that_connection() {
+    on_both_fronts(|front| {
+        let mut c = TcpClient::connect(front.addr()).unwrap();
+        assert_eq!(c.lookup(&[vec![1], vec![2], vec![3]]).unwrap().len(), 24);
+        // Now a different connection goes hostile mid-session...
+        let mut s = raw_conn(front.addr());
+        s.write_all(&1u32.to_le_bytes()).unwrap();
+        s.write_all(&0u32.to_le_bytes()).unwrap();
+        s.write_all(&2u32.to_le_bytes()).unwrap();
+        s.write_all(&5u32.to_le_bytes()).unwrap();
+        s.write_all(&7u32.to_le_bytes()).unwrap(); // a valid 1-table lookup
+        let mut head = [0u8; 8];
+        s.read_exact(&mut head).unwrap();
+        // (Arity error frame — the server has 3 tables — but framed.)
+        assert_eq!(u32::from_le_bytes(head[0..4].try_into().unwrap()), ERR_SENTINEL);
+        let len = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+        let mut msg = vec![0u8; len];
+        s.read_exact(&mut msg).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap(); // ...then garbage
+        s.shutdown(Shutdown::Write).unwrap();
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink); // error frame or close; either is fine
+        // ...while the polite connection keeps working.
+        assert_eq!(c.lookup(&[vec![4], vec![5], vec![6]]).unwrap().len(), 24);
+        assert_still_serving(front.addr());
+    });
+}

@@ -1,8 +1,8 @@
 //! The concurrency-invariant linter behind `cargo xtask lint`.
 //!
-//! Six rules, each guarding an invariant the compiler cannot express and
-//! CI's clippy pass cannot see (they are *placement* rules — what may
-//! appear in which module — not syntax rules):
+//! Seven rules, each guarding an invariant the compiler cannot express
+//! and CI's clippy pass cannot see (they are *placement* rules — what
+//! may appear in which module — not syntax rules):
 //!
 //! | rule            | invariant                                                    |
 //! |-----------------|--------------------------------------------------------------|
@@ -12,6 +12,7 @@
 //! | `wall_clock`    | no `Instant::now`/`SystemTime` inside `chaos/` (determinism) |
 //! | `magic_docs`    | on-disk magics in code ⇔ the formats documented in docs      |
 //! | `sync_import`   | `shard/`+`coordinator/` use `util::sync`, never raw std sync |
+//! | `io_policy`     | coordinator socket loops state an `io-policy:` comment       |
 //!
 //! A site that must break a rule carries a waiver comment —
 //! `lint:allow(<rule>)` on the same line or within the two lines above —
@@ -194,6 +195,35 @@ fn lint_one(path: &str, s: &Scanned, out: &mut Vec<Violation>) {
                         }
                         break;
                     }
+                }
+            }
+        }
+    }
+
+    // Rule 7: a file in coordinator/ that owns a socket I/O loop
+    // (`TcpListener` accept loop or a raw `epoll_wait` loop) must state
+    // its timeout/limit policy in an `io-policy:` comment. Unbounded
+    // reads, missing idle deadlines, and cap-less accept loops are wire
+    // bugs that review keeps missing because the policy lives nowhere;
+    // the comment is the place reviewers (and this linter) can check.
+    if in_dir("rust/src/coordinator/") {
+        let has_policy = s.lines.iter().any(|l| l.comment.contains("io-policy:"));
+        if !has_policy {
+            for (idx, line) in s.lines.iter().enumerate() {
+                let code = line.code.as_str();
+                if ["TcpListener", "epoll_wait"].iter().any(|t| has_token(code, t)) {
+                    if !waived(s, idx, "io_policy") {
+                        out.push(Violation {
+                            file: path.into(),
+                            line: idx + 1,
+                            rule: "io_policy",
+                            msg: "this file owns a socket I/O loop but has no `io-policy:` \
+                                  comment stating its timeouts, size limits, and backpressure; \
+                                  add one (or waive with `lint:allow(io_policy)`)"
+                                .into(),
+                        });
+                    }
+                    break;
                 }
             }
         }
@@ -426,6 +456,29 @@ mod tests {
         let doc = (MAGIC_DOC.to_string(),
                    "# formats\nfuture: EMBQSPL2 etc.\n## `EMBQSPL1` — spill\n".to_string());
         assert!(lint_files(&[code, doc]).is_empty());
+    }
+
+    #[test]
+    fn io_policy_required_for_coordinator_io_loops() {
+        // A socket loop with no policy comment is flagged...
+        let v = one("rust/src/coordinator/tcp.rs", "let l = TcpListener::bind(addr);\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "io_policy");
+        // ...an `io-policy:` comment anywhere in the file satisfies it...
+        let ok = "// io-policy: 30 s socket timeouts, 64 MiB frame cap\n\
+                  let l = TcpListener::bind(addr);\n";
+        assert!(one("rust/src/coordinator/tcp.rs", ok).is_empty());
+        // ...a raw epoll loop counts as a socket loop too, and is waivable.
+        let v = one("rust/src/coordinator/reactor.rs", "let n = epoll_wait(ep, p, c, t);\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "io_policy");
+        let waived = "// lint:allow(io_policy) — policy lives in the parent module\n\
+                      let n = epoll_wait(ep, p, c, t);\n";
+        assert!(one("rust/src/coordinator/reactor.rs", waived).is_empty());
+        // Mentions in comments alone never trigger (scanner strips them).
+        assert!(one("rust/src/coordinator/mod.rs", "// epoll_wait in prose\n").is_empty());
+        // Outside coordinator/, sockets carry no policy obligation.
+        assert!(one("rust/src/util/net.rs", "let l = TcpListener::bind(a);\n").is_empty());
     }
 
     #[test]

@@ -79,14 +79,17 @@ fn seeded_violations_are_caught(files: &[(String, String)]) -> bool {
         use std::sync::Mutex;\n";
     let chaos_path = "rust/src/chaos/__xtask_seeded__.rs";
     let chaos = "fn t() -> Instant { Instant::now() }\n";
+    let coord_path = "rust/src/coordinator/__xtask_seeded__.rs";
+    let coord = "fn f() { let _l = TcpListener::bind(\"127.0.0.1:0\"); }\n";
 
     let mut tree = files.to_vec();
     tree.push((seeded_path.to_string(), seeded.to_string()));
     tree.push((chaos_path.to_string(), chaos.to_string()));
+    tree.push((coord_path.to_string(), coord.to_string()));
     let got = lint::lint_files(&tree);
 
     let mut ok = true;
-    for rule in ["unsafe_code", "raw_lock", "sync_import", "wall_clock"] {
+    for rule in ["unsafe_code", "raw_lock", "sync_import", "wall_clock", "io_policy"] {
         if !got.iter().any(|v| v.rule == rule && v.file.contains("__xtask_seeded__")) {
             eprintln!("xtask lint --self-test: seeded `{rule}` violation was NOT caught");
             ok = false;
