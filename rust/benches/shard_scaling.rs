@@ -50,6 +50,15 @@
 //! the arms before anything is timed. On a CPU with no SIMD the arms
 //! coincide (speedup ~1.0) and the JSON says `"backend": "scalar"`.
 //!
+//! `--mixed` measures heat-adaptive mixed precision against the paper's
+//! uniform int4 at the *same* total byte budget: Zipf whole-table
+//! traffic warms the heat window, one `requantize_once` pass upgrades
+//! hot tables (int8) and downgrades the cold tail (shared codebooks),
+//! and the arms report batch p50/p99, heat-weighted normalized L2 vs
+//! the FP32 masters, and a synthetic ranking AUC. The adaptive arm must
+//! be strictly below uniform int4 on heat-weighted error (asserted) —
+//! the accuracy the budget buys back at equal bytes.
+//!
 //! ```bash
 //! cargo bench --bench shard_scaling            # full (1M rows)
 //! cargo bench --bench shard_scaling -- --quick # small + fast
@@ -59,6 +68,7 @@
 //! cargo bench --bench shard_scaling -- --tiny --spill-async  # sync vs async I/O
 //! cargo bench --bench shard_scaling -- --tiny --update-churn # live-update arms
 //! cargo bench --bench shard_scaling -- --tiny --simd    # scalar vs SIMD kernels
+//! cargo bench --bench shard_scaling -- --tiny --mixed   # mixed-precision arms
 //! cargo bench --bench shard_scaling -- --tiny --saturate # admission-control curve
 //! ```
 //!
@@ -81,8 +91,8 @@ use emberq::coordinator::{
     TableSet, TcpClient, TcpFront,
 };
 use emberq::data::trace::Request;
-use emberq::eval::{JsonWriter, TableWriter};
-use emberq::quant::AsymQuantizer;
+use emberq::eval::{roc_auc, JsonWriter, TableWriter};
+use emberq::quant::{AsymQuantizer, GreedyQuantizer};
 use emberq::shard::{ShardConfig, ShardedEngine};
 use emberq::sls::{backend, sls_fused, KernelBackend, SlsArgs, SlsTable};
 use emberq::table::serial::AnyTable;
@@ -102,6 +112,10 @@ fn main() {
     }
     if std::env::args().any(|a| a == "--simd") {
         run_simd(tiny, quick);
+        return;
+    }
+    if std::env::args().any(|a| a == "--mixed") {
+        run_mixed(tiny, quick);
         return;
     }
     if std::env::args().any(|a| a == "--update-churn") {
@@ -612,6 +626,213 @@ fn run_simd(tiny: bool, quick: bool) {
     }
     println!("\nKernel backends — scalar oracle vs {simd}, bit-identical outputs:\n{}", tw.render());
     println!("Dispatch check: the SIMD arm must match the scalar arm bit-for-bit (asserted).");
+}
+
+/// Mixed-precision mode: the paper's uniform int4 (FP16) vs the
+/// heat-adaptive budget solver at the *same* total byte budget, over
+/// Zipf whole-table traffic (alpha 1.5 — the skew the solver trades
+/// on).
+///
+/// The adaptive arm starts from the FP32 masters, warms the heat window
+/// with the full request stream, then commits one [`requantize_once`]
+/// pass at exactly the uniform-int4 byte budget: hot tables upgrade to
+/// int8, the cold tail drops to shared codebooks, total bytes stay at
+/// or under the budget. Both arms' accuracy is reported under the same
+/// observed heats (the pass's `RequantOutcome` carries both sides), so
+/// the heat-weighted L2 delta is apples to apples; the synthetic
+/// ranking AUC uses FP32-teacher labels (`sign(row · probe)`) on a
+/// shared Zipf event set. The adaptive arm must land strictly below
+/// uniform int4 on heat-weighted error at equal bytes — asserted, per
+/// the paper-extension acceptance criterion.
+///
+/// [`requantize_once`]: emberq::shard::ShardedEngine::requantize_once
+fn run_mixed(tiny: bool, quick: bool) {
+    let (num_tables, rows, dim, requests, reps) = if tiny {
+        (8usize, 1_024usize, 16usize, 400usize, 2usize)
+    } else if quick {
+        (8, 4_096, 32, 1_500, 3)
+    } else {
+        (12, 16_384, 32, 6_000, 5)
+    };
+    let max_batch = 16usize;
+    let shards = 4usize;
+    let q = GreedyQuantizer::default();
+    let fp32: Vec<EmbeddingTable> = (0..num_tables)
+        .map(|t| EmbeddingTable::randn_sigma(rows, dim, 0.1, 0x6C00 + t as u64))
+        .collect();
+    let zipf = Zipf::new(num_tables, 1.5);
+    let mut rng = Rng::new(0x6C6C);
+    let reqs: Vec<Request> = (0..requests)
+        .map(|_| {
+            let mut pools = vec![0usize; num_tables];
+            for _ in 0..24 {
+                pools[zipf.sample(&mut rng)] += 3;
+            }
+            Request {
+                ids: pools
+                    .iter()
+                    .map(|&pool| (0..pool).map(|_| rng.below(rows) as u32).collect())
+                    .collect(),
+            }
+        })
+        .collect();
+    // The shared budget: exactly the bytes of uniform int4 (FP16).
+    let budget = num_tables * rows * (dim.div_ceil(2) + 4);
+
+    // Ranking-eval events shared by both arms: Zipf-weighted (table,
+    // row, probe) triples with an FP32-teacher label — does the
+    // quantized engine still rank what the masters rank?
+    let events = if tiny { 1_000usize } else { 4_000 };
+    let mut erng = Rng::new(0x6C6D);
+    let evs: Vec<(usize, u32)> =
+        (0..events).map(|_| (zipf.sample(&mut erng), erng.below(rows) as u32)).collect();
+    let probes: Vec<Vec<f32>> = (0..events).map(|_| erng.normal_vec(dim, 1.0)).collect();
+    let labels: Vec<f32> = evs
+        .iter()
+        .zip(&probes)
+        .map(|(&(t, r), u)| {
+            let dot: f32 = fp32[t].row(r as usize).iter().zip(u).map(|(a, b)| a * b).sum();
+            if dot > 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let score_events = |engine: &ShardedEngine| -> Vec<f32> {
+        evs.iter()
+            .zip(&probes)
+            .map(|(&(t, r), u)| {
+                let ids: Vec<Vec<u32>> = (0..num_tables)
+                    .map(|tt| if tt == t { vec![r] } else { Vec::new() })
+                    .collect();
+                let out = engine.lookup(&Request { ids });
+                out[t * dim..(t + 1) * dim].iter().zip(u).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    };
+
+    println!(
+        "mixed-precision workload: {num_tables} whole tables × {rows} rows × d={dim}, \
+         {requests} requests (Zipf table popularity, alpha 1.5), equal byte budget \
+         {budget} B (= uniform int4/FP16)"
+    );
+
+    // Adaptive arm setup: FP32 masters in, heat warmed by the same
+    // traffic the timed passes use, one budgeted pass committed online.
+    let adaptive = ShardedEngine::start(
+        TableSet::new(fp32.iter().map(|t| AnyTable::F32(t.clone())).collect()),
+        &ShardConfig {
+            num_shards: shards,
+            small_table_rows: usize::MAX, // whole tables: per-table heat
+            ..Default::default()
+        },
+    );
+    let fw = adaptive.feature_width();
+    let mut out = vec![0.0f32; max_batch * fw];
+    for batch in reqs.chunks(max_batch) {
+        adaptive.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
+    }
+    let outcome = adaptive.requantize_once(budget, &q).expect("budgeted requantization");
+    assert!(outcome.changed > 0, "FP32 masters cannot fit the int4 budget unchanged");
+    assert_eq!(outcome.uniform_int4_bytes, budget);
+    assert!(outcome.total_bytes <= budget, "{} B > {budget} B", outcome.total_bytes);
+    // The acceptance criterion: at equal bytes, heat-adaptive formats
+    // buy back accuracy where the traffic actually reads.
+    assert!(
+        outcome.weighted_err < outcome.uniform_int4_err,
+        "heat-adaptive must be strictly below uniform int4 at equal bytes: \
+         {} vs {}",
+        outcome.weighted_err,
+        outcome.uniform_int4_err
+    );
+
+    // Uniform arm: the paper baseline, quantized offline at the same
+    // bytes.
+    let uniform = ShardedEngine::start(
+        TableSet::new(
+            fp32.iter()
+                .map(|t| AnyTable::Fused(t.quantize_fused(&q, 4, ScaleBiasDtype::F16)))
+                .collect(),
+        ),
+        &ShardConfig {
+            num_shards: shards,
+            small_table_rows: usize::MAX,
+            ..Default::default()
+        },
+    );
+
+    let mut tw = TableWriter::new(vec![
+        "arm",
+        "payload bytes",
+        "batch p50/p99 (ms)",
+        "heat-weighted L2",
+        "ranking AUC",
+    ]);
+    let arms: [(&str, &ShardedEngine, f64, usize); 2] = [
+        ("uniform-int4", &uniform, outcome.uniform_int4_l2(), budget),
+        ("adaptive", &adaptive, outcome.weighted_l2(), outcome.total_bytes),
+    ];
+    let mut aucs = [0.0f64; 2];
+    for (i, &(label, engine, l2, bytes)) in arms.iter().enumerate() {
+        for batch in reqs.chunks(max_batch) {
+            engine.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
+        }
+        let mut hist = LatencyHistogram::new();
+        for _ in 0..reps {
+            for batch in reqs.chunks(max_batch) {
+                let t0 = std::time::Instant::now();
+                engine.lookup_batch_into(batch, &mut out[..batch.len() * fw]);
+                hist.record(t0.elapsed());
+            }
+        }
+        let scores = score_events(engine);
+        let auc = roc_auc(&scores, &labels);
+        aucs[i] = auc;
+        assert!(auc > 0.8, "{label}: quantization must preserve the FP32 ranking (auc {auc:.3})");
+        let p50 = hist.quantile(0.50).as_nanos() as f64 / 1e6;
+        let p99 = hist.quantile(0.99).as_nanos() as f64 / 1e6;
+        tw.row(vec![
+            label.to_string(),
+            bytes.to_string(),
+            format!("{p50:.3}/{p99:.3}"),
+            format!("{l2:.5}"),
+            format!("{auc:.4}"),
+        ]);
+        eprintln!(
+            "{label}: batch p50={p50:.3} ms p99={p99:.3} ms, {bytes} B, \
+             heat-weighted L2 {l2:.5}, auc {auc:.4}"
+        );
+        let mut jw = JsonWriter::new();
+        jw.str_field("bench", "shard_scaling_mixed")
+            .str_field("arm", label)
+            .num_field("shards", shards as f64)
+            .num_field("tables", num_tables as f64)
+            .num_field("rows", rows as f64)
+            .num_field("dim", dim as f64)
+            .num_field("requests", requests as f64)
+            .num_field("budget_bytes", budget as f64)
+            .num_field("payload_bytes", bytes as f64)
+            .num_field("requantized_groups", (if i == 1 { outcome.changed } else { 0 }) as f64)
+            .num_field("batch_p50_ms", p50)
+            .num_field("batch_p99_ms", p99)
+            .num_field("heat_weighted_l2", l2)
+            .num_field("ranking_auc", auc)
+            .num_field("eval_events", events as f64);
+        println!("{}", jw.finish());
+    }
+    println!("\nMixed precision — equal bytes, heat-adaptive vs uniform int4:\n{}", tw.render());
+    println!(
+        "Budget check: at {budget} B the adaptive assignment ({} groups rebuilt) cut \
+         heat-weighted L2 from {:.5} to {:.5} ({:+.1}% err) with AUC {:.4} -> {:.4} — \
+         strictly-lower heat-weighted error is asserted.",
+        outcome.changed,
+        outcome.uniform_int4_l2(),
+        outcome.weighted_l2(),
+        (outcome.weighted_err / outcome.uniform_int4_err - 1.0) * 100.0,
+        aucs[0],
+        aucs[1],
+    );
 }
 
 /// Skewed-workload mode: Zipf table popularity over whole fused tables,

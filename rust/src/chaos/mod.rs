@@ -2,12 +2,14 @@
 //!
 //! Real embedding tiers fail in boring, repeated ways: a worker thread
 //! panics, a spill file is corrupted or truncated under the server, the
-//! spill volume fills or disappears, the background I/O pool wedges —
-//! all while the model keeps taking live row updates. This module turns
-//! those failures into *scenarios*: a seeded, replayable schedule of
-//! Zipf + diurnal traffic, concurrent [`update_table`] writers, and
-//! fault injections, with the invariants the rest of the crate promises
-//! checked continuously:
+//! spill volume fills or disappears, the background I/O pool wedges,
+//! the precision rebalancer re-quantizes tables mid-traffic — all while
+//! the model keeps taking live row updates. This module turns those
+//! failures into *scenarios*: a seeded, replayable schedule of Zipf +
+//! diurnal traffic, concurrent [`update_table`] writers, and fault
+//! injections (including [`FaultKind::RequantStorm`] online format
+//! flips in lockstep with the oracle), with the invariants the rest of
+//! the crate promises checked continuously:
 //!
 //! * **Bit-exactness** — every lookup observed outside a destructive
 //!   fault window must equal the unsharded oracle

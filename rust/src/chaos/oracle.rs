@@ -1,36 +1,65 @@
 //! Versioned unsharded oracle: the ground truth a chaos scenario
 //! compares the sharded engine against.
 //!
-//! The oracle keeps the FP32 master tables plus one immutable quantized
-//! [`TableSet`] snapshot *per committed version*, mirroring the
-//! engine's MVCC swap protocol: a snapshot for version `v` is published
-//! **before** the engine can report `version() == v`, so a reader that
-//! observes engine version `v` can always fetch the matching oracle
-//! snapshot. Commits serialize on an internal mutex — the same total
-//! order the engine imposes through its own update lock — which makes
-//! "engine version n == oracle snapshot n" hold by construction.
+//! The oracle keeps one immutable quantized [`TableSet`] snapshot *per
+//! committed version*, mirroring the engine's MVCC swap protocol: a
+//! snapshot for version `v` is published **before** the engine can
+//! report `version() == v`, so a reader that observes engine version
+//! `v` can always fetch the matching oracle snapshot. Commits serialize
+//! on an internal mutex — the same total order the engine imposes
+//! through its own update lock — which makes "engine version n ==
+//! oracle snapshot n" hold by construction.
 //!
-//! Bit-exactness leans on an invariant proven in the `shard::engine`
-//! tests: patching a fused row with
-//! [`quantize_row_fused`](crate::table::quantize_row_fused) is
-//! bit-identical to requantizing the whole patched FP32 table. The
-//! oracle therefore patches its FP32 masters and requantizes from
-//! scratch per commit, while the engine patches packed rows in place —
-//! two different code paths that must (and do) land on identical bytes.
+//! Two kinds of commit advance the state:
+//!
+//! * **Row updates** ([`VersionedOracle::commit`]). While a table is
+//!   still in its ingest format, the oracle patches its FP32 master and
+//!   requantizes the whole table from scratch, leaning on an invariant
+//!   proven in the `shard::engine` tests: patching a fused row with
+//!   [`quantize_row_fused`](crate::table::quantize_row_fused) is
+//!   bit-identical to requantizing the whole patched FP32 table. The
+//!   engine patches packed rows in place — two different code paths
+//!   that must (and do) land on identical bytes.
+//! * **Online re-quantization** ([`VersionedOracle::commit_requant`]).
+//!   A requant storm drives the engine's
+//!   [`requantize_to`](crate::shard::ShardedEngine::requantize_to)
+//!   swap; the oracle mirrors it by re-encoding its current image of
+//!   the table through the same single re-quantization path
+//!   ([`crate::quant::budget::build_table`]) — from the *de-quantized
+//!   current bytes*, not the FP32 master, because the engine's online
+//!   pass never sees the master either. From then on the table's format
+//!   has drifted from the ingest epoch, so later row updates on it
+//!   patch the quantized image per row exactly the way the engine does.
+//!   Fused per-row quantization is row-local, so the oracle's
+//!   whole-table image stays byte-identical to the concatenation of the
+//!   engine's per-chunk rebuilds.
 
 use std::io;
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::coordinator::catalog::FormatTag;
 use crate::coordinator::TableSet;
 use crate::data::trace::Request;
-use crate::quant::Quantizer;
+use crate::quant::{budget, Quantizer};
 use crate::table::serial::AnyTable;
-use crate::table::{EmbeddingTable, ScaleBiasDtype};
+use crate::table::{quantize_row_fused, EmbeddingTable, FusedTable, ScaleBiasDtype};
+
+/// The mutable half of the oracle; its mutex also serializes commits.
+struct OracleState {
+    /// FP32 ground truth of every committed row update.
+    masters: Vec<EmbeddingTable>,
+    /// Authoritative quantized image per table, mirroring the engine's
+    /// serving bytes at the latest version.
+    current: Vec<AnyTable>,
+    /// Tables whose format drifted from the ingest epoch via
+    /// [`VersionedOracle::commit_requant`]: updates on them must patch
+    /// `current` instead of requantizing the master from scratch.
+    requantized: Vec<bool>,
+}
 
 /// Unsharded reference store with one quantized snapshot per version.
 pub struct VersionedOracle {
-    /// FP32 masters; the mutex also serializes commits.
-    masters: Mutex<Vec<EmbeddingTable>>,
+    state: Mutex<OracleState>,
     /// `snapshots[v]` is the quantized set at version `v`. Versions
     /// start at 1, so index 0 holds a duplicate of version 1.
     snapshots: RwLock<Vec<Arc<TableSet>>>,
@@ -40,35 +69,32 @@ pub struct VersionedOracle {
 
 impl VersionedOracle {
     /// Build from FP32 masters, quantizing each table to fused rows.
-    pub fn new(masters: Vec<EmbeddingTable>, q: &dyn Quantizer, nbits: u32, sb: ScaleBiasDtype) -> Self {
-        let v1 = Arc::new(Self::quantize(&masters, q, nbits, sb));
+    pub fn new(
+        masters: Vec<EmbeddingTable>,
+        q: &dyn Quantizer,
+        nbits: u32,
+        sb: ScaleBiasDtype,
+    ) -> Self {
+        let current: Vec<AnyTable> =
+            masters.iter().map(|m| AnyTable::Fused(m.quantize_fused(q, nbits, sb))).collect();
+        let v1 = Arc::new(TableSet::new(current.clone()));
+        let requantized = vec![false; masters.len()];
         VersionedOracle {
-            masters: Mutex::new(masters),
+            state: Mutex::new(OracleState { masters, current, requantized }),
             snapshots: RwLock::new(vec![Arc::clone(&v1), v1]),
             nbits,
             sb,
         }
     }
 
-    fn quantize(
-        masters: &[EmbeddingTable],
-        q: &dyn Quantizer,
-        nbits: u32,
-        sb: ScaleBiasDtype,
-    ) -> TableSet {
-        TableSet::new(
-            masters.iter().map(|m| AnyTable::Fused(m.quantize_fused(q, nbits, sb))).collect(),
-        )
-    }
-
     /// A fresh quantized set for starting an engine. Bit-identical to
     /// snapshot 1, so only meaningful before the first [`commit`].
     ///
     /// [`commit`]: VersionedOracle::commit
-    pub fn quantized_set(&self, q: &dyn Quantizer) -> TableSet {
+    pub fn quantized_set(&self) -> TableSet {
         // lint:allow(raw_lock) — poison must propagate: a panic mid-commit
-        // leaves half-patched masters, and recovering would serve them.
-        Self::quantize(&self.masters.lock().unwrap(), q, self.nbits, self.sb)
+        // leaves half-patched state, and recovering would serve it.
+        TableSet::new(self.state.lock().unwrap().current.clone())
     }
 
     /// Latest committed version.
@@ -85,7 +111,7 @@ impl VersionedOracle {
     /// speculative snapshot for the expected new version *first*, so a
     /// reader that races the swap and observes the new engine version
     /// already finds the matching snapshot. On `Err` the speculative
-    /// snapshot is retracted and the masters are rolled back — readers
+    /// snapshot is retracted and the state is rolled back — readers
     /// cannot have used it, because the engine never reported the
     /// version it would have carried.
     ///
@@ -101,12 +127,12 @@ impl VersionedOracle {
         F: FnOnce() -> io::Result<u64>,
     {
         // lint:allow(raw_lock) — deliberately poison-propagating: an
-        // updater that panics mid-commit leaves the masters half-patched,
-        // and every later oracle call MUST fail loudly, not serve them.
-        let mut masters = self.masters.lock().unwrap();
-        let valid = table < masters.len()
+        // updater that panics mid-commit leaves the state half-patched,
+        // and every later oracle call MUST fail loudly, not serve it.
+        let mut st = self.state.lock().unwrap();
+        let valid = table < st.masters.len()
             && rows.iter().all(|(id, v)| {
-                (*id as usize) < masters[table].rows() && v.len() == masters[table].dim()
+                (*id as usize) < st.masters[table].rows() && v.len() == st.masters[table].dim()
             });
         if !valid {
             // The engine rejects malformed updates without swapping, so
@@ -115,13 +141,25 @@ impl VersionedOracle {
             debug_assert!(r.is_err(), "engine accepted an update the oracle rejected");
             return r;
         }
-        // Patch the masters speculatively, remembering the old rows.
-        let saved: Vec<(u32, Vec<f32>)> =
-            rows.iter().map(|(id, _)| (*id, masters[table].row(*id as usize).to_vec())).collect();
+        // Patch the state speculatively, remembering the old rows.
+        let saved: Vec<(u32, Vec<f32>)> = rows
+            .iter()
+            .map(|(id, _)| (*id, st.masters[table].row(*id as usize).to_vec()))
+            .collect();
         for (id, vals) in rows {
-            masters[table].row_mut(*id as usize).copy_from_slice(vals);
+            st.masters[table].row_mut(*id as usize).copy_from_slice(vals);
         }
-        let candidate = Arc::new(Self::quantize(&masters, q, self.nbits, self.sb));
+        let saved_current = st.current[table].clone();
+        st.current[table] = if st.requantized[table] {
+            patch_any(&st.current[table], rows, q)
+        } else {
+            // Ingest-epoch tables requantize from the patched master
+            // from scratch — deliberately a *different* code path from
+            // the engine's in-place row patch, so every comparison
+            // cross-checks the patch ≡ full-requantize invariant.
+            AnyTable::Fused(st.masters[table].quantize_fused(q, self.nbits, self.sb))
+        };
+        let candidate = Arc::new(TableSet::new(st.current.clone()));
         let expected = {
             // lint:allow(raw_lock) — poison must propagate (see above).
             let mut snaps = self.snapshots.write().unwrap();
@@ -136,8 +174,79 @@ impl VersionedOracle {
             }
             Err(e) => {
                 for (id, old) in &saved {
-                    masters[table].row_mut(*id as usize).copy_from_slice(old);
+                    st.masters[table].row_mut(*id as usize).copy_from_slice(old);
                 }
+                st.current[table] = saved_current;
+                // lint:allow(raw_lock) — poison must propagate (see above).
+                let mut snaps = self.snapshots.write().unwrap();
+                assert_eq!(snaps.len() as u64, expected + 1, "commit serialization broken");
+                snaps.pop();
+                Err(e)
+            }
+        }
+    }
+
+    /// Apply one whole-table online re-quantization through the engine
+    /// while keeping the oracle in lockstep (same speculative-publish /
+    /// rollback protocol as [`commit`]).
+    ///
+    /// `apply` performs the engine-side swap (a closure over
+    /// [`requantize_to`] with a `chunk: None` plan entry for `table`).
+    /// The oracle rebuilds its current image through
+    /// [`budget::build_table`], the engine's only re-encoding path, so
+    /// the two land on identical bytes: fused quantization is per-row,
+    /// making the whole-table rebuild equal the concatenation of the
+    /// engine's per-chunk rebuilds. Codebook targets are refused —
+    /// their codebooks are trained per row-group, so a whole-table
+    /// oracle image could not mirror a chunked engine's per-chunk
+    /// codebooks. Identity re-quantizations are refused too: the engine
+    /// would skip the swap without bumping the version, leaving nothing
+    /// to commit.
+    ///
+    /// [`commit`]: VersionedOracle::commit
+    /// [`requantize_to`]: crate::shard::ShardedEngine::requantize_to
+    pub fn commit_requant<F>(
+        &self,
+        table: usize,
+        format: FormatTag,
+        q: &dyn Quantizer,
+        apply: F,
+    ) -> io::Result<u64>
+    where
+        F: FnOnce() -> io::Result<u64>,
+    {
+        assert!(
+            !matches!(format, FormatTag::Codebook { .. }),
+            "codebook targets are per-row-group; the whole-table oracle cannot mirror them"
+        );
+        // lint:allow(raw_lock) — poison must propagate (see commit).
+        let mut st = self.state.lock().unwrap();
+        assert!(table < st.current.len(), "requant of unknown table {table}");
+        assert_ne!(
+            FormatTag::of(&st.current[table]),
+            format,
+            "identity re-quantization: the engine skips the swap and never bumps the version"
+        );
+        let saved_current = st.current[table].clone();
+        let saved_flag = st.requantized[table];
+        st.current[table] = budget::build_table(&st.current[table], format, q);
+        st.requantized[table] = true;
+        let candidate = Arc::new(TableSet::new(st.current.clone()));
+        let expected = {
+            // lint:allow(raw_lock) — poison must propagate (see above).
+            let mut snaps = self.snapshots.write().unwrap();
+            let expected = snaps.len() as u64;
+            snaps.push(candidate);
+            expected
+        };
+        match apply() {
+            Ok(v) => {
+                assert_eq!(v, expected, "engine and oracle versions diverged");
+                Ok(v)
+            }
+            Err(e) => {
+                st.current[table] = saved_current;
+                st.requantized[table] = saved_flag;
                 // lint:allow(raw_lock) — poison must propagate (see above).
                 let mut snaps = self.snapshots.write().unwrap();
                 assert_eq!(snaps.len() as u64, expected + 1, "commit serialization broken");
@@ -165,11 +274,50 @@ impl VersionedOracle {
     }
 }
 
+/// Patch `(global_row, values)` pairs into a quantized image the way
+/// the engine's update path does — per-row re-quantization for fused
+/// formats, an FP32 splice for FP32, re-clustering for codebooks
+/// (whole, unsplit tables only: the covering row-group is the table).
+fn patch_any(t: &AnyTable, rows: &[(u32, Vec<f32>)], q: &dyn Quantizer) -> AnyTable {
+    match t {
+        AnyTable::F32(t) => {
+            let dim = t.dim();
+            let mut data = t.data().to_vec();
+            for (id, vals) in rows {
+                let i = *id as usize;
+                data[i * dim..(i + 1) * dim].copy_from_slice(vals);
+            }
+            AnyTable::F32(EmbeddingTable::from_data(dim, data))
+        }
+        AnyTable::Fused(t) => {
+            let mut fused = FusedTable::from_raw(
+                t.rows(),
+                t.dim(),
+                t.nbits(),
+                t.scale_bias_dtype(),
+                t.data().to_vec(),
+            );
+            for (id, vals) in rows {
+                let raw = quantize_row_fused(vals, q, t.nbits(), t.scale_bias_dtype());
+                fused.patch_row(*id as usize, &raw);
+            }
+            AnyTable::Fused(fused)
+        }
+        AnyTable::Codebook(t) => {
+            let mut data = t.dequantize();
+            for (id, vals) in rows {
+                data.row_mut(*id as usize).copy_from_slice(vals);
+            }
+            AnyTable::Codebook(data.quantize_codebook(t.kind(), t.scale_bias_dtype()))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::quant::GreedyQuantizer;
-    use crate::shard::{ShardConfig, ShardedEngine};
+    use crate::shard::{GroupAssignment, ShardConfig, ShardedEngine};
 
     fn masters(n: usize, rows: usize, dim: usize) -> Vec<EmbeddingTable> {
         (0..n).map(|t| EmbeddingTable::randn(rows, dim, 4300 + t as u64)).collect()
@@ -180,7 +328,7 @@ mod tests {
         let q = GreedyQuantizer::default();
         let oracle = VersionedOracle::new(masters(2, 24, 4), &q, 4, ScaleBiasDtype::F16);
         let engine = ShardedEngine::start(
-            oracle.quantized_set(&q),
+            oracle.quantized_set(),
             &ShardConfig { num_shards: 2, small_table_rows: 0, ..ShardConfig::default() },
         );
         let req = Request { ids: vec![vec![0, 3, 23], vec![5, 5]] };
@@ -204,7 +352,7 @@ mod tests {
         let q = GreedyQuantizer::default();
         let oracle = VersionedOracle::new(masters(1, 16, 4), &q, 4, ScaleBiasDtype::F16);
         let engine = ShardedEngine::start(
-            oracle.quantized_set(&q),
+            oracle.quantized_set(),
             &ShardConfig { num_shards: 2, small_table_rows: 0, ..ShardConfig::default() },
         );
         let before = oracle.pool_at(1, &Request { ids: vec![vec![2]] });
@@ -218,7 +366,7 @@ mod tests {
         assert_eq!(
             oracle.pool_at(1, &Request { ids: vec![vec![2]] }),
             before,
-            "masters rolled back"
+            "state rolled back"
         );
         // A malformed batch is rejected by the engine and leaves no trace.
         let bad: Vec<(u32, Vec<f32>)> = vec![(999, vec![1.0; 4])];
@@ -229,5 +377,45 @@ mod tests {
         assert_eq!(v, 2);
         let req = Request { ids: vec![vec![2]] };
         assert_eq!(engine.lookup(&req), oracle.pool_at(2, &req));
+    }
+
+    #[test]
+    fn requant_commits_mirror_the_engine_bit_exactly() {
+        let int8 = FormatTag::Fused { nbits: 8, scale_bias: ScaleBiasDtype::F16 };
+        let q = GreedyQuantizer::default();
+        let oracle = VersionedOracle::new(masters(2, 24, 4), &q, 4, ScaleBiasDtype::F16);
+        let engine = ShardedEngine::start(
+            oracle.quantized_set(),
+            &ShardConfig { num_shards: 2, small_table_rows: 0, ..ShardConfig::default() },
+        );
+        // Whole-table requant of a row-wise split table: the engine
+        // rebuilds chunk by chunk, the oracle in one piece — per-row
+        // fused quantization makes the bytes agree anyway.
+        let plan = [GroupAssignment { table: 0, chunk: None, format: int8 }];
+        let v = oracle
+            .commit_requant(0, int8, &q, || engine.requantize_to(&plan, &q))
+            .expect("requant commit succeeds");
+        assert_eq!(v, 2);
+        assert_eq!(engine.version(), 2);
+        let req = Request { ids: vec![vec![0, 7, 23], vec![5]] };
+        assert_eq!(engine.lookup(&req), oracle.pool_at(2, &req), "int8 epoch agrees");
+        assert_ne!(oracle.pool_at(1, &req), oracle.pool_at(2, &req), "int8 differs from int4");
+
+        // A row update on the drifted table keeps mirroring: the oracle
+        // now patches its quantized image the way the engine does.
+        let rows: Vec<(u32, Vec<f32>)> = vec![(7, vec![0.5; 4]), (12, vec![-2.0; 4])];
+        let v = oracle.commit(0, &rows, &q, || engine.update_table(0, &rows, &q)).unwrap();
+        assert_eq!(v, 3);
+        let req2 = Request { ids: vec![vec![7, 12, 8], vec![1]] };
+        assert_eq!(engine.lookup(&req2), oracle.pool_at(3, &req2), "post-drift update agrees");
+
+        // A failed requant rolls back cleanly and leaves both sides at
+        // the last committed version.
+        let err = oracle
+            .commit_requant(1, int8, &q, || Err(io::Error::new(io::ErrorKind::Other, "injected")))
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Other);
+        assert_eq!(oracle.latest_version(), 3);
+        assert_eq!(engine.lookup(&req2), oracle.pool_at(3, &req2), "rolled back");
     }
 }

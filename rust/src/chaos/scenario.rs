@@ -31,8 +31,17 @@
 //!   with `t % updaters == u`, and applies its own batches in program
 //!   order (retrying through fault windows until the commit lands).
 //!   Cross-updater interleaving therefore commutes: the final table
-//!   state and final version (`1 + update_batches`) are deterministic
-//!   even though intermediate snapshots are not.
+//!   state and final version (`1 + update_batches + requant_commits`)
+//!   are deterministic even though intermediate snapshots are not.
+//! * **Requant storms** — [`FaultKind::RequantStorm`] drives online
+//!   re-quantization commits from the main thread, in lockstep with
+//!   the oracle ([`VersionedOracle::commit_requant`]), racing the
+//!   updater threads and any background spill churn. Each commit flips
+//!   one table's format (int4 ↔ int8) through the engine's MVCC swap,
+//!   so the storm is *transparent*: readers stay held to bit-exactness
+//!   through it — every result must still match the oracle at a single
+//!   committed version. The flip sequence is a pure function of the
+//!   schedule, so the final formats are deterministic too.
 
 use std::fs;
 use std::io;
@@ -70,6 +79,14 @@ pub enum FaultKind {
     /// Stall every spill I/O worker for [`ScenarioConfig::wedge_ms`].
     /// Foreground reads resolve inline and stay bit-exact throughout.
     WedgeIo,
+    /// Online re-quantization storm: across the fault window the main
+    /// thread commits [`ScenarioConfig::requant_commits`] whole-table
+    /// format flips (int4 ↔ int8) through the engine's `requantize_to`
+    /// snapshot swap, in lockstep with the oracle — racing the updater
+    /// threads and any spill churn. Transparent: readers are held to
+    /// bit-exactness *through* the storm, and every commit bumps the
+    /// version exactly once.
+    RequantStorm,
 }
 
 /// Everything a scenario run derives from. See [`run_scenario`].
@@ -110,6 +127,11 @@ pub struct ScenarioConfig {
     pub update_rows: usize,
     /// Concurrent checking reader threads.
     pub readers: usize,
+    /// Online re-quantization commits driven across the
+    /// [`FaultKind::RequantStorm`] window (required > 0 iff the storm
+    /// is scheduled). Each flips one table int4 ↔ int8; the final
+    /// version is `1 + update_batches + requant_commits`.
+    pub requant_commits: usize,
     /// Fault schedule, injected in order at evenly spread ticks.
     pub faults: Vec<FaultKind>,
     /// Stall length for [`FaultKind::WedgeIo`].
@@ -141,6 +163,7 @@ impl Default for ScenarioConfig {
             update_batches: 12,
             update_rows: 8,
             readers: 2,
+            requant_commits: 0,
             faults: Vec::new(),
             wedge_ms: 50,
             kernel_backend: None,
@@ -153,11 +176,15 @@ impl Default for ScenarioConfig {
 /// (panicking the run on violation) rather than reported.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ScenarioReport {
-    /// Engine version after all updates landed (`1 + update_batches`).
+    /// Engine version after all updates and requant commits landed
+    /// (`1 + update_batches + requant_commits`).
     pub final_version: u64,
     /// Update batches committed (== `update_batches`; every batch
     /// retries until it lands).
     pub committed_updates: u64,
+    /// Online re-quantization commits landed (== `requant_commits`;
+    /// every commit retries until it lands).
+    pub requant_commits: u64,
     /// The derived fault schedule: `(start_tick, heal_tick, kind)`.
     pub schedule: Vec<(usize, usize, FaultKind)>,
     /// Main-loop requests compared bit-exactly against the oracle
@@ -201,6 +228,13 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
             "updaters must be in 1..=tables so each owns a disjoint, non-empty table set"
         );
     }
+    let storms = cfg.faults.iter().filter(|f| **f == FaultKind::RequantStorm).count();
+    assert!(storms <= 1, "at most one RequantStorm per run");
+    assert_eq!(
+        storms == 1,
+        cfg.requant_commits > 0,
+        "requant_commits must be > 0 exactly when a RequantStorm is scheduled"
+    );
     if cfg.faults.contains(&FaultKind::SpillDirOutage) {
         assert!(
             cfg.budget_frac.is_none(),
@@ -223,7 +257,7 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
         .map(|t| EmbeddingTable::randn(cfg.rows, cfg.dim, cfg.seed ^ (0xA5A5 + t as u64)))
         .collect();
     let oracle = VersionedOracle::new(masters, &q, 4, ScaleBiasDtype::F16);
-    let set = oracle.quantized_set(&q);
+    let set = oracle.quantized_set();
     let table_bytes = set.size_bytes();
     let budget = cfg.budget_frac.map(|f| (table_bytes as f64 * f) as usize);
     let (dir, own_dir) = match &cfg.spill_dir {
@@ -297,6 +331,7 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
     let mut main_reads_checked = 0u64;
     let mut recoveries = 0usize;
     let mut version_monotone = true;
+    let mut requant_done = 0usize;
 
     std::thread::scope(|s| {
         let updater_handles: Vec<_> = programs
@@ -385,17 +420,69 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
         let mut active: Option<ActiveFault> = None;
         let mut fault_idx = 0usize;
         let mut last_version = engine.version();
+        // Requant-storm state: the heal tick of an active storm window
+        // and each table's current code width (the engine starts
+        // everything at int4/f16).
+        let mut storm_until: Option<usize> = None;
+        let mut requant_nbits: Vec<u32> = vec![4; cfg.tables];
         for tick in 0..cfg.ticks {
             if fault_idx > 0 && schedule[fault_idx - 1].1 == tick {
                 if let Some(f) = active.take() {
                     heal(f, &engine, &oracle, &dir, &epoch, cfg);
                     recoveries += 1;
+                    storm_until = None;
                 }
             }
             if fault_idx < schedule.len() && schedule[fault_idx].0 == tick {
                 assert!(active.is_none(), "fault injected while another is active");
                 active = Some(inject(schedule[fault_idx].2, &engine, &dir, &epoch, cfg));
+                if schedule[fault_idx].2 == FaultKind::RequantStorm {
+                    storm_until = Some(schedule[fault_idx].1);
+                }
                 fault_idx += 1;
+            }
+
+            // Spread the storm's commits across its window so they race
+            // update commits and spill churn on every tick of it; the
+            // flip sequence (table `i % tables`, 4 ↔ 8) is schedule-
+            // derived, so the final formats are deterministic.
+            if let Some(heal_tick) = storm_until {
+                if tick < heal_tick && requant_done < cfg.requant_commits {
+                    let burst =
+                        (cfg.requant_commits - requant_done).div_ceil(heal_tick - tick);
+                    for _ in 0..burst {
+                        let table = requant_done % cfg.tables;
+                        let nbits = if requant_nbits[table] == 4 { 8 } else { 4 };
+                        let format = crate::coordinator::catalog::FormatTag::Fused {
+                            nbits,
+                            scale_bias: ScaleBiasDtype::F16,
+                        };
+                        let plan = [crate::shard::GroupAssignment {
+                            table,
+                            chunk: None,
+                            format,
+                        }];
+                        // Same bounded-retry discipline as the updaters.
+                        let mut retries_left = 15_000u32;
+                        loop {
+                            let r = oracle.commit_requant(table, format, &q, || {
+                                engine.requantize_to(&plan, &q)
+                            });
+                            match r {
+                                Ok(_) => break,
+                                Err(_) if retries_left > 0 => {
+                                    retries_left -= 1;
+                                    std::thread::sleep(Duration::from_millis(2));
+                                }
+                                Err(e) => panic!(
+                                    "requant storm wedged after retry budget; last error: {e}"
+                                ),
+                            }
+                        }
+                        requant_nbits[table] = nbits;
+                        requant_done += 1;
+                    }
+                }
             }
 
             let reqs = traffic.tick(tick);
@@ -443,8 +530,12 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
     assert_eq!(final_version, oracle.latest_version(), "engine and oracle diverged");
     assert_eq!(
         final_version,
-        1 + cfg.update_batches as u64,
-        "every update batch must have committed exactly once"
+        1 + cfg.update_batches as u64 + cfg.requant_commits as u64,
+        "every update batch and requant commit must have landed exactly once"
+    );
+    assert_eq!(
+        requant_done, cfg.requant_commits,
+        "the storm window must fit every scheduled requant commit"
     );
     let stats = engine.shard_stats();
     version_monotone &= stats.iter().all(|st| st.version == final_version);
@@ -494,6 +585,7 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
     ScenarioReport {
         final_version,
         committed_updates: committed.load(Ordering::Relaxed),
+        requant_commits: requant_done as u64,
         schedule,
         main_reads_checked,
         recoveries,
@@ -524,6 +616,14 @@ fn inject(
         }
         FaultKind::WedgeIo => {
             engine.wedge_spill_io(Duration::from_millis(cfg.wedge_ms), 8);
+            ActiveFault::Transparent
+        }
+        FaultKind::RequantStorm => {
+            // The storm itself is driven tick-by-tick from the main
+            // loop (the commits must interleave with traffic and the
+            // updaters); injection only opens the window. Transparent:
+            // every commit is an atomic MVCC swap, so readers stay
+            // checked throughout.
             ActiveFault::Transparent
         }
         FaultKind::CorruptSpill | FaultKind::TruncateSpill => {
@@ -665,6 +765,44 @@ mod tests {
         assert!(r.bit_exact_final && r.budget_ok && r.version_monotone);
         let ungated: u64 = r.main_reads_checked;
         assert!(ungated > 0);
+    }
+
+    #[test]
+    fn requant_storm_keeps_reads_bit_exact_through_format_flips() {
+        // Four whole-table flips (both tables up to int8, then back to
+        // int4) race one updater and the spill churn of a 0.5 budget;
+        // every read stays checked (the storm is transparent), and the
+        // final version counts updates and requants exactly once each.
+        let cfg = ScenarioConfig {
+            seed: 0x4B17,
+            tables: 2,
+            rows: 64,
+            dim: 4,
+            shards: 2,
+            ticks: 12,
+            base_batch: 3,
+            diurnal_period: 6,
+            updaters: 1,
+            update_batches: 3,
+            update_rows: 4,
+            readers: 1,
+            requant_commits: 4,
+            faults: vec![FaultKind::RequantStorm],
+            ..ScenarioConfig::default()
+        };
+        let r = run_scenario(&cfg);
+        assert_eq!(r.final_version, 1 + 3 + 4);
+        assert_eq!(r.requant_commits, 4);
+        assert_eq!(r.recoveries, 1);
+        assert!(r.bit_exact_final && r.budget_ok && r.version_monotone);
+        assert!(r.main_reads_checked > 0, "the storm never gates reads");
+        assert_eq!(r, run_scenario(&cfg), "same config, same report");
+    }
+
+    #[test]
+    #[should_panic(expected = "RequantStorm is scheduled")]
+    fn requant_commits_without_a_storm_are_rejected() {
+        run_scenario(&ScenarioConfig { requant_commits: 3, ..ScenarioConfig::default() });
     }
 
     #[test]

@@ -38,6 +38,8 @@ pub const SERVE_FLAGS: &[&str] = &[
     "--spill-dir",
     "--spill-io-threads",
     "--prefetch-window",
+    "--precision-budget",
+    "--mixed-precision",
     "--kernel-backend",
     "--listen",
     "--front",
@@ -61,7 +63,7 @@ impl Flags {
     fn parse(args: &[String]) -> Flags {
         // Value-less flags must be listed here so `--fp16 positional`
         // parses unambiguously.
-        const BOOL_FLAGS: &[&str] = &["fp16", "help", "steal"];
+        const BOOL_FLAGS: &[&str] = &["fp16", "help", "steal", "mixed-precision"];
         let mut f = Flags { positional: Vec::new(), kv: Vec::new(), bools: Vec::new() };
         let mut i = 0;
         while i < args.len() {
@@ -156,6 +158,7 @@ COMMANDS:
             [--copies N] [--replicate-hot N] [--small-table-rows N] [--steal]
             [--rebalance-interval MS] [--resident-budget BYTES]
             [--spill-dir PATH] [--spill-io-threads N] [--prefetch-window N]
+            [--precision-budget BYTES] [--mixed-precision]
             [--kernel-backend auto|scalar|avx2|neon]
             [--listen ADDR] [--front reactor|blocking] [--slo-ms MS]
             [--max-inflight N] [--update-port PORT] [--update-every MS]
@@ -192,6 +195,20 @@ COMMANDS:
             registry lock, 0 = inline I/O). --prefetch-window N warms
             the N hottest spilled slices per heat tick so bursty tables
             are staged before their first miss (default 0 = off).
+            --precision-budget BYTES hands the heat-adaptive precision
+            solver a global byte budget (sharded path only): each
+            rebalance tick re-solves the per-row-group format assignment
+            against the decayed heat counters — hot groups toward
+            int8/fp16, cold ones toward int4 or the shared codebook —
+            and swaps any format changes in online through the same MVCC
+            snapshot path as live updates (bit-identical to quantizing
+            offline at the assigned formats). Needs --rebalance-interval
+            for the background ticks, or --mixed-precision for a one-shot
+            pass. --mixed-precision (trace mode) serves half the trace to
+            warm the heat counters, runs one re-quantization pass at
+            --precision-budget BYTES, then serves the rest on the swapped
+            formats and prints the achieved bytes plus the heat-weighted
+            L2 of the adaptive plan next to the uniform-int4 baseline.
             --kernel-backend pins the SLS kernel backend for the sharded
             path; `auto` (the default) picks the best one the CPU
             supports, and the env var EMBERQ_FORCE_SCALAR=1 forces
@@ -410,6 +427,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         crate::shard::ShardConfig::default().spill_io_threads,
     )?;
     let prefetch_window: usize = flags.num("prefetch-window", 0)?;
+    let precision_bytes: usize = flags.num("precision-budget", 0)?;
+    let precision_budget = (precision_bytes > 0).then_some(precision_bytes);
+    let mixed_precision = flags.flag("mixed-precision");
     let kernel_backend = match flags.get("kernel-backend") {
         None | Some("auto") => None,
         Some(v) => Some(
@@ -452,6 +472,27 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     if update_rows == 0 {
         return Err("--update-rows: must be at least 1".into());
     }
+    if mixed_precision && precision_budget.is_none() {
+        return Err("--mixed-precision needs --precision-budget BYTES (the byte budget \
+                    the precision solver fits the table set to)"
+            .into());
+    }
+    if mixed_precision && shards == 0 {
+        return Err("--mixed-precision needs the row-sharded engine (--shards > 0): \
+                    online re-quantization swaps MVCC snapshots there"
+            .into());
+    }
+    if mixed_precision && listen.is_some() {
+        return Err("--mixed-precision splits a trace replay around one re-quantization \
+                    pass; with --listen, set --precision-budget with \
+                    --rebalance-interval for background passes instead"
+            .into());
+    }
+    if mixed_precision && update_every_ms > 0 {
+        return Err("--mixed-precision and --update-every both drive the trace replay; \
+                    run one at a time (the chaos suite covers the combined race)"
+            .into());
+    }
     if replicate_hot > 0 && shards == 0 {
         eprintln!(
             "warning: --replicate-hot only applies to the sharded path (--shards > 0); ignoring"
@@ -476,6 +517,19 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
     if prefetch_window > 0 && spill_io_threads == 0 {
         eprintln!("note: --prefetch-window needs --spill-io-threads > 0; inert");
+    }
+    if precision_budget.is_some() && shards == 0 {
+        eprintln!(
+            "warning: --precision-budget only applies to the sharded path (--shards > 0); \
+             ignoring"
+        );
+    }
+    if precision_budget.is_some() && shards > 0 && !mixed_precision && rebalance_interval.is_none()
+    {
+        eprintln!(
+            "note: --precision-budget re-solves on rebalance ticks; inert without \
+             --rebalance-interval (or --mixed-precision for a one-shot pass)"
+        );
     }
     if flags.get("front").is_some() && listen.is_none() {
         eprintln!("note: --front picks the TCP front; inert without --listen");
@@ -572,6 +626,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             spill_dir: spill_dir.filter(|_| shards > 0),
             spill_io_threads,
             prefetch_window,
+            precision_budget: precision_budget.filter(|_| shards > 0),
             kernel_backend: kernel_backend.filter(|_| shards > 0),
             max_inflight,
             slo_ms,
@@ -660,6 +715,30 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             );
             m
         })
+    } else if mixed_precision {
+        // Warm the heat counters on the first half of the replay, fit
+        // the table set to the byte budget once, then serve the rest on
+        // the swapped formats.
+        let split = trace.requests.len() / 2;
+        let warm = RequestTrace { requests: trace.requests[..split].to_vec() };
+        let rest = RequestTrace { requests: trace.requests[split..].to_vec() };
+        let warm_metrics = server.serve_trace(&warm);
+        let budget = precision_budget.expect("validated with --mixed-precision");
+        let out = server
+            .requantize_once(budget)
+            .expect("sharded path validated with --mixed-precision")
+            .map_err(|e| format!("--mixed-precision: re-quantization failed: {e}"))?;
+        println!(
+            "mixed precision: {} row-groups re-quantized at {} / {budget} bytes \
+             (version {}); heat-weighted L2 {:.5} adaptive vs {:.5} uniform int4",
+            out.changed,
+            out.total_bytes,
+            out.version,
+            out.weighted_l2(),
+            out.uniform_int4_l2()
+        );
+        println!("warm half: {}", warm_metrics.summary());
+        server.serve_trace(&rest)
     } else {
         server.serve_trace(trace)
     };
@@ -851,6 +930,49 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(e.contains("--update-rows"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_mixed_precision_replay_and_flag_validation() {
+        let dir = std::env::temp_dir().join("emberq_cli_mixed_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.embq");
+        let table = EmbeddingTable::randn(50, 8, 39);
+        let f = File::create(&path).unwrap();
+        serial::write_f32(&mut BufWriter::new(f), &table).unwrap();
+        let p = path.to_str().unwrap();
+        // Split replay with a budget strictly between uniform int4
+        // (800 B for two 50x8 tables) and uniform int8 (1200 B), so the
+        // solver must actually change formats: warm half, one solver
+        // pass, serve the rest on the swap.
+        run(&s(&[
+            "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "40",
+            "--batch", "8", "--precision-budget", "1000", "--mixed-precision",
+        ]))
+        .unwrap();
+        // Bad combos are rejected with a message naming the fix.
+        let e = run(&s(&["serve", "--table", p, "--shards", "2", "--mixed-precision"]))
+            .unwrap_err();
+        assert!(e.contains("--precision-budget"), "{e}");
+        let e = run(&s(&[
+            "serve", "--table", p, "--shards", "0", "--precision-budget", "100000",
+            "--mixed-precision",
+        ]))
+        .unwrap_err();
+        assert!(e.contains("--shards"), "{e}");
+        let e = run(&s(&[
+            "serve", "--table", p, "--shards", "2", "--listen", "127.0.0.1:0",
+            "--precision-budget", "100000", "--mixed-precision",
+        ]))
+        .unwrap_err();
+        assert!(e.contains("--rebalance-interval"), "{e}");
+        let e = run(&s(&[
+            "serve", "--table", p, "--shards", "2", "--update-every", "1",
+            "--precision-budget", "100000", "--mixed-precision",
+        ]))
+        .unwrap_err();
+        assert!(e.contains("--update-every"), "{e}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -172,6 +172,12 @@ pub struct ServerConfig {
     /// Sharded path only: warm the N hottest spilled cells per heat
     /// tick (see [`ShardConfig::prefetch_window`]).
     pub prefetch_window: usize,
+    /// Sharded path only: heat-adaptive mixed precision — a global byte
+    /// budget for the quantized payload of every row-group (see
+    /// [`ShardConfig::precision_budget`]). With rebalancing enabled the
+    /// tick re-quantizes drifted groups online;
+    /// [`EmbeddingServer::requantize_once`] runs one pass manually.
+    pub precision_budget: Option<usize>,
     /// Sharded path only: pin the SLS kernel backend (see
     /// [`ShardConfig::kernel_backend`]). `None` (default) resolves
     /// `EMBERQ_FORCE_SCALAR`, then the best backend the CPU supports.
@@ -206,6 +212,7 @@ impl Default for ServerConfig {
             spill_dir: None,
             spill_io_threads: ShardConfig::default().spill_io_threads,
             prefetch_window: 0,
+            precision_budget: None,
             kernel_backend: None,
             max_inflight: 0,
             slo_ms: 0,
@@ -268,6 +275,7 @@ impl EmbeddingServer {
                     spill_dir: cfg.spill_dir.clone(),
                     spill_io_threads: cfg.spill_io_threads,
                     prefetch_window: cfg.prefetch_window,
+                    precision_budget: cfg.precision_budget,
                     kernel_backend: cfg.kernel_backend,
                 },
             );
@@ -422,6 +430,21 @@ impl EmbeddingServer {
     /// the placement changed.
     pub fn rebalance_once(&self) -> Option<bool> {
         self.engine.as_ref().map(|e| e.rebalance_once())
+    }
+
+    /// Run one heat-adaptive re-quantization pass now (sharded path
+    /// only), fitting every row-group to `budget` bytes with the paper's
+    /// greedy quantizer (see [`ShardedEngine::requantize_once`]). The
+    /// outcome reports the achieved bytes and the heat-weighted error of
+    /// the adaptive plan next to the uniform-int4 baseline, so callers
+    /// can print the accuracy cost of the budget point.
+    pub fn requantize_once(
+        &self,
+        budget: usize,
+    ) -> Option<std::io::Result<crate::shard::RequantOutcome>> {
+        self.engine
+            .as_ref()
+            .map(|e| e.requantize_once(budget, &crate::quant::GreedyQuantizer::default()))
     }
 
     /// Current MVCC table-snapshot version (sharded path only): 1 after

@@ -29,6 +29,7 @@
 
 pub mod aciq;
 pub mod asym;
+pub mod budget;
 pub mod greedy;
 pub mod gss;
 pub mod gss2d;
@@ -39,6 +40,7 @@ pub mod zeropoint;
 
 pub use aciq::AciqQuantizer;
 pub use asym::{AsymQuantizer, TableQuantizer};
+pub use budget::{BudgetPlan, GroupSpec};
 pub use greedy::GreedyQuantizer;
 pub use gss::GssQuantizer;
 pub use gss2d::Gss2dQuantizer;

@@ -79,6 +79,16 @@
 //! or deleted with the last old snapshot (spilled cells) — never
 //! re-adopted. Batches split against one snapshot, so no request ever
 //! observes a mix of two table versions.
+//!
+//! **Online re-quantization:** [`ShardedEngine::requantize_to`] rebuilds
+//! row-groups in newly assigned formats through the same
+//! clone → rebuild → swap path (identity assignments keep their exact
+//! cells and tier), and [`ShardedEngine::requantize_once`] drives the
+//! [`crate::quant::budget`] solver against the observed heat; the
+//! rebalancer runs that pass on its own tick when
+//! [`ShardConfig::precision_budget`] is set. Every rebuild goes through
+//! [`crate::quant::budget::build_table`], so an online swap is bit-exact
+//! vs. quantizing fresh at the assigned format offline.
 
 use std::collections::VecDeque;
 use std::io;
@@ -89,10 +99,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::catalog::FormatTag;
 use crate::coordinator::metrics::ShardStats;
 use crate::coordinator::{Router, TableCatalog, TableSet};
 use crate::data::trace::Request;
-use crate::quant::Quantizer;
+use crate::quant::budget::{self, GroupSpec};
+use crate::quant::{GreedyQuantizer, Quantizer};
 use crate::shard::exec;
 use crate::shard::gate::WakeGate;
 use crate::shard::load::DecayWindow;
@@ -191,6 +203,62 @@ pub struct RebalanceStats {
     pub replicas_retired: u64,
 }
 
+/// One entry of a re-quantization plan: rebuild a placement row-group —
+/// a whole replicated table, or one row-wise chunk — in `format`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupAssignment {
+    /// Target table id.
+    pub table: usize,
+    /// Row-wise chunk (shard) index. `None` covers every cell of the
+    /// table: all non-empty chunks of a row-wise table, every replica of
+    /// a whole one. `Some(_)` on a whole table is invalid input (whole
+    /// replicas must stay byte-identical, so they can only move
+    /// together).
+    pub chunk: Option<usize>,
+    /// Format to rebuild the group in.
+    pub format: FormatTag,
+}
+
+/// What a [`ShardedEngine::requantize_once`] pass decided, did, and
+/// measured — the numbers the eval/bench harnesses print.
+#[derive(Clone, Copy, Debug)]
+pub struct RequantOutcome {
+    /// Serving version after the pass (unchanged when nothing moved).
+    pub version: u64,
+    /// Row-groups actually rebuilt (identity assignments are skipped).
+    pub changed: usize,
+    /// Payload bytes of the chosen assignment (≤ the budget).
+    pub total_bytes: usize,
+    /// Reference: payload bytes at uniform `int4 (FP16)`.
+    pub uniform_int4_bytes: usize,
+    /// Heat-weighted squared error of the chosen assignment.
+    pub weighted_err: f64,
+    /// Reference: heat-weighted squared error at uniform `int4 (FP16)`.
+    pub uniform_int4_err: f64,
+    /// Normalization `Σ heat·‖X‖²` for the L2 reports.
+    pub weighted_norm: f64,
+}
+
+impl RequantOutcome {
+    /// Heat-weighted normalized L2 of the committed assignment.
+    pub fn weighted_l2(&self) -> f64 {
+        if self.weighted_norm == 0.0 {
+            0.0
+        } else {
+            (self.weighted_err / self.weighted_norm).sqrt()
+        }
+    }
+
+    /// Heat-weighted normalized L2 of the uniform-int4 reference.
+    pub fn uniform_int4_l2(&self) -> f64 {
+        if self.weighted_norm == 0.0 {
+            0.0
+        } else {
+            (self.uniform_int4_err / self.weighted_norm).sqrt()
+        }
+    }
+}
+
 /// Everything the workers, the rebalancer, and the leader share.
 struct Core {
     partitions: Vec<TablePartition>,
@@ -229,6 +297,10 @@ struct Core {
     reply_capacity: usize,
     /// Replica budget of the runtime rebalancer.
     rebalance_budget: usize,
+    /// Heat-adaptive mixed precision: global byte budget the rebalancer
+    /// re-solves the per-group format assignment against on every
+    /// non-idle tick (`None` = formats never change on their own).
+    precision_budget: Option<usize>,
     /// Rebalancer bookkeeping; one mutex, held across a whole pass, so
     /// concurrent passes (background thread + `rebalance_once`) cannot
     /// interleave and discard each other's placements.
@@ -444,6 +516,7 @@ impl ShardedEngine {
             bytes_per_table,
             reply_capacity: cfg.queue_depth.max(1) * n,
             rebalance_budget: cfg.replicate_hot.max(1),
+            precision_budget: cfg.precision_budget,
             rb_state: Mutex::new(RebalanceState {
                 last_loads: vec![0; num_tables],
                 windows: vec![DecayWindow::new(); num_tables],
@@ -843,10 +916,14 @@ impl ShardedEngine {
     }
 
     /// Replace the given `(row, values)` pairs of `table` with new FP32
-    /// embeddings, quantizing on ingest for fused tables (the same
-    /// single-row path as [`crate::table::TableRefresher`], so the
-    /// patched bytes are bit-identical to a full requantization), and
-    /// swap in the next placement snapshot atomically. Returns the new
+    /// embeddings and swap in the next placement snapshot atomically.
+    /// Fused rows re-quantize on ingest (the same single-row path as
+    /// [`crate::table::TableRefresher`], so the patched bytes are
+    /// bit-identical to a full requantization); codebook cells
+    /// re-cluster — the covering row-group's codebooks are re-trained
+    /// on its patched fp32 image, bit-identical to requantizing that
+    /// group from scratch (codebooks are shared across rows, so a
+    /// row-local splice could not reproduce them). Returns the new
     /// version.
     ///
     /// MVCC semantics: only the cells actually holding updated rows are
@@ -862,8 +939,8 @@ impl ShardedEngine {
     /// on content digest, and the content changed).
     ///
     /// Failure atomicity: any error — a row out of range, a wrong
-    /// dimension, a codebook table (unsupported), or a corrupt spill
-    /// file hit while reading the old bytes — aborts *before* the swap.
+    /// dimension, or a corrupt spill file hit while reading the old
+    /// bytes — aborts *before* the swap.
     /// The old snapshot keeps serving, the version does not advance,
     /// and a spill error is attributed to the shard's counters under
     /// the still-current (old) version like any other read failure.
@@ -920,30 +997,7 @@ impl ShardedEngine {
                 // avoids disk when it can), then give every replica
                 // shard the patched slice.
                 let shards = &cur.replicas[table];
-                let resident = shards
-                    .iter()
-                    .find_map(|&s| cur.slices[s][table].as_ref().and_then(|c| c.resident()));
-                let src = match resident {
-                    Some(s) => s,
-                    None => {
-                        let mut found = Err(invalid(format!(
-                            "table {table}: no replica holds a slice"
-                        )));
-                        for &s in shards {
-                            let cell = cur.slices[s][table]
-                                .as_ref()
-                                .expect("routed replica holds the table");
-                            match resolve(core, cell, 0) {
-                                Ok(slice) => {
-                                    found = Ok(slice);
-                                    break;
-                                }
-                                Err(e) => found = Err(e),
-                            }
-                        }
-                        found?
-                    }
-                };
+                let src = resolve_whole(core, &cur, table)?;
                 let pairs: Vec<(u32, &[f32])> =
                     rows.iter().map(|(i, v)| (*i, v.as_slice())).collect();
                 let patched = patch_slice(&src, &pairs, q)?;
@@ -1006,6 +1060,62 @@ impl ShardedEngine {
         }
         Ok(core.version.fetch_add(1, Ordering::AcqRel) + 1)
     }
+
+    /// Rebuild the listed row-groups in their assigned formats and swap
+    /// the next placement snapshot atomically — online re-quantization
+    /// through the exact MVCC path [`ShardedEngine::update_table`]
+    /// commits on. Every rebuild goes through
+    /// [`crate::quant::budget::build_table`], so the swapped bytes are
+    /// bit-exact vs. quantizing fresh at the assigned format offline.
+    /// Groups already in their target format keep their exact cells
+    /// (bytes, tier, heat, spill file); when *every* assignment is an
+    /// identity the current version is returned without a bump. Returns
+    /// the serving version after the pass.
+    ///
+    /// Failure atomicity, spill invalidation, and writer serialization
+    /// are identical to `update_table`: any error (invalid plan entry,
+    /// corrupt spill file under a source group) aborts before the swap,
+    /// replaced cells are retired from the slice store, and the whole
+    /// pass holds the rebalance mutex.
+    pub fn requantize_to(
+        &self,
+        plan: &[GroupAssignment],
+        q: &dyn Quantizer,
+    ) -> io::Result<u64> {
+        let core = &self.core;
+        let _swap = lock_ignore_poison(&core.rb_state);
+        requantize_plan(core, plan, q).map(|(v, _)| v)
+    }
+
+    /// One full heat-adaptive precision pass: collect every placement
+    /// group (whole replicated tables and row-wise chunks) with its
+    /// observed heat, solve the format assignment under `budget_bytes`
+    /// with [`crate::quant::budget::solve`], and commit it via the
+    /// [`ShardedEngine::requantize_to`] swap path. The returned
+    /// [`RequantOutcome`] carries the byte/error totals the eval and
+    /// bench harnesses print (heat-weighted L2 vs. the uniform-int4
+    /// reference at the same budget).
+    ///
+    /// Heat per group is the cell's exponential-decay touch score plus
+    /// the table's cumulative router-observed load apportioned by row
+    /// share (untiered cells skip per-touch accounting on the pinned
+    /// fast path, so the router signal is what carries the skew there),
+    /// plus-one smoothed so a cold start degenerates to flat heat —
+    /// and flat heat at the uniform-int4 budget degenerates to the
+    /// paper's uniform `int4 (FP16)`.
+    ///
+    /// Background equivalent: with [`ShardConfig::precision_budget`]
+    /// set, the rebalancer runs this same pass (with the paper's
+    /// `GREEDY` quantizer) on every non-idle tick.
+    pub fn requantize_once(
+        &self,
+        budget_bytes: usize,
+        q: &dyn Quantizer,
+    ) -> io::Result<RequantOutcome> {
+        let core = &self.core;
+        let _swap = lock_ignore_poison(&core.rb_state);
+        requantize_budget(core, budget_bytes, q)
+    }
 }
 
 impl Drop for ShardedEngine {
@@ -1045,6 +1155,233 @@ fn new_cell(
     }
 }
 
+/// Resolve a whole table's slice from any healthy replica: prefer a
+/// resident copy (no disk touched), else promote the first readable
+/// one. Errors only when every replica's spill read failed (counted on
+/// the shards like any other read failure).
+fn resolve_whole(core: &Core, cur: &Placement, table: usize) -> io::Result<Arc<TableSlice>> {
+    let shards = &cur.replicas[table];
+    let resident = shards
+        .iter()
+        .find_map(|&s| cur.slices[s][table].as_ref().and_then(|c| c.resident()));
+    if let Some(slice) = resident {
+        return Ok(slice);
+    }
+    let mut found = Err(io::Error::new(
+        io::ErrorKind::InvalidInput,
+        format!("table {table}: no replica holds a slice"),
+    ));
+    for &s in shards {
+        let cell = cur.slices[s][table].as_ref().expect("routed replica holds the table");
+        match resolve(core, cell, 0) {
+            Ok(slice) => return Ok(slice),
+            Err(e) => found = Err(e),
+        }
+    }
+    found
+}
+
+/// The clone → rebuild → swap body of [`ShardedEngine::requantize_to`].
+/// Caller holds the `rb_state` mutex. Returns the serving version after
+/// the pass and the number of groups actually rebuilt.
+fn requantize_plan(
+    core: &Core,
+    plan: &[GroupAssignment],
+    q: &dyn Quantizer,
+) -> io::Result<(u64, usize)> {
+    let invalid = |msg: String| io::Error::new(io::ErrorKind::InvalidInput, msg);
+    for (i, a) in plan.iter().enumerate() {
+        if a.table >= core.num_tables {
+            return Err(invalid(format!(
+                "table {} out of range ({} tables)",
+                a.table, core.num_tables
+            )));
+        }
+        match (&core.partitions[a.table], a.chunk) {
+            (TablePartition::Whole { .. }, Some(c)) => {
+                return Err(invalid(format!(
+                    "table {}: chunk {c} on a whole table (replicas move together; \
+                     use chunk: None)",
+                    a.table
+                )));
+            }
+            (TablePartition::RowWise(p), Some(c)) => {
+                if c >= p.num_shards() || p.range_of(c).is_empty() {
+                    return Err(invalid(format!("table {}: chunk {c} holds no rows", a.table)));
+                }
+            }
+            _ => {}
+        }
+        // Overlapping entries would make the final format order-defined
+        // (and orphan an admitted cell); refuse them up front.
+        for b in &plan[..i] {
+            if b.table == a.table
+                && (b.chunk.is_none() || a.chunk.is_none() || b.chunk == a.chunk)
+            {
+                return Err(invalid(format!(
+                    "table {}: overlapping assignments in one plan",
+                    a.table
+                )));
+            }
+        }
+    }
+    let cur: Arc<Placement> = Arc::clone(&read_ignore_poison(&core.placement));
+    let replicas = cur.replicas.clone();
+    let mut slices = cur.slices.clone(); // Arc clones: rows are shared, not copied
+    let mut replaced: Vec<Arc<SliceCell>> = Vec::new();
+    let mut changed = 0usize;
+    for a in plan {
+        let t = a.table;
+        match &core.partitions[t] {
+            TablePartition::Whole { .. } => {
+                // Rebuild once from any healthy copy, then hand every
+                // replica shard the same bytes (replicas stay
+                // byte-identical through the swap).
+                let src = resolve_whole(core, &cur, t)?;
+                if src.format() == a.format {
+                    continue; // identity: keep the exact cells and tier
+                }
+                let built = TableSlice::from_parts(
+                    budget::build_table(src.table(), a.format, q),
+                    src.global_rows(),
+                );
+                let shards = &cur.replicas[t];
+                let (last, dup) = shards.split_last().expect("whole table has an owner");
+                for &s in dup {
+                    let old = cur.slices[s][t]
+                        .as_ref()
+                        .expect("routed replica holds the table");
+                    let cell = new_cell(&core.store, s, t, built.duplicate());
+                    cell.touch(old.heat_score());
+                    replaced.push(Arc::clone(old));
+                    slices[s][t] = Some(cell);
+                }
+                let old = cur.slices[*last][t]
+                    .as_ref()
+                    .expect("routed replica holds the table");
+                let cell = new_cell(&core.store, *last, t, built);
+                cell.touch(old.heat_score());
+                replaced.push(Arc::clone(old));
+                slices[*last][t] = Some(cell);
+                changed += 1;
+            }
+            TablePartition::RowWise(p) => {
+                let chunks: Vec<usize> = match a.chunk {
+                    Some(s) => vec![s],
+                    None => {
+                        (0..p.num_shards()).filter(|&s| cur.slices[s][t].is_some()).collect()
+                    }
+                };
+                for s in chunks {
+                    let old =
+                        cur.slices[s][t].as_ref().expect("owning shard holds its chunk");
+                    // Reading the old bytes may hit a corrupt spill
+                    // file: abort before any swap (the `?`).
+                    let src = resolve(core, old, 0)?;
+                    if src.format() == a.format {
+                        continue;
+                    }
+                    let built = TableSlice::from_parts(
+                        budget::build_table(src.table(), a.format, q),
+                        src.global_rows(),
+                    );
+                    let cell = new_cell(&core.store, s, t, built);
+                    cell.touch(old.heat_score());
+                    replaced.push(Arc::clone(old));
+                    slices[s][t] = Some(cell);
+                    changed += 1;
+                }
+            }
+        }
+    }
+    if changed == 0 {
+        // Every assignment was an identity: nothing moved, so readers
+        // must not observe a version bump with unchanged bytes.
+        return Ok((core.version.load(Ordering::Acquire), 0));
+    }
+    *write_ignore_poison(&core.placement) = Arc::new(Placement { replicas, slices });
+    if let Some(store) = &core.store {
+        for old in &replaced {
+            store.invalidate(old);
+        }
+        store.enforce();
+    }
+    Ok((core.version.fetch_add(1, Ordering::AcqRel) + 1, changed))
+}
+
+/// The solve-and-commit body of [`ShardedEngine::requantize_once`] (and
+/// the rebalancer's precision pass). Caller holds the `rb_state` mutex.
+fn requantize_budget(
+    core: &Core,
+    budget_bytes: usize,
+    q: &dyn Quantizer,
+) -> io::Result<RequantOutcome> {
+    let specs = collect_group_specs(core)?;
+    let plan = budget::solve(&specs, budget_bytes, q)?;
+    let assignments: Vec<GroupAssignment> = plan
+        .assignments
+        .iter()
+        .map(|a| GroupAssignment { table: a.table, chunk: a.chunk, format: a.format })
+        .collect();
+    let weighted_norm = budget::weighted_norm(&specs);
+    let (version, changed) = requantize_plan(core, &assignments, q)?;
+    Ok(RequantOutcome {
+        version,
+        changed,
+        total_bytes: plan.total_bytes,
+        uniform_int4_bytes: plan.uniform_int4_bytes,
+        weighted_err: plan.weighted_err,
+        uniform_int4_err: plan.uniform_int4_err,
+        weighted_norm,
+    })
+}
+
+/// Snapshot every placement row-group as a solver [`GroupSpec`]: the
+/// group's de-quantized fp32 content plus its observed heat — the
+/// cell's exponential-decay touch score, plus the table's cumulative
+/// router load apportioned by row share (the pinned untiered fast path
+/// skips per-touch accounting, so the router signal carries the skew
+/// there), plus-one smoothed so a cold start means flat heat.
+fn collect_group_specs(core: &Core) -> io::Result<Vec<GroupSpec>> {
+    let cur: Arc<Placement> = Arc::clone(&read_ignore_poison(&core.placement));
+    let loads: Vec<u64> = core.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect();
+    let mut specs = Vec::new();
+    for t in 0..core.num_tables {
+        match &core.partitions[t] {
+            TablePartition::Whole { .. } => {
+                let touch = cur.replicas[t]
+                    .iter()
+                    .filter_map(|&s| cur.slices[s][t].as_ref())
+                    .map(|c| c.heat_score())
+                    .max()
+                    .unwrap_or(0);
+                let src = resolve_whole(core, &cur, t)?;
+                specs.push(GroupSpec {
+                    table: t,
+                    chunk: None,
+                    heat: touch as f64 + loads[t] as f64 + 1.0,
+                    data: budget::dequantize_any(src.table()),
+                });
+            }
+            TablePartition::RowWise(p) => {
+                let total_rows = p.rows() as f64;
+                for s in 0..p.num_shards() {
+                    let Some(cell) = cur.slices[s][t].as_ref() else { continue };
+                    let src = resolve(core, cell, 0)?;
+                    let share = p.range_of(s).len() as f64 / total_rows;
+                    specs.push(GroupSpec {
+                        table: t,
+                        chunk: Some(s),
+                        heat: cell.heat_score() as f64 + loads[t] as f64 * share + 1.0,
+                        data: budget::dequantize_any(src.table()),
+                    });
+                }
+            }
+        }
+    }
+    Ok(specs)
+}
+
 /// Build a copy of `slice` with the given `(global_row, values)` pairs
 /// rewritten. FP32 slices splice the floats in place; fused slices
 /// re-quantize each updated row through
@@ -1052,9 +1389,13 @@ fn new_cell(
 /// `table::refresh` uses, so the patched image is bit-identical to
 /// requantizing the whole table with the new rows in it. Rows not
 /// listed keep their exact bytes (the quantization params are per-row,
-/// so patching one row can never perturb another). Codebook slices are
-/// rejected: their codebooks are trained across rows, so a row-local
-/// patch could not reproduce the full-requantization bytes.
+/// so patching one row can never perturb another). Codebook slices
+/// re-cluster: their codebooks are trained across rows, so a row-local
+/// patch could not reproduce the full-requantization bytes — instead
+/// the new rows are spliced into the covering group's fp32 image and
+/// the codebooks re-trained on it (k-means here is deterministic
+/// sorted Lloyd, so the result is bit-identical to quantizing the
+/// patched group from scratch).
 fn patch_slice(
     slice: &TableSlice,
     rows: &[(u32, &[f32])],
@@ -1086,12 +1427,13 @@ fn patch_slice(
             }
             AnyTable::Fused(fused)
         }
-        AnyTable::Codebook(_) => {
-            return Err(io::Error::new(
-                io::ErrorKind::Unsupported,
-                "live updates support f32 and fused tables only \
-                 (codebook rows share trained codebooks)",
-            ))
+        AnyTable::Codebook(t) => {
+            let mut data = t.dequantize();
+            for (id, vals) in rows {
+                let local = *id as usize - range.start;
+                data.row_mut(local).copy_from_slice(vals);
+            }
+            AnyTable::Codebook(data.quantize_codebook(t.kind(), t.scale_bias_dtype()))
         }
     };
     Ok(TableSlice::from_parts(table, range))
@@ -1495,22 +1837,36 @@ fn rebalance_core(core: &Core) -> bool {
             }
         }
     }
-    if added == 0 && retired == 0 {
-        return false;
+    let mut changed = false;
+    if added > 0 || retired > 0 {
+        *write_ignore_poison(&core.placement) = Arc::new(Placement { replicas, slices });
+        // New replicas were admitted resident; push residency back under
+        // the budget (retired cells free their bytes when the last
+        // snapshot holding them drops).
+        if added > 0 {
+            if let Some(store) = &core.store {
+                store.enforce();
+            }
+        }
+        core.rebalances.fetch_add(1, Ordering::Relaxed);
+        core.replicas_added.fetch_add(added, Ordering::Relaxed);
+        core.replicas_retired.fetch_add(retired, Ordering::Relaxed);
+        changed = true;
     }
-    *write_ignore_poison(&core.placement) = Arc::new(Placement { replicas, slices });
-    // New replicas were admitted resident; push residency back under the
-    // budget (retired cells free their bytes when the last snapshot
-    // holding them drops).
-    if added > 0 {
-        if let Some(store) = &core.store {
-            store.enforce();
+    // Heat-adaptive precision maintenance: with a byte budget configured
+    // the same pass re-solves the format assignment against the decayed
+    // heat and re-quantizes drifted groups — usually a no-op (identity
+    // assignments keep their cells and skip the version bump). Still
+    // under the pass mutex, so the replica swap above and the precision
+    // swap cannot interleave with an update. Errors are contained like
+    // any other background hazard: the old formats keep serving and the
+    // store counted any spill failure.
+    if let Some(bytes) = core.precision_budget {
+        if let Ok(out) = requantize_budget(core, bytes, &GreedyQuantizer::default()) {
+            changed = changed || out.changed > 0;
         }
     }
-    core.rebalances.fetch_add(1, Ordering::Relaxed);
-    core.replicas_added.fetch_add(added, Ordering::Relaxed);
-    core.replicas_retired.fetch_add(retired, Ordering::Relaxed);
-    true
+    changed
 }
 
 #[cfg(test)]
@@ -2077,16 +2433,10 @@ mod tests {
     }
 
     #[test]
-    fn update_rejects_bad_input_and_codebook_tables() {
+    fn update_rejects_bad_input() {
         let q = GreedyQuantizer::default();
-        let master = EmbeddingTable::randn(16, 4, 9400);
         let engine = ShardedEngine::start(
-            TableSet::new(vec![
-                AnyTable::F32(EmbeddingTable::randn(16, 4, 9401)),
-                AnyTable::Codebook(
-                    master.quantize_codebook(crate::table::CodebookKind::Rowwise, ScaleBiasDtype::F32),
-                ),
-            ]),
+            f32_set(1, 16, 4),
             &ShardConfig { num_shards: 2, ..Default::default() },
         );
         let ok_row = vec![0.0f32; 4];
@@ -2099,11 +2449,173 @@ mod tests {
         // Wrong dimension.
         let e = engine.update_table(0, &[(0, vec![1.0; 3])], &q).unwrap_err();
         assert_eq!(e.kind(), io::ErrorKind::InvalidInput);
-        // Codebook tables: unsupported (codebooks are trained across rows).
-        let e = engine.update_table(1, &[(0, ok_row)], &q).unwrap_err();
-        assert_eq!(e.kind(), io::ErrorKind::Unsupported);
         // No failed attempt advanced the snapshot.
         assert_eq!(engine.version(), 1);
+    }
+
+    #[test]
+    fn codebook_update_reclusters_bit_identically_to_full_requantization() {
+        // Codebook tables shipped read-only once; a row patch now re-runs
+        // the deterministic k-means over the covering row-group inside
+        // the same clone → patch → swap, so the committed table must be
+        // bit-identical to re-clustering the patched FP32 state offline.
+        let q = GreedyQuantizer::default();
+        for kind in
+            [crate::table::CodebookKind::Rowwise, crate::table::CodebookKind::TwoTier { k: 4 }]
+        {
+            let master = EmbeddingTable::randn(24, 8, 9450);
+            let cb = master.quantize_codebook(kind, ScaleBiasDtype::F32);
+            let engine = ShardedEngine::start(
+                TableSet::new(vec![AnyTable::Codebook(cb.clone())]),
+                &ShardConfig {
+                    num_shards: 2,
+                    small_table_rows: usize::MAX,
+                    replicate_hot: 1,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(engine.replica_shards(0), vec![0, 1]);
+            let rows: Vec<(u32, Vec<f32>)> = [1u32, 17]
+                .iter()
+                .map(|&r| (r, (0..8).map(|d| r as f32 * 0.3 - d as f32 * 0.7).collect()))
+                .collect();
+            // The oracle patches the *dequantized* current state (update
+            // semantics patch served values, and codebooks are lossy),
+            // then re-clusters the whole group from scratch.
+            let mut patched = cb.dequantize();
+            for (r, vals) in &rows {
+                patched.row_mut(*r as usize).copy_from_slice(vals);
+            }
+            let reference = TableSet::new(vec![AnyTable::Codebook(
+                patched.quantize_codebook(kind, ScaleBiasDtype::F32),
+            )]);
+            assert_eq!(engine.update_table(0, &rows, &q).unwrap(), 2, "{kind:?}");
+            // Every replica must hold the re-clustered bits.
+            for i in 0..24u32 {
+                let req = Request { ids: vec![vec![i]] };
+                let mut want = vec![0.0f32; 8];
+                reference.pool(0, &req.ids[0], &mut want);
+                assert_eq!(engine.lookup(&req), want, "{kind:?} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_to_swaps_bit_exact_and_is_version_gated() {
+        // Carve one f32 table into four row-wise chunks, then rebuild two
+        // of them in different formats through the online swap. Every
+        // swapped chunk must serve bit-identically to quantizing the same
+        // rows fresh offline; untouched chunks keep their exact f32 bits.
+        let q = GreedyQuantizer::default();
+        let engine = ShardedEngine::start(
+            f32_set(1, 32, 4),
+            &ShardConfig { num_shards: 4, small_table_rows: 0, ..Default::default() },
+        );
+        let master = EmbeddingTable::randn(32, 4, 9100);
+        let chunk =
+            |lo: usize, hi: usize| EmbeddingTable::from_data(4, master.data()[lo * 4..hi * 4].to_vec());
+        let plan = [
+            GroupAssignment {
+                table: 0,
+                chunk: Some(0),
+                format: FormatTag::Fused { nbits: 8, scale_bias: ScaleBiasDtype::F32 },
+            },
+            GroupAssignment {
+                table: 0,
+                chunk: Some(2),
+                format: FormatTag::Fused { nbits: 4, scale_bias: ScaleBiasDtype::F16 },
+            },
+        ];
+        assert_eq!(engine.requantize_to(&plan, &q).unwrap(), 2);
+        assert_eq!(engine.version(), 2);
+        let ref0 = TableSet::new(vec![AnyTable::Fused(
+            chunk(0, 8).quantize_fused(&q, 8, ScaleBiasDtype::F32),
+        )]);
+        let ref2 = TableSet::new(vec![AnyTable::Fused(
+            chunk(16, 24).quantize_fused(&q, 4, ScaleBiasDtype::F16),
+        )]);
+        for i in 0..32u32 {
+            let got = engine.lookup(&Request { ids: vec![vec![i]] });
+            let mut want = vec![0.0f32; 4];
+            match i {
+                0..=7 => ref0.pool(0, &[i], &mut want),
+                16..=23 => ref2.pool(0, &[i - 16], &mut want),
+                _ => want.copy_from_slice(master.row(i as usize)),
+            }
+            assert_eq!(got, want, "row {i}");
+        }
+        // Identity re-plan: every group already holds its format — no
+        // rebuild, no version bump.
+        assert_eq!(engine.requantize_to(&plan, &q).unwrap(), 2);
+        assert_eq!(engine.version(), 2);
+        // Invalid plans are rejected before any swap.
+        for bad in [
+            GroupAssignment { table: 7, chunk: None, format: FormatTag::F32 },
+            GroupAssignment { table: 0, chunk: Some(9), format: FormatTag::F32 },
+        ] {
+            let e = engine.requantize_to(&[bad], &q).unwrap_err();
+            assert_eq!(e.kind(), io::ErrorKind::InvalidInput);
+        }
+        let overlap = [
+            GroupAssignment { table: 0, chunk: None, format: FormatTag::F32 },
+            GroupAssignment { table: 0, chunk: Some(1), format: FormatTag::F32 },
+        ];
+        let e = engine.requantize_to(&overlap, &q).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidInput);
+        assert_eq!(engine.version(), 2, "failed plans must not advance the version");
+    }
+
+    #[test]
+    fn requantize_once_upgrades_hot_tables_and_beats_uniform_int4() {
+        // Six whole f32 tables, traffic skewed onto table 0, budget equal
+        // to uniform int4 (FP16). The solver must fund an int8 upgrade of
+        // the hot table with codebook downgrades of cold ones and beat
+        // uniform int4 on heat-weighted error — the PR's acceptance
+        // criterion against the live engine. Sizing mirrors
+        // `quant::budget`'s skewed test: the hot int4→int8 step costs
+        // 256·8 B and each cold codebook downgrade frees 672 B, so the
+        // five cold groups cover the upgrade with slack.
+        let q = GreedyQuantizer::default();
+        let engine = ShardedEngine::start(
+            f32_set(6, 256, 16),
+            &ShardConfig { num_shards: 2, small_table_rows: usize::MAX, ..Default::default() },
+        );
+        // 150 requests × 2 ids drive table 0's observed load to 300;
+        // untouched tables keep the +1 smoothing floor.
+        for i in 0..150u32 {
+            let ids = vec![vec![i % 256, 255 - i % 256], vec![], vec![], vec![], vec![], vec![]];
+            let _ = engine.lookup(&Request { ids });
+        }
+        let budget = 6 * 256 * (16 / 2 + 4); // uniform int4 (FP16) bytes
+        let out = engine.requantize_once(budget, &q).unwrap();
+        assert_eq!(out.version, 2);
+        assert_eq!(engine.version(), 2);
+        assert!(out.changed > 0, "f32 tables cannot fit the int4 budget unchanged");
+        assert_eq!(out.uniform_int4_bytes, budget);
+        assert!(out.total_bytes <= budget, "{} > {budget}", out.total_bytes);
+        assert!(
+            out.weighted_err < out.uniform_int4_err,
+            "adaptive {} vs uniform {}",
+            out.weighted_err,
+            out.uniform_int4_err
+        );
+        assert!(out.weighted_l2() < out.uniform_int4_l2());
+        // The hot table deterministically lands at int8 (fp16 tails): its
+        // served rows must be bit-identical to quantizing the master
+        // offline at that format.
+        let master = EmbeddingTable::randn(256, 16, 9100);
+        let reference = TableSet::new(vec![AnyTable::Fused(
+            master.quantize_fused(&q, 8, ScaleBiasDtype::F16),
+        )]);
+        for i in (0..256u32).step_by(17) {
+            let req = Request { ids: vec![vec![i], vec![], vec![], vec![], vec![], vec![]] };
+            let mut want = vec![0.0f32; 16];
+            reference.pool(0, &[i], &mut want);
+            assert_eq!(&engine.lookup(&req)[..16], want.as_slice(), "hot row {i}");
+        }
+        // A second pass under the same budget re-solves from the current
+        // (already mixed) state and must still fit and serve.
+        assert!(engine.requantize_once(budget, &q).is_ok());
     }
 
     #[test]

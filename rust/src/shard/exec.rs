@@ -24,7 +24,19 @@
 //! Each `pool_*` function computes **one** segment (the flat kernels'
 //! per-segment body); `tests` pin bit-equality against the flat kernels
 //! per format and per backend.
+//!
+//! **Mixed formats.** Online re-quantization may assign different
+//! formats to different row chunks of one table (hot chunks int8, cold
+//! chunks int4/codebook). A segment whose ids touch chunks of more than
+//! one format has no flat-kernel counterpart to be bit-identical to, so
+//! it takes [`pool_mixed`]: decode each pooled row to f32 through its
+//! chunk's own format and accumulate in request order — scalar,
+//! backend-independent, and deterministic, which is what the chaos
+//! oracle and the re-quantization bit-exactness tests pin against.
+//! Single-format segments never pay for this: the check walks the ids
+//! and consults a chunk's format only at shard transitions.
 
+use crate::coordinator::catalog::FormatTag;
 use crate::shard::partition::RowPartition;
 use crate::sls::backend::{self, KernelBackend};
 use crate::sls::kernel;
@@ -55,15 +67,28 @@ pub fn pool_rowwise_with<'a, F>(
 ) where
     F: Fn(usize) -> &'a AnyTable,
 {
-    // Dispatch on the first *used* chunk's format (chunks of one table
-    // all share it). Callers with tiered storage only materialize the
-    // chunks a segment actually touches, so an untouched chunk — shard
-    // 0 included — must never be resolved here.
+    // Dispatch on the first *used* chunk's format. Callers with tiered
+    // storage only materialize the chunks a segment actually touches, so
+    // an untouched chunk — shard 0 included — must never be resolved
+    // here (the mixed-format check below also only consults touched
+    // chunks, at shard transitions).
     let Some(&first) = ids.first() else {
         out.fill(0.0);
         return;
     };
-    match chunk_of(p.shard_of(first)) {
+    let first_chunk = chunk_of(p.shard_of(first));
+    let first_fmt = FormatTag::of(first_chunk);
+    let mut prev_shard = p.shard_of(first);
+    for &id in &ids[1..] {
+        let s = p.shard_of(id);
+        if s != prev_shard {
+            prev_shard = s;
+            if FormatTag::of(chunk_of(s)) != first_fmt {
+                return pool_mixed(p, &chunk_of, ids, out);
+            }
+        }
+    }
+    match first_chunk {
         AnyTable::F32(_) => pool_f32(kb, p, &chunk_of, ids, out),
         AnyTable::Fused(f) => {
             if f.nbits() == 4 {
@@ -87,6 +112,31 @@ pub fn touch_counts(p: &RowPartition, ids: &[u32], counts: &mut Vec<u64>) {
     counts.resize(p.num_shards(), 0);
     for &id in ids {
         counts[p.shard_of(id)] += 1;
+    }
+}
+
+/// The mixed-format segment body: decode every pooled row to f32
+/// through its chunk's own format, accumulate in original request
+/// order. Pure scalar on purpose — there is no flat kernel to mirror
+/// when the touched chunks disagree on format, so the canonical answer
+/// is this decode-then-add order, identical on every backend.
+fn pool_mixed<'a, F>(p: &RowPartition, chunk_of: &F, ids: &[u32], out: &mut [f32])
+where
+    F: Fn(usize) -> &'a AnyTable,
+{
+    let d = out.len();
+    out.fill(0.0);
+    let mut row = vec![0.0f32; d];
+    for &id in ids {
+        let local = p.local_of(id) as usize;
+        match chunk_of(p.shard_of(id)) {
+            AnyTable::F32(t) => row.copy_from_slice(t.row(local)),
+            AnyTable::Fused(f) => f.dequantize_row_into(local, &mut row),
+            AnyTable::Codebook(c) => c.dequantize_row_into(local, &mut row),
+        }
+        for (o, r) in out.iter_mut().zip(&row) {
+            *o += r;
+        }
     }
 }
 
@@ -379,6 +429,70 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn mixed_format_chunks_pool_deterministically_on_every_backend() {
+        // Heat-adaptive assignments can leave one table's chunks in
+        // different formats. The segment then takes the canonical
+        // scalar fallback: decode each row through its chunk's own
+        // format, accumulate in request order — the same answer on
+        // every backend.
+        let rows = 32;
+        let dim = 16;
+        let master = EmbeddingTable::randn(rows, dim, 0x3117);
+        let p = RowPartition::new(rows, 4);
+        let slices: Vec<TableSlice> = (0..4)
+            .map(|s| {
+                let r = p.range_of(s);
+                let sub = EmbeddingTable::from_data(
+                    dim,
+                    master.data()[r.start * dim..r.end * dim].to_vec(),
+                );
+                let t = match s {
+                    0 => AnyTable::F32(sub),
+                    1 => AnyTable::Fused(sub.quantize_fused(&AsymQuantizer, 8, ScaleBiasDtype::F32)),
+                    2 => AnyTable::Fused(sub.quantize_fused(&AsymQuantizer, 4, ScaleBiasDtype::F16)),
+                    _ => AnyTable::Codebook(
+                        sub.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32),
+                    ),
+                };
+                TableSlice::from_parts(t, r)
+            })
+            .collect();
+        let ids = [0u32, 31, 9, 17, 9, 25, 2, 12, 30];
+        // The semantic definition, computed independently of pool_mixed.
+        let mut want = vec![0.0f32; dim];
+        let mut row = vec![0.0f32; dim];
+        for &id in &ids {
+            let local = p.local_of(id) as usize;
+            match slices[p.shard_of(id)].table() {
+                AnyTable::F32(t) => row.copy_from_slice(t.row(local)),
+                AnyTable::Fused(f) => f.dequantize_row_into(local, &mut row),
+                AnyTable::Codebook(c) => c.dequantize_row_into(local, &mut row),
+            }
+            for (w, r) in want.iter_mut().zip(&row) {
+                *w += r;
+            }
+        }
+        for kb in [KernelBackend::Scalar, backend::detected()] {
+            let mut got = vec![7.0f32; dim];
+            pool_rowwise_with(kb, &p, |s| slices[s].table(), &ids, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "kb={kb}");
+            }
+        }
+        // A single-id segment is exactly that row's decode.
+        let mut got = vec![0.0f32; dim];
+        pool_rowwise(&p, |s| slices[s].table(), &[17], &mut got);
+        match slices[p.shard_of(17)].table() {
+            AnyTable::Fused(f) => {
+                let mut want = vec![0.0f32; dim];
+                f.dequantize_row_into(p.local_of(17) as usize, &mut want);
+                assert_eq!(got, want);
+            }
+            _ => panic!("id 17 should land in the int4 chunk"),
         }
     }
 

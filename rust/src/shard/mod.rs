@@ -27,7 +27,12 @@
 //!   whole tables and retires cold replicas at runtime from
 //!   [`ShardedEngine::observed_loads`] — ranked by exponential-decay
 //!   [`load::DecayWindow`]s so bursty tables do not thrash replicas —
-//!   swapping routing atomically between batches. Each shard worker
+//!   swapping routing atomically between batches. With
+//!   [`ShardConfig::precision_budget`] set, the same tick re-quantizes
+//!   row-groups online to the heat-adaptive format assignment of
+//!   [`crate::quant::budget`] through an identical snapshot swap
+//!   (hot groups up toward int8/f32, cold down to int4/codebook).
+//!   Each shard worker
 //!   parks on its own wakeup condvar; producers notify only the shards
 //!   that received work (all of them when stealing is on), with no idle
 //!   polling tick.
@@ -86,7 +91,7 @@ pub mod transition;
 use std::path::PathBuf;
 use std::time::Duration;
 
-pub use engine::{RebalanceStats, ShardedEngine};
+pub use engine::{GroupAssignment, RebalanceStats, RequantOutcome, ShardedEngine};
 pub use gate::WakeGate;
 pub use load::DecayWindow;
 pub use transition::{ClaimFlag, TransitionSignal};
@@ -159,6 +164,16 @@ pub struct ShardConfig {
     /// `0` (default) disables the warmer; segment-level prefetching of
     /// touched chunks is always on when the I/O pool exists.
     pub prefetch_window: usize,
+    /// Heat-adaptive mixed precision: a global byte budget for the
+    /// quantized payload of every row-group. When set, the rebalancer's
+    /// tick also drives [`crate::quant::budget::solve`] over the observed
+    /// heat and re-quantizes drifted groups online through the same
+    /// snapshot swap as re-replication ([`ShardedEngine::requantize_once`]
+    /// runs one pass manually). `None` (default) keeps every table in its
+    /// ingest format. The budget must cover at least the all-codebook
+    /// floor of the carved groups or the pass is a no-op with an error
+    /// counted.
+    pub precision_budget: Option<usize>,
     /// SLS kernel backend for every shard worker. `None` (default)
     /// resolves the process default — `EMBERQ_FORCE_SCALAR` if set, else
     /// the best backend the CPU supports
@@ -184,6 +199,7 @@ impl Default for ShardConfig {
             spill_dir: None,
             spill_io_threads: 2,
             prefetch_window: 0,
+            precision_budget: None,
             kernel_backend: None,
         }
     }

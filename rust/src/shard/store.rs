@@ -10,11 +10,14 @@
 //! format) or [`SliceTier::Spilled`] (a [`SpillHandle`] naming an
 //! on-disk file). The [`SliceStore`] owns the policy:
 //!
-//! * **Spill format** — `[8B "EMBQSPL1"][global_lo u64][global_hi u64]
-//!   [payload_len u64][fnv1a64 u64][payload]` where the payload is the
-//!   slice's table in the exact `table::serial` container (`EMBQTBL1`),
-//!   so a spilled slice keeps its native quantized encoding (int4+tails,
-//!   codebook, fp32) byte for byte. See `docs/formats.md` for the
+//! * **Spill format** — `[8B "EMBQSPL2"][global_lo u64][global_hi u64]
+//!   [fmt_tag u16][payload_len u64][fnv1a64 u64][payload]` where the
+//!   payload is the slice's table in the exact `table::serial` container
+//!   (`EMBQTBL2`) and `fmt_tag` is [`serial::format_tag`] — the
+//!   layout-revision + format of the payload, validated against both the
+//!   owning cell and the decoded table on load, so a spilled slice keeps
+//!   its native quantized encoding (int4+tails, codebook, fp32) byte for
+//!   byte and online re-quantization can never serve a stale format. See `docs/formats.md` for the
 //!   normative byte-level spec. Headers, lengths, checksum, and shape
 //!   are all validated on load: a truncated or corrupted file is a clean
 //!   `io::Error`, never a panic.
@@ -111,12 +114,12 @@ use crate::shard::slice::TableSlice;
 use crate::table::serial::{self, HashingWriter};
 use crate::util::sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison};
 
-const SPILL_MAGIC: &[u8; 8] = b"EMBQSPL1";
-/// magic + global_lo + global_hi + payload_len + checksum.
-const SPILL_HEADER_BYTES: u64 = 8 + 8 + 8 + 8 + 8;
+const SPILL_MAGIC: &[u8; 8] = b"EMBQSPL2";
+/// magic + global_lo + global_hi + fmt_tag + payload_len + checksum.
+const SPILL_HEADER_BYTES: u64 = 8 + 8 + 8 + 2 + 8 + 8;
 /// Byte offset of the `[payload_len][checksum]` pair the streaming
 /// writer patches after the payload has been streamed.
-const SPILL_LEN_OFFSET: u64 = 8 + 8 + 8;
+const SPILL_LEN_OFFSET: u64 = 8 + 8 + 8 + 2;
 
 /// Fallback decay cadence: when no rebalancer drives [`SliceStore::tick`]
 /// (the `--resident-budget` without `--rebalance-interval` configuration),
@@ -230,6 +233,10 @@ pub struct SliceCell {
     global_lo: usize,
     /// Logical bytes when resident (the slice's native-format payload).
     bytes: usize,
+    /// [`serial::format_tag`] of the slice's table — pinned at admission
+    /// so a spill file can be validated against the format the placement
+    /// expects even after online re-quantization swapped siblings.
+    fmt_tag: u16,
     tier: RwLock<SliceTier>,
     /// Spill-file path (assigned at admission; empty for untracked
     /// cells, which never spill).
@@ -268,6 +275,7 @@ impl SliceCell {
         let rows = slice.rows();
         let dim = slice.dim();
         let bytes = slice.size_bytes();
+        let fmt_tag = serial::format_tag(slice.table());
         let slice = Arc::new(slice);
         SliceCell {
             shard,
@@ -276,6 +284,7 @@ impl SliceCell {
             dim,
             global_lo: range.start,
             bytes,
+            fmt_tag,
             tier: RwLock::new(SliceTier::Resident(Arc::clone(&slice))),
             spill_path,
             file_len: AtomicU64::new(0),
@@ -326,6 +335,12 @@ impl SliceCell {
     /// Logical bytes when resident.
     pub fn bytes(&self) -> usize {
         self.bytes
+    }
+
+    /// [`serial::format_tag`] of the table this cell slices (pinned at
+    /// admission; re-quantization admits a *new* cell, never mutates).
+    pub fn fmt_tag(&self) -> u16 {
+        self.fmt_tag
     }
 
     /// The resident slice, if this cell is in the RAM tier.
@@ -1314,6 +1329,9 @@ impl StoreInner {
             if info.lo != cell.global_lo || info.hi != cell.global_lo + cell.rows {
                 continue;
             }
+            if info.fmt_tag != cell.fmt_tag {
+                continue; // same rows, different (or stale) format
+            }
             let digest = digests[i].get_or_insert_with(|| cell_digest(cell));
             if *digest != Some((info.payload_len, info.checksum)) {
                 continue;
@@ -1350,6 +1368,7 @@ fn spill_file_token(name: &str) -> Option<u64> {
 struct OrphanInfo {
     lo: usize,
     hi: usize,
+    fmt_tag: u16,
     payload_len: u64,
     checksum: u64,
     file_len: u64,
@@ -1370,8 +1389,9 @@ fn read_orphan(path: &Path) -> io::Result<OrphanInfo> {
     };
     let lo = u64_at(8) as usize;
     let hi = u64_at(16) as usize;
-    let payload_len = u64_at(24);
-    let checksum = u64_at(32);
+    let fmt_tag = u16::from_le_bytes(header[24..26].try_into().expect("fixed-width header"));
+    let payload_len = u64_at(26);
+    let checksum = u64_at(34);
     if payload_len != file_len.saturating_sub(SPILL_HEADER_BYTES) {
         return Err(bad("payload length"));
     }
@@ -1380,7 +1400,7 @@ fn read_orphan(path: &Path) -> io::Result<OrphanInfo> {
     if hw.digest() != (payload_len, checksum) {
         return Err(bad("checksum"));
     }
-    Ok(OrphanInfo { lo, hi, payload_len, checksum, file_len })
+    Ok(OrphanInfo { lo, hi, fmt_tag, payload_len, checksum, file_len })
 }
 
 fn bad(what: &str) -> io::Error {
@@ -1411,6 +1431,7 @@ fn write_spill_tmp(tmp: &Path, slice: &TableSlice) -> io::Result<(u64, u64)> {
     w.write_all(SPILL_MAGIC)?;
     w.write_all(&(range.start as u64).to_le_bytes())?;
     w.write_all(&(range.end as u64).to_le_bytes())?;
+    w.write_all(&serial::format_tag(slice.table()).to_le_bytes())?;
     // Placeholder for [payload_len][checksum], patched after streaming.
     w.write_all(&[0u8; 16])?;
     let mut hw = HashingWriter::new(w);
@@ -1443,10 +1464,14 @@ fn read_spill(handle: &SpillHandle, cell: &SliceCell) -> io::Result<TableSlice> 
     };
     let lo = u64_at(8) as usize;
     let hi = u64_at(16) as usize;
-    let payload_len = u64_at(24);
-    let checksum = u64_at(32);
+    let fmt_tag = u16::from_le_bytes(header[24..26].try_into().expect("fixed-width header"));
+    let payload_len = u64_at(26);
+    let checksum = u64_at(34);
     if lo != cell.global_lo || hi != cell.global_lo + cell.rows {
         return Err(bad("global row range"));
+    }
+    if fmt_tag != cell.fmt_tag {
+        return Err(bad("format tag"));
     }
     if payload_len != actual_len - SPILL_HEADER_BYTES {
         return Err(bad("payload length"));
@@ -1459,6 +1484,9 @@ fn read_spill(handle: &SpillHandle, cell: &SliceCell) -> io::Result<TableSlice> 
     let table = serial::read_any(&mut payload.as_slice())?;
     if table.rows() != cell.rows || table.dim() != cell.dim {
         return Err(bad("payload shape"));
+    }
+    if serial::format_tag(&table) != fmt_tag {
+        return Err(bad("format tag"));
     }
     Ok(TableSlice::from_parts(table, lo..hi))
 }
@@ -1668,6 +1696,30 @@ mod tests {
         fs::write(&path, &good).unwrap();
         assert!(store.promote(&cell).is_ok());
         assert!(cell.is_resident());
+    }
+
+    #[test]
+    fn format_tag_mismatch_is_a_clean_error() {
+        // The header's fmt_tag (offset 24, outside the payload checksum)
+        // must match the owning cell: a file holding the right rows in
+        // the wrong format — e.g. left behind by an interrupted online
+        // re-quantization — is rejected, not served.
+        let store = tmp_store("fmt_tag", usize::MAX);
+        let slice = TableSlice::cut(&any_table(1, 20, 16, 0x91), 0..20);
+        let expect = serial::format_tag(slice.table());
+        let cell = store.admit(0, 0, slice);
+        assert_eq!(cell.fmt_tag(), expect);
+        store.demote_all().unwrap();
+        let path = cell.spill_handle().unwrap().path().to_path_buf();
+        let good = fs::read(&path).unwrap();
+        let mut tagged = good.clone();
+        tagged[24] ^= 0xFF; // corrupt the tag, leave payload + checksum intact
+        fs::write(&path, &tagged).unwrap();
+        let err = store.promote(&cell).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("format tag"), "{err}");
+        fs::write(&path, &good).unwrap();
+        assert!(store.promote(&cell).is_ok());
     }
 
     #[test]

@@ -5,21 +5,31 @@
 //! `emberq serve` / the examples read them). Little-endian, versioned:
 //!
 //! ```text
-//! [8B magic "EMBQTBL1"][1B kind][header ...][payload ...]
+//! [8B magic "EMBQTBL2"][1B kind][1B layout-revision][header ...][payload ...]
 //! kind 0: FP32       header: rows u64, dim u64
 //! kind 1: Fused      header: rows u64, dim u64, nbits u8, sb u8
 //! kind 2: Codebook   header: rows u64, dim u64, scheme u8 (0 rowwise,
 //!                    1 two-tier), sb u8, k u64
 //! ```
+//!
+//! The layout-revision byte plus the kind/detail bytes fold into the
+//! versioned u16 [`format_tag`] the spill container records, so mixed
+//! per-slice formats share one container instead of forking layouts.
 
 use std::io::{self, Read, Write};
 
 use crate::table::codebook::CodebookKind;
 use crate::table::{CodebookTable, EmbeddingTable, FusedTable, ScaleBiasDtype};
 
-const MAGIC: &[u8; 8] = b"EMBQTBL1";
+const MAGIC: &[u8; 8] = b"EMBQTBL2";
+
+/// Revision of the in-container field layout. Bumped together with the
+/// magic's trailing digit on any layout change (`docs/formats.md`);
+/// readers reject anything else.
+pub const LAYOUT_REVISION: u8 = 1;
 
 /// Any of the three table formats, for format-agnostic loading.
+#[derive(Clone)]
 pub enum AnyTable {
     /// FP32.
     F32(EmbeddingTable),
@@ -66,6 +76,36 @@ impl AnyTable {
             AnyTable::Codebook(t) => crate::sls::SlsTable::Codebook(t),
         }
     }
+}
+
+/// The versioned u16 format tag of a table, as recorded by the spill
+/// container (`EMBQSPL2`) and checked against its payload:
+///
+/// ```text
+/// (LAYOUT_REVISION << 12) | (kind << 8) | detail
+/// detail:  kind 0 (FP32)      0
+///          kind 1 (Fused)     (nbits << 4) | sb
+///          kind 2 (Codebook)  (scheme << 4) | sb
+/// ```
+///
+/// Every field already lives in the container header; the tag is those
+/// bytes folded into one comparable word, so a format change is a tag
+/// change — never a new layout.
+pub fn format_tag(t: &AnyTable) -> u16 {
+    let (kind, detail) = match t {
+        AnyTable::F32(_) => (0u16, 0u16),
+        AnyTable::Fused(f) => {
+            (1, ((f.nbits() as u16) << 4) | sb_code(f.scale_bias_dtype()) as u16)
+        }
+        AnyTable::Codebook(c) => {
+            let scheme: u16 = match c.kind() {
+                CodebookKind::Rowwise => 0,
+                CodebookKind::TwoTier { .. } => 1,
+            };
+            (2, (scheme << 4) | sb_code(c.scale_bias_dtype()) as u16)
+        }
+    };
+    ((LAYOUT_REVISION as u16) << 12) | (kind << 8) | detail
 }
 
 fn sb_code(sb: ScaleBiasDtype) -> u8 {
@@ -171,7 +211,7 @@ fn r_u8<R: Read>(r: &mut R) -> io::Result<u8> {
 /// Serialize an FP32 table.
 pub fn write_f32<W: Write>(w: &mut W, t: &EmbeddingTable) -> io::Result<()> {
     w.write_all(MAGIC)?;
-    w.write_all(&[0u8])?;
+    w.write_all(&[0u8, LAYOUT_REVISION])?;
     w_u64(w, t.rows() as u64)?;
     w_u64(w, t.dim() as u64)?;
     for &v in t.data() {
@@ -183,7 +223,7 @@ pub fn write_f32<W: Write>(w: &mut W, t: &EmbeddingTable) -> io::Result<()> {
 /// Serialize a fused table.
 pub fn write_fused<W: Write>(w: &mut W, t: &FusedTable) -> io::Result<()> {
     w.write_all(MAGIC)?;
-    w.write_all(&[1u8])?;
+    w.write_all(&[1u8, LAYOUT_REVISION])?;
     w_u64(w, t.rows() as u64)?;
     w_u64(w, t.dim() as u64)?;
     w.write_all(&[t.nbits() as u8, sb_code(t.scale_bias_dtype())])?;
@@ -196,7 +236,7 @@ pub fn write_fused<W: Write>(w: &mut W, t: &FusedTable) -> io::Result<()> {
 /// accounting the paper uses).
 pub fn write_codebook<W: Write>(w: &mut W, t: &CodebookTable) -> io::Result<()> {
     w.write_all(MAGIC)?;
-    w.write_all(&[2u8])?;
+    w.write_all(&[2u8, LAYOUT_REVISION])?;
     w_u64(w, t.rows() as u64)?;
     w_u64(w, t.dim() as u64)?;
     let (scheme, k) = match t.kind() {
@@ -251,6 +291,9 @@ pub fn read_any<R: Read>(r: &mut R) -> io::Result<AnyTable> {
         return Err(bad("magic"));
     }
     let kind = r_u8(r)?;
+    if r_u8(r)? != LAYOUT_REVISION {
+        return Err(bad("layout revision"));
+    }
     let rows = r_u64(r)? as usize;
     let dim = r_u64(r)? as usize;
     // Validate before any allocation: corrupted headers must not be able
@@ -447,6 +490,41 @@ mod tests {
         assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
         assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn format_tags_are_versioned_and_distinct() {
+        let t = EmbeddingTable::randn(80, 8, 28);
+        let q = GreedyQuantizer::default();
+        let tags = [
+            (AnyTable::F32(t.clone()), 0x1000u16),
+            (AnyTable::Fused(t.quantize_fused(&q, 4, ScaleBiasDtype::F16)), 0x1141),
+            (AnyTable::Fused(t.quantize_fused(&q, 8, ScaleBiasDtype::F32)), 0x1180),
+            (
+                AnyTable::Codebook(t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32)),
+                0x1200,
+            ),
+            (
+                AnyTable::Codebook(
+                    t.quantize_codebook(CodebookKind::TwoTier { k: 4 }, ScaleBiasDtype::F16),
+                ),
+                0x1211,
+            ),
+        ];
+        for (table, expect) in &tags {
+            assert_eq!(format_tag(table), *expect, "{expect:#06x}");
+            assert_eq!(format_tag(table) >> 12, LAYOUT_REVISION as u16);
+        }
+    }
+
+    #[test]
+    fn wrong_layout_revision_rejected() {
+        let t = EmbeddingTable::randn(3, 4, 29);
+        let mut buf = Vec::new();
+        write_f32(&mut buf, &t).unwrap();
+        buf[9] = LAYOUT_REVISION + 1;
+        let err = read_any(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("layout revision"), "{err}");
     }
 
     #[test]

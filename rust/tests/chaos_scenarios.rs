@@ -36,6 +36,7 @@ fn canonical() -> ScenarioConfig {
         update_batches: 12,
         update_rows: 8,
         readers: 2,
+        requant_commits: 0,
         faults: vec![
             FaultKind::WorkerPanic,
             FaultKind::CorruptSpill,
@@ -50,10 +51,11 @@ fn canonical() -> ScenarioConfig {
 fn assert_healthy(r: &ScenarioReport, cfg: &ScenarioConfig) {
     assert_eq!(
         r.final_version,
-        1 + cfg.update_batches as u64,
-        "every update batch commits exactly once"
+        1 + cfg.update_batches as u64 + cfg.requant_commits as u64,
+        "every update batch and requant commit lands exactly once"
     );
     assert_eq!(r.committed_updates, cfg.update_batches as u64);
+    assert_eq!(r.requant_commits, cfg.requant_commits as u64);
     assert_eq!(r.recoveries, cfg.faults.len(), "every fault heals and probes clean");
     assert!(r.bit_exact_final, "final per-row sweep must match the oracle");
     assert!(r.budget_ok, "resident bytes must settle at or under the budget");
@@ -135,4 +137,39 @@ fn spill_dir_outage_degrades_to_resident_serving() {
     assert_healthy(&report, &cfg);
     // Un-budgeted and un-gated: every main-loop request was checked.
     assert_eq!(report.recoveries, 1);
+}
+
+#[test]
+fn requant_storm_races_updates_and_spill_churn_bit_exactly() {
+    // Online re-quantization under fire: nine whole-table format flips
+    // (int4 ↔ int8) commit through the engine's MVCC swap while two
+    // updaters patch rows and the half-budget store churns slices to
+    // disk. The storm is transparent — readers are held to bit-exact
+    // single-version results *through* it — and every update batch and
+    // requant commit must land exactly once in the final version.
+    let cfg = ScenarioConfig {
+        seed: 0x5702_4, // stable, arbitrary
+        tables: 3,
+        rows: 256,
+        dim: 8,
+        shards: 4,
+        ticks: 24,
+        base_batch: 5,
+        diurnal_period: 12,
+        budget_frac: Some(0.5),
+        updaters: 2,
+        update_batches: 8,
+        update_rows: 6,
+        readers: 2,
+        requant_commits: 9,
+        faults: vec![FaultKind::RequantStorm],
+        ..ScenarioConfig::default()
+    };
+    let report = run_scenario(&cfg);
+    assert_healthy(&report, &cfg);
+    assert_eq!(report.recoveries, 1);
+    // Transparent storm: no gated window ever opened, so every
+    // main-loop read was checked against the oracle.
+    assert_eq!(report.final_version, 1 + 8 + 9);
+    assert_eq!(report, run_scenario(&cfg), "storm runs are pure functions of the config");
 }

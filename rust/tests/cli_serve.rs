@@ -129,6 +129,46 @@ fn serve_update_churn_runs_end_to_end() {
 }
 
 #[test]
+fn serve_mixed_precision_runs_end_to_end() {
+    let p = table_file("mixed.embq");
+    let p = p.to_str().unwrap();
+
+    // Warm half the trace, one solver pass at the budget, serve the
+    // rest on the swapped formats; the summary line reports the budget
+    // point's accuracy cost next to the uniform-int4 baseline.
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "200",
+        "--batch", "8", "--precision-budget", "1500", "--mixed-precision",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(stdout.contains("mixed precision:"), "{stdout}");
+    assert!(stdout.contains("uniform int4"), "{stdout}");
+    assert!(stdout.contains("warm half:"), "{stdout}");
+
+    // --mixed-precision without a budget names the missing flag.
+    let out = emberq(&["serve", "--table", p, "--shards", "2", "--mixed-precision"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--precision-budget"), "{}", stderr_of(&out));
+
+    // A budget without ticks or a one-shot pass is inert, not fatal.
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "2", "--copies", "2", "--requests", "5",
+        "--batch", "2", "--precision-budget", "100000",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("--rebalance-interval"), "{}", stderr_of(&out));
+
+    // On the table-parallel path the budget warns loudly and is ignored.
+    let out = emberq(&[
+        "serve", "--table", p, "--shards", "0", "--workers", "1", "--copies", "2",
+        "--requests", "5", "--batch", "2", "--precision-budget", "100000",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("--precision-budget"), "{}", stderr_of(&out));
+}
+
+#[test]
 fn help_lists_every_serve_flag() {
     // Drift guard against the parser's own source of truth: `cmd_serve`
     // rejects flags outside `emberq::cli::SERVE_FLAGS`, so asserting the

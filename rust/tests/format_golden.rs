@@ -1,19 +1,20 @@
 //! Golden byte-level tests for the two on-disk containers.
 //!
-//! `docs/formats.md` is the *normative* spec for `EMBQTBL1` and
-//! `EMBQSPL1`; these tests re-derive every header offset, field width,
-//! and the checksum from that prose — independently of the writer code
-//! in `table::serial` and `shard::store` — so an implementation change
-//! that silently shifts a byte fails here, not in a reader two releases
-//! later. The layouts are frozen: a legitimate format change must bump
-//! the magic (`EMBQTBL2`, ...) and get new goldens, not edit these.
+//! `docs/formats.md` is the *normative* spec for `EMBQTBL2` and
+//! `EMBQSPL2`; these tests re-derive every header offset, field width,
+//! the versioned format tag, and the checksum from that prose —
+//! independently of the writer code in `table::serial` and
+//! `shard::store` — so an implementation change that silently shifts a
+//! byte fails here, not in a reader two releases later. The layouts are
+//! frozen: a legitimate format change must bump the magic (`EMBQTBL3`,
+//! ...) and get new goldens, not edit these.
 
 use std::fs;
 
 use emberq::quant::GreedyQuantizer;
 use emberq::shard::{SliceStore, SpillConfig, TableSlice};
 use emberq::table::serial::{self, AnyTable};
-use emberq::table::{EmbeddingTable, ScaleBiasDtype};
+use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
 
 /// Independent FNV-1a-64, straight from the constants in
 /// docs/formats.md — deliberately NOT `serial::fnv1a64`.
@@ -29,6 +30,10 @@ fn u64_at(b: &[u8], off: usize) -> u64 {
     u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
 }
 
+fn u16_at(b: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes(b[off..off + 2].try_into().unwrap())
+}
+
 #[test]
 fn fnv_reference_vectors_from_the_spec() {
     assert_eq!(fnv1a64_ref(b""), 0xcbf2_9ce4_8422_2325);
@@ -37,21 +42,52 @@ fn fnv_reference_vectors_from_the_spec() {
 }
 
 #[test]
-fn embqtbl1_fp32_layout_matches_the_spec() {
-    // kind 0: [magic 8][kind 1][rows u64][dim u64][rows×dim f32].
+fn format_tags_match_the_spec_vectors() {
+    // Spec formula: (layout_revision << 12) | (kind << 8) | detail,
+    // detail = 0 for FP32, (nbits << 4) | sb for fused,
+    // (scheme << 4) | sb for codebook; sb: 0 = f32, 1 = f16. The
+    // vectors below are computed by hand from that prose at layout
+    // revision 1 — they must never drift under a same-magic change.
+    let q = GreedyQuantizer::default();
+    let t = EmbeddingTable::randn(8, 6, 81);
+    let vectors: [(AnyTable, u16); 5] = [
+        (AnyTable::F32(t.clone()), 0x1000),
+        (AnyTable::Fused(t.quantize_fused(&q, 4, ScaleBiasDtype::F16)), 0x1141),
+        (AnyTable::Fused(t.quantize_fused(&q, 8, ScaleBiasDtype::F32)), 0x1180),
+        (
+            AnyTable::Codebook(t.quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32)),
+            0x1200,
+        ),
+        (
+            AnyTable::Codebook(
+                t.quantize_codebook(CodebookKind::TwoTier { k: 3 }, ScaleBiasDtype::F16),
+            ),
+            0x1211,
+        ),
+    ];
+    for (table, want) in &vectors {
+        assert_eq!(serial::format_tag(table), *want, "{want:#06x}");
+    }
+}
+
+#[test]
+fn embqtbl2_fp32_layout_matches_the_spec() {
+    // kind 0: [magic 8][kind 1][revision 1][rows u64][dim u64]
+    // [rows×dim f32].
     let t = EmbeddingTable::randn(5, 3, 77);
     let mut buf = Vec::new();
     serial::write_f32(&mut buf, &t).unwrap();
 
-    assert_eq!(buf.len(), 8 + 1 + 8 + 8 + 5 * 3 * 4, "no padding anywhere");
-    assert_eq!(&buf[0..8], b"EMBQTBL1");
+    assert_eq!(buf.len(), 8 + 1 + 1 + 8 + 8 + 5 * 3 * 4, "no padding anywhere");
+    assert_eq!(&buf[0..8], b"EMBQTBL2");
     assert_eq!(buf[8], 0, "kind 0 = FP32");
-    assert_eq!(u64_at(&buf, 9), 5, "rows at [9..17)");
-    assert_eq!(u64_at(&buf, 17), 3, "dim at [17..25)");
-    // Payload: row-major little-endian f32 starting at byte 25.
+    assert_eq!(buf[9], 1, "layout revision at [9]");
+    assert_eq!(u64_at(&buf, 10), 5, "rows at [10..18)");
+    assert_eq!(u64_at(&buf, 18), 3, "dim at [18..26)");
+    // Payload: row-major little-endian f32 starting at byte 26.
     for r in 0..5 {
         for d in 0..3 {
-            let off = 25 + (r * 3 + d) * 4;
+            let off = 26 + (r * 3 + d) * 4;
             let got = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
             assert_eq!(got.to_bits(), t.row(r)[d].to_bits(), "row {r} dim {d}");
         }
@@ -59,9 +95,10 @@ fn embqtbl1_fp32_layout_matches_the_spec() {
 }
 
 #[test]
-fn embqtbl1_fused_layout_matches_the_spec() {
-    // kind 1: [magic 8][kind 1][rows u64][dim u64][nbits u8][sb u8]
-    // [rows×row_bytes]. Odd dim exercises the ceil(dim/2) packing.
+fn embqtbl2_fused_layout_matches_the_spec() {
+    // kind 1: [magic 8][kind 1][revision 1][rows u64][dim u64]
+    // [nbits u8][sb u8][rows×row_bytes]. Odd dim exercises the
+    // ceil(dim/2) packing.
     let q = GreedyQuantizer::default();
     let t = EmbeddingTable::randn(7, 5, 78).quantize_fused(&q, 4, ScaleBiasDtype::F16);
     let mut buf = Vec::new();
@@ -70,23 +107,24 @@ fn embqtbl1_fused_layout_matches_the_spec() {
     // row_bytes re-derived from the spec, not from the table:
     // packed = ceil(5/2) = 3, f16 tail = 4 → 7 bytes per row.
     let row_bytes = (5 + 1) / 2 + 4;
-    assert_eq!(buf.len(), 8 + 1 + 8 + 8 + 1 + 1 + 7 * row_bytes);
-    assert_eq!(&buf[0..8], b"EMBQTBL1");
+    assert_eq!(buf.len(), 8 + 1 + 1 + 8 + 8 + 1 + 1 + 7 * row_bytes);
+    assert_eq!(&buf[0..8], b"EMBQTBL2");
     assert_eq!(buf[8], 1, "kind 1 = Fused");
-    assert_eq!(u64_at(&buf, 9), 7, "rows at [9..17)");
-    assert_eq!(u64_at(&buf, 17), 5, "dim at [17..25)");
-    assert_eq!(buf[25], 4, "nbits at [25]");
-    assert_eq!(buf[26], 1, "sb tag at [26]: 1 = f16");
-    assert_eq!(&buf[27..], t.data(), "payload is the raw fused rows, verbatim");
+    assert_eq!(buf[9], 1, "layout revision at [9]");
+    assert_eq!(u64_at(&buf, 10), 7, "rows at [10..18)");
+    assert_eq!(u64_at(&buf, 18), 5, "dim at [18..26)");
+    assert_eq!(buf[26], 4, "nbits at [26]");
+    assert_eq!(buf[27], 1, "sb tag at [27]: 1 = f16");
+    assert_eq!(&buf[28..], t.data(), "payload is the raw fused rows, verbatim");
 
     // And with f32 scale/bias the tail widens to 8 bytes, nothing else
     // moves.
     let t32 = EmbeddingTable::randn(7, 5, 79).quantize_fused(&q, 8, ScaleBiasDtype::F32);
     let mut buf32 = Vec::new();
     serial::write_fused(&mut buf32, &t32).unwrap();
-    assert_eq!(buf32.len(), 27 + 7 * (5 + 8), "8-bit packs one code per byte");
-    assert_eq!(buf32[25], 8);
-    assert_eq!(buf32[26], 0, "sb tag 0 = f32");
+    assert_eq!(buf32.len(), 28 + 7 * (5 + 8), "8-bit packs one code per byte");
+    assert_eq!(buf32[26], 8);
+    assert_eq!(buf32[27], 0, "sb tag 0 = f32");
 
     // Round trip through the reader: bit-identical table.
     let back = serial::read_any(&mut buf.as_slice()).unwrap();
@@ -97,9 +135,57 @@ fn embqtbl1_fused_layout_matches_the_spec() {
 }
 
 #[test]
-fn embqspl1_layout_and_checksum_match_the_spec() {
-    // [magic 8][global_lo u64][global_hi u64][payload_len u64 @24]
-    // [fnv1a64 u64 @32][payload = verbatim EMBQTBL1].
+fn embqtbl2_codebook_layout_matches_the_spec() {
+    // kind 2: [magic 8][kind 1][revision 1][rows u64][dim u64]
+    // [scheme u8][sb u8][k u64][rows×ceil(dim/2) codes]
+    // [books×16 f32 entries][two-tier only: rows×u32 cluster ids],
+    // books = k for two-tier, rows for rowwise.
+    let t = EmbeddingTable::randn(10, 6, 82);
+    let cb = t.quantize_codebook(CodebookKind::TwoTier { k: 3 }, ScaleBiasDtype::F16);
+    let mut buf = Vec::new();
+    serial::write_codebook(&mut buf, &cb).unwrap();
+
+    // Every length re-derived from the spec: header 36, nibble-packed
+    // codes 10×3, three 16-entry f32 books, ten u32 cluster ids.
+    assert_eq!(buf.len(), 36 + 10 * 3 + 3 * 16 * 4 + 10 * 4, "no padding anywhere");
+    assert_eq!(&buf[0..8], b"EMBQTBL2");
+    assert_eq!(buf[8], 2, "kind 2 = Codebook");
+    assert_eq!(buf[9], 1, "layout revision at [9]");
+    assert_eq!(u64_at(&buf, 10), 10, "rows at [10..18)");
+    assert_eq!(u64_at(&buf, 18), 6, "dim at [18..26)");
+    assert_eq!(buf[26], 1, "scheme at [26]: 1 = two-tier");
+    assert_eq!(buf[27], 1, "sb tag at [27]: 1 = f16");
+    assert_eq!(u64_at(&buf, 28), 3, "k at [28..36)");
+    for i in 0..10 {
+        assert_eq!(&buf[36 + i * 3..36 + (i + 1) * 3], cb.codes_of_row(i), "codes row {i}");
+    }
+
+    // Rowwise: scheme 0, k recorded as 0, one book per row, no cluster
+    // ids.
+    let rw = EmbeddingTable::randn(4, 5, 83)
+        .quantize_codebook(CodebookKind::Rowwise, ScaleBiasDtype::F32);
+    let mut rbuf = Vec::new();
+    serial::write_codebook(&mut rbuf, &rw).unwrap();
+    assert_eq!(rbuf.len(), 36 + 4 * 3 + 4 * 16 * 4);
+    assert_eq!(rbuf[26], 0, "scheme 0 = rowwise");
+    assert_eq!(rbuf[27], 0, "sb tag 0 = f32");
+    assert_eq!(u64_at(&rbuf, 28), 0, "rowwise records k = 0");
+
+    // Round trip: the decoded table reconstructs bit-identically.
+    let back = serial::read_any(&mut buf.as_slice()).unwrap();
+    match back {
+        AnyTable::Codebook(b) => {
+            assert_eq!(b.dequantize().data(), cb.dequantize().data());
+        }
+        other => panic!("wrong kind decoded: {} rows", other.rows()),
+    }
+}
+
+#[test]
+fn embqspl2_layout_and_checksum_match_the_spec() {
+    // [magic 8][global_lo u64][global_hi u64][fmt_tag u16 @24]
+    // [payload_len u64 @26][fnv1a64 u64 @34][payload = verbatim
+    // EMBQTBL2].
     let q = GreedyQuantizer::default();
     let table = EmbeddingTable::randn(12, 4, 80).quantize_fused(&q, 4, ScaleBiasDtype::F16);
     // The slice covers global rows [3, 12) of some larger table — the
@@ -142,19 +228,24 @@ fn embqspl1_layout_and_checksum_match_the_spec() {
     assert_eq!(name.matches('-').count(), 2, "token and seq, dash-separated: {name}");
 
     let bytes = fs::read(&files[0]).unwrap();
-    assert_eq!(&bytes[0..8], b"EMBQSPL1");
+    assert_eq!(&bytes[0..8], b"EMBQSPL2");
     assert_eq!(u64_at(&bytes, 8), 3, "global_lo at [8..16)");
     assert_eq!(u64_at(&bytes, 16), 12, "global_hi at [16..24) is one past the end");
-    assert_eq!(u64_at(&bytes, 24), (bytes.len() - 40) as u64, "payload_len at [24..32)");
+    // fmt_tag computed by hand from the spec: revision 1, kind 1
+    // (fused), nbits 4, sb 1 (f16) → 0x1141.
+    assert_eq!(u16_at(&bytes, 24), 0x1141, "fmt_tag at [24..26)");
+    assert_eq!(u64_at(&bytes, 26), (bytes.len() - 42) as u64, "payload_len at [26..34)");
     assert_eq!(
-        u64_at(&bytes, 32),
-        fnv1a64_ref(&bytes[40..]),
-        "checksum at [32..40) is FNV-1a-64 of the payload only"
+        u64_at(&bytes, 34),
+        fnv1a64_ref(&bytes[42..]),
+        "checksum at [34..42) is FNV-1a-64 of the payload only"
     );
-    assert_eq!(&bytes[40..], &expect_payload[..], "payload is the slice's table, verbatim");
-    // The payload really is a self-contained EMBQTBL1 container.
-    let decoded = serial::read_any(&mut &bytes[40..]).unwrap();
+    assert_eq!(&bytes[42..], &expect_payload[..], "payload is the slice's table, verbatim");
+    // The payload really is a self-contained EMBQTBL2 container, and
+    // its own header agrees with the spill header's fmt_tag.
+    let decoded = serial::read_any(&mut &bytes[42..]).unwrap();
     assert_eq!(decoded.rows(), 9);
+    assert_eq!(serial::format_tag(&decoded), 0x1141, "container and spill tags agree");
     // No .tmp leftovers: the write protocol renames atomically.
     let tmps = fs::read_dir(&dir)
         .unwrap()

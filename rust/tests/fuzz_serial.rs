@@ -4,7 +4,7 @@
 //! serve` loads these files from operator-supplied paths.
 
 use emberq::quant::GreedyQuantizer;
-use emberq::table::serial::{read_any, write_codebook, write_f32, write_fused};
+use emberq::table::serial::{read_any, write_codebook, write_f32, write_fused, LAYOUT_REVISION};
 use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
 use emberq::util::Rng;
 
@@ -93,11 +93,12 @@ fn fuzz_random_garbage() {
 
 #[test]
 fn huge_declared_shape_rejected_without_allocation() {
-    // Magic + kind 0 + rows=u64::MAX/8, dim=16: rows*dim overflows ->
-    // must error out before allocating.
+    // Magic + kind 0 + revision + rows=u64::MAX/8, dim=16: rows*dim
+    // overflows -> must error out before allocating.
     let mut buf = Vec::new();
-    buf.extend_from_slice(b"EMBQTBL1");
+    buf.extend_from_slice(b"EMBQTBL2");
     buf.push(0);
+    buf.push(LAYOUT_REVISION);
     buf.extend_from_slice(&(u64::MAX / 8).to_le_bytes());
     buf.extend_from_slice(&16u64.to_le_bytes());
     assert!(read_any(&mut buf.as_slice()).is_err());

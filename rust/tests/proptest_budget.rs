@@ -1,0 +1,277 @@
+//! Property tests for the precision-budget solver (`quant::budget`) and
+//! the online re-quantization swap path (hand-rolled property loops —
+//! the crate builds offline with no test-framework dependencies).
+//!
+//! Four contracts:
+//!
+//! * **Budget fit** — [`solve`] never spends past the byte budget, and
+//!   returns exactly one assignment per group whose bytes sum to the
+//!   reported total. Any budget at or above [`uniform_int4_bytes`] is
+//!   feasible (the codebook admission rule keeps every ladder's floor
+//!   at or below the int4 bytes).
+//! * **Monotonicity** — a bigger budget never *downgrades* a group:
+//!   the greedy walk takes a prefix of one fixed global step order, so
+//!   per-group bytes are non-decreasing in the budget.
+//! * **Flat-heat degeneracy** — with uniform heat and the budget pinned
+//!   to uniform int4 bytes, the solver reproduces the paper's baseline
+//!   exactly: every group lands on `int4 (FP16)`, spending the whole
+//!   budget.
+//! * **Online ≡ offline** — after [`ShardedEngine::requantize_to`],
+//!   every row serves bit-identically to rebuilding the same chunk
+//!   offline with [`budget::build_table`] — including codebook chunk
+//!   targets and after the spill tier churns the swapped slices to
+//!   disk and back.
+//!
+//! [`solve`]: emberq::quant::budget::solve
+//! [`uniform_int4_bytes`]: emberq::quant::budget::uniform_int4_bytes
+//! [`ShardedEngine::requantize_to`]: emberq::shard::ShardedEngine::requantize_to
+//! [`budget::build_table`]: emberq::quant::budget::build_table
+
+use emberq::coordinator::{FormatTag, TableSet};
+use emberq::data::trace::Request;
+use emberq::quant::budget::{self, GroupSpec};
+use emberq::quant::GreedyQuantizer;
+use emberq::shard::{GroupAssignment, ShardConfig, ShardedEngine};
+use emberq::table::serial::AnyTable;
+use emberq::table::{CodebookKind, EmbeddingTable, ScaleBiasDtype};
+use emberq::util::Rng;
+
+const INT4: FormatTag = FormatTag::Fused { nbits: 4, scale_bias: ScaleBiasDtype::F16 };
+
+/// Random gaussian row-groups with arbitrary small shapes and random
+/// positive heat — the spec generator for the solver-contract tests.
+fn random_specs(rng: &mut Rng) -> Vec<GroupSpec> {
+    let n = 1 + rng.below(4);
+    (0..n)
+        .map(|t| {
+            let rows = [32usize, 64, 96, 128][rng.below(4)];
+            let dim = [4usize, 8, 16][rng.below(3)];
+            let seed = rng.next_u64();
+            GroupSpec {
+                table: t,
+                chunk: None,
+                heat: rng.uniform_in(0.5, 100.0),
+                data: EmbeddingTable::randn(rows, dim, seed),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_solve_fits_budget_and_assigns_every_group() {
+    const CASES: usize = 60;
+    let q = GreedyQuantizer::default();
+    let mut rng = Rng::new(0xB0D6);
+    for case in 0..CASES {
+        let specs = random_specs(&mut rng);
+        let uniform = budget::uniform_int4_bytes(&specs);
+        // Anywhere in [uniform, 2 * uniform]: always feasible, because
+        // each ladder's cheapest level costs at most its int4 bytes.
+        let budget_bytes = uniform + rng.below(uniform + 1);
+        let plan = budget::solve(&specs, budget_bytes, &q)
+            .unwrap_or_else(|e| panic!("case {case}: budget {budget_bytes} B must fit: {e}"));
+        assert!(
+            plan.total_bytes <= budget_bytes,
+            "case {case}: spent {} B over the {budget_bytes} B budget",
+            plan.total_bytes
+        );
+        assert_eq!(plan.assignments.len(), specs.len(), "case {case}: one per group");
+        for (a, s) in plan.assignments.iter().zip(&specs) {
+            assert_eq!((a.table, a.chunk), (s.table, s.chunk), "case {case}: spec order");
+        }
+        let byte_sum: usize = plan.assignments.iter().map(|a| a.bytes).sum();
+        assert_eq!(byte_sum, plan.total_bytes, "case {case}: totals must reconcile");
+        let err_sum: f64 = plan.assignments.iter().map(|a| a.weighted_err).sum();
+        assert_eq!(err_sum, plan.weighted_err, "case {case}: errors must reconcile");
+        assert_eq!(plan.uniform_int4_bytes, uniform, "case {case}");
+        assert!(plan.weighted_err.is_finite() && plan.weighted_err >= 0.0, "case {case}");
+        // A zero budget can never hold the cheapest encodable bytes.
+        let e = budget::solve(&specs, 0, &q).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidInput, "case {case}");
+    }
+}
+
+#[test]
+fn prop_bigger_budget_never_downgrades_a_group() {
+    const CASES: usize = 60;
+    let q = GreedyQuantizer::default();
+    let mut rng = Rng::new(0x0B17);
+    for case in 0..CASES {
+        let specs = random_specs(&mut rng);
+        let uniform = budget::uniform_int4_bytes(&specs);
+        let b1 = uniform + rng.below(uniform + 1);
+        let b2 = b1 + 1 + rng.below(uniform + 1);
+        let p1 = budget::solve(&specs, b1, &q).unwrap();
+        let p2 = budget::solve(&specs, b2, &q).unwrap();
+        assert!(p2.total_bytes >= p1.total_bytes, "case {case}: totals are monotone");
+        for (a1, a2) in p1.assignments.iter().zip(&p2.assignments) {
+            assert!(
+                a2.bytes >= a1.bytes,
+                "case {case} table {}: {} B at budget {b1} but {} B at bigger \
+                 budget {b2} — a raise must never shrink a group",
+                a1.table,
+                a1.bytes,
+                a2.bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_flat_heat_degenerates_to_uniform_int4() {
+    // With no heat signal there is nothing to trade: at exactly the
+    // uniform-int4 budget the solver must reproduce the paper's
+    // baseline, group for group. This is where the codebook admission
+    // rule earns its keep — a codebook level that beat int4 on both
+    // axes would displace the baseline here. The shape class below
+    // (gaussian rows ≥ 96, where the shared-codebook level is actually
+    // admitted) is numerically validated: every cb→int4 upgrade ratio
+    // dominates every int4→int8 ratio, so the greedy prefix spends the
+    // budget exactly on restoring int4 everywhere.
+    const CASES: usize = 40;
+    let q = GreedyQuantizer::default();
+    let mut rng = Rng::new(0xF1A7);
+    for case in 0..CASES {
+        let n = 2 + rng.below(4);
+        let specs: Vec<GroupSpec> = (0..n)
+            .map(|t| {
+                let rows = [96usize, 128, 192, 256][rng.below(4)];
+                let dim = [8usize, 16][rng.below(2)];
+                let seed = rng.next_u64();
+                GroupSpec {
+                    table: t,
+                    chunk: None,
+                    heat: 1.0,
+                    data: EmbeddingTable::randn(rows, dim, seed),
+                }
+            })
+            .collect();
+        let uniform = budget::uniform_int4_bytes(&specs);
+        let plan = budget::solve(&specs, uniform, &q).unwrap();
+        for a in &plan.assignments {
+            assert_eq!(
+                a.format, INT4,
+                "case {case} table {}: flat heat at the uniform budget must \
+                 degenerate to int4 everywhere",
+                a.table
+            );
+        }
+        assert_eq!(plan.total_bytes, uniform, "case {case}: the budget is spent exactly");
+        assert_eq!(plan.weighted_err, plan.uniform_int4_err, "case {case}");
+    }
+}
+
+/// Pick a re-quantization target covering every container family the
+/// swap path can produce, codebooks included.
+fn random_format(rng: &mut Rng) -> FormatTag {
+    match rng.below(6) {
+        0 => INT4,
+        1 => FormatTag::Fused { nbits: 8, scale_bias: ScaleBiasDtype::F16 },
+        2 => FormatTag::Fused { nbits: 8, scale_bias: ScaleBiasDtype::F32 },
+        3 => FormatTag::F32,
+        4 => FormatTag::Codebook { kind: CodebookKind::TwoTier { k: 4 } },
+        _ => FormatTag::Codebook { kind: CodebookKind::Rowwise },
+    }
+}
+
+#[test]
+fn prop_online_requantize_serves_identically_to_offline_rebuild() {
+    // The swap path and the offline path share one re-encoder
+    // (`budget::build_table`), and a `chunk: None` assignment on a
+    // row-wise table rebuilds each chunk from its own rows — so the
+    // offline reference here is always built per chunk, which is exact
+    // even for codebook targets (clustering is chunk-local).
+    const CASES: usize = 24;
+    let q = GreedyQuantizer::default();
+    let mut rng = Rng::new(0xE27A);
+    for case in 0..CASES {
+        let tables = 1 + rng.below(2);
+        // Rows divisible by every shard count in 2..=4 keep the carved
+        // reference chunks aligned with the engine's row partition.
+        let rows = [24usize, 48][rng.below(2)];
+        let dim = [4usize, 8][rng.below(2)];
+        let shards = 2 + rng.below(3);
+        let chunk_rows = rows / shards;
+        let masters: Vec<EmbeddingTable> =
+            (0..tables).map(|_| EmbeddingTable::randn(rows, dim, rng.next_u64())).collect();
+        // Half the cases run over a starved spill tier so the swapped
+        // slices churn through serialization on their way back.
+        let spill = rng.below(2) == 0;
+        let engine = ShardedEngine::start(
+            TableSet::new(masters.iter().map(|m| AnyTable::F32(m.clone())).collect()),
+            &ShardConfig {
+                num_shards: shards,
+                small_table_rows: 0,
+                resident_budget: spill.then_some(tables * rows * dim * 4 / 3),
+                ..Default::default()
+            },
+        );
+        // Random non-overlapping plan: per table either untouched, one
+        // whole-table entry, or an independent format per chunk.
+        let mut plan: Vec<GroupAssignment> = Vec::new();
+        for t in 0..tables {
+            match rng.below(3) {
+                0 => {}
+                1 => plan.push(GroupAssignment {
+                    table: t,
+                    chunk: None,
+                    format: random_format(&mut rng),
+                }),
+                _ => {
+                    for s in 0..shards {
+                        if rng.below(2) == 0 {
+                            plan.push(GroupAssignment {
+                                table: t,
+                                chunk: Some(s),
+                                format: random_format(&mut rng),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        engine
+            .requantize_to(&plan, &q)
+            .unwrap_or_else(|e| panic!("case {case}: valid plan must apply: {e}"));
+        if spill {
+            // Evict everything; the per-row sweep below promotes the
+            // slices back through the spill files.
+            engine.spill_all().unwrap();
+        }
+        for t in 0..tables {
+            // The format each chunk must now hold, per the plan.
+            let fmt_of = |s: usize| -> Option<FormatTag> {
+                plan.iter()
+                    .find(|a| a.table == t && (a.chunk.is_none() || a.chunk == Some(s)))
+                    .map(|a| a.format)
+            };
+            for s in 0..shards {
+                let (lo, hi) = (s * chunk_rows, (s + 1) * chunk_rows);
+                let reference = fmt_of(s).map(|fmt| {
+                    let carved = EmbeddingTable::from_data(
+                        dim,
+                        masters[t].data()[lo * dim..hi * dim].to_vec(),
+                    );
+                    TableSet::new(vec![budget::build_table(&AnyTable::F32(carved), fmt, &q)])
+                });
+                for i in lo..hi {
+                    let ids: Vec<Vec<u32>> = (0..tables)
+                        .map(|tt| if tt == t { vec![i as u32] } else { Vec::new() })
+                        .collect();
+                    let got = engine.lookup(&Request { ids });
+                    let mut want = vec![0.0f32; dim];
+                    match &reference {
+                        Some(r) => r.pool(0, &[(i - lo) as u32], &mut want),
+                        None => want.copy_from_slice(masters[t].row(i)),
+                    }
+                    assert_eq!(
+                        &got[t * dim..(t + 1) * dim],
+                        want.as_slice(),
+                        "case {case} table {t} chunk {s} row {i} (spill: {spill}): \
+                         online swap must serve the offline rebuild bit for bit"
+                    );
+                }
+            }
+        }
+    }
+}
